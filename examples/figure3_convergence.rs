@@ -1,0 +1,228 @@
+//! Figure 3 (Appendix E) — THE END-TO-END DRIVER.
+//!
+//! Reproduces the paper's experimental protocol on the four Table-3
+//! datasets (synthetic equivalents, DESIGN.md §3):
+//!
+//!   1. generate the dataset, *write it to a real libsvm file*, re-parse
+//!      it through the libsvm reader (exercising the genuine data path);
+//!   2. half for training (sharded across m machines), half held out for
+//!      estimating the population objective;
+//!   3. MP-DANE (R=1, kappa=0, one local SVRG pass per DANE round, K DANE
+//!      rounds) vs distributed minibatch SGD, sweeping minibatch size b;
+//!   4. report estimated population objective vs b — the paper's panels.
+//!
+//!     cargo run --release --example figure3_convergence [-- --full]
+//!                        [--scale S] [--m M] [--dataset NAME]
+//!
+//! Default: reduced grid (m=8, K in {1,4,16}, 4 b values, all datasets,
+//! ~8k training samples per dataset). --full: m in {4,8,16}, K in
+//! {1,2,4,8,16} as in the paper.
+
+use anyhow::Result;
+use mbprox::accounting::ClusterMeter;
+use mbprox::algos::mbprox::MinibatchProx;
+use mbprox::algos::minibatch_sgd::MinibatchSgd;
+use mbprox::algos::solvers::dane::DaneSolver;
+use mbprox::algos::{Method, RunContext};
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::coordinator::Runner;
+use mbprox::data::sampler::{shard_ranges, VecStream};
+use mbprox::data::table3::{DatasetSpec, ALL};
+use mbprox::data::{libsvm, Loss, Sample, SampleStream};
+use mbprox::objective::Evaluator;
+use mbprox::theory::{self, ProblemConsts};
+use mbprox::util::prng::Prng;
+
+struct Args {
+    full: bool,
+    scale: f64,
+    m_only: Option<usize>,
+    dataset: Option<String>,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut a = Args { full: false, scale: 0.0, m_only: None, dataset: None };
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--full" => a.full = true,
+            "--scale" => {
+                i += 1;
+                a.scale = argv[i].parse().unwrap();
+            }
+            "--m" => {
+                i += 1;
+                a.m_only = Some(argv[i].parse().unwrap());
+            }
+            "--dataset" => {
+                i += 1;
+                a.dataset = Some(argv[i].clone());
+            }
+            other => eprintln!("# ignoring arg {other}"),
+        }
+        i += 1;
+    }
+    a
+}
+
+/// Generate the dataset, round-trip it through a libsvm file, and split
+/// train/eval halves.
+fn load_dataset(spec: &DatasetSpec, scale: f64, seed: u64) -> Result<(Vec<Sample>, Vec<Sample>)> {
+    let n_train = spec.n_train(scale);
+    let n_eval = spec.n_eval(scale).min(4096);
+    let mut stream = spec.stream(seed);
+    let all = stream.draw_many(n_train + n_eval);
+
+    let dir = std::env::temp_dir().join("mbprox_figure3");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{}.libsvm", spec.name));
+    libsvm::write_samples(&path, &all)?;
+    let parsed = libsvm::read_samples(&path, spec.dim)?;
+    anyhow::ensure!(parsed.len() == all.len(), "libsvm round trip lost samples");
+
+    let (train, eval) = parsed.split_at(n_train);
+    Ok((train.to_vec(), eval.to_vec()))
+}
+
+/// Build a RunContext over a fixed training set sharded across m machines.
+fn context_from_shards<'e>(
+    runner: &'e mut Runner,
+    train: &[Sample],
+    eval: &[Sample],
+    loss: Loss,
+    m: usize,
+    seed: u64,
+) -> Result<RunContext<'e>> {
+    let native_dim = train[0].x.len();
+    let d = runner.engine.manifest().padded_dim(native_dim)?;
+    let ranges = shard_ranges(train.len(), m);
+    let root = Prng::seed_from_u64(seed);
+    let streams: Vec<Box<dyn SampleStream>> = (0..m)
+        .map(|i| {
+            let shard: Vec<Sample> = train[ranges[i].clone()].to_vec();
+            Box::new(VecStream::new(shard, loss, root.split(i as u64))) as Box<dyn SampleStream>
+        })
+        .collect();
+    let evaluator = Some(Evaluator::new(&runner.engine, d, loss, eval)?);
+    Ok(RunContext {
+        engine: &mut runner.engine,
+        net: Network::new(m, NetModel::default()),
+        meter: ClusterMeter::new(m),
+        loss,
+        d,
+        streams,
+        evaluator,
+        eval_every: 0,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    runner: &mut Runner,
+    train: &[Sample],
+    eval: &[Sample],
+    spec: &DatasetSpec,
+    m: usize,
+    b: usize,
+    k_dane: Option<usize>, // None = minibatch SGD
+    seed: u64,
+) -> Result<(f64, u64, u64)> {
+    let n = train.len() as f64;
+    let consts = ProblemConsts {
+        l_lipschitz: 1.0,
+        b_norm: match spec.loss {
+            Loss::Squared => (spec.dim as f64).sqrt(),
+            Loss::Logistic => 2.0 * (spec.dim as f64).sqrt(),
+        },
+        beta_smooth: match spec.loss {
+            Loss::Squared => 1.0,
+            Loss::Logistic => 0.25,
+        },
+        m,
+    };
+    let plan = theory::mbprox_plan(&consts, n, b);
+    let mut ctx = context_from_shards(runner, train, eval, spec.loss, m, seed)?;
+    let result = match k_dane {
+        Some(k) => {
+            let eta = 0.1 / (consts.beta_smooth + plan.gamma);
+            let mut method = MinibatchProx::new(
+                "mp-dane",
+                b,
+                plan.t_outer,
+                plan.gamma,
+                DaneSolver::plain(k, eta),
+            );
+            method.run(&mut ctx)?
+        }
+        None => {
+            let gamma = theory::minibatch_sgd_gamma(&consts, plan.t_outer, plan.bm);
+            let mut method = MinibatchSgd { b_local: b, t_outer: plan.t_outer, gamma };
+            method.run(&mut ctx)?
+        }
+    };
+    Ok((
+        result.final_objective.unwrap_or(f64::NAN),
+        result.report.comm_rounds,
+        result.report.vec_ops,
+    ))
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let mut runner = Runner::from_env()?;
+
+    let ms: Vec<usize> = match args.m_only {
+        Some(m) => vec![m],
+        None if args.full => vec![4, 8, 16],
+        None => vec![8],
+    };
+    let ks: Vec<usize> = if args.full { vec![1, 2, 4, 8, 16] } else { vec![1, 4, 16] };
+    let bs: Vec<usize> = if args.full {
+        vec![32, 64, 128, 256, 512, 1024]
+    } else {
+        vec![32, 128, 512, 1024]
+    };
+
+    println!("# Figure 3 — estimated population objective vs minibatch size b");
+    println!("dataset,m,method,K,b,objective,comm_rounds,vec_ops");
+    for spec in ALL {
+        if let Some(only) = &args.dataset {
+            if only != spec.name {
+                continue;
+            }
+        }
+        // default scale: ~8k training samples per dataset
+        let scale = if args.scale > 0.0 {
+            args.scale
+        } else {
+            (8192.0 / (spec.n_total as f64 / 2.0)).min(1.0)
+        };
+        let (train, eval) = load_dataset(spec, scale, 20170707)?;
+        eprintln!(
+            "# {}: {} train / {} eval samples (dim {}, {:?}, scale {:.4})",
+            spec.name,
+            train.len(),
+            eval.len(),
+            spec.dim,
+            spec.loss,
+            scale
+        );
+        for &m in &ms {
+            for &b in &bs {
+                if b * m > train.len() {
+                    continue;
+                }
+                for &k in &ks {
+                    let (obj, rounds, ops) =
+                        run_one(&mut runner, &train, &eval, spec, m, b, Some(k), 1)?;
+                    println!("{},{m},mp-dane,{k},{b},{obj:.6},{rounds},{ops}", spec.name);
+                }
+                let (obj, rounds, ops) =
+                    run_one(&mut runner, &train, &eval, spec, m, b, None, 1)?;
+                println!("{},{m},minibatch-sgd,0,{b},{obj:.6},{rounds},{ops}", spec.name);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Memory-regression probe for the engine hot path.
+//!
+//! The xla crate's literal-input `execute` leaks its internal
+//! literal->buffer conversions (~70 KB/call measured); the engine
+//! therefore runs everything through `execute_b` with caller-managed
+//! device buffers. This probe fails loudly if per-call RSS growth
+//! reappears. Run: `cargo run --release --example _leak_probe`
+
+use mbprox::data::blocks::pack_block;
+use mbprox::data::synth::{SynthSpec, SynthStream};
+use mbprox::data::{Loss, SampleStream};
+use mbprox::runtime::exec::BlockLits;
+use mbprox::runtime::Engine;
+
+fn rss_kb() -> u64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines()
+        .find(|l| l.starts_with("VmRSS"))
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+fn main() {
+    let mut e = Engine::new(std::path::Path::new("artifacts")).unwrap();
+    let mut stream = SynthStream::new(SynthSpec::least_squares(64), 1);
+    let samples = stream.draw_many(256);
+    let block = pack_block(&samples, 64);
+    let lits = BlockLits::from_block(&e, &block).unwrap();
+    let w = vec![0.01f32; 64];
+    let z = vec![0.0f32; 64];
+
+    // warmup: compile + first dispatches
+    for _ in 0..100 {
+        e.grad_block(Loss::Squared, &lits, &w).unwrap();
+        e.svrg_block(Loss::Squared, &lits, &w, &z, &z, &z, 0.5, 0.01).unwrap();
+    }
+    let baseline = rss_kb();
+    println!("baseline after warmup: {baseline} kB");
+    for round in 0..3 {
+        for _ in 0..5000 {
+            e.grad_block(Loss::Squared, &lits, &w).unwrap();
+        }
+        for _ in 0..1000 {
+            e.svrg_block(Loss::Squared, &lits, &w, &z, &z, &z, 0.5, 0.01).unwrap();
+        }
+        println!("after round {}: {} kB", round + 1, rss_kb());
+    }
+    let growth = rss_kb().saturating_sub(baseline);
+    println!("total growth over 18k calls: {growth} kB");
+    assert!(growth < 60_000, "engine hot path leaks: {growth} kB over 18k calls");
+    println!("LEAK CHECK OK");
+}

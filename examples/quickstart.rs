@@ -1,0 +1,55 @@
+//! Quickstart: run MP-DSVRG on a planted least-squares problem and watch
+//! the population objective fall to the noise floor.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This exercises the full stack: synthetic per-machine streams -> block
+//! packing -> AOT Pallas/JAX artifacts on the PJRT runtime -> the
+//! minibatch-prox outer loop with the distributed-SVRG inner solver ->
+//! resource accounting in the paper's units.
+
+use anyhow::Result;
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::metrics;
+
+fn main() -> Result<()> {
+    let mut runner = Runner::from_env()?;
+    println!(
+        "engine: platform={} artifacts={} block={}",
+        runner.engine.platform(),
+        runner.engine.manifest().artifacts.len(),
+        runner.engine.block_rows()
+    );
+
+    let cfg = ExperimentConfig {
+        m: 4,
+        b_local: 512,
+        n_budget: 65_536,
+        loss: Loss::Squared,
+        dim: 64,
+        seed: 7,
+        eval_samples: 4096,
+        eval_every: 4,
+        method: "mp-dsvrg".into(),
+        dataset: None,
+    };
+    println!(
+        "\nrunning {} on planted least squares (m={}, b={}, n={})",
+        cfg.method, cfg.m, cfg.b_local, cfg.n_budget
+    );
+    println!("noise floor (Bayes objective) = 0.005\n");
+
+    let result = runner.run(&cfg)?;
+    println!("{}", metrics::curve_csv(&result));
+    println!("{}", metrics::resource_table(&[&result]));
+
+    let obj = result.final_objective.unwrap_or(f64::NAN);
+    println!(
+        "final population objective {:.5} (excess over floor {:.5})",
+        obj,
+        obj - 0.005
+    );
+    Ok(())
+}

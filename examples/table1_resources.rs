@@ -1,0 +1,94 @@
+//! Table 1 — resources required by each method on the distributed
+//! stochastic least-squares problem, measured per machine in vectors.
+//!
+//!     cargo run --release --example table1_resources [n_budget] [m]
+//!
+//! Prints the measured counters next to the paper's asymptotic predictions
+//! (theory::predict_*). Absolute constants differ (ours include the log
+//! factors the paper suppresses); the *orderings and scalings* are the
+//! claims under test — see EXPERIMENTS.md §Table 1.
+
+use anyhow::Result;
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::{problem_consts, Runner};
+use mbprox::data::Loss;
+use mbprox::metrics;
+use mbprox::theory;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_budget: usize = args.first().map(|s| s.parse().unwrap()).unwrap_or(65_536);
+    let m: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(4);
+
+    let mut runner = Runner::from_env()?;
+    let base = ExperimentConfig {
+        m,
+        n_budget,
+        loss: Loss::Squared,
+        dim: 64,
+        seed: 99,
+        eval_samples: 4096,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    };
+    let c = problem_consts(&base);
+    let n = n_budget as f64;
+    let b_max = n_budget / m;
+
+    // (method, b_local) rows mirroring Table 1 top-to-bottom
+    let rows: Vec<(&str, &str, usize)> = vec![
+        ("Ideal (local SGD, 1 machine)", "local-sgd", 256),
+        ("Acc. minibatch SGD", "acc-minibatch-sgd", 64),
+        ("Minibatch SGD", "minibatch-sgd", 64),
+        ("DANE (ERM)", "dane-erm", 0),
+        ("DiSCO (ERM)", "disco-erm", 0),
+        ("AGD (ERM)", "agd-erm", 0),
+        ("DSVRG (ERM)", "dsvrg-erm", 0),
+        ("MP-DSVRG (b = 256)", "mp-dsvrg", 256),
+        ("MP-DSVRG (b = 1024)", "mp-dsvrg", 1024),
+        ("MP-DSVRG (b = b_max)", "mp-dsvrg", b_max),
+        ("MP-DANE  (b = 256)", "mp-dane", 256),
+        ("MP-oneshot/EMSO (b = 256)", "mp-oneshot", 256),
+    ];
+
+    println!("Table 1 — measured resources (n = {n_budget}, m = {m}, squared loss)\n");
+    let mut results = Vec::new();
+    for (label, method, b) in &rows {
+        let cfg = ExperimentConfig {
+            method: method.to_string(),
+            b_local: if *b == 0 { 256 } else { *b },
+            m: if *method == "local-sgd" { 1 } else { m },
+            ..base.clone()
+        };
+        match runner.run(&cfg) {
+            Ok(mut r) => {
+                r.name = label.to_string();
+                results.push(r);
+            }
+            Err(e) => eprintln!("{label}: {e}"),
+        }
+    }
+    let refs: Vec<&_> = results.iter().collect();
+    print!("{}", metrics::resource_table(&refs));
+
+    println!("\npaper predictions (per machine, ignoring constants/logs):");
+    println!(
+        "{:<28} {:>14} {:>14} {:>10}",
+        "method", "communication", "computation", "memory"
+    );
+    let pred = [
+        ("Acc. minibatch SGD", theory::predict_acc_minibatch_sgd(&c, n)),
+        ("DSVRG (ERM)", theory::predict_dsvrg_erm(&c, n)),
+        ("MP-DSVRG (b = 256)", theory::predict_mp_dsvrg(&c, n, 256)),
+        ("MP-DSVRG (b = 1024)", theory::predict_mp_dsvrg(&c, n, 1024)),
+        ("MP-DSVRG (b = b_max)", theory::predict_mp_dsvrg(&c, n, b_max)),
+        ("MP-DANE  (b = 256)", theory::predict_mp_dane(&c, n, 256, 64)),
+    ];
+    for (name, p) in pred {
+        println!(
+            "{:<28} {:>14.1} {:>14.1} {:>10.1}",
+            name, p.communication, p.computation, p.memory
+        );
+    }
+    Ok(())
+}

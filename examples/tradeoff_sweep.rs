@@ -1,0 +1,92 @@
+//! Figures 1 & 2 — the communication/memory/computation tradeoff of
+//! MP-DSVRG (and friends) as the minibatch size b sweeps from small to
+//! b_max = n/m.
+//!
+//!     cargo run --release --example tradeoff_sweep [--figure2] [n] [m]
+//!
+//! Figure 1 (default): MP-DSVRG only — communication falls ~1/b while
+//! memory rises ~b, computation flat (the paper's headline tradeoff).
+//! Figure 2 (--figure2): overlays acc-minibatch-SGD, MP-DANE, DSVRG-ERM
+//! so the crossovers of the schematic are measurable.
+
+use anyhow::Result;
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let figure2 = args.iter().any(|a| a == "--figure2");
+    let nums: Vec<usize> =
+        args.iter().filter(|a| !a.starts_with("--")).map(|s| s.parse().unwrap()).collect();
+    let n_budget = nums.first().copied().unwrap_or(65_536);
+    let m = nums.get(1).copied().unwrap_or(4);
+
+    let mut runner = Runner::from_env()?;
+    let base = ExperimentConfig {
+        m,
+        n_budget,
+        loss: Loss::Squared,
+        dim: 64,
+        seed: 31,
+        eval_samples: 2048,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    };
+
+    let methods: Vec<&str> = if figure2 {
+        vec!["mp-dsvrg", "mp-dane", "acc-minibatch-sgd", "minibatch-sgd"]
+    } else {
+        vec!["mp-dsvrg"]
+    };
+
+    println!(
+        "# {} — n={n_budget}, m={m}, squared loss",
+        if figure2 { "Figure 2" } else { "Figure 1" }
+    );
+    println!("method,b_local,comm_rounds,vec_ops,peak_memory,sim_time_s,objective");
+    for method in methods {
+        let mut b = 64usize;
+        let b_max = n_budget / m;
+        while b <= b_max {
+            let cfg = ExperimentConfig {
+                method: method.to_string(),
+                b_local: b,
+                ..base.clone()
+            };
+            match runner.run(&cfg) {
+                Ok(r) => {
+                    println!(
+                        "{method},{b},{},{},{},{:.5},{}",
+                        r.report.comm_rounds,
+                        r.report.vec_ops,
+                        r.report.peak_vectors,
+                        r.sim_time_s,
+                        r.final_objective.map(|o| format!("{o:.6}")).unwrap_or_default()
+                    );
+                }
+                Err(e) => eprintln!("# {method} b={b}: {e}"),
+            }
+            b *= 4;
+        }
+    }
+    // reference points for Figure 2's right edge: the ERM batch methods
+    if figure2 {
+        for method in ["dsvrg-erm", "dane-erm", "disco-erm"] {
+            let cfg = ExperimentConfig { method: method.to_string(), ..base.clone() };
+            match runner.run(&cfg) {
+                Ok(r) => println!(
+                    "{method},{},{},{},{},{:.5},{}",
+                    n_budget / m,
+                    r.report.comm_rounds,
+                    r.report.vec_ops,
+                    r.report.peak_vectors,
+                    r.sim_time_s,
+                    r.final_objective.map(|o| format!("{o:.6}")).unwrap_or_default()
+                ),
+                Err(e) => eprintln!("# {method}: {e}"),
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+"""AOT driver: lower every registry artifact to HLO text + manifest.json.
+
+Run once at build time (``make artifacts``); python never appears on the
+rust request path.  Emits HLO *text* (NOT ``.serialize()``): the image's
+xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id protos, while the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+from .kernels import BLOCK, DIMS
+from .model import build_registry, lower_to_hlo_text
+
+
+def emit_all(out_dir: str, block: int = BLOCK, dims=DIMS) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    registry = build_registry(block=block, dims=dims)
+    manifest = {"block": block, "dims": list(dims), "artifacts": []}
+    for name in sorted(registry):
+        spec = registry[name]
+        text = lower_to_hlo_text(spec)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": spec.name,
+                "file": f"{name}.hlo.txt",
+                "kind": spec.kind,
+                "loss": spec.loss,
+                "d": spec.d,
+                "block": spec.block,
+                "arg_shapes": [list(s) for s in spec.arg_shapes],
+                "outputs": list(spec.outputs),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"  lowered {name:>14s} -> {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored; use --out-dir")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        # legacy Makefile passed a single file path; emit to its directory
+        out_dir = os.path.dirname(args.out) or "."
+    emit_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the minibatch-prox / MP-DSVRG / MP-DANE stack."""
+
+from .common import BLOCK, DIMS, DTYPE, LOSSES, LOSS_LOGISTIC, LOSS_SQUARED, artifact_name
+from .grad import block_grad, normal_matvec
+from .saga import saga_block
+from .svrg import svrg_block
+
+__all__ = [
+    "BLOCK",
+    "DIMS",
+    "DTYPE",
+    "LOSSES",
+    "LOSS_LOGISTIC",
+    "LOSS_SQUARED",
+    "artifact_name",
+    "block_grad",
+    "saga_block",
+    "normal_matvec",
+    "svrg_block",
+]

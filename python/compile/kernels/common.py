@@ -1,0 +1,47 @@
+"""Shared constants and helpers for the L1 Pallas kernels.
+
+All artifacts operate on fixed-shape *blocks* of data: `BLOCK` rows of a
+feature matrix padded to one of the supported feature dimensions `DIMS`.
+A 0/1 `mask` column marks the valid rows so that tail padding is a no-op;
+gradients and losses are returned as **sums plus a valid-row count**, which
+lets the rust coordinator combine arbitrary block partitions exactly.
+
+A 256x128 f32 block is 128 KiB, so a whole block together with its labels,
+mask and every vector operand is VMEM-resident on a real TPU; each kernel
+is therefore a single grid step with full fusion (see DESIGN.md
+SS-Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Rows per data block. Chosen so that a full (BLOCK, 128) f32 tile plus all
+# vector operands fits comfortably in a single VMEM-resident grid step.
+BLOCK: int = 256
+
+# Supported (padded) feature dimensions. Table 3 datasets map as:
+# codrna(8) -> 64, covtype(54) -> 64, year(90) -> 128, kddcup99(127) -> 128.
+DIMS: tuple[int, ...] = (64, 128)
+
+# Loss tags used in artifact names.
+LOSS_SQUARED = "sq"
+LOSS_LOGISTIC = "log"
+LOSSES: tuple[str, ...] = (LOSS_SQUARED, LOSS_LOGISTIC)
+
+DTYPE = jnp.float32
+
+
+def artifact_name(kind: str, loss: str, d: int) -> str:
+    """Canonical artifact name, e.g. ``grad_sq_d64``.
+
+    ``kind`` is one of ``grad``, ``svrg``, ``saga``, ``nm``; ``nm`` (the regularized
+    normal-equation matvec) exists only for the squared loss.
+    """
+    if kind not in ("grad", "svrg", "saga", "nm"):
+        raise ValueError(f"unknown artifact kind: {kind}")
+    if loss not in LOSSES:
+        raise ValueError(f"unknown loss: {loss}")
+    if kind == "nm" and loss != LOSS_SQUARED:
+        raise ValueError("normal-equation matvec only exists for squared loss")
+    return f"{kind}_{loss}_d{d}"

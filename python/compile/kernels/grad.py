@@ -1,0 +1,97 @@
+"""L1 Pallas kernels: fused block gradient + loss for squared / logistic loss.
+
+The block gradient is the compute hot-spot of every method in the paper
+(minibatch SGD, the DSVRG full-gradient rounds, DANE local objectives, CG
+matvecs all reduce to it).  Each kernel fuses, in one VMEM-resident pass:
+
+    squared:   r = (X @ w - y) * mask ; grad = X^T r ; loss = 0.5 * sum r^2
+    logistic:  t = -y * (X @ w) ;  s = sigmoid(t) * mask
+               grad = X^T (-y * s) ; loss = sum(mask * softplus(t))
+
+The two contractions (``X @ w`` and ``X^T r``) are MXU-eligible matmuls on
+a real TPU; everything between them is a VPU epilogue.  Kernels are lowered
+with ``interpret=True`` — the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DTYPE, LOSS_LOGISTIC, LOSS_SQUARED
+
+
+def _grad_sq_kernel(x_ref, y_ref, m_ref, w_ref, g_ref, loss_ref, cnt_ref):
+    X = x_ref[...]  # [B, d]
+    y = y_ref[...]  # [B]
+    mask = m_ref[...]  # [B], 0/1
+    w = w_ref[...]  # [d]
+    # residual, masked so padded rows contribute nothing
+    r = (jnp.dot(X, w) - y) * mask  # [B]   (MXU matvec + VPU epilogue)
+    g_ref[...] = jnp.dot(r, X)  # X^T r   (MXU)
+    loss_ref[...] = 0.5 * jnp.sum(r * r, keepdims=True)  # mask is 0/1 => mask^2 == mask
+    cnt_ref[...] = jnp.sum(mask, keepdims=True)
+
+
+def _grad_log_kernel(x_ref, y_ref, m_ref, w_ref, g_ref, loss_ref, cnt_ref):
+    X = x_ref[...]
+    y = y_ref[...]  # labels in {-1, +1}
+    mask = m_ref[...]
+    w = w_ref[...]
+    t = -y * jnp.dot(X, w)  # [B]
+    s = jax.nn.sigmoid(t) * mask
+    g_ref[...] = jnp.dot(-y * s, X)  # X^T(-y * sigmoid(-y Xw))
+    # numerically stable softplus: log(1 + e^t)
+    loss_ref[...] = jnp.sum(mask * jnp.logaddexp(0.0, t), keepdims=True)
+    cnt_ref[...] = jnp.sum(mask, keepdims=True)
+
+
+def block_grad(loss: str, X, y, mask, w):
+    """Fused block gradient: returns ``(grad_sum[d], loss_sum[1], count[1])``.
+
+    ``grad_sum`` is the *sum* over valid rows of per-sample gradients (not
+    the mean) — callers divide by the total valid count across blocks.
+    """
+    b, d = X.shape
+    kernel = _grad_sq_kernel if loss == LOSS_SQUARED else _grad_log_kernel
+    if loss not in (LOSS_SQUARED, LOSS_LOGISTIC):
+        raise ValueError(f"unknown loss {loss}")
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+        ),
+        interpret=True,
+    )(X, y, mask, w)
+
+
+def _nm_sq_kernel(x_ref, m_ref, v_ref, out_ref, cnt_ref):
+    X = x_ref[...]
+    mask = m_ref[...]
+    v = v_ref[...]
+    u = jnp.dot(X, v) * mask  # [B]  (MXU + VPU mask)
+    out_ref[...] = jnp.dot(u, X)  # X^T diag(mask) X v  (MXU)
+    cnt_ref[...] = jnp.sum(mask, keepdims=True)
+
+
+def normal_matvec(X, mask, v):
+    """Fused ``X^T diag(mask) X v`` (sum form) + valid count.
+
+    This is the Hessian-vector product of the empirical squared loss (times
+    the count); the rust CG solver assembles ``(1/n) X^T X v + gamma v``
+    from block sums.  Also the core of the DiSCO-style distributed Newton
+    baseline.
+    """
+    b, d = X.shape
+    return pl.pallas_call(
+        _nm_sq_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+        ),
+        interpret=True,
+    )(X, mask, v)

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: sequential SAGA block pass (GLM-structured).
+
+Appendix E runs MP-DANE with **SAGA** (Defazio et al. 2014) as the local
+solver ("we use SAGA to solve each local DANE subproblem (33) and fix the
+number of SAGA steps to b"). For GLM losses the per-sample gradient
+factorizes as ``s_i(w) * x_i`` with a *scalar* link residual
+
+    squared:   s_i(w) = x_i . w - y_i
+    logistic:  s_i(w) = -y_i * sigmoid(-y_i * x_i . w)
+
+so the SAGA gradient table is one scalar per sample (B scalars ~ B/d
+"vectors" — negligible next to the b-sample minibatch itself, which is why
+MP-DANE's memory row in Table 2 stays ~b).
+
+One call = one without-replacement sweep:
+  - alpha_i initialized to s_i(z) (the snapshot link residuals), so the
+    first correction matches SVRG, then the table updates as rows are
+    visited (true SAGA within the pass);
+  - gbar (the running mean of stored gradients) starts at ``mu`` — the
+    DANE global-gradient correction rides in exactly as in the SVRG kernel;
+  - per valid row i:
+        g     = (s_i(x) - alpha_i) x_i + gbar + gamma (x - center)
+        x    <- x - eta g
+        gbar <- gbar + (s_i(x) - alpha_i) x_i / n_valid
+        alpha_i <- s_i(x)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DTYPE, LOSS_LOGISTIC, LOSS_SQUARED
+
+
+def _link_residual(loss: str, z, y):
+    """Vectorized scalar link residual s(w) for all rows, given z = X w."""
+    if loss == LOSS_SQUARED:
+        return z - y
+    return -y * jax.nn.sigmoid(-y * z)
+
+
+def _make_saga_kernel(loss: str):
+    def kernel(
+        x_ref, y_ref, m_ref, x0_ref, z_ref, mu_ref, c_ref, gamma_ref, eta_ref,
+        xout_ref, xavg_ref,
+    ):
+        X = x_ref[...]  # [B, d]
+        y = y_ref[...]
+        mask = m_ref[...]
+        z = z_ref[...]
+        mu = mu_ref[...]
+        center = c_ref[...]
+        gamma = gamma_ref[0]
+        eta = eta_ref[0]
+        x0 = x0_ref[...]
+        n_valid = jnp.maximum(jnp.sum(mask), 1.0)
+
+        # alpha_i = s_i(z) for every row (MXU matvec + VPU link epilogue)
+        alpha0 = _link_residual(loss, jnp.dot(X, z), y)
+
+        def body(r, carry):
+            x, gbar, alpha, xsum, cnt = carry
+            xi = X[r]
+            yi = y[r]
+            mi = mask[r]
+            s_new = _link_residual(loss, jnp.dot(xi, x), yi)
+            diff = s_new - alpha[r]
+            g = diff * xi + gbar + gamma * (x - center)
+            x_new = x - eta * g
+            x = jnp.where(mi > 0, x_new, x)
+            gbar = jnp.where(mi > 0, gbar + (diff / n_valid) * xi, gbar)
+            alpha = alpha.at[r].set(jnp.where(mi > 0, s_new, alpha[r]))
+            xsum = xsum + jnp.where(mi > 0, x, jnp.zeros_like(x))
+            cnt = cnt + mi
+            return (x, gbar, alpha, xsum, cnt)
+
+        x, _gbar, _alpha, xsum, cnt = jax.lax.fori_loop(
+            0, X.shape[0], body, (x0, mu, alpha0, x0, jnp.ones((), DTYPE))
+        )
+        xout_ref[...] = x
+        xavg_ref[...] = xsum / cnt
+
+    return kernel
+
+
+def saga_block(loss: str, X, y, mask, x0, z, mu, center, gamma, eta):
+    """One without-replacement SAGA sweep; returns ``(x_out, x_avg)``."""
+    if loss not in (LOSS_SQUARED, LOSS_LOGISTIC):
+        raise ValueError(f"unknown loss {loss}")
+    b, d = X.shape
+    return pl.pallas_call(
+        _make_saga_kernel(loss),
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((d,), DTYPE),
+        ),
+        interpret=True,
+    )(X, y, mask, x0, z, mu, center, gamma, eta)

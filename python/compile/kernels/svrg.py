@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: sequential variance-reduced (SVRG) block pass.
+
+This is step 2 of Algorithm 1 (MP-DSVRG) and the local prox-SVRG solve of
+Algorithm 2 (MP-DANE): one machine sweeps a local batch *without
+replacement*, applying per-sample variance-reduced updates for the proximal
+objective
+
+    f_t(w) = phi_I(w) + gamma/2 ||w - w_prev||^2 .
+
+Per valid row xi (label yi), with snapshot ``z`` and full minibatch gradient
+``mu = grad phi_I(z)``:
+
+    g  = dl(x, xi) - dl(z, xi) + mu + gamma * (x - w_prev)
+    x <- x - eta * g
+
+The sweep has a true loop-carried dependence (each update feeds the next),
+so — exactly like the paper runs it on a *single* machine per round — it is
+a single-program kernel with a ``fori_loop`` over rows.  All operands stay
+VMEM-resident; per-row work is two dot products and rank-1 AXPYs (VPU).
+
+Following Algorithm 1 step 3, the running average includes the initial
+iterate: ``x_avg = (1 / (1 + #valid)) * (x_0 + sum_r x_r)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DTYPE, LOSS_LOGISTIC, LOSS_SQUARED
+
+
+def _row_grad_sq(xi, yi, w):
+    return (jnp.dot(xi, w) - yi) * xi
+
+
+def _row_grad_log(xi, yi, w):
+    t = -yi * jnp.dot(xi, w)
+    return (-yi * jax.nn.sigmoid(t)) * xi
+
+
+def _make_svrg_kernel(loss: str):
+    row_grad = _row_grad_sq if loss == LOSS_SQUARED else _row_grad_log
+
+    def kernel(
+        x_ref, y_ref, m_ref, x0_ref, z_ref, mu_ref, wp_ref, gamma_ref, eta_ref,
+        xout_ref, xavg_ref,
+    ):
+        X = x_ref[...]  # [B, d]
+        y = y_ref[...]  # [B]
+        mask = m_ref[...]  # [B]
+        z = z_ref[...]  # snapshot iterate
+        mu = mu_ref[...]  # full minibatch gradient at z
+        wp = wp_ref[...]  # prox center w_{t-1}
+        gamma = gamma_ref[0]
+        eta = eta_ref[0]
+        x0 = x0_ref[...]
+
+        def body(r, carry):
+            x, xsum, cnt = carry
+            xi = X[r]
+            yi = y[r]
+            mi = mask[r]
+            g = row_grad(xi, yi, x) - row_grad(xi, yi, z) + mu + gamma * (x - wp)
+            x_new = x - eta * g
+            # Padded rows are a strict no-op: neither update nor average.
+            x = jnp.where(mi > 0, x_new, x)
+            xsum = xsum + jnp.where(mi > 0, x, jnp.zeros_like(x))
+            cnt = cnt + mi
+            return (x, xsum, cnt)
+
+        # The average includes x_0 (Algorithm 1 sums r = 0 .. |B|).
+        x, xsum, cnt = jax.lax.fori_loop(
+            0, X.shape[0], body, (x0, x0, jnp.ones((), DTYPE))
+        )
+        xout_ref[...] = x
+        xavg_ref[...] = xsum / cnt
+
+    return kernel
+
+
+def svrg_block(loss: str, X, y, mask, x0, z, mu, wprev, gamma, eta):
+    """One without-replacement SVRG sweep over a block.
+
+    ``gamma`` and ``eta`` are shape-(1,) f32 arrays (scalar operands).
+    Returns ``(x_out[d], x_avg[d])``.
+    """
+    if loss not in (LOSS_SQUARED, LOSS_LOGISTIC):
+        raise ValueError(f"unknown loss {loss}")
+    b, d = X.shape
+    return pl.pallas_call(
+        _make_svrg_kernel(loss),
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((d,), DTYPE),
+        ),
+        interpret=True,
+    )(X, y, mask, x0, z, mu, wprev, gamma, eta)

@@ -1,0 +1,161 @@
+"""L2: the JAX compute graphs that become the AOT artifacts.
+
+Each artifact is a pure function over fixed-shape block operands that calls
+the L1 Pallas kernels, so the kernel lowers into the same HLO module.  The
+registry below is the single source of truth consumed by ``aot.py`` (which
+lowers every entry to HLO text) and by the pytest suite (which checks each
+entry against the ``ref.py`` oracles before lowering).
+
+All functions return *tuples* (lowered with ``return_tuple=True``), matching
+the rust loader's ``to_tupleN`` unwrapping.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+
+from .kernels import (
+    BLOCK,
+    DIMS,
+    DTYPE,
+    LOSSES,
+    LOSS_SQUARED,
+    artifact_name,
+    block_grad,
+    normal_matvec,
+    saga_block,
+    svrg_block,
+)
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT artifact: a jittable fn plus its example (shape) arguments."""
+
+    name: str
+    fn: Callable
+    arg_shapes: tuple[tuple[int, ...], ...]
+    # metadata recorded in the manifest for the rust registry
+    kind: str = ""  # grad | svrg | nm
+    loss: str = ""
+    d: int = 0
+    block: int = BLOCK
+    outputs: tuple[str, ...] = field(default=())
+
+    def example_args(self):
+        return tuple(jax.ShapeDtypeStruct(s, DTYPE) for s in self.arg_shapes)
+
+
+def _grad_fn(loss: str):
+    def fn(X, y, mask, w):
+        g, l, c = block_grad(loss, X, y, mask, w)
+        return (g, l, c)
+
+    fn.__name__ = f"grad_{loss}"
+    return fn
+
+
+def _svrg_fn(loss: str):
+    def fn(X, y, mask, x0, z, mu, wprev, gamma, eta):
+        x_out, x_avg = svrg_block(loss, X, y, mask, x0, z, mu, wprev, gamma, eta)
+        return (x_out, x_avg)
+
+    fn.__name__ = f"svrg_{loss}"
+    return fn
+
+
+def _saga_fn(loss: str):
+    def fn(X, y, mask, x0, z, mu, center, gamma, eta):
+        x_out, x_avg = saga_block(loss, X, y, mask, x0, z, mu, center, gamma, eta)
+        return (x_out, x_avg)
+
+    fn.__name__ = f"saga_{loss}"
+    return fn
+
+
+def _nm_fn():
+    def fn(X, mask, v):
+        out, c = normal_matvec(X, mask, v)
+        return (out, c)
+
+    fn.__name__ = "nm_sq"
+    return fn
+
+
+def build_registry(block: int = BLOCK, dims=DIMS) -> dict[str, ArtifactSpec]:
+    """All artifacts, keyed by canonical name (see kernels.artifact_name)."""
+    reg: dict[str, ArtifactSpec] = {}
+    for d in dims:
+        for loss in LOSSES:
+            name = artifact_name("grad", loss, d)
+            reg[name] = ArtifactSpec(
+                name=name,
+                fn=_grad_fn(loss),
+                arg_shapes=((block, d), (block,), (block,), (d,)),
+                kind="grad",
+                loss=loss,
+                d=d,
+                block=block,
+                outputs=("grad_sum", "loss_sum", "count"),
+            )
+            name = artifact_name("svrg", loss, d)
+            reg[name] = ArtifactSpec(
+                name=name,
+                fn=_svrg_fn(loss),
+                arg_shapes=(
+                    (block, d), (block,), (block,),
+                    (d,), (d,), (d,), (d,), (1,), (1,),
+                ),
+                kind="svrg",
+                loss=loss,
+                d=d,
+                block=block,
+                outputs=("x_out", "x_avg"),
+            )
+            name = artifact_name("saga", loss, d)
+            reg[name] = ArtifactSpec(
+                name=name,
+                fn=_saga_fn(loss),
+                arg_shapes=(
+                    (block, d), (block,), (block,),
+                    (d,), (d,), (d,), (d,), (1,), (1,),
+                ),
+                kind="saga",
+                loss=loss,
+                d=d,
+                block=block,
+                outputs=("x_out", "x_avg"),
+            )
+        name = artifact_name("nm", LOSS_SQUARED, d)
+        reg[name] = ArtifactSpec(
+            name=name,
+            fn=_nm_fn(),
+            arg_shapes=((block, d), (block,), (d,)),
+            kind="nm",
+            loss=LOSS_SQUARED,
+            d=d,
+            block=block,
+            outputs=("xtxv_sum", "count"),
+        )
+    return reg
+
+
+def lower_to_hlo_text(spec: ArtifactSpec) -> str:
+    """Lower one artifact to HLO *text* (the interchange format).
+
+    jax >= 0.5 serializes HloModuleProto with 64-bit instruction ids which
+    xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6
+    crate) rejects; the HLO text parser reassigns ids and round-trips
+    cleanly.  Lowered with return_tuple=True; rust unwraps with to_tupleN.
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(spec.fn).lower(*spec.example_args())
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,28 @@
+"""Shared fixtures/strategies for the kernel test suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import strategies as st
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(20170707)
+
+
+def finite_f32(lo=-3.0, hi=3.0):
+    return st.floats(
+        min_value=lo, max_value=hi, allow_nan=False, allow_infinity=False, width=32
+    )
+
+
+# Hypothesis strategy: (rows, dim, valid_rows, seed). Shapes stay small so
+# interpret-mode pallas is fast, but sweep odd sizes, full/empty masks.
+block_shapes = st.tuples(
+    st.integers(min_value=1, max_value=24),  # rows
+    st.sampled_from([1, 2, 3, 5, 8, 16]),  # dim
+    st.integers(min_value=0, max_value=24),  # valid rows (clipped to rows)
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)

@@ -1,0 +1,54 @@
+"""AOT manifest round-trip tests (uses a tmp dir; does not touch artifacts/)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile.aot import emit_all
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # a single small config keeps the test fast; the full set is covered by
+    # `make artifacts` + the rust integration tests
+    manifest = emit_all(str(out), block=8, dims=(2,))
+    return str(out), manifest
+
+
+def test_manifest_files_exist(emitted):
+    out, manifest = emitted
+    assert manifest["block"] == 8
+    assert manifest["dims"] == [2]
+    assert len(manifest["artifacts"]) == 7  # (grad+svrg+saga) x2 losses + nm
+    for a in manifest["artifacts"]:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert text.startswith("HloModule")
+
+
+def test_manifest_json_round_trip(emitted):
+    out, manifest = emitted
+    on_disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert on_disk == json.loads(json.dumps(manifest))
+
+
+def test_manifest_hashes_match(emitted):
+    import hashlib
+
+    out, manifest = emitted
+    for a in manifest["artifacts"]:
+        text = open(os.path.join(out, a["file"])).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"]
+
+
+def test_manifest_shapes_are_lists(emitted):
+    _, manifest = emitted
+    for a in manifest["artifacts"]:
+        assert all(isinstance(s, list) for s in a["arg_shapes"])
+        assert a["kind"] in ("grad", "svrg", "saga", "nm")
+        assert a["block"] == 8

@@ -1,0 +1,165 @@
+"""Kernel-vs-reference correctness — the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle in ``ref.py`` across
+random shapes, masks (including all-padded blocks) and parameter ranges.
+Hypothesis drives the shape/value sweep; fixed-seed tests pin exact
+regression cases at the production block size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import (
+    BLOCK,
+    LOSSES,
+    block_grad,
+    normal_matvec,
+    saga_block,
+    svrg_block,
+)
+from compile.kernels import ref
+from .conftest import block_shapes
+
+
+def make_block(rows, dim, valid, seed, labels="real"):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(rows, dim)).astype(np.float32)
+    if labels == "sign":
+        y = np.where(rng.normal(size=(rows,)) >= 0, 1.0, -1.0).astype(np.float32)
+    else:
+        y = rng.normal(size=(rows,)).astype(np.float32)
+    mask = (np.arange(rows) < min(valid, rows)).astype(np.float32)
+    return jnp.asarray(X), jnp.asarray(y), jnp.asarray(mask), rng
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=40, deadline=None)
+@given(shape=block_shapes)
+def test_block_grad_matches_ref(loss, shape):
+    rows, dim, valid, seed = shape
+    X, y, mask, rng = make_block(rows, dim, valid, seed, "sign" if loss == "log" else "real")
+    w = jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    g, l, c = block_grad(loss, X, y, mask, w)
+    gr, lr, cr = ref.block_grad_ref(loss, X, y, mask, w)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(l, lr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c, cr)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=block_shapes)
+def test_normal_matvec_matches_ref(shape):
+    rows, dim, valid, seed = shape
+    X, _, mask, rng = make_block(rows, dim, valid, seed)
+    v = jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    o, c = normal_matvec(X, mask, v)
+    orf, crf = ref.normal_matvec_ref(X, mask, v)
+    np.testing.assert_allclose(o, orf, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c, crf)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=15, deadline=None)
+@given(shape=block_shapes)
+def test_svrg_block_matches_ref(loss, shape):
+    rows, dim, valid, seed = shape
+    X, y, mask, rng = make_block(rows, dim, valid, seed, "sign" if loss == "log" else "real")
+    vec = lambda: jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    x0, z, mu, wp = vec(), vec(), vec(), vec()
+    gamma = jnp.asarray([abs(float(rng.normal())) + 0.1], jnp.float32)
+    eta = jnp.asarray([0.01], jnp.float32)
+    xo, xa = svrg_block(loss, X, y, mask, x0, z, mu, wp, gamma, eta)
+    xor_, xar = ref.svrg_block_ref(loss, X, y, mask, x0, z, mu, wp, gamma, eta)
+    np.testing.assert_allclose(xo, xor_, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(xa, xar, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=15, deadline=None)
+@given(shape=block_shapes)
+def test_saga_block_matches_ref(loss, shape):
+    rows, dim, valid, seed = shape
+    X, y, mask, rng = make_block(rows, dim, valid, seed, "sign" if loss == "log" else "real")
+    vec = lambda: jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    x0, z, mu, c = vec(), vec(), vec(), vec()
+    gamma = jnp.asarray([abs(float(rng.normal())) + 0.1], jnp.float32)
+    eta = jnp.asarray([0.01], jnp.float32)
+    xo, xa = saga_block(loss, X, y, mask, x0, z, mu, c, gamma, eta)
+    xor_, xar = ref.saga_block_ref(loss, X, y, mask, x0, z, mu, c, gamma, eta)
+    np.testing.assert_allclose(xo, xor_, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(xa, xar, rtol=1e-3, atol=1e-4)
+
+
+def test_saga_first_steps_match_svrg():
+    """With alpha initialized at the snapshot, SAGA's *first* row update
+    coincides with SVRG's (same control variate before any table update)."""
+    rows, dim = 1, 5
+    X, y, mask, rng = make_block(rows, dim, rows, 13)
+    vec = lambda: jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    x0, z, mu, wp = vec(), vec(), vec(), vec()
+    gamma = jnp.asarray([0.5], jnp.float32)
+    eta = jnp.asarray([0.05], jnp.float32)
+    xs, _ = svrg_block("sq", X, y, mask, x0, z, mu, wp, gamma, eta)
+    xg, _ = saga_block("sq", X, y, mask, x0, z, mu, wp, gamma, eta)
+    np.testing.assert_allclose(xs, xg, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_padding_is_noop(loss):
+    """Gradient of a padded block == gradient of the compact data."""
+    rows, dim, valid = BLOCK, 64, 100
+    X, y, mask, rng = make_block(rows, dim, valid, 7, "sign" if loss == "log" else "real")
+    w = jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    g_pad, l_pad, c_pad = block_grad(loss, X, y, mask, w)
+    g_cut, l_cut, c_cut = ref.block_grad_ref(
+        loss, X[:valid], y[:valid], jnp.ones((valid,), jnp.float32), w
+    )
+    np.testing.assert_allclose(g_pad, g_cut, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(l_pad, l_cut, rtol=1e-4, atol=1e-5)
+    assert float(c_pad[0]) == valid
+
+
+def test_all_masked_block_is_zero():
+    X, y, mask, rng = make_block(8, 4, 0, 3)
+    w = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+    g, l, c = block_grad("sq", X, y, mask, w)
+    assert float(c[0]) == 0.0
+    np.testing.assert_allclose(g, np.zeros(4), atol=1e-7)
+    np.testing.assert_allclose(l, [0.0], atol=1e-7)
+
+
+def test_svrg_zero_eta_is_identity():
+    X, y, mask, rng = make_block(12, 6, 12, 11)
+    vec = lambda: jnp.asarray(rng.normal(size=(6,)).astype(np.float32))
+    x0, z, mu, wp = vec(), vec(), vec(), vec()
+    xo, xa = svrg_block(
+        "sq", X, y, mask, x0, z, mu, wp,
+        jnp.asarray([1.0], jnp.float32), jnp.asarray([0.0], jnp.float32),
+    )
+    np.testing.assert_allclose(xo, x0, atol=1e-7)
+    np.testing.assert_allclose(xa, x0, atol=1e-6)
+
+
+def test_svrg_decreases_prox_objective():
+    """On a well-conditioned least-squares block, one VR sweep with a sane
+    stepsize must reduce the prox objective (the property Algorithm 1
+    relies on: one pass per batch decreases the objective)."""
+    rows, dim = BLOCK, 64
+    X, y, mask, rng = make_block(rows, dim, rows, 5)
+    X = X / np.sqrt(dim)  # row norms ~1 => smoothness ~1
+    wp = jnp.zeros((dim,), jnp.float32)
+    x0 = jnp.zeros((dim,), jnp.float32)
+    gamma = jnp.asarray([1.0], jnp.float32)
+    # mu = full prox gradient at snapshot z=x0
+    gsum, _, cnt = ref.block_grad_ref("sq", X, y, mask, x0)
+    mu = gsum / cnt[0]
+    before = ref.prox_objective_ref("sq", X, y, mask, x0, wp, 1.0)
+    xo, xa = svrg_block(
+        "sq", X, y, mask, x0, x0, mu, wp, gamma, jnp.asarray([0.1], jnp.float32)
+    )
+    after = ref.prox_objective_ref("sq", X, y, mask, xa, wp, 1.0)
+    assert float(after) < float(before)

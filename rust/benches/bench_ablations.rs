@@ -1,0 +1,121 @@
+//! Bench: ablations on the design choices DESIGN.md calls out.
+//!
+//!   A1. Local VR solver: SVRG vs SAGA inside MP-DANE (the paper's App. E
+//!       uses SAGA; our default is SVRG — same kernel interface).
+//!   A2. DANE rounds K: the diminishing-returns claim at fixed budget.
+//!   A3. SVRG stepsize eta sensitivity around the 0.1/(beta+gamma) rule.
+//!   A4. DSVRG local batches p: theory picks p ~ b/kappa; sweep around it.
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::algos::mbprox::MinibatchProx;
+use mbprox::algos::solvers::dane::DaneSolver;
+use mbprox::algos::solvers::dsvrg::DsvrgSolver;
+use mbprox::algos::solvers::LocalSolver;
+use mbprox::algos::{Method, RunContext};
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::coordinator::Runner;
+use mbprox::data::synth::{SynthSpec, SynthStream};
+use mbprox::data::{Loss, SampleStream};
+use mbprox::objective::Evaluator;
+use mbprox::theory::{self, ProblemConsts};
+use mbprox::util::benchkit;
+
+const N: usize = 16_384;
+const M: usize = 4;
+const B: usize = 256;
+const DIM: usize = 64;
+
+fn run(runner: &mut Runner, method: &mut dyn Method, seed: u64) -> (f64, u64, u64) {
+    let root = SynthStream::new(SynthSpec::least_squares(DIM), seed);
+    let streams: Vec<Box<dyn SampleStream>> = (0..M)
+        .map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>)
+        .collect();
+    let mut eval_stream = root.fork_stream(4242);
+    let eval_samples = eval_stream.draw_many(2048);
+    let evaluator = Evaluator::new(&runner.engine, DIM, Loss::Squared, &eval_samples).unwrap();
+    let mut ctx = RunContext {
+        engine: &mut runner.engine,
+        net: Network::new(M, NetModel::default()),
+        meter: ClusterMeter::new(M),
+        loss: Loss::Squared,
+        d: DIM,
+        streams,
+        evaluator: Some(evaluator),
+        eval_every: 0,
+    };
+    let r = method.run(&mut ctx).unwrap();
+    (r.final_objective.unwrap_or(f64::NAN), r.report.comm_rounds, r.report.vec_ops)
+}
+
+fn consts() -> (ProblemConsts, theory::MbProxPlan) {
+    let c = ProblemConsts {
+        l_lipschitz: 1.0,
+        b_norm: (DIM as f64).sqrt(),
+        beta_smooth: 1.0,
+        m: M,
+    };
+    let plan = theory::mbprox_plan(&c, N as f64, B);
+    (c, plan)
+}
+
+fn main() {
+    let mut runner = Runner::from_env().expect("run `make artifacts` first");
+    let (c, plan) = consts();
+    let eta = 0.1 / (c.beta_smooth + plan.gamma);
+
+    benchkit::section("A1: MP-DANE local solver — SVRG vs SAGA (paper App. E uses SAGA)");
+    println!("{:<10} {:>12} {:>12} {:>12}", "solver", "objective", "rounds", "vec_ops");
+    for solver in [LocalSolver::Svrg, LocalSolver::Saga] {
+        let mut m = MinibatchProx::new(
+            "mp-dane",
+            B,
+            plan.t_outer,
+            plan.gamma,
+            DaneSolver::plain(6, eta).with_local_solver(solver),
+        );
+        let (obj, rounds, ops) = run(&mut runner, &mut m, 1);
+        println!("{:<10} {:>12.5} {:>12} {:>12}", solver.tag(), obj, rounds, ops);
+    }
+
+    benchkit::section("A2: DANE rounds K — diminishing returns at fixed sample budget");
+    println!("{:<6} {:>12} {:>12} {:>12}", "K", "objective", "rounds", "vec_ops");
+    for k in [1usize, 2, 4, 8, 16] {
+        let mut m = MinibatchProx::new(
+            "mp-dane",
+            B,
+            plan.t_outer,
+            plan.gamma,
+            DaneSolver::plain(k, eta),
+        );
+        let (obj, rounds, ops) = run(&mut runner, &mut m, 2);
+        println!("{:<6} {:>12.5} {:>12} {:>12}", k, obj, rounds, ops);
+    }
+
+    benchkit::section("A3: SVRG stepsize eta around the 0.1/(beta+gamma) rule");
+    println!("{:<10} {:>12}", "eta_scale", "objective");
+    for scale in [0.25f64, 0.5, 1.0, 2.0, 4.0] {
+        let mut m = MinibatchProx::new(
+            "mp-dsvrg",
+            B,
+            plan.t_outer,
+            plan.gamma,
+            DsvrgSolver::new(8, 1, eta * scale),
+        );
+        let (obj, _, _) = run(&mut runner, &mut m, 3);
+        println!("{:<10} {:>12.5}", format!("{scale}x"), obj);
+    }
+
+    benchkit::section("A4: DSVRG local batches p (theory: p ~ b / condition-number)");
+    println!("{:<6} {:>12} {:>12}", "p", "objective", "rounds");
+    for p in [1usize, 2, 4, 8] {
+        let mut m = MinibatchProx::new(
+            "mp-dsvrg",
+            1024, // 4 blocks per machine so p actually splits them
+            theory::mbprox_plan(&c, N as f64, 1024).t_outer,
+            theory::mbprox_plan(&c, N as f64, 1024).gamma,
+            DsvrgSolver::new(8, p, eta),
+        );
+        let (obj, rounds, _) = run(&mut runner, &mut m, 4);
+        println!("{:<6} {:>12.5} {:>12}", p, obj, rounds);
+    }
+}

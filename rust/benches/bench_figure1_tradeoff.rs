@@ -1,0 +1,59 @@
+//! Bench: Figure 1 — MP-DSVRG's communication/memory tradeoff as b sweeps
+//! a log grid up to b_max = n/m. The paper's claim: communication falls as
+//! n/(mb) (log factors aside) while memory rises as b, with computation
+//! flat — verified as measured ratios between successive b values.
+
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::util::benchkit;
+
+fn main() {
+    let mut runner = Runner::from_env().expect("run `make artifacts` first");
+    let n_budget = 16_384usize;
+    let m = 4usize;
+    benchkit::section("Figure 1: MP-DSVRG communication-memory tradeoff (n=16384, m=4)");
+    println!(
+        "{:>8} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "b", "comm_rounds", "vec_ops", "memory", "objective", "comm*mem"
+    );
+    let mut prev: Option<(u64, u64)> = None;
+    let mut b = 64usize;
+    while b <= n_budget / m {
+        let cfg = ExperimentConfig {
+            method: "mp-dsvrg".into(),
+            b_local: b,
+            m,
+            n_budget,
+            loss: Loss::Squared,
+            dim: 64,
+            seed: 5,
+            eval_samples: 2048,
+            eval_every: 0,
+            ..ExperimentConfig::default()
+        };
+        match runner.run(&cfg) {
+            Ok(r) => {
+                println!(
+                    "{:>8} {:>12} {:>12} {:>10} {:>12} {:>12}",
+                    b,
+                    r.report.comm_rounds,
+                    r.report.vec_ops,
+                    r.report.peak_vectors,
+                    r.final_objective.map(|o| format!("{o:.5}")).unwrap_or_default(),
+                    r.report.comm_rounds * r.report.peak_vectors
+                );
+                if let Some((pc, pm)) = prev {
+                    let comm_ratio = pc as f64 / r.report.comm_rounds.max(1) as f64;
+                    let mem_ratio = r.report.peak_vectors as f64 / pm.max(1) as f64;
+                    println!(
+                        "         ^ 4x b => comm fell {comm_ratio:.1}x, memory rose {mem_ratio:.1}x"
+                    );
+                }
+                prev = Some((r.report.comm_rounds, r.report.peak_vectors));
+            }
+            Err(e) => println!("b={b}: ERROR {e}"),
+        }
+        b *= 4;
+    }
+}

@@ -1,0 +1,69 @@
+//! Bench: Figure 2 — communication / computation / memory vs minibatch
+//! size for the full method roster (MP-DSVRG, MP-DANE, acc-minibatch-SGD,
+//! minibatch SGD) plus the ERM batch methods as right-edge reference
+//! points (DSVRG / DANE / DiSCO at b = n/m).
+
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::util::benchkit;
+
+fn main() {
+    let mut runner = Runner::from_env().expect("run `make artifacts` first");
+    let n_budget = 16_384usize;
+    let m = 4usize;
+    let base = ExperimentConfig {
+        m,
+        n_budget,
+        loss: Loss::Squared,
+        dim: 64,
+        seed: 11,
+        eval_samples: 2048,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    };
+    benchkit::section("Figure 2: comm/comp/mem vs b, all methods (n=16384, m=4)");
+    println!(
+        "{:<20} {:>8} {:>12} {:>12} {:>10} {:>12}",
+        "method", "b", "comm_rounds", "vec_ops", "memory", "objective"
+    );
+    for method in ["mp-dsvrg", "mp-dane", "acc-minibatch-sgd", "minibatch-sgd"] {
+        let mut b = 64usize;
+        while b <= n_budget / m {
+            let cfg = ExperimentConfig {
+                method: method.to_string(),
+                b_local: b,
+                ..base.clone()
+            };
+            match runner.run(&cfg) {
+                Ok(r) => println!(
+                    "{:<20} {:>8} {:>12} {:>12} {:>10} {:>12}",
+                    method,
+                    b,
+                    r.report.comm_rounds,
+                    r.report.vec_ops,
+                    r.report.peak_vectors,
+                    r.final_objective.map(|o| format!("{o:.5}")).unwrap_or_default()
+                ),
+                Err(e) => println!("{method} b={b}: ERROR {e}"),
+            }
+            b *= 4;
+        }
+    }
+    println!("-- batch (ERM) reference points at b = n/m --");
+    for method in ["dsvrg-erm", "dane-erm", "disco-erm", "agd-erm"] {
+        let cfg = ExperimentConfig { method: method.to_string(), ..base.clone() };
+        match runner.run(&cfg) {
+            Ok(r) => println!(
+                "{:<20} {:>8} {:>12} {:>12} {:>10} {:>12}",
+                method,
+                n_budget / m,
+                r.report.comm_rounds,
+                r.report.vec_ops,
+                r.report.peak_vectors,
+                r.final_objective.map(|o| format!("{o:.5}")).unwrap_or_default()
+            ),
+            Err(e) => println!("{method}: ERROR {e}"),
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Bench: Figure 3 (reduced slice) — MP-DANE vs minibatch SGD objective
+//! vs minibatch size on one Table-3-like dataset. The full grid is
+//! `cargo run --release --example figure3_convergence`.
+//!
+//! The two claims regenerated here:
+//!   1. minibatch SGD's objective degrades sharply as b grows;
+//!   2. MP-DANE's objective degrades slowly, and more DANE rounds K help
+//!      with diminishing returns.
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::algos::mbprox::MinibatchProx;
+use mbprox::algos::minibatch_sgd::MinibatchSgd;
+use mbprox::algos::solvers::dane::DaneSolver;
+use mbprox::algos::{Method, RunContext};
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::coordinator::Runner;
+use mbprox::data::sampler::{shard_ranges, VecStream};
+use mbprox::data::table3::CODRNA;
+use mbprox::data::{Loss, Sample, SampleStream};
+use mbprox::objective::Evaluator;
+use mbprox::theory::{self, ProblemConsts};
+use mbprox::util::benchkit;
+use mbprox::util::prng::Prng;
+
+fn main() {
+    let mut runner = Runner::from_env().expect("run `make artifacts` first");
+    let spec = &CODRNA;
+    let n_train = 4096usize;
+    let m = 4usize;
+    let mut stream = spec.stream(42);
+    let all = stream.draw_many(n_train + 2048);
+    let (train, eval) = all.split_at(n_train);
+
+    benchkit::section(&format!(
+        "Figure 3 slice: {} (n_train={n_train}, m={m}, logistic)",
+        spec.name
+    ));
+    println!("{:<18} {:>4} {:>8} {:>12} {:>12}", "method", "K", "b", "objective", "rounds");
+
+    let consts = ProblemConsts {
+        l_lipschitz: 1.0,
+        b_norm: 2.0 * (spec.dim as f64).sqrt(),
+        beta_smooth: 0.25,
+        m,
+    };
+    for &b in &[64usize, 256, 1024] {
+        if b * m > n_train {
+            continue;
+        }
+        let plan = theory::mbprox_plan(&consts, n_train as f64, b);
+        for &k in &[1usize, 4] {
+            let eta = 0.1 / (consts.beta_smooth + plan.gamma);
+            let mut method = MinibatchProx::new(
+                "mp-dane",
+                b,
+                plan.t_outer,
+                plan.gamma,
+                DaneSolver::plain(k, eta),
+            );
+            let (obj, rounds) = run(&mut runner, train, eval, m, &mut method);
+            println!("{:<18} {:>4} {:>8} {:>12.5} {:>12}", "mp-dane", k, b, obj, rounds);
+        }
+        let gamma = theory::minibatch_sgd_gamma(&consts, plan.t_outer, plan.bm);
+        let mut sgd = MinibatchSgd { b_local: b, t_outer: plan.t_outer, gamma };
+        let (obj, rounds) = run(&mut runner, train, eval, m, &mut sgd);
+        println!("{:<18} {:>4} {:>8} {:>12.5} {:>12}", "minibatch-sgd", 0, b, obj, rounds);
+    }
+}
+
+fn run(
+    runner: &mut Runner,
+    train: &[Sample],
+    eval: &[Sample],
+    m: usize,
+    method: &mut dyn Method,
+) -> (f64, u64) {
+    let d = runner.engine.manifest().padded_dim(train[0].x.len()).unwrap();
+    let ranges = shard_ranges(train.len(), m);
+    let root = Prng::seed_from_u64(77);
+    let streams: Vec<Box<dyn SampleStream>> = (0..m)
+        .map(|i| {
+            Box::new(VecStream::new(
+                train[ranges[i].clone()].to_vec(),
+                Loss::Logistic,
+                root.split(i as u64),
+            )) as Box<dyn SampleStream>
+        })
+        .collect();
+    let evaluator = Evaluator::new(&runner.engine, d, Loss::Logistic, eval).unwrap();
+    let mut ctx = RunContext {
+        engine: &mut runner.engine,
+        net: Network::new(m, NetModel::default()),
+        meter: ClusterMeter::new(m),
+        loss: Loss::Logistic,
+        d,
+        streams,
+        evaluator: Some(evaluator),
+        eval_every: 0,
+    };
+    let r = method.run(&mut ctx).expect("run failed");
+    (r.final_objective.unwrap_or(f64::NAN), r.report.comm_rounds)
+}

@@ -1,0 +1,119 @@
+//! Bench: runtime hot-path microbenchmarks (§Perf of EXPERIMENTS.md).
+//!
+//! Measures the per-call latency of every engine dispatch kind, the block
+//! packing + literal conversion cost, a collective round, and one full
+//! MP-DSVRG outer step — the numbers the performance pass optimizes.
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::coordinator::Runner;
+use mbprox::data::blocks::pack_block;
+use mbprox::data::synth::{SynthSpec, SynthStream};
+use mbprox::data::{Loss, SampleStream};
+use mbprox::runtime::exec::BlockLits;
+use mbprox::util::benchkit::{bench, section};
+
+fn main() {
+    let mut runner = Runner::from_env().expect("run `make artifacts` first");
+    runner.engine.warmup_all().expect("warmup");
+    let engine = &mut runner.engine;
+
+    section("engine dispatch latency (interpret-mode Pallas on CPU PJRT)");
+    for (loss, d) in [(Loss::Squared, 64usize), (Loss::Squared, 128), (Loss::Logistic, 64)] {
+        let spec = match loss {
+            Loss::Squared => SynthSpec::least_squares(d),
+            Loss::Logistic => SynthSpec::logistic(d),
+        };
+        let mut stream = SynthStream::new(spec, 1);
+        let samples = stream.draw_many(256);
+        let block = pack_block(&samples, d);
+        let lits = BlockLits::from_block(engine, &block).unwrap();
+        let w = vec![0.01f32; d];
+
+        let s = bench(&format!("grad_{}_d{d} (256 rows)", loss.tag()), 3, 50, || {
+            engine.grad_block(loss, &lits, &w).unwrap();
+        });
+        println!("{}", s.report());
+
+        if loss == Loss::Squared {
+            let s = bench(&format!("nm_sq_d{d} (256 rows)"), 3, 50, || {
+                engine.nm_block(&lits, &w).unwrap();
+            });
+            println!("{}", s.report());
+        }
+
+        let z = vec![0.0f32; d];
+        let s = bench(&format!("svrg_{}_d{d} (256-row sweep)", loss.tag()), 3, 20, || {
+            engine
+                .svrg_block(loss, &lits, &w, &z, &z, &z, 0.5, 0.05)
+                .unwrap();
+        });
+        println!("{}", s.report());
+    }
+
+    section("host-side costs");
+    {
+        let mut stream = SynthStream::new(SynthSpec::least_squares(64), 2);
+        let samples = stream.draw_many(256);
+        let s = bench("pack_block 256x64", 3, 200, || {
+            std::hint::black_box(pack_block(&samples, 64));
+        });
+        println!("{}", s.report());
+        let block = pack_block(&samples, 64);
+        let s = bench("BlockLits upload 256x64", 3, 200, || {
+            std::hint::black_box(BlockLits::from_block(engine, &block).unwrap());
+        });
+        println!("{}", s.report());
+    }
+
+    section("collective round (m=8, d=64)");
+    {
+        let mut net = Network::new(8, NetModel::default());
+        let mut meter = ClusterMeter::new(8);
+        let mut locals: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 64]).collect();
+        let s = bench("all_reduce_avg m=8 d=64", 10, 500, || {
+            net.all_reduce_avg(&mut meter, &mut locals);
+        });
+        println!("{}", s.report());
+    }
+
+    section("end-to-end: one MP-DSVRG outer step (m=4, b=256, d=64)");
+    {
+        use mbprox::algos::mbprox::MinibatchProx;
+        use mbprox::algos::solvers::dsvrg::DsvrgSolver;
+        use mbprox::algos::{Method, RunContext};
+        use mbprox::objective::Evaluator;
+
+        let root = SynthStream::new(SynthSpec::least_squares(64), 3);
+        let mut eval_stream = root.fork_stream(99);
+        let eval_samples = eval_stream.draw_many(512);
+        let s = bench("mp-dsvrg outer step (T=1, K=5)", 2, 20, || {
+            let streams: Vec<Box<dyn SampleStream>> = (0..4)
+                .map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>)
+                .collect();
+            let evaluator =
+                Evaluator::new(engine, 64, Loss::Squared, &eval_samples).unwrap();
+            let mut ctx = RunContext {
+                engine,
+                net: Network::new(4, NetModel::default()),
+                meter: ClusterMeter::new(4),
+                loss: Loss::Squared,
+                d: 64,
+                streams,
+                evaluator: Some(evaluator),
+                eval_every: 0,
+            };
+            let mut method =
+                MinibatchProx::new("bench", 256, 1, 0.5, DsvrgSolver::new(5, 1, 0.05));
+            method.run(&mut ctx).unwrap();
+        });
+        println!("{}", s.report());
+    }
+
+    section("engine cumulative stats");
+    println!(
+        "executions={} mean_execute={}",
+        engine.stats.executions,
+        mbprox::util::benchkit::fmt_ns(engine.mean_execute_ns())
+    );
+}

@@ -1,0 +1,66 @@
+//! Bench: Table 1 — per-machine resources for every method at a fixed
+//! sample budget (reduced n for bench speed; the full-size run is
+//! `cargo run --release --example table1_resources`).
+//!
+//! Prints measured comm rounds / vec ops / peak memory / wall time so the
+//! Table-1 orderings (who wins on which resource) are regenerated on every
+//! `cargo bench`.
+
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::util::benchkit;
+use std::time::Instant;
+
+fn main() {
+    let mut runner = Runner::from_env().expect("run `make artifacts` first");
+    let base = ExperimentConfig {
+        m: 4,
+        n_budget: 16_384,
+        loss: Loss::Squared,
+        dim: 64,
+        seed: 3,
+        eval_samples: 2048,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    };
+    benchkit::section("Table 1: measured per-machine resources (n=16384, m=4)");
+    println!(
+        "{:<28} {:>10} {:>12} {:>12} {:>10} {:>12} {:>10}",
+        "method", "b_local", "comm_rounds", "vec_ops", "memory", "objective", "wall"
+    );
+    let rows: Vec<(&str, &str, usize, usize)> = vec![
+        ("Ideal (local SGD)", "local-sgd", 256, 1),
+        ("Acc. minibatch SGD", "acc-minibatch-sgd", 64, 4),
+        ("Minibatch SGD", "minibatch-sgd", 64, 4),
+        ("DANE (ERM)", "dane-erm", 256, 4),
+        ("DiSCO (ERM)", "disco-erm", 256, 4),
+        ("AGD (ERM)", "agd-erm", 256, 4),
+        ("DSVRG (ERM)", "dsvrg-erm", 256, 4),
+        ("MP-DSVRG (b=256)", "mp-dsvrg", 256, 4),
+        ("MP-DSVRG (b=b_max)", "mp-dsvrg", 4096, 4),
+        ("MP-DANE (b=256)", "mp-dane", 256, 4),
+    ];
+    for (label, method, b, m) in rows {
+        let cfg = ExperimentConfig {
+            method: method.to_string(),
+            b_local: b,
+            m,
+            ..base.clone()
+        };
+        let t0 = Instant::now();
+        match runner.run(&cfg) {
+            Ok(r) => println!(
+                "{:<28} {:>10} {:>12} {:>12} {:>10} {:>12} {:>10}",
+                label,
+                b,
+                r.report.comm_rounds,
+                r.report.vec_ops,
+                r.report.peak_vectors,
+                r.final_objective.map(|o| format!("{o:.5}")).unwrap_or_default(),
+                benchkit::fmt_ns(t0.elapsed().as_nanos() as f64)
+            ),
+            Err(e) => println!("{label:<28} ERROR: {e}"),
+        }
+    }
+}

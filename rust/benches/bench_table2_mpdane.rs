@@ -1,0 +1,85 @@
+//! Bench: Table 2 — MP-DANE's two resource regimes around b*.
+//!
+//! Runs MP-DANE with the plain (kappa = 0, R = 1) solver below b* and the
+//! AIDE-accelerated solver above it, reporting the three Table-2 resource
+//! rows. b* is computed from the theory with the paper's O(1)-norm
+//! convention (B = 1) so both regimes are reachable at bench scale; the
+//! data-scale plans are exercised by the coordinator tests.
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::algos::mbprox::MinibatchProx;
+use mbprox::algos::solvers::dane::DaneSolver;
+use mbprox::algos::{Method, RunContext};
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::coordinator::Runner;
+use mbprox::data::synth::{SynthSpec, SynthStream};
+use mbprox::data::{Loss, SampleStream};
+use mbprox::objective::Evaluator;
+use mbprox::theory::{self, ProblemConsts};
+use mbprox::util::benchkit;
+
+fn main() {
+    let mut runner = Runner::from_env().expect("run `make artifacts` first");
+    let n = 8_192usize;
+    let m = 4usize;
+    let dim = 64usize;
+    // norm convention scaled so b* lands mid-grid at bench scale
+    // (b* ~ 1/B^2; the data-scale plans are exercised in coordinator tests)
+    let consts = ProblemConsts { l_lipschitz: 1.0, b_norm: 0.12, beta_smooth: 1.0, m };
+    let b_star = theory::dane_b_star(&consts, n as f64, dim);
+    benchkit::section(&format!(
+        "Table 2: MP-DANE regimes (n={n}, m={m}, b* = {b_star:.0})"
+    ));
+    println!(
+        "{:<26} {:>8} {:>12} {:>12} {:>10} {:>12}",
+        "regime", "b", "comm_rounds", "vec_ops", "memory", "objective"
+    );
+
+    let cases: Vec<(&str, usize)> = vec![
+        ("b << b*", ((b_star * 0.25) as usize).max(64)),
+        ("b = b*", (b_star as usize).max(64)),
+        ("b* < b <= b_max", ((b_star * 4.0) as usize).min(n / m).max(256)),
+    ];
+    for (label, b) in cases {
+        let plan = theory::mbprox_plan(&consts, n as f64, b);
+        let dp = theory::dane_plan(&consts, &plan, b, n as f64, dim);
+        let eta = 0.1 / (consts.beta_smooth + plan.gamma + dp.kappa);
+        let solver = if dp.kappa > 0.0 && dp.r_outer > 1 {
+            DaneSolver::aide(dp.k_inner, dp.r_outer, dp.kappa, eta)
+        } else {
+            DaneSolver::plain(dp.k_inner, eta)
+        };
+        let mut method = MinibatchProx::new("mp-dane", b, plan.t_outer, plan.gamma, solver);
+
+        // context over planted least squares
+        let root = SynthStream::new(SynthSpec::least_squares(dim), 23);
+        let streams: Vec<Box<dyn SampleStream>> = (0..m)
+            .map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>)
+            .collect();
+        let mut eval_stream = root.fork_stream(999);
+        let eval_samples = eval_stream.draw_many(2048);
+        let evaluator = Evaluator::new(&runner.engine, dim, Loss::Squared, &eval_samples).unwrap();
+        let mut ctx = RunContext {
+            engine: &mut runner.engine,
+            net: Network::new(m, NetModel::default()),
+            meter: ClusterMeter::new(m),
+            loss: Loss::Squared,
+            d: dim,
+            streams,
+            evaluator: Some(evaluator),
+            eval_every: 0,
+        };
+        match method.run(&mut ctx) {
+            Ok(r) => println!(
+                "{:<26} {:>8} {:>12} {:>12} {:>10} {:>12}",
+                format!("{label} [{}]", if dp.kappa > 0.0 { "aide" } else { "plain" }),
+                b,
+                r.report.comm_rounds,
+                r.report.vec_ops,
+                r.report.peak_vectors,
+                r.final_objective.map(|o| format!("{o:.5}")).unwrap_or_default()
+            ),
+            Err(e) => println!("{label}: ERROR {e}"),
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Resource accounting in the paper's units (Table 1 / Table 2).
+//!
+//! Everything is counted **per machine** in units of *vectors*:
+//!   - `vec_ops`        computation: number of d-dimensional vector operations
+//!   - `comm_rounds`    rounds of communication the machine participates in
+//!   - `vectors_sent`   vectors transmitted by the machine
+//!   - `samples`        samples drawn from the stream
+//!   - `peak_vectors`   maximum number of vectors simultaneously stored
+//!                      (memory; a stored sample counts as one vector)
+//!
+//! The `MemoryTracker` is a high-water-mark gauge; algorithms charge
+//! allocations/frees as they hold or release sample blocks and iterates.
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResourceMeter {
+    pub vec_ops: u64,
+    pub comm_rounds: u64,
+    pub vectors_sent: u64,
+    pub samples: u64,
+    cur_vectors: i64,
+    pub peak_vectors: u64,
+}
+
+impl ResourceMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_vec_ops(&mut self, n: u64) {
+        self.vec_ops += n;
+    }
+
+    pub fn add_comm_round(&mut self, vectors: u64) {
+        self.comm_rounds += 1;
+        self.vectors_sent += vectors;
+    }
+
+    pub fn add_samples(&mut self, n: u64) {
+        self.samples += n;
+    }
+
+    /// Charge `n` vectors of storage; returns a guard-less handle — callers
+    /// must `release` symmetric amounts (checked in debug).
+    pub fn hold(&mut self, n: u64) {
+        self.cur_vectors += n as i64;
+        self.peak_vectors = self.peak_vectors.max(self.cur_vectors as u64);
+    }
+
+    pub fn release(&mut self, n: u64) {
+        self.cur_vectors -= n as i64;
+        debug_assert!(self.cur_vectors >= 0, "released more memory than held");
+    }
+
+    pub fn current_vectors(&self) -> i64 {
+        self.cur_vectors
+    }
+
+    /// Merge another meter (e.g. fold sub-phase accounting into a parent).
+    pub fn merge(&mut self, other: &ResourceMeter) {
+        self.vec_ops += other.vec_ops;
+        self.comm_rounds += other.comm_rounds;
+        self.vectors_sent += other.vectors_sent;
+        self.samples += other.samples;
+        // memory: concurrent composition — peak is max of (our current +
+        // their peak) vs our existing peak
+        self.peak_vectors = self
+            .peak_vectors
+            .max((self.cur_vectors.max(0) as u64) + other.peak_vectors);
+    }
+}
+
+/// Per-machine meters for an m-machine run, plus helpers that produce the
+/// Table 1 row (max over machines, the paper's "per machine" bound).
+#[derive(Clone, Debug)]
+pub struct ClusterMeter {
+    pub machines: Vec<ResourceMeter>,
+}
+
+impl ClusterMeter {
+    pub fn new(m: usize) -> Self {
+        Self { machines: vec![ResourceMeter::new(); m] }
+    }
+
+    pub fn m(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn machine(&mut self, i: usize) -> &mut ResourceMeter {
+        &mut self.machines[i]
+    }
+
+    /// Charge the same comm round on every machine (a collective).
+    pub fn all_comm_round(&mut self, vectors_per_machine: u64) {
+        for m in &mut self.machines {
+            m.add_comm_round(vectors_per_machine);
+        }
+    }
+
+    /// Charge identical local computation on every machine (SPMD step).
+    pub fn all_vec_ops(&mut self, n: u64) {
+        for m in &mut self.machines {
+            m.add_vec_ops(n);
+        }
+    }
+
+    pub fn report(&self) -> ResourceReport {
+        let mx = |f: fn(&ResourceMeter) -> u64| self.machines.iter().map(f).max().unwrap_or(0);
+        let total_samples: u64 = self.machines.iter().map(|m| m.samples).sum();
+        ResourceReport {
+            m: self.machines.len(),
+            total_samples,
+            comm_rounds: mx(|r| r.comm_rounds),
+            vectors_sent: mx(|r| r.vectors_sent),
+            vec_ops: mx(|r| r.vec_ops),
+            peak_vectors: mx(|r| r.peak_vectors),
+        }
+    }
+}
+
+/// The Table-1 row: per-machine maxima + total samples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResourceReport {
+    pub m: usize,
+    pub total_samples: u64,
+    pub comm_rounds: u64,
+    pub vectors_sent: u64,
+    pub vec_ops: u64,
+    pub peak_vectors: u64,
+}
+
+impl ResourceReport {
+    pub fn header() -> String {
+        format!(
+            "{:<22} {:>10} {:>12} {:>14} {:>12} {:>12}",
+            "method", "samples", "comm_rounds", "vec_ops", "memory", "vectors_sent"
+        )
+    }
+
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{:<22} {:>10} {:>12} {:>14} {:>12} {:>12}",
+            name, self.total_samples, self.comm_rounds, self.vec_ops, self.peak_vectors,
+            self.vectors_sent
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::forall;
+
+    #[test]
+    fn memory_high_water_mark() {
+        let mut m = ResourceMeter::new();
+        m.hold(10);
+        m.hold(5);
+        m.release(12);
+        m.hold(4);
+        assert_eq!(m.peak_vectors, 15);
+        assert_eq!(m.current_vectors(), 7);
+    }
+
+    #[test]
+    fn comm_round_counts_vectors() {
+        let mut m = ResourceMeter::new();
+        m.add_comm_round(3);
+        m.add_comm_round(1);
+        assert_eq!(m.comm_rounds, 2);
+        assert_eq!(m.vectors_sent, 4);
+    }
+
+    #[test]
+    fn cluster_collective_charges_everyone() {
+        let mut c = ClusterMeter::new(4);
+        c.all_comm_round(2);
+        c.machine(1).add_vec_ops(7);
+        let r = c.report();
+        assert_eq!(r.comm_rounds, 1);
+        assert_eq!(r.vec_ops, 7); // max over machines
+    }
+
+    #[test]
+    fn prop_merge_is_additive_on_flows() {
+        forall(32, |rng| {
+            let mut a = ResourceMeter::new();
+            let mut b = ResourceMeter::new();
+            let (x, y) = (rng.next_below(100) as u64, rng.next_below(100) as u64);
+            a.add_vec_ops(x);
+            b.add_vec_ops(y);
+            a.add_samples(x);
+            b.add_samples(y);
+            let mut merged = a.clone();
+            merged.merge(&b);
+            assert_eq!(merged.vec_ops, x + y);
+            assert_eq!(merged.samples, x + y);
+        });
+    }
+
+    #[test]
+    fn prop_peak_never_decreases() {
+        forall(32, |rng| {
+            let mut m = ResourceMeter::new();
+            let mut held: u64 = 0;
+            let mut last_peak = 0;
+            for _ in 0..50 {
+                if rng.next_f64() < 0.6 {
+                    let n = rng.next_below(10) as u64;
+                    m.hold(n);
+                    held += n;
+                } else if held > 0 {
+                    let n = (rng.next_below(held as usize) + 1) as u64;
+                    m.release(n.min(held));
+                    held -= n.min(held);
+                }
+                assert!(m.peak_vectors >= last_peak);
+                last_peak = m.peak_vectors;
+            }
+        });
+    }
+
+    #[test]
+    fn report_rows_align() {
+        let c = ClusterMeter::new(2);
+        let r = c.report();
+        assert_eq!(ResourceReport::header().len(), r.row("x").len());
+    }
+}

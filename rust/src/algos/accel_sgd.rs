@@ -1,0 +1,76 @@
+//! Accelerated minibatch SGD (Cotter et al. 2011).
+//!
+//! Nesterov-accelerated stochastic gradient with minibatch gradients:
+//! acceleration lets the minibatch grow to `bm = O(n^{3/4})` while keeping
+//! statistical optimality, making this the most communication-efficient
+//! O(1)-memory baseline in Table 1 (`B^{1/2} n^{1/4}` rounds).
+//!
+//! ```text
+//!     y_t = w_t + ((t-1)/(t+2)) (w_t - w_{t-1})
+//!     w_{t+1} = y_t - eta grad phi_{I_t}(y_t)
+//! ```
+//!
+//! with eta = 1/gamma, gamma = beta + sqrt(4T/(bm)) L/B (the smoothed
+//! stepsize of Prop. 13 — the same scaling Cotter et al. use).
+
+use super::{Method, Recorder, RunContext, RunResult};
+use crate::linalg::WeightedAvg;
+use crate::objective::distributed_mean_grad;
+use anyhow::Result;
+
+pub struct AccelMinibatchSgd {
+    pub b_local: usize,
+    pub t_outer: usize,
+    pub gamma: f64,
+}
+
+impl Method for AccelMinibatchSgd {
+    fn name(&self) -> String {
+        format!("acc-minibatch-sgd[b={},T={}]", self.b_local, self.t_outer)
+    }
+
+    fn run(&mut self, ctx: &mut RunContext) -> Result<RunResult> {
+        let d = ctx.d;
+        let mut rec = Recorder::new(self.name());
+        let mut w = vec![0.0f32; d];
+        let mut w_prev = vec![0.0f32; d];
+        let mut avg = WeightedAvg::new(d);
+        let step = (1.0 / self.gamma) as f32;
+        // O(1) memory: w, w_prev, momentum point
+        for i in 0..ctx.meter.m() {
+            ctx.meter.machine(i).hold(3);
+        }
+        for t in 1..=self.t_outer {
+            let mom = ((t - 1) as f32) / ((t + 2) as f32);
+            let y: Vec<f32> =
+                (0..d).map(|j| w[j] + mom * (w[j] - w_prev[j])).collect();
+            let batches = ctx.draw_batches(self.b_local, false)?;
+            let (g, _, _) = distributed_mean_grad(
+                ctx.engine,
+                ctx.loss,
+                &batches,
+                &y,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+            drop(batches);
+            w_prev = std::mem::replace(
+                &mut w,
+                (0..d).map(|j| y[j] - step * g[j]).collect(),
+            );
+            ctx.meter.all_vec_ops(2);
+            // suffix averaging (last half) — see minibatch_sgd.rs
+            if 2 * t > self.t_outer {
+                avg.add(1.0, &w);
+            }
+            let eval_w = if avg.total_weight() > 0.0 { avg.mean() } else { w.clone() };
+            if let Some(obj) = ctx.maybe_eval(t, &eval_w)? {
+                rec.point(ctx, t, Some(obj));
+            }
+        }
+        for i in 0..ctx.meter.m() {
+            ctx.meter.machine(i).release(3);
+        }
+        rec.finish(ctx, avg.mean())
+    }
+}

@@ -1,0 +1,70 @@
+//! DANE on the regularized ERM objective (Shamir, Srebro & Zhang 2014).
+//!
+//! Each round: all-reduce the full gradient (1 round), every machine
+//! solves its local corrected objective with SVRG sweeps over its shard,
+//! all-reduce the local solutions (1 round). Table 1 row: O(B^2 m) rounds
+//! for quadratics, n/m memory. Reuses the same mu = global-gradient
+//! identity as the minibatch DANE solver (see solvers/dane.rs).
+
+use crate::algos::solvers::svrg_sweep_machine;
+use crate::algos::{Method, Recorder, RunContext, RunResult};
+use anyhow::Result;
+
+use super::ErmProblem;
+
+pub struct DaneErm {
+    pub n_total: usize,
+    pub nu: f64,
+    pub rounds: usize,
+    /// local SVRG sweeps per round
+    pub local_passes: usize,
+    pub eta: f64,
+}
+
+impl Method for DaneErm {
+    fn name(&self) -> String {
+        format!("dane-erm[n={},rounds={}]", self.n_total, self.rounds)
+    }
+
+    fn run(&mut self, ctx: &mut RunContext) -> Result<RunResult> {
+        let mut rec = Recorder::new(self.name());
+        let prob = ErmProblem::draw(ctx, self.n_total, self.nu)?;
+        let m = prob.shards.len();
+        let d = ctx.d;
+        let zero = vec![0.0f32; d];
+        let mut z = vec![0.0f32; d];
+        for k in 0..self.rounds {
+            let g = prob.full_grad(ctx, &z)?;
+            let mut g_smooth = g.clone();
+            crate::linalg::axpy(-(self.nu as f32), &z, &mut g_smooth);
+            let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
+            for (i, shard) in prob.shards.iter().enumerate() {
+                let mut xi = z.clone();
+                for _pass in 0..self.local_passes.max(1) {
+                    let blocks = 0..shard.lits.len();
+                    let (_xe, xa) = svrg_sweep_machine(
+                        ctx,
+                        blocks,
+                        shard,
+                        i,
+                        &xi,
+                        &z,
+                        &g_smooth,
+                        &zero,
+                        self.nu as f32,
+                        self.eta as f32,
+                    )?;
+                    xi = xa;
+                }
+                locals.push(xi);
+            }
+            ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
+            z = locals.pop().unwrap();
+            if let Some(obj) = ctx.maybe_eval(k + 1, &z)? {
+                rec.point(ctx, k + 1, Some(obj));
+            }
+        }
+        prob.release(ctx);
+        rec.finish(ctx, z)
+    }
+}

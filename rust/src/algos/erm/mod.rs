@@ -1,0 +1,62 @@
+//! ERM-based batch baselines (Section 1/2 of the paper).
+//!
+//! These methods bypass the streaming setting: they draw the full sample
+//! budget `n` up front, shard it across the machines (memory n/m vectors
+//! per machine for the entire run) and optimize the regularized empirical
+//! objective
+//!
+//! ```text
+//!     min_w phi_S(w) + nu/2 ||w||^2 ,   nu = L / (B sqrt(n))
+//! ```
+//!
+//! Shared setup lives here; the individual optimizers are DSVRG-on-ERM
+//! (Lee et al. 2015), DANE (Shamir et al. 2014), distributed accelerated
+//! GD, and a DiSCO-style distributed inexact Newton.
+
+pub mod agd;
+pub mod dane_erm;
+pub mod disco;
+pub mod dsvrg_erm;
+
+use super::RunContext;
+use crate::objective::MachineBatch;
+use anyhow::Result;
+
+/// The fixed training set, sharded: machine i owns `shards[i]`.
+pub struct ErmProblem {
+    pub shards: Vec<MachineBatch>,
+    pub n_total: usize,
+    pub nu: f64,
+}
+
+impl ErmProblem {
+    /// Draw `n_total` fresh samples (n/m per machine), charge memory, and
+    /// build the regularized ERM problem.
+    pub fn draw(ctx: &mut RunContext, n_total: usize, nu: f64) -> Result<ErmProblem> {
+        let m = ctx.m();
+        let per = n_total.div_ceil(m);
+        let shards = ctx.draw_batches(per, true)?;
+        Ok(ErmProblem { shards, n_total: per * m, nu })
+    }
+
+    /// Release the held shard memory (end of run).
+    pub fn release(&self, ctx: &mut RunContext) {
+        let per = self.n_total / self.shards.len();
+        ctx.release_batches(per);
+    }
+
+    /// Regularized full gradient: one all-reduce round.
+    pub fn full_grad(&self, ctx: &mut RunContext, w: &[f32]) -> Result<Vec<f32>> {
+        let (mut g, _, _) = crate::objective::distributed_mean_grad(
+            ctx.engine,
+            ctx.loss,
+            &self.shards,
+            w,
+            &mut ctx.net,
+            &mut ctx.meter,
+        )?;
+        crate::linalg::axpy(self.nu as f32, w, &mut g);
+        ctx.meter.all_vec_ops(1);
+        Ok(g)
+    }
+}

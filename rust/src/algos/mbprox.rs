@@ -1,0 +1,70 @@
+//! The minibatch-prox outer loop (Section 3 / Algorithm 1 outer `for`).
+//!
+//! At iteration t every machine draws a fresh minibatch of `b_local`
+//! samples (memory: b vectors held for the duration of the inner solve,
+//! released afterwards — this is exactly the communication/memory tradeoff
+//! knob of Figure 1), the inner [`ProxSolver`] approximately minimizes
+//!
+//! ```text
+//!     f_t(w) = phi_{I_t}(w) + gamma/2 ||w - w_{t-1}||^2
+//! ```
+//!
+//! and the method returns the uniform average of the iterates
+//! (Theorem 4/7, weakly convex losses; `weighted` enables the
+//! t-weighted average of Theorem 5/8 for strongly convex losses).
+
+use super::solvers::ProxSolver;
+use super::{Method, Recorder, RunContext, RunResult};
+use crate::linalg::WeightedAvg;
+use anyhow::Result;
+
+pub struct MinibatchProx<S: ProxSolver> {
+    pub b_local: usize,
+    pub t_outer: usize,
+    pub gamma: f64,
+    pub solver: S,
+    /// t-weighted averaging (strongly convex case, Theorem 5/8)
+    pub weighted: bool,
+    /// label used in reports, e.g. "mp-dsvrg"
+    pub label: String,
+}
+
+impl<S: ProxSolver> MinibatchProx<S> {
+    pub fn new(label: &str, b_local: usize, t_outer: usize, gamma: f64, solver: S) -> Self {
+        Self { b_local, t_outer, gamma, solver, weighted: false, label: label.to_string() }
+    }
+}
+
+impl<S: ProxSolver> Method for MinibatchProx<S> {
+    fn name(&self) -> String {
+        format!("{}[b={},T={},{}]", self.label, self.b_local, self.t_outer, self.solver.name())
+    }
+
+    fn run(&mut self, ctx: &mut RunContext) -> Result<RunResult> {
+        let d = ctx.d;
+        let mut rec = Recorder::new(self.name());
+        let mut w = vec![0.0f32; d]; // w_0 = 0 (Remark 9: compete with ||w|| <= B)
+        let mut avg = WeightedAvg::new(d);
+        // each machine permanently holds O(1) iterate vectors
+        for i in 0..ctx.meter.m() {
+            ctx.meter.machine(i).hold(2);
+        }
+        for t in 1..=self.t_outer {
+            // fresh minibatch, held in memory for the inner solve
+            let batches = ctx.draw_batches(self.b_local, true)?;
+            let w_new = self.solver.solve(ctx, &batches, &w, self.gamma, t)?;
+            ctx.release_batches(self.b_local);
+            drop(batches);
+            w = w_new;
+            let weight = if self.weighted { t as f64 } else { 1.0 };
+            avg.add(weight, &w);
+            if let Some(obj) = ctx.maybe_eval(t, &avg.mean())? {
+                rec.point(ctx, t, Some(obj));
+            }
+        }
+        for i in 0..ctx.meter.m() {
+            ctx.meter.machine(i).release(2);
+        }
+        rec.finish(ctx, avg.mean())
+    }
+}

@@ -1,0 +1,66 @@
+//! Distributed minibatch SGD (Dekel et al. 2012; Proposition 13).
+//!
+//! Each round all machines contribute a fresh local minibatch to a single
+//! averaged gradient (one all-reduce), then take the linearized step
+//! `w <- w - (1/gamma_t) grad`. Streaming: the batch is *not* retained —
+//! memory is O(1) vectors per machine, which is exactly the property the
+//! paper contrasts with minibatch-prox's b-vector memory.
+
+use super::{Method, Recorder, RunContext, RunResult};
+use crate::linalg::{self, WeightedAvg};
+use crate::objective::distributed_mean_grad;
+use anyhow::Result;
+
+pub struct MinibatchSgd {
+    pub b_local: usize,
+    pub t_outer: usize,
+    /// inverse stepsize gamma (Prop. 13: beta + sqrt(4T/(bm)) L/B)
+    pub gamma: f64,
+}
+
+impl Method for MinibatchSgd {
+    fn name(&self) -> String {
+        format!("minibatch-sgd[b={},T={}]", self.b_local, self.t_outer)
+    }
+
+    fn run(&mut self, ctx: &mut RunContext) -> Result<RunResult> {
+        let d = ctx.d;
+        let mut rec = Recorder::new(self.name());
+        let mut w = vec![0.0f32; d];
+        let mut avg = WeightedAvg::new(d);
+        let step = (1.0 / self.gamma) as f32;
+        // O(1) memory: iterate + gradient accumulator
+        for i in 0..ctx.meter.m() {
+            ctx.meter.machine(i).hold(2);
+        }
+        for t in 1..=self.t_outer {
+            // streaming batch: packed, used once, dropped (no hold charge)
+            let batches = ctx.draw_batches(self.b_local, false)?;
+            let (g, _, _) = distributed_mean_grad(
+                ctx.engine,
+                ctx.loss,
+                &batches,
+                &w,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+            drop(batches);
+            linalg::axpy(-step, &g, &mut w);
+            ctx.meter.all_vec_ops(1);
+            // suffix averaging (last half): removes the far-initialization
+            // bias of uniform averaging without changing the rate
+            // (Rakhlin et al. / Lacoste-Julien et al. style)
+            if 2 * t > self.t_outer {
+                avg.add(1.0, &w);
+            }
+            let eval_w = if avg.total_weight() > 0.0 { avg.mean() } else { w.clone() };
+            if let Some(obj) = ctx.maybe_eval(t, &eval_w)? {
+                rec.point(ctx, t, Some(obj));
+            }
+        }
+        for i in 0..ctx.meter.m() {
+            ctx.meter.machine(i).release(2);
+        }
+        rec.finish(ctx, avg.mean())
+    }
+}

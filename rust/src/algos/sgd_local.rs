@@ -1,0 +1,67 @@
+//! Single-machine streaming SGD — the "Ideal Solution" reference row of
+//! Table 1 (given all n samples on one machine it is the statistically
+//! optimal O(1)-memory, zero-communication method).
+//!
+//! Runs on machine 0 only. Samples are processed in vectorized chunks of
+//! `chunk` (an engine-batching detail); each chunk applies one step with
+//! the chunk-mean gradient and the smoothed inverse stepsize
+//! `gamma = beta + sqrt(4 T / chunk) L / B` (Prop. 13 with m = 1), which is
+//! the correct stepsize family for chunk-mean updates — per-sample
+//! stepsizes do not survive chunking (the sum of per-sample steps over a
+//! chunk would exceed the stability region). Suffix averaging as in
+//! minibatch_sgd.rs.
+
+use super::{Method, Recorder, RunContext, RunResult};
+use crate::linalg::WeightedAvg;
+use crate::objective::{local_grad_sum, MachineBatch};
+use anyhow::Result;
+
+pub struct LocalSgd {
+    /// total samples to consume
+    pub n_total: usize,
+    /// inverse stepsize gamma (Prop. 13 with m = 1, b = chunk)
+    pub gamma: f64,
+    /// samples per engine dispatch
+    pub chunk: usize,
+}
+
+impl Method for LocalSgd {
+    fn name(&self) -> String {
+        format!("local-sgd[n={}]", self.n_total)
+    }
+
+    fn run(&mut self, ctx: &mut RunContext) -> Result<RunResult> {
+        let d = ctx.d;
+        let mut rec = Recorder::new(self.name());
+        let mut w = vec![0.0f32; d];
+        let mut avg = WeightedAvg::new(d);
+        ctx.meter.machine(0).hold(2);
+        let chunk = self.chunk.max(1);
+        let steps = self.n_total.div_ceil(chunk);
+        let step = (1.0 / self.gamma) as f32;
+        let eval_every = ctx.eval_every;
+        for t in 1..=steps {
+            let samples = ctx.streams[0].draw_many(chunk);
+            ctx.meter.machine(0).add_samples(chunk as u64);
+            let batch = MachineBatch::pack(ctx.engine, d, &samples)?;
+            let out = local_grad_sum(ctx.engine, ctx.loss, &batch, &w, ctx.meter.machine(0))?;
+            let cnt = out.count.max(1.0) as f32;
+            for j in 0..d {
+                w[j] -= step * out.grad_sum[j] / cnt;
+            }
+            ctx.meter.machine(0).add_vec_ops(1);
+            // suffix averaging (last half) — see minibatch_sgd.rs
+            if 2 * t > steps {
+                avg.add(1.0, &w);
+            }
+            if eval_every > 0 && t % eval_every == 0 {
+                let eval_w = if avg.total_weight() > 0.0 { avg.mean() } else { w.clone() };
+                if let Some(obj) = ctx.eval_now(&eval_w)? {
+                    rec.point(ctx, t, Some(obj));
+                }
+            }
+        }
+        ctx.meter.machine(0).release(2);
+        rec.finish(ctx, avg.mean())
+    }
+}

@@ -1,0 +1,202 @@
+//! Inexact DANE (+ AIDE catalyst) inner solver — Algorithm 2.
+//!
+//! Three nested loops: minibatch-prox (outer, lives in `mbprox`), AIDE
+//! extrapolation (R), DANE rounds (K). Each DANE round:
+//!   1. one all-reduce computes the global gradient at `z_{k-1}`;
+//!   2. every machine approximately solves its local corrected objective
+//!      (equation 33) with prox-SVRG sweeps over its local minibatch;
+//!   3. one all-reduce averages the local solutions (equation 34).
+//!
+//! Key identity (see DESIGN.md): with snapshot `z_{k-1}` the SVRG step for
+//! the DANE-corrected local objective is
+//!
+//! ```text
+//!     dl(x,xi) - dl(z,xi) + g_global + (gamma+kappa) (x - center)
+//! ```
+//!
+//! with `center = (gamma w_prev + kappa y_{r-1}) / (gamma+kappa)` — i.e.
+//! exactly the `svrg_{loss}` artifact with `mu = g_global`, so the same
+//! Pallas kernel serves DSVRG and DANE.
+
+use super::{vr_sweep_machine, LocalSolver, ProxSolver};
+use crate::algos::RunContext;
+use crate::linalg;
+use crate::objective::{distributed_mean_grad, MachineBatch};
+use anyhow::Result;
+
+pub struct DaneSolver {
+    /// DANE rounds per AIDE step (theory: O(log n))
+    pub k_inner: usize,
+    /// AIDE catalyst steps (1 = plain DANE, the b <= b* regime)
+    pub r_outer: usize,
+    /// catalyst regularization kappa (0 in the b <= b* regime)
+    pub kappa: f64,
+    /// local VR sweeps per DANE round (paper's experiments: 1 pass)
+    pub local_passes: usize,
+    /// VR stepsize
+    pub eta: f64,
+    /// which VR kernel performs the local solve (paper's App. E: SAGA)
+    pub local_solver: LocalSolver,
+}
+
+impl DaneSolver {
+    pub fn plain(k_inner: usize, eta: f64) -> Self {
+        Self {
+            k_inner,
+            r_outer: 1,
+            kappa: 0.0,
+            local_passes: 1,
+            eta,
+            local_solver: LocalSolver::Svrg,
+        }
+    }
+
+    pub fn aide(k_inner: usize, r_outer: usize, kappa: f64, eta: f64) -> Self {
+        Self {
+            k_inner,
+            r_outer,
+            kappa,
+            local_passes: 1,
+            eta,
+            local_solver: LocalSolver::Svrg,
+        }
+    }
+
+    pub fn with_local_solver(mut self, s: LocalSolver) -> Self {
+        self.local_solver = s;
+        self
+    }
+
+    /// K DANE rounds on `min_w phi_I(w) + geff/2 ||w - center||^2`
+    /// starting from `z0`.
+    fn dane_rounds(
+        &self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        z0: &[f32],
+        center: &[f32],
+        geff: f64,
+    ) -> Result<Vec<f32>> {
+        let m = batches.len();
+        let mut z = z0.to_vec();
+        for _k in 0..self.k_inner {
+            // (1) global gradient at z — 1 comm round
+            let (g, _, _) = distributed_mean_grad(
+                ctx.engine,
+                ctx.loss,
+                batches,
+                &z,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+            // (2) local solves: prox-SVRG sweeps with mu = g (see header)
+            let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
+            for (i, batch) in batches.iter().enumerate() {
+                let mut xi = z.clone();
+                let mut snapshot = z.clone();
+                let mut mu = g.clone();
+                for pass in 0..self.local_passes.max(1) {
+                    if pass > 0 {
+                        // re-snapshot locally: mu' = grad_i(x) + (g - grad_i(z))
+                        let gi_z = crate::objective::local_grad_sum(
+                            ctx.engine,
+                            ctx.loss,
+                            batch,
+                            &z,
+                            ctx.meter.machine(i),
+                        )?;
+                        let gi_x = crate::objective::local_grad_sum(
+                            ctx.engine,
+                            ctx.loss,
+                            batch,
+                            &xi,
+                            ctx.meter.machine(i),
+                        )?;
+                        let cnt = gi_z.count.max(1.0) as f32;
+                        mu = g.clone();
+                        for j in 0..ctx.d {
+                            mu[j] += gi_x.grad_sum[j] / cnt - gi_z.grad_sum[j] / cnt;
+                        }
+                        snapshot = xi.clone();
+                    }
+                    let blocks = 0..batch.lits.len();
+                    let (_x_end, x_avg) = vr_sweep_machine(
+                        ctx,
+                        self.local_solver,
+                        blocks,
+                        batch,
+                        i,
+                        &xi,
+                        &snapshot,
+                        &mu,
+                        center,
+                        geff as f32,
+                        self.eta as f32,
+                    )?;
+                    xi = x_avg;
+                }
+                locals.push(xi);
+            }
+            // (3) average local solutions — 1 comm round
+            ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
+            z = locals.pop().unwrap();
+        }
+        Ok(z)
+    }
+}
+
+impl ProxSolver for DaneSolver {
+    fn name(&self) -> String {
+        if self.r_outer <= 1 && self.kappa == 0.0 {
+            format!("dane(K={},{})", self.k_inner, self.local_solver.tag())
+        } else {
+            format!("aide(K={},R={},kappa={:.3})", self.k_inner, self.r_outer, self.kappa)
+        }
+    }
+
+    fn solve(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+        _t: usize,
+    ) -> Result<Vec<f32>> {
+        let d = ctx.d;
+        if self.r_outer <= 1 || self.kappa == 0.0 {
+            // plain DANE on f_t
+            return self.dane_rounds(ctx, batches, wprev, wprev, gamma);
+        }
+        // AIDE: catalyst outer loop (equations 35-36)
+        let q = gamma / (gamma + self.kappa);
+        let mut alpha = q.sqrt();
+        let mut y = wprev.to_vec();
+        #[allow(unused_assignments)] // rebound via mem::replace each round
+        let mut x_prev = wprev.to_vec();
+        let mut x = wprev.to_vec();
+        let geff = gamma + self.kappa;
+        for _r in 0..self.r_outer {
+            // center of the augmented quadratic:
+            // gamma/2||w-wprev||^2 + kappa/2||w-y||^2
+            //   = geff/2 ||w - (gamma wprev + kappa y)/geff||^2 + const
+            let mut center = vec![0.0f32; d];
+            for j in 0..d {
+                center[j] =
+                    ((gamma * wprev[j] as f64 + self.kappa * y[j] as f64) / geff) as f32;
+            }
+            let z = self.dane_rounds(ctx, batches, &y, &center, geff)?;
+            x_prev = std::mem::replace(&mut x, z);
+            // alpha_r solves alpha^2 = (1-alpha) alpha_{r-1}^2 + q alpha
+            let a2 = alpha * alpha;
+            let disc = (q - a2) * (q - a2) + 4.0 * a2;
+            let alpha_new = 0.5 * ((q - a2) + disc.sqrt());
+            let coef = (alpha * (1.0 - alpha)) / (alpha * alpha + alpha_new);
+            // y = x + coef (x - x_prev)
+            y = x.clone();
+            let diff = linalg::sub(&x, &x_prev);
+            linalg::axpy(coef as f32, &diff, &mut y);
+            alpha = alpha_new;
+        }
+        Ok(x)
+    }
+}

@@ -1,0 +1,109 @@
+//! DSVRG inner solver — Algorithm 1's inner loop.
+//!
+//! Each inner iteration k:
+//!   1. one all-reduce round computes the global minibatch gradient
+//!      `mu = grad phi_{I_t}(z_{k-1})`;
+//!   2. the *designated* machine j sweeps its next local batch `B_s^{(j)}`
+//!      once without replacement with variance-reduced updates (the
+//!      `svrg_{loss}` Pallas artifact);
+//!   3. the new iterate `z_k` (the sweep average) is broadcast — the
+//!      second communication round.
+//!
+//! The (j, s) token rotates so each machine's minibatch is consumed batch
+//! by batch, exactly as the paper's `s <- s+1; if s > p_j { s <- 1,
+//! j <- j+1 }` bookkeeping.
+
+use super::{svrg_sweep_machine, ProxSolver};
+use crate::algos::RunContext;
+use crate::objective::{distributed_mean_grad, MachineBatch};
+use anyhow::Result;
+
+pub struct DsvrgSolver {
+    /// inner iterations K (theory: O(log n))
+    pub k_inner: usize,
+    /// batches per machine p (theory: b / condition-number)
+    pub p_batches: usize,
+    /// SVRG stepsize
+    pub eta: f64,
+}
+
+impl DsvrgSolver {
+    pub fn new(k_inner: usize, p_batches: usize, eta: f64) -> Self {
+        Self { k_inner, p_batches, eta }
+    }
+
+    /// Split a machine's block list into p near-equal contiguous batches
+    /// (batch granularity is whole 256-row blocks).
+    fn batch_ranges(n_blocks: usize, p: usize) -> Vec<std::ops::Range<usize>> {
+        let p = p.clamp(1, n_blocks.max(1));
+        crate::data::sampler::shard_ranges(n_blocks, p)
+    }
+}
+
+impl ProxSolver for DsvrgSolver {
+    fn name(&self) -> String {
+        format!("dsvrg(K={},p={})", self.k_inner, self.p_batches)
+    }
+
+    fn solve(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+        _t: usize,
+    ) -> Result<Vec<f32>> {
+        let m = batches.len();
+        let mut z = wprev.to_vec();
+        let mut x = wprev.to_vec();
+        let mut j = 0usize; // designated machine
+        let mut s = 0usize; // batch index within machine j
+        let ranges: Vec<Vec<std::ops::Range<usize>>> = batches
+            .iter()
+            .map(|b| Self::batch_ranges(b.lits.len(), self.p_batches))
+            .collect();
+
+        for _k in 0..self.k_inner {
+            // (1) global minibatch gradient at snapshot z — 1 comm round
+            let (mu, _, _) = distributed_mean_grad(
+                ctx.engine,
+                ctx.loss,
+                batches,
+                &z,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+            // add the prox term's gradient? No: the svrg kernel adds
+            // gamma (x - wprev) at the *current* iterate exactly, so mu is
+            // the smooth-part gradient only — matching Algorithm 1 step 2.
+
+            // (2) machine j sweeps its batch s once without replacement
+            let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
+            let (x_end, x_avg) = svrg_sweep_machine(
+                ctx,
+                range,
+                &batches[j],
+                j,
+                &x,
+                &z,
+                &mu,
+                wprev,
+                gamma as f32,
+                self.eta as f32,
+            )?;
+            x = x_end;
+            // (3) z_k = sweep average, broadcast to all machines — 1 round
+            z = x_avg;
+            let mut locals: Vec<Vec<f32>> = (0..m).map(|_| z.clone()).collect();
+            ctx.net.broadcast(&mut ctx.meter, j, &mut locals);
+
+            // advance the (j, s) token
+            s += 1;
+            if s >= ranges[j].len() {
+                s = 0;
+                j = (j + 1) % m;
+            }
+        }
+        Ok(z)
+    }
+}

@@ -1,0 +1,120 @@
+//! Inner solvers for the minibatch-prox subproblem (equation 12):
+//!
+//! ```text
+//!     min_w  f_t(w) = phi_{I_t}(w) + gamma/2 ||w - w_prev||^2
+//! ```
+//!
+//! where `I_t` is the union of per-machine minibatches. Theorem 7/8 only
+//! require an inexact solution with error eta_t decaying polynomially in t,
+//! which is what makes the communication-efficient inner loops (DSVRG,
+//! DANE) sufficient.
+
+pub mod dane;
+pub mod dsvrg;
+pub mod exact_cg;
+pub mod oneshot;
+
+use super::RunContext;
+use crate::objective::MachineBatch;
+use anyhow::Result;
+
+/// Which variance-reduced kernel performs the local sweeps.
+///
+/// The paper's Appendix E uses SAGA for the local DANE subproblems; SVRG
+/// is the Algorithm-1 (DSVRG) choice. Both are single AOT Pallas kernels
+/// with identical interfaces (see python/compile/kernels/).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalSolver {
+    Svrg,
+    Saga,
+}
+
+impl LocalSolver {
+    pub fn tag(self) -> &'static str {
+        match self {
+            LocalSolver::Svrg => "svrg",
+            LocalSolver::Saga => "saga",
+        }
+    }
+}
+
+/// Approximately solve the prox subproblem on the current minibatches.
+pub trait ProxSolver {
+    fn name(&self) -> String;
+
+    /// Return an (inexact) minimizer of `f_t`; `t` is the outer iteration
+    /// (solvers may tighten accuracy with t per Theorem 7).
+    fn solve(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+        t: usize,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Shared helper: sweep one machine's blocks with chained
+/// variance-reduced passes (SVRG or SAGA kernels).
+///
+/// Runs the artifact block-by-block, carrying the iterate through, and
+/// combines per-block running averages weighted by their (1 + valid)
+/// counts — the paper's z_k average over r = 0..|B_s|.
+/// Returns `(x_end, x_avg)` and charges `n` vec ops to `machine_idx`.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_machine(
+    ctx: &mut RunContext,
+    solver: LocalSolver,
+    batch_blocks: std::ops::Range<usize>,
+    batch: &MachineBatch,
+    machine_idx: usize,
+    x0: &[f32],
+    z: &[f32],
+    mu: &[f32],
+    center: &[f32],
+    gamma: f32,
+    eta: f32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut x = x0.to_vec();
+    let mut avg = crate::linalg::WeightedAvg::new(ctx.d);
+    let mut total_n = 0u64;
+    for bi in batch_blocks {
+        let blk = &batch.lits[bi];
+        if blk.valid == 0 {
+            continue;
+        }
+        let (x_end, x_avg) = match solver {
+            LocalSolver::Svrg => {
+                ctx.engine.svrg_block(ctx.loss, blk, &x, z, mu, center, gamma, eta)?
+            }
+            LocalSolver::Saga => {
+                ctx.engine.saga_block(ctx.loss, blk, &x, z, mu, center, gamma, eta)?
+            }
+        };
+        avg.add((1 + blk.valid) as f64, &x_avg);
+        total_n += blk.valid as u64;
+        x = x_end;
+    }
+    ctx.meter.machine(machine_idx).add_vec_ops(total_n);
+    let x_avg = if avg.total_weight() > 0.0 { avg.mean() } else { x.clone() };
+    Ok((x, x_avg))
+}
+
+/// Backwards-compatible SVRG-only wrapper (Algorithm 1 semantics).
+#[allow(clippy::too_many_arguments)]
+pub fn svrg_sweep_machine(
+    ctx: &mut RunContext,
+    batch_blocks: std::ops::Range<usize>,
+    batch: &MachineBatch,
+    machine_idx: usize,
+    x0: &[f32],
+    z: &[f32],
+    mu: &[f32],
+    center: &[f32],
+    gamma: f32,
+    eta: f32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    vr_sweep_machine(
+        ctx, LocalSolver::Svrg, batch_blocks, batch, machine_idx, x0, z, mu, center, gamma, eta,
+    )
+}

@@ -1,0 +1,74 @@
+//! One-shot averaging (EMSO, Li et al. 2014 / Zhang et al. 2012).
+//!
+//! Each machine solves its *local* prox subproblem (equation 13) on its own
+//! minibatch to high accuracy, then a single all-reduce averages the local
+//! solutions. The paper uses this as the prior-work comparison point: it
+//! works empirically but carries no convergence guarantee for (1) — our
+//! benches show where it falls behind DSVRG/DANE inner solvers.
+//!
+//! Local solve: SVRG sweeps with local snapshots (works for both losses);
+//! the re-snapshot between sweeps uses the machine's *local* gradient —
+//! no communication until the final average, which is the method's point.
+
+use super::{svrg_sweep_machine, ProxSolver};
+use crate::algos::RunContext;
+use crate::objective::{local_grad_sum, MachineBatch};
+use anyhow::Result;
+
+pub struct OneShotSolver {
+    /// local SVRG sweeps (each re-snapshots on the local gradient)
+    pub local_sweeps: usize,
+    pub eta: f64,
+}
+
+impl OneShotSolver {
+    pub fn new(local_sweeps: usize, eta: f64) -> Self {
+        Self { local_sweeps, eta }
+    }
+}
+
+impl ProxSolver for OneShotSolver {
+    fn name(&self) -> String {
+        format!("oneshot-emso(sweeps={})", self.local_sweeps)
+    }
+
+    fn solve(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+        _t: usize,
+    ) -> Result<Vec<f32>> {
+        let m = batches.len();
+        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
+        for (i, batch) in batches.iter().enumerate() {
+            let mut xi = wprev.to_vec();
+            for _sweep in 0..self.local_sweeps.max(1) {
+                // local full gradient at the snapshot (charged locally)
+                let gs = local_grad_sum(ctx.engine, ctx.loss, batch, &xi, ctx.meter.machine(i))?;
+                let cnt = gs.count.max(1.0) as f32;
+                let mu: Vec<f32> = gs.grad_sum.iter().map(|&g| g / cnt).collect();
+                let snapshot = xi.clone();
+                let blocks = 0..batch.lits.len();
+                let (_x_end, x_avg) = svrg_sweep_machine(
+                    ctx,
+                    blocks,
+                    batch,
+                    i,
+                    &xi,
+                    &snapshot,
+                    &mu,
+                    wprev,
+                    gamma as f32,
+                    self.eta as f32,
+                )?;
+                xi = x_avg;
+            }
+            locals.push(xi);
+        }
+        // the single communication round that gives the method its name
+        ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
+        Ok(locals.pop().unwrap())
+    }
+}

@@ -1,0 +1,214 @@
+//! Simulated collectives over the m-machine cluster.
+//!
+//! The paper counts communication as "rounds in which vectors are averaged
+//! across machines and the result is made known to one or all machines"
+//! (footnote 1). These primitives implement exactly those operations over
+//! the in-process machine states, charge each participating machine's
+//! `ResourceMeter`, and advance the α–β network time model so the examples
+//! can report simulated wall-clock alongside round counts.
+//!
+//! Substitution note (DESIGN.md §3): xla's PJRT handles are not `Send`, so
+//! machines are deterministic SPMD-simulated states driven by the
+//! coordinator thread rather than tokio tasks; the collectives below are
+//! the *only* way machine state crosses machine boundaries, which is what
+//! makes the round/vector counts trustworthy.
+
+pub mod netmodel;
+
+use crate::accounting::ClusterMeter;
+use netmodel::NetModel;
+
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub rounds: u64,
+    pub vectors_moved: u64,
+    pub sim_time_s: f64,
+}
+
+pub struct Network {
+    pub m: usize,
+    pub stats: CommStats,
+    pub model: NetModel,
+}
+
+impl Network {
+    pub fn new(m: usize, model: NetModel) -> Self {
+        Self { m, stats: CommStats::default(), model }
+    }
+
+    fn charge(&mut self, meter: &mut ClusterMeter, vectors_per_machine: u64, dim: usize) {
+        assert_eq!(meter.m(), self.m);
+        meter.all_comm_round(vectors_per_machine);
+        self.stats.rounds += 1;
+        self.stats.vectors_moved += vectors_per_machine * self.m as u64;
+        self.stats.sim_time_s += self.model.round_time(vectors_per_machine, dim, self.m);
+    }
+
+    /// Average one vector per machine; every machine ends with the mean.
+    /// One round, one vector sent per machine.
+    pub fn all_reduce_avg(&mut self, meter: &mut ClusterMeter, locals: &mut [Vec<f32>]) {
+        assert_eq!(locals.len(), self.m);
+        let dim = locals[0].len();
+        let mut mean = vec![0.0f64; dim];
+        for v in locals.iter() {
+            assert_eq!(v.len(), dim, "ragged all-reduce");
+            for (s, &x) in mean.iter_mut().zip(v) {
+                *s += x as f64;
+            }
+        }
+        let inv = 1.0 / self.m as f64;
+        let mean32: Vec<f32> = mean.iter().map(|&s| (s * inv) as f32).collect();
+        for v in locals.iter_mut() {
+            v.copy_from_slice(&mean32);
+        }
+        self.charge(meter, 1, dim);
+    }
+
+    /// Weighted all-reduce: machines contribute (weight, vector); every
+    /// machine ends with the weighted mean. Used to combine block-sum
+    /// gradients with per-machine valid counts exactly.
+    pub fn all_reduce_weighted(
+        &mut self,
+        meter: &mut ClusterMeter,
+        weights: &[f64],
+        locals: &mut [Vec<f32>],
+    ) {
+        assert_eq!(locals.len(), self.m);
+        assert_eq!(weights.len(), self.m);
+        let dim = locals[0].len();
+        let mut sum = vec![0.0f64; dim];
+        let mut wtot = 0.0f64;
+        for (w, v) in weights.iter().zip(locals.iter()) {
+            wtot += w;
+            for (s, &x) in sum.iter_mut().zip(v) {
+                *s += w * x as f64;
+            }
+        }
+        let inv = if wtot > 0.0 { 1.0 / wtot } else { 0.0 };
+        let mean32: Vec<f32> = sum.iter().map(|&s| (s * inv) as f32).collect();
+        for v in locals.iter_mut() {
+            v.copy_from_slice(&mean32);
+        }
+        self.charge(meter, 1, dim);
+    }
+
+    /// One machine's vector becomes known to all. One round.
+    pub fn broadcast(&mut self, meter: &mut ClusterMeter, src: usize, locals: &mut [Vec<f32>]) {
+        assert!(src < self.m);
+        let dim = locals[src].len();
+        let v = locals[src].clone();
+        for (i, l) in locals.iter_mut().enumerate() {
+            if i != src {
+                l.clear();
+                l.extend_from_slice(&v);
+            }
+        }
+        self.charge(meter, 1, dim);
+    }
+
+    /// All-reduce a scalar per machine (counts as one round of one vector —
+    /// the paper's unit; scalars ride along with vectors in practice).
+    pub fn all_reduce_scalar_sum(&mut self, meter: &mut ClusterMeter, locals: &mut [f64]) {
+        assert_eq!(locals.len(), self.m);
+        let sum: f64 = locals.iter().sum();
+        for l in locals.iter_mut() {
+            *l = sum;
+        }
+        self.charge(meter, 1, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, forall, normal_vec};
+
+    fn net(m: usize) -> (Network, ClusterMeter) {
+        (Network::new(m, NetModel::default()), ClusterMeter::new(m))
+    }
+
+    #[test]
+    fn all_reduce_is_mean() {
+        let (mut n, mut meter) = net(2);
+        let mut locals = vec![vec![1.0, 3.0], vec![3.0, 5.0]];
+        n.all_reduce_avg(&mut meter, &mut locals);
+        assert_close(&locals[0], &[2.0, 4.0], 1e-6, 0.0);
+        assert_close(&locals[1], &[2.0, 4.0], 1e-6, 0.0);
+        assert_eq!(meter.report().comm_rounds, 1);
+    }
+
+    #[test]
+    fn prop_all_reduce_matches_sequential_mean() {
+        forall(32, |rng| {
+            let m = 1 + rng.next_below(8);
+            let dim = 1 + rng.next_below(16);
+            let (mut n, mut meter) = net(m);
+            let mut locals: Vec<Vec<f32>> = (0..m).map(|_| normal_vec(rng, dim)).collect();
+            let mut expect = vec![0.0f64; dim];
+            for v in &locals {
+                for (e, &x) in expect.iter_mut().zip(v) {
+                    *e += x as f64 / m as f64;
+                }
+            }
+            let expect32: Vec<f32> = expect.iter().map(|&x| x as f32).collect();
+            n.all_reduce_avg(&mut meter, &mut locals);
+            for v in &locals {
+                assert_close(v, &expect32, 1e-5, 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_weighted_all_reduce() {
+        forall(24, |rng| {
+            let m = 1 + rng.next_below(6);
+            let dim = 1 + rng.next_below(8);
+            let (mut n, mut meter) = net(m);
+            let mut locals: Vec<Vec<f32>> = (0..m).map(|_| normal_vec(rng, dim)).collect();
+            let weights: Vec<f64> = (0..m).map(|_| 1.0 + rng.next_f64() * 9.0).collect();
+            let wtot: f64 = weights.iter().sum();
+            let mut expect = vec![0.0f64; dim];
+            for (w, v) in weights.iter().zip(&locals) {
+                for (e, &x) in expect.iter_mut().zip(v) {
+                    *e += w * x as f64 / wtot;
+                }
+            }
+            let expect32: Vec<f32> = expect.iter().map(|&x| x as f32).collect();
+            n.all_reduce_weighted(&mut meter, &weights, &mut locals);
+            for v in &locals {
+                assert_close(v, &expect32, 1e-4, 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn broadcast_copies_from_source() {
+        let (mut n, mut meter) = net(3);
+        let mut locals = vec![vec![0.0; 2], vec![7.0, 8.0], vec![0.0; 2]];
+        n.broadcast(&mut meter, 1, &mut locals);
+        for v in &locals {
+            assert_close(v, &[7.0, 8.0], 0.0, 0.0);
+        }
+        assert_eq!(n.stats.rounds, 1);
+    }
+
+    #[test]
+    fn scalar_sum() {
+        let (mut n, mut meter) = net(4);
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0];
+        n.all_reduce_scalar_sum(&mut meter, &mut xs);
+        assert!(xs.iter().all(|&x| (x - 10.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn rounds_accumulate_in_meter_and_stats() {
+        let (mut n, mut meter) = net(2);
+        let mut locals = vec![vec![0.0; 4], vec![1.0; 4]];
+        for _ in 0..5 {
+            n.all_reduce_avg(&mut meter, &mut locals);
+        }
+        assert_eq!(n.stats.rounds, 5);
+        assert_eq!(meter.report().comm_rounds, 5);
+        assert!(n.stats.sim_time_s > 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! α–β network cost model for simulated wall-clock.
+//!
+//! One collective round over `m` machines moving one `dim`-dimensional f32
+//! vector per machine is modeled as a tree-structured reduce+broadcast:
+//!
+//! ```text
+//!     T(round) = 2 * ceil(log2 m) * (alpha + bytes / bandwidth)
+//! ```
+//!
+//! This never enters the paper's resource counts (those are rounds/vectors);
+//! it only converts them into the simulated-time columns the examples print
+//! so the communication-vs-computation crossover is visible.
+
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    /// per-message latency, seconds
+    pub alpha: f64,
+    /// bandwidth, bytes/second
+    pub beta_bytes_per_s: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        // 50 us latency, 1 GiB/s — commodity datacenter Ethernet circa the
+        // paper (2017); configurable from ExperimentConfig.
+        Self { alpha: 50e-6, beta_bytes_per_s: 1_073_741_824.0 }
+    }
+}
+
+impl NetModel {
+    pub fn round_time(&self, vectors_per_machine: u64, dim: usize, m: usize) -> f64 {
+        let hops = 2.0 * (m.max(2) as f64).log2().ceil();
+        let bytes = vectors_per_machine as f64 * dim as f64 * 4.0;
+        hops * (self.alpha + bytes / self.beta_bytes_per_s)
+    }
+
+    /// An infinitely-fast network (pure round counting).
+    pub fn zero() -> Self {
+        Self { alpha: 0.0, beta_bytes_per_s: f64::INFINITY }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_grows_with_dim_and_machines() {
+        let nm = NetModel::default();
+        assert!(nm.round_time(1, 128, 4) > nm.round_time(1, 64, 4));
+        assert!(nm.round_time(1, 64, 16) > nm.round_time(1, 64, 4));
+        assert!(nm.round_time(2, 64, 4) > nm.round_time(1, 64, 4));
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        assert_eq!(NetModel::zero().round_time(10, 1024, 64), 0.0);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let nm = NetModel::default();
+        let t_small = nm.round_time(1, 1, 2);
+        // 2 hops * alpha
+        assert!((t_small - 2.0 * nm.alpha) / t_small < 1e-3);
+    }
+}

@@ -1,0 +1,202 @@
+//! Experiment configuration: a small `key = value` format (the offline
+//! image has no serde/toml) with typed accessors, env overrides, and the
+//! composite `ExperimentConfig` every binary builds its runs from.
+//!
+//! File format: one `key = value` per line, `#` comments, sections are
+//! flattened as `section.key`. This covers everything the examples and
+//! benches need without a full TOML grammar.
+
+use crate::data::Loss;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct KvConfig {
+    map: BTreeMap<String, String>,
+}
+
+impl KvConfig {
+    pub fn parse(text: &str) -> Result<KvConfig> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(KvConfig { map })
+    }
+
+    pub fn load(path: &Path) -> Result<KvConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config key '{key}'='{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config key '{key}'='{v}'")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+}
+
+/// Top-level experiment description shared by the CLI and examples.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub m: usize,
+    pub b_local: usize,
+    pub n_budget: usize,
+    pub loss: Loss,
+    pub dim: usize,
+    pub seed: u64,
+    pub eval_samples: usize,
+    pub eval_every: usize,
+    pub method: String,
+    pub dataset: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            m: 4,
+            b_local: 512,
+            n_budget: 65_536,
+            loss: Loss::Squared,
+            dim: 64,
+            seed: 17,
+            eval_samples: 4096,
+            eval_every: 0,
+            method: "mp-dsvrg".to_string(),
+            dataset: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_kv(kv: &KvConfig) -> Result<ExperimentConfig> {
+        let dflt = ExperimentConfig::default();
+        let loss_s = kv.get_str("loss", dflt.loss.tag());
+        let loss = Loss::parse(&loss_s).ok_or_else(|| anyhow!("bad loss '{loss_s}'"))?;
+        let dim = kv.get_usize("dim", dflt.dim)?;
+        if dim == 0 {
+            bail!("dim must be positive");
+        }
+        Ok(ExperimentConfig {
+            m: kv.get_usize("m", dflt.m)?,
+            b_local: kv.get_usize("b_local", dflt.b_local)?,
+            n_budget: kv.get_usize("n_budget", dflt.n_budget)?,
+            loss,
+            dim,
+            seed: kv.get_usize("seed", dflt.seed as usize)? as u64,
+            eval_samples: kv.get_usize("eval_samples", dflt.eval_samples)?,
+            eval_every: kv.get_usize("eval_every", dflt.eval_every)?,
+            method: kv.get_str("method", &dflt.method),
+            dataset: kv.get("dataset").map(str::to_string),
+        })
+    }
+
+    /// Apply `key=value` CLI overrides on top of a config.
+    pub fn apply_overrides(mut kv: KvConfig, overrides: &[String]) -> Result<KvConfig> {
+        for o in overrides {
+            let (k, v) =
+                o.split_once('=').ok_or_else(|| anyhow!("override '{o}' is not key=value"))?;
+            kv.set(k.trim(), v.trim());
+        }
+        Ok(kv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let kv = KvConfig::parse(
+            "# header\nm = 8\n[net]\nalpha = 1e-4 # inline\nname = \"x\"\n",
+        )
+        .unwrap();
+        assert_eq!(kv.get("m"), Some("8"));
+        assert_eq!(kv.get("net.alpha"), Some("1e-4"));
+        assert_eq!(kv.get("net.name"), Some("x"));
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let kv = KvConfig::parse("a = 3\nb = 2.5\n").unwrap();
+        assert_eq!(kv.get_usize("a", 0).unwrap(), 3);
+        assert_eq!(kv.get_f64("b", 0.0).unwrap(), 2.5);
+        assert_eq!(kv.get_usize("missing", 7).unwrap(), 7);
+        assert!(kv.get_usize("b", 0).is_err());
+    }
+
+    #[test]
+    fn experiment_from_kv_and_overrides() {
+        let kv = KvConfig::parse("m = 8\nloss = log\n").unwrap();
+        let kv =
+            ExperimentConfig::apply_overrides(kv, &["b_local=128".into(), "m=2".into()]).unwrap();
+        let ec = ExperimentConfig::from_kv(&kv).unwrap();
+        assert_eq!(ec.m, 2);
+        assert_eq!(ec.b_local, 128);
+        assert_eq!(ec.loss, Loss::Logistic);
+    }
+
+    #[test]
+    fn loads_from_file() {
+        let dir = std::env::temp_dir().join("mbprox_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.conf");
+        std::fs::write(&path, "method = mp-dane\nm = 16\n").unwrap();
+        let kv = KvConfig::load(&path).unwrap();
+        let ec = ExperimentConfig::from_kv(&kv).unwrap();
+        assert_eq!(ec.method, "mp-dane");
+        assert_eq!(ec.m, 16);
+        assert!(KvConfig::load(std::path::Path::new("/no/such/file")).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(KvConfig::parse("novalue\n").is_err());
+        let kv = KvConfig::parse("loss = martian\n").unwrap();
+        assert!(ExperimentConfig::from_kv(&kv).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! The experiment coordinator: builds run contexts from configs, selects
+//! methods via the theory-driven parameter plans, and executes runs.
+//!
+//! This is the crate's top-level orchestration layer — the CLI, examples
+//! and benches all go through [`Runner`].
+
+use crate::algos::erm::agd::DistributedAgd;
+use crate::algos::erm::dane_erm::DaneErm;
+use crate::algos::erm::disco::Disco;
+use crate::algos::erm::dsvrg_erm::DsvrgErm;
+use crate::algos::accel_sgd::AccelMinibatchSgd;
+use crate::algos::mbprox::MinibatchProx;
+use crate::algos::minibatch_sgd::MinibatchSgd;
+use crate::algos::sgd_local::LocalSgd;
+use crate::algos::solvers::dane::DaneSolver;
+use crate::algos::solvers::LocalSolver;
+use crate::algos::solvers::dsvrg::DsvrgSolver;
+use crate::algos::solvers::exact_cg::ExactCgSolver;
+use crate::algos::solvers::oneshot::OneShotSolver;
+use crate::algos::{Method, RunContext, RunResult};
+use crate::accounting::ClusterMeter;
+use crate::comm::{netmodel::NetModel, Network};
+use crate::config::ExperimentConfig;
+use crate::data::synth::{SynthSpec, SynthStream};
+use crate::data::table3::DatasetSpec;
+use crate::data::{Loss, SampleStream};
+use crate::objective::Evaluator;
+use crate::runtime::Engine;
+use crate::theory::{self, ProblemConsts};
+use anyhow::{anyhow, Result};
+
+/// Problem constants used for the theory plans; row_norm=1 streams give
+/// beta≈1 (squared) / 0.25 (logistic). The norm bound B tracks the planted
+/// model norm of the matching `SynthSpec` (which scales with sqrt(dim) to
+/// keep signal strength dimension-independent — see data::synth).
+pub fn problem_consts(cfg: &ExperimentConfig) -> ProblemConsts {
+    let (beta, b_norm) = match cfg.loss {
+        Loss::Squared => (1.0, SynthSpec::signal_norm(cfg.dim, 1.0)),
+        Loss::Logistic => (0.25, SynthSpec::signal_norm(cfg.dim, 2.0)),
+    };
+    ProblemConsts { l_lipschitz: 1.0, b_norm, beta_smooth: beta, m: cfg.m }
+}
+
+pub struct Runner {
+    pub engine: Engine,
+    pub net_model: NetModel,
+}
+
+impl Runner {
+    pub fn from_env() -> Result<Runner> {
+        Ok(Runner { engine: Engine::from_env()?, net_model: NetModel::default() })
+    }
+
+    pub fn new(engine: Engine) -> Runner {
+        Runner { engine, net_model: NetModel::default() }
+    }
+
+    /// Padded artifact dim for a native dim.
+    pub fn padded_dim(&self, native: usize) -> Result<usize> {
+        self.engine.manifest().padded_dim(native)
+    }
+
+    /// Build a context with synthetic per-machine streams + evaluator.
+    pub fn context(&mut self, cfg: &ExperimentConfig) -> Result<RunContext<'_>> {
+        let (root, native_dim) = match &cfg.dataset {
+            Some(name) => {
+                let spec = DatasetSpec::by_name(name)
+                    .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+                (spec.stream(cfg.seed), spec.dim)
+            }
+            None => {
+                let spec = match cfg.loss {
+                    Loss::Squared => SynthSpec::least_squares(cfg.dim),
+                    Loss::Logistic => SynthSpec::logistic(cfg.dim),
+                };
+                (SynthStream::new(spec, cfg.seed), cfg.dim)
+            }
+        };
+        let d = self.padded_dim(native_dim)?;
+        let streams: Vec<Box<dyn SampleStream>> = (0..cfg.m)
+            .map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>)
+            .collect();
+        let mut eval_stream = root.fork_stream(EVAL_TAG);
+        let eval_samples = eval_stream.draw_many(cfg.eval_samples);
+        let evaluator = Some(Evaluator::new(&self.engine, d, cfg.loss, &eval_samples)?);
+        Ok(RunContext {
+            engine: &mut self.engine,
+            net: Network::new(cfg.m, self.net_model.clone()),
+            meter: ClusterMeter::new(cfg.m),
+            loss: cfg.loss,
+            d,
+            streams,
+            evaluator,
+            eval_every: cfg.eval_every,
+        })
+    }
+
+    /// Build the method named in the config with theory-driven parameters.
+    pub fn method(&self, cfg: &ExperimentConfig) -> Result<Box<dyn Method>> {
+        build_method(&cfg.method, cfg)
+    }
+
+    /// Run one experiment end to end.
+    pub fn run(&mut self, cfg: &ExperimentConfig) -> Result<RunResult> {
+        let mut method = self.method(cfg)?;
+        let mut ctx = self.context(cfg)?;
+        method.run(&mut ctx)
+    }
+}
+
+/// Stream-split tag reserved for the held-out evaluation stream.
+const EVAL_TAG: u64 = 0xE7A1;
+
+/// Construct a method by name using the theory plans (DESIGN.md §6).
+pub fn build_method(name: &str, cfg: &ExperimentConfig) -> Result<Box<dyn Method>> {
+    let c = problem_consts(cfg);
+    let n = cfg.n_budget as f64;
+    let plan = theory::mbprox_plan(&c, n, cfg.b_local);
+    Ok(match name {
+        "mp-dsvrg" => {
+            let ds = theory::dsvrg_plan(&c, &plan, cfg.b_local, n);
+            Box::new(MinibatchProx::new(
+                "mp-dsvrg",
+                cfg.b_local,
+                plan.t_outer,
+                plan.gamma,
+                DsvrgSolver::new(ds.k_inner, ds.p_batches, ds.eta),
+            ))
+        }
+        "mp-dane" => {
+            let dp = theory::dane_plan(&c, &plan, cfg.b_local, n, cfg.dim);
+            let eta = 0.1 / (c.beta_smooth + plan.gamma + dp.kappa);
+            let solver = if dp.kappa > 0.0 && dp.r_outer > 1 {
+                DaneSolver::aide(dp.k_inner, dp.r_outer, dp.kappa, eta)
+            } else {
+                DaneSolver::plain(dp.k_inner, eta)
+            };
+            Box::new(MinibatchProx::new(
+                "mp-dane",
+                cfg.b_local,
+                plan.t_outer,
+                plan.gamma,
+                solver,
+            ))
+        }
+        "mp-dane-saga" => {
+            // the paper's Appendix-E configuration: SAGA local solves,
+            // R=1, kappa=0, one local pass per DANE round
+            let dp = theory::dane_plan(&c, &plan, cfg.b_local, n, cfg.dim);
+            let eta = 0.1 / (c.beta_smooth + plan.gamma);
+            Box::new(MinibatchProx::new(
+                "mp-dane-saga",
+                cfg.b_local,
+                plan.t_outer,
+                plan.gamma,
+                DaneSolver::plain(dp.k_inner, eta).with_local_solver(LocalSolver::Saga),
+            ))
+        }
+        "mp-exact" => Box::new(MinibatchProx::new(
+            "mp-exact",
+            cfg.b_local,
+            plan.t_outer,
+            plan.gamma,
+            ExactCgSolver::default(),
+        )),
+        "mp-oneshot" | "emso" => {
+            let eta = 0.1 / (c.beta_smooth + plan.gamma);
+            Box::new(MinibatchProx::new(
+                "mp-oneshot",
+                cfg.b_local,
+                plan.t_outer,
+                plan.gamma,
+                OneShotSolver::new(2, eta),
+            ))
+        }
+        "minibatch-sgd" => {
+            let gamma = theory::minibatch_sgd_gamma(&c, plan.t_outer, plan.bm);
+            Box::new(MinibatchSgd { b_local: cfg.b_local, t_outer: plan.t_outer, gamma })
+        }
+        "acc-minibatch-sgd" => {
+            let gamma = theory::minibatch_sgd_gamma(&c, plan.t_outer, plan.bm);
+            Box::new(AccelMinibatchSgd { b_local: cfg.b_local, t_outer: plan.t_outer, gamma })
+        }
+        "local-sgd" | "ideal" => {
+            let chunk = 256usize;
+            let steps = cfg.n_budget.div_ceil(chunk);
+            let gamma = theory::minibatch_sgd_gamma(
+                &ProblemConsts { m: 1, ..c },
+                steps,
+                chunk,
+            );
+            Box::new(LocalSgd { n_total: cfg.n_budget, gamma, chunk })
+        }
+        "dsvrg-erm" => {
+            let nu = theory::erm_nu(&c, n);
+            Box::new(DsvrgErm {
+                n_total: cfg.n_budget,
+                nu,
+                epochs: (n.ln().ceil() as usize).max(4),
+                eta: 0.1 / (c.beta_smooth + nu),
+            })
+        }
+        "dane-erm" => {
+            let nu = theory::erm_nu(&c, n);
+            Box::new(DaneErm {
+                n_total: cfg.n_budget,
+                nu,
+                rounds: (n.ln().ceil() as usize).max(4),
+                local_passes: 1,
+                eta: 0.1 / (c.beta_smooth + nu),
+            })
+        }
+        "agd-erm" => {
+            let nu = theory::erm_nu(&c, n);
+            // Nesterov iteration count ~ sqrt(kappa) log(1/eps) ~ B^0.5 n^0.25
+            let rounds = ((c.beta_smooth / nu).sqrt() * n.ln()).ceil().min(2000.0) as usize;
+            Box::new(DistributedAgd { n_total: cfg.n_budget, nu, beta: c.beta_smooth, rounds })
+        }
+        "disco-erm" => {
+            let nu = theory::erm_nu(&c, n);
+            Box::new(Disco {
+                n_total: cfg.n_budget,
+                nu,
+                newton_iters: 4,
+                cg_tol: 1e-8,
+                cg_max: 256,
+            })
+        }
+        other => return Err(anyhow!("unknown method '{other}' (see coordinator::METHODS)")),
+    })
+}
+
+/// All method names `build_method` accepts.
+pub const METHODS: [&str; 12] = [
+    "mp-dsvrg",
+    "mp-dane",
+    "mp-dane-saga",
+    "mp-exact",
+    "mp-oneshot",
+    "minibatch-sgd",
+    "acc-minibatch-sgd",
+    "local-sgd",
+    "dsvrg-erm",
+    "dane-erm",
+    "agd-erm",
+    "disco-erm",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_registered_method() {
+        let cfg = ExperimentConfig::default();
+        for name in METHODS {
+            let m = build_method(name, &cfg).unwrap();
+            assert!(!m.name().is_empty());
+        }
+        assert!(build_method("nope", &cfg).is_err());
+    }
+
+    #[test]
+    fn theory_params_flow_into_names() {
+        let cfg =
+            ExperimentConfig { b_local: 128, n_budget: 65_536, ..ExperimentConfig::default() };
+        let m = build_method("mp-dsvrg", &cfg).unwrap();
+        // T = n/(b m) = 65536/(128*4) = 128
+        assert!(m.name().contains("T=128"), "{}", m.name());
+    }
+}

@@ -1,0 +1,127 @@
+//! Block packing: samples -> fixed-shape padded blocks for the artifacts.
+//!
+//! Every AOT artifact consumes `(X[B, d], y[B], mask[B])` with B = 256 and
+//! d ∈ {64, 128}. The packer pads features with zeros up to `d`, pads the
+//! row tail with masked-out rows, and records the valid count. The
+//! sum+count output convention of the artifacts makes block composition
+//! exact (verified by the padding property tests on both sides).
+
+use super::Sample;
+
+pub const BLOCK_ROWS: usize = 256;
+
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// row-major BLOCK_ROWS x d
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub valid: usize,
+    pub d: usize,
+}
+
+impl Block {
+    pub fn rows(&self) -> usize {
+        BLOCK_ROWS
+    }
+}
+
+/// Pack up to BLOCK_ROWS samples into one block, padding features to `d`.
+pub fn pack_block(samples: &[Sample], d: usize) -> Block {
+    assert!(samples.len() <= BLOCK_ROWS, "pack_block: too many rows");
+    let valid = samples.len();
+    let mut x = vec![0.0f32; BLOCK_ROWS * d];
+    let mut y = vec![0.0f32; BLOCK_ROWS];
+    let mut mask = vec![0.0f32; BLOCK_ROWS];
+    for (r, s) in samples.iter().enumerate() {
+        assert!(s.x.len() <= d, "sample dim {} exceeds block dim {d}", s.x.len());
+        x[r * d..r * d + s.x.len()].copy_from_slice(&s.x);
+        y[r] = s.y;
+        mask[r] = 1.0;
+    }
+    Block { x, y, mask, valid, d }
+}
+
+/// Pack an arbitrary slice into ceil(n/B) blocks.
+pub fn pack_all(samples: &[Sample], d: usize) -> Vec<Block> {
+    samples.chunks(BLOCK_ROWS).map(|c| pack_block(c, d)).collect()
+}
+
+/// Pack by index list (used by without-replacement batches).
+pub fn pack_indices(samples: &[Sample], idx: &[usize], d: usize) -> Vec<Block> {
+    idx.chunks(BLOCK_ROWS)
+        .map(|chunk| {
+            let rows: Vec<Sample> = chunk.iter().map(|&i| samples[i].clone()).collect();
+            pack_block(&rows, d)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::forall;
+
+    fn sample(d: usize, v: f32) -> Sample {
+        Sample { x: vec![v; d], y: v }
+    }
+
+    #[test]
+    fn pads_rows_and_features() {
+        let samples = vec![sample(3, 1.0), sample(3, 2.0)];
+        let b = pack_block(&samples, 8);
+        assert_eq!(b.valid, 2);
+        assert_eq!(b.x.len(), BLOCK_ROWS * 8);
+        assert_eq!(&b.x[0..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&b.x[3..8], &[0.0; 5]);
+        assert_eq!(b.mask[0], 1.0);
+        assert_eq!(b.mask[2], 0.0);
+        assert_eq!(b.y[1], 2.0);
+    }
+
+    #[test]
+    fn prop_pack_all_covers_everything() {
+        forall(24, |rng| {
+            let n = rng.next_below(1000);
+            let d = 4;
+            let samples: Vec<Sample> = (0..n).map(|i| sample(d, i as f32)).collect();
+            let blocks = pack_all(&samples, 8);
+            assert_eq!(blocks.len(), n.div_ceil(BLOCK_ROWS));
+            let total_valid: usize = blocks.iter().map(|b| b.valid).sum();
+            assert_eq!(total_valid, n);
+            // mask sum equals valid count
+            for b in &blocks {
+                let msum: f32 = b.mask.iter().sum();
+                assert_eq!(msum as usize, b.valid);
+                // mask is a prefix
+                for r in 0..BLOCK_ROWS {
+                    assert_eq!(b.mask[r], if r < b.valid { 1.0 } else { 0.0 });
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pack_indices_selects_rows() {
+        let samples: Vec<Sample> = (0..10).map(|i| sample(2, i as f32)).collect();
+        let blocks = pack_indices(&samples, &[7, 3, 9], 4);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].valid, 3);
+        assert_eq!(blocks[0].y[0], 7.0);
+        assert_eq!(blocks[0].y[1], 3.0);
+        assert_eq!(blocks[0].y[2], 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds block dim")]
+    fn rejects_oversized_samples() {
+        pack_block(&[sample(16, 1.0)], 8);
+    }
+
+    #[test]
+    fn empty_pack_is_fully_masked() {
+        let b = pack_block(&[], 4);
+        assert_eq!(b.valid, 0);
+        assert!(b.mask.iter().all(|&m| m == 0.0));
+    }
+}

@@ -1,0 +1,138 @@
+//! libsvm text format writer + parser.
+//!
+//! Format: one sample per line, `label idx:val idx:val ...` with 1-based
+//! indices and omitted zeros. The end-to-end driver generates the
+//! Table-3-like datasets, writes them through this writer, and re-parses
+//! them — exercising a real data-loading path (the paper's experiments
+//! load libsvm files).
+
+use super::Sample;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+pub fn write_samples<P: AsRef<Path>>(path: P, samples: &[Sample]) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for s in samples {
+        write_sample_line(&mut w, s)?;
+    }
+    Ok(())
+}
+
+fn write_sample_line<W: Write>(w: &mut W, s: &Sample) -> std::io::Result<()> {
+    // labels are written compactly: integers as integers
+    if s.y == s.y.trunc() && s.y.abs() < 1e7 {
+        write!(w, "{}", s.y as i64)?;
+    } else {
+        write!(w, "{}", s.y)?;
+    }
+    for (j, &v) in s.x.iter().enumerate() {
+        if v != 0.0 {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+    }
+    writeln!(w)
+}
+
+/// Parse a libsvm file. `dim` fixes the feature dimension (indices beyond
+/// it are an error); lines that are empty or start with '#' are skipped.
+pub fn read_samples<P: AsRef<Path>>(path: P, dim: usize) -> std::io::Result<Vec<Sample>> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        match parse_line(&line, dim) {
+            Ok(Some(s)) => out.push(s),
+            Ok(None) => {}
+            Err(e) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("line {}: {}", lineno + 1, e),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub fn parse_line(line: &str, dim: usize) -> Result<Option<Sample>, String> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let label_tok = parts.next().ok_or("missing label")?;
+    let y: f32 = label_tok.parse().map_err(|_| format!("bad label '{label_tok}'"))?;
+    let mut x = vec![0.0f32; dim];
+    for tok in parts {
+        let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| format!("bad pair '{tok}'"))?;
+        let idx: usize = idx_s.parse().map_err(|_| format!("bad index '{idx_s}'"))?;
+        if idx == 0 || idx > dim {
+            return Err(format!("index {idx} out of range 1..={dim}"));
+        }
+        let val: f32 = val_s.parse().map_err(|_| format!("bad value '{val_s}'"))?;
+        x[idx - 1] = val;
+    }
+    Ok(Some(Sample { x, y }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthSpec, SynthStream};
+    use crate::data::SampleStream;
+    use crate::util::testkit::assert_close;
+
+    #[test]
+    fn parse_basic_line() {
+        let s = parse_line("1 1:0.5 3:-2", 4).unwrap().unwrap();
+        assert_eq!(s.y, 1.0);
+        assert_eq!(s.x, vec![0.5, 0.0, -2.0, 0.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        assert!(parse_line("# comment", 4).unwrap().is_none());
+        assert!(parse_line("   ", 4).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_line("1 5:1", 4).is_err()); // out of range
+        assert!(parse_line("1 0:1", 4).is_err()); // 1-based
+        assert!(parse_line("x 1:1", 4).is_err()); // bad label
+        assert!(parse_line("1 1-1", 4).is_err()); // bad pair
+    }
+
+    #[test]
+    fn round_trip_through_file() {
+        let mut stream = SynthStream::new(SynthSpec::least_squares(12), 9);
+        let samples = stream.draw_many(50);
+        let dir = std::env::temp_dir().join("mbprox_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("round_trip.libsvm");
+        write_samples(&path, &samples).unwrap();
+        let back = read_samples(&path, 12).unwrap();
+        assert_eq!(back.len(), samples.len());
+        for (a, b) in samples.iter().zip(&back) {
+            assert!((a.y - b.y).abs() < 1e-4);
+            assert_close(&a.x, &b.x, 1e-4, 1e-5);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sparse_zeros_are_omitted_and_restored() {
+        let s = Sample { x: vec![0.0, 1.5, 0.0, 0.0], y: -1.0 };
+        let dir = std::env::temp_dir().join("mbprox_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sparse.libsvm");
+        write_samples(&path, std::slice::from_ref(&s)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.trim(), "-1 2:1.5");
+        let back = read_samples(&path, 4).unwrap();
+        assert_eq!(back[0], s);
+        std::fs::remove_file(&path).ok();
+    }
+}

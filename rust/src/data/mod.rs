@@ -1,0 +1,72 @@
+//! Data substrate: sample streams, synthetic generators, dataset specs,
+//! libsvm text IO, samplers and block packing.
+//!
+//! The paper's setting is *stochastic* optimization: each machine has a
+//! "button" producing i.i.d. samples. `SampleStream` is that button;
+//! `synth` provides planted-model implementations; `table3` mirrors the
+//! paper's four evaluation datasets (Appendix E, Table 3) with synthetic
+//! equivalents (substitution documented in DESIGN.md §3); `libsvm` gives a
+//! real on-disk format so the end-to-end driver exercises a genuine
+//! load/parse path; `blocks` packs samples into the fixed-shape padded
+//! blocks the AOT artifacts consume.
+
+pub mod blocks;
+pub mod libsvm;
+pub mod sampler;
+pub mod synth;
+pub mod table3;
+
+/// Loss family. Matches the artifact name tags (`sq` / `log`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Loss {
+    Squared,
+    Logistic,
+}
+
+impl Loss {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Loss::Squared => "sq",
+            Loss::Logistic => "log",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Loss> {
+        match s {
+            "sq" | "squared" => Some(Loss::Squared),
+            "log" | "logistic" => Some(Loss::Logistic),
+            _ => None,
+        }
+    }
+}
+
+/// One labeled example. `x` has the dataset's native dimension; block
+/// packing pads features to the artifact dimension.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub x: Vec<f32>,
+    pub y: f32,
+}
+
+/// The i.i.d. "button": draw samples from the underlying distribution.
+pub trait SampleStream {
+    fn dim(&self) -> usize;
+    fn loss(&self) -> Loss;
+    fn draw(&mut self) -> Sample;
+
+    fn draw_many(&mut self, n: usize) -> Vec<Sample> {
+        (0..n).map(|_| self.draw()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_tags_round_trip() {
+        assert_eq!(Loss::parse(Loss::Squared.tag()), Some(Loss::Squared));
+        assert_eq!(Loss::parse(Loss::Logistic.tag()), Some(Loss::Logistic));
+        assert_eq!(Loss::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,218 @@
+//! Samplers: the streaming "button" and without-replacement epochs.
+//!
+//! Algorithm 1 step 2 requires processing a local batch *without
+//! replacement* (the Shamir 2016 analysis DSVRG relies on);
+//! `WithoutReplacement` provides permutation epochs over a materialized
+//! slice. `Reservoir`-style streaming is not needed — machines either
+//! stream (minibatch methods) or hold a fixed shard (ERM methods).
+
+use super::Sample;
+use crate::util::prng::Prng;
+
+/// Permutation epochs over `n` indices: `next()` yields each index exactly
+/// once per epoch, reshuffling between epochs.
+pub struct WithoutReplacement {
+    perm: Vec<usize>,
+    pos: usize,
+    rng: Prng,
+}
+
+impl WithoutReplacement {
+    pub fn new(n: usize, rng: Prng) -> Self {
+        let mut s = Self { perm: (0..n).collect(), pos: 0, rng };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.perm);
+        self.pos = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Next index; starts a fresh permutation when the epoch ends.
+    pub fn next_index(&mut self) -> usize {
+        if self.pos >= self.perm.len() {
+            self.reshuffle();
+        }
+        let i = self.perm[self.pos];
+        self.pos += 1;
+        i
+    }
+
+    /// Draw `k` indices without replacement *within* the current epoch
+    /// (spilling into a fresh epoch if fewer than `k` remain).
+    pub fn next_batch(&mut self, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.next_index()).collect()
+    }
+
+    /// Remaining indices in the current epoch.
+    pub fn remaining_in_epoch(&self) -> usize {
+        self.perm.len() - self.pos
+    }
+}
+
+/// A materialized dataset exposed as a `SampleStream` via permutation
+/// epochs (the Figure-3 protocol: minibatches drawn from a fixed training
+/// half). Used by the libsvm-loading end-to-end driver.
+pub struct VecStream {
+    samples: Vec<super::Sample>,
+    order: WithoutReplacement,
+    loss: super::Loss,
+}
+
+impl VecStream {
+    pub fn new(samples: Vec<super::Sample>, loss: super::Loss, rng: Prng) -> Self {
+        assert!(!samples.is_empty(), "VecStream needs at least one sample");
+        let order = WithoutReplacement::new(samples.len(), rng);
+        Self { samples, order, loss }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+impl super::SampleStream for VecStream {
+    fn dim(&self) -> usize {
+        self.samples[0].x.len()
+    }
+
+    fn loss(&self) -> super::Loss {
+        self.loss
+    }
+
+    fn draw(&mut self) -> super::Sample {
+        self.samples[self.order.next_index()].clone()
+    }
+}
+
+/// Split a materialized dataset into `m` contiguous shards (machine i gets
+/// shard i). Sizes differ by at most one.
+pub fn shard_ranges(n: usize, m: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(m > 0);
+    let base = n / m;
+    let extra = n % m;
+    let mut out = Vec::with_capacity(m);
+    let mut start = 0;
+    for i in 0..m {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// View of a machine's shard.
+pub fn shard<'a>(samples: &'a [Sample], ranges: &[std::ops::Range<usize>], i: usize) -> &'a [Sample] {
+    &samples[ranges[i].clone()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::forall;
+
+    #[test]
+    fn epoch_is_permutation() {
+        let mut s = WithoutReplacement::new(13, Prng::seed_from_u64(1));
+        let mut seen = vec![false; 13];
+        for _ in 0..13 {
+            let i = s.next_index();
+            assert!(!seen[i], "index {i} repeated within epoch");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut s = WithoutReplacement::new(32, Prng::seed_from_u64(2));
+        let e1: Vec<usize> = (0..32).map(|_| s.next_index()).collect();
+        let e2: Vec<usize> = (0..32).map(|_| s.next_index()).collect();
+        assert_ne!(e1, e2);
+        let mut e2s = e2.clone();
+        e2s.sort_unstable();
+        assert_eq!(e2s, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_epoch_permutation_any_n() {
+        forall(24, |rng| {
+            let n = 1 + rng.next_below(100);
+            let mut s = WithoutReplacement::new(n, Prng::seed_from_u64(rng.next_u64()));
+            let mut seen = vec![false; n];
+            for _ in 0..n {
+                let i = s.next_index();
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        });
+    }
+
+    #[test]
+    fn prop_shards_partition() {
+        forall(32, |rng| {
+            let n = rng.next_below(1000);
+            let m = 1 + rng.next_below(16);
+            let ranges = shard_ranges(n, m);
+            assert_eq!(ranges.len(), m);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            // contiguous & ordered
+            let mut expect_start = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect_start);
+                expect_start = r.end;
+            }
+            // balanced
+            let (min, max) = ranges
+                .iter()
+                .fold((usize::MAX, 0), |(lo, hi), r| (lo.min(r.len()), hi.max(r.len())));
+            assert!(max - min <= 1);
+        });
+    }
+
+    #[test]
+    fn vec_stream_draws_epoch_permutations() {
+        use crate::data::{Loss, Sample, SampleStream};
+        let samples: Vec<Sample> =
+            (0..5).map(|i| Sample { x: vec![i as f32], y: i as f32 }).collect();
+        let mut vs = VecStream::new(samples, Loss::Squared, Prng::seed_from_u64(1));
+        assert_eq!(vs.dim(), 1);
+        assert_eq!(vs.len(), 5);
+        let epoch: Vec<f32> = (0..5).map(|_| vs.draw().y).collect();
+        let mut sorted = epoch.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one sample")]
+    fn vec_stream_rejects_empty() {
+        use crate::data::Loss;
+        let _ = VecStream::new(vec![], Loss::Squared, Prng::seed_from_u64(1));
+    }
+
+    #[test]
+    fn batch_spills_into_next_epoch() {
+        let mut s = WithoutReplacement::new(4, Prng::seed_from_u64(3));
+        let batch = s.next_batch(6);
+        assert_eq!(batch.len(), 6);
+        // first 4 are a permutation
+        let mut first4 = batch[..4].to_vec();
+        first4.sort_unstable();
+        assert_eq!(first4, vec![0, 1, 2, 3]);
+    }
+}

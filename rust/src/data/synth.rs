@@ -1,0 +1,247 @@
+//! Planted-model synthetic data streams.
+//!
+//! Least squares: x ~ N(0, Σ) with geometric eigenvalue decay (controlled
+//! condition number), y = <x, w*> + σ·ξ. Logistic: labels in {-1, +1} with
+//! P(y=+1|x) = sigmoid(<x, w*>) plus optional label flip noise. Features
+//! are scaled so rows have expected squared norm ≈ `row_norm²`, which pins
+//! the smoothness β ≈ row_norm² for the theory-driven parameter choices
+//! (footnote 4: "we can equivalently assume ‖x‖² ≤ β").
+
+use super::{Loss, Sample, SampleStream};
+use crate::util::prng::Prng;
+
+/// Seed-mixing tag separating the planted-model stream from the sample
+/// stream (both derive from the user's single seed).
+const WSTAR_TAG: u64 = 0x5753_5441_5221; // "WSTAR!"
+
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub dim: usize,
+    pub loss: Loss,
+    /// norm of the planted model w*
+    pub model_norm: f64,
+    /// covariance eigenvalue ratio first/last (1.0 = isotropic)
+    pub cond: f64,
+    /// additive label noise std (squared loss) / label flip prob (logistic)
+    pub noise: f64,
+    /// target sqrt(E‖x‖²) (≈ sqrt of smoothness β)
+    pub row_norm: f64,
+}
+
+impl SynthSpec {
+    /// With E‖x‖² = 1 spread over d coordinates, a random-direction w* of
+    /// norm W gives signal variance E⟨x,w*⟩² ≈ W²/d — so W must scale with
+    /// sqrt(d) to keep the signal-to-noise ratio dimension-independent.
+    pub fn signal_norm(dim: usize, target_z_std: f64) -> f64 {
+        target_z_std * (dim as f64).sqrt()
+    }
+
+    pub fn least_squares(dim: usize) -> Self {
+        Self {
+            dim,
+            loss: Loss::Squared,
+            model_norm: Self::signal_norm(dim, 1.0),
+            cond: 4.0,
+            noise: 0.1,
+            row_norm: 1.0,
+        }
+    }
+
+    pub fn logistic(dim: usize) -> Self {
+        Self {
+            dim,
+            loss: Loss::Logistic,
+            model_norm: Self::signal_norm(dim, 2.0),
+            cond: 4.0,
+            noise: 0.02,
+            row_norm: 1.0,
+        }
+    }
+
+    /// Smoothness of the induced instantaneous loss (used by `theory`).
+    /// Squared loss: β = E‖x‖²; logistic: β = E‖x‖²/4.
+    pub fn beta(&self) -> f64 {
+        let b = self.row_norm * self.row_norm;
+        match self.loss {
+            Loss::Squared => b,
+            Loss::Logistic => b / 4.0,
+        }
+    }
+}
+
+/// Deterministic stream of planted-model samples.
+pub struct SynthStream {
+    spec: SynthSpec,
+    w_star: Vec<f32>,
+    /// per-coordinate feature scales (sqrt of covariance eigenvalues),
+    /// normalized so E‖x‖² = row_norm².
+    scales: Vec<f32>,
+    rng: Prng,
+}
+
+impl SynthStream {
+    /// `seed` controls both the planted model and the stream; use
+    /// `fork_stream` to give machines independent streams over the *same*
+    /// planted model.
+    pub fn new(spec: SynthSpec, seed: u64) -> Self {
+        let mut model_rng = Prng::seed_from_u64(seed ^ WSTAR_TAG);
+        let mut w: Vec<f32> = (0..spec.dim).map(|_| model_rng.next_normal_f32()).collect();
+        let norm = (w.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()).sqrt();
+        let target = spec.model_norm;
+        for v in &mut w {
+            *v = (*v as f64 / norm * target) as f32;
+        }
+        // geometric decay of covariance eigenvalues: lambda_j ∝ cond^(−j/(d−1))
+        let d = spec.dim;
+        let mut scales: Vec<f32> = (0..d)
+            .map(|j| {
+                let t = if d > 1 { j as f64 / (d - 1) as f64 } else { 0.0 };
+                (spec.cond.powf(-t)).sqrt() as f32
+            })
+            .collect();
+        // normalize E‖x‖² = Σ scales² to row_norm²
+        let sum_sq: f64 = scales.iter().map(|&s| (s as f64) * (s as f64)).sum();
+        let fix = (spec.row_norm * spec.row_norm / sum_sq).sqrt();
+        for s in &mut scales {
+            *s = (*s as f64 * fix) as f32;
+        }
+        Self { spec, w_star: w, scales, rng: Prng::seed_from_u64(seed) }
+    }
+
+    /// Same planted model, independent sample stream (per-machine streams).
+    pub fn fork_stream(&self, tag: u64) -> SynthStream {
+        SynthStream {
+            spec: self.spec.clone(),
+            w_star: self.w_star.clone(),
+            scales: self.scales.clone(),
+            rng: self.rng.split(tag.wrapping_add(1)),
+        }
+    }
+
+    pub fn w_star(&self) -> &[f32] {
+        &self.w_star
+    }
+
+    pub fn spec(&self) -> &SynthSpec {
+        &self.spec
+    }
+
+    /// Bayes-optimal population objective value (squared loss only):
+    /// E[0.5 (y − x·w*)²] = σ²/2.
+    pub fn bayes_objective(&self) -> Option<f64> {
+        match self.spec.loss {
+            Loss::Squared => Some(0.5 * self.spec.noise * self.spec.noise),
+            Loss::Logistic => None,
+        }
+    }
+}
+
+impl SampleStream for SynthStream {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec.loss
+    }
+
+    fn draw(&mut self) -> Sample {
+        let d = self.spec.dim;
+        let mut x = vec![0.0f32; d];
+        for j in 0..d {
+            x[j] = self.rng.next_normal_f32() * self.scales[j];
+        }
+        let z: f64 = x.iter().zip(&self.w_star).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let y = match self.spec.loss {
+            Loss::Squared => (z + self.spec.noise * self.rng.next_normal()) as f32,
+            Loss::Logistic => {
+                let p = 1.0 / (1.0 + (-z).exp());
+                let mut y = if self.rng.next_f64() < p { 1.0 } else { -1.0 };
+                if self.rng.next_f64() < self.spec.noise {
+                    y = -y;
+                }
+                y
+            }
+        };
+        Sample { x, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = SynthStream::new(SynthSpec::least_squares(8), 1);
+        let mut b = SynthStream::new(SynthSpec::least_squares(8), 1);
+        for _ in 0..10 {
+            assert_eq!(a.draw(), b.draw());
+        }
+    }
+
+    #[test]
+    fn forked_streams_share_model_but_differ() {
+        let a = SynthStream::new(SynthSpec::least_squares(8), 2);
+        let mut f1 = a.fork_stream(0);
+        let mut f2 = a.fork_stream(1);
+        assert_eq!(f1.w_star(), a.w_star());
+        assert_ne!(f1.draw(), f2.draw());
+    }
+
+    #[test]
+    fn model_norm_is_controlled() {
+        let s = SynthStream::new(SynthSpec::least_squares(32), 3);
+        let n: f64 = s.w_star().iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((n - 32f64.sqrt()).abs() < 1e-4, "norm {n}");
+    }
+
+    #[test]
+    fn signal_strength_is_dimension_independent() {
+        for d in [8usize, 64] {
+            let mut s = SynthStream::new(SynthSpec::least_squares(d), 9);
+            let n = 4000;
+            let mut zz = 0.0;
+            for _ in 0..n {
+                let smp = s.draw();
+                let z: f64 = smp
+                    .x
+                    .iter()
+                    .zip(s.w_star())
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                zz += z * z;
+            }
+            let var = zz / n as f64;
+            assert!((0.4..2.5).contains(&var), "d={d}: signal var {var}");
+        }
+    }
+
+    #[test]
+    fn row_norms_match_target() {
+        let mut s = SynthStream::new(SynthSpec::least_squares(16), 4);
+        let n = 4000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let smp = s.draw();
+            acc += smp.x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        }
+        let mean_sq = acc / n as f64;
+        assert!((mean_sq - 1.0).abs() < 0.1, "E||x||^2 = {mean_sq}");
+    }
+
+    #[test]
+    fn logistic_labels_are_signs() {
+        let mut s = SynthStream::new(SynthSpec::logistic(8), 5);
+        for _ in 0..100 {
+            let smp = s.draw();
+            assert!(smp.y == 1.0 || smp.y == -1.0);
+        }
+    }
+
+    #[test]
+    fn squared_loss_noise_floor() {
+        let s = SynthStream::new(SynthSpec::least_squares(8), 6);
+        assert!((s.bayes_objective().unwrap() - 0.005).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,30 @@
+//! # mbprox
+//!
+//! Reproduction of *"Memory and Communication Efficient Distributed
+//! Stochastic Optimization with Minibatch-Prox"* (Wang, Wang & Srebro,
+//! 2017) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the distributed coordinator — simulated
+//!   m-machine cluster, collectives with exact round/vector accounting,
+//!   the minibatch-prox outer loop, MP-DSVRG / MP-DANE inner solvers, and
+//!   every baseline from Table 1.
+//! - **L2/L1 (`python/compile`)**: JAX graphs calling Pallas kernels,
+//!   AOT-lowered once to HLO text (`make artifacts`) and executed here via
+//!   the PJRT CPU client — Python is never on the request path.
+//!
+//! Start with [`runtime::Engine`] + [`algos`]; see `examples/quickstart.rs`.
+
+pub mod accounting;
+pub mod algos;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod objective;
+pub mod runtime;
+pub mod theory;
+pub mod util;
+
+pub use runtime::Engine;

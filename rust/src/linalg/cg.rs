@@ -1,0 +1,209 @@
+//! Conjugate gradient over an abstract SPD operator.
+//!
+//! Used by (a) the exact minibatch-prox solver for least squares — the prox
+//! subproblem `min_w phi_I(w) + gamma/2||w - w_prev||^2` has optimality
+//! system `((1/n) X^T X + gamma I) w = (1/n) X^T y + gamma w_prev`, whose
+//! matvec is the AOT `nm_sq_*` artifact — and (b) the DiSCO-style
+//! distributed Newton baseline (distributed CG on the regularized Hessian).
+
+use super::{axpy, copy, dot};
+
+/// An SPD linear operator `v -> A v`. Implementations report how many
+/// "vector operations" one application costs so callers can meter compute
+/// in the paper's units (see `accounting`).
+pub trait LinearOp {
+    fn dim(&self) -> usize;
+    fn apply(&mut self, v: &[f32], out: &mut [f32]);
+    /// Cost of one apply, in vector operations (paper units).
+    fn cost_vec_ops(&self) -> u64 {
+        1
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub iters: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+    pub vec_ops: u64,
+}
+
+/// Solve `A x = b` to relative residual `tol`, starting from `x` in place.
+pub fn solve<A: LinearOp>(
+    a: &mut A,
+    b: &[f32],
+    x: &mut [f32],
+    tol: f64,
+    max_iters: usize,
+) -> CgResult {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+    let mut vec_ops: u64 = 0;
+
+    let mut r = vec![0.0f32; n];
+    let mut ap = vec![0.0f32; n];
+    // r = b - A x
+    a.apply(x, &mut ap);
+    vec_ops += a.cost_vec_ops();
+    for i in 0..n {
+        r[i] = b[i] - ap[i];
+    }
+    vec_ops += 1;
+    let mut p = r.clone();
+    let b_norm = dot(b, b).sqrt().max(1e-30);
+    let mut rs_old = dot(&r, &r);
+    vec_ops += 1;
+
+    let mut iters = 0;
+    while iters < max_iters {
+        let res = rs_old.sqrt() / b_norm;
+        if res <= tol {
+            return CgResult { iters, residual_norm: res, converged: true, vec_ops };
+        }
+        a.apply(&p, &mut ap);
+        vec_ops += a.cost_vec_ops();
+        let p_ap = dot(&p, &ap);
+        if p_ap <= 0.0 {
+            // not SPD (or numerical breakdown) — stop with what we have
+            break;
+        }
+        let alpha = (rs_old / p_ap) as f32;
+        axpy(alpha, &p, x);
+        axpy(-alpha, &ap, &mut r);
+        vec_ops += 2;
+        let rs_new = dot(&r, &r);
+        vec_ops += 1;
+        let beta = (rs_new / rs_old) as f32;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        vec_ops += 1;
+        rs_old = rs_new;
+        iters += 1;
+    }
+    let res = rs_old.sqrt() / b_norm;
+    CgResult { iters, residual_norm: res, converged: res <= tol, vec_ops }
+}
+
+/// Dense symmetric operator for tests and small problems.
+pub struct DenseOp {
+    pub a: Vec<f32>, // row-major n x n
+    pub n: usize,
+}
+
+impl LinearOp for DenseOp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&mut self, v: &[f32], out: &mut [f32]) {
+        for i in 0..self.n {
+            let row = &self.a[i * self.n..(i + 1) * self.n];
+            out[i] = dot(row, v) as f32;
+        }
+    }
+}
+
+/// `v -> (M^T M / rows + gamma I) v` given an explicit matrix — the
+/// rust-side reference for the `nm_sq` artifact path (used in tests).
+pub struct NormalEqOp {
+    pub m: Vec<f32>, // row-major rows x n
+    pub rows: usize,
+    pub n: usize,
+    pub gamma: f32,
+}
+
+impl LinearOp for NormalEqOp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&mut self, v: &[f32], out: &mut [f32]) {
+        let mut u = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            u[r] = dot(&self.m[r * self.n..(r + 1) * self.n], v) as f32;
+        }
+        let scale = 1.0 / self.rows as f32;
+        for j in 0..self.n {
+            let mut s = 0.0f64;
+            for r in 0..self.rows {
+                s += self.m[r * self.n + j] as f64 * u[r] as f64;
+            }
+            out[j] = s as f32 * scale + self.gamma * v[j];
+        }
+    }
+}
+
+#[allow(dead_code)]
+fn _use_copy(dst: &mut [f32], src: &[f32]) {
+    copy(src, dst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, forall, normal_vec};
+
+    #[test]
+    fn solves_identity() {
+        let n = 5;
+        let mut a = DenseOp {
+            a: (0..n * n).map(|i| if i % (n + 1) == 0 { 1.0 } else { 0.0 }).collect(),
+            n,
+        };
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut x = vec![0.0; n];
+        let res = solve(&mut a, &b, &mut x, 1e-8, 50);
+        assert!(res.converged);
+        assert_close(&x, &b, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn prop_solves_random_spd_systems() {
+        forall(24, |rng| {
+            let n = 2 + rng.next_below(12);
+            // A = B^T B / n + 0.5 I is SPD
+            let rows = n + 4;
+            let m = normal_vec(rng, rows * n);
+            let mut op = NormalEqOp { m, rows, n, gamma: 0.5 };
+            let xstar = normal_vec(rng, n);
+            let mut b = vec![0.0f32; n];
+            op.apply(&xstar, &mut b);
+            let mut x = vec![0.0f32; n];
+            let res = solve(&mut op, &b, &mut x, 1e-9, 200);
+            assert!(res.converged, "residual {}", res.residual_norm);
+            assert_close(&x, &xstar, 1e-2, 1e-3);
+        });
+    }
+
+    #[test]
+    fn prop_monotone_residual_target() {
+        forall(12, |rng| {
+            let n = 4;
+            let rows = 8;
+            let m = normal_vec(rng, rows * n);
+            let mut op = NormalEqOp { m, rows, n, gamma: 1.0 };
+            let b = normal_vec(rng, n);
+            let mut x_loose = vec![0.0f32; n];
+            let loose = solve(&mut op, &b, &mut x_loose, 1e-2, 100);
+            let mut x_tight = vec![0.0f32; n];
+            let tight = solve(&mut op, &b, &mut x_tight, 1e-8, 100);
+            assert!(tight.iters >= loose.iters);
+            assert!(tight.residual_norm <= loose.residual_norm + 1e-12);
+        });
+    }
+
+    #[test]
+    fn counts_vec_ops() {
+        let n = 4;
+        let mut a = DenseOp {
+            a: (0..n * n).map(|i| if i % (n + 1) == 0 { 2.0 } else { 0.0 }).collect(),
+            n,
+        };
+        let b = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let res = solve(&mut a, &b, &mut x, 1e-10, 50);
+        assert!(res.vec_ops > 0);
+    }
+}

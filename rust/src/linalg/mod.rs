@@ -1,0 +1,160 @@
+//! Dense vector operations for the coordinator hot path.
+//!
+//! Everything the paper counts as a "vector operation" at the L3 layer goes
+//! through here, so callers can meter them uniformly (see `accounting`).
+//! Kept deliberately simple: contiguous `f32` slices, no blocking — the
+//! heavy matrix work lives in the AOT HLO artifacts, not here.
+
+pub mod cg;
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// <x, y>
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+/// ||x||_2
+#[inline]
+pub fn nrm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ||x - y||_2
+#[inline]
+pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = x - y (allocating)
+pub fn sub(x: &[f32], y: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a - b).collect()
+}
+
+/// out = x + y (allocating)
+pub fn add(x: &[f32], y: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a + b).collect()
+}
+
+/// dst = src
+#[inline]
+pub fn copy(src: &[f32], dst: &mut [f32]) {
+    dst.copy_from_slice(src);
+}
+
+/// Weighted running average accumulator: acc = acc + w * x
+pub struct WeightedAvg {
+    sum: Vec<f64>,
+    total_w: f64,
+}
+
+impl WeightedAvg {
+    pub fn new(dim: usize) -> Self {
+        Self { sum: vec![0.0; dim], total_w: 0.0 }
+    }
+
+    pub fn add(&mut self, w: f64, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.sum.len());
+        for (s, &xi) in self.sum.iter_mut().zip(x) {
+            *s += w * xi as f64;
+        }
+        self.total_w += w;
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total_w
+    }
+
+    pub fn mean(&self) -> Vec<f32> {
+        if self.total_w == 0.0 {
+            return self.sum.iter().map(|_| 0.0).collect();
+        }
+        self.sum.iter().map(|&s| (s / self.total_w) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, assert_close_scalar, forall, normal_vec};
+
+    #[test]
+    fn axpy_matches_manual() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_close_scalar(nrm2(&[3.0, 4.0]), 5.0, 1e-12, 0.0);
+    }
+
+    #[test]
+    fn prop_dot_symmetric_and_linear() {
+        forall(32, |rng| {
+            let n = 1 + rng.next_below(64);
+            let x = normal_vec(rng, n);
+            let y = normal_vec(rng, n);
+            let z = normal_vec(rng, n);
+            assert_close_scalar(dot(&x, &y), dot(&y, &x), 1e-9, 1e-9);
+            let xy = add(&x, &y);
+            assert_close_scalar(dot(&xy, &z), dot(&x, &z) + dot(&y, &z), 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn prop_dist_triangle_inequality() {
+        forall(32, |rng| {
+            let n = 1 + rng.next_below(32);
+            let x = normal_vec(rng, n);
+            let y = normal_vec(rng, n);
+            let z = normal_vec(rng, n);
+            assert!(dist2(&x, &z) <= dist2(&x, &y) + dist2(&y, &z) + 1e-5);
+        });
+    }
+
+    #[test]
+    fn weighted_avg_mean() {
+        let mut acc = WeightedAvg::new(2);
+        acc.add(1.0, &[1.0, 0.0]);
+        acc.add(3.0, &[5.0, 4.0]);
+        assert_close(&acc.mean(), &[4.0, 3.0], 1e-6, 1e-6);
+        assert_eq!(acc.total_weight(), 4.0);
+    }
+
+    #[test]
+    fn weighted_avg_empty_is_zero() {
+        let acc = WeightedAvg::new(3);
+        assert_eq!(acc.mean(), vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! mbprox CLI — run distributed stochastic optimization experiments.
+//!
+//! Usage:
+//!   mbprox run   [key=value ...]        run one method (see --help)
+//!   mbprox sweep [key=value ...]        sweep b_local over a log grid
+//!   mbprox list                         list registered methods
+//!   mbprox info                         engine / artifact information
+//!
+//! Common keys: method, m, b_local, n_budget, loss (sq|log), dim, seed,
+//! eval_samples, eval_every, dataset (codrna|covtype|kddcup99|year),
+//! config=<path> loads a key=value file first.
+
+use anyhow::{anyhow, Result};
+use mbprox::config::{ExperimentConfig, KvConfig};
+use mbprox::coordinator::{Runner, METHODS};
+use mbprox::metrics;
+
+fn parse_cfg(args: &[String]) -> Result<ExperimentConfig> {
+    let mut kv = KvConfig::default();
+    // load config file first if given
+    for a in args {
+        if let Some(path) = a.strip_prefix("config=") {
+            kv = KvConfig::load(std::path::Path::new(path))?;
+        }
+    }
+    let overrides: Vec<String> =
+        args.iter().filter(|a| !a.starts_with("config=")).cloned().collect();
+    let kv = ExperimentConfig::apply_overrides(kv, &overrides)?;
+    ExperimentConfig::from_kv(&kv)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let mut runner = Runner::from_env()?;
+    eprintln!(
+        "# engine platform={} artifacts={}",
+        runner.engine.platform(),
+        runner.engine.manifest().artifacts.len()
+    );
+    let result = runner.run(&cfg)?;
+    print!("{}", metrics::resource_table(&[&result]));
+    if !result.curve.is_empty() {
+        println!("\n# trajectory");
+        print!("{}", metrics::curve_csv(&result));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let base = parse_cfg(args)?;
+    let mut runner = Runner::from_env()?;
+    let mut results = Vec::new();
+    let mut b = 64usize;
+    let b_max = base.n_budget / base.m;
+    while b <= b_max {
+        let cfg = ExperimentConfig { b_local: b, ..base.clone() };
+        match runner.run(&cfg) {
+            Ok(r) => results.push(r),
+            Err(e) => eprintln!("b={b}: {e}"),
+        }
+        b *= 4;
+    }
+    let refs: Vec<&_> = results.iter().collect();
+    print!("{}", metrics::resource_table(&refs));
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let runner = Runner::from_env()?;
+    let m = runner.engine.manifest();
+    println!("platform: {}", runner.engine.platform());
+    println!("artifacts dir: {}", m.dir.display());
+    println!("block rows: {}", m.block);
+    println!("dims: {:?}", m.dims);
+    for a in &m.artifacts {
+        println!("  {:<16} kind={:?} d={} outputs={:?}", a.name, a.kind, a.d, a.outputs);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("list") => {
+            for m in METHODS {
+                println!("{m}");
+            }
+            Ok(())
+        }
+        Some("info") => cmd_info(),
+        Some("help") | Some("--help") | None => {
+            println!(
+                "mbprox — Minibatch-Prox distributed stochastic optimization\n\n\
+                 subcommands:\n  run [key=value ...]\n  sweep [key=value ...]\n  list\n  info\n\n\
+                 keys: method m b_local n_budget loss dim seed eval_samples eval_every dataset\n\
+                 methods: {}",
+                METHODS.join(" ")
+            );
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (try help)")),
+    }
+}

@@ -1,0 +1,156 @@
+//! Run records and report output: ascii tables, CSV and JSON writers for
+//! the benches/examples (consumed by EXPERIMENTS.md).
+
+use crate::algos::RunResult;
+use crate::util::json::escape_str;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render a set of runs as the Table-1-style resource table.
+pub fn resource_table(runs: &[&RunResult]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<34} {:>10} {:>12} {:>14} {:>10} {:>12} {:>12}",
+        "method", "samples", "comm_rounds", "vec_ops", "memory", "sim_time_s", "objective"
+    );
+    for r in runs {
+        let obj = r
+            .final_objective
+            .map(|o| format!("{o:.6}"))
+            .unwrap_or_else(|| "-".to_string());
+        let _ = writeln!(
+            out,
+            "{:<34} {:>10} {:>12} {:>14} {:>10} {:>12.4} {:>12}",
+            truncate(&r.name, 34),
+            r.report.total_samples,
+            r.report.comm_rounds,
+            r.report.vec_ops,
+            r.report.peak_vectors,
+            r.sim_time_s,
+            obj
+        );
+    }
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n - 1])
+    }
+}
+
+/// CSV of a run's trajectory curve.
+pub fn curve_csv(run: &RunResult) -> String {
+    let mut out = String::from("outer_iter,samples,comm_rounds,vec_ops,objective\n");
+    for p in &run.curve {
+        let obj = p.objective.map(|o| o.to_string()).unwrap_or_default();
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{}",
+            p.outer_iter, p.samples_total, p.comm_rounds, p.vec_ops, obj
+        );
+    }
+    out
+}
+
+/// JSON record of a run (hand-rolled writer; schema is stable for tooling).
+pub fn run_json(run: &RunResult) -> String {
+    let mut out = String::from("{");
+    let _ = write!(out, "\"name\": {}, ", escape_str(&run.name));
+    let _ = write!(
+        out,
+        "\"samples\": {}, \"comm_rounds\": {}, \"vec_ops\": {}, \"memory\": {}, ",
+        run.report.total_samples, run.report.comm_rounds, run.report.vec_ops,
+        run.report.peak_vectors
+    );
+    let _ = write!(out, "\"sim_time_s\": {}, ", run.sim_time_s);
+    match run.final_objective {
+        Some(o) => {
+            let _ = write!(out, "\"objective\": {o}, ");
+        }
+        None => {
+            let _ = write!(out, "\"objective\": null, ");
+        }
+    }
+    let _ = write!(out, "\"curve\": [");
+    for (i, p) in run.curve.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let obj = p.objective.map(|o| o.to_string()).unwrap_or_else(|| "null".into());
+        let _ = write!(
+            out,
+            "{{\"t\": {}, \"samples\": {}, \"rounds\": {}, \"objective\": {obj}}}",
+            p.outer_iter, p.samples_total, p.comm_rounds
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write text to a file, creating parents.
+pub fn write_report(path: &Path, text: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::ResourceReport;
+    use crate::algos::CurvePoint;
+    use crate::util::json::Json;
+
+    fn dummy_run() -> RunResult {
+        RunResult {
+            name: "test-method".into(),
+            w: vec![0.0; 4],
+            report: ResourceReport {
+                m: 2,
+                total_samples: 100,
+                comm_rounds: 5,
+                vectors_sent: 5,
+                vec_ops: 50,
+                peak_vectors: 12,
+            },
+            curve: vec![CurvePoint {
+                outer_iter: 1,
+                samples_total: 50,
+                comm_rounds: 2,
+                vec_ops: 25,
+                objective: Some(0.25),
+            }],
+            sim_time_s: 0.5,
+            final_objective: Some(0.125),
+        }
+    }
+
+    #[test]
+    fn table_contains_rows() {
+        let run = dummy_run();
+        let t = resource_table(&[&run]);
+        assert!(t.contains("test-method"));
+        assert!(t.contains("100"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let c = curve_csv(&dummy_run());
+        let mut lines = c.lines();
+        assert!(lines.next().unwrap().starts_with("outer_iter"));
+        assert_eq!(lines.next().unwrap(), "1,50,2,25,0.25");
+    }
+
+    #[test]
+    fn json_is_parseable_by_our_parser() {
+        let j = run_json(&dummy_run());
+        let v = Json::parse(&j).expect("valid json");
+        assert_eq!(v.get("samples").unwrap().as_usize(), Some(100));
+        assert_eq!(v.get("curve").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! Distributed objective: the bridge between algorithms and the engine.
+//!
+//! Wraps per-machine block sets and provides the paper's primitive
+//! operations with exact resource accounting:
+//!   - local block gradients (vec ops charged to the owning machine)
+//!   - distributed mean gradients (all-reduce round + per-machine compute)
+//!   - population-objective estimation on a held-out evaluation set
+//!
+//! Units: computing the gradient of `n` samples costs `n` vector
+//! operations (the paper's convention); one collective is one round.
+
+use crate::accounting::ClusterMeter;
+use crate::comm::Network;
+use crate::data::blocks::{pack_all, Block};
+use crate::data::{Loss, Sample};
+use crate::linalg;
+use crate::runtime::exec::{BlockLits, GradOut};
+use crate::runtime::Engine;
+use anyhow::Result;
+
+/// One machine's current minibatch (or ERM shard), packed for the engine.
+pub struct MachineBatch {
+    pub lits: Vec<BlockLits>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl MachineBatch {
+    pub fn pack(engine: &Engine, engine_d: usize, samples: &[Sample]) -> Result<MachineBatch> {
+        let blocks: Vec<Block> = pack_all(samples, engine_d);
+        let lits = blocks
+            .iter()
+            .map(|b| BlockLits::from_block(engine, b))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MachineBatch { lits, n: samples.len(), d: engine_d })
+    }
+
+    pub fn empty(engine_d: usize) -> MachineBatch {
+        MachineBatch { lits: Vec::new(), n: 0, d: engine_d }
+    }
+}
+
+/// Sum-form gradient over one machine's batch. Charges `n` vec ops.
+pub fn local_grad_sum(
+    engine: &mut Engine,
+    loss: Loss,
+    batch: &MachineBatch,
+    w: &[f32],
+    meter: &mut crate::accounting::ResourceMeter,
+) -> Result<GradOut> {
+    let mut g = vec![0.0f32; batch.d];
+    let mut lsum = 0.0;
+    let mut cnt = 0.0;
+    for blk in &batch.lits {
+        let out = engine.grad_block(loss, blk, w)?;
+        linalg::axpy(1.0, &out.grad_sum, &mut g);
+        lsum += out.loss_sum;
+        cnt += out.count;
+    }
+    meter.add_vec_ops(batch.n as u64);
+    Ok(GradOut { grad_sum: g, loss_sum: lsum, count: cnt })
+}
+
+/// Distributed mean gradient over all machines' batches:
+/// one weighted all-reduce round; returns (mean_grad, mean_loss, total_n).
+pub fn distributed_mean_grad(
+    engine: &mut Engine,
+    loss: Loss,
+    machines: &[MachineBatch],
+    w: &[f32],
+    net: &mut Network,
+    meter: &mut ClusterMeter,
+) -> Result<(Vec<f32>, f64, f64)> {
+    let m = machines.len();
+    let d = machines[0].d;
+    let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
+    let mut weights: Vec<f64> = Vec::with_capacity(m);
+    let mut loss_total = 0.0;
+    let mut n_total = 0.0;
+    for (i, batch) in machines.iter().enumerate() {
+        let out = local_grad_sum(engine, loss, batch, w, meter.machine(i))?;
+        let cnt = out.count.max(0.0);
+        // local *mean* gradient, weighted by count in the reduce
+        let mut gm = out.grad_sum;
+        if cnt > 0.0 {
+            linalg::scale(1.0 / cnt as f32, &mut gm);
+        }
+        locals.push(gm);
+        weights.push(cnt);
+        loss_total += out.loss_sum;
+        n_total += cnt;
+    }
+    if locals.is_empty() {
+        return Ok((vec![0.0; d], 0.0, 0.0));
+    }
+    net.all_reduce_weighted(meter, &weights, &mut locals);
+    let mean_loss = if n_total > 0.0 { loss_total / n_total } else { 0.0 };
+    Ok((locals.pop().unwrap(), mean_loss, n_total))
+}
+
+/// Held-out estimator of the population objective phi(w).
+pub struct Evaluator {
+    pub loss: Loss,
+    pub batch: MachineBatch,
+}
+
+impl Evaluator {
+    pub fn new(
+        engine: &Engine,
+        engine_d: usize,
+        loss: Loss,
+        samples: &[Sample],
+    ) -> Result<Evaluator> {
+        Ok(Evaluator { loss, batch: MachineBatch::pack(engine, engine_d, samples)? })
+    }
+
+    /// Mean instantaneous loss over the evaluation set (not metered:
+    /// evaluation is experimenter-side, not part of the algorithm).
+    pub fn objective(&self, engine: &mut Engine, w: &[f32]) -> Result<f64> {
+        let mut lsum = 0.0;
+        let mut cnt = 0.0;
+        for blk in &self.batch.lits {
+            let out = engine.grad_block(self.loss, blk, w)?;
+            lsum += out.loss_sum;
+            cnt += out.count;
+        }
+        Ok(if cnt > 0.0 { lsum / cnt } else { 0.0 })
+    }
+}
+
+/// Prox-regularized objective value on a batch set (for tests/diagnostics):
+/// phi_I(w) + gamma/2 ||w - wprev||^2 over the union of machine batches.
+pub fn prox_objective(
+    engine: &mut Engine,
+    loss: Loss,
+    machines: &[MachineBatch],
+    w: &[f32],
+    wprev: &[f32],
+    gamma: f64,
+) -> Result<f64> {
+    let mut lsum = 0.0;
+    let mut cnt = 0.0;
+    for batch in machines {
+        for blk in &batch.lits {
+            let out = engine.grad_block(loss, blk, w)?;
+            lsum += out.loss_sum;
+            cnt += out.count;
+        }
+    }
+    let phi = if cnt > 0.0 { lsum / cnt } else { 0.0 };
+    let dist = linalg::dist2(w, wprev);
+    Ok(phi + 0.5 * gamma * dist * dist)
+}

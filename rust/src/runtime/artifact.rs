@@ -1,0 +1,206 @@
+//! Artifact manifest: parses `artifacts/manifest.json` emitted by
+//! `python/compile/aot.py` and exposes the typed registry the engine
+//! compiles from.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub loss: String,
+    pub d: usize,
+    pub block: usize,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub outputs: Vec<String>,
+    pub sha256: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Grad,
+    Svrg,
+    Saga,
+    NormalMatvec,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "grad" => ArtifactKind::Grad,
+            "svrg" => ArtifactKind::Svrg,
+            "saga" => ArtifactKind::Saga,
+            "nm" => ArtifactKind::NormalMatvec,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block: usize,
+    pub dims: Vec<usize>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", mpath.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", mpath.display()))?;
+        let block =
+            v.get("block").and_then(Json::as_usize).ok_or_else(|| anyhow!("missing 'block'"))?;
+        let dims: Vec<usize> = v
+            .get("dims")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing 'dims'"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing 'artifacts'"))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let arg_shapes = a
+                .get("arg_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing arg_shapes"))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|xs| xs.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
+                        .ok_or_else(|| anyhow!("bad arg shape"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing outputs"))?
+                .iter()
+                .filter_map(Json::as_str)
+                .map(str::to_string)
+                .collect();
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                file: dir.join(get_str("file")?),
+                kind: ArtifactKind::parse(&get_str("kind")?)?,
+                loss: get_str("loss")?,
+                d: get_usize("d")?,
+                block: get_usize("block")?,
+                arg_shapes,
+                outputs,
+                sha256: get_str("sha256")?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), block, dims, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Canonical artifact name for (kind, loss-tag, dim).
+    pub fn name_for(kind: ArtifactKind, loss_tag: &str, d: usize) -> String {
+        let k = match kind {
+            ArtifactKind::Grad => "grad",
+            ArtifactKind::Svrg => "svrg",
+            ArtifactKind::Saga => "saga",
+            ArtifactKind::NormalMatvec => "nm",
+        };
+        format!("{k}_{loss_tag}_d{d}")
+    }
+
+    /// Smallest supported artifact dim >= `native_dim`.
+    pub fn padded_dim(&self, native_dim: usize) -> Result<usize> {
+        self.dims
+            .iter()
+            .copied()
+            .filter(|&d| d >= native_dim)
+            .min()
+            .ok_or_else(|| anyhow!("no artifact dim >= {native_dim} (have {:?})", self.dims))
+    }
+}
+
+/// Default artifacts directory: $MBPROX_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("MBPROX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"block": 8, "dims": [2],
+                "artifacts": [
+                  {"name": "grad_sq_d2", "file": "grad_sq_d2.hlo.txt",
+                   "kind": "grad", "loss": "sq", "d": 2, "block": 8,
+                   "arg_shapes": [[8,2],[8],[8],[2]],
+                   "outputs": ["grad_sum","loss_sum","count"],
+                   "sha256": "x"}]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_manifest() {
+        let dir = std::env::temp_dir().join("mbprox_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.block, 8);
+        assert_eq!(m.dims, vec![2]);
+        let a = m.find("grad_sq_d2").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Grad);
+        assert_eq!(a.arg_shapes[0], vec![8, 2]);
+        assert_eq!(a.outputs.len(), 3);
+    }
+
+    #[test]
+    fn padded_dim_selection() {
+        let dir = std::env::temp_dir().join("mbprox_manifest_test");
+        write_fixture(&dir);
+        let mut m = Manifest::load(&dir).unwrap();
+        m.dims = vec![64, 128];
+        assert_eq!(m.padded_dim(8).unwrap(), 64);
+        assert_eq!(m.padded_dim(64).unwrap(), 64);
+        assert_eq!(m.padded_dim(65).unwrap(), 128);
+        assert!(m.padded_dim(129).is_err());
+    }
+
+    #[test]
+    fn name_for_matches_python() {
+        assert_eq!(Manifest::name_for(ArtifactKind::Grad, "sq", 64), "grad_sq_d64");
+        assert_eq!(Manifest::name_for(ArtifactKind::Svrg, "log", 128), "svrg_log_d128");
+        assert_eq!(Manifest::name_for(ArtifactKind::Saga, "sq", 64), "saga_sq_d64");
+        assert_eq!(Manifest::name_for(ArtifactKind::NormalMatvec, "sq", 64), "nm_sq_d64");
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load(Path::new("/definitely/not/here")).is_err());
+    }
+}

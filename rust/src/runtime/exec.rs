@@ -1,0 +1,145 @@
+//! Typed artifact wrappers: the coordinator-facing API over the engine.
+//!
+//! Three call families map 1:1 onto the artifact kinds:
+//!   - `grad_block`        -> (grad_sum[d], loss_sum, count)
+//!   - `svrg_block`/`saga_block` -> (x_out[d], x_avg[d])
+//!   - `nm_block`          -> (X^T diag(mask) X v, count)
+//!
+//! Block operands are uploaded to the device **once** per block
+//! (`BlockLits`) and reused across every artifact call in the inner loops
+//! (DSVRG/SAGA sweeps, CG iterations); only the small per-call vectors
+//! (iterates, scalars) are uploaded fresh. This is both the §Perf hot-path
+//! optimization and the workaround for the literal-input `execute` leak
+//! (see runtime::Engine::execute).
+
+use super::{lit_first, lit_to_vec, ArtifactKind, Engine, Manifest};
+use crate::data::blocks::Block;
+use crate::data::Loss;
+use anyhow::{ensure, Result};
+
+/// Output of one block-gradient call (sum over valid rows + count).
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    pub grad_sum: Vec<f32>,
+    pub loss_sum: f64,
+    pub count: f64,
+}
+
+/// Device-resident (X, y, mask) operands for one block, uploaded once.
+pub struct BlockLits {
+    pub x: xla::PjRtBuffer,
+    pub y: xla::PjRtBuffer,
+    pub mask: xla::PjRtBuffer,
+    pub valid: usize,
+    pub d: usize,
+}
+
+impl BlockLits {
+    pub fn from_block(engine: &Engine, block: &Block) -> Result<BlockLits> {
+        let rows = block.rows();
+        Ok(BlockLits {
+            x: engine.upload_mat(&block.x, rows, block.d)?,
+            y: engine.upload(&block.y)?,
+            mask: engine.upload(&block.mask)?,
+            valid: block.valid,
+            d: block.d,
+        })
+    }
+}
+
+impl Engine {
+    fn artifact_for(&self, kind: ArtifactKind, loss: Loss, d: usize) -> String {
+        Manifest::name_for(kind, loss.tag(), d)
+    }
+
+    /// Fused block gradient+loss via the `grad_{loss}_d{d}` artifact.
+    pub fn grad_block(&mut self, loss: Loss, blk: &BlockLits, w: &[f32]) -> Result<GradOut> {
+        ensure!(w.len() == blk.d, "w dim {} != block dim {}", w.len(), blk.d);
+        let name = self.artifact_for(ArtifactKind::Grad, loss, blk.d);
+        let w_b = self.upload(w)?;
+        let outs = self.execute(&name, &[&blk.x, &blk.y, &blk.mask, &w_b])?;
+        ensure!(outs.len() == 3, "grad artifact returned {} outputs", outs.len());
+        Ok(GradOut {
+            grad_sum: lit_to_vec(&outs[0])?,
+            loss_sum: lit_first(&outs[1])? as f64,
+            count: lit_first(&outs[2])? as f64,
+        })
+    }
+
+    /// One without-replacement SVRG sweep via `svrg_{loss}_d{d}`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn svrg_block(
+        &mut self,
+        loss: Loss,
+        blk: &BlockLits,
+        x0: &[f32],
+        z: &[f32],
+        mu: &[f32],
+        wprev: &[f32],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.vr_block(ArtifactKind::Svrg, loss, blk, x0, z, mu, wprev, gamma, eta)
+    }
+
+    /// One without-replacement SAGA sweep via `saga_{loss}_d{d}` — the
+    /// paper's Appendix-E local solver. Same interface as `svrg_block`
+    /// except the fourth vector is the quadratic `center` (the kernel
+    /// initializes its gradient table at the snapshot `z` itself).
+    #[allow(clippy::too_many_arguments)]
+    pub fn saga_block(
+        &mut self,
+        loss: Loss,
+        blk: &BlockLits,
+        x0: &[f32],
+        z: &[f32],
+        mu: &[f32],
+        center: &[f32],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.vr_block(ArtifactKind::Saga, loss, blk, x0, z, mu, center, gamma, eta)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn vr_block(
+        &mut self,
+        kind: ArtifactKind,
+        loss: Loss,
+        blk: &BlockLits,
+        x0: &[f32],
+        z: &[f32],
+        mu: &[f32],
+        center: &[f32],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(
+            x0.len() == blk.d && z.len() == blk.d && mu.len() == blk.d && center.len() == blk.d
+        );
+        let name = self.artifact_for(kind, loss, blk.d);
+        let x0_b = self.upload(x0)?;
+        let z_b = self.upload(z)?;
+        let mu_b = self.upload(mu)?;
+        let c_b = self.upload(center)?;
+        let g_b = self.upload(&[gamma])?;
+        let e_b = self.upload(&[eta])?;
+        let outs = self.execute(
+            &name,
+            &[&blk.x, &blk.y, &blk.mask, &x0_b, &z_b, &mu_b, &c_b, &g_b, &e_b],
+        )?;
+        ensure!(outs.len() == 2, "{name} returned {} outputs", outs.len());
+        Ok((lit_to_vec(&outs[0])?, lit_to_vec(&outs[1])?))
+    }
+
+    /// Regularized-normal-equation matvec building block (squared loss):
+    /// returns (X^T diag(mask) X v, count).
+    pub fn nm_block(&mut self, blk: &BlockLits, v: &[f32]) -> Result<(Vec<f32>, f64)> {
+        ensure!(v.len() == blk.d);
+        let name = self.artifact_for(ArtifactKind::NormalMatvec, Loss::Squared, blk.d);
+        let v_b = self.upload(v)?;
+        let outs = self.execute(&name, &[&blk.x, &blk.mask, &v_b])?;
+        ensure!(outs.len() == 2);
+        Ok((lit_to_vec(&outs[0])?, lit_first(&outs[1])? as f64))
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path. Pattern follows /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
+//! execute`. Executables are cached per artifact; Python never runs here.
+
+pub mod artifact;
+pub mod exec;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_ns: u128,
+    pub executions: u64,
+    pub execute_ns: u128,
+    /// host<->device literal conversions (perf counter for §Perf)
+    pub literal_conversions: u64,
+}
+
+/// The PJRT engine: one CPU client + a compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Load the manifest and lazily compile artifacts on first use.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        Ok(Engine { client, manifest, execs: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    /// Load from the default artifacts dir ($MBPROX_ARTIFACTS or ./artifacts).
+    pub fn from_env() -> Result<Engine> {
+        Engine::new(&default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The underlying PJRT client (for device-buffer management).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn block_rows(&self) -> usize {
+        self.manifest.block
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Eagerly compile every artifact (used by the integration tests and
+    /// long-running examples to pay compile cost up front).
+    pub fn warmup_all(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Get (compiling if needed) the executable for `name`.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(name) {
+            let meta = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", meta.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.stats.compiles += 1;
+            self.stats.compile_ns += t0.elapsed().as_nanos();
+            self.execs.insert(name.to_string(), exe);
+        }
+        Ok(self.execs.get(name).unwrap())
+    }
+
+    /// Execute artifact `name` with device-buffer inputs; returns the
+    /// decomposed output tuple as literals.
+    ///
+    /// NOTE: always goes through `execute_b` (buffer inputs). The crate's
+    /// literal-input `execute` leaks its internal literal->buffer
+    /// conversions (~70 KB/call measured — see EXPERIMENTS.md §Perf), so
+    /// block operands are uploaded once (`upload`/`upload_mat`) and small
+    /// per-call vectors are uploaded fresh, with rust-side Drop reclaiming
+    /// them deterministically.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.executable(name)?; // ensure compiled (borrow gymnastics)
+        let t0 = Instant::now();
+        let exe = self.execs.get(name).unwrap();
+        let out = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let mut lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output of {name}: {e:?}"))?;
+        self.stats.executions += 1;
+        self.stats.execute_ns += t0.elapsed().as_nanos();
+        self.stats.literal_conversions += 1;
+        // lowered with return_tuple=True: output is always a tuple
+        let parts = lit.decompose_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        Ok(parts)
+    }
+
+    /// Upload a 1-D f32 vector to the device.
+    pub fn upload(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .map_err(|e| anyhow!("uploading vec[{}]: {e:?}", data.len()))
+    }
+
+    /// Upload a row-major matrix to the device.
+    pub fn upload_mat(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        anyhow::ensure!(data.len() == rows * cols, "matrix upload size mismatch");
+        self.client
+            .buffer_from_host_buffer(data, &[rows, cols], None)
+            .map_err(|e| anyhow!("uploading mat[{rows}x{cols}]: {e:?}"))
+    }
+
+    /// Mean execute latency in nanoseconds (for perf reports).
+    pub fn mean_execute_ns(&self) -> f64 {
+        if self.stats.executions == 0 {
+            0.0
+        } else {
+            self.stats.execute_ns as f64 / self.stats.executions as f64
+        }
+    }
+}
+
+/// Literal construction helpers.
+pub fn lit_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+pub fn lit_mat(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "matrix literal size mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+pub fn lit_scalar1(x: f32) -> xla::Literal {
+    xla::Literal::vec1(&[x])
+}
+
+/// Read a single f32 from a length-1 literal.
+pub fn lit_first(l: &xla::Literal) -> Result<f32> {
+    let v = lit_to_vec(l)?;
+    v.first().copied().context("empty literal")
+}

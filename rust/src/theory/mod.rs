@@ -1,0 +1,264 @@
+//! Closed-form parameter selection and resource predictions from the
+//! paper's theory (Theorems 4/5/7/8/10/14/16, Tables 1–2).
+//!
+//! Everything is expressed in the paper's primitives: Lipschitz constant
+//! `L`, norm bound `B`, smoothness `beta`, machines `m`, target accuracy
+//! `eps`. Algorithms take their stepsizes/loop counts from here; the
+//! table/figure benches print these predictions next to the measured
+//! counters so paper-vs-measured comparisons are mechanical.
+
+/// Problem-level constants for the theory formulas.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemConsts {
+    pub l_lipschitz: f64,
+    pub b_norm: f64,
+    pub beta_smooth: f64,
+    pub m: usize,
+}
+
+impl ProblemConsts {
+    /// Statistically optimal sample complexity `n(eps) = L^2 B^2 / eps^2`.
+    pub fn n_eps(&self, eps: f64) -> f64 {
+        let lb = self.l_lipschitz * self.b_norm;
+        (lb / eps).powi(2)
+    }
+
+    /// Inverse: accuracy achievable from n samples, `eps(n) = LB/sqrt(n)`.
+    pub fn eps_of_n(&self, n: f64) -> f64 {
+        self.l_lipschitz * self.b_norm / n.sqrt()
+    }
+}
+
+/// Minibatch-prox outer-loop parameters (Theorem 7 / Theorem 10).
+#[derive(Clone, Copy, Debug)]
+pub struct MbProxPlan {
+    /// outer iterations T = n / (b m)
+    pub t_outer: usize,
+    /// prox regularization gamma = sqrt(8 T / (b m)) * L / B
+    pub gamma: f64,
+    /// global minibatch size per outer iteration (b m)
+    pub bm: usize,
+}
+
+/// Plan the outer loop for total sample budget `n`, per-machine minibatch
+/// `b_local`, `m` machines.
+pub fn mbprox_plan(c: &ProblemConsts, n: f64, b_local: usize) -> MbProxPlan {
+    let bm = b_local * c.m;
+    let t = (n / bm as f64).max(1.0);
+    let gamma = (8.0 * t / bm as f64).sqrt() * c.l_lipschitz / c.b_norm;
+    MbProxPlan { t_outer: t.round() as usize, gamma, bm }
+}
+
+/// MP-DSVRG inner-loop parameters (Theorem 10).
+#[derive(Clone, Copy, Debug)]
+pub struct DsvrgPlan {
+    /// DSVRG iterations per prox solve, K = O(log n)
+    pub k_inner: usize,
+    /// local batches per machine, p_i: one pass over b/p samples per inner
+    /// iteration suffices to contract by a constant factor
+    pub p_batches: usize,
+    /// SVRG stepsize eta = c / (beta + gamma)
+    pub eta: f64,
+}
+
+pub fn dsvrg_plan(c: &ProblemConsts, plan: &MbProxPlan, b_local: usize, n: f64) -> DsvrgPlan {
+    // condition number of the prox subproblem
+    let kappa = (c.beta_smooth + plan.gamma) / plan.gamma;
+    // batch size >= condition number => p = floor(b / kappa), at least 1
+    let p = ((b_local as f64) / kappa).floor().max(1.0) as usize;
+    let k = (n.max(2.0).ln()).ceil() as usize;
+    DsvrgPlan { k_inner: k.max(1), p_batches: p, eta: 0.1 / (c.beta_smooth + plan.gamma) }
+}
+
+/// MP-DANE parameters (Theorems 14/16). `b_star` splits the two regimes.
+#[derive(Clone, Copy, Debug)]
+pub struct DanePlan {
+    pub kappa: f64,
+    pub r_outer: usize,
+    pub k_inner: usize,
+    pub b_star: f64,
+}
+
+pub fn dane_b_star(c: &ProblemConsts, n: f64, d: usize) -> f64 {
+    let log_md = ((c.m * d).max(2) as f64).ln();
+    n * c.l_lipschitz.powi(2)
+        / (32.0 * (c.m as f64).powi(2) * c.beta_smooth.powi(2) * c.b_norm.powi(2) * log_md)
+}
+
+pub fn dane_plan(c: &ProblemConsts, plan: &MbProxPlan, b_local: usize, n: f64, d: usize) -> DanePlan {
+    let b_star = dane_b_star(c, n, d);
+    let log_n = n.max(2.0).ln();
+    if (b_local as f64) <= b_star {
+        DanePlan { kappa: 0.0, r_outer: 1, k_inner: log_n.ceil() as usize, b_star }
+    } else {
+        let log_dm = ((c.m * d).max(2) as f64).ln();
+        let kappa =
+            (16.0 * c.beta_smooth * (log_dm / b_local as f64).sqrt() - plan.gamma).max(0.0);
+        let r = ((b_local as f64).powf(0.25) * (c.m as f64).sqrt()
+            * (c.beta_smooth * c.b_norm).sqrt()
+            / (n.powf(0.25) * c.l_lipschitz.sqrt())
+            * log_n)
+            .ceil()
+            .max(1.0) as usize;
+        DanePlan { kappa, r_outer: r, k_inner: log_n.ceil() as usize, b_star }
+    }
+}
+
+/// Minibatch SGD stepsize (Proposition 13): gamma_t = beta + sqrt(4T/b)·L/B
+/// (inverse stepsize). Returns gamma (use step 1/gamma).
+pub fn minibatch_sgd_gamma(c: &ProblemConsts, t_total: usize, bm: usize) -> f64 {
+    c.beta_smooth + (4.0 * t_total as f64 / bm as f64).sqrt() * c.l_lipschitz / c.b_norm
+}
+
+/// Cotter et al. maximal minibatch size for accelerated minibatch SGD:
+/// bm_max ≍ n^{3/4} / sqrt(B) (total across machines).
+pub fn accel_sgd_max_bm(c: &ProblemConsts, n: f64) -> f64 {
+    n.powf(0.75) / c.b_norm.sqrt()
+}
+
+/// ERM regularization for the batch methods (§1): nu = L/(B sqrt(n)).
+pub fn erm_nu(c: &ProblemConsts, n: f64) -> f64 {
+    c.l_lipschitz / (c.b_norm * n.sqrt())
+}
+
+/// Table-1 predicted resources (per machine, ignoring constants/logs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PredictedRow {
+    pub communication: f64,
+    pub computation: f64,
+    pub memory: f64,
+}
+
+pub fn predict_mp_dsvrg(c: &ProblemConsts, n: f64, b_local: usize) -> PredictedRow {
+    let log_n = n.max(2.0).ln();
+    PredictedRow {
+        communication: n / (c.m as f64 * b_local as f64) * log_n,
+        computation: n / c.m as f64 * log_n,
+        memory: b_local as f64,
+    }
+}
+
+pub fn predict_dsvrg_erm(c: &ProblemConsts, n: f64) -> PredictedRow {
+    let log_n = n.max(2.0).ln();
+    PredictedRow {
+        communication: log_n, // O(1) iterations x O(1) rounds, up to log factors
+        computation: n / c.m as f64 * log_n,
+        memory: n / c.m as f64,
+    }
+}
+
+pub fn predict_acc_minibatch_sgd(c: &ProblemConsts, n: f64) -> PredictedRow {
+    PredictedRow {
+        communication: c.b_norm.sqrt() * n.powf(0.25),
+        computation: n / c.m as f64,
+        memory: 1.0,
+    }
+}
+
+pub fn predict_mp_dane(c: &ProblemConsts, n: f64, b_local: usize, d: usize) -> PredictedRow {
+    let b_star = dane_b_star(c, n, d);
+    let m = c.m as f64;
+    let b = b_local as f64;
+    if b <= b_star {
+        PredictedRow { communication: n / (m * b), computation: n / m, memory: b }
+    } else {
+        PredictedRow {
+            communication: c.b_norm.sqrt() * n.powf(0.75) / (m.sqrt() * b.powf(0.75)),
+            computation: c.b_norm.sqrt() * n.powf(0.75) * b.powf(0.25) / m.sqrt(),
+            memory: b,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> ProblemConsts {
+        ProblemConsts { l_lipschitz: 1.0, b_norm: 1.0, beta_smooth: 1.0, m: 4 }
+    }
+
+    #[test]
+    fn n_eps_round_trip() {
+        let c = consts();
+        let n = c.n_eps(0.01);
+        assert!((c.eps_of_n(n) - 0.01).abs() < 1e-12);
+        assert_eq!(n, 10_000.0);
+    }
+
+    #[test]
+    fn mbprox_plan_respects_bt_product() {
+        let c = consts();
+        let n = 65_536.0;
+        for b in [16usize, 64, 256] {
+            let p = mbprox_plan(&c, n, b);
+            // T * b * m == n
+            assert_eq!(p.t_outer * b * c.m, n as usize);
+            // gamma = sqrt(8T/(bm)) L/B
+            let expect = (8.0 * p.t_outer as f64 / p.bm as f64).sqrt();
+            assert!((p.gamma - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gamma_decreases_with_b() {
+        let c = consts();
+        let n = 65_536.0;
+        let g1 = mbprox_plan(&c, n, 16).gamma;
+        let g2 = mbprox_plan(&c, n, 256).gamma;
+        assert!(g2 < g1);
+    }
+
+    #[test]
+    fn dsvrg_plan_batches_shrink_with_conditioning() {
+        let c = consts();
+        let n = 65_536.0;
+        let plan_small_b = mbprox_plan(&c, n, 64);
+        let ds = dsvrg_plan(&c, &plan_small_b, 64, n);
+        assert!(ds.k_inner >= 1);
+        assert!(ds.p_batches >= 1);
+        assert!(ds.eta > 0.0 && ds.eta < 1.0);
+    }
+
+    #[test]
+    fn dane_regimes_split_at_b_star() {
+        let c = consts();
+        let n = 1.0e6;
+        let d = 64;
+        let b_star = dane_b_star(&c, n, d);
+        assert!(b_star > 0.0);
+        let below = dane_plan(&c, &mbprox_plan(&c, n, (b_star * 0.5) as usize), (b_star * 0.5) as usize, n, d);
+        assert_eq!(below.kappa, 0.0);
+        assert_eq!(below.r_outer, 1);
+        let above_b = (b_star * 4.0) as usize;
+        let above = dane_plan(&c, &mbprox_plan(&c, n, above_b), above_b, n, d);
+        assert!(above.r_outer >= 1);
+    }
+
+    #[test]
+    fn predictions_have_paper_shapes() {
+        let c = consts();
+        let n = 1.0e6;
+        // MP-DSVRG communication falls linearly in b; memory rises linearly
+        let p1 = predict_mp_dsvrg(&c, n, 100);
+        let p2 = predict_mp_dsvrg(&c, n, 1000);
+        assert!((p1.communication / p2.communication - 10.0).abs() < 1e-9);
+        assert!((p2.memory / p1.memory - 10.0).abs() < 1e-9);
+        // computation independent of b
+        assert!((p1.computation - p2.computation).abs() < 1e-9);
+        // DSVRG-ERM memory = n/m
+        assert_eq!(predict_dsvrg_erm(&c, n).memory, n / 4.0);
+    }
+
+    #[test]
+    fn sgd_gamma_exceeds_beta() {
+        let c = consts();
+        assert!(minibatch_sgd_gamma(&c, 100, 64) > c.beta_smooth);
+    }
+
+    #[test]
+    fn erm_nu_scales_inverse_sqrt_n() {
+        let c = consts();
+        assert!((erm_nu(&c, 10_000.0) - 0.01).abs() < 1e-12);
+    }
+}

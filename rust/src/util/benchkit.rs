@@ -1,0 +1,130 @@
+//! In-tree micro-benchmark harness (offline image: no criterion).
+//!
+//! Provides warmup + repeated timed runs with median/mean/p10/p90 stats and
+//! a stable text report format consumed by EXPERIMENTS.md. Each paper
+//! table/figure bench under `rust/benches/` uses this via `harness = false`.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} median={:>12} mean={:>12} p10={:>12} p90={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` measured runs after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    stats_from(name, &mut samples)
+}
+
+/// Time a closure that itself reports how many inner operations it ran;
+/// returns per-op stats. Useful when one run is too fast to time alone.
+pub fn bench_batched<F: FnMut() -> usize>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let n = f().max(1);
+        samples.push(t0.elapsed().as_nanos() as f64 / n as f64);
+    }
+    stats_from(name, &mut samples)
+}
+
+fn stats_from(name: &str, samples: &mut [f64]) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        median_ns: pick(0.5),
+        p10_ns: pick(0.1),
+        p90_ns: pick(0.9),
+        min_ns: samples[0],
+    }
+}
+
+/// Section header for bench output files.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench("noop-ish", 2, 32, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.p10_ns <= s.p90_ns);
+        assert_eq!(s.iters, 32);
+    }
+
+    #[test]
+    fn batched_divides_by_count() {
+        let s = bench_batched("batch", 1, 8, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+            1000
+        });
+        assert!(s.median_ns < 1e6);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e4).ends_with("us"));
+        assert!(fmt_ns(5.0e7).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,8 @@
+//! Dependency-light utility substrates (the image is offline; see
+//! Cargo.toml): JSON parsing, deterministic splittable PRNG, and in-tree
+//! property-test / micro-bench harnesses.
+
+pub mod benchkit;
+pub mod json;
+pub mod prng;
+pub mod testkit;

@@ -1,0 +1,103 @@
+//! In-tree property-test harness (offline image: no proptest).
+//!
+//! `forall(cases, |prng| ...)` runs a closure over `cases` independent PRNG
+//! streams derived from a fixed root seed; on failure it reports the case
+//! seed so the exact case replays with `replay(seed, ...)`. Shrinking is
+//! intentionally out of scope — cases are seed-addressed and deterministic.
+
+use super::prng::Prng;
+
+pub const DEFAULT_CASES: usize = 64;
+const ROOT_SEED: u64 = 0x4d42_5052_4f58; // "MBPROX"
+
+/// Run `f` over `cases` independent deterministic PRNG streams; panic with
+/// the offending seed on the first failure.
+pub fn forall<F: FnMut(&mut Prng)>(cases: usize, mut f: F) {
+    let root = Prng::seed_from_u64(ROOT_SEED);
+    for case in 0..cases {
+        let mut rng = root.split(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed on case {case} (replay with forall_case({case})): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn forall_case<F: FnMut(&mut Prng)>(case: usize, mut f: F) {
+    let root = Prng::seed_from_u64(ROOT_SEED);
+    let mut rng = root.split(case as u64);
+    f(&mut rng);
+}
+
+/// Random vector helpers used across property tests.
+pub fn normal_vec(rng: &mut Prng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal_f32()).collect()
+}
+
+pub fn uniform_vec(rng: &mut Prng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| lo + (hi - lo) * rng.next_f32()).collect()
+}
+
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "element {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+pub fn assert_close_scalar(x: f64, y: f64, rtol: f64, atol: f64) {
+    let tol = atol + rtol * y.abs().max(x.abs());
+    assert!((x - y).abs() <= tol, "{x} vs {y} (|diff|={} > tol={tol})", (x - y).abs());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall(10, |_| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn forall_reports_failures() {
+        forall(8, |rng| {
+            // fails on some case with overwhelming probability
+            assert!(rng.next_f64() < 0.5);
+        });
+    }
+
+    #[test]
+    fn replay_matches_forall_stream() {
+        let mut from_forall = Vec::new();
+        forall(3, |rng| from_forall.push(rng.next_u64()));
+        for (case, expected) in from_forall.iter().enumerate() {
+            forall_case(case, |rng| assert_eq!(rng.next_u64(), *expected));
+        }
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(&[1.0], &[2.0], 1e-6, 1e-6);
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration: every method converges on small planted problems, and the
+//! measured resource profiles satisfy the Table-1 ordering relations.
+
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::runtime::Engine;
+
+fn runner() -> Runner {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runner::new(Engine::new(&dir).expect("run `make artifacts` first"))
+}
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        m: 4,
+        b_local: 256,
+        n_budget: 16_384,
+        loss: Loss::Squared,
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 2048,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// The planted least-squares problem has Bayes objective sigma^2/2 = 0.005;
+/// starting objective at w=0 is ~0.5 (E[y^2]/2). A converging method must
+/// close most of that gap with 16k samples.
+fn assert_converged(obj: f64, floor: f64, start: f64, frac: f64, name: &str) {
+    let progress = (start - obj) / (start - floor);
+    assert!(
+        progress > frac,
+        "{name}: objective {obj:.5} (floor {floor:.5}, start {start:.5}) progress {progress:.3} <= {frac}"
+    );
+}
+
+#[test]
+fn mp_dsvrg_converges_squared() {
+    let mut r = runner();
+    let cfg = ExperimentConfig { method: "mp-dsvrg".into(), ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    let obj = res.final_objective.unwrap();
+    assert_converged(obj, 0.005, 0.5, 0.9, "mp-dsvrg");
+    // memory: each machine holds ~b_local sample vectors at peak
+    let mem = res.report.peak_vectors;
+    assert!(mem >= 256 && mem < 2 * 256 + 16, "peak memory {mem} not ~b");
+}
+
+#[test]
+fn mp_dane_converges_squared() {
+    let mut r = runner();
+    let cfg = ExperimentConfig { method: "mp-dane".into(), ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.9, "mp-dane");
+}
+
+#[test]
+fn mp_dane_saga_converges_squared() {
+    let mut r = runner();
+    let cfg = ExperimentConfig { method: "mp-dane-saga".into(), ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.9, "mp-dane-saga");
+}
+
+#[test]
+fn mp_exact_converges_squared() {
+    let mut r = runner();
+    let cfg = ExperimentConfig { method: "mp-exact".into(), ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.9, "mp-exact");
+}
+
+#[test]
+fn mp_oneshot_converges_squared() {
+    let mut r = runner();
+    let cfg = ExperimentConfig { method: "mp-oneshot".into(), ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.8, "mp-oneshot");
+}
+
+#[test]
+fn minibatch_sgd_converges_squared() {
+    let mut r = runner();
+    let cfg = ExperimentConfig { method: "minibatch-sgd".into(), b_local: 64, ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    // theory caps minibatch SGD here: the beta B^2 / (2T) term of Prop. 13
+    // is ~0.5/T at B=8, so 0.7 progress is the right bar at this budget
+    assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.7, "minibatch-sgd");
+}
+
+#[test]
+fn accel_sgd_converges_squared() {
+    let mut r = runner();
+    let cfg =
+        ExperimentConfig { method: "acc-minibatch-sgd".into(), b_local: 64, ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.7, "acc-minibatch-sgd");
+}
+
+#[test]
+fn local_sgd_converges_squared() {
+    let mut r = runner();
+    let cfg = ExperimentConfig { method: "local-sgd".into(), m: 1, ..small_cfg() };
+    let res = r.run(&cfg).unwrap();
+    assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.7, "local-sgd");
+    assert_eq!(res.report.comm_rounds, 0, "single-machine method must not communicate");
+}
+
+#[test]
+fn erm_methods_converge_squared() {
+    let mut r = runner();
+    for method in ["dsvrg-erm", "dane-erm", "agd-erm", "disco-erm"] {
+        let cfg = ExperimentConfig { method: method.into(), ..small_cfg() };
+        let res = r.run(&cfg).unwrap();
+        assert_converged(res.final_objective.unwrap(), 0.005, 0.5, 0.8, method);
+        // batch methods hold their shard for the whole run: memory ~= n/m
+        let expect = (cfg.n_budget / cfg.m) as u64;
+        assert!(
+            res.report.peak_vectors >= expect,
+            "{method}: peak {} < shard size {expect}",
+            res.report.peak_vectors
+        );
+    }
+}
+
+#[test]
+fn logistic_methods_converge() {
+    let mut r = runner();
+    for method in ["mp-dsvrg", "mp-dane", "minibatch-sgd"] {
+        // minibatch SGD cannot use b=256 without stalling (the paper's
+        // core comparison!) — give it its optimal small batch instead.
+        let b_local = if method == "minibatch-sgd" { 16 } else { 256 };
+        let cfg = ExperimentConfig {
+            method: method.into(),
+            loss: Loss::Logistic,
+            n_budget: 16_384,
+            b_local,
+            ..small_cfg()
+        };
+        let res = r.run(&cfg).unwrap();
+        let obj = res.final_objective.unwrap();
+        // Logistic floor on this planted model is ~0.33 (Bayes cross
+        // entropy of sigmoid(z), z~N(0,4), +5% flips); the Theorem-7 rate
+        // bound at n=16384 with B=2 sqrt(d)=16 adds ~0.26. Start is ln 2.
+        let start = std::f64::consts::LN_2;
+        assert!(
+            obj < 0.62,
+            "{method} (logistic): objective {obj:.4} too far from floor (start {start:.4})"
+        );
+        assert!(obj > 0.25, "{method} (logistic): objective {obj:.4} below plausible floor");
+    }
+}
+
+#[test]
+fn table1_orderings_hold() {
+    // The core qualitative claims of Table 1 measured on a shared budget:
+    //   comm(mp-dsvrg, large b) < comm(mp-dsvrg, small b)
+    //   mem(mp-dsvrg, b) ~ b  and  mem(dsvrg-erm) ~ n/m >> b_small
+    //   comm(dsvrg-erm) < comm(minibatch-sgd, small b)
+    let mut r = runner();
+    let base = small_cfg();
+
+    let run = |r: &mut Runner, method: &str, b: usize| {
+        let cfg = ExperimentConfig { method: method.into(), b_local: b, ..base.clone() };
+        r.run(&cfg).unwrap()
+    };
+
+    let mp_small = run(&mut r, "mp-dsvrg", 256);
+    let mp_large = run(&mut r, "mp-dsvrg", 2048);
+    let sgd = run(&mut r, "minibatch-sgd", 64);
+    let dsvrg = run(&mut r, "dsvrg-erm", 256);
+
+    assert!(
+        mp_large.report.comm_rounds < mp_small.report.comm_rounds,
+        "larger b must reduce MP-DSVRG communication: {} vs {}",
+        mp_large.report.comm_rounds,
+        mp_small.report.comm_rounds
+    );
+    assert!(
+        mp_large.report.peak_vectors > mp_small.report.peak_vectors,
+        "larger b must increase MP-DSVRG memory"
+    );
+    assert!(
+        dsvrg.report.comm_rounds < sgd.report.comm_rounds,
+        "DSVRG-ERM must communicate less than small-b minibatch SGD: {} vs {}",
+        dsvrg.report.comm_rounds,
+        sgd.report.comm_rounds
+    );
+    assert!(
+        dsvrg.report.peak_vectors > mp_small.report.peak_vectors,
+        "DSVRG-ERM memory (n/m) must exceed MP-DSVRG memory (b)"
+    );
+}
+
+#[test]
+fn exact_and_inexact_prox_agree() {
+    // With generous inner budgets, MP-DSVRG and MP-exact trajectories land
+    // at comparable objectives (Theorem 7: inexactness doesn't change the
+    // rate when subproblems are solved accurately enough).
+    let mut r = runner();
+    let cfg_e = ExperimentConfig { method: "mp-exact".into(), ..small_cfg() };
+    let cfg_d = ExperimentConfig { method: "mp-dsvrg".into(), ..small_cfg() };
+    let oe = r.run(&cfg_e).unwrap().final_objective.unwrap();
+    let od = r.run(&cfg_d).unwrap().final_objective.unwrap();
+    let rel = (od - oe).abs() / oe;
+    assert!(rel < 0.25, "exact {oe:.5} vs dsvrg {od:.5} differ by {rel:.2}");
+}

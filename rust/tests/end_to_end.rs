@@ -1,0 +1,161 @@
+//! End-to-end system test: the Figure-3 protocol at CI scale.
+//!
+//! Generates a Table-3-like dataset, round-trips it through a real libsvm
+//! file, shards the training half across simulated machines, runs MP-DANE
+//! and minibatch SGD through the full AOT/PJRT stack, and checks the
+//! paper's qualitative claims:
+//!   (a) at large minibatch size, MP-DANE's objective beats minibatch SGD;
+//!   (b) more DANE rounds K do not hurt (diminishing returns allowed);
+//!   (c) the libsvm round trip is lossless at parse precision.
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::algos::mbprox::MinibatchProx;
+use mbprox::algos::minibatch_sgd::MinibatchSgd;
+use mbprox::algos::solvers::dane::DaneSolver;
+use mbprox::algos::{Method, RunContext};
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::coordinator::Runner;
+use mbprox::data::sampler::{shard_ranges, VecStream};
+use mbprox::data::table3::CODRNA;
+use mbprox::data::{libsvm, Loss, Sample, SampleStream};
+use mbprox::objective::Evaluator;
+use mbprox::runtime::Engine;
+use mbprox::theory::{self, ProblemConsts};
+use mbprox::util::prng::Prng;
+
+fn runner() -> Runner {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runner::new(Engine::new(&dir).expect("run `make artifacts` first"))
+}
+
+fn load_via_libsvm(n_total: usize) -> (Vec<Sample>, Vec<Sample>) {
+    let spec = &CODRNA;
+    let mut stream = spec.stream(20170707);
+    let all = stream.draw_many(n_total);
+    let dir = std::env::temp_dir().join("mbprox_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("codrna_e2e.libsvm");
+    libsvm::write_samples(&path, &all).unwrap();
+    let parsed = libsvm::read_samples(&path, spec.dim).unwrap();
+    assert_eq!(parsed.len(), all.len(), "libsvm round trip lost samples");
+    for (a, b) in all.iter().zip(&parsed).take(50) {
+        assert!((a.y - b.y).abs() < 1e-4);
+        for (xa, xb) in a.x.iter().zip(&b.x) {
+            assert!((xa - xb).abs() < 1e-4);
+        }
+    }
+    let half = parsed.len() / 2;
+    let (train, eval) = parsed.split_at(half);
+    (train.to_vec(), eval.to_vec())
+}
+
+fn run_method(
+    r: &mut Runner,
+    train: &[Sample],
+    eval: &[Sample],
+    m: usize,
+    b: usize,
+    k_dane: Option<usize>,
+) -> f64 {
+    let d = r.engine.manifest().padded_dim(train[0].x.len()).unwrap();
+    let consts = ProblemConsts {
+        l_lipschitz: 1.0,
+        b_norm: 2.0 * (CODRNA.dim as f64).sqrt(),
+        beta_smooth: 0.25,
+        m,
+    };
+    let plan = theory::mbprox_plan(&consts, train.len() as f64, b);
+    let ranges = shard_ranges(train.len(), m);
+    let root = Prng::seed_from_u64(5);
+    let streams: Vec<Box<dyn SampleStream>> = (0..m)
+        .map(|i| {
+            Box::new(VecStream::new(
+                train[ranges[i].clone()].to_vec(),
+                Loss::Logistic,
+                root.split(i as u64),
+            )) as Box<dyn SampleStream>
+        })
+        .collect();
+    let evaluator = Evaluator::new(&r.engine, d, Loss::Logistic, eval).unwrap();
+    let mut ctx = RunContext {
+        engine: &mut r.engine,
+        net: Network::new(m, NetModel::default()),
+        meter: ClusterMeter::new(m),
+        loss: Loss::Logistic,
+        d,
+        streams,
+        evaluator: Some(evaluator),
+        eval_every: 0,
+    };
+    let result = match k_dane {
+        Some(k) => {
+            let eta = 0.1 / (consts.beta_smooth + plan.gamma);
+            MinibatchProx::new(
+                "mp-dane",
+                b,
+                plan.t_outer,
+                plan.gamma,
+                DaneSolver::plain(k, eta),
+            )
+            .run(&mut ctx)
+            .unwrap()
+        }
+        None => {
+            let gamma = theory::minibatch_sgd_gamma(&consts, plan.t_outer, plan.bm);
+            MinibatchSgd { b_local: b, t_outer: plan.t_outer, gamma }.run(&mut ctx).unwrap()
+        }
+    };
+    result.final_objective.unwrap()
+}
+
+#[test]
+fn figure3_shape_holds_end_to_end() {
+    let mut r = runner();
+    let (train, eval) = load_via_libsvm(16_384);
+    let m = 4;
+    let b_large = 512;
+
+    let sgd_large = run_method(&mut r, &train, &eval, m, b_large, None);
+    let dane1_large = run_method(&mut r, &train, &eval, m, b_large, Some(1));
+    let dane4_large = run_method(&mut r, &train, &eval, m, b_large, Some(4));
+
+    // all methods leave the start point
+    let start = std::f64::consts::LN_2;
+    for (name, obj) in
+        [("sgd", sgd_large), ("dane-K1", dane1_large), ("dane-K4", dane4_large)]
+    {
+        assert!(obj < start, "{name}: {obj} did not improve from ln2");
+        assert!(obj > 0.05, "{name}: {obj} impossibly low");
+    }
+
+    // (a) large-b: MP-DANE beats minibatch SGD (the Figure-3 headline)
+    assert!(
+        dane4_large < sgd_large - 1e-3,
+        "MP-DANE(K=4) {dane4_large:.4} must beat minibatch SGD {sgd_large:.4} at b={b_large}"
+    );
+
+    // (b) more DANE rounds do not hurt (diminishing returns allowed)
+    assert!(
+        dane4_large <= dane1_large + 5e-3,
+        "K=4 ({dane4_large:.4}) should be no worse than K=1 ({dane1_large:.4})"
+    );
+}
+
+#[test]
+fn sgd_degrades_faster_with_b_than_mp_dane() {
+    let mut r = runner();
+    let (train, eval) = load_via_libsvm(16_384);
+    let m = 4;
+
+    let sgd_small = run_method(&mut r, &train, &eval, m, 32, None);
+    let sgd_large = run_method(&mut r, &train, &eval, m, 512, None);
+    let dane_small = run_method(&mut r, &train, &eval, m, 32, Some(4));
+    let dane_large = run_method(&mut r, &train, &eval, m, 512, Some(4));
+
+    let sgd_degradation = sgd_large - sgd_small;
+    let dane_degradation = dane_large - dane_small;
+    assert!(
+        dane_degradation < sgd_degradation + 1e-3,
+        "MP-DANE degradation {dane_degradation:.4} must not exceed SGD degradation {sgd_degradation:.4}"
+    );
+}
