@@ -1,0 +1,30 @@
+# Build artifacts, run the tier-1 gate, and the benches.
+#
+# `artifacts` lowers every registry kernel to HLO text + manifest.json into
+# rust/artifacts/ (the path the rust tests and benches resolve via
+# CARGO_MANIFEST_DIR). Python only runs here — never on the request path.
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: artifacts pytest test bench fmt lint clean
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS)
+
+pytest:
+	cd python && python -m pytest tests -q
+
+test: artifacts
+	cd rust && cargo test -q
+
+bench: artifacts
+	cd rust && cargo bench
+
+fmt:
+	cd rust && cargo fmt --check
+
+lint:
+	cd rust && cargo clippy --all-targets -- -D warnings
+
+clean:
+	rm -rf $(ARTIFACTS) rust/target

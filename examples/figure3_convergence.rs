@@ -104,7 +104,7 @@ fn context_from_shards<'e>(
             Box::new(VecStream::new(shard, loss, root.split(i as u64))) as Box<dyn SampleStream>
         })
         .collect();
-    let evaluator = Some(Evaluator::new(&runner.engine, d, loss, eval)?);
+    let evaluator = Some(Evaluator::new(&mut runner.engine, d, loss, eval)?);
     Ok(RunContext {
         engine: &mut runner.engine,
         net: Network::new(m, NetModel::default()),

@@ -29,7 +29,7 @@ fn main() {
     let mut stream = SynthStream::new(SynthSpec::least_squares(64), 1);
     let samples = stream.draw_many(256);
     let block = pack_block(&samples, 64);
-    let lits = BlockLits::from_block(&e, &block).unwrap();
+    let lits = BlockLits::from_block(&mut e, &block).unwrap();
     let w = vec![0.01f32; 64];
     let z = vec![0.0f32; 64];
 

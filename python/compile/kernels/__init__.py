@@ -1,7 +1,17 @@
 """L1 Pallas kernels for the minibatch-prox / MP-DSVRG / MP-DANE stack."""
 
-from .common import BLOCK, DIMS, DTYPE, LOSSES, LOSS_LOGISTIC, LOSS_SQUARED, artifact_name
-from .grad import block_grad, normal_matvec
+from .common import (
+    BLOCK,
+    DIMS,
+    DTYPE,
+    LOSSES,
+    LOSS_LOGISTIC,
+    LOSS_SQUARED,
+    MULTI_KS,
+    artifact_name,
+    multi_artifact_name,
+)
+from .grad import block_grad, block_grad_multi, normal_matvec, normal_matvec_multi
 from .saga import saga_block
 from .svrg import svrg_block
 
@@ -12,9 +22,13 @@ __all__ = [
     "LOSSES",
     "LOSS_LOGISTIC",
     "LOSS_SQUARED",
+    "MULTI_KS",
     "artifact_name",
+    "multi_artifact_name",
     "block_grad",
+    "block_grad_multi",
     "saga_block",
     "normal_matvec",
+    "normal_matvec_multi",
     "svrg_block",
 ]

@@ -29,6 +29,13 @@ LOSS_SQUARED = "sq"
 LOSS_LOGISTIC = "log"
 LOSSES: tuple[str, ...] = (LOSS_SQUARED, LOSS_LOGISTIC)
 
+# Stacked-block widths for the fused multi-block dispatch artifacts
+# (``gradm{K}`` / ``nmm{K}``): one device call consumes K blocks and
+# reduces their grad-sums on device. The rust packer greedily groups a
+# machine batch into the largest supported K with a per-block fallback
+# for the ragged tail.
+MULTI_KS: tuple[int, ...] = (4, 8)
+
 DTYPE = jnp.float32
 
 
@@ -45,3 +52,18 @@ def artifact_name(kind: str, loss: str, d: int) -> str:
     if kind == "nm" and loss != LOSS_SQUARED:
         raise ValueError("normal-equation matvec only exists for squared loss")
     return f"{kind}_{loss}_d{d}"
+
+
+def multi_artifact_name(kind: str, loss: str, d: int, k: int) -> str:
+    """Canonical fused multi-block artifact name, e.g. ``gradm4_sq_d64``.
+
+    ``kind`` is ``grad`` or ``nm`` (only the download-per-call hot paths
+    have fused variants; the VR sweep kernels stay per-block).
+    """
+    if kind not in ("grad", "nm"):
+        raise ValueError(f"no multi-block variant for kind: {kind}")
+    if k < 2:
+        raise ValueError(f"multi-block width must be >= 2, got {k}")
+    # reuse the single-block validation for loss/kind compatibility
+    artifact_name(kind, loss, d)
+    return f"{kind}m{k}_{loss}_d{d}"

@@ -12,6 +12,14 @@ The two contractions (``X @ w`` and ``X^T r``) are MXU-eligible matmuls on
 a real TPU; everything between them is a VPU epilogue.  Kernels are lowered
 with ``interpret=True`` — the CPU PJRT client cannot execute Mosaic
 custom-calls (see /opt/xla-example/README.md).
+
+The ``*_multi`` variants consume K stacked blocks (``K*B`` rows) in ONE
+dispatch: a 1-D grid walks the K sub-blocks while the outputs stay pinned
+to the same block, so the cross-block reduction of grad/loss/count happens
+*on device* and the host downloads a single ``(grad_sum, loss_sum, count)``
+tuple per group instead of one per block.  Each grid step is still one
+VMEM-resident ``(B, d)`` tile, so the multi kernels keep the same VMEM
+footprint as the single-block kernels on a real TPU.
 """
 
 from __future__ import annotations
@@ -69,6 +77,71 @@ def block_grad(loss: str, X, y, mask, w):
     )(X, y, mask, w)
 
 
+def _make_grad_multi_kernel(loss: str):
+    """One grid step = one stacked sub-block; outputs accumulate in place."""
+
+    def kernel(x_ref, y_ref, m_ref, w_ref, g_ref, loss_ref, cnt_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            g_ref[...] = jnp.zeros_like(g_ref)
+            loss_ref[...] = jnp.zeros_like(loss_ref)
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        X = x_ref[...]  # [B, d] — this grid step's sub-block
+        y = y_ref[...]
+        mask = m_ref[...]
+        w = w_ref[...]
+        if loss == LOSS_SQUARED:
+            r = (jnp.dot(X, w) - y) * mask
+            g_ref[...] += jnp.dot(r, X)
+            loss_ref[...] += 0.5 * jnp.sum(r * r, keepdims=True)
+        else:
+            t = -y * jnp.dot(X, w)
+            s = jax.nn.sigmoid(t) * mask
+            g_ref[...] += jnp.dot(-y * s, X)
+            loss_ref[...] += jnp.sum(mask * jnp.logaddexp(0.0, t), keepdims=True)
+        cnt_ref[...] += jnp.sum(mask, keepdims=True)
+
+    return kernel
+
+
+def block_grad_multi(loss: str, k: int, X, y, mask, w):
+    """Fused K-block gradient with on-device reduction.
+
+    ``X`` is ``[K*B, d]`` (K stacked blocks), ``y``/``mask`` are ``[K*B]``.
+    Returns the same ``(grad_sum[d], loss_sum[1], count[1])`` contract as
+    :func:`block_grad` summed over all K blocks — block composition stays
+    exact because padded rows are masked no-ops.
+    """
+    if loss not in (LOSS_SQUARED, LOSS_LOGISTIC):
+        raise ValueError(f"unknown loss {loss}")
+    rows, d = X.shape
+    if k <= 0 or rows % k != 0:
+        raise ValueError(f"rows {rows} not divisible into k={k} blocks")
+    b = rows // k
+    return pl.pallas_call(
+        _make_grad_multi_kernel(loss),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+        ),
+        interpret=True,
+    )(X, y, mask, w)
+
+
 def _nm_sq_kernel(x_ref, m_ref, v_ref, out_ref, cnt_ref):
     X = x_ref[...]
     mask = m_ref[...]
@@ -89,6 +162,51 @@ def normal_matvec(X, mask, v):
     b, d = X.shape
     return pl.pallas_call(
         _nm_sq_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+        ),
+        interpret=True,
+    )(X, mask, v)
+
+
+def _nm_multi_kernel(x_ref, m_ref, v_ref, out_ref, cnt_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    X = x_ref[...]
+    mask = m_ref[...]
+    v = v_ref[...]
+    u = jnp.dot(X, v) * mask
+    out_ref[...] += jnp.dot(u, X)
+    cnt_ref[...] += jnp.sum(mask, keepdims=True)
+
+
+def normal_matvec_multi(k: int, X, mask, v):
+    """Fused K-block ``X^T diag(mask) X v`` with on-device reduction.
+
+    The multi-block companion of :func:`normal_matvec`: one dispatch per K
+    stacked blocks, one downloaded ``(xtxv_sum, count)`` pair per group —
+    the exact-CG / DiSCO Hessian-vector hot path.
+    """
+    rows, d = X.shape
+    if k <= 0 or rows % k != 0:
+        raise ValueError(f"rows {rows} not divisible into k={k} blocks")
+    b = rows // k
+    return pl.pallas_call(
+        _nm_multi_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ),
         out_shape=(
             jax.ShapeDtypeStruct((d,), DTYPE),
             jax.ShapeDtypeStruct((1,), DTYPE),

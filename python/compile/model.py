@@ -23,9 +23,13 @@ from .kernels import (
     DTYPE,
     LOSSES,
     LOSS_SQUARED,
+    MULTI_KS,
     artifact_name,
     block_grad,
+    block_grad_multi,
+    multi_artifact_name,
     normal_matvec,
+    normal_matvec_multi,
     saga_block,
     svrg_block,
 )
@@ -39,11 +43,13 @@ class ArtifactSpec:
     fn: Callable
     arg_shapes: tuple[tuple[int, ...], ...]
     # metadata recorded in the manifest for the rust registry
-    kind: str = ""  # grad | svrg | nm
+    kind: str = ""  # grad | svrg | saga | nm | grad_multi | nm_multi
     loss: str = ""
     d: int = 0
     block: int = BLOCK
     outputs: tuple[str, ...] = field(default=())
+    # stacked blocks per dispatch (1 = single-block artifact)
+    k: int = 1
 
     def example_args(self):
         return tuple(jax.ShapeDtypeStruct(s, DTYPE) for s in self.arg_shapes)
@@ -85,7 +91,27 @@ def _nm_fn():
     return fn
 
 
-def build_registry(block: int = BLOCK, dims=DIMS) -> dict[str, ArtifactSpec]:
+def _grad_multi_fn(loss: str, k: int):
+    def fn(X, y, mask, w):
+        g, l, c = block_grad_multi(loss, k, X, y, mask, w)
+        return (g, l, c)
+
+    fn.__name__ = f"gradm{k}_{loss}"
+    return fn
+
+
+def _nm_multi_fn(k: int):
+    def fn(X, mask, v):
+        out, c = normal_matvec_multi(k, X, mask, v)
+        return (out, c)
+
+    fn.__name__ = f"nmm{k}_sq"
+    return fn
+
+
+def build_registry(
+    block: int = BLOCK, dims=DIMS, multi_ks=MULTI_KS
+) -> dict[str, ArtifactSpec]:
     """All artifacts, keyed by canonical name (see kernels.artifact_name)."""
     reg: dict[str, ArtifactSpec] = {}
     for d in dims:
@@ -140,6 +166,34 @@ def build_registry(block: int = BLOCK, dims=DIMS) -> dict[str, ArtifactSpec]:
             block=block,
             outputs=("xtxv_sum", "count"),
         )
+        # fused multi-block dispatch: K stacked blocks per call, grad/count
+        # reduced on device (see kernels/grad.py *_multi)
+        for k in multi_ks:
+            for loss in LOSSES:
+                name = multi_artifact_name("grad", loss, d, k)
+                reg[name] = ArtifactSpec(
+                    name=name,
+                    fn=_grad_multi_fn(loss, k),
+                    arg_shapes=((k * block, d), (k * block,), (k * block,), (d,)),
+                    kind="grad_multi",
+                    loss=loss,
+                    d=d,
+                    block=block,
+                    outputs=("grad_sum", "loss_sum", "count"),
+                    k=k,
+                )
+            name = multi_artifact_name("nm", LOSS_SQUARED, d, k)
+            reg[name] = ArtifactSpec(
+                name=name,
+                fn=_nm_multi_fn(k),
+                arg_shapes=((k * block, d), (k * block,), (d,)),
+                kind="nm_multi",
+                loss=LOSS_SQUARED,
+                d=d,
+                block=block,
+                outputs=("xtxv_sum", "count"),
+                k=k,
+            )
     return reg
 
 

@@ -23,7 +23,8 @@ def test_manifest_files_exist(emitted):
     out, manifest = emitted
     assert manifest["block"] == 8
     assert manifest["dims"] == [2]
-    assert len(manifest["artifacts"]) == 7  # (grad+svrg+saga) x2 losses + nm
+    # (grad+svrg+saga) x2 losses + nm, plus (gradm x2 losses + nmm) x2 widths
+    assert len(manifest["artifacts"]) == 13
     for a in manifest["artifacts"]:
         path = os.path.join(out, a["file"])
         assert os.path.exists(path)
@@ -50,5 +51,17 @@ def test_manifest_shapes_are_lists(emitted):
     _, manifest = emitted
     for a in manifest["artifacts"]:
         assert all(isinstance(s, list) for s in a["arg_shapes"])
-        assert a["kind"] in ("grad", "svrg", "saga", "nm")
+        assert a["kind"] in ("grad", "svrg", "saga", "nm", "grad_multi", "nm_multi")
         assert a["block"] == 8
+
+
+def test_manifest_multi_widths(emitted):
+    _, manifest = emitted
+    multi = [a for a in manifest["artifacts"] if a["kind"] in ("grad_multi", "nm_multi")]
+    assert {a["k"] for a in multi} == {4, 8}
+    for a in multi:
+        # stacked operands: first arg is [k*block, d]
+        assert a["arg_shapes"][0][0] == a["k"] * a["block"]
+        assert a["name"].startswith(("gradm", "nmm"))
+    singles = [a for a in manifest["artifacts"] if a["kind"] not in ("grad_multi", "nm_multi")]
+    assert all(a["k"] == 1 for a in singles)

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from compile.kernels import BLOCK, DIMS, artifact_name
+from compile.kernels import BLOCK, DIMS, MULTI_KS, artifact_name, multi_artifact_name
 from compile.model import build_registry, lower_to_hlo_text
 
 
@@ -17,20 +17,25 @@ def registry():
 
 
 def test_registry_is_complete(registry):
-    # 2 losses x 2 dims x (grad + svrg + saga) + 2 nm = 14
-    assert len(registry) == 14
+    # 2 losses x 2 dims x (grad + svrg + saga) + 2 nm
+    #   + 2 widths x 2 dims x (2 gradm + nmm) = 26
+    assert len(registry) == 14 + len(MULTI_KS) * len(DIMS) * 3
     for d in DIMS:
         for loss in ("sq", "log"):
             assert artifact_name("grad", loss, d) in registry
             assert artifact_name("svrg", loss, d) in registry
             assert artifact_name("saga", loss, d) in registry
+            for k in MULTI_KS:
+                assert multi_artifact_name("grad", loss, d, k) in registry
         assert artifact_name("nm", "sq", d) in registry
+        for k in MULTI_KS:
+            assert multi_artifact_name("nm", "sq", d, k) in registry
 
 
 def test_registry_shapes(registry):
     for spec in registry.values():
         assert spec.block == BLOCK
-        assert spec.arg_shapes[0] == (BLOCK, spec.d)
+        assert spec.arg_shapes[0] == (spec.k * BLOCK, spec.d)
         if spec.kind == "grad":
             assert len(spec.arg_shapes) == 4
             assert spec.outputs == ("grad_sum", "loss_sum", "count")
@@ -41,8 +46,27 @@ def test_registry_shapes(registry):
         elif spec.kind == "nm":
             assert len(spec.arg_shapes) == 3
             assert spec.outputs == ("xtxv_sum", "count")
+        elif spec.kind == "grad_multi":
+            assert spec.k in MULTI_KS
+            assert len(spec.arg_shapes) == 4
+            assert spec.outputs == ("grad_sum", "loss_sum", "count")
+        elif spec.kind == "nm_multi":
+            assert spec.k in MULTI_KS
+            assert len(spec.arg_shapes) == 3
+            assert spec.outputs == ("xtxv_sum", "count")
         else:
             raise AssertionError(f"unknown kind {spec.kind}")
+        if spec.kind in ("grad", "svrg", "saga", "nm"):
+            assert spec.k == 1
+
+
+def test_grad_multi_lowering_contains_loop(registry):
+    """The fused dispatch must lower its K-step grid to a rolled loop, not
+    K unrolled block bodies."""
+    spec = registry[multi_artifact_name("grad", "sq", 64, 8)]
+    text = lower_to_hlo_text(spec)
+    assert "while" in text, "expected the grid loop in the lowered multi kernel"
+    assert len(text) < 100_000
 
 
 def test_grad_artifact_fn_executes(registry):

@@ -32,7 +32,7 @@ fn run(runner: &mut Runner, method: &mut dyn Method, seed: u64) -> (f64, u64, u6
         .collect();
     let mut eval_stream = root.fork_stream(4242);
     let eval_samples = eval_stream.draw_many(2048);
-    let evaluator = Evaluator::new(&runner.engine, DIM, Loss::Squared, &eval_samples).unwrap();
+    let evaluator = Evaluator::new(&mut runner.engine, DIM, Loss::Squared, &eval_samples).unwrap();
     let mut ctx = RunContext {
         engine: &mut runner.engine,
         net: Network::new(M, NetModel::default()),

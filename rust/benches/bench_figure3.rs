@@ -86,7 +86,7 @@ fn run(
             )) as Box<dyn SampleStream>
         })
         .collect();
-    let evaluator = Evaluator::new(&runner.engine, d, Loss::Logistic, eval).unwrap();
+    let evaluator = Evaluator::new(&mut runner.engine, d, Loss::Logistic, eval).unwrap();
     let mut ctx = RunContext {
         engine: &mut runner.engine,
         net: Network::new(m, NetModel::default()),

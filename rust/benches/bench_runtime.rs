@@ -1,22 +1,27 @@
 //! Bench: runtime hot-path microbenchmarks (§Perf of EXPERIMENTS.md).
 //!
-//! Measures the per-call latency of every engine dispatch kind, the block
-//! packing + literal conversion cost, a collective round, and one full
-//! MP-DSVRG outer step — the numbers the performance pass optimizes.
+//! Measures the per-call latency of every engine dispatch kind, the fused
+//! multi-block grad/normal-matvec path against the per-block reference,
+//! per-round host<->device traffic under the session upload pool, block
+//! packing + upload cost, a collective round, and one full MP-DSVRG outer
+//! step. Writes `BENCH_runtime.json` (stats + engine traffic counters) so
+//! the perf trajectory is trackable across PRs.
 
-use mbprox::accounting::ClusterMeter;
+use mbprox::accounting::{ClusterMeter, DeviceTraffic};
 use mbprox::comm::{netmodel::NetModel, Network};
 use mbprox::coordinator::Runner;
-use mbprox::data::blocks::pack_block;
+use mbprox::data::blocks::{pack_all, pack_block};
 use mbprox::data::synth::{SynthSpec, SynthStream};
 use mbprox::data::{Loss, SampleStream};
+use mbprox::objective::{distributed_mean_grad, MachineBatch};
 use mbprox::runtime::exec::BlockLits;
-use mbprox::util::benchkit::{bench, section};
+use mbprox::util::benchkit::{bench, bench_batched, section, JsonReport};
 
 fn main() {
     let mut runner = Runner::from_env().expect("run `make artifacts` first");
     runner.engine.warmup_all().expect("warmup");
     let engine = &mut runner.engine;
+    let mut report = JsonReport::new();
 
     section("engine dispatch latency (interpret-mode Pallas on CPU PJRT)");
     for (loss, d) in [(Loss::Squared, 64usize), (Loss::Squared, 128), (Loss::Logistic, 64)] {
@@ -34,12 +39,14 @@ fn main() {
             engine.grad_block(loss, &lits, &w).unwrap();
         });
         println!("{}", s.report());
+        report.push(&s);
 
         if loss == Loss::Squared {
             let s = bench(&format!("nm_sq_d{d} (256 rows)"), 3, 50, || {
                 engine.nm_block(&lits, &w).unwrap();
             });
             println!("{}", s.report());
+            report.push(&s);
         }
 
         let z = vec![0.0f32; d];
@@ -49,6 +56,109 @@ fn main() {
                 .unwrap();
         });
         println!("{}", s.report());
+        report.push(&s);
+    }
+
+    section("fused multi-block dispatch vs per-block (d=64, 8 blocks)");
+    {
+        let widths = engine.fuse_widths();
+        println!("manifest fuse widths: {widths:?}");
+        let n_blocks = 8usize;
+        for loss in [Loss::Squared, Loss::Logistic] {
+            let spec = match loss {
+                Loss::Squared => SynthSpec::least_squares(64),
+                Loss::Logistic => SynthSpec::logistic(64),
+            };
+            let mut stream = SynthStream::new(spec, 5);
+            let samples = stream.draw_many(n_blocks * 256);
+            let blocks = pack_all(&samples, 64);
+            let per: Vec<BlockLits> =
+                blocks.iter().map(|b| BlockLits::from_block(engine, b).unwrap()).collect();
+            let batch = MachineBatch::pack(engine, 64, &samples).unwrap();
+            let w = vec![0.01f32; 64];
+            let tag = loss.tag();
+
+            // seed path: one dispatch + one download per 256-row block
+            let s_per =
+                bench_batched(&format!("grad_{tag}_d64 per-block x{n_blocks}"), 2, 30, || {
+                    for blk in &per {
+                        engine.grad_block(loss, blk, &w).unwrap();
+                    }
+                    n_blocks
+                });
+            println!("{}", s_per.report());
+            report.push(&s_per);
+
+            // fused path: gradm{K} artifacts reduce across blocks on device
+            let s_fused = bench_batched(&format!("grad_{tag}_d64 fused x{n_blocks}"), 2, 30, || {
+                for blk in &batch.groups {
+                    engine.grad_block(loss, blk, &w).unwrap();
+                }
+                n_blocks
+            });
+            println!("{}", s_fused.report());
+            report.push(&s_fused);
+
+            let speedup = s_per.mean_ns / s_fused.mean_ns.max(1.0);
+            println!("  -> fused speedup (per 256-row block): {speedup:.2}x");
+            report.counter(&format!("grad_{tag}_d64.fused_speedup"), speedup);
+
+            if loss == Loss::Squared {
+                let s_nm_per =
+                    bench_batched(&format!("nm_sq_d64 per-block x{n_blocks}"), 2, 30, || {
+                        for blk in &per {
+                            engine.nm_block(blk, &w).unwrap();
+                        }
+                        n_blocks
+                    });
+                println!("{}", s_nm_per.report());
+                report.push(&s_nm_per);
+                let s_nm_fused =
+                    bench_batched(&format!("nm_sq_d64 fused x{n_blocks}"), 2, 30, || {
+                        for blk in &batch.groups {
+                            engine.nm_block(blk, &w).unwrap();
+                        }
+                        n_blocks
+                    });
+                println!("{}", s_nm_fused.report());
+                report.push(&s_nm_fused);
+                let nm_speedup = s_nm_per.mean_ns / s_nm_fused.mean_ns.max(1.0);
+                println!("  -> fused speedup (per 256-row block): {nm_speedup:.2}x");
+                report.counter("nm_sq_d64.fused_speedup", nm_speedup);
+            }
+        }
+    }
+
+    section("per-round device traffic (m=4, 4 blocks/machine, d=64)");
+    {
+        let root = SynthStream::new(SynthSpec::least_squares(64), 7);
+        let machines: Vec<MachineBatch> = (0..4)
+            .map(|i| {
+                let mut s = root.fork_stream(i as u64);
+                let samples = s.draw_many(4 * 256);
+                MachineBatch::pack(engine, 64, &samples).unwrap()
+            })
+            .collect();
+        let mut net = Network::new(4, NetModel::default());
+        let mut meter = ClusterMeter::new(4);
+        let w1 = vec![0.02f32; 64];
+        println!("{}", DeviceTraffic::header());
+        // fresh iterate: exactly one small upload for the whole round
+        let t0 = DeviceTraffic::from_stats(&engine.stats);
+        distributed_mean_grad(engine, Loss::Squared, &machines, &w1, &mut net, &mut meter)
+            .unwrap();
+        let fresh = DeviceTraffic::from_stats(&engine.stats).since(&t0);
+        println!("{}", fresh.row("mean_grad round (new w)"));
+        // unchanged iterate: zero uploads, pure cache hits
+        let t1 = DeviceTraffic::from_stats(&engine.stats);
+        distributed_mean_grad(engine, Loss::Squared, &machines, &w1, &mut net, &mut meter)
+            .unwrap();
+        let warm = DeviceTraffic::from_stats(&engine.stats).since(&t1);
+        println!("{}", warm.row("mean_grad round (same w)"));
+        report.counter("round.new_w.uploads", fresh.uploads as f64);
+        report.counter("round.new_w.downloads", fresh.downloads as f64);
+        report.counter("round.same_w.uploads", warm.uploads as f64);
+        report.counter("round.same_w.cache_hits", warm.cache_hits as f64);
     }
 
     section("host-side costs");
@@ -59,11 +169,13 @@ fn main() {
             std::hint::black_box(pack_block(&samples, 64));
         });
         println!("{}", s.report());
+        report.push(&s);
         let block = pack_block(&samples, 64);
         let s = bench("BlockLits upload 256x64", 3, 200, || {
             std::hint::black_box(BlockLits::from_block(engine, &block).unwrap());
         });
         println!("{}", s.report());
+        report.push(&s);
     }
 
     section("collective round (m=8, d=64)");
@@ -75,6 +187,7 @@ fn main() {
             net.all_reduce_avg(&mut meter, &mut locals);
         });
         println!("{}", s.report());
+        report.push(&s);
     }
 
     section("end-to-end: one MP-DSVRG outer step (m=4, b=256, d=64)");
@@ -94,7 +207,7 @@ fn main() {
             let evaluator =
                 Evaluator::new(engine, 64, Loss::Squared, &eval_samples).unwrap();
             let mut ctx = RunContext {
-                engine,
+                engine: &mut *engine,
                 net: Network::new(4, NetModel::default()),
                 meter: ClusterMeter::new(4),
                 loss: Loss::Squared,
@@ -108,12 +221,27 @@ fn main() {
             method.run(&mut ctx).unwrap();
         });
         println!("{}", s.report());
+        report.push(&s);
     }
 
     section("engine cumulative stats");
+    let traffic = DeviceTraffic::from_stats(&engine.stats);
+    println!("{}", DeviceTraffic::header());
+    println!("{}", traffic.row("total"));
     println!(
-        "executions={} mean_execute={}",
+        "executions={} mean_execute={} bytes_moved={}",
         engine.stats.executions,
-        mbprox::util::benchkit::fmt_ns(engine.mean_execute_ns())
+        mbprox::util::benchkit::fmt_ns(engine.mean_execute_ns()),
+        engine.stats.bytes_moved(),
     );
+    report.counter("engine.executions", engine.stats.executions as f64);
+    report.counter("engine.mean_execute_ns", engine.mean_execute_ns());
+    report.counter("engine.uploads", traffic.uploads as f64);
+    report.counter("engine.upload_bytes", traffic.upload_bytes as f64);
+    report.counter("engine.downloads", traffic.downloads as f64);
+    report.counter("engine.download_bytes", traffic.download_bytes as f64);
+    report.counter("engine.upload_cache_hits", traffic.cache_hits as f64);
+    report.counter("engine.upload_cache_misses", traffic.cache_misses as f64);
+    report.write("BENCH_runtime.json").expect("write BENCH_runtime.json");
+    println!("\nwrote BENCH_runtime.json");
 }

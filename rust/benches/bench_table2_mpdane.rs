@@ -58,7 +58,7 @@ fn main() {
             .collect();
         let mut eval_stream = root.fork_stream(999);
         let eval_samples = eval_stream.draw_many(2048);
-        let evaluator = Evaluator::new(&runner.engine, dim, Loss::Squared, &eval_samples).unwrap();
+        let evaluator = Evaluator::new(&mut runner.engine, dim, Loss::Squared, &eval_samples).unwrap();
         let mut ctx = RunContext {
             engine: &mut runner.engine,
             net: Network::new(m, NetModel::default()),

@@ -117,6 +117,71 @@ impl ClusterMeter {
     }
 }
 
+/// Host<->device traffic summary derived from the engine's
+/// [`crate::runtime::EngineStats`] — the runtime-layer companion of the
+/// paper-units [`ResourceReport`]. One row per bench/run shows whether the
+/// device-residency contract holds (uploads per round O(1), one download
+/// per fused group).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceTraffic {
+    pub executions: u64,
+    pub uploads: u64,
+    pub upload_bytes: u64,
+    pub downloads: u64,
+    pub download_bytes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl DeviceTraffic {
+    pub fn from_stats(s: &crate::runtime::EngineStats) -> DeviceTraffic {
+        DeviceTraffic {
+            executions: s.executions,
+            uploads: s.uploads,
+            upload_bytes: s.upload_bytes,
+            downloads: s.downloads,
+            download_bytes: s.download_bytes,
+            cache_hits: s.upload_cache_hits,
+            cache_misses: s.upload_cache_misses,
+        }
+    }
+
+    /// Traffic accrued since an earlier snapshot (per-phase deltas).
+    pub fn since(&self, earlier: &DeviceTraffic) -> DeviceTraffic {
+        DeviceTraffic {
+            executions: self.executions - earlier.executions,
+            uploads: self.uploads - earlier.uploads,
+            upload_bytes: self.upload_bytes - earlier.upload_bytes,
+            downloads: self.downloads - earlier.downloads,
+            download_bytes: self.download_bytes - earlier.download_bytes,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+        }
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<28} {:>10} {:>9} {:>12} {:>10} {:>12} {:>10} {:>10}",
+            "phase", "dispatches", "uploads", "up_bytes", "downloads", "down_bytes", "hits",
+            "misses"
+        )
+    }
+
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{:<28} {:>10} {:>9} {:>12} {:>10} {:>12} {:>10} {:>10}",
+            name,
+            self.executions,
+            self.uploads,
+            self.upload_bytes,
+            self.downloads,
+            self.download_bytes,
+            self.cache_hits,
+            self.cache_misses
+        )
+    }
+}
+
 /// The Table-1 row: per-machine maxima + total samples.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ResourceReport {
@@ -224,5 +289,23 @@ mod tests {
         let c = ClusterMeter::new(2);
         let r = c.report();
         assert_eq!(ResourceReport::header().len(), r.row("x").len());
+    }
+
+    #[test]
+    fn device_traffic_deltas() {
+        let a = DeviceTraffic { executions: 3, uploads: 5, upload_bytes: 100, ..Default::default() };
+        let b = DeviceTraffic {
+            executions: 10,
+            uploads: 6,
+            upload_bytes: 356,
+            cache_hits: 4,
+            ..Default::default()
+        };
+        let d = b.since(&a);
+        assert_eq!(d.executions, 7);
+        assert_eq!(d.uploads, 1);
+        assert_eq!(d.upload_bytes, 256);
+        assert_eq!(d.cache_hits, 4);
+        assert_eq!(DeviceTraffic::header().len(), d.row("x").len());
     }
 }

@@ -44,7 +44,7 @@ impl Method for AccelMinibatchSgd {
             let mom = ((t - 1) as f32) / ((t + 2) as f32);
             let y: Vec<f32> =
                 (0..d).map(|j| w[j] + mom * (w[j] - w_prev[j])).collect();
-            let batches = ctx.draw_batches(self.b_local, false)?;
+            let batches = ctx.draw_batches_grad_only(self.b_local, false)?;
             let (g, _, _) = distributed_mean_grad(
                 ctx.engine,
                 ctx.loss,

@@ -24,7 +24,7 @@ impl Method for DistributedAgd {
 
     fn run(&mut self, ctx: &mut RunContext) -> Result<RunResult> {
         let mut rec = Recorder::new(self.name());
-        let prob = ErmProblem::draw(ctx, self.n_total, self.nu)?;
+        let prob = ErmProblem::draw_grad_only(ctx, self.n_total, self.nu)?;
         let d = ctx.d;
         let smooth = self.beta + self.nu;
         let step = (1.0 / smooth) as f32;

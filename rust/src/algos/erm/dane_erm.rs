@@ -41,7 +41,7 @@ impl Method for DaneErm {
             for (i, shard) in prob.shards.iter().enumerate() {
                 let mut xi = z.clone();
                 for _pass in 0..self.local_passes.max(1) {
-                    let blocks = 0..shard.lits.len();
+                    let blocks = 0..shard.n_blocks();
                     let (_xe, xa) = svrg_sweep_machine(
                         ctx,
                         blocks,

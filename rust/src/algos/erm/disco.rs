@@ -33,7 +33,7 @@ impl Method for Disco {
             bail!("disco baseline implemented for the squared loss (as in the paper's analysis)");
         }
         let mut rec = Recorder::new(self.name());
-        let prob = ErmProblem::draw(ctx, self.n_total, self.nu)?;
+        let prob = ErmProblem::draw_grad_only(ctx, self.n_total, self.nu)?;
         let d = ctx.d;
         let mut w = vec![0.0f32; d];
         for it in 0..self.newton_iters {
@@ -88,7 +88,8 @@ fn hvp(ctx: &mut RunContext, prob: &ErmProblem, v: &[f32]) -> Result<Vec<f32>> {
     for (i, shard) in prob.shards.iter().enumerate() {
         let mut acc = vec![0.0f32; ctx.d];
         let mut cnt = 0.0;
-        for blk in &shard.lits {
+        // fused groups: one Hessian-vector dispatch per group
+        for blk in &shard.groups {
             let (part, c) = ctx.engine.nm_block(blk, v)?;
             linalg::axpy(1.0, &part, &mut acc);
             cnt += c;

@@ -46,7 +46,7 @@ impl Method for DsvrgErm {
             crate::linalg::axpy(-(self.nu as f32), &z, &mut mu_smooth);
             let j = k % m;
             let zero = vec![0.0f32; d];
-            let blocks = 0..prob.shards[j].lits.len();
+            let blocks = 0..prob.shards[j].n_blocks();
             let (x_end, x_avg) = svrg_sweep_machine(
                 ctx,
                 blocks,

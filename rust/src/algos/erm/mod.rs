@@ -39,6 +39,15 @@ impl ErmProblem {
         Ok(ErmProblem { shards, n_total: per * m, nu })
     }
 
+    /// Like [`ErmProblem::draw`] for optimizers that only take the
+    /// grad/normal-matvec path (AGD, DiSCO): no host block retention.
+    pub fn draw_grad_only(ctx: &mut RunContext, n_total: usize, nu: f64) -> Result<ErmProblem> {
+        let m = ctx.m();
+        let per = n_total.div_ceil(m);
+        let shards = ctx.draw_batches_grad_only(per, true)?;
+        Ok(ErmProblem { shards, n_total: per * m, nu })
+    }
+
     /// Release the held shard memory (end of run).
     pub fn release(&self, ctx: &mut RunContext) {
         let per = self.n_total / self.shards.len();

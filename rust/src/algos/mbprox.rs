@@ -50,8 +50,13 @@ impl<S: ProxSolver> Method for MinibatchProx<S> {
             ctx.meter.machine(i).hold(2);
         }
         for t in 1..=self.t_outer {
-            // fresh minibatch, held in memory for the inner solve
-            let batches = ctx.draw_batches(self.b_local, true)?;
+            // fresh minibatch, held in memory for the inner solve; host
+            // block copies are only retained when the solver sweeps
+            let batches = if self.solver.needs_vr_blocks() {
+                ctx.draw_batches(self.b_local, true)?
+            } else {
+                ctx.draw_batches_grad_only(self.b_local, true)?
+            };
             let w_new = self.solver.solve(ctx, &batches, &w, self.gamma, t)?;
             ctx.release_batches(self.b_local);
             drop(batches);

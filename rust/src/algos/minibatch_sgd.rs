@@ -34,8 +34,9 @@ impl Method for MinibatchSgd {
             ctx.meter.machine(i).hold(2);
         }
         for t in 1..=self.t_outer {
-            // streaming batch: packed, used once, dropped (no hold charge)
-            let batches = ctx.draw_batches(self.b_local, false)?;
+            // streaming batch: packed, used once, dropped (no hold charge);
+            // grad-only: no host block retention
+            let batches = ctx.draw_batches_grad_only(self.b_local, false)?;
             let (g, _, _) = distributed_mean_grad(
                 ctx.engine,
                 ctx.loss,

@@ -42,8 +42,29 @@ impl<'e> RunContext<'e> {
     }
 
     /// Draw a fresh minibatch of `b_local` samples on every machine,
-    /// charging samples (and memory if `hold`).
+    /// charging samples (and memory if `hold`). Batches support the full
+    /// engine surface including VR sweeps.
     pub fn draw_batches(&mut self, b_local: usize, hold: bool) -> Result<Vec<MachineBatch>> {
+        self.draw_batches_opts(b_local, hold, true)
+    }
+
+    /// Like [`RunContext::draw_batches`] for methods that only take the
+    /// grad/normal-matvec path: host block copies are dropped right after
+    /// the fused upload (no host memory retained per batch).
+    pub fn draw_batches_grad_only(
+        &mut self,
+        b_local: usize,
+        hold: bool,
+    ) -> Result<Vec<MachineBatch>> {
+        self.draw_batches_opts(b_local, hold, false)
+    }
+
+    fn draw_batches_opts(
+        &mut self,
+        b_local: usize,
+        hold: bool,
+        retain_host: bool,
+    ) -> Result<Vec<MachineBatch>> {
         let d = self.d;
         let mut out = Vec::with_capacity(self.streams.len());
         for (i, s) in self.streams.iter_mut().enumerate() {
@@ -53,7 +74,11 @@ impl<'e> RunContext<'e> {
             if hold {
                 meter.hold(b_local as u64);
             }
-            out.push(MachineBatch::pack(self.engine, d, &samples)?);
+            out.push(if retain_host {
+                MachineBatch::pack(self.engine, d, &samples)?
+            } else {
+                MachineBatch::pack_grad_only(self.engine, d, &samples)?
+            });
         }
         Ok(out)
     }

@@ -119,7 +119,7 @@ impl DaneSolver {
                         }
                         snapshot = xi.clone();
                     }
-                    let blocks = 0..batch.lits.len();
+                    let blocks = 0..batch.n_blocks();
                     let (_x_end, x_avg) = vr_sweep_machine(
                         ctx,
                         self.local_solver,

@@ -60,7 +60,7 @@ impl ProxSolver for DsvrgSolver {
         let mut s = 0usize; // batch index within machine j
         let ranges: Vec<Vec<std::ops::Range<usize>>> = batches
             .iter()
-            .map(|b| Self::batch_ranges(b.lits.len(), self.p_batches))
+            .map(|b| Self::batch_ranges(b.n_blocks(), self.p_batches))
             .collect();
 
         for _k in 0..self.k_inner {

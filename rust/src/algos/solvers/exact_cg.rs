@@ -45,7 +45,9 @@ pub fn distributed_normal_matvec(
     for (i, batch) in batches.iter().enumerate() {
         let mut acc = vec![0.0f32; ctx.d];
         let mut cnt = 0.0f64;
-        for blk in &batch.lits {
+        // fused groups: one dispatch + one download per group, and `v` is
+        // uploaded once per matvec via the session pool
+        for blk in &batch.groups {
             let (part, c) = ctx.engine.nm_block(blk, v)?;
             linalg::axpy(1.0, &part, &mut acc);
             cnt += c;
@@ -68,6 +70,11 @@ pub fn distributed_normal_matvec(
 impl ProxSolver for ExactCgSolver {
     fn name(&self) -> String {
         "exact-cg".to_string()
+    }
+
+    /// CG only needs grad + normal-matvec dispatches — no VR sweeps.
+    fn needs_vr_blocks(&self) -> bool {
+        false
     }
 
     fn solve(

@@ -42,6 +42,14 @@ impl LocalSolver {
 pub trait ProxSolver {
     fn name(&self) -> String;
 
+    /// Whether `solve` runs per-block VR sweeps over the batches (which
+    /// need the host block copies retained for the lazy per-block
+    /// uploads). Grad/CG-only solvers return false so the outer loop can
+    /// pack grad-only batches and skip the host retention.
+    fn needs_vr_blocks(&self) -> bool {
+        true
+    }
+
     /// Return an (inexact) minimizer of `f_t`; `t` is the outer iteration
     /// (solvers may tighten accuracy with t per Theorem 7).
     fn solve(
@@ -78,8 +86,10 @@ pub fn vr_sweep_machine(
     let mut x = x0.to_vec();
     let mut avg = crate::linalg::WeightedAvg::new(ctx.d);
     let mut total_n = 0u64;
+    // per-block buffers, materialized on the batch's first sweep
+    let lits = batch.vr_lits(ctx.engine)?;
     for bi in batch_blocks {
-        let blk = &batch.lits[bi];
+        let blk = &lits[bi];
         if blk.valid == 0 {
             continue;
         }
@@ -95,6 +105,7 @@ pub fn vr_sweep_machine(
         total_n += blk.valid as u64;
         x = x_end;
     }
+    drop(lits);
     ctx.meter.machine(machine_idx).add_vec_ops(total_n);
     let x_avg = if avg.total_weight() > 0.0 { avg.mean() } else { x.clone() };
     Ok((x, x_avg))

@@ -50,7 +50,7 @@ impl ProxSolver for OneShotSolver {
                 let cnt = gs.count.max(1.0) as f32;
                 let mu: Vec<f32> = gs.grad_sum.iter().map(|&g| g / cnt).collect();
                 let snapshot = xi.clone();
-                let blocks = 0..batch.lits.len();
+                let blocks = 0..batch.n_blocks();
                 let (_x_end, x_avg) = svrg_sweep_machine(
                     ctx,
                     blocks,

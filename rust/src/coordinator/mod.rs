@@ -82,7 +82,7 @@ impl Runner {
             .collect();
         let mut eval_stream = root.fork_stream(EVAL_TAG);
         let eval_samples = eval_stream.draw_many(cfg.eval_samples);
-        let evaluator = Some(Evaluator::new(&self.engine, d, cfg.loss, &eval_samples)?);
+        let evaluator = Some(Evaluator::new(&mut self.engine, d, cfg.loss, &eval_samples)?);
         Ok(RunContext {
             engine: &mut self.engine,
             net: Network::new(cfg.m, self.net_model.clone()),

@@ -8,6 +8,23 @@
 //!
 //! Units: computing the gradient of `n` samples costs `n` vector
 //! operations (the paper's convention); one collective is one round.
+//!
+//! # Device residency
+//!
+//! A [`MachineBatch`] keeps two device representations of the same data:
+//!
+//! - **Fused groups** (`groups`): consecutive 256-row blocks stacked into
+//!   the widest supported `gradm{K}`/`nmm{K}` upload (K = 8/4 by
+//!   default), uploaded eagerly at pack time. The grad / normal-matvec
+//!   hot paths iterate these, so one machine-round costs one dispatch and
+//!   one `(grad_sum, loss_sum, count)` download per *group* instead of
+//!   per block; the ragged tail (fewer blocks than the narrowest width)
+//!   falls back to single-block dispatch with host-side accumulation.
+//! - **Per-block buffers** (`vr_lits`): the sequential SVRG/SAGA sweep
+//!   kernels are inherently per-block, so their uploads are materialized
+//!   lazily on a batch's *first* sweep and cached for the batch lifetime
+//!   — machines that are never the designated sweeper upload nothing
+//!   twice.
 
 use crate::accounting::ClusterMeter;
 use crate::comm::Network;
@@ -17,30 +34,120 @@ use crate::linalg;
 use crate::runtime::exec::{BlockLits, GradOut};
 use crate::runtime::Engine;
 use anyhow::Result;
+use std::cell::{Ref, RefCell};
 
 /// One machine's current minibatch (or ERM shard), packed for the engine.
 pub struct MachineBatch {
-    pub lits: Vec<BlockLits>,
+    /// host-side blocks pending a possible VR upload; drained (freed) when
+    /// `vr_lits` materializes, and empty from the start for grad-only packs
+    pending: RefCell<Vec<Block>>,
+    n_blocks: usize,
+    /// fused multi-block device groups — the grad/normal-matvec hot path
+    pub groups: Vec<BlockLits>,
+    /// lazily-uploaded per-block buffers for the VR sweep path
+    vr: RefCell<Option<Vec<BlockLits>>>,
     pub n: usize,
     pub d: usize,
 }
 
 impl MachineBatch {
-    pub fn pack(engine: &Engine, engine_d: usize, samples: &[Sample]) -> Result<MachineBatch> {
+    /// Pack for the full engine surface (grad/nm hot path + VR sweeps).
+    pub fn pack(engine: &mut Engine, engine_d: usize, samples: &[Sample]) -> Result<MachineBatch> {
+        Self::pack_opts(engine, engine_d, samples, true)
+    }
+
+    /// Pack for grad/normal-matvec use only (evaluators, CG-only shards):
+    /// the host block copies are dropped immediately, so the batch costs
+    /// no host memory beyond the run — `vr_lits` on such a batch errors.
+    pub fn pack_grad_only(
+        engine: &mut Engine,
+        engine_d: usize,
+        samples: &[Sample],
+    ) -> Result<MachineBatch> {
+        Self::pack_opts(engine, engine_d, samples, false)
+    }
+
+    fn pack_opts(
+        engine: &mut Engine,
+        engine_d: usize,
+        samples: &[Sample],
+        retain_host: bool,
+    ) -> Result<MachineBatch> {
         let blocks: Vec<Block> = pack_all(samples, engine_d);
-        let lits = blocks
-            .iter()
-            .map(|b| BlockLits::from_block(engine, b))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(MachineBatch { lits, n: samples.len(), d: engine_d })
+        let groups = fuse_blocks(engine, &blocks)?;
+        let n_blocks = blocks.len();
+        let pending = if retain_host { blocks } else { Vec::new() };
+        Ok(MachineBatch {
+            pending: RefCell::new(pending),
+            n_blocks,
+            groups,
+            vr: RefCell::new(None),
+            n: samples.len(),
+            d: engine_d,
+        })
     }
 
     pub fn empty(engine_d: usize) -> MachineBatch {
-        MachineBatch { lits: Vec::new(), n: 0, d: engine_d }
+        MachineBatch {
+            pending: RefCell::new(Vec::new()),
+            n_blocks: 0,
+            groups: Vec::new(),
+            vr: RefCell::new(None),
+            n: 0,
+            d: engine_d,
+        }
+    }
+
+    /// Number of 256-row blocks (the VR sweep granularity).
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Per-block device buffers for the sequential VR sweeps, uploaded on
+    /// first use and cached for the batch lifetime; the host copies are
+    /// freed as part of the upload.
+    pub fn vr_lits(&self, engine: &mut Engine) -> Result<Ref<'_, Vec<BlockLits>>> {
+        if self.vr.borrow().is_none() {
+            anyhow::ensure!(
+                self.pending.borrow().len() == self.n_blocks,
+                "batch was packed grad-only: no host blocks left for VR sweeps"
+            );
+            // upload from a borrow first — a mid-upload failure leaves the
+            // host blocks intact for a retry — and only drain on success
+            let lits = self
+                .pending
+                .borrow()
+                .iter()
+                .map(|b| BlockLits::from_block(engine, b))
+                .collect::<Result<Vec<_>>>()?;
+            *self.vr.borrow_mut() = Some(lits);
+            // VR path is now fully device-resident: free the host copies
+            self.pending.borrow_mut().clear();
+        }
+        Ok(Ref::map(self.vr.borrow(), |o| o.as_ref().expect("just materialized")))
     }
 }
 
+/// Greedily stack consecutive blocks into the widest supported fused
+/// upload; the ragged tail becomes single-block (k=1) groups — the host
+/// fallback path. With no multi artifacts in the manifest this degrades
+/// to exactly the per-block packing of the pre-fusion engine.
+fn fuse_blocks(engine: &mut Engine, blocks: &[Block]) -> Result<Vec<BlockLits>> {
+    // copy: the width list must not borrow `engine` across the uploads
+    let widths: Vec<usize> = engine.fuse_widths().to_vec(); // widest first, possibly empty
+    let mut groups = Vec::new();
+    let mut i = 0usize;
+    while i < blocks.len() {
+        let rem = blocks.len() - i;
+        let k = widths.iter().copied().find(|&k| k <= rem).unwrap_or(1);
+        groups.push(BlockLits::from_blocks(engine, &blocks[i..i + k])?);
+        i += k;
+    }
+    Ok(groups)
+}
+
 /// Sum-form gradient over one machine's batch. Charges `n` vec ops.
+/// Iterates the fused groups: one dispatch + one download per group.
 pub fn local_grad_sum(
     engine: &mut Engine,
     loss: Loss,
@@ -51,7 +158,7 @@ pub fn local_grad_sum(
     let mut g = vec![0.0f32; batch.d];
     let mut lsum = 0.0;
     let mut cnt = 0.0;
-    for blk in &batch.lits {
+    for blk in &batch.groups {
         let out = engine.grad_block(loss, blk, w)?;
         linalg::axpy(1.0, &out.grad_sum, &mut g);
         lsum += out.loss_sum;
@@ -71,8 +178,12 @@ pub fn distributed_mean_grad(
     net: &mut Network,
     meter: &mut ClusterMeter,
 ) -> Result<(Vec<f32>, f64, f64)> {
+    // zero-machine early-out BEFORE touching machines[0] (an empty cluster
+    // has a zero mean gradient in the iterate's dimension)
+    if machines.is_empty() {
+        return Ok((vec![0.0; w.len()], 0.0, 0.0));
+    }
     let m = machines.len();
-    let d = machines[0].d;
     let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
     let mut weights: Vec<f64> = Vec::with_capacity(m);
     let mut loss_total = 0.0;
@@ -90,9 +201,6 @@ pub fn distributed_mean_grad(
         loss_total += out.loss_sum;
         n_total += cnt;
     }
-    if locals.is_empty() {
-        return Ok((vec![0.0; d], 0.0, 0.0));
-    }
     net.all_reduce_weighted(meter, &weights, &mut locals);
     let mean_loss = if n_total > 0.0 { loss_total / n_total } else { 0.0 };
     Ok((locals.pop().unwrap(), mean_loss, n_total))
@@ -106,20 +214,24 @@ pub struct Evaluator {
 
 impl Evaluator {
     pub fn new(
-        engine: &Engine,
+        engine: &mut Engine,
         engine_d: usize,
         loss: Loss,
         samples: &[Sample],
     ) -> Result<Evaluator> {
-        Ok(Evaluator { loss, batch: MachineBatch::pack(engine, engine_d, samples)? })
+        // evaluation only ever takes the grad path: skip the host block
+        // retention entirely
+        Ok(Evaluator { loss, batch: MachineBatch::pack_grad_only(engine, engine_d, samples)? })
     }
 
     /// Mean instantaneous loss over the evaluation set (not metered:
     /// evaluation is experimenter-side, not part of the algorithm).
+    /// `w` is uploaded once per call via the session pool — evaluation
+    /// no longer pays a per-block upload.
     pub fn objective(&self, engine: &mut Engine, w: &[f32]) -> Result<f64> {
         let mut lsum = 0.0;
         let mut cnt = 0.0;
-        for blk in &self.batch.lits {
+        for blk in &self.batch.groups {
             let out = engine.grad_block(self.loss, blk, w)?;
             lsum += out.loss_sum;
             cnt += out.count;
@@ -130,6 +242,8 @@ impl Evaluator {
 
 /// Prox-regularized objective value on a batch set (for tests/diagnostics):
 /// phi_I(w) + gamma/2 ||w - wprev||^2 over the union of machine batches.
+/// Like `Evaluator::objective`, the iterate upload is hoisted out of the
+/// block loop by the session pool.
 pub fn prox_objective(
     engine: &mut Engine,
     loss: Loss,
@@ -141,7 +255,7 @@ pub fn prox_objective(
     let mut lsum = 0.0;
     let mut cnt = 0.0;
     for batch in machines {
-        for blk in &batch.lits {
+        for blk in &batch.groups {
             let out = engine.grad_block(loss, blk, w)?;
             lsum += out.loss_sum;
             cnt += out.count;

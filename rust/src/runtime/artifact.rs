@@ -16,6 +16,8 @@ pub struct ArtifactMeta {
     pub block: usize,
     pub arg_shapes: Vec<Vec<usize>>,
     pub outputs: Vec<String>,
+    /// stacked 256-row blocks per dispatch (1 = single-block artifact)
+    pub k: usize,
     pub sha256: String,
 }
 
@@ -25,6 +27,10 @@ pub enum ArtifactKind {
     Svrg,
     Saga,
     NormalMatvec,
+    /// fused K-block gradient with on-device reduction (`gradm{K}_*`)
+    GradMulti,
+    /// fused K-block normal-equation matvec (`nmm{K}_*`)
+    NormalMatvecMulti,
 }
 
 impl ArtifactKind {
@@ -34,6 +40,8 @@ impl ArtifactKind {
             "svrg" => ArtifactKind::Svrg,
             "saga" => ArtifactKind::Saga,
             "nm" => ArtifactKind::NormalMatvec,
+            "grad_multi" => ArtifactKind::GradMulti,
+            "nm_multi" => ArtifactKind::NormalMatvecMulti,
             other => bail!("unknown artifact kind '{other}'"),
         })
     }
@@ -105,6 +113,8 @@ impl Manifest {
                 block: get_usize("block")?,
                 arg_shapes,
                 outputs,
+                // absent in pre-fusion manifests: single-block artifact
+                k: a.get("k").and_then(Json::as_usize).unwrap_or(1),
                 sha256: get_str("sha256")?,
             });
         }
@@ -118,15 +128,67 @@ impl Manifest {
         self.artifacts.iter().find(|a| a.name == name)
     }
 
-    /// Canonical artifact name for (kind, loss-tag, dim).
+    /// Canonical *single-block* artifact name for (kind, loss-tag, dim).
+    /// The multi kinds resolve to their single-block family base (their
+    /// fused names embed a width — see [`Manifest::name_for_k`]).
     pub fn name_for(kind: ArtifactKind, loss_tag: &str, d: usize) -> String {
         let k = match kind {
-            ArtifactKind::Grad => "grad",
+            ArtifactKind::Grad | ArtifactKind::GradMulti => "grad",
             ArtifactKind::Svrg => "svrg",
             ArtifactKind::Saga => "saga",
-            ArtifactKind::NormalMatvec => "nm",
+            ArtifactKind::NormalMatvec | ArtifactKind::NormalMatvecMulti => "nm",
         };
         format!("{k}_{loss_tag}_d{d}")
+    }
+
+    /// Canonical artifact name for (kind, loss-tag, dim, fuse width):
+    /// `k == 1` selects the single-block artifact, `k > 1` the fused
+    /// multi-block variant (e.g. `gradm4_sq_d64`). Matches python's
+    /// `kernels.common.multi_artifact_name`.
+    pub fn name_for_k(kind: ArtifactKind, loss_tag: &str, d: usize, k: usize) -> Result<String> {
+        if k <= 1 {
+            // width 1 IS the single-block artifact (name_for maps the
+            // multi kinds to their single-block family base)
+            return Ok(Self::name_for(kind, loss_tag, d));
+        }
+        let base = match kind {
+            ArtifactKind::Grad | ArtifactKind::GradMulti => "grad",
+            ArtifactKind::NormalMatvec | ArtifactKind::NormalMatvecMulti => "nm",
+            other => bail!("no multi-block variant for artifact kind {other:?}"),
+        };
+        Ok(format!("{base}m{k}_{loss_tag}_d{d}"))
+    }
+
+    /// Fused-dispatch widths usable by the packer, widest first: a width
+    /// K qualifies only if *every* hot-path artifact exists at K — the
+    /// fused gradient for each (loss, dim) that has a single-block
+    /// gradient, and the fused normal-matvec for each dim that has a
+    /// single-block one. Pre-fusion manifests yield an empty vec and the
+    /// engine degrades to per-block dispatch everywhere.
+    pub fn fuse_widths(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::GradMulti && a.k > 1)
+            .map(|a| a.k)
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        let singles: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| matches!(a.kind, ArtifactKind::Grad | ArtifactKind::NormalMatvec))
+            .collect();
+        ks.retain(|&k| {
+            singles.iter().all(|a| {
+                Self::name_for_k(a.kind, &a.loss, a.d, k)
+                    .ok()
+                    .and_then(|n| self.find(&n))
+                    .is_some()
+            })
+        });
+        ks.reverse(); // widest first for the greedy packer
+        ks
     }
 
     /// Smallest supported artifact dim >= `native_dim`.
@@ -168,7 +230,9 @@ mod tests {
 
     #[test]
     fn loads_manifest() {
-        let dir = std::env::temp_dir().join("mbprox_manifest_test");
+        // each test gets its own dir: cargo runs tests in parallel and
+        // write_fixture truncates manifest.json
+        let dir = std::env::temp_dir().join("mbprox_manifest_test_load");
         write_fixture(&dir);
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.block, 8);
@@ -181,7 +245,7 @@ mod tests {
 
     #[test]
     fn padded_dim_selection() {
-        let dir = std::env::temp_dir().join("mbprox_manifest_test");
+        let dir = std::env::temp_dir().join("mbprox_manifest_test_pad");
         write_fixture(&dir);
         let mut m = Manifest::load(&dir).unwrap();
         m.dims = vec![64, 128];
@@ -197,6 +261,67 @@ mod tests {
         assert_eq!(Manifest::name_for(ArtifactKind::Svrg, "log", 128), "svrg_log_d128");
         assert_eq!(Manifest::name_for(ArtifactKind::Saga, "sq", 64), "saga_sq_d64");
         assert_eq!(Manifest::name_for(ArtifactKind::NormalMatvec, "sq", 64), "nm_sq_d64");
+    }
+
+    #[test]
+    fn name_for_k_matches_python() {
+        assert_eq!(
+            Manifest::name_for_k(ArtifactKind::Grad, "sq", 64, 1).unwrap(),
+            "grad_sq_d64"
+        );
+        assert_eq!(
+            Manifest::name_for_k(ArtifactKind::Grad, "sq", 64, 4).unwrap(),
+            "gradm4_sq_d64"
+        );
+        assert_eq!(
+            Manifest::name_for_k(ArtifactKind::GradMulti, "log", 128, 8).unwrap(),
+            "gradm8_log_d128"
+        );
+        assert_eq!(
+            Manifest::name_for_k(ArtifactKind::NormalMatvec, "sq", 64, 8).unwrap(),
+            "nmm8_sq_d64"
+        );
+        assert!(Manifest::name_for_k(ArtifactKind::Svrg, "sq", 64, 4).is_err());
+        // a multi kind at width 1 IS the single-block artifact — never the
+        // malformed width-less base name
+        assert_eq!(
+            Manifest::name_for_k(ArtifactKind::GradMulti, "sq", 64, 1).unwrap(),
+            "grad_sq_d64"
+        );
+        assert_eq!(
+            Manifest::name_for_k(ArtifactKind::NormalMatvecMulti, "sq", 128, 1).unwrap(),
+            "nm_sq_d128"
+        );
+    }
+
+    #[test]
+    fn fuse_widths_require_full_coverage() {
+        let dir = std::env::temp_dir().join("mbprox_manifest_test_widths");
+        write_fixture(&dir);
+        let mut m = Manifest::load(&dir).unwrap();
+        // pre-fusion manifest: no multi artifacts, no widths
+        assert!(m.fuse_widths().is_empty());
+        let base = m.artifacts[0].clone();
+        let mk = |name: &str, kind: ArtifactKind, loss: &str, k: usize| ArtifactMeta {
+            name: name.to_string(),
+            kind,
+            loss: loss.to_string(),
+            k,
+            ..base.clone()
+        };
+        // gradm4 exists for the only (loss, d) pair and nmm4 covers nm — but
+        // there is no nm single, so only the grad coverage is required
+        m.artifacts.push(mk("gradm4_sq_d2", ArtifactKind::GradMulti, "sq", 4));
+        assert_eq!(m.fuse_widths(), vec![4]);
+        // an nm single without its fused companion disqualifies the width
+        m.artifacts.push(mk("nm_sq_d2", ArtifactKind::NormalMatvec, "sq", 1));
+        assert!(m.fuse_widths().is_empty());
+        m.artifacts.push(mk("nmm4_sq_d2", ArtifactKind::NormalMatvecMulti, "sq", 4));
+        assert_eq!(m.fuse_widths(), vec![4]);
+        // widest first
+        m.artifacts.push(mk("gradm8_sq_d2", ArtifactKind::GradMulti, "sq", 8));
+        m.artifacts.push(mk("nmm8_sq_d2", ArtifactKind::NormalMatvecMulti, "sq", 8));
+        assert_eq!(m.fuse_widths(), vec![8, 4]);
     }
 
     #[test]

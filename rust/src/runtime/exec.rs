@@ -1,16 +1,23 @@
 //! Typed artifact wrappers: the coordinator-facing API over the engine.
 //!
 //! Three call families map 1:1 onto the artifact kinds:
-//!   - `grad_block`        -> (grad_sum[d], loss_sum, count)
-//!   - `svrg_block`/`saga_block` -> (x_out[d], x_avg[d])
-//!   - `nm_block`          -> (X^T diag(mask) X v, count)
+//!   - `grad_block` / `gradm{K}`  -> (grad_sum[d], loss_sum, count)
+//!   - `svrg_block`/`saga_block`  -> (x_out[d], x_avg[d])
+//!   - `nm_block` / `nmm{K}`      -> (X^T diag(mask) X v, count)
 //!
-//! Block operands are uploaded to the device **once** per block
+//! Block operands are uploaded to the device **once** per block group
 //! (`BlockLits`) and reused across every artifact call in the inner loops
-//! (DSVRG/SAGA sweeps, CG iterations); only the small per-call vectors
-//! (iterates, scalars) are uploaded fresh. This is both the §Perf hot-path
-//! optimization and the workaround for the literal-input `execute` leak
-//! (see runtime::Engine::execute).
+//! (DSVRG/SAGA sweeps, CG iterations). A `BlockLits` may hold `k` stacked
+//! 256-row blocks: the grad/normal-matvec wrappers then dispatch the fused
+//! `gradm{k}`/`nmm{k}` artifacts, which reduce across the stacked blocks
+//! *on device* so one call downloads one output tuple per group.
+//!
+//! The small per-call vectors (iterates, directions, scalars) go through
+//! the engine's [`super::ExecSession`] pool: each named slot re-uploads
+//! only when its contents changed, so e.g. the iterate `w` is moved to the
+//! device once per round rather than once per block. This is both the
+//! §Perf hot-path optimization and the workaround for the literal-input
+//! `execute` leak (see runtime::Engine::execute).
 
 use super::{lit_first, lit_to_vec, ArtifactKind, Engine, Manifest};
 use crate::data::blocks::Block;
@@ -25,17 +32,23 @@ pub struct GradOut {
     pub count: f64,
 }
 
-/// Device-resident (X, y, mask) operands for one block, uploaded once.
+/// Device-resident (X, y, mask) operands for `k` stacked blocks,
+/// uploaded once. `k == 1` is a plain single-block upload.
 pub struct BlockLits {
     pub x: xla::PjRtBuffer,
     pub y: xla::PjRtBuffer,
     pub mask: xla::PjRtBuffer,
+    /// total valid rows across the stacked blocks
     pub valid: usize,
     pub d: usize,
+    /// total rows (k * block rows)
+    pub rows: usize,
+    /// stacked 256-row blocks in this upload (fused-dispatch width)
+    pub k: usize,
 }
 
 impl BlockLits {
-    pub fn from_block(engine: &Engine, block: &Block) -> Result<BlockLits> {
+    pub fn from_block(engine: &mut Engine, block: &Block) -> Result<BlockLits> {
         let rows = block.rows();
         Ok(BlockLits {
             x: engine.upload_mat(&block.x, rows, block.d)?,
@@ -43,6 +56,44 @@ impl BlockLits {
             mask: engine.upload(&block.mask)?,
             valid: block.valid,
             d: block.d,
+            rows,
+            k: 1,
+        })
+    }
+
+    /// Stack `blocks` (equal shape, consecutive) into ONE fused upload for
+    /// the multi-block grad/normal-matvec artifacts.
+    pub fn from_blocks(engine: &mut Engine, blocks: &[Block]) -> Result<BlockLits> {
+        ensure!(!blocks.is_empty(), "cannot stack zero blocks");
+        if blocks.len() == 1 {
+            return Self::from_block(engine, &blocks[0]);
+        }
+        let d = blocks[0].d;
+        let per_rows = blocks[0].rows();
+        ensure!(
+            blocks.iter().all(|b| b.d == d && b.rows() == per_rows),
+            "stacked blocks must share shape"
+        );
+        let k = blocks.len();
+        let rows = k * per_rows;
+        let mut x = Vec::with_capacity(rows * d);
+        let mut y = Vec::with_capacity(rows);
+        let mut mask = Vec::with_capacity(rows);
+        let mut valid = 0usize;
+        for b in blocks {
+            x.extend_from_slice(&b.x);
+            y.extend_from_slice(&b.y);
+            mask.extend_from_slice(&b.mask);
+            valid += b.valid;
+        }
+        Ok(BlockLits {
+            x: engine.upload_mat(&x, rows, d)?,
+            y: engine.upload(&y)?,
+            mask: engine.upload(&mask)?,
+            valid,
+            d,
+            rows,
+            k,
         })
     }
 }
@@ -52,13 +103,18 @@ impl Engine {
         Manifest::name_for(kind, loss.tag(), d)
     }
 
-    /// Fused block gradient+loss via the `grad_{loss}_d{d}` artifact.
+    /// Fused block gradient+loss: the `grad_{loss}_d{d}` artifact for a
+    /// single block, or the on-device-reducing `gradm{k}_{loss}_d{d}`
+    /// when `blk` stacks k blocks. The iterate `w` rides the session pool
+    /// (one upload per round, not per block).
     pub fn grad_block(&mut self, loss: Loss, blk: &BlockLits, w: &[f32]) -> Result<GradOut> {
         ensure!(w.len() == blk.d, "w dim {} != block dim {}", w.len(), blk.d);
-        let name = self.artifact_for(ArtifactKind::Grad, loss, blk.d);
-        let w_b = self.upload(w)?;
-        let outs = self.execute(&name, &[&blk.x, &blk.y, &blk.mask, &w_b])?;
+        let name = Manifest::name_for_k(ArtifactKind::Grad, loss.tag(), blk.d, blk.k)?;
+        let outs =
+            self.execute_pooled(&name, &[&blk.x, &blk.y, &blk.mask], &[("grad.w", w)])?;
         ensure!(outs.len() == 3, "grad artifact returned {} outputs", outs.len());
+        self.stats.downloads += 1;
+        self.stats.download_bytes += ((blk.d + 2) * std::mem::size_of::<f32>()) as u64;
         Ok(GradOut {
             grad_sum: lit_to_vec(&outs[0])?,
             loss_sum: lit_first(&outs[1])? as f64,
@@ -117,29 +173,43 @@ impl Engine {
         ensure!(
             x0.len() == blk.d && z.len() == blk.d && mu.len() == blk.d && center.len() == blk.d
         );
+        ensure!(blk.k == 1, "VR sweeps are sequential: per-block dispatch only");
         let name = self.artifact_for(kind, loss, blk.d);
-        let x0_b = self.upload(x0)?;
-        let z_b = self.upload(z)?;
-        let mu_b = self.upload(mu)?;
-        let c_b = self.upload(center)?;
-        let g_b = self.upload(&[gamma])?;
-        let e_b = self.upload(&[eta])?;
-        let outs = self.execute(
+        // x0 is the loop-carried iterate (changes every block); z/mu/center
+        // and the scalars are sweep-constant and hit the pool after the
+        // first block of a sweep.
+        let gamma_arr = [gamma];
+        let eta_arr = [eta];
+        let outs = self.execute_pooled(
             &name,
-            &[&blk.x, &blk.y, &blk.mask, &x0_b, &z_b, &mu_b, &c_b, &g_b, &e_b],
+            &[&blk.x, &blk.y, &blk.mask],
+            &[
+                ("vr.x0", x0),
+                ("vr.z", z),
+                ("vr.mu", mu),
+                ("vr.center", center),
+                ("vr.gamma", &gamma_arr),
+                ("vr.eta", &eta_arr),
+            ],
         )?;
         ensure!(outs.len() == 2, "{name} returned {} outputs", outs.len());
+        self.stats.downloads += 1;
+        self.stats.download_bytes += (2 * blk.d * std::mem::size_of::<f32>()) as u64;
         Ok((lit_to_vec(&outs[0])?, lit_to_vec(&outs[1])?))
     }
 
     /// Regularized-normal-equation matvec building block (squared loss):
-    /// returns (X^T diag(mask) X v, count).
+    /// returns (X^T diag(mask) X v, count). Dispatches the fused
+    /// `nmm{k}` artifact for stacked groups; `v` rides the session pool
+    /// (one upload per CG iteration, not per block per machine).
     pub fn nm_block(&mut self, blk: &BlockLits, v: &[f32]) -> Result<(Vec<f32>, f64)> {
         ensure!(v.len() == blk.d);
-        let name = self.artifact_for(ArtifactKind::NormalMatvec, Loss::Squared, blk.d);
-        let v_b = self.upload(v)?;
-        let outs = self.execute(&name, &[&blk.x, &blk.mask, &v_b])?;
+        let name =
+            Manifest::name_for_k(ArtifactKind::NormalMatvec, Loss::Squared.tag(), blk.d, blk.k)?;
+        let outs = self.execute_pooled(&name, &[&blk.x, &blk.mask], &[("nm.v", v)])?;
         ensure!(outs.len() == 2);
+        self.stats.downloads += 1;
+        self.stats.download_bytes += ((blk.d + 1) * std::mem::size_of::<f32>()) as u64;
         Ok((lit_to_vec(&outs[0])?, lit_first(&outs[1])? as f64))
     }
 }

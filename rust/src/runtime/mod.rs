@@ -2,9 +2,39 @@
 //! request path. Pattern follows /opt/xla-example/load_hlo:
 //! `PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
 //! execute`. Executables are cached per artifact; Python never runs here.
+//!
+//! # Device-residency contract
+//!
+//! The engine is built so that steady-state dispatch moves O(1) small
+//! vectors per *round*, not per block:
+//!
+//! - **Block operands** (`X`, `y`, `mask`) are uploaded once when a batch
+//!   is packed ([`exec::BlockLits`]) and reused by every artifact call.
+//!   The hot grad/normal-matvec paths consume *fused multi-block* uploads
+//!   (`gradm{K}`/`nmm{K}` artifacts, K stacked 256-row blocks per
+//!   dispatch) whose cross-block reduction happens on device, so one call
+//!   downloads one `(grad_sum, loss_sum, count)` tuple per group.
+//! - **Small per-call vectors** (the iterate `w`, the six VR-sweep
+//!   vectors, CG directions, scalars) go through the [`ExecSession`]
+//!   buffer pool: a named slot re-uploads only when its contents changed,
+//!   so an unchanged iterate costs zero host->device traffic no matter how
+//!   many blocks it is dispatched against.
+//! - **Downloads** happen only at artifact outputs; every typed wrapper
+//!   fetches exactly one (tupled) result per dispatch.
+//!
+//! # Traffic counters
+//!
+//! [`EngineStats`] meters the contract: `uploads`/`upload_bytes` count
+//! every `buffer_from_host_buffer` call, `downloads`/`download_bytes`
+//! every device->host literal fetch, `upload_cache_hits`/`_misses` the
+//! session pool's behavior, and `literal_conversions` (the legacy §Perf
+//! counter) the per-dispatch output conversions. `accounting::
+//! DeviceTraffic` renders them; `bench_runtime` writes them to
+//! `BENCH_runtime.json` so the perf trajectory is trackable across PRs.
 
 pub mod artifact;
 pub mod exec;
+pub mod session;
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -12,6 +42,7 @@ use std::path::Path;
 use std::time::Instant;
 
 pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
+pub use session::ExecSession;
 
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
@@ -21,13 +52,39 @@ pub struct EngineStats {
     pub execute_ns: u128,
     /// host<->device literal conversions (perf counter for §Perf)
     pub literal_conversions: u64,
+    /// host->device buffer creations (blocks + session misses)
+    pub uploads: u64,
+    /// bytes moved host->device
+    pub upload_bytes: u64,
+    /// device->host output fetches, metered by the typed wrappers
+    /// (grad/vr/nm) alongside `download_bytes`, so count and bytes always
+    /// agree; the raw `Engine::execute` path counts only
+    /// `literal_conversions`
+    pub downloads: u64,
+    /// bytes moved device->host (typed-wrapper outputs)
+    pub download_bytes: u64,
+    /// session-slot reuses: an upload that was skipped entirely
+    pub upload_cache_hits: u64,
+    /// session-slot refreshes: contents changed, re-uploaded
+    pub upload_cache_misses: u64,
 }
 
-/// The PJRT engine: one CPU client + a compiled-executable cache.
+impl EngineStats {
+    /// Total bytes moved across the host<->device boundary.
+    pub fn bytes_moved(&self) -> u64 {
+        self.upload_bytes + self.download_bytes
+    }
+}
+
+/// The PJRT engine: one CPU client + a compiled-executable cache + the
+/// session buffer pool for small per-call operands.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    session: ExecSession,
+    /// supported fused-dispatch widths, computed once from the manifest
+    fuse_widths: Vec<usize>,
     pub stats: EngineStats,
 }
 
@@ -37,7 +94,15 @@ impl Engine {
         let manifest = Manifest::load(artifacts_dir)?;
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
-        Ok(Engine { client, manifest, execs: HashMap::new(), stats: EngineStats::default() })
+        let fuse_widths = manifest.fuse_widths();
+        Ok(Engine {
+            client,
+            manifest,
+            execs: HashMap::new(),
+            session: ExecSession::new(),
+            fuse_widths,
+            stats: EngineStats::default(),
+        })
     }
 
     /// Load from the default artifacts dir ($MBPROX_ARTIFACTS or ./artifacts).
@@ -54,8 +119,25 @@ impl Engine {
         &self.client
     }
 
+    /// The session upload pool (inspection / invalidation).
+    pub fn session(&self) -> &ExecSession {
+        &self.session
+    }
+
+    /// Drop every pooled small-operand buffer (block uploads are owned by
+    /// callers and unaffected).
+    pub fn reset_session(&mut self) {
+        self.session.clear();
+    }
+
     pub fn block_rows(&self) -> usize {
         self.manifest.block
+    }
+
+    /// Supported fused-dispatch widths, widest first (empty when the
+    /// manifest carries no multi-block artifacts). Computed once at load.
+    pub fn fuse_widths(&self) -> &[usize] {
+        &self.fuse_widths
     }
 
     pub fn platform(&self) -> String {
@@ -100,40 +182,79 @@ impl Engine {
     /// literal-input `execute` leaks its internal literal->buffer
     /// conversions (~70 KB/call measured — see EXPERIMENTS.md §Perf), so
     /// block operands are uploaded once (`upload`/`upload_mat`) and small
-    /// per-call vectors are uploaded fresh, with rust-side Drop reclaiming
-    /// them deterministically.
+    /// per-call vectors go through the session pool, with rust-side Drop
+    /// reclaiming them deterministically.
     pub fn execute(
         &mut self,
         name: &str,
         inputs: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::Literal>> {
         self.executable(name)?; // ensure compiled (borrow gymnastics)
-        let t0 = Instant::now();
         let exe = self.execs.get(name).unwrap();
+        Self::dispatch(&mut self.stats, exe, name, inputs)
+    }
+
+    /// Execute with `block_inputs` (caller-owned device buffers) followed
+    /// by `pooled_tail`: (slot, host data) pairs routed through the
+    /// session pool, so unchanged operands are not re-uploaded. Input
+    /// order is `block_inputs ++ pooled_tail`, matching every artifact's
+    /// (block operands, small vectors) signature.
+    pub fn execute_pooled(
+        &mut self,
+        name: &str,
+        block_inputs: &[&xla::PjRtBuffer],
+        pooled_tail: &[(&'static str, &[f32])],
+    ) -> Result<Vec<xla::Literal>> {
+        self.executable(name)?;
+        for (key, data) in pooled_tail {
+            self.session.ensure(&self.client, &mut self.stats, key, data)?;
+        }
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(block_inputs.len() + pooled_tail.len());
+        inputs.extend_from_slice(block_inputs);
+        for (key, _) in pooled_tail {
+            inputs.push(self.session.get(key)?);
+        }
+        let exe = self.execs.get(name).unwrap();
+        Self::dispatch(&mut self.stats, exe, name, &inputs)
+    }
+
+    fn dispatch(
+        stats: &mut EngineStats,
+        exe: &xla::PjRtLoadedExecutable,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
         let out = exe
             .execute_b::<&xla::PjRtBuffer>(inputs)
             .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
         let mut lit = out[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching output of {name}: {e:?}"))?;
-        self.stats.executions += 1;
-        self.stats.execute_ns += t0.elapsed().as_nanos();
-        self.stats.literal_conversions += 1;
+        stats.executions += 1;
+        stats.execute_ns += t0.elapsed().as_nanos();
+        stats.literal_conversions += 1;
         // lowered with return_tuple=True: output is always a tuple
         let parts = lit.decompose_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
         Ok(parts)
     }
 
-    /// Upload a 1-D f32 vector to the device.
-    pub fn upload(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+    /// Upload a 1-D f32 vector to the device (uncached; see
+    /// [`Engine::execute_pooled`] for the cached path).
+    pub fn upload(&mut self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.stats.uploads += 1;
+        self.stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
         self.client
             .buffer_from_host_buffer(data, &[data.len()], None)
             .map_err(|e| anyhow!("uploading vec[{}]: {e:?}", data.len()))
     }
 
     /// Upload a row-major matrix to the device.
-    pub fn upload_mat(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+    pub fn upload_mat(&mut self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
         anyhow::ensure!(data.len() == rows * cols, "matrix upload size mismatch");
+        self.stats.uploads += 1;
+        self.stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
         self.client
             .buffer_from_host_buffer(data, &[rows, cols], None)
             .map_err(|e| anyhow!("uploading mat[{rows}x{cols}]: {e:?}"))

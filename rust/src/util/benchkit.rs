@@ -3,6 +3,11 @@
 //! Provides warmup + repeated timed runs with median/mean/p10/p90 stats and
 //! a stable text report format consumed by EXPERIMENTS.md. Each paper
 //! table/figure bench under `rust/benches/` uses this via `harness = false`.
+//!
+//! Benches that should be trackable across PRs additionally push their
+//! stats into a [`JsonReport`] and write a `BENCH_<name>.json` file
+//! (name, mean/p50 latency, throughput, plus engine traffic counters) —
+//! machine-readable so the perf trajectory can be diffed by CI.
 
 use std::time::Instant;
 
@@ -18,6 +23,15 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Mean operations per second (inverse mean latency).
+    pub fn throughput_ops_per_sec(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<44} iters={:<5} median={:>12} mean={:>12} p10={:>12} p90={:>12}",
@@ -97,6 +111,79 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench report: accumulates [`BenchStats`] rows and
+/// named counters (e.g. the engine's upload/download totals), then writes
+/// a stable JSON file. No serde in the offline image — the writer emits
+/// the small fixed schema by hand:
+///
+/// ```json
+/// {"benches": [{"name": "...", "iters": 50, "mean_ns": 1.0,
+///               "p50_ns": 1.0, "p10_ns": 1.0, "p90_ns": 1.0,
+///               "min_ns": 1.0, "throughput_ops_per_sec": 1.0}],
+///  "counters": {"engine.uploads": 12.0}}
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct JsonReport {
+    records: Vec<BenchStats>,
+    counters: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record one bench result (call after printing its text report).
+    pub fn push(&mut self, stats: &BenchStats) {
+        self.records.push(stats.clone());
+    }
+
+    /// Record a named scalar (engine counters, derived ratios, ...).
+    pub fn counter(&mut self, name: &str, value: f64) {
+        self.counters.push((name.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"benches\": [");
+        for (i, s) in self.records.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p10_ns\": {:.1}, \"p90_ns\": {:.1}, \
+                 \"min_ns\": {:.1}, \"throughput_ops_per_sec\": {:.3}}}",
+                escape(&s.name),
+                s.iters,
+                s.mean_ns,
+                s.median_ns,
+                s.p10_ns,
+                s.p90_ns,
+                s.min_ns,
+                s.throughput_ops_per_sec(),
+            ));
+        }
+        out.push_str("\n  ],\n  \"counters\": {");
+        for (i, (name, value)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{}\": {:.3}", escape(name), value));
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Write the report; returns the path for the bench's log line.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +213,28 @@ mod tests {
         assert!(fmt_ns(5.0e4).ends_with("us"));
         assert!(fmt_ns(5.0e7).ends_with("ms"));
         assert!(fmt_ns(5.0e9).ends_with('s'));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let mut report = JsonReport::new();
+        let s = bench("noop \"quoted\"", 1, 8, || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        report.push(&s);
+        report.counter("engine.uploads", 42.0);
+        let parsed = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        let benches = parsed.get("benches").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].get("name").and_then(crate::util::json::Json::as_str),
+            Some("noop \"quoted\""));
+        assert_eq!(benches[0].get("iters").and_then(crate::util::json::Json::as_usize), Some(8));
+        assert!(benches[0]
+            .get("throughput_ops_per_sec")
+            .and_then(crate::util::json::Json::as_f64)
+            .unwrap()
+            > 0.0);
+        let up = parsed.get("counters").and_then(|c| c.get("engine.uploads")).unwrap();
+        assert_eq!(up.as_f64(), Some(42.0));
     }
 }

@@ -76,7 +76,7 @@ fn run_method(
             )) as Box<dyn SampleStream>
         })
         .collect();
-    let evaluator = Evaluator::new(&r.engine, d, Loss::Logistic, eval).unwrap();
+    let evaluator = Evaluator::new(&mut r.engine, d, Loss::Logistic, eval).unwrap();
     let mut ctx = RunContext {
         engine: &mut r.engine,
         net: Network::new(m, NetModel::default()),

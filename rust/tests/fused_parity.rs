@@ -1,0 +1,234 @@
+//! Golden parity: the fused multi-block (`gradm{K}`/`nmm{K}`) dispatch
+//! path and the session-cached upload path must reproduce the per-block
+//! reference path across padded, ragged and empty blocks on both losses.
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::data::blocks::{pack_all, BLOCK_ROWS};
+use mbprox::data::synth::{SynthSpec, SynthStream};
+use mbprox::data::{Loss, Sample, SampleStream};
+use mbprox::objective::{distributed_mean_grad, local_grad_sum, MachineBatch};
+use mbprox::runtime::exec::{BlockLits, GradOut};
+use mbprox::runtime::Engine;
+use mbprox::util::testkit::assert_close;
+
+fn engine() -> Engine {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::new(&dir).expect("run `make artifacts` before cargo test")
+}
+
+fn draw(loss: Loss, d: usize, n: usize, seed: u64) -> Vec<Sample> {
+    let spec = match loss {
+        Loss::Squared => SynthSpec::least_squares(d),
+        Loss::Logistic => SynthSpec::logistic(d),
+    };
+    SynthStream::new(spec, seed).draw_many(n)
+}
+
+/// The seed engine's reference: one dispatch per 256-row block, host axpy.
+fn per_block_grad(e: &mut Engine, loss: Loss, samples: &[Sample], d: usize, w: &[f32]) -> GradOut {
+    let blocks = pack_all(samples, d);
+    let mut g = vec![0.0f32; d];
+    let mut lsum = 0.0;
+    let mut cnt = 0.0;
+    for b in &blocks {
+        let lits = BlockLits::from_block(e, b).unwrap();
+        let out = e.grad_block(loss, &lits, w).unwrap();
+        for j in 0..d {
+            g[j] += out.grad_sum[j];
+        }
+        lsum += out.loss_sum;
+        cnt += out.count;
+    }
+    GradOut { grad_sum: g, loss_sum: lsum, count: cnt }
+}
+
+#[test]
+fn fused_grad_matches_per_block_path() {
+    let mut e = engine();
+    assert!(!e.fuse_widths().is_empty(), "manifest should carry gradm/nmm artifacts");
+    let d = 64;
+    // exact multiples of the widths, ragged tails, sub-width, and empty
+    for n in [0usize, 100, 256, 4 * 256, 8 * 256, 5 * 256 + 60, 9 * 256 + 1] {
+        for loss in [Loss::Squared, Loss::Logistic] {
+            let samples = draw(loss, d, n, 42 + n as u64);
+            let w: Vec<f32> = (0..d).map(|j| ((j % 5) as f32 - 2.0) * 0.05).collect();
+            let reference = per_block_grad(&mut e, loss, &samples, d, &w);
+            let batch = MachineBatch::pack(&mut e, d, &samples).unwrap();
+            let mut meter = ClusterMeter::new(1);
+            let fused = local_grad_sum(&mut e, loss, &batch, &w, meter.machine(0)).unwrap();
+            assert_eq!(fused.count, reference.count, "count n={n}");
+            assert_eq!(fused.count, n as f64);
+            assert_close(&fused.grad_sum, &reference.grad_sum, 1e-3, 1e-3);
+            assert!(
+                (fused.loss_sum - reference.loss_sum).abs()
+                    / reference.loss_sum.abs().max(1.0)
+                    < 1e-3,
+                "loss n={n} fused={} ref={}",
+                fused.loss_sum,
+                reference.loss_sum
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_groups_cover_blocks_with_ragged_tail() {
+    let mut e = engine();
+    let widths: Vec<usize> = e.fuse_widths().to_vec();
+    let d = 64;
+    // 9 blocks + a partial: greedy grouping must cover every block exactly
+    let n = 9 * BLOCK_ROWS + 17;
+    let samples = draw(Loss::Squared, d, n, 3);
+    let batch = MachineBatch::pack(&mut e, d, &samples).unwrap();
+    assert_eq!(batch.n_blocks(), 10);
+    let total_k: usize = batch.groups.iter().map(|g| g.k).sum();
+    assert_eq!(total_k, batch.n_blocks());
+    let total_valid: usize = batch.groups.iter().map(|g| g.valid).sum();
+    assert_eq!(total_valid, n);
+    for g in &batch.groups {
+        assert_eq!(g.rows, g.k * BLOCK_ROWS);
+        assert!(g.k == 1 || widths.contains(&g.k), "unexpected width {}", g.k);
+    }
+    if let Some(&widest) = widths.first() {
+        assert_eq!(batch.groups[0].k, widest, "greedy packer starts widest");
+    }
+}
+
+#[test]
+fn fused_nm_matches_per_block_path() {
+    let mut e = engine();
+    let d = 64;
+    let n = 6 * BLOCK_ROWS + 40; // ragged: one k=4 group + singles under (8,4)
+    let samples = draw(Loss::Squared, d, n, 11);
+    let v: Vec<f32> = (0..d).map(|j| (j as f32 * 0.03).sin()).collect();
+    // reference per-block
+    let blocks = pack_all(&samples, d);
+    let mut expect = vec![0.0f32; d];
+    let mut expect_cnt = 0.0;
+    for b in &blocks {
+        let lits = BlockLits::from_block(&mut e, b).unwrap();
+        let (part, c) = e.nm_block(&lits, &v).unwrap();
+        for j in 0..d {
+            expect[j] += part[j];
+        }
+        expect_cnt += c;
+    }
+    // fused
+    let batch = MachineBatch::pack(&mut e, d, &samples).unwrap();
+    let mut got = vec![0.0f32; d];
+    let mut got_cnt = 0.0;
+    for g in &batch.groups {
+        let (part, c) = e.nm_block(g, &v).unwrap();
+        for j in 0..d {
+            got[j] += part[j];
+        }
+        got_cnt += c;
+    }
+    assert_eq!(got_cnt, expect_cnt);
+    assert_eq!(got_cnt, n as f64);
+    assert_close(&got, &expect, 1e-3, 1e-3);
+}
+
+#[test]
+fn cached_upload_path_is_bitwise_stable() {
+    let mut e = engine();
+    let d = 64;
+    let samples = draw(Loss::Squared, d, 200, 5);
+    let batch = MachineBatch::pack(&mut e, d, &samples).unwrap();
+    let w: Vec<f32> = (0..d).map(|j| 0.01 * j as f32).collect();
+    let first = e.grad_block(Loss::Squared, &batch.groups[0], &w).unwrap();
+    let misses_before = e.stats.upload_cache_misses;
+    let hits_before = e.stats.upload_cache_hits;
+    let uploads_before = e.stats.uploads;
+    // same w: the dispatch must reuse the resident buffer bit-for-bit
+    let second = e.grad_block(Loss::Squared, &batch.groups[0], &w).unwrap();
+    assert_eq!(e.stats.uploads, uploads_before, "unchanged w must not re-upload");
+    assert_eq!(e.stats.upload_cache_misses, misses_before);
+    assert_eq!(e.stats.upload_cache_hits, hits_before + 1);
+    assert_eq!(first.grad_sum, second.grad_sum, "cached path must be bitwise identical");
+    assert_eq!(first.loss_sum, second.loss_sum);
+    assert_eq!(first.count, second.count);
+    // changed w: exactly one refreshed upload, result tracks the new iterate
+    let w2: Vec<f32> = w.iter().map(|x| x + 0.5).collect();
+    let third = e.grad_block(Loss::Squared, &batch.groups[0], &w2).unwrap();
+    assert_eq!(e.stats.uploads, uploads_before + 1);
+    assert_eq!(e.stats.upload_cache_misses, misses_before + 1);
+    assert_ne!(first.grad_sum, third.grad_sum);
+    assert_eq!(e.session().generation("grad.w"), 2);
+}
+
+#[test]
+fn vr_lits_upload_lazily_and_once() {
+    let mut e = engine();
+    let d = 64;
+    let samples = draw(Loss::Squared, d, 3 * BLOCK_ROWS, 9);
+    let batch = MachineBatch::pack(&mut e, d, &samples).unwrap();
+    let after_pack = e.stats.uploads;
+    // grad path never touches the per-block buffers
+    let w = vec![0.02f32; d];
+    let mut meter = ClusterMeter::new(1);
+    local_grad_sum(&mut e, Loss::Squared, &batch, &w, meter.machine(0)).unwrap();
+    assert_eq!(
+        e.stats.uploads,
+        after_pack + 1, // just the pooled w
+        "grad path must not materialize per-block buffers"
+    );
+    // first VR access uploads the 3 blocks (x, y, mask each)...
+    let n1 = batch.vr_lits(&mut e).unwrap().len();
+    assert_eq!(n1, 3);
+    let after_vr = e.stats.uploads;
+    assert_eq!(after_vr, after_pack + 1 + 9);
+    // ...and the second access reuses them
+    let n2 = batch.vr_lits(&mut e).unwrap().len();
+    assert_eq!(n2, 3);
+    assert_eq!(e.stats.uploads, after_vr);
+}
+
+#[test]
+fn grad_only_pack_serves_grad_but_refuses_vr() {
+    let mut e = engine();
+    let d = 64;
+    let samples = draw(Loss::Squared, d, 300, 8);
+    let batch = MachineBatch::pack_grad_only(&mut e, d, &samples).unwrap();
+    let w = vec![0.01f32; d];
+    let mut meter = ClusterMeter::new(1);
+    let out = local_grad_sum(&mut e, Loss::Squared, &batch, &w, meter.machine(0)).unwrap();
+    assert_eq!(out.count, 300.0);
+    assert!(batch.vr_lits(&mut e).is_err(), "grad-only pack must refuse VR materialization");
+}
+
+#[test]
+fn empty_machine_set_returns_zero_gradient() {
+    // regression: used to panic on machines[0] before the emptiness check
+    let mut e = engine();
+    let machines: Vec<MachineBatch> = Vec::new();
+    let w = vec![0.1f32; 64];
+    let mut net = Network::new(0, NetModel::default());
+    let mut meter = ClusterMeter::new(0);
+    let (g, loss, n) =
+        distributed_mean_grad(&mut e, Loss::Squared, &machines, &w, &mut net, &mut meter)
+            .unwrap();
+    assert_eq!(g, vec![0.0f32; 64]);
+    assert_eq!(loss, 0.0);
+    assert_eq!(n, 0.0);
+}
+
+#[test]
+fn empty_batch_machine_contributes_nothing() {
+    let mut e = engine();
+    let d = 64;
+    let machines = vec![
+        MachineBatch::pack(&mut e, d, &draw(Loss::Squared, d, 300, 1)).unwrap(),
+        MachineBatch::empty(d),
+    ];
+    let w = vec![0.05f32; d];
+    let mut net = Network::new(2, NetModel::default());
+    let mut meter = ClusterMeter::new(2);
+    let (g, _, n) =
+        distributed_mean_grad(&mut e, Loss::Squared, &machines, &w, &mut net, &mut meter)
+            .unwrap();
+    assert_eq!(n, 300.0);
+    assert_eq!(g.len(), d);
+}

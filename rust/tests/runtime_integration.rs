@@ -54,7 +54,7 @@ fn ref_grad(loss: Loss, x: &[f32], y: &[f32], mask: &[f32], w: &[f32], d: usize)
 }
 
 fn make_lits(
-    e: &Engine,
+    e: &mut Engine,
     loss: Loss,
     d: usize,
     valid: usize,
@@ -84,7 +84,7 @@ fn grad_artifacts_match_reference() {
     let mut e = engine();
     for loss in [Loss::Squared, Loss::Logistic] {
         for d in [64usize, 128] {
-            let (lits, x, y, mask) = make_lits(&e, loss, d, 200, 42);
+            let (lits, x, y, mask) = make_lits(&mut e, loss, d, 200, 42);
             let w: Vec<f32> = (0..d).map(|j| ((j % 7) as f32 - 3.0) * 0.1).collect();
             let out = e.grad_block(loss, &lits, &w).unwrap();
             let (g_ref, l_ref, c_ref) = ref_grad(loss, &x, &y, &mask, &w, d);
@@ -99,7 +99,7 @@ fn grad_artifacts_match_reference() {
 fn nm_artifact_matches_reference() {
     let mut e = engine();
     let d = 64;
-    let (lits, x, _y, mask, ) = make_lits(&e, Loss::Squared, d, 150, 7);
+    let (lits, x, _y, mask, ) = make_lits(&mut e, Loss::Squared, d, 150, 7);
     let v: Vec<f32> = (0..d).map(|j| (j as f32 * 0.01).sin()).collect();
     let (out, cnt) = e.nm_block(&lits, &v).unwrap();
     // reference: X^T diag(mask) X v
@@ -128,7 +128,7 @@ fn svrg_artifact_matches_host_loop() {
     for loss in [Loss::Squared, Loss::Logistic] {
         let d = 64;
         let valid = 100;
-        let (lits, x, y, mask) = make_lits(&e, loss, d, valid, 11);
+        let (lits, x, y, mask) = make_lits(&mut e, loss, d, valid, 11);
         let x0: Vec<f32> = (0..d).map(|j| 0.01 * j as f32).collect();
         let z = vec![0.0f32; d];
         // mu = mean gradient at z over valid rows
@@ -187,7 +187,7 @@ fn saga_artifact_matches_host_loop() {
     for loss in [Loss::Squared, Loss::Logistic] {
         let d = 64;
         let valid = 80;
-        let (lits, x, y, mask) = make_lits(&e, loss, d, valid, 21);
+        let (lits, x, y, mask) = make_lits(&mut e, loss, d, valid, 21);
         let x0: Vec<f32> = (0..d).map(|j| 0.02 * (j as f32 - 32.0)).collect();
         let z = vec![0.0f32; d];
         let (mut mu, _, cnt) = ref_grad(loss, &x, &y, &mask, &z, d);
@@ -247,13 +247,13 @@ fn saga_artifact_matches_host_loop() {
 fn padded_block_equals_compact_block() {
     let mut e = engine();
     let d = 64;
-    let (lits_pad, _, _, _) = make_lits(&e, Loss::Squared, d, 60, 99);
+    let (lits_pad, _, _, _) = make_lits(&mut e, Loss::Squared, d, 60, 99);
     let w = vec![0.05f32; d];
     let out = e.grad_block(Loss::Squared, &lits_pad, &w).unwrap();
     assert_eq!(out.count, 60.0);
     // grad of masked rows is exactly zero contribution: recompute with
     // fresh stream over the same seed but full 60 rows only
-    let (lits_same, _, _, _) = make_lits(&e, Loss::Squared, d, 60, 99);
+    let (lits_same, _, _, _) = make_lits(&mut e, Loss::Squared, d, 60, 99);
     let out2 = e.grad_block(Loss::Squared, &lits_same, &w).unwrap();
     assert_close(&out.grad_sum, &out2.grad_sum, 1e-6, 1e-6);
 }
@@ -261,7 +261,7 @@ fn padded_block_equals_compact_block() {
 #[test]
 fn engine_rejects_wrong_dim_inputs() {
     let mut e = engine();
-    let (lits, _, _, _) = make_lits(&e, Loss::Squared, 64, 10, 1);
+    let (lits, _, _, _) = make_lits(&mut e, Loss::Squared, 64, 10, 1);
     let w_bad = vec![0.0f32; 32];
     assert!(e.grad_block(Loss::Squared, &lits, &w_bad).is_err());
     assert!(e.nm_block(&lits, &w_bad).is_err());
@@ -284,7 +284,7 @@ fn manifest_rejects_corrupt_json() {
 #[test]
 fn engine_stats_accumulate() {
     let mut e = engine();
-    let (lits, _, _, _) = make_lits(&e, Loss::Squared, 64, 50, 2);
+    let (lits, _, _, _) = make_lits(&mut e, Loss::Squared, 64, 50, 2);
     let w = vec![0.0f32; 64];
     let before = e.stats.executions;
     for _ in 0..5 {
