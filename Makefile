@@ -6,7 +6,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts pytest test bench fmt lint clean
+.PHONY: artifacts pytest test bench fmt lint doc clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS)
@@ -25,6 +25,9 @@ fmt:
 
 lint:
 	cd rust && cargo clippy --all-targets -- -D warnings
+
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 clean:
 	rm -rf $(ARTIFACTS) rust/target

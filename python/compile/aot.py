@@ -41,6 +41,7 @@ def emit_all(out_dir: str, block: int = BLOCK, dims=DIMS) -> dict:
                 "arg_shapes": [list(s) for s in spec.arg_shapes],
                 "outputs": list(spec.outputs),
                 "k": spec.k,
+                "chained": spec.chained,
                 "sha256": hashlib.sha256(text.encode()).hexdigest(),
             }
         )

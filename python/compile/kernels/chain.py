@@ -1,0 +1,367 @@
+"""L1 Pallas kernels for the device-resident vector plane.
+
+Every kernel here returns a **single array** (lowered with
+``return_tuple=False``) so the rust engine can feed one dispatch's output
+buffer straight into the next dispatch without a ``to_literal_sync``
+round-trip.  Together they close the chained half of the backend contract
+(upload / dispatch / **chain** / **reduce**):
+
+- ``grad_acc`` / ``nm_acc``: the hot-path reductions with a carried
+  accumulator input, so a machine's whole batch folds into one device
+  vector with zero downloads (``out = acc + sum_over_blocks(...)``).
+- ``vr_chain``: the SVRG/SAGA sweep with a ``[2, d]`` state ``S`` —
+  ``S[0]`` is the loop-carried iterate, ``S[1]`` the weighted-average
+  accumulator (a sum of per-block ``xsum`` vectors, gated so all-padding
+  blocks contribute nothing, mirroring the host combiner exactly).
+- ``vec_scale`` / ``vec_axpby`` / ``vec_dot`` / ``vr_avg`` / ``vr_reset``:
+  the loss-independent vector glue (CG recurrences, mean extraction).
+- ``reduce_weighted``: the cross-machine collective.  Accumulates in f64
+  in machine order — the same IEEE operation sequence as the rust host
+  collective — so the downloaded result is **bit-identical** to
+  ``Network::all_reduce_weighted``/``all_reduce_avg`` on the same inputs.
+
+The multi-block kernels reuse the sequential-grid accumulation idiom of
+``grad.py``: a 1-D grid walks the K stacked sub-blocks while the output
+stays pinned to block 0, so the cross-block reduction happens on device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DTYPE, LOSS_LOGISTIC, LOSS_SQUARED, STATE_ROWS
+from .saga import _link_residual
+from .svrg import _row_grad_log, _row_grad_sq
+
+
+def _check_width(rows: int, k: int) -> int:
+    if k <= 0 or rows % k != 0:
+        raise ValueError(f"rows {rows} not divisible into k={k} blocks")
+    return rows // k
+
+
+def _make_grad_acc_kernel(loss: str):
+    """One grid step = one sub-block; out starts at the carried ``acc``."""
+
+    def kernel(x_ref, y_ref, m_ref, w_ref, a_ref, out_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            out_ref[...] = a_ref[...]
+
+        X = x_ref[...]  # [B, d]
+        y = y_ref[...]
+        mask = m_ref[...]
+        w = w_ref[...]
+        if loss == LOSS_SQUARED:
+            r = (jnp.dot(X, w) - y) * mask
+            out_ref[...] += jnp.dot(r, X)
+        else:
+            t = -y * jnp.dot(X, w)
+            s = jax.nn.sigmoid(t) * mask
+            out_ref[...] += jnp.dot(-y * s, X)
+
+    return kernel
+
+
+def grad_acc(loss: str, k: int, X, y, mask, w, acc):
+    """Chained K-block gradient accumulation: ``acc + grad_sum(X, y, mask, w)``.
+
+    The gradient itself matches :func:`..grad.block_grad`'s ``grad_sum``
+    output summed over the K stacked blocks; seeding with the previous
+    group's output chains a whole machine batch into one device vector.
+    Loss/count are NOT produced — the steady-state chained path tracks the
+    valid count host-side (it is known at pack time) and only evaluation
+    checkpoints need losses.
+    """
+    if loss not in (LOSS_SQUARED, LOSS_LOGISTIC):
+        raise ValueError(f"unknown loss {loss}")
+    rows, d = X.shape
+    b = _check_width(rows, k)
+    return pl.pallas_call(
+        _make_grad_acc_kernel(loss),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), DTYPE),
+        interpret=True,
+    )(X, y, mask, w, acc)
+
+
+def _nm_acc_kernel(x_ref, m_ref, v_ref, a_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = a_ref[...]
+
+    X = x_ref[...]
+    mask = m_ref[...]
+    v = v_ref[...]
+    u = jnp.dot(X, v) * mask
+    out_ref[...] += jnp.dot(u, X)
+
+
+def nm_acc(k: int, X, mask, v, acc):
+    """Chained K-block ``acc + X^T diag(mask) X v`` (squared loss only)."""
+    rows, d = X.shape
+    b = _check_width(rows, k)
+    return pl.pallas_call(
+        _nm_acc_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), DTYPE),
+        interpret=True,
+    )(X, mask, v, acc)
+
+
+def _make_vr_chain_kernel(solver: str, loss: str):
+    """Chained VR sweep: grid step i sweeps stacked sub-block i.
+
+    The ``[2, d]`` output state is pinned across grid steps: ``out[0]``
+    carries the iterate from sub-block to sub-block (bitwise identical to
+    dispatching the per-block ``svrg``/``saga`` kernels back to back,
+    since the host round-trip it replaces was a lossless f32 copy), and
+    ``out[1]`` accumulates each sub-block's ``xsum`` — which equals the
+    host combiner's ``(1 + valid) * x_avg`` weight-times-average — gated
+    on ``valid > 0`` exactly like the host loop skips empty blocks.
+    """
+    row_grad = _row_grad_sq if loss == LOSS_SQUARED else _row_grad_log
+
+    def kernel(
+        x_ref, y_ref, m_ref, s_ref, z_ref, mu_ref, c_ref, gamma_ref, eta_ref, out_ref
+    ):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            out_ref[...] = s_ref[...]
+
+        X = x_ref[...]  # [B, d] — this grid step's sub-block
+        y = y_ref[...]
+        mask = m_ref[...]
+        z = z_ref[...]
+        mu = mu_ref[...]
+        center = c_ref[...]
+        gamma = gamma_ref[0]
+        eta = eta_ref[0]
+        x0 = out_ref[0, :]  # carried iterate (s_ref at step 0)
+
+        if solver == "svrg":
+
+            def body(r, carry):
+                x, xsum, cnt = carry
+                xi = X[r]
+                yi = y[r]
+                mi = mask[r]
+                g = row_grad(xi, yi, x) - row_grad(xi, yi, z) + mu + gamma * (x - center)
+                x_new = x - eta * g
+                x = jnp.where(mi > 0, x_new, x)
+                xsum = xsum + jnp.where(mi > 0, x, jnp.zeros_like(x))
+                cnt = cnt + mi
+                return (x, xsum, cnt)
+
+            x, xsum, cnt = jax.lax.fori_loop(
+                0, X.shape[0], body, (x0, x0, jnp.ones((), DTYPE))
+            )
+        else:  # saga
+            n_valid = jnp.maximum(jnp.sum(mask), 1.0)
+            alpha0 = _link_residual(loss, jnp.dot(X, z), y)
+
+            def body(r, carry):
+                x, gbar, alpha, xsum, cnt = carry
+                xi = X[r]
+                yi = y[r]
+                mi = mask[r]
+                s_new = _link_residual(loss, jnp.dot(xi, x), yi)
+                diff = s_new - alpha[r]
+                g = diff * xi + gbar + gamma * (x - center)
+                x_new = x - eta * g
+                x = jnp.where(mi > 0, x_new, x)
+                gbar = jnp.where(mi > 0, gbar + (diff / n_valid) * xi, gbar)
+                alpha = alpha.at[r].set(jnp.where(mi > 0, s_new, alpha[r]))
+                xsum = xsum + jnp.where(mi > 0, x, jnp.zeros_like(x))
+                cnt = cnt + mi
+                return (x, gbar, alpha, xsum, cnt)
+
+            x, _gbar, _alpha, xsum, cnt = jax.lax.fori_loop(
+                0, X.shape[0], body, (x0, mu, alpha0, x0, jnp.ones((), DTYPE))
+            )
+
+        valid = cnt - 1.0
+        out_ref[0, :] = x
+        out_ref[1, :] += jnp.where(valid > 0, xsum, jnp.zeros_like(xsum))
+
+    return kernel
+
+
+def vr_chain(solver: str, loss: str, k: int, X, y, mask, S, z, mu, center, gamma, eta):
+    """Chained K-block VR sweep over the state ``S = [x; avg_accum]``.
+
+    One dispatch advances the iterate through K stacked blocks and folds
+    each block's weighted average contribution into ``S[1]``; the host
+    divides by the (pack-time-known) total weight via ``vr_avg`` at sweep
+    end.  ``solver`` is ``svrg`` or ``saga`` (same duality as the
+    per-block kernels).
+    """
+    if solver not in ("svrg", "saga"):
+        raise ValueError(f"unknown VR solver {solver}")
+    if loss not in (LOSS_SQUARED, LOSS_LOGISTIC):
+        raise ValueError(f"unknown loss {loss}")
+    rows, d = X.shape
+    b = _check_width(rows, k)
+    return pl.pallas_call(
+        _make_vr_chain_kernel(solver, loss),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((STATE_ROWS, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((STATE_ROWS, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((STATE_ROWS, d), DTYPE),
+        interpret=True,
+    )(X, y, mask, S, z, mu, center, gamma, eta)
+
+
+def _vscale_kernel(x_ref, s_ref, out_ref):
+    out_ref[...] = s_ref[0] * x_ref[...]
+
+
+def vec_scale(x, s):
+    """``s * x`` with a shape-(1,) scalar operand."""
+    (d,) = x.shape
+    return pl.pallas_call(
+        _vscale_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), DTYPE),
+        interpret=True,
+    )(x, s)
+
+
+def _vaxpby_kernel(u_ref, v_ref, a_ref, b_ref, out_ref):
+    out_ref[...] = a_ref[0] * u_ref[...] + b_ref[0] * v_ref[...]
+
+
+def vec_axpby(u, v, a, b):
+    """``a*u + b*v`` with shape-(1,) scalar operands."""
+    (d,) = u.shape
+    return pl.pallas_call(
+        _vaxpby_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), DTYPE),
+        interpret=True,
+    )(u, v, a, b)
+
+
+def _vdot_kernel(u_ref, v_ref, out_ref):
+    out_ref[...] = jnp.sum(u_ref[...] * v_ref[...], keepdims=True)
+
+
+def vec_dot(u, v):
+    """``<u, v>`` as a shape-(1,) array — the CG loop's O(1) downlink."""
+    return pl.pallas_call(
+        _vdot_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), DTYPE),
+        interpret=True,
+    )(u, v)
+
+
+def _vravg_kernel(s_ref, invw_ref, out_ref):
+    invw = invw_ref[0]
+    # invw == 0 encodes "no valid rows swept": fall back to the carried
+    # iterate, mirroring the host combiner's empty-sweep fallback.
+    out_ref[...] = jnp.where(invw > 0, invw * s_ref[1, :], s_ref[0, :])
+
+
+def vr_avg(S, invw):
+    """Sweep average ``S[1] / total_weight`` (``invw = 1/total_weight``).
+
+    ``invw == 0`` returns ``S[0]`` (the unchanged iterate) — the host
+    passes 0 when every swept block was empty, matching the legacy
+    per-block combiner's fallback.
+    """
+    _, d = S.shape
+    return pl.pallas_call(
+        _vravg_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), DTYPE),
+        interpret=True,
+    )(S, invw)
+
+
+def _vrreset_kernel(s_ref, out_ref):
+    out_ref[0, :] = s_ref[0, :]
+    out_ref[1, :] = jnp.zeros_like(s_ref[1, :])
+
+
+def vr_reset(S):
+    """New-sweep state: keep the carried iterate, zero the accumulator."""
+    rows, d = S.shape
+    return pl.pallas_call(
+        _vrreset_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, d), DTYPE),
+        interpret=True,
+    )(S)
+
+
+def _make_reduce_kernel(m: int):
+    """Weighted mean over m machine vectors, f64 in host order.
+
+    Mirrors the rust host collective operation-for-operation: an f64
+    accumulator starting at zero, machine-order multiply-adds, an f64
+    weight total, one reciprocal, one f64 multiply, one f32 downcast.
+    Because every step is the same IEEE-754 operation on the same values,
+    the result is bit-identical to ``Network::all_reduce_weighted`` — the
+    property the device-collective parity test pins down.
+    """
+
+    def kernel(*refs):
+        v_refs = refs[:m]
+        w_ref = refs[m]
+        out_ref = refs[m + 1]
+        w = w_ref[...].astype(jnp.float64)
+        acc = jnp.zeros_like(v_refs[0][...], dtype=jnp.float64)
+        wtot = jnp.zeros((), jnp.float64)
+        for i in range(m):
+            acc = acc + w[i] * v_refs[i][...].astype(jnp.float64)
+            wtot = wtot + w[i]
+        inv = jnp.where(wtot > 0, 1.0 / wtot, jnp.zeros((), jnp.float64))
+        out_ref[...] = (acc * inv).astype(DTYPE)
+
+    return kernel
+
+
+def reduce_weighted(m: int, vs, w):
+    """Cross-machine weighted mean of ``m`` device vectors.
+
+    ``vs`` is a sequence of m ``[d]`` vectors, ``w`` an ``[m]`` weight
+    vector (weights must be f32-exact — counts are).  The f64 interior
+    requires x64 to be active *around the whole trace*: callers wrap the
+    call (or its ``jax.jit(...).lower``) in ``with enable_x64():`` — a
+    mid-trace toggle would leave the outer trace's dtypes inconsistent.
+    ``aot.py`` does this per-artifact (``ArtifactSpec.x64``) so every
+    other kernel's lowering stays byte-identical to the x32 default.
+    """
+    if len(vs) != m:
+        raise ValueError(f"expected {m} machine vectors, got {len(vs)}")
+    if m < 2:
+        raise ValueError(f"cross-machine reduce needs m >= 2, got {m}")
+    (d,) = vs[0].shape
+    return pl.pallas_call(
+        _make_reduce_kernel(m),
+        out_shape=jax.ShapeDtypeStruct((d,), DTYPE),
+        interpret=True,
+    )(*vs, w)

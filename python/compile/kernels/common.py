@@ -36,6 +36,20 @@ LOSSES: tuple[str, ...] = (LOSS_SQUARED, LOSS_LOGISTIC)
 # for the ragged tail.
 MULTI_KS: tuple[int, ...] = (4, 8)
 
+# Widths of the *chained* artifacts (``gacc{K}``/``nacc{K}``/``svrgc{K}``/
+# ``sagac{K}``): unlike the fused downloads above these include K=1 so the
+# ragged single-block tail of a fused group list can stay on device too.
+CHAIN_KS: tuple[int, ...] = (1,) + MULTI_KS
+
+# Machine counts served by the cross-machine reduce artifacts (``redm{M}``).
+# The rust DeviceCollective falls back to the host collective (with
+# identical round/vector accounting) for unsupported cluster sizes.
+RED_MS: tuple[int, ...] = (2, 4, 8)
+
+# Rows of the chained VR sweep state: S[0] is the loop-carried iterate x,
+# S[1] the weighted running-average accumulator (sum of per-block xsums).
+STATE_ROWS: int = 2
+
 DTYPE = jnp.float32
 
 
@@ -67,3 +81,50 @@ def multi_artifact_name(kind: str, loss: str, d: int, k: int) -> str:
     # reuse the single-block validation for loss/kind compatibility
     artifact_name(kind, loss, d)
     return f"{kind}m{k}_{loss}_d{d}"
+
+
+def chain_artifact_name(kind: str, loss: str, d: int, k: int) -> str:
+    """Canonical *chained* artifact name, e.g. ``gacc4_sq_d64``.
+
+    Chained artifacts return a single device-resident array (no tuple, no
+    download): ``gacc`` accumulates block gradient sums into a carried
+    vector, ``nacc`` the normal-equation matvec sums, and ``svrgc``/
+    ``sagac`` carry the VR sweep state ``[x; avg_accum]`` across fused
+    groups. The width ``k`` (number of stacked blocks) is always embedded,
+    including k=1 — the chained family has no single/multi dichotomy.
+    """
+    if kind not in ("gacc", "nacc", "svrgc", "sagac"):
+        raise ValueError(f"unknown chained artifact kind: {kind}")
+    if loss not in LOSSES:
+        raise ValueError(f"unknown loss: {loss}")
+    if kind == "nacc" and loss != LOSS_SQUARED:
+        raise ValueError("normal-equation matvec only exists for squared loss")
+    if k < 1:
+        raise ValueError(f"chained width must be >= 1, got {k}")
+    return f"{kind}{k}_{loss}_d{d}"
+
+
+def vec_artifact_name(kind: str, d: int) -> str:
+    """Canonical device vector-plane artifact name, e.g. ``vaxpby_d64``.
+
+    The vector plane is the loss-independent glue of the chained pipeline:
+    ``vscale`` (s*x), ``vaxpby`` (a*u + b*v), ``vdot`` (scalar dot),
+    ``vravg`` (extract the sweep average from a VR state), ``vrreset``
+    (zero a VR state's accumulator, keep its iterate).
+    """
+    if kind not in ("vscale", "vaxpby", "vdot", "vravg", "vrreset"):
+        raise ValueError(f"unknown vector-plane artifact kind: {kind}")
+    return f"{kind}_d{d}"
+
+
+def red_artifact_name(m: int, d: int) -> str:
+    """Canonical cross-machine reduce artifact name, e.g. ``redm4_d64``.
+
+    ``redm{M}`` consumes M machine vectors plus an M-weight vector and
+    produces their weighted mean, accumulating in f64 in machine order so
+    the downloaded result is bit-identical to the host collective
+    (``Network::all_reduce_weighted``).
+    """
+    if m < 2:
+        raise ValueError(f"cross-machine reduce needs m >= 2, got {m}")
+    return f"redm{m}_d{d}"

@@ -19,19 +19,34 @@ import jax
 
 from .kernels import (
     BLOCK,
+    CHAIN_KS,
     DIMS,
     DTYPE,
     LOSSES,
     LOSS_SQUARED,
     MULTI_KS,
+    RED_MS,
+    STATE_ROWS,
     artifact_name,
     block_grad,
     block_grad_multi,
+    chain_artifact_name,
+    grad_acc,
     multi_artifact_name,
+    nm_acc,
     normal_matvec,
     normal_matvec_multi,
+    red_artifact_name,
+    reduce_weighted,
     saga_block,
     svrg_block,
+    vec_artifact_name,
+    vec_axpby,
+    vec_dot,
+    vec_scale,
+    vr_avg,
+    vr_chain,
+    vr_reset,
 )
 
 
@@ -44,12 +59,21 @@ class ArtifactSpec:
     arg_shapes: tuple[tuple[int, ...], ...]
     # metadata recorded in the manifest for the rust registry
     kind: str = ""  # grad | svrg | saga | nm | grad_multi | nm_multi
+    #                 | gacc | nacc | svrgc | sagac
+    #                 | vscale | vaxpby | vdot | vravg | vrreset | red
     loss: str = ""
     d: int = 0
     block: int = BLOCK
     outputs: tuple[str, ...] = field(default=())
-    # stacked blocks per dispatch (1 = single-block artifact)
+    # stacked blocks per dispatch (1 = single-block artifact); for the
+    # cross-machine ``red`` kind this is the machine count M instead
     k: int = 1
+    # chained artifacts return ONE array (lowered return_tuple=False) so
+    # the rust engine can feed the output buffer into the next dispatch
+    chained: bool = False
+    # trace/lower under scoped x64 (the f64-interior reduce kernel only);
+    # everything else lowers under the x32 default, byte-identically
+    x64: bool = False
 
     def example_args(self):
         return tuple(jax.ShapeDtypeStruct(s, DTYPE) for s in self.arg_shapes)
@@ -109,8 +133,63 @@ def _nm_multi_fn(k: int):
     return fn
 
 
+def _gacc_fn(loss: str, k: int):
+    def fn(X, y, mask, w, acc):
+        return grad_acc(loss, k, X, y, mask, w, acc)
+
+    fn.__name__ = f"gacc{k}_{loss}"
+    return fn
+
+
+def _nacc_fn(k: int):
+    def fn(X, mask, v, acc):
+        return nm_acc(k, X, mask, v, acc)
+
+    fn.__name__ = f"nacc{k}_sq"
+    return fn
+
+
+def _vr_chain_fn(solver: str, loss: str, k: int):
+    def fn(X, y, mask, S, z, mu, center, gamma, eta):
+        return vr_chain(solver, loss, k, X, y, mask, S, z, mu, center, gamma, eta)
+
+    fn.__name__ = f"{solver}c{k}_{loss}"
+    return fn
+
+
+def _red_fn(m: int):
+    def fn(*args):
+        return reduce_weighted(m, args[:m], args[m])
+
+    fn.__name__ = f"redm{m}"
+    return fn
+
+
+_VEC_FNS: dict[str, Callable] = {
+    "vscale": lambda X, s: vec_scale(X, s),
+    "vaxpby": lambda u, v, a, b: vec_axpby(u, v, a, b),
+    "vdot": lambda u, v: vec_dot(u, v),
+    "vravg": lambda S, invw: vr_avg(S, invw),
+    "vrreset": lambda S: vr_reset(S),
+}
+
+
+def _vec_shapes(kind: str, d: int) -> tuple[tuple[int, ...], ...]:
+    return {
+        "vscale": ((d,), (1,)),
+        "vaxpby": ((d,), (d,), (1,), (1,)),
+        "vdot": ((d,), (d,)),
+        "vravg": ((STATE_ROWS, d), (1,)),
+        "vrreset": ((STATE_ROWS, d),),
+    }[kind]
+
+
+def _vec_out(kind: str) -> tuple[str, ...]:
+    return ("state",) if kind == "vrreset" else ("out",)
+
+
 def build_registry(
-    block: int = BLOCK, dims=DIMS, multi_ks=MULTI_KS
+    block: int = BLOCK, dims=DIMS, multi_ks=MULTI_KS, chain_ks=CHAIN_KS, red_ms=RED_MS
 ) -> dict[str, ArtifactSpec]:
     """All artifacts, keyed by canonical name (see kernels.artifact_name)."""
     reg: dict[str, ArtifactSpec] = {}
@@ -194,6 +273,81 @@ def build_registry(
                 outputs=("xtxv_sum", "count"),
                 k=k,
             )
+        # the device-resident vector plane: single-output chained artifacts
+        # (return_tuple=False) whose outputs feed the next dispatch without
+        # a download — see kernels/chain.py
+        for k in chain_ks:
+            for loss in LOSSES:
+                name = chain_artifact_name("gacc", loss, d, k)
+                reg[name] = ArtifactSpec(
+                    name=name,
+                    fn=_gacc_fn(loss, k),
+                    arg_shapes=((k * block, d), (k * block,), (k * block,), (d,), (d,)),
+                    kind="gacc",
+                    loss=loss,
+                    d=d,
+                    block=block,
+                    outputs=("grad_acc",),
+                    k=k,
+                    chained=True,
+                )
+                for solver in ("svrg", "saga"):
+                    name = chain_artifact_name(f"{solver}c", loss, d, k)
+                    reg[name] = ArtifactSpec(
+                        name=name,
+                        fn=_vr_chain_fn(solver, loss, k),
+                        arg_shapes=(
+                            (k * block, d), (k * block,), (k * block,),
+                            (STATE_ROWS, d), (d,), (d,), (d,), (1,), (1,),
+                        ),
+                        kind=f"{solver}c",
+                        loss=loss,
+                        d=d,
+                        block=block,
+                        outputs=("state",),
+                        k=k,
+                        chained=True,
+                    )
+            name = chain_artifact_name("nacc", LOSS_SQUARED, d, k)
+            reg[name] = ArtifactSpec(
+                name=name,
+                fn=_nacc_fn(k),
+                arg_shapes=((k * block, d), (k * block,), (d,), (d,)),
+                kind="nacc",
+                loss=LOSS_SQUARED,
+                d=d,
+                block=block,
+                outputs=("xtxv_acc",),
+                k=k,
+                chained=True,
+            )
+        for kind, fn in _VEC_FNS.items():
+            name = vec_artifact_name(kind, d)
+            reg[name] = ArtifactSpec(
+                name=name,
+                fn=fn,
+                arg_shapes=_vec_shapes(kind, d),
+                kind=kind,
+                d=d,
+                block=block,
+                outputs=_vec_out(kind),
+                chained=True,
+            )
+        # cross-machine reduce: the DeviceCollective kernel (k records M)
+        for m in red_ms:
+            name = red_artifact_name(m, d)
+            reg[name] = ArtifactSpec(
+                name=name,
+                fn=_red_fn(m),
+                arg_shapes=tuple([(d,)] * m + [(m,)]),
+                kind="red",
+                d=d,
+                block=block,
+                outputs=("mean",),
+                k=m,
+                chained=True,
+                x64=True,
+            )
     return reg
 
 
@@ -203,13 +357,20 @@ def lower_to_hlo_text(spec: ArtifactSpec) -> str:
     jax >= 0.5 serializes HloModuleProto with 64-bit instruction ids which
     xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6
     crate) rejects; the HLO text parser reassigns ids and round-trips
-    cleanly.  Lowered with return_tuple=True; rust unwraps with to_tupleN.
+    cleanly.  Tupled artifacts lower with return_tuple=True (rust unwraps
+    with decompose_tuple); chained artifacts lower with return_tuple=False
+    so the single output buffer chains into the next dispatch as-is.
     """
-    from jax._src.lib import xla_client as xc
+    import contextlib
 
-    lowered = jax.jit(spec.fn).lower(*spec.example_args())
-    mlir_mod = lowered.compiler_ir("stablehlo")
+    from jax._src.lib import xla_client as xc
+    from jax.experimental import enable_x64
+
+    scope = enable_x64() if spec.x64 else contextlib.nullcontext()
+    with scope:
+        lowered = jax.jit(spec.fn).lower(*spec.example_args())
+        mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=not spec.chained
     )
     return comp.as_hlo_text()

@@ -23,8 +23,9 @@ def test_manifest_files_exist(emitted):
     out, manifest = emitted
     assert manifest["block"] == 8
     assert manifest["dims"] == [2]
-    # (grad+svrg+saga) x2 losses + nm, plus (gradm x2 losses + nmm) x2 widths
-    assert len(manifest["artifacts"]) == 13
+    # tupled: (grad+svrg+saga) x2 losses + nm, plus (gradm x2 + nmm) x2 widths = 13
+    # chained: 3 widths x (2 gacc + 2 svrgc + 2 sagac + nacc) + 5 vec + 3 redm = 29
+    assert len(manifest["artifacts"]) == 42
     for a in manifest["artifacts"]:
         path = os.path.join(out, a["file"])
         assert os.path.exists(path)
@@ -47,12 +48,17 @@ def test_manifest_hashes_match(emitted):
         assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"]
 
 
+CHAINED_KINDS = ("gacc", "nacc", "svrgc", "sagac",
+                 "vscale", "vaxpby", "vdot", "vravg", "vrreset", "red")
+
+
 def test_manifest_shapes_are_lists(emitted):
     _, manifest = emitted
     for a in manifest["artifacts"]:
         assert all(isinstance(s, list) for s in a["arg_shapes"])
-        assert a["kind"] in ("grad", "svrg", "saga", "nm", "grad_multi", "nm_multi")
+        assert a["kind"] in ("grad", "svrg", "saga", "nm", "grad_multi", "nm_multi") + CHAINED_KINDS
         assert a["block"] == 8
+        assert a["chained"] == (a["kind"] in CHAINED_KINDS)
 
 
 def test_manifest_multi_widths(emitted):
@@ -63,5 +69,23 @@ def test_manifest_multi_widths(emitted):
         # stacked operands: first arg is [k*block, d]
         assert a["arg_shapes"][0][0] == a["k"] * a["block"]
         assert a["name"].startswith(("gradm", "nmm"))
-    singles = [a for a in manifest["artifacts"] if a["kind"] not in ("grad_multi", "nm_multi")]
+    singles = [
+        a
+        for a in manifest["artifacts"]
+        if a["kind"] in ("grad", "svrg", "saga", "nm")
+    ]
     assert all(a["k"] == 1 for a in singles)
+
+
+def test_manifest_chained_widths(emitted):
+    _, manifest = emitted
+    chained = [a for a in manifest["artifacts"] if a["chained"]]
+    block_kinds = ("gacc", "nacc", "svrgc", "sagac")
+    assert {a["k"] for a in chained if a["kind"] in block_kinds} == {1, 4, 8}
+    for a in chained:
+        if a["kind"] in block_kinds:
+            assert a["arg_shapes"][0][0] == a["k"] * a["block"]
+        elif a["kind"] == "red":
+            # k records the machine count M: M vectors + one [M] weight arg
+            assert len(a["arg_shapes"]) == a["k"] + 1
+            assert a["arg_shapes"][-1] == [a["k"]]

@@ -7,8 +7,22 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from compile.kernels import BLOCK, DIMS, MULTI_KS, artifact_name, multi_artifact_name
+from compile.kernels import (
+    BLOCK,
+    CHAIN_KS,
+    DIMS,
+    MULTI_KS,
+    RED_MS,
+    STATE_ROWS,
+    artifact_name,
+    chain_artifact_name,
+    multi_artifact_name,
+    red_artifact_name,
+    vec_artifact_name,
+)
 from compile.model import build_registry, lower_to_hlo_text
+
+VEC_KINDS = ("vscale", "vaxpby", "vdot", "vravg", "vrreset")
 
 
 @pytest.fixture(scope="module")
@@ -17,9 +31,12 @@ def registry():
 
 
 def test_registry_is_complete(registry):
-    # 2 losses x 2 dims x (grad + svrg + saga) + 2 nm
+    # tupled: 2 losses x 2 dims x (grad + svrg + saga) + 2 nm
     #   + 2 widths x 2 dims x (2 gradm + nmm) = 26
-    assert len(registry) == 14 + len(MULTI_KS) * len(DIMS) * 3
+    # chained: per dim, 3 widths x (2 gacc + 2 svrgc + 2 sagac + nacc)
+    #   + 5 vec-plane + 3 redm = 29
+    per_dim_chained = len(CHAIN_KS) * 7 + len(VEC_KINDS) + len(RED_MS)
+    assert len(registry) == 14 + len(MULTI_KS) * len(DIMS) * 3 + len(DIMS) * per_dim_chained
     for d in DIMS:
         for loss in ("sq", "log"):
             assert artifact_name("grad", loss, d) in registry
@@ -27,15 +44,24 @@ def test_registry_is_complete(registry):
             assert artifact_name("saga", loss, d) in registry
             for k in MULTI_KS:
                 assert multi_artifact_name("grad", loss, d, k) in registry
+            for k in CHAIN_KS:
+                assert chain_artifact_name("gacc", loss, d, k) in registry
+                assert chain_artifact_name("svrgc", loss, d, k) in registry
+                assert chain_artifact_name("sagac", loss, d, k) in registry
         assert artifact_name("nm", "sq", d) in registry
         for k in MULTI_KS:
             assert multi_artifact_name("nm", "sq", d, k) in registry
+        for k in CHAIN_KS:
+            assert chain_artifact_name("nacc", "sq", d, k) in registry
+        for kind in VEC_KINDS:
+            assert vec_artifact_name(kind, d) in registry
+        for m in RED_MS:
+            assert red_artifact_name(m, d) in registry
 
 
 def test_registry_shapes(registry):
     for spec in registry.values():
         assert spec.block == BLOCK
-        assert spec.arg_shapes[0] == (spec.k * BLOCK, spec.d)
         if spec.kind == "grad":
             assert len(spec.arg_shapes) == 4
             assert spec.outputs == ("grad_sum", "loss_sum", "count")
@@ -54,10 +80,37 @@ def test_registry_shapes(registry):
             assert spec.k in MULTI_KS
             assert len(spec.arg_shapes) == 3
             assert spec.outputs == ("xtxv_sum", "count")
+        elif spec.kind == "gacc":
+            assert spec.k in CHAIN_KS
+            assert len(spec.arg_shapes) == 5
+            assert spec.arg_shapes[-1] == (spec.d,)  # carried accumulator
+        elif spec.kind == "nacc":
+            assert spec.k in CHAIN_KS
+            assert len(spec.arg_shapes) == 4
+        elif spec.kind in ("svrgc", "sagac"):
+            assert spec.k in CHAIN_KS
+            assert len(spec.arg_shapes) == 9
+            assert spec.arg_shapes[3] == (STATE_ROWS, spec.d)  # carried state
+            assert spec.outputs == ("state",)
+        elif spec.kind in VEC_KINDS:
+            assert spec.k == 1
+        elif spec.kind == "red":
+            assert spec.k in RED_MS
+            assert len(spec.arg_shapes) == spec.k + 1
+            assert spec.arg_shapes[-1] == (spec.k,)  # machine weights
         else:
             raise AssertionError(f"unknown kind {spec.kind}")
         if spec.kind in ("grad", "svrg", "saga", "nm"):
             assert spec.k == 1
+        # block operands only exist on the block-consuming kinds
+        if spec.kind in ("grad", "svrg", "saga", "nm", "grad_multi", "nm_multi",
+                         "gacc", "nacc", "svrgc", "sagac"):
+            assert spec.arg_shapes[0] == (spec.k * BLOCK, spec.d)
+        # single-output chained artifacts are flagged for the rust loader
+        assert spec.chained == (
+            spec.kind in ("gacc", "nacc", "svrgc", "sagac", "red") or spec.kind in VEC_KINDS
+        )
+        assert spec.x64 == (spec.kind == "red")
 
 
 def test_grad_multi_lowering_contains_loop(registry):
@@ -96,3 +149,23 @@ def test_svrg_lowering_contains_loop(registry):
     assert "while" in text, "expected a while loop in the lowered SVRG pass"
     # sanity: text is compact (unrolling would be >100KB)
     assert len(text) < 100_000
+
+
+def test_chained_lowering_returns_bare_array(registry):
+    """Chained artifacts must lower to a single non-tuple root so the rust
+    engine can feed the output buffer straight into the next dispatch."""
+    for name in ("gacc4_sq_d64", "svrgc8_log_d64", "vaxpby_d64", "redm4_d64"):
+        head = lower_to_hlo_text(registry[name]).splitlines()[0].replace(" ", "")
+        assert "->(" not in head, f"{name}: chained root must not be a tuple: {head}"
+        assert "->f32[" in head, f"{name}: expected a bare f32 array root: {head}"
+
+
+def test_reduce_lowering_is_f64_interior(registry):
+    """The cross-machine reduce must carry f64 math (bitwise host parity)
+    behind an all-f32 boundary, and x64 must not leak into other kernels."""
+    text = lower_to_hlo_text(registry[red_artifact_name(4, 64)])
+    assert "f64" in text, "reduce kernel lost its f64 interior"
+    head = text.splitlines()[0].replace(" ", "")
+    assert "f64" not in head, f"reduce boundary must stay f32: {head}"
+    for other in ("grad_sq_d64", "svrgc4_sq_d64", "vdot_d64"):
+        assert "f64" not in lower_to_hlo_text(registry[other]), f"x64 leaked into {other}"

@@ -13,14 +13,25 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from jax.experimental import enable_x64
+
 from compile.kernels import (
+    CHAIN_KS,
     LOSSES,
     MULTI_KS,
+    RED_MS,
     block_grad,
     block_grad_multi,
+    grad_acc,
     multi_artifact_name,
+    nm_acc,
     normal_matvec,
     normal_matvec_multi,
+    reduce_weighted,
+    saga_block,
+    svrg_block,
+    vr_avg,
+    vr_chain,
 )
 from compile.kernels import ref
 
@@ -108,8 +119,132 @@ def test_multi_artifact_names():
     assert multi_artifact_name("grad", "sq", 64, 4) == "gradm4_sq_d64"
     assert multi_artifact_name("nm", "sq", 128, 8) == "nmm8_sq_d128"
     with pytest.raises(ValueError):
-        multi_artifact_name("svrg", "sq", 64, 4)  # VR sweeps stay per-block
+        multi_artifact_name("svrg", "sq", 64, 4)  # tupled VR sweeps stay per-block
     with pytest.raises(ValueError):
         multi_artifact_name("grad", "sq", 64, 1)
     with pytest.raises(ValueError):
         multi_artifact_name("nm", "log", 64, 4)  # nm is squared-loss only
+
+
+# ---------------------------------------------------------------------------
+# chained (single-output) kernel parity — the device-resident vector plane
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("k", CHAIN_KS)
+@pytest.mark.parametrize("case", sorted(MASK_CASES))
+def test_grad_acc_chains_per_block_sums(loss, k, case):
+    """gacc == carried accumulator + the per-block grad sums, in order."""
+    valids = MASK_CASES[case](k)
+    X, y, mask, w = make_stack(k, valids, 23, "sign" if loss == "log" else "real")
+    rng = np.random.default_rng(29)
+    acc0 = rng.normal(size=(D,)).astype(np.float32)
+    got = grad_acc(loss, k, X, y, mask, w, jnp.asarray(acc0))
+    expect = acc0.copy()
+    for i in range(k):
+        sl = slice(i * B, (i + 1) * B)
+        gi, _, _ = block_grad(loss, X[sl], y[sl], mask[sl], w)
+        expect = (expect + np.asarray(gi)).astype(np.float32)
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", CHAIN_KS)
+@pytest.mark.parametrize("case", sorted(MASK_CASES))
+def test_nm_acc_chains_per_block_sums(k, case):
+    valids = MASK_CASES[case](k)
+    X, _, mask, v = make_stack(k, valids, 31)
+    rng = np.random.default_rng(37)
+    acc0 = rng.normal(size=(D,)).astype(np.float32)
+    got = nm_acc(k, X, mask, v, jnp.asarray(acc0))
+    expect = acc0.copy()
+    for i in range(k):
+        sl = slice(i * B, (i + 1) * B)
+        oi, _ = normal_matvec(X[sl], mask[sl], v)
+        expect = (expect + np.asarray(oi)).astype(np.float32)
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("solver", ["svrg", "saga"])
+@pytest.mark.parametrize("k", CHAIN_KS)
+@pytest.mark.parametrize("case", sorted(MASK_CASES))
+def test_vr_chain_matches_legacy_per_block_sweep(loss, solver, k, case):
+    """The group-aligned sweep must reproduce the legacy path: per-block
+    kernels chained through the host, empty blocks skipped, averages
+    combined with (1 + valid) weights."""
+    valids = MASK_CASES[case](k)
+    X, y, mask, _ = make_stack(k, valids, 41, "sign" if loss == "log" else "real")
+    rng = np.random.default_rng(43)
+    x0 = rng.normal(size=(D,)).astype(np.float32) * 0.3
+    z = rng.normal(size=(D,)).astype(np.float32) * 0.1
+    mu = rng.normal(size=(D,)).astype(np.float32) * 0.1
+    center = np.zeros(D, np.float32)
+    gamma = jnp.asarray([0.5], jnp.float32)
+    eta = jnp.asarray([0.03], jnp.float32)
+    S0 = jnp.asarray(np.stack([x0, np.zeros(D, np.float32)]))
+    S1 = np.asarray(
+        vr_chain(solver, loss, k, X, y, mask, S0, z, mu, center, gamma, eta)
+    )
+    # legacy: per-block dispatch, host-carried iterate, weighted host avg
+    kern = svrg_block if solver == "svrg" else saga_block
+    x = x0.copy()
+    acc = np.zeros(D, np.float64)
+    wsum = 0.0
+    for i in range(k):
+        sl = slice(i * B, (i + 1) * B)
+        v = int(mask[sl].sum())
+        if v == 0:
+            continue  # legacy sweep skips empty blocks entirely
+        xo, xa = kern(loss, X[sl], y[sl], mask[sl], x, z, mu, center, gamma, eta)
+        acc += (1 + v) * np.asarray(xa, np.float64)
+        wsum += 1 + v
+        x = np.asarray(xo)
+    # carried iterate: bitwise (the host round-trip it replaces was lossless)
+    np.testing.assert_array_equal(S1[0], x)
+    if wsum > 0:
+        got_avg = np.asarray(
+            vr_avg(jnp.asarray(S1), jnp.asarray([1.0 / wsum], jnp.float32))
+        )
+        np.testing.assert_allclose(got_avg, (acc / wsum).astype(np.float32),
+                                   rtol=1e-4, atol=1e-5)
+    else:
+        # all-empty sweep: invw=0 falls back to the unchanged iterate
+        got_avg = np.asarray(vr_avg(jnp.asarray(S1), jnp.asarray([0.0], jnp.float32)))
+        np.testing.assert_array_equal(got_avg, x0)
+
+
+@pytest.mark.parametrize("m", RED_MS)
+@pytest.mark.parametrize("weights", ["unit", "counts"])
+def test_reduce_weighted_bitwise_matches_host_collective(m, weights):
+    """redm{M} must be BIT-identical to the rust host collective: an f64
+    accumulator from zero, machine-order multiply-adds, one reciprocal."""
+    rng = np.random.default_rng(47 + m)
+    vs = [rng.normal(size=(D,)).astype(np.float32) for _ in range(m)]
+    w = (
+        np.ones(m, np.float32)
+        if weights == "unit"
+        else rng.integers(1, 1 << 20, m).astype(np.float32)
+    )
+    with enable_x64():
+        got = np.asarray(reduce_weighted(m, [jnp.asarray(v) for v in vs], jnp.asarray(w)))
+    s = np.zeros(D, np.float64)
+    wtot = 0.0
+    for wi, v in zip(w, vs):
+        wtot += float(wi)
+        s += float(wi) * v.astype(np.float64)
+    expect = (s * (1.0 / wtot)).astype(np.float32)
+    np.testing.assert_array_equal(got.view(np.uint32), expect.view(np.uint32))
+
+
+def test_chained_width_validation():
+    X, y, mask, w = make_stack(2, [B, B], 1)
+    acc = jnp.zeros((D,), jnp.float32)
+    with pytest.raises(ValueError):
+        grad_acc("sq", 3, X, y, mask, w, acc)  # 16 rows not divisible by 3
+    with pytest.raises(ValueError):
+        nm_acc(0, X, mask, w, acc)
+    with pytest.raises(ValueError):
+        vr_chain("sgd", "sq", 2, X, y, mask, None, w, w, w, None, None)  # bad solver
+    with pytest.raises(ValueError):
+        reduce_weighted(1, [w], jnp.ones((1,), jnp.float32))  # m < 2

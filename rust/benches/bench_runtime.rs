@@ -13,7 +13,7 @@ use mbprox::coordinator::Runner;
 use mbprox::data::blocks::{pack_all, pack_block};
 use mbprox::data::synth::{SynthSpec, SynthStream};
 use mbprox::data::{Loss, SampleStream};
-use mbprox::objective::{distributed_mean_grad, MachineBatch};
+use mbprox::objective::{distributed_mean_grad, distributed_mean_grad_dev, MachineBatch};
 use mbprox::runtime::exec::BlockLits;
 use mbprox::util::benchkit::{bench, bench_batched, section, JsonReport};
 
@@ -159,6 +159,68 @@ fn main() {
         report.counter("round.new_w.downloads", fresh.downloads as f64);
         report.counter("round.same_w.uploads", warm.uploads as f64);
         report.counter("round.same_w.cache_hits", warm.cache_hits as f64);
+        // downlink bytes per round: the cross-PR tracking number for the
+        // sync (tupled-dispatch) pipeline
+        report.counter("round.sync.downlink_bytes", warm.download_bytes as f64);
+
+        // chained pipeline: the same mean-grad round entirely on device —
+        // steady-state downlink must be zero (downloads happen only at
+        // materialize points, which this round never reaches)
+        let w_dev = engine.upload_dev(&w1, &[64]).unwrap();
+        let (warmups, iters) = (2usize, 30usize);
+        let rounds = (warmups + iters) as f64; // traffic spans warmup too
+        let t2 = DeviceTraffic::from_stats(&engine.stats);
+        let s_chain = bench("mean_grad round (chained)", warmups, iters, || {
+            distributed_mean_grad_dev(
+                engine,
+                Loss::Squared,
+                &machines,
+                &w_dev,
+                &mut net,
+                &mut meter,
+            )
+            .unwrap();
+        });
+        let chained_total = DeviceTraffic::from_stats(&engine.stats).since(&t2);
+        println!("{}", s_chain.report());
+        report.push(&s_chain);
+        let per_round_down = chained_total.download_bytes as f64 / rounds;
+        println!("{}", chained_total.row("chained rounds (total)"));
+        println!(
+            "  -> chained downlink bytes/round: {per_round_down:.1} (sync: {})",
+            warm.download_bytes
+        );
+        report.counter("round.chained.downlink_bytes_per_round", per_round_down);
+        report.counter("round.chained.downloads_total", chained_total.downloads as f64);
+        report.counter(
+            "round.chained.dispatches_per_round",
+            chained_total.chained as f64 / rounds,
+        );
+
+        // sync vs chained latency for the same round
+        let t3 = DeviceTraffic::from_stats(&engine.stats);
+        let s_sync = bench("mean_grad round (sync)", warmups, iters, || {
+            distributed_mean_grad(
+                engine,
+                Loss::Squared,
+                &machines,
+                &w1,
+                &mut net,
+                &mut meter,
+            )
+            .unwrap();
+        });
+        let sync_total = DeviceTraffic::from_stats(&engine.stats).since(&t3);
+        println!("{}", s_sync.report());
+        report.push(&s_sync);
+        report.counter(
+            "round.sync.downlink_bytes_per_round",
+            sync_total.download_bytes as f64 / rounds,
+        );
+        report.counter(
+            "round.chained_vs_sync_speedup",
+            s_sync.mean_ns / s_chain.mean_ns.max(1.0),
+        );
     }
 
     section("host-side costs");

@@ -120,11 +120,14 @@ impl ClusterMeter {
 /// Host<->device traffic summary derived from the engine's
 /// [`crate::runtime::EngineStats`] — the runtime-layer companion of the
 /// paper-units [`ResourceReport`]. One row per bench/run shows whether the
-/// device-residency contract holds (uploads per round O(1), one download
-/// per fused group).
+/// device-residency contract holds: uploads per round O(1), one download
+/// per fused group on the dispatch verb, and NO downloads at all on the
+/// chain verb (`chained` counts dispatches whose output stayed on device).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct DeviceTraffic {
     pub executions: u64,
+    /// executions whose output stayed on device (the chain verb)
+    pub chained: u64,
     pub uploads: u64,
     pub upload_bytes: u64,
     pub downloads: u64,
@@ -137,6 +140,7 @@ impl DeviceTraffic {
     pub fn from_stats(s: &crate::runtime::EngineStats) -> DeviceTraffic {
         DeviceTraffic {
             executions: s.executions,
+            chained: s.chained_dispatches,
             uploads: s.uploads,
             upload_bytes: s.upload_bytes,
             downloads: s.downloads,
@@ -150,6 +154,7 @@ impl DeviceTraffic {
     pub fn since(&self, earlier: &DeviceTraffic) -> DeviceTraffic {
         DeviceTraffic {
             executions: self.executions - earlier.executions,
+            chained: self.chained - earlier.chained,
             uploads: self.uploads - earlier.uploads,
             upload_bytes: self.upload_bytes - earlier.upload_bytes,
             downloads: self.downloads - earlier.downloads,
@@ -161,17 +166,18 @@ impl DeviceTraffic {
 
     pub fn header() -> String {
         format!(
-            "{:<28} {:>10} {:>9} {:>12} {:>10} {:>12} {:>10} {:>10}",
-            "phase", "dispatches", "uploads", "up_bytes", "downloads", "down_bytes", "hits",
-            "misses"
+            "{:<28} {:>10} {:>8} {:>9} {:>12} {:>10} {:>12} {:>10} {:>10}",
+            "phase", "dispatches", "chained", "uploads", "up_bytes", "downloads", "down_bytes",
+            "hits", "misses"
         )
     }
 
     pub fn row(&self, name: &str) -> String {
         format!(
-            "{:<28} {:>10} {:>9} {:>12} {:>10} {:>12} {:>10} {:>10}",
+            "{:<28} {:>10} {:>8} {:>9} {:>12} {:>10} {:>12} {:>10} {:>10}",
             name,
             self.executions,
+            self.chained,
             self.uploads,
             self.upload_bytes,
             self.downloads,

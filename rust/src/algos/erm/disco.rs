@@ -7,10 +7,21 @@
 //! communication round per CG step, which is where DiSCO's
 //! `B^{1/2} m^{1/4}` round count comes from. The update is the damped step
 //! `w <- w - v / (1 + delta)` with the Newton decrement damping.
+//!
+//! With the chained artifacts present the Newton state (`w`, `g`, `v`,
+//! CG residuals) stays on device: the Hessian-vector product is the
+//! `nacc{K}` chain + DeviceCollective reduce, and only `vdot` scalars
+//! cross to the host per CG step. `w` materializes at evaluation
+//! checkpoints and at the end of the run — the same places the host path
+//! reads it.
 
+use crate::algos::solvers::exact_cg::{
+    chained_cg, distributed_normal_matvec, distributed_normal_matvec_dev, host_cg,
+};
 use crate::algos::{Method, Recorder, RunContext, RunResult};
 use crate::data::Loss;
 use crate::linalg;
+use crate::runtime::DeviceVec;
 use anyhow::{bail, Result};
 
 use super::ErmProblem;
@@ -21,6 +32,80 @@ pub struct Disco {
     pub newton_iters: usize,
     pub cg_tol: f64,
     pub cg_max: usize,
+}
+
+impl Disco {
+    fn chain_ready(&self, ctx: &RunContext) -> bool {
+        ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
+            && ctx.engine.chain_nm_ready(ctx.d)
+            && ctx.engine.red_ready(ctx.m(), ctx.d)
+    }
+
+    fn run_legacy(
+        &mut self,
+        ctx: &mut RunContext,
+        prob: &ErmProblem,
+        rec: &mut Recorder,
+    ) -> Result<Vec<f32>> {
+        let d = ctx.d;
+        let mut w = vec![0.0f32; d];
+        for it in 0..self.newton_iters {
+            let g = prob.full_grad(ctx, &w)?; // 1 round
+            // distributed CG on (H + nu I) v = g — the shared driver;
+            // 1 comm round per CG iteration through the hvp matvec
+            let v = host_cg(
+                ctx,
+                |ctx, p| hvp(ctx, prob, p),
+                &g,
+                vec![0.0f32; d],
+                self.cg_tol,
+                self.cg_max,
+            )?;
+            // damped Newton step: delta = sqrt(v^T (H+nu) v)
+            let hv_final = hvp(ctx, prob, &v)?;
+            let delta = linalg::dot(&v, &hv_final).max(0.0).sqrt();
+            let damp = (1.0 / (1.0 + delta)) as f32;
+            linalg::axpy(-damp, &v, &mut w);
+            ctx.meter.all_vec_ops(1);
+            if let Some(obj) = ctx.maybe_eval(it + 1, &w)? {
+                rec.point(ctx, it + 1, Some(obj));
+            }
+        }
+        Ok(w)
+    }
+
+    fn run_chained(
+        &mut self,
+        ctx: &mut RunContext,
+        prob: &ErmProblem,
+        rec: &mut Recorder,
+    ) -> Result<Vec<f32>> {
+        let mut w = ctx.engine.zeros_dev(ctx.d)?;
+        for it in 0..self.newton_iters {
+            let g = prob.full_grad_dev(ctx, &w)?; // 1 round
+            let x0 = ctx.engine.zeros_dev(ctx.d)?;
+            let v = chained_cg(
+                ctx,
+                |ctx, p| hvp_dev(ctx, prob, p),
+                &g,
+                x0,
+                self.cg_tol,
+                self.cg_max,
+            )?;
+            let hv_final = hvp_dev(ctx, prob, &v)?;
+            let delta = ctx.engine.vec_dot(&v, &hv_final)?.max(0.0).sqrt();
+            let damp = (1.0 / (1.0 + delta)) as f32;
+            w = ctx.engine.vec_axpby(1.0, &w, -damp, &v)?;
+            ctx.meter.all_vec_ops(1);
+            // evaluation checkpoint: the same policy as the legacy path,
+            // read THROUGH the device iterate (aliased, no materialization)
+            if let Some(obj) = ctx.maybe_eval_dev(it + 1, &w)? {
+                rec.point(ctx, it + 1, Some(obj));
+            }
+        }
+        // the run boundary: materialize the final iterate once
+        ctx.engine.materialize(&w)
+    }
 }
 
 impl Method for Disco {
@@ -34,76 +119,25 @@ impl Method for Disco {
         }
         let mut rec = Recorder::new(self.name());
         let prob = ErmProblem::draw_grad_only(ctx, self.n_total, self.nu)?;
-        let d = ctx.d;
-        let mut w = vec![0.0f32; d];
-        for it in 0..self.newton_iters {
-            let g = prob.full_grad(ctx, &w)?; // 1 round
-            // distributed CG on (H + nu I) v = g
-            let mut v = vec![0.0f32; d];
-            let mut hv = hvp(ctx, &prob, &v)?;
-            let mut r: Vec<f32> = (0..d).map(|j| g[j] - hv[j]).collect();
-            let mut p = r.clone();
-            let gnorm = linalg::nrm2(&g).max(1e-30);
-            let mut rs_old = linalg::dot(&r, &r);
-            for _ in 0..self.cg_max {
-                if rs_old.sqrt() / gnorm <= self.cg_tol {
-                    break;
-                }
-                hv = hvp(ctx, &prob, &p)?; // 1 round per CG iteration
-                let p_hp = linalg::dot(&p, &hv);
-                if p_hp <= 0.0 {
-                    break;
-                }
-                let alpha = (rs_old / p_hp) as f32;
-                linalg::axpy(alpha, &p, &mut v);
-                linalg::axpy(-alpha, &hv, &mut r);
-                let rs_new = linalg::dot(&r, &r);
-                let beta = (rs_new / rs_old) as f32;
-                for j in 0..d {
-                    p[j] = r[j] + beta * p[j];
-                }
-                ctx.meter.all_vec_ops(3);
-                rs_old = rs_new;
-            }
-            // damped Newton step: delta = sqrt(v^T (H+nu) v)
-            let hv_final = hvp(ctx, &prob, &v)?;
-            let delta = linalg::dot(&v, &hv_final).max(0.0).sqrt();
-            let damp = (1.0 / (1.0 + delta)) as f32;
-            linalg::axpy(-damp, &v, &mut w);
-            ctx.meter.all_vec_ops(1);
-            if let Some(obj) = ctx.maybe_eval(it + 1, &w)? {
-                rec.point(ctx, it + 1, Some(obj));
-            }
-        }
+        let w = if self.chain_ready(ctx) {
+            self.run_chained(ctx, &prob, &mut rec)?
+        } else {
+            self.run_legacy(ctx, &prob, &mut rec)?
+        };
         prob.release(ctx);
         rec.finish(ctx, w)
     }
 }
 
-/// Distributed regularized Hessian-vector product (1 comm round).
+/// Distributed regularized Hessian-vector product (1 comm round): the
+/// same operator as the exact-CG prox system with `gamma = nu` — one
+/// implementation, two callers, no drift.
 fn hvp(ctx: &mut RunContext, prob: &ErmProblem, v: &[f32]) -> Result<Vec<f32>> {
-    let m = prob.shards.len();
-    let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
-    let mut weights: Vec<f64> = Vec::with_capacity(m);
-    for (i, shard) in prob.shards.iter().enumerate() {
-        let mut acc = vec![0.0f32; ctx.d];
-        let mut cnt = 0.0;
-        // fused groups: one Hessian-vector dispatch per group
-        for blk in &shard.groups {
-            let (part, c) = ctx.engine.nm_block(blk, v)?;
-            linalg::axpy(1.0, &part, &mut acc);
-            cnt += c;
-        }
-        if cnt > 0.0 {
-            linalg::scale(1.0 / cnt as f32, &mut acc);
-        }
-        ctx.meter.machine(i).add_vec_ops(shard.n as u64);
-        locals.push(acc);
-        weights.push(cnt);
-    }
-    ctx.net.all_reduce_weighted(&mut ctx.meter, &weights, &mut locals);
-    let mut out = locals.pop().unwrap();
-    linalg::axpy(prob.nu as f32, v, &mut out);
-    ctx.meter.all_vec_ops(1);
-    Ok(out)
+    distributed_normal_matvec(ctx, &prob.shards, v, prob.nu)
+}
+
+/// Device-chained [`hvp`]: `nacc{K}` chains + DeviceCollective reduce,
+/// identical accounting, zero downloads.
+fn hvp_dev(ctx: &mut RunContext, prob: &ErmProblem, v: &DeviceVec) -> Result<DeviceVec> {
+    distributed_normal_matvec_dev(ctx, &prob.shards, v, prob.nu)
 }

@@ -48,10 +48,10 @@ impl ErmProblem {
         Ok(ErmProblem { shards, n_total: per * m, nu })
     }
 
-    /// Release the held shard memory (end of run).
+    /// Release the held shard memory (end of run): each shard recorded
+    /// what it held at draw time.
     pub fn release(&self, ctx: &mut RunContext) {
-        let per = self.n_total / self.shards.len();
-        ctx.release_batches(per);
+        ctx.release_batches(&self.shards);
     }
 
     /// Regularized full gradient: one all-reduce round.
@@ -67,5 +67,25 @@ impl ErmProblem {
         crate::linalg::axpy(self.nu as f32, w, &mut g);
         ctx.meter.all_vec_ops(1);
         Ok(g)
+    }
+
+    /// Device-chained [`ErmProblem::full_grad`]: identical accounting,
+    /// the gradient never visits the host.
+    pub fn full_grad_dev(
+        &self,
+        ctx: &mut RunContext,
+        w: &crate::runtime::DeviceVec,
+    ) -> Result<crate::runtime::DeviceVec> {
+        let g = crate::objective::distributed_mean_grad_dev(
+            ctx.engine,
+            ctx.loss,
+            &self.shards,
+            w,
+            &mut ctx.net,
+            &mut ctx.meter,
+        )?;
+        let out = ctx.engine.vec_axpby(1.0, &g, self.nu as f32, w)?;
+        ctx.meter.all_vec_ops(1);
+        Ok(out)
     }
 }

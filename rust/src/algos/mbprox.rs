@@ -52,13 +52,18 @@ impl<S: ProxSolver> Method for MinibatchProx<S> {
         for t in 1..=self.t_outer {
             // fresh minibatch, held in memory for the inner solve; host
             // block copies are only retained when the solver sweeps
-            let batches = if self.solver.needs_vr_blocks() {
+            // through the legacy per-block path (chained group-aligned
+            // sweeps ride the fused device groups instead, packed so no
+            // group straddles the solver's batch partition)
+            let batches = if let Some(p) = self.solver.vr_group_align(ctx) {
+                ctx.draw_batches_vr_aligned(self.b_local, true, p)?
+            } else if self.solver.needs_vr_blocks(ctx) {
                 ctx.draw_batches(self.b_local, true)?
             } else {
                 ctx.draw_batches_grad_only(self.b_local, true)?
             };
             let w_new = self.solver.solve(ctx, &batches, &w, self.gamma, t)?;
-            ctx.release_batches(self.b_local);
+            ctx.release_batches(&batches);
             drop(batches);
             w = w_new;
             let weight = if self.weighted { t as f64 } else { 1.0 };

@@ -21,6 +21,17 @@ use crate::objective::{Evaluator, MachineBatch};
 use crate::runtime::Engine;
 use anyhow::Result;
 
+/// How a drawn batch is packed for the engine (see `MachineBatch`).
+#[derive(Clone, Copy, Debug)]
+enum PackMode {
+    /// fused groups + host blocks retained for legacy per-block sweeps
+    Full,
+    /// fused groups only (grad/normal-matvec consumers)
+    GradOnly,
+    /// fused groups aligned to a p-way block partition (chained sweeps)
+    VrAligned(usize),
+}
+
 /// Everything a method needs to run: engine, simulated cluster fabric,
 /// per-machine streams, and the evaluation hook.
 pub struct RunContext<'e> {
@@ -45,7 +56,7 @@ impl<'e> RunContext<'e> {
     /// charging samples (and memory if `hold`). Batches support the full
     /// engine surface including VR sweeps.
     pub fn draw_batches(&mut self, b_local: usize, hold: bool) -> Result<Vec<MachineBatch>> {
-        self.draw_batches_opts(b_local, hold, true)
+        self.draw_batches_opts(b_local, hold, PackMode::Full)
     }
 
     /// Like [`RunContext::draw_batches`] for methods that only take the
@@ -56,45 +67,90 @@ impl<'e> RunContext<'e> {
         b_local: usize,
         hold: bool,
     ) -> Result<Vec<MachineBatch>> {
-        self.draw_batches_opts(b_local, hold, false)
+        self.draw_batches_opts(b_local, hold, PackMode::GradOnly)
+    }
+
+    /// Draw batches whose fused groups are aligned to a p-way block
+    /// partition ([`MachineBatch::pack_vr_aligned`]): chained VR sweeps
+    /// over `group_ranges(p)` then touch exactly the blocks the legacy
+    /// per-block partition would. No host blocks are retained.
+    pub fn draw_batches_vr_aligned(
+        &mut self,
+        b_local: usize,
+        hold: bool,
+        p: usize,
+    ) -> Result<Vec<MachineBatch>> {
+        self.draw_batches_opts(b_local, hold, PackMode::VrAligned(p))
     }
 
     fn draw_batches_opts(
         &mut self,
         b_local: usize,
         hold: bool,
-        retain_host: bool,
+        mode: PackMode,
     ) -> Result<Vec<MachineBatch>> {
         let d = self.d;
         let mut out = Vec::with_capacity(self.streams.len());
         for (i, s) in self.streams.iter_mut().enumerate() {
             let samples = s.draw_many(b_local);
+            // charge what was actually drawn, not what was requested: a
+            // stream may run short on its final (ragged) batch
+            let drawn = samples.len() as u64;
             let meter = self.meter.machine(i);
-            meter.add_samples(b_local as u64);
+            meter.add_samples(drawn);
             if hold {
-                meter.hold(b_local as u64);
+                meter.hold(drawn);
             }
-            out.push(if retain_host {
-                MachineBatch::pack(self.engine, d, &samples)?
-            } else {
-                MachineBatch::pack_grad_only(self.engine, d, &samples)?
-            });
+            let mut batch = match mode {
+                PackMode::Full => MachineBatch::pack(self.engine, d, &samples)?,
+                PackMode::GradOnly => MachineBatch::pack_grad_only(self.engine, d, &samples)?,
+                PackMode::VrAligned(p) => {
+                    MachineBatch::pack_vr_aligned(self.engine, d, &samples, p)?
+                }
+            };
+            batch.held = if hold { drawn } else { 0 };
+            out.push(batch);
         }
         Ok(out)
     }
 
-    pub fn release_batches(&mut self, b_local: usize) {
-        for i in 0..self.meter.m() {
-            self.meter.machine(i).release(b_local as u64);
+    /// Release the memory charged when `batches` were drawn: each batch
+    /// records its own held count, so ragged final batches release
+    /// exactly what they held (the b_local assumption corrupted the
+    /// peak-memory meter whenever a machine drew short).
+    pub fn release_batches(&mut self, batches: &[MachineBatch]) {
+        assert_eq!(batches.len(), self.meter.m(), "one batch per machine");
+        for (i, batch) in batches.iter().enumerate() {
+            self.meter.machine(i).release(batch.held);
         }
     }
 
+    fn eval_due(&self, t: usize) -> bool {
+        self.eval_every > 0 && t % self.eval_every == 0
+    }
+
     pub fn maybe_eval(&mut self, t: usize, w: &[f32]) -> Result<Option<f64>> {
-        let due = self.eval_every > 0 && t % self.eval_every == 0;
-        if !due {
+        if !self.eval_due(t) {
             return Ok(None);
         }
         self.eval_now(w)
+    }
+
+    /// [`RunContext::maybe_eval`] at a device-resident iterate: the same
+    /// checkpoint policy, evaluated through the session-alias path so the
+    /// iterate is never materialized for the checkpoint.
+    pub fn maybe_eval_dev(
+        &mut self,
+        t: usize,
+        w: &crate::runtime::DeviceVec,
+    ) -> Result<Option<f64>> {
+        if !self.eval_due(t) {
+            return Ok(None);
+        }
+        match &self.evaluator {
+            Some(ev) => Ok(Some(ev.objective_dev(self.engine, w)?)),
+            None => Ok(None),
+        }
     }
 
     pub fn eval_now(&mut self, w: &[f32]) -> Result<Option<f64>> {

@@ -4,18 +4,32 @@
 //!   1. one all-reduce round computes the global minibatch gradient
 //!      `mu = grad phi_{I_t}(z_{k-1})`;
 //!   2. the *designated* machine j sweeps its next local batch `B_s^{(j)}`
-//!      once without replacement with variance-reduced updates (the
-//!      `svrg_{loss}` Pallas artifact);
+//!      once without replacement with variance-reduced updates;
 //!   3. the new iterate `z_k` (the sweep average) is broadcast — the
 //!      second communication round.
 //!
 //! The (j, s) token rotates so each machine's minibatch is consumed batch
 //! by batch, exactly as the paper's `s <- s+1; if s > p_j { s <- 1,
 //! j <- j+1 }` bookkeeping.
+//!
+//! # Device-resident steady state
+//!
+//! When the engine carries the chained artifacts, the whole inner loop
+//! runs on [`DeviceVec`] handles: `mu` comes from the `gacc{K}`
+//! accumulator chain + DeviceCollective reduce, the sweep advances a
+//! `[2, d]` state through the *fused* block groups (`svrgc{K}` — batch
+//! ranges are **group-aligned**, so sweeps ride the same uploads as the
+//! gradient hot path and `vr_lits` never materializes), and the broadcast
+//! is a charged handle clone. Bytes leave the device exactly once per
+//! `solve`: the final iterate materialization at the round boundary.
+//! Communication accounting is identical to the legacy path (2 rounds
+//! per inner iteration); `force_legacy` pins the per-block host path for
+//! parity tests and pre-chaining manifests.
 
-use super::{svrg_sweep_machine, ProxSolver};
+use super::{svrg_sweep_machine, sweep_groups_weight, vr_sweep_groups, LocalSolver, ProxSolver};
 use crate::algos::RunContext;
-use crate::objective::{distributed_mean_grad, MachineBatch};
+use crate::objective::{distributed_mean_grad, distributed_mean_grad_dev, MachineBatch};
+use crate::runtime::DeviceVec;
 use anyhow::Result;
 
 pub struct DsvrgSolver {
@@ -25,11 +39,13 @@ pub struct DsvrgSolver {
     pub p_batches: usize,
     /// SVRG stepsize
     pub eta: f64,
+    /// pin the legacy per-block host path (parity tests / diagnostics)
+    pub force_legacy: bool,
 }
 
 impl DsvrgSolver {
     pub fn new(k_inner: usize, p_batches: usize, eta: f64) -> Self {
-        Self { k_inner, p_batches, eta }
+        Self { k_inner, p_batches, eta, force_legacy: false }
     }
 
     /// Split a machine's block list into p near-equal contiguous batches
@@ -38,20 +54,22 @@ impl DsvrgSolver {
         let p = p.clamp(1, n_blocks.max(1));
         crate::data::sampler::shard_ranges(n_blocks, p)
     }
-}
 
-impl ProxSolver for DsvrgSolver {
-    fn name(&self) -> String {
-        format!("dsvrg(K={},p={})", self.k_inner, self.p_batches)
+    /// Whether this solve can run device-resident on `ctx`'s engine.
+    fn chain_ready(&self, ctx: &RunContext, m: usize) -> bool {
+        !self.force_legacy
+            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
+            && ctx.engine.chain_vr_ready(ctx.loss.tag(), ctx.d)
+            && ctx.engine.red_ready(m, ctx.d)
     }
 
-    fn solve(
+    /// Legacy per-block host path (the pre-chaining engine contract).
+    fn solve_legacy(
         &mut self,
         ctx: &mut RunContext,
         batches: &[MachineBatch],
         wprev: &[f32],
         gamma: f64,
-        _t: usize,
     ) -> Result<Vec<f32>> {
         let m = batches.len();
         let mut z = wprev.to_vec();
@@ -105,5 +123,110 @@ impl ProxSolver for DsvrgSolver {
             }
         }
         Ok(z)
+    }
+
+    /// Chained device-resident path: identical algorithm and accounting,
+    /// zero downloads until the final `materialize`.
+    fn solve_chained(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+    ) -> Result<Vec<f32>> {
+        let m = batches.len();
+        let wprev_dev = ctx.engine.upload_dev(wprev, &[ctx.d])?;
+        // solve-constant scalars: uploaded once, reused by every dispatch
+        let gamma_dev = ctx.engine.scalar_dev(gamma as f32)?;
+        let eta_dev = ctx.engine.scalar_dev(self.eta as f32)?;
+        let mut z: DeviceVec = wprev_dev.clone();
+        // [x; avg_accum] — x carries across inner iterations like the
+        // legacy loop's `x = x_end`
+        let mut state = ctx.engine.vr_state_from(wprev)?;
+        let mut j = 0usize;
+        let mut s = 0usize;
+        // group ranges tiling the SAME p-way block partition as the
+        // legacy path (exact when the batches were packed VR-aligned, the
+        // mbprox outer loop's contract via vr_group_align)
+        let ranges: Vec<Vec<std::ops::Range<usize>>> =
+            batches.iter().map(|b| b.group_ranges(self.p_batches)).collect();
+
+        for _k in 0..self.k_inner {
+            // (1) global minibatch gradient at snapshot z — 1 comm round
+            let mu = distributed_mean_grad_dev(
+                ctx.engine,
+                ctx.loss,
+                batches,
+                &z,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+
+            // (2) machine j sweeps its group-range s; fresh accumulator,
+            // carried iterate
+            state = ctx.engine.vr_reset(&state)?;
+            let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
+            let total_w = sweep_groups_weight(&batches[j], range.clone());
+            state = vr_sweep_groups(
+                ctx,
+                LocalSolver::Svrg,
+                range,
+                &batches[j],
+                j,
+                state,
+                &z,
+                &mu,
+                &wprev_dev,
+                &gamma_dev,
+                &eta_dev,
+            )?;
+
+            // (3) z_k = sweep average (inv weight 0 = empty-sweep
+            // fallback to the carried iterate), broadcast — 1 round
+            let inv_w = if total_w > 0.0 { (1.0 / total_w) as f32 } else { 0.0 };
+            let z_new = ctx.engine.vr_avg(&state, inv_w)?;
+            z = ctx.net.device_broadcast(&mut ctx.meter, j, &z_new);
+
+            s += 1;
+            if s >= ranges[j].len() {
+                s = 0;
+                j = (j + 1) % m;
+            }
+        }
+        // the round boundary: the ONE device->host transfer of this solve
+        ctx.engine.materialize(&z)
+    }
+}
+
+impl ProxSolver for DsvrgSolver {
+    fn name(&self) -> String {
+        format!("dsvrg(K={},p={})", self.k_inner, self.p_batches)
+    }
+
+    /// Host block copies are only needed for the legacy per-block sweep;
+    /// the chained path sweeps the fused device groups directly.
+    fn needs_vr_blocks(&self, ctx: &RunContext) -> bool {
+        !self.chain_ready(ctx, ctx.m())
+    }
+
+    /// Chained sweeps want groups aligned to the p-way batch partition,
+    /// so the sweep sizes match the legacy path exactly for any p.
+    fn vr_group_align(&self, ctx: &RunContext) -> Option<usize> {
+        self.chain_ready(ctx, ctx.m()).then_some(self.p_batches)
+    }
+
+    fn solve(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+        _t: usize,
+    ) -> Result<Vec<f32>> {
+        if self.chain_ready(ctx, batches.len()) {
+            self.solve_chained(ctx, batches, wprev, gamma)
+        } else {
+            self.solve_legacy(ctx, batches, wprev, gamma)
+        }
     }
 }

@@ -12,22 +12,35 @@
 //! iteration. This is the "exact minibatch-prox" reference (Theorem 4/5)
 //! that the inexact solvers are validated against, and doubles as the
 //! DiSCO-style Newton system solver for the ERM baselines.
+//!
+//! # Device-resident steady state
+//!
+//! With the chained artifacts present, the CG vectors (`x`, `r`, `p`,
+//! `Ap`, `b`) live on device: the matvec chains `nacc{K}` accumulators
+//! into the DeviceCollective reduce, the recurrences are `vaxpby`
+//! dispatches, and the only steady-state downlink is the two `vdot`
+//! scalars per iteration (8 bytes) — against 2 full vectors per machine
+//! per iteration on the legacy path. The solution materializes once at
+//! the end. `force_legacy` pins the host path for parity tests.
 
 use super::ProxSolver;
 use crate::algos::RunContext;
 use crate::data::Loss;
 use crate::linalg;
-use crate::objective::{distributed_mean_grad, MachineBatch};
+use crate::objective::{distributed_mean_grad, distributed_mean_grad_dev, MachineBatch};
+use crate::runtime::DeviceVec;
 use anyhow::{bail, Result};
 
 pub struct ExactCgSolver {
     pub tol: f64,
     pub max_iters: usize,
+    /// pin the legacy host path (parity tests / diagnostics)
+    pub force_legacy: bool,
 }
 
 impl Default for ExactCgSolver {
     fn default() -> Self {
-        Self { tol: 1e-9, max_iters: 512 }
+        Self { tol: 1e-9, max_iters: 512, force_legacy: false }
     }
 }
 
@@ -67,27 +80,140 @@ pub fn distributed_normal_matvec(
     Ok(out)
 }
 
-impl ProxSolver for ExactCgSolver {
-    fn name(&self) -> String {
-        "exact-cg".to_string()
+/// Device-chained [`distributed_normal_matvec`]: `nacc{K}` accumulator
+/// chains per machine, DeviceCollective reduce, one `vaxpby` for the
+/// `gamma v` shift. Identical rounds/vec-ops accounting, zero downloads.
+pub fn distributed_normal_matvec_dev(
+    ctx: &mut RunContext,
+    batches: &[MachineBatch],
+    v: &DeviceVec,
+    gamma: f64,
+) -> Result<DeviceVec> {
+    let m = batches.len();
+    let mut locals: Vec<DeviceVec> = Vec::with_capacity(m);
+    let mut weights: Vec<f64> = Vec::with_capacity(m);
+    for (i, batch) in batches.iter().enumerate() {
+        let mut acc = ctx.engine.zeros_dev(ctx.d)?;
+        for blk in &batch.groups {
+            acc = ctx.engine.nm_acc(blk, v, &acc)?;
+        }
+        // pack-time count replaces the downloaded one (same value)
+        let cnt = batch.n as f64;
+        if cnt > 0.0 {
+            acc = ctx.engine.vec_scale(&acc, (1.0 / cnt) as f32)?;
+        }
+        ctx.meter.machine(i).add_vec_ops(batch.n as u64);
+        locals.push(acc);
+        weights.push(cnt);
+    }
+    let red = ctx.net.device_all_reduce_weighted(
+        &mut ctx.meter,
+        ctx.engine,
+        &weights,
+        &locals,
+    )?;
+    let out = ctx.engine.vec_axpby(1.0, &red, gamma as f32, v)?;
+    ctx.meter.all_vec_ops(1);
+    Ok(out)
+}
+
+/// Shared distributed-CG driver, host plane: solve `A x = b` from warm
+/// start `x0`, where `matvec` applies `A` (charging its own comm round
+/// and vec ops). Stopping rules: relative residual below `tol` against
+/// the rhs norm, or a non-positive curvature `p^T A p`. One
+/// implementation serves the exact-prox system AND the DiSCO Newton
+/// system — the recurrence cannot drift between them.
+pub fn host_cg(
+    ctx: &mut RunContext,
+    mut matvec: impl FnMut(&mut RunContext, &[f32]) -> Result<Vec<f32>>,
+    b: &[f32],
+    x0: Vec<f32>,
+    tol: f64,
+    max_iters: usize,
+) -> Result<Vec<f32>> {
+    let d = b.len();
+    let mut x = x0;
+    let mut ap = matvec(ctx, &x)?;
+    let mut r: Vec<f32> = (0..d).map(|j| b[j] - ap[j]).collect();
+    let mut p = r.clone();
+    let rhs_norm = linalg::nrm2(b).max(1e-30);
+    let mut rs_old = linalg::dot(&r, &r);
+    for _ in 0..max_iters {
+        if rs_old.sqrt() / rhs_norm <= tol {
+            break;
+        }
+        ap = matvec(ctx, &p)?;
+        let p_ap = linalg::dot(&p, &ap);
+        if p_ap <= 0.0 {
+            break;
+        }
+        let alpha = (rs_old / p_ap) as f32;
+        linalg::axpy(alpha, &p, &mut x);
+        linalg::axpy(-alpha, &ap, &mut r);
+        let rs_new = linalg::dot(&r, &r);
+        let beta = (rs_new / rs_old) as f32;
+        for j in 0..d {
+            p[j] = r[j] + beta * p[j];
+        }
+        ctx.meter.all_vec_ops(3);
+        rs_old = rs_new;
+    }
+    Ok(x)
+}
+
+/// [`host_cg`] on the device plane: the identical recurrence
+/// scalar-for-scalar, with the vectors as [`DeviceVec`] handles and the
+/// two `vec_dot` scalars per iteration as the only downlink.
+pub fn chained_cg(
+    ctx: &mut RunContext,
+    mut matvec: impl FnMut(&mut RunContext, &DeviceVec) -> Result<DeviceVec>,
+    b: &DeviceVec,
+    x0: DeviceVec,
+    tol: f64,
+    max_iters: usize,
+) -> Result<DeviceVec> {
+    let mut x = x0;
+    let mut ap = matvec(ctx, &x)?;
+    let mut r = ctx.engine.vec_axpby(1.0, b, -1.0, &ap)?;
+    let mut p = r.clone();
+    let rhs_norm = ctx.engine.vec_dot(b, b)?.sqrt().max(1e-30);
+    let mut rs_old = ctx.engine.vec_dot(&r, &r)?;
+    for _ in 0..max_iters {
+        if rs_old.sqrt() / rhs_norm <= tol {
+            break;
+        }
+        ap = matvec(ctx, &p)?;
+        let p_ap = ctx.engine.vec_dot(&p, &ap)?;
+        if p_ap <= 0.0 {
+            break;
+        }
+        let alpha = (rs_old / p_ap) as f32;
+        x = ctx.engine.vec_axpby(1.0, &x, alpha, &p)?;
+        r = ctx.engine.vec_axpby(1.0, &r, -alpha, &ap)?;
+        let rs_new = ctx.engine.vec_dot(&r, &r)?;
+        let beta = (rs_new / rs_old) as f32;
+        p = ctx.engine.vec_axpby(1.0, &r, beta, &p)?;
+        ctx.meter.all_vec_ops(3);
+        rs_old = rs_new;
+    }
+    Ok(x)
+}
+
+impl ExactCgSolver {
+    fn chain_ready(&self, ctx: &RunContext, m: usize) -> bool {
+        !self.force_legacy
+            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
+            && ctx.engine.chain_nm_ready(ctx.d)
+            && ctx.engine.red_ready(m, ctx.d)
     }
 
-    /// CG only needs grad + normal-matvec dispatches — no VR sweeps.
-    fn needs_vr_blocks(&self) -> bool {
-        false
-    }
-
-    fn solve(
+    fn solve_legacy(
         &mut self,
         ctx: &mut RunContext,
         batches: &[MachineBatch],
         wprev: &[f32],
         gamma: f64,
-        _t: usize,
     ) -> Result<Vec<f32>> {
-        if ctx.loss != Loss::Squared {
-            bail!("exact-cg prox solver requires the squared loss");
-        }
         let d = ctx.d;
         // rhs = (1/n) X^T y + gamma wprev = -grad(0) + gamma wprev
         let zero = vec![0.0f32; d];
@@ -103,34 +229,75 @@ impl ProxSolver for ExactCgSolver {
         for j in 0..d {
             b[j] = -g0[j] + (gamma as f32) * wprev[j];
         }
-
         // CG with the distributed operator (warm start from wprev)
-        let mut x = wprev.to_vec();
-        let mut ap = distributed_normal_matvec(ctx, batches, &x, gamma)?;
-        let mut r: Vec<f32> = (0..d).map(|j| b[j] - ap[j]).collect();
-        let mut p = r.clone();
-        let b_norm = linalg::nrm2(&b).max(1e-30);
-        let mut rs_old = linalg::dot(&r, &r);
-        for _ in 0..self.max_iters {
-            if rs_old.sqrt() / b_norm <= self.tol {
-                break;
-            }
-            ap = distributed_normal_matvec(ctx, batches, &p, gamma)?;
-            let p_ap = linalg::dot(&p, &ap);
-            if p_ap <= 0.0 {
-                break;
-            }
-            let alpha = (rs_old / p_ap) as f32;
-            linalg::axpy(alpha, &p, &mut x);
-            linalg::axpy(-alpha, &ap, &mut r);
-            let rs_new = linalg::dot(&r, &r);
-            let beta = (rs_new / rs_old) as f32;
-            for j in 0..d {
-                p[j] = r[j] + beta * p[j];
-            }
-            ctx.meter.all_vec_ops(3);
-            rs_old = rs_new;
+        host_cg(
+            ctx,
+            |ctx, v| distributed_normal_matvec(ctx, batches, v, gamma),
+            &b,
+            wprev.to_vec(),
+            self.tol,
+            self.max_iters,
+        )
+    }
+
+    /// Chained CG: same recurrence scalar-for-scalar, vectors on device.
+    fn solve_chained(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+    ) -> Result<Vec<f32>> {
+        let zero = ctx.engine.zeros_dev(ctx.d)?;
+        let g0 = distributed_mean_grad_dev(
+            ctx.engine,
+            ctx.loss,
+            batches,
+            &zero,
+            &mut ctx.net,
+            &mut ctx.meter,
+        )?;
+        let wprev_dev = ctx.engine.upload_dev(wprev, &[ctx.d])?;
+        // b = -g0 + gamma wprev
+        let b = ctx.engine.vec_axpby(-1.0, &g0, gamma as f32, &wprev_dev)?;
+        let x = chained_cg(
+            ctx,
+            |ctx, v| distributed_normal_matvec_dev(ctx, batches, v, gamma),
+            &b,
+            wprev_dev.clone(),
+            self.tol,
+            self.max_iters,
+        )?;
+        // the round boundary: the one full-vector download of this solve
+        ctx.engine.materialize(&x)
+    }
+}
+
+impl ProxSolver for ExactCgSolver {
+    fn name(&self) -> String {
+        "exact-cg".to_string()
+    }
+
+    /// CG only needs grad + normal-matvec dispatches — no VR sweeps.
+    fn needs_vr_blocks(&self, _ctx: &RunContext) -> bool {
+        false
+    }
+
+    fn solve(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+        _t: usize,
+    ) -> Result<Vec<f32>> {
+        if ctx.loss != Loss::Squared {
+            bail!("exact-cg prox solver requires the squared loss");
         }
-        Ok(x)
+        if self.chain_ready(ctx, batches.len()) {
+            self.solve_chained(ctx, batches, wprev, gamma)
+        } else {
+            self.solve_legacy(ctx, batches, wprev, gamma)
+        }
     }
 }

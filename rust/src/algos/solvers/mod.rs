@@ -16,6 +16,8 @@ pub mod oneshot;
 
 use super::RunContext;
 use crate::objective::MachineBatch;
+use crate::runtime::chain::VrKernel;
+use crate::runtime::DeviceVec;
 use anyhow::Result;
 
 /// Which variance-reduced kernel performs the local sweeps.
@@ -36,18 +38,37 @@ impl LocalSolver {
             LocalSolver::Saga => "saga",
         }
     }
+
+    /// The chained kernel family implementing this solver's sweeps.
+    pub fn kernel(self) -> VrKernel {
+        match self {
+            LocalSolver::Svrg => VrKernel::Svrg,
+            LocalSolver::Saga => VrKernel::Saga,
+        }
+    }
 }
 
 /// Approximately solve the prox subproblem on the current minibatches.
 pub trait ProxSolver {
     fn name(&self) -> String;
 
-    /// Whether `solve` runs per-block VR sweeps over the batches (which
-    /// need the host block copies retained for the lazy per-block
-    /// uploads). Grad/CG-only solvers return false so the outer loop can
-    /// pack grad-only batches and skip the host retention.
-    fn needs_vr_blocks(&self) -> bool {
+    /// Whether `solve` runs *legacy per-block* VR sweeps over the batches
+    /// (which need the host block copies retained for the lazy per-block
+    /// uploads). Grad/CG-only solvers — and solvers whose sweeps ride the
+    /// chained group-aligned path on this engine — return false so the
+    /// outer loop can pack grad-only batches and skip the host retention.
+    fn needs_vr_blocks(&self, _ctx: &RunContext) -> bool {
         true
+    }
+
+    /// `Some(p)` when the solver's chained sweeps want fused groups
+    /// aligned to its p-way batch partition: the outer loop then draws
+    /// via `RunContext::draw_batches_vr_aligned`, so
+    /// `MachineBatch::group_ranges(p)` tiles exactly the block partition
+    /// the legacy sweep would use. `None` keeps the default (widest)
+    /// packing.
+    fn vr_group_align(&self, _ctx: &RunContext) -> Option<usize> {
+        None
     }
 
     /// Return an (inexact) minimizer of `f_t`; `t` is the outer iteration
@@ -128,4 +149,97 @@ pub fn svrg_sweep_machine(
     vr_sweep_machine(
         ctx, LocalSolver::Svrg, batch_blocks, batch, machine_idx, x0, z, mu, center, gamma, eta,
     )
+}
+
+/// Chained core of the group-aligned VR sweep: advance the `[2, d]` state
+/// through `batch.groups[group_range]` riding the *fused* block uploads —
+/// no `vr_lits` materialization, no downloads, no host round-trips
+/// between groups. Returns the advanced state; divide by
+/// [`sweep_groups_weight`] (via `Engine::vr_avg`) for the sweep average.
+/// Charges the swept valid rows to `machine_idx`, like the legacy path.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_groups(
+    ctx: &mut RunContext,
+    solver: LocalSolver,
+    group_range: std::ops::Range<usize>,
+    batch: &MachineBatch,
+    machine_idx: usize,
+    state: DeviceVec,
+    z: &DeviceVec,
+    mu: &DeviceVec,
+    center: &DeviceVec,
+    gamma: &DeviceVec,
+    eta: &DeviceVec,
+) -> Result<DeviceVec> {
+    let mut s = state;
+    let mut total_n = 0u64;
+    for gi in group_range {
+        let blk = &batch.groups[gi];
+        if blk.valid == 0 {
+            continue;
+        }
+        s = ctx.engine.vr_chain(solver.kernel(), ctx.loss, blk, &s, z, mu, center, gamma, eta)?;
+        total_n += blk.valid as u64;
+    }
+    ctx.meter.machine(machine_idx).add_vec_ops(total_n);
+    Ok(s)
+}
+
+/// Total sweep-average weight of `batch.groups[group_range]`: the
+/// host-side divisor for the chained accumulator (`1 + valid` per
+/// non-empty block, matching the legacy combiner).
+pub fn sweep_groups_weight(batch: &MachineBatch, group_range: std::ops::Range<usize>) -> f64 {
+    batch.groups[group_range].iter().map(|g| g.sweep_weight()).sum()
+}
+
+/// Host-level wrapper over the chained sweep: uploads the state and the
+/// sweep-constant vectors, chains through the groups, and materializes
+/// `(x_end, x_avg)` — one `[2, d]` download per *sweep* instead of two
+/// `[d]` downloads per *block*. Semantics match [`vr_sweep_machine`] over
+/// the same blocks (the parity tests pin this down).
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_machine_grouped(
+    ctx: &mut RunContext,
+    solver: LocalSolver,
+    group_range: std::ops::Range<usize>,
+    batch: &MachineBatch,
+    machine_idx: usize,
+    x0: &[f32],
+    z: &[f32],
+    mu: &[f32],
+    center: &[f32],
+    gamma: f32,
+    eta: f32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let d = ctx.d;
+    let state = ctx.engine.vr_state_from(x0)?;
+    let z_dev = ctx.engine.upload_dev(z, &[d])?;
+    let mu_dev = ctx.engine.upload_dev(mu, &[d])?;
+    let c_dev = ctx.engine.upload_dev(center, &[d])?;
+    // sweep-constant scalars: uploaded once per sweep, not per group
+    let gamma_dev = ctx.engine.scalar_dev(gamma)?;
+    let eta_dev = ctx.engine.scalar_dev(eta)?;
+    let total_w = sweep_groups_weight(batch, group_range.clone());
+    let s = vr_sweep_groups(
+        ctx,
+        solver,
+        group_range,
+        batch,
+        machine_idx,
+        state,
+        &z_dev,
+        &mu_dev,
+        &c_dev,
+        &gamma_dev,
+        &eta_dev,
+    )?;
+    let host = ctx.engine.materialize(&s)?;
+    let (x_end, acc) = host.split_at(d);
+    let x_avg = if total_w > 0.0 {
+        let inv = (1.0 / total_w) as f32;
+        acc.iter().map(|&a| a * inv).collect()
+    } else {
+        x_end.to_vec()
+    };
+    Ok((x_end.to_vec(), x_avg))
 }

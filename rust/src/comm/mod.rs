@@ -12,10 +12,26 @@
 //! coordinator thread rather than tokio tasks; the collectives below are
 //! the *only* way machine state crosses machine boundaries, which is what
 //! makes the round/vector counts trustworthy.
+//!
+//! # DeviceCollective
+//!
+//! The `device_*` methods are the same collectives over device-resident
+//! [`DeviceVec`] handles — the **reduce** verb of the runtime's backend
+//! contract. They charge the *identical* rounds/vectors/`sim_time_s` as
+//! the host methods (both funnel through the same internal `charge`), so
+//! `ClusterMeter` and the paper's Table-1 counts stay authoritative no
+//! matter which plane the bytes moved on. The reduce itself runs the
+//! `redm{M}` artifact, whose f64 machine-order interior makes the
+//! downloaded result bit-identical to the host path; cluster sizes
+//! without a `redm{M}` artifact transparently fall back to
+//! materialize -> host collective -> re-upload (same round accounting,
+//! honestly metered extra device traffic).
 
 pub mod netmodel;
 
 use crate::accounting::ClusterMeter;
+use crate::runtime::{chain, DeviceVec, Engine};
+use anyhow::Result;
 use netmodel::NetModel;
 
 #[derive(Clone, Debug, Default)]
@@ -76,19 +92,10 @@ impl Network {
         assert_eq!(locals.len(), self.m);
         assert_eq!(weights.len(), self.m);
         let dim = locals[0].len();
-        let mut sum = vec![0.0f64; dim];
-        let mut wtot = 0.0f64;
-        for (w, v) in weights.iter().zip(locals.iter()) {
-            wtot += w;
-            for (s, &x) in sum.iter_mut().zip(v) {
-                *s += w * x as f64;
-            }
+        for v in locals.iter() {
+            assert_eq!(v.len(), dim, "ragged all-reduce");
         }
-        let inv = if wtot > 0.0 { 1.0 / wtot } else { 0.0 };
-        let mean32: Vec<f32> = sum.iter().map(|&s| (s * inv) as f32).collect();
-        for v in locals.iter_mut() {
-            v.copy_from_slice(&mean32);
-        }
+        host_reduce_weighted(weights, locals);
         self.charge(meter, 1, dim);
     }
 
@@ -115,6 +122,84 @@ impl Network {
             *l = sum;
         }
         self.charge(meter, 1, 1);
+    }
+
+    /// Device-resident weighted all-reduce: every machine's handle is
+    /// consumed, the weighted mean comes back as ONE shared handle (the
+    /// simulated cluster shares a device, so "every machine ends with the
+    /// mean" is a handle clone away). Charged exactly like
+    /// [`Network::all_reduce_weighted`].
+    pub fn device_all_reduce_weighted(
+        &mut self,
+        meter: &mut ClusterMeter,
+        engine: &mut Engine,
+        weights: &[f64],
+        locals: &[DeviceVec],
+    ) -> Result<DeviceVec> {
+        assert_eq!(locals.len(), self.m);
+        assert_eq!(weights.len(), self.m);
+        let dim = locals[0].len();
+        let out = if self.m == 1 {
+            // single machine: the weighted mean of one vector is itself
+            locals[0].clone()
+        } else if engine.red_ready(self.m, dim) && chain::weights_f32_exact(weights) {
+            engine.reduce_weighted_dev(locals, weights)?
+        } else {
+            // honest fallback for unserved cluster sizes — or weights the
+            // f32 device plane cannot carry exactly (counts > 2^24):
+            // host collective, extra device traffic metered as real
+            let mut host: Vec<Vec<f32>> =
+                locals.iter().map(|v| engine.materialize(v)).collect::<Result<_>>()?;
+            host_reduce_weighted(weights, &mut host);
+            engine.upload_dev(&host.pop().unwrap(), &[dim])?
+        };
+        self.charge(meter, 1, dim);
+        Ok(out)
+    }
+
+    /// Device-resident unweighted all-reduce (weights all 1, like
+    /// [`Network::all_reduce_avg`] — and bit-identical to it).
+    pub fn device_all_reduce_avg(
+        &mut self,
+        meter: &mut ClusterMeter,
+        engine: &mut Engine,
+        locals: &[DeviceVec],
+    ) -> Result<DeviceVec> {
+        let weights = vec![1.0f64; locals.len()];
+        self.device_all_reduce_weighted(meter, engine, &weights, locals)
+    }
+
+    /// Device-resident broadcast: machine `src`'s handle becomes known to
+    /// all. On the shared simulated device this is a handle clone; the
+    /// round is charged exactly like [`Network::broadcast`].
+    pub fn device_broadcast(
+        &mut self,
+        meter: &mut ClusterMeter,
+        src: usize,
+        v: &DeviceVec,
+    ) -> DeviceVec {
+        assert!(src < self.m);
+        self.charge(meter, 1, v.len());
+        v.clone()
+    }
+}
+
+/// The host weighted-mean combine (shared by `all_reduce_weighted` and the
+/// device fallback path so the two cannot drift).
+fn host_reduce_weighted(weights: &[f64], locals: &mut [Vec<f32>]) {
+    let dim = locals[0].len();
+    let mut sum = vec![0.0f64; dim];
+    let mut wtot = 0.0f64;
+    for (w, v) in weights.iter().zip(locals.iter()) {
+        wtot += w;
+        for (s, &x) in sum.iter_mut().zip(v) {
+            *s += w * x as f64;
+        }
+    }
+    let inv = if wtot > 0.0 { 1.0 / wtot } else { 0.0 };
+    let mean32: Vec<f32> = sum.iter().map(|&s| (s * inv) as f32).collect();
+    for v in locals.iter_mut() {
+        v.copy_from_slice(&mean32);
     }
 }
 

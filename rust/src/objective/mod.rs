@@ -20,11 +20,19 @@
 //!   one `(grad_sum, loss_sum, count)` download per *group* instead of
 //!   per block; the ragged tail (fewer blocks than the narrowest width)
 //!   falls back to single-block dispatch with host-side accumulation.
-//! - **Per-block buffers** (`vr_lits`): the sequential SVRG/SAGA sweep
-//!   kernels are inherently per-block, so their uploads are materialized
-//!   lazily on a batch's *first* sweep and cached for the batch lifetime
-//!   — machines that are never the designated sweeper upload nothing
-//!   twice.
+//! - **Per-block buffers** (`vr_lits`): the *legacy* SVRG/SAGA sweep path
+//!   is per-block, so its uploads are materialized lazily on a batch's
+//!   first sweep and cached for the batch lifetime — machines that are
+//!   never the designated sweeper upload nothing twice. When the manifest
+//!   carries the chained `svrgc{K}`/`sagac{K}` artifacts, group-aligned
+//!   sweeps ride the fused `groups` uploads instead and `vr_lits` never
+//!   materializes at all.
+//!
+//! The `*_dev` functions are the chained (device-resident) versions of
+//! the same primitives: gradients fold into [`DeviceVec`] handles via the
+//! `gacc{K}` accumulator chain and cross machines through the comm
+//! layer's DeviceCollective, with identical paper-units accounting and
+//! zero steady-state downloads.
 
 use crate::accounting::ClusterMeter;
 use crate::comm::Network;
@@ -32,7 +40,7 @@ use crate::data::blocks::{pack_all, Block};
 use crate::data::{Loss, Sample};
 use crate::linalg;
 use crate::runtime::exec::{BlockLits, GradOut};
-use crate::runtime::Engine;
+use crate::runtime::{DeviceVec, Engine};
 use anyhow::Result;
 use std::cell::{Ref, RefCell};
 
@@ -48,12 +56,17 @@ pub struct MachineBatch {
     vr: RefCell<Option<Vec<BlockLits>>>,
     pub n: usize,
     pub d: usize,
+    /// sample vectors charged against the owning machine's memory meter
+    /// when this batch was drawn (0 when the draw did not hold memory).
+    /// `RunContext::release_batches` releases exactly this amount, so a
+    /// ragged final batch can never corrupt the peak-memory meter.
+    pub held: u64,
 }
 
 impl MachineBatch {
     /// Pack for the full engine surface (grad/nm hot path + VR sweeps).
     pub fn pack(engine: &mut Engine, engine_d: usize, samples: &[Sample]) -> Result<MachineBatch> {
-        Self::pack_opts(engine, engine_d, samples, true)
+        Self::pack_opts(engine, engine_d, samples, true, None)
     }
 
     /// Pack for grad/normal-matvec use only (evaluators, CG-only shards):
@@ -64,7 +77,24 @@ impl MachineBatch {
         engine_d: usize,
         samples: &[Sample],
     ) -> Result<MachineBatch> {
-        Self::pack_opts(engine, engine_d, samples, false)
+        Self::pack_opts(engine, engine_d, samples, false, None)
+    }
+
+    /// Pack with fused-group boundaries aligned to a p-way block
+    /// partition (`shard_ranges(n_blocks, p)`): no group straddles a
+    /// partition boundary, so chained VR sweeps over [`MachineBatch::
+    /// group_ranges`] touch EXACTLY the blocks the legacy per-block
+    /// partition would — same sweep sizes, same vec-op charges, for any
+    /// p. The trade-off is narrower fusion near boundaries (a 3-block
+    /// segment cannot ride a k=4 kernel); host blocks are not retained —
+    /// aligned packs exist for the chained path.
+    pub fn pack_vr_aligned(
+        engine: &mut Engine,
+        engine_d: usize,
+        samples: &[Sample],
+        p: usize,
+    ) -> Result<MachineBatch> {
+        Self::pack_opts(engine, engine_d, samples, false, Some(p))
     }
 
     fn pack_opts(
@@ -72,10 +102,21 @@ impl MachineBatch {
         engine_d: usize,
         samples: &[Sample],
         retain_host: bool,
+        vr_align: Option<usize>,
     ) -> Result<MachineBatch> {
         let blocks: Vec<Block> = pack_all(samples, engine_d);
-        let groups = fuse_blocks(engine, &blocks)?;
         let n_blocks = blocks.len();
+        let groups = match vr_align {
+            None => fuse_blocks(engine, &blocks)?,
+            Some(p) => {
+                let p = p.clamp(1, n_blocks.max(1));
+                let mut groups = Vec::new();
+                for seg in crate::data::sampler::shard_ranges(n_blocks, p) {
+                    groups.extend(fuse_blocks(engine, &blocks[seg])?);
+                }
+                groups
+            }
+        };
         let pending = if retain_host { blocks } else { Vec::new() };
         Ok(MachineBatch {
             pending: RefCell::new(pending),
@@ -84,6 +125,7 @@ impl MachineBatch {
             vr: RefCell::new(None),
             n: samples.len(),
             d: engine_d,
+            held: 0,
         })
     }
 
@@ -95,12 +137,43 @@ impl MachineBatch {
             vr: RefCell::new(None),
             n: 0,
             d: engine_d,
+            held: 0,
         }
     }
 
     /// Number of 256-row blocks (the VR sweep granularity).
     pub fn n_blocks(&self) -> usize {
         self.n_blocks
+    }
+
+    /// Group-index ranges tiling the p-way BLOCK partition
+    /// (`shard_ranges(n_blocks, p)`), for group-aligned VR sweeps. Exact
+    /// — each range covers precisely its partition's blocks — when the
+    /// batch was packed with [`MachineBatch::pack_vr_aligned`] at the
+    /// same p. On an unaligned pack this is best-effort: a group is
+    /// assigned to the partition containing its first block, so a group
+    /// straddling a boundary shifts some blocks one partition earlier.
+    /// Always a partition of `0..groups.len()`.
+    pub fn group_ranges(&self, p: usize) -> Vec<std::ops::Range<usize>> {
+        let p = p.clamp(1, self.n_blocks.max(1));
+        let block_ranges = crate::data::sampler::shard_ranges(self.n_blocks, p);
+        // cumulative first-block index of each group
+        let mut starts = Vec::with_capacity(self.groups.len());
+        let mut acc = 0usize;
+        for g in &self.groups {
+            starts.push(acc);
+            acc += g.k;
+        }
+        let mut out = Vec::with_capacity(block_ranges.len());
+        let mut g = 0usize;
+        for br in &block_ranges {
+            let begin = g;
+            while g < starts.len() && starts[g] < br.end {
+                g += 1;
+            }
+            out.push(begin..g);
+        }
+        out
     }
 
     /// Per-block device buffers for the sequential VR sweeps, uploaded on
@@ -168,6 +241,26 @@ pub fn local_grad_sum(
     Ok(GradOut { grad_sum: g, loss_sum: lsum, count: cnt })
 }
 
+/// Device-chained [`local_grad_sum`]: folds the whole batch into ONE
+/// device vector via the `gacc{K}` accumulator chain — zero downloads,
+/// zero uploads beyond the iterate itself. The valid count is not
+/// downloaded either: it is known at pack time (`batch.n`). Charges the
+/// same `n` vec ops as the host path.
+pub fn local_grad_sum_dev(
+    engine: &mut Engine,
+    loss: Loss,
+    batch: &MachineBatch,
+    w: &DeviceVec,
+    meter: &mut crate::accounting::ResourceMeter,
+) -> Result<DeviceVec> {
+    let mut acc = engine.zeros_dev(batch.d)?;
+    for blk in &batch.groups {
+        acc = engine.grad_acc(loss, blk, w, &acc)?;
+    }
+    meter.add_vec_ops(batch.n as u64);
+    Ok(acc)
+}
+
 /// Distributed mean gradient over all machines' batches:
 /// one weighted all-reduce round; returns (mean_grad, mean_loss, total_n).
 pub fn distributed_mean_grad(
@@ -206,6 +299,40 @@ pub fn distributed_mean_grad(
     Ok((locals.pop().unwrap(), mean_loss, n_total))
 }
 
+/// Device-chained [`distributed_mean_grad`]: every machine's local mean
+/// gradient is assembled on device (gacc chain + one scale) and the
+/// weighted combine runs the DeviceCollective reduce — identical
+/// round/vector/`sim_time_s` accounting, zero steady-state downloads.
+/// Mean loss is not produced (losses only matter at evaluation
+/// checkpoints, which take the tupled dispatch path).
+pub fn distributed_mean_grad_dev(
+    engine: &mut Engine,
+    loss: Loss,
+    machines: &[MachineBatch],
+    w: &DeviceVec,
+    net: &mut Network,
+    meter: &mut ClusterMeter,
+) -> Result<DeviceVec> {
+    if machines.is_empty() {
+        return engine.zeros_dev(w.len());
+    }
+    let m = machines.len();
+    let mut locals: Vec<DeviceVec> = Vec::with_capacity(m);
+    let mut weights: Vec<f64> = Vec::with_capacity(m);
+    for (i, batch) in machines.iter().enumerate() {
+        let gsum = local_grad_sum_dev(engine, loss, batch, w, meter.machine(i))?;
+        // the pack-time count replaces the downloaded one: same value,
+        // no traffic (masked rows are exact no-ops in the kernels)
+        let cnt = batch.n as f64;
+        // local *mean* gradient, weighted by count in the reduce —
+        // the same scalar the host path applies
+        let gm = if cnt > 0.0 { engine.vec_scale(&gsum, (1.0 / cnt) as f32)? } else { gsum };
+        locals.push(gm);
+        weights.push(cnt);
+    }
+    net.device_all_reduce_weighted(meter, engine, &weights, &locals)
+}
+
 /// Held-out estimator of the population objective phi(w).
 pub struct Evaluator {
     pub loss: Loss,
@@ -233,6 +360,21 @@ impl Evaluator {
         let mut cnt = 0.0;
         for blk in &self.batch.groups {
             let out = engine.grad_block(self.loss, blk, w)?;
+            lsum += out.loss_sum;
+            cnt += out.count;
+        }
+        Ok(if cnt > 0.0 { lsum / cnt } else { 0.0 })
+    }
+
+    /// [`Evaluator::objective`] at a device-resident iterate: the handle
+    /// is aliased into the session pool (zero uploads), so a chained
+    /// round can hit an evaluation checkpoint without materializing its
+    /// iterate first. Downloads only the per-group loss tuples.
+    pub fn objective_dev(&self, engine: &mut Engine, w: &DeviceVec) -> Result<f64> {
+        let mut lsum = 0.0;
+        let mut cnt = 0.0;
+        for blk in &self.batch.groups {
+            let out = engine.grad_block_dev(self.loss, blk, w)?;
             lsum += out.loss_sum;
             cnt += out.count;
         }

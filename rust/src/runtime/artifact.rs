@@ -3,7 +3,7 @@
 //! compiles from.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -16,8 +16,12 @@ pub struct ArtifactMeta {
     pub block: usize,
     pub arg_shapes: Vec<Vec<usize>>,
     pub outputs: Vec<String>,
-    /// stacked 256-row blocks per dispatch (1 = single-block artifact)
+    /// stacked 256-row blocks per dispatch (1 = single-block artifact);
+    /// for the `Reduce` kind this records the machine count M instead
     pub k: usize,
+    /// single-output artifact lowered with return_tuple=False: executed
+    /// via the chained path (output buffer feeds the next dispatch)
+    pub chained: bool,
     pub sha256: String,
 }
 
@@ -31,6 +35,27 @@ pub enum ArtifactKind {
     GradMulti,
     /// fused K-block normal-equation matvec (`nmm{K}_*`)
     NormalMatvecMulti,
+    /// chained K-block gradient accumulate (`gacc{K}_*`): acc + grad_sum
+    GradAcc,
+    /// chained K-block normal-matvec accumulate (`nacc{K}_*`)
+    NormalMatvecAcc,
+    /// chained K-block SVRG sweep over a `[2, d]` state (`svrgc{K}_*`)
+    SvrgChain,
+    /// chained K-block SAGA sweep over a `[2, d]` state (`sagac{K}_*`)
+    SagaChain,
+    /// vector plane: s * x
+    VecScale,
+    /// vector plane: a*u + b*v
+    VecAxpby,
+    /// vector plane: <u, v> as a length-1 array (the CG scalar downlink)
+    VecDot,
+    /// vector plane: sweep-average extraction from a VR state
+    VrAvg,
+    /// vector plane: zero a VR state's accumulator, keep its iterate
+    VrReset,
+    /// cross-machine weighted mean over M vectors (`redm{M}_*`), f64
+    /// interior in host collective order (bitwise parity)
+    Reduce,
 }
 
 impl ArtifactKind {
@@ -42,6 +67,16 @@ impl ArtifactKind {
             "nm" => ArtifactKind::NormalMatvec,
             "grad_multi" => ArtifactKind::GradMulti,
             "nm_multi" => ArtifactKind::NormalMatvecMulti,
+            "gacc" => ArtifactKind::GradAcc,
+            "nacc" => ArtifactKind::NormalMatvecAcc,
+            "svrgc" => ArtifactKind::SvrgChain,
+            "sagac" => ArtifactKind::SagaChain,
+            "vscale" => ArtifactKind::VecScale,
+            "vaxpby" => ArtifactKind::VecAxpby,
+            "vdot" => ArtifactKind::VecDot,
+            "vravg" => ArtifactKind::VrAvg,
+            "vrreset" => ArtifactKind::VrReset,
+            "red" => ArtifactKind::Reduce,
             other => bail!("unknown artifact kind '{other}'"),
         })
     }
@@ -115,6 +150,8 @@ impl Manifest {
                 outputs,
                 // absent in pre-fusion manifests: single-block artifact
                 k: a.get("k").and_then(Json::as_usize).unwrap_or(1),
+                // absent in pre-chaining manifests: tupled artifact
+                chained: a.get("chained").and_then(Json::as_bool).unwrap_or(false),
                 sha256: get_str("sha256")?,
             });
         }
@@ -159,6 +196,42 @@ impl Manifest {
         Ok(format!("{base}m{k}_{loss_tag}_d{d}"))
     }
 
+    /// Canonical *chained* artifact name (single-output family; the width
+    /// is always embedded, including k=1). Matches python's
+    /// `kernels.common.chain_artifact_name`.
+    pub fn chain_name(kind: ArtifactKind, loss_tag: &str, d: usize, k: usize) -> Result<String> {
+        let base = match kind {
+            ArtifactKind::GradAcc => "gacc",
+            ArtifactKind::NormalMatvecAcc => "nacc",
+            ArtifactKind::SvrgChain => "svrgc",
+            ArtifactKind::SagaChain => "sagac",
+            other => bail!("no chained variant for artifact kind {other:?}"),
+        };
+        ensure!(k >= 1, "chained width must be >= 1, got {k}");
+        Ok(format!("{base}{k}_{loss_tag}_d{d}"))
+    }
+
+    /// Canonical vector-plane artifact name (`vscale_d64`, ...). Matches
+    /// python's `kernels.common.vec_artifact_name`.
+    pub fn vec_name(kind: ArtifactKind, d: usize) -> Result<String> {
+        let base = match kind {
+            ArtifactKind::VecScale => "vscale",
+            ArtifactKind::VecAxpby => "vaxpby",
+            ArtifactKind::VecDot => "vdot",
+            ArtifactKind::VrAvg => "vravg",
+            ArtifactKind::VrReset => "vrreset",
+            other => bail!("{other:?} is not a vector-plane artifact kind"),
+        };
+        Ok(format!("{base}_d{d}"))
+    }
+
+    /// Canonical cross-machine reduce artifact name (`redm4_d64`).
+    /// Matches python's `kernels.common.red_artifact_name`.
+    pub fn red_name(m: usize, d: usize) -> Result<String> {
+        ensure!(m >= 2, "cross-machine reduce needs m >= 2, got {m}");
+        Ok(format!("redm{m}_d{d}"))
+    }
+
     /// Fused-dispatch widths usable by the packer, widest first: a width
     /// K qualifies only if *every* hot-path artifact exists at K — the
     /// fused gradient for each (loss, dim) that has a single-block
@@ -189,6 +262,64 @@ impl Manifest {
         });
         ks.reverse(); // widest first for the greedy packer
         ks
+    }
+
+    /// The widths the chained dispatch path must cover: every fused group
+    /// width the packer can emit, plus 1 for the ragged single-block tail.
+    fn required_chain_widths(&self) -> Vec<usize> {
+        let mut ks = self.fuse_widths();
+        if !ks.contains(&1) {
+            ks.push(1);
+        }
+        ks
+    }
+
+    fn has(&self, name: Result<String>) -> bool {
+        name.ok().and_then(|n| self.find(&n)).is_some()
+    }
+
+    /// Vector-plane readiness at dim `d`: scale/axpby/dot present.
+    pub fn vec_ready(&self, d: usize) -> bool {
+        [ArtifactKind::VecScale, ArtifactKind::VecAxpby, ArtifactKind::VecDot]
+            .into_iter()
+            .all(|k| self.has(Self::vec_name(k, d)))
+    }
+
+    /// Chained gradient readiness for (loss-tag, dim): `gacc{K}` exists at
+    /// every width the packer can emit (plus the k=1 tail), and the
+    /// vector plane is present for the scale step.
+    pub fn chain_grad_ready(&self, loss_tag: &str, d: usize) -> bool {
+        self.vec_ready(d)
+            && self
+                .required_chain_widths()
+                .into_iter()
+                .all(|k| self.has(Self::chain_name(ArtifactKind::GradAcc, loss_tag, d, k)))
+    }
+
+    /// Chained VR-sweep readiness for (loss-tag, dim): both sweep kernels
+    /// at every packer width plus the state helpers.
+    pub fn chain_vr_ready(&self, loss_tag: &str, d: usize) -> bool {
+        self.has(Self::vec_name(ArtifactKind::VrAvg, d))
+            && self.has(Self::vec_name(ArtifactKind::VrReset, d))
+            && self.required_chain_widths().into_iter().all(|k| {
+                self.has(Self::chain_name(ArtifactKind::SvrgChain, loss_tag, d, k))
+                    && self.has(Self::chain_name(ArtifactKind::SagaChain, loss_tag, d, k))
+            })
+    }
+
+    /// Chained normal-matvec (CG/DiSCO) readiness at dim `d`.
+    pub fn chain_nm_ready(&self, d: usize) -> bool {
+        self.vec_ready(d)
+            && self
+                .required_chain_widths()
+                .into_iter()
+                .all(|k| self.has(Self::chain_name(ArtifactKind::NormalMatvecAcc, "sq", d, k)))
+    }
+
+    /// Whether the on-device cross-machine reduce serves an m-machine
+    /// cluster at dim `d` (m == 1 is an identity, always served).
+    pub fn red_ready(&self, m: usize, d: usize) -> bool {
+        m == 1 || self.has(Self::red_name(m, d))
     }
 
     /// Smallest supported artifact dim >= `native_dim`.
@@ -327,5 +458,80 @@ mod tests {
     #[test]
     fn missing_dir_is_error() {
         assert!(Manifest::load(Path::new("/definitely/not/here")).is_err());
+    }
+
+    #[test]
+    fn chain_names_match_python() {
+        assert_eq!(
+            Manifest::chain_name(ArtifactKind::GradAcc, "sq", 64, 1).unwrap(),
+            "gacc1_sq_d64"
+        );
+        assert_eq!(
+            Manifest::chain_name(ArtifactKind::SvrgChain, "log", 128, 8).unwrap(),
+            "svrgc8_log_d128"
+        );
+        assert_eq!(
+            Manifest::chain_name(ArtifactKind::SagaChain, "sq", 64, 4).unwrap(),
+            "sagac4_sq_d64"
+        );
+        assert_eq!(
+            Manifest::chain_name(ArtifactKind::NormalMatvecAcc, "sq", 64, 4).unwrap(),
+            "nacc4_sq_d64"
+        );
+        assert!(Manifest::chain_name(ArtifactKind::Grad, "sq", 64, 4).is_err());
+        assert_eq!(Manifest::vec_name(ArtifactKind::VecAxpby, 64).unwrap(), "vaxpby_d64");
+        assert_eq!(Manifest::vec_name(ArtifactKind::VrReset, 128).unwrap(), "vrreset_d128");
+        assert!(Manifest::vec_name(ArtifactKind::Reduce, 64).is_err());
+        assert_eq!(Manifest::red_name(4, 64).unwrap(), "redm4_d64");
+        assert!(Manifest::red_name(1, 64).is_err());
+    }
+
+    #[test]
+    fn chain_readiness_requires_full_width_coverage() {
+        let dir = std::env::temp_dir().join("mbprox_manifest_test_chain");
+        write_fixture(&dir);
+        let mut m = Manifest::load(&dir).unwrap();
+        let base = m.artifacts[0].clone();
+        let mk = |name: &str, kind: ArtifactKind, k: usize| ArtifactMeta {
+            name: name.to_string(),
+            kind,
+            loss: "sq".to_string(),
+            k,
+            chained: true,
+            ..base.clone()
+        };
+        // pre-chaining manifest: nothing is ready
+        assert!(!m.vec_ready(2));
+        assert!(!m.chain_grad_ready("sq", 2));
+        assert!(!m.chain_vr_ready("sq", 2));
+        assert!(!m.chain_nm_ready(2));
+        assert!(m.red_ready(1, 2)); // identity: always served
+        assert!(!m.red_ready(4, 2));
+        // vector plane alone is not enough for the grad chain
+        m.artifacts.push(mk("vscale_d2", ArtifactKind::VecScale, 1));
+        m.artifacts.push(mk("vaxpby_d2", ArtifactKind::VecAxpby, 1));
+        m.artifacts.push(mk("vdot_d2", ArtifactKind::VecDot, 1));
+        assert!(m.vec_ready(2));
+        assert!(!m.chain_grad_ready("sq", 2));
+        // no fused widths in this fixture: k=1 coverage suffices
+        m.artifacts.push(mk("gacc1_sq_d2", ArtifactKind::GradAcc, 1));
+        assert!(m.chain_grad_ready("sq", 2));
+        assert!(!m.chain_grad_ready("log", 2));
+        m.artifacts.push(mk("nacc1_sq_d2", ArtifactKind::NormalMatvecAcc, 1));
+        assert!(m.chain_nm_ready(2));
+        // VR chain needs BOTH sweep kernels plus the state helpers
+        m.artifacts.push(mk("svrgc1_sq_d2", ArtifactKind::SvrgChain, 1));
+        m.artifacts.push(mk("vravg_d2", ArtifactKind::VrAvg, 1));
+        m.artifacts.push(mk("vrreset_d2", ArtifactKind::VrReset, 1));
+        assert!(!m.chain_vr_ready("sq", 2));
+        m.artifacts.push(mk("sagac1_sq_d2", ArtifactKind::SagaChain, 1));
+        assert!(m.chain_vr_ready("sq", 2));
+        // a fused width without its chained companion breaks readiness
+        m.artifacts.push(mk("gradm4_sq_d2", ArtifactKind::GradMulti, 4));
+        assert!(!m.chain_grad_ready("sq", 2));
+        m.artifacts.push(mk("gacc4_sq_d2", ArtifactKind::GradAcc, 4));
+        assert!(m.chain_grad_ready("sq", 2));
+        m.artifacts.push(mk("redm4_d2", ArtifactKind::Reduce, 4));
+        assert!(m.red_ready(4, 2));
     }
 }

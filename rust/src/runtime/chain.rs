@@ -1,0 +1,275 @@
+//! DeviceVec: device-resident vector handles + the typed chained wrappers.
+//!
+//! A [`DeviceVec`] is a shared handle to a PJRT device buffer (an upload
+//! or a chained dispatch's output). Handles clone freely — a clone is an
+//! `Rc` bump, not a copy — which is what lets the simulated broadcast
+//! hand "every machine" the same resident vector for free while the comm
+//! layer charges the paper-units round exactly as the host path does.
+//!
+//! The wrappers below are the typed surface of the **chain** verb (see
+//! the module docs in `runtime`): each dispatches one single-output
+//! artifact and returns the output as a new handle. Nothing here ever
+//! downloads; bytes leave the device only through
+//! [`super::Engine::materialize`].
+//!
+//! Naming mirrors `python/compile/kernels/chain.py` kernel-for-kernel:
+//! `grad_acc`/`nm_acc` (accumulating hot-path reductions), `vr_chain`
+//! (the `[2, d]`-state SVRG/SAGA sweep), `vr_reset`/`vr_avg` (state
+//! lifecycle), `vec_scale`/`vec_axpby`/`vec_dot` (the loss-independent
+//! vector plane), and `reduce_weighted_dev` (the cross-machine kernel the
+//! comm layer drives).
+
+use super::exec::BlockLits;
+use super::{ArtifactKind, Engine, Manifest};
+use crate::data::Loss;
+use anyhow::{ensure, Result};
+use std::rc::Rc;
+
+/// Rows in a VR sweep state: `[x; avg_accum]`.
+pub const VR_STATE_ROWS: usize = 2;
+
+/// A device-resident f32 tensor handle (see module docs).
+#[derive(Clone)]
+pub struct DeviceVec {
+    buf: Rc<xla::PjRtBuffer>,
+    dims: Vec<usize>,
+}
+
+impl DeviceVec {
+    pub(super) fn from_buffer(buf: xla::PjRtBuffer, dims: Vec<usize>) -> DeviceVec {
+        DeviceVec { buf: Rc::new(buf), dims }
+    }
+
+    /// The underlying device buffer (an execute input).
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        self.buf.as_ref()
+    }
+
+    /// Shared handle to the buffer (for session-slot aliasing).
+    pub(super) fn shared(&self) -> Rc<xla::PjRtBuffer> {
+        Rc::clone(&self.buf)
+    }
+
+    /// Logical shape (row-major).
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether two handles alias the same device buffer.
+    pub fn same_buffer(&self, other: &DeviceVec) -> bool {
+        Rc::ptr_eq(&self.buf, &other.buf)
+    }
+}
+
+impl std::fmt::Debug for DeviceVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DeviceVec{:?}", self.dims)
+    }
+}
+
+/// Which chained VR kernel family performs a sweep (the runtime-level
+/// mirror of `algos::solvers::LocalSolver`, kept separate so the runtime
+/// has no dependency on the algorithm layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VrKernel {
+    Svrg,
+    Saga,
+}
+
+impl VrKernel {
+    fn kind(self) -> ArtifactKind {
+        match self {
+            VrKernel::Svrg => ArtifactKind::SvrgChain,
+            VrKernel::Saga => ArtifactKind::SagaChain,
+        }
+    }
+}
+
+impl Engine {
+    /// Chained block-gradient accumulate: `acc + grad_sum(blk, w)` for
+    /// the (possibly stacked) block group, entirely on device.
+    pub fn grad_acc(
+        &mut self,
+        loss: Loss,
+        blk: &BlockLits,
+        w: &DeviceVec,
+        acc: &DeviceVec,
+    ) -> Result<DeviceVec> {
+        ensure!(w.dims() == [blk.d], "grad_acc: w {w:?} vs block dim {}", blk.d);
+        ensure!(acc.dims() == [blk.d], "grad_acc: acc {acc:?} vs block dim {}", blk.d);
+        let name = Manifest::chain_name(ArtifactKind::GradAcc, loss.tag(), blk.d, blk.k)?;
+        self.execute_chained(
+            &name,
+            &[&blk.x, &blk.y, &blk.mask, w.buffer(), acc.buffer()],
+            vec![blk.d],
+        )
+    }
+
+    /// Chained normal-matvec accumulate: `acc + X^T diag(mask) X v`
+    /// (squared loss), on device.
+    pub fn nm_acc(&mut self, blk: &BlockLits, v: &DeviceVec, acc: &DeviceVec) -> Result<DeviceVec> {
+        ensure!(v.dims() == [blk.d] && acc.dims() == [blk.d], "nm_acc operand dims");
+        let name =
+            Manifest::chain_name(ArtifactKind::NormalMatvecAcc, Loss::Squared.tag(), blk.d, blk.k)?;
+        self.execute_chained(&name, &[&blk.x, &blk.mask, v.buffer(), acc.buffer()], vec![blk.d])
+    }
+
+    /// Chained VR sweep over one (possibly stacked) block group: advances
+    /// the `[2, d]` state `S = [x; avg_accum]` through every stacked
+    /// block. `z`/`mu`/`center` are sweep-constant handles; `gamma`/`eta`
+    /// are length-1 handles too — sweep constants uploaded ONCE by the
+    /// caller, not per dispatch (see [`Engine::scalar_dev`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn vr_chain(
+        &mut self,
+        kernel: VrKernel,
+        loss: Loss,
+        blk: &BlockLits,
+        state: &DeviceVec,
+        z: &DeviceVec,
+        mu: &DeviceVec,
+        center: &DeviceVec,
+        gamma: &DeviceVec,
+        eta: &DeviceVec,
+    ) -> Result<DeviceVec> {
+        ensure!(
+            state.dims() == [VR_STATE_ROWS, blk.d],
+            "vr_chain: state {state:?} vs block dim {}",
+            blk.d
+        );
+        ensure!(
+            z.dims() == [blk.d] && mu.dims() == [blk.d] && center.dims() == [blk.d],
+            "vr_chain operand dims"
+        );
+        ensure!(gamma.dims() == [1] && eta.dims() == [1], "vr_chain scalar operand dims");
+        let name = Manifest::chain_name(kernel.kind(), loss.tag(), blk.d, blk.k)?;
+        self.execute_chained(
+            &name,
+            &[
+                &blk.x,
+                &blk.y,
+                &blk.mask,
+                state.buffer(),
+                z.buffer(),
+                mu.buffer(),
+                center.buffer(),
+                gamma.buffer(),
+                eta.buffer(),
+            ],
+            vec![VR_STATE_ROWS, blk.d],
+        )
+    }
+
+    /// Fresh sweep state from a host iterate: `[x0; 0]`, one upload.
+    pub fn vr_state_from(&mut self, x0: &[f32]) -> Result<DeviceVec> {
+        let d = x0.len();
+        let mut host = Vec::with_capacity(VR_STATE_ROWS * d);
+        host.extend_from_slice(x0);
+        host.resize(VR_STATE_ROWS * d, 0.0);
+        self.upload_dev(&host, &[VR_STATE_ROWS, d])
+    }
+
+    /// New-sweep state: keep the carried iterate, zero the accumulator.
+    pub fn vr_reset(&mut self, state: &DeviceVec) -> Result<DeviceVec> {
+        ensure!(state.dims().len() == 2, "vr_reset on {state:?}");
+        let d = state.dims()[1];
+        let name = Manifest::vec_name(ArtifactKind::VrReset, d)?;
+        self.execute_chained(&name, &[state.buffer()], vec![VR_STATE_ROWS, d])
+    }
+
+    /// Sweep average `state[1] * inv_weight`; `inv_weight == 0` returns
+    /// the carried iterate `state[0]` (the empty-sweep fallback, matching
+    /// the host combiner). The scalar rides the bit-pattern cache.
+    pub fn vr_avg(&mut self, state: &DeviceVec, inv_weight: f32) -> Result<DeviceVec> {
+        ensure!(state.dims().len() == 2, "vr_avg on {state:?}");
+        let d = state.dims()[1];
+        let name = Manifest::vec_name(ArtifactKind::VrAvg, d)?;
+        let inv = self.scalar_dev(inv_weight)?;
+        self.execute_chained(&name, &[state.buffer(), inv.buffer()], vec![d])
+    }
+
+    /// `s * x` on device (scalar cached by bit pattern).
+    pub fn vec_scale(&mut self, x: &DeviceVec, s: f32) -> Result<DeviceVec> {
+        let d = x.len();
+        let name = Manifest::vec_name(ArtifactKind::VecScale, d)?;
+        let s_dev = self.scalar_dev(s)?;
+        self.execute_chained(&name, &[x.buffer(), s_dev.buffer()], vec![d])
+    }
+
+    /// `a*u + b*v` on device (the CG recurrence workhorse; the recurring
+    /// 1.0/-1.0 coefficients hit the scalar cache, not fresh uploads).
+    pub fn vec_axpby(&mut self, a: f32, u: &DeviceVec, b: f32, v: &DeviceVec) -> Result<DeviceVec> {
+        ensure!(u.dims() == v.dims(), "vec_axpby: {u:?} vs {v:?}");
+        let d = u.len();
+        let name = Manifest::vec_name(ArtifactKind::VecAxpby, d)?;
+        let a_dev = self.scalar_dev(a)?;
+        let b_dev = self.scalar_dev(b)?;
+        self.execute_chained(
+            &name,
+            &[u.buffer(), v.buffer(), a_dev.buffer(), b_dev.buffer()],
+            vec![d],
+        )
+    }
+
+    /// `<u, v>` — computed on device, downloading ONE scalar (4 bytes):
+    /// the steady-state downlink of a chained CG iteration.
+    pub fn vec_dot(&mut self, u: &DeviceVec, v: &DeviceVec) -> Result<f64> {
+        ensure!(u.dims() == v.dims(), "vec_dot: {u:?} vs {v:?}");
+        let name = Manifest::vec_name(ArtifactKind::VecDot, u.len())?;
+        let out = self.execute_chained(&name, &[u.buffer(), v.buffer()], vec![1])?;
+        Ok(self.materialize_scalar(&out)? as f64)
+    }
+
+    /// Cross-machine weighted mean of per-machine handles via the
+    /// `redm{M}` artifact — the **reduce** verb. The kernel's f64
+    /// interior reproduces the host collective bit-for-bit, which is why
+    /// every weight MUST be f32-exact (batch counts are, up to 2^24): a
+    /// silently rounded weight would break the bit-parity contract, so a
+    /// non-exact weight is an error here and the comm layer routes such
+    /// reduces through the host collective instead. Unsupported `m`
+    /// errors the same way.
+    pub fn reduce_weighted_dev(
+        &mut self,
+        parts: &[DeviceVec],
+        weights: &[f64],
+    ) -> Result<DeviceVec> {
+        ensure!(!parts.is_empty(), "reduce of zero machines");
+        ensure!(parts.len() == weights.len(), "reduce weights/machines mismatch");
+        ensure!(
+            weights_f32_exact(weights),
+            "device reduce weights must be f32-exact (got {weights:?})"
+        );
+        let d = parts[0].len();
+        ensure!(parts.iter().all(|p| p.dims() == [d]), "ragged device reduce");
+        let m = parts.len();
+        let name = Manifest::red_name(m, d)?;
+        ensure!(
+            self.manifest().find(&name).is_some(),
+            "no {name} artifact: cluster size {m} not served on device"
+        );
+        let w32: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
+        // weights are per-batch constants (counts): ride the session
+        // pool so K reduces per solve re-upload the vector zero times
+        self.session.ensure(&self.client, &mut self.stats, "red.w", &w32)?;
+        let w_buf = self.session.get_shared("red.w")?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = parts.iter().map(|p| p.buffer()).collect();
+        inputs.push(w_buf.as_ref());
+        self.execute_chained(&name, &inputs, vec![d])
+    }
+}
+
+/// Whether every weight survives an f64 -> f32 -> f64 round trip exactly
+/// (the precondition for the device reduce's bit-parity with the host
+/// collective, which consumes the f64 originals).
+pub fn weights_f32_exact(weights: &[f64]) -> bool {
+    weights.iter().all(|&w| (w as f32) as f64 == w)
+}

@@ -40,6 +40,11 @@ pub struct BlockLits {
     pub mask: xla::PjRtBuffer,
     /// total valid rows across the stacked blocks
     pub valid: usize,
+    /// per stacked block valid-row counts (`valids.len() == k`). The
+    /// group-aligned VR sweep combiner needs these: each non-empty block
+    /// contributes `1 + valid` to the sweep-average weight, and the
+    /// chained kernel's accumulator is divided by that total host-side.
+    pub valids: Vec<usize>,
     pub d: usize,
     /// total rows (k * block rows)
     pub rows: usize,
@@ -55,6 +60,7 @@ impl BlockLits {
             y: engine.upload(&block.y)?,
             mask: engine.upload(&block.mask)?,
             valid: block.valid,
+            valids: vec![block.valid],
             d: block.d,
             rows,
             k: 1,
@@ -79,22 +85,30 @@ impl BlockLits {
         let mut x = Vec::with_capacity(rows * d);
         let mut y = Vec::with_capacity(rows);
         let mut mask = Vec::with_capacity(rows);
-        let mut valid = 0usize;
+        let mut valids = Vec::with_capacity(k);
         for b in blocks {
             x.extend_from_slice(&b.x);
             y.extend_from_slice(&b.y);
             mask.extend_from_slice(&b.mask);
-            valid += b.valid;
+            valids.push(b.valid);
         }
         Ok(BlockLits {
             x: engine.upload_mat(&x, rows, d)?,
             y: engine.upload(&y)?,
             mask: engine.upload(&mask)?,
-            valid,
+            valid: valids.iter().sum(),
+            valids,
             d,
             rows,
             k,
         })
+    }
+
+    /// The sweep-average weight this group contributes: `1 + valid` per
+    /// non-empty stacked block (empty blocks are skipped, exactly like
+    /// the legacy per-block combiner).
+    pub fn sweep_weight(&self) -> f64 {
+        self.valids.iter().filter(|&&v| v > 0).map(|&v| (1 + v) as f64).sum()
     }
 }
 
@@ -112,9 +126,36 @@ impl Engine {
         let name = Manifest::name_for_k(ArtifactKind::Grad, loss.tag(), blk.d, blk.k)?;
         let outs =
             self.execute_pooled(&name, &[&blk.x, &blk.y, &blk.mask], &[("grad.w", w)])?;
-        ensure!(outs.len() == 3, "grad artifact returned {} outputs", outs.len());
-        self.stats.downloads += 1;
-        self.stats.download_bytes += ((blk.d + 2) * std::mem::size_of::<f32>()) as u64;
+        Self::unpack_grad(&mut self.stats, blk, &name, outs)
+    }
+
+    /// [`Engine::grad_block`] at a *device-resident* iterate: the
+    /// [`super::DeviceVec`] is aliased into the `grad.w` session slot
+    /// (zero uploads) so evaluation checkpoints can read losses at an
+    /// iterate that never visited the host. Downloads the usual tuple —
+    /// this is a dispatch-verb call, not a chain-verb one.
+    pub fn grad_block_dev(
+        &mut self,
+        loss: Loss,
+        blk: &BlockLits,
+        w: &super::DeviceVec,
+    ) -> Result<GradOut> {
+        ensure!(w.dims() == [blk.d], "w {w:?} != block dim {}", blk.d);
+        let name = Manifest::name_for_k(ArtifactKind::Grad, loss.tag(), blk.d, blk.k)?;
+        self.alias_slot("grad.w", w);
+        let outs = self.execute_slots(&name, &[&blk.x, &blk.y, &blk.mask], &["grad.w"])?;
+        Self::unpack_grad(&mut self.stats, blk, &name, outs)
+    }
+
+    fn unpack_grad(
+        stats: &mut super::EngineStats,
+        blk: &BlockLits,
+        name: &str,
+        outs: Vec<xla::Literal>,
+    ) -> Result<GradOut> {
+        ensure!(outs.len() == 3, "{name} returned {} outputs", outs.len());
+        stats.downloads += 1;
+        stats.download_bytes += ((blk.d + 2) * std::mem::size_of::<f32>()) as u64;
         Ok(GradOut {
             grad_sum: lit_to_vec(&outs[0])?,
             loss_sum: lit_first(&outs[1])? as f64,

@@ -3,36 +3,49 @@
 //! `PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
 //! execute`. Executables are cached per artifact; Python never runs here.
 //!
-//! # Device-residency contract
+//! # The four-verb backend contract
 //!
-//! The engine is built so that steady-state dispatch moves O(1) small
-//! vectors per *round*, not per block:
+//! Everything a backend must implement to serve this crate is four verbs;
+//! a GPU/TPU port supplies these and inherits every algorithm unchanged:
 //!
-//! - **Block operands** (`X`, `y`, `mask`) are uploaded once when a batch
-//!   is packed ([`exec::BlockLits`]) and reused by every artifact call.
-//!   The hot grad/normal-matvec paths consume *fused multi-block* uploads
-//!   (`gradm{K}`/`nmm{K}` artifacts, K stacked 256-row blocks per
-//!   dispatch) whose cross-block reduction happens on device, so one call
-//!   downloads one `(grad_sum, loss_sum, count)` tuple per group.
-//! - **Small per-call vectors** (the iterate `w`, the six VR-sweep
-//!   vectors, CG directions, scalars) go through the [`ExecSession`]
-//!   buffer pool: a named slot re-uploads only when its contents changed,
-//!   so an unchanged iterate costs zero host->device traffic no matter how
-//!   many blocks it is dispatched against.
-//! - **Downloads** happen only at artifact outputs; every typed wrapper
-//!   fetches exactly one (tupled) result per dispatch.
+//! 1. **upload** — move host bytes into a device buffer. Block operands
+//!    (`X`, `y`, `mask`) are uploaded once at pack time
+//!    ([`exec::BlockLits`], optionally K stacked blocks per fused group);
+//!    small per-call vectors ride the [`ExecSession`] pool, which
+//!    re-uploads a named slot only when its bits changed and can *alias*
+//!    an existing device handle outright (zero traffic).
+//! 2. **dispatch** — execute a tupled artifact against device buffers and
+//!    download its one output tuple ([`Engine::execute_pooled`]). The
+//!    fused `gradm{K}`/`nmm{K}` artifacts reduce across K stacked blocks
+//!    on device, so a machine-round costs one download per *group*.
+//! 3. **chain** — execute a single-output artifact and keep the result on
+//!    device ([`Engine::execute_chained`] -> [`chain::DeviceVec`]). The
+//!    output handle feeds the next dispatch's input directly; host bytes
+//!    move only at explicit [`Engine::materialize`] points (evaluation
+//!    checkpoints, round boundaries). This is what drops the steady-state
+//!    downlink of an inner iteration from O(#blocks * d) to zero.
+//! 4. **reduce** — average per-machine device handles across the cluster
+//!    (the `redm{M}` artifacts, driven by `comm::Network`'s
+//!    DeviceCollective path). The kernel accumulates in f64 in host
+//!    collective order, so its downloaded result is bit-identical to the
+//!    host `all_reduce_*` on the same inputs — the paper-units
+//!    round/vector accounting stays authoritative either way.
 //!
 //! # Traffic counters
 //!
 //! [`EngineStats`] meters the contract: `uploads`/`upload_bytes` count
 //! every `buffer_from_host_buffer` call, `downloads`/`download_bytes`
-//! every device->host literal fetch, `upload_cache_hits`/`_misses` the
-//! session pool's behavior, and `literal_conversions` (the legacy §Perf
-//! counter) the per-dispatch output conversions. `accounting::
-//! DeviceTraffic` renders them; `bench_runtime` writes them to
+//! every device->host fetch (tupled outputs and materializations alike),
+//! `chained_dispatches` the executions that downloaded nothing,
+//! `alias_installs` the zero-copy slot installs,
+//! `upload_cache_hits`/`_misses` the session pool's behavior, and
+//! `literal_conversions` (the legacy §Perf counter) the per-dispatch
+//! output conversions. `accounting::DeviceTraffic` renders them;
+//! `bench_runtime` writes them (including downlink bytes per round) to
 //! `BENCH_runtime.json` so the perf trajectory is trackable across PRs.
 
 pub mod artifact;
+pub mod chain;
 pub mod exec;
 pub mod session;
 
@@ -42,6 +55,7 @@ use std::path::Path;
 use std::time::Instant;
 
 pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
+pub use chain::DeviceVec;
 pub use session::ExecSession;
 
 #[derive(Clone, Debug, Default)]
@@ -61,12 +75,17 @@ pub struct EngineStats {
     /// agree; the raw `Engine::execute` path counts only
     /// `literal_conversions`
     pub downloads: u64,
-    /// bytes moved device->host (typed-wrapper outputs)
+    /// bytes moved device->host (typed-wrapper outputs + materializations)
     pub download_bytes: u64,
     /// session-slot reuses: an upload that was skipped entirely
     pub upload_cache_hits: u64,
     /// session-slot refreshes: contents changed, re-uploaded
     pub upload_cache_misses: u64,
+    /// chained executions: dispatches whose output stayed on device
+    /// (no literal fetch, no download — see `Engine::execute_chained`)
+    pub chained_dispatches: u64,
+    /// zero-copy session-slot installs of device handles
+    pub alias_installs: u64,
 }
 
 impl EngineStats {
@@ -85,6 +104,12 @@ pub struct Engine {
     session: ExecSession,
     /// supported fused-dispatch widths, computed once from the manifest
     fuse_widths: Vec<usize>,
+    /// per-dim cached zero vectors: the seeds of the chained accumulators
+    /// (uploaded once per length, ever)
+    zeros: HashMap<usize, DeviceVec>,
+    /// bit-pattern-keyed cache of length-1 scalar operands (gamma/eta,
+    /// CG coefficients): recurring constants upload once, ever
+    scalars: HashMap<u32, DeviceVec>,
     pub stats: EngineStats,
 }
 
@@ -101,6 +126,8 @@ impl Engine {
             execs: HashMap::new(),
             session: ExecSession::new(),
             fuse_widths,
+            zeros: HashMap::new(),
+            scalars: HashMap::new(),
             stats: EngineStats::default(),
         })
     }
@@ -138,6 +165,28 @@ impl Engine {
     /// manifest carries no multi-block artifacts). Computed once at load.
     pub fn fuse_widths(&self) -> &[usize] {
         &self.fuse_widths
+    }
+
+    /// Chained-gradient readiness (gacc coverage + vector plane) for a
+    /// loss tag at dim `d` — see `Manifest::chain_grad_ready`.
+    pub fn chain_grad_ready(&self, loss_tag: &str, d: usize) -> bool {
+        self.manifest.chain_grad_ready(loss_tag, d)
+    }
+
+    /// Chained VR-sweep readiness for a loss tag at dim `d`.
+    pub fn chain_vr_ready(&self, loss_tag: &str, d: usize) -> bool {
+        self.manifest.chain_vr_ready(loss_tag, d)
+    }
+
+    /// Chained normal-matvec (CG/DiSCO) readiness at dim `d`.
+    pub fn chain_nm_ready(&self, d: usize) -> bool {
+        self.manifest.chain_nm_ready(d)
+    }
+
+    /// Whether the on-device cross-machine reduce serves `m` machines at
+    /// dim `d` (m == 1 is an identity, always served).
+    pub fn red_ready(&self, m: usize, d: usize) -> bool {
+        self.manifest.red_ready(m, d)
     }
 
     pub fn platform(&self) -> String {
@@ -219,6 +268,32 @@ impl Engine {
         Self::dispatch(&mut self.stats, exe, name, &inputs)
     }
 
+    /// Like [`Engine::execute_pooled`] with already-resident session slots
+    /// in the tail: the caller has `ensure`d or [`Engine::alias_slot`]ed
+    /// every key beforehand (the aliasing path is how a device-resident
+    /// [`DeviceVec`] flows into a tupled artifact without a download).
+    pub fn execute_slots(
+        &mut self,
+        name: &str,
+        block_inputs: &[&xla::PjRtBuffer],
+        slot_keys: &[&'static str],
+    ) -> Result<Vec<xla::Literal>> {
+        self.executable(name)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(block_inputs.len() + slot_keys.len());
+        inputs.extend_from_slice(block_inputs);
+        for key in slot_keys {
+            inputs.push(self.session.get(key)?);
+        }
+        let exe = self.execs.get(name).unwrap();
+        Self::dispatch(&mut self.stats, exe, name, &inputs)
+    }
+
+    /// Install a device handle into a session slot without any upload.
+    pub fn alias_slot(&mut self, key: &'static str, v: &DeviceVec) {
+        self.session.alias(&mut self.stats, key, v.shared());
+    }
+
     fn dispatch(
         stats: &mut EngineStats,
         exe: &xla::PjRtLoadedExecutable,
@@ -238,6 +313,110 @@ impl Engine {
         // lowered with return_tuple=True: output is always a tuple
         let parts = lit.decompose_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
         Ok(parts)
+    }
+
+    /// Execute a *chained* artifact (single array output, lowered with
+    /// return_tuple=False) and keep the result on device: no literal
+    /// fetch, no download — the returned [`DeviceVec`] feeds the next
+    /// dispatch directly. `out_dims` is the artifact's output shape
+    /// (checked against the manifest by the typed wrappers in `chain`).
+    pub fn execute_chained(
+        &mut self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+        out_dims: Vec<usize>,
+    ) -> Result<DeviceVec> {
+        self.executable(name)?;
+        let exe = self.execs.get(name).unwrap();
+        let t0 = Instant::now();
+        let mut out = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("executing {name} (chained): {e:?}"))?;
+        self.stats.executions += 1;
+        self.stats.execute_ns += t0.elapsed().as_nanos();
+        self.stats.chained_dispatches += 1;
+        anyhow::ensure!(
+            !out.is_empty() && !out[0].is_empty(),
+            "{name}: chained execution returned no output buffer"
+        );
+        let buf = out.swap_remove(0).swap_remove(0);
+        Ok(DeviceVec::from_buffer(buf, out_dims))
+    }
+
+    /// Download a device vector to the host — the ONLY way bytes leave
+    /// the device on the chained path, charged like every other download.
+    /// Call sites are evaluation checkpoints and round boundaries.
+    pub fn materialize(&mut self, v: &DeviceVec) -> Result<Vec<f32>> {
+        let lit = v
+            .buffer()
+            .to_literal_sync()
+            .map_err(|e| anyhow!("materializing DeviceVec{:?}: {e:?}", v.dims()))?;
+        self.stats.downloads += 1;
+        self.stats.download_bytes += (v.len() * std::mem::size_of::<f32>()) as u64;
+        self.stats.literal_conversions += 1;
+        let host = lit_to_vec(&lit)?;
+        anyhow::ensure!(
+            host.len() == v.len(),
+            "materialized {} elements for DeviceVec{:?}",
+            host.len(),
+            v.dims()
+        );
+        Ok(host)
+    }
+
+    /// Download a length-1 device vector as a scalar (the CG loop's O(1)
+    /// steady-state downlink).
+    pub fn materialize_scalar(&mut self, v: &DeviceVec) -> Result<f32> {
+        anyhow::ensure!(v.len() == 1, "materialize_scalar on DeviceVec{:?}", v.dims());
+        let host = self.materialize(v)?;
+        Ok(host[0])
+    }
+
+    /// The cached device zero vector of length `n` — the seed of every
+    /// chained accumulator. Uploaded once per length, ever.
+    pub fn zeros_dev(&mut self, n: usize) -> Result<DeviceVec> {
+        if let Some(z) = self.zeros.get(&n) {
+            return Ok(z.clone());
+        }
+        let z = self.upload_dev(&vec![0.0f32; n], &[n])?;
+        self.zeros.insert(n, z.clone());
+        Ok(z)
+    }
+
+    /// A length-1 device handle for a scalar operand, cached by exact bit
+    /// pattern: recurring constants (gamma/eta, the CG recurrence's
+    /// 1.0/-1.0, per-batch 1/cnt factors) upload once, ever. The cache is
+    /// capped so a long run with ever-fresh coefficients cannot grow it
+    /// unboundedly — past the cap, scalars upload fresh (correct, just
+    /// uncached).
+    pub fn scalar_dev(&mut self, x: f32) -> Result<DeviceVec> {
+        const SCALAR_CACHE_CAP: usize = 4096;
+        let key = x.to_bits();
+        if let Some(s) = self.scalars.get(&key) {
+            return Ok(s.clone());
+        }
+        let s = self.upload_dev(&[x], &[1])?;
+        if self.scalars.len() < SCALAR_CACHE_CAP {
+            self.scalars.insert(key, s.clone());
+        }
+        Ok(s)
+    }
+
+    /// Upload a host vector/matrix as a device handle (row-major; charged
+    /// like every upload).
+    pub fn upload_dev(&mut self, data: &[f32], dims: &[usize]) -> Result<DeviceVec> {
+        anyhow::ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "upload_dev: {} elements for dims {dims:?}",
+            data.len()
+        );
+        self.stats.uploads += 1;
+        self.stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("uploading DeviceVec{dims:?}: {e:?}"))?;
+        Ok(DeviceVec::from_buffer(buf, dims.to_vec()))
     }
 
     /// Upload a 1-D f32 vector to the device (uncached; see

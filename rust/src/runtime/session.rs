@@ -16,10 +16,19 @@
 //! — a payload whose device bits would differ can never alias a cached
 //! buffer. Each refresh bumps the slot's generation (surfaced for
 //! tests/diagnostics).
+//!
+//! A slot can also **alias** an existing device buffer (a chained
+//! dispatch's output handle) without any host copy or upload — the bridge
+//! that lets device-resident [`super::chain::DeviceVec`]s flow into the
+//! tupled artifacts' pooled-input signatures (e.g. evaluating the loss at
+//! an iterate that never visited the host). An aliased slot has no host
+//! bytes to compare against, so a later `ensure` with host data always
+//! refreshes it.
 
 use super::EngineStats;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// Exact bit equality (not float `==`): distinguishes -0.0 from 0.0 and
 /// treats identical NaN patterns as equal — the device buffer holds bits,
@@ -29,9 +38,10 @@ fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
 }
 
 struct Slot {
-    /// host copy of the payload currently resident on device
-    host: Vec<f32>,
-    buf: xla::PjRtBuffer,
+    /// host copy of the payload currently resident on device; `None` for
+    /// aliased device buffers (no host bytes exist)
+    host: Option<Vec<f32>>,
+    buf: Rc<xla::PjRtBuffer>,
     generation: u64,
 }
 
@@ -56,7 +66,7 @@ impl ExecSession {
         data: &[f32],
     ) -> Result<()> {
         if let Some(slot) = self.slots.get(key) {
-            if bitwise_eq(&slot.host, data) {
+            if slot.host.as_deref().is_some_and(|h| bitwise_eq(h, data)) {
                 stats.upload_cache_hits += 1;
                 return Ok(());
             }
@@ -70,19 +80,44 @@ impl ExecSession {
         let generation = self.slots.get(key).map_or(1, |s| s.generation + 1);
         // the replaced buffer (if any) is dropped here — PJRT reclaims it
         // deterministically via the crate's Drop impl
-        self.slots.insert(key, Slot { host: data.to_vec(), buf, generation });
+        self.slots
+            .insert(key, Slot { host: Some(data.to_vec()), buf: Rc::new(buf), generation });
         Ok(())
+    }
+
+    /// Make `key` alias an already-resident device buffer. Zero traffic:
+    /// this is a handle install, not an upload (`stats.alias_installs`).
+    /// The slot's generation still advances so staleness stays observable.
+    pub fn alias(
+        &mut self,
+        stats: &mut EngineStats,
+        key: &'static str,
+        buf: Rc<xla::PjRtBuffer>,
+    ) {
+        stats.alias_installs += 1;
+        let generation = self.slots.get(key).map_or(1, |s| s.generation + 1);
+        self.slots.insert(key, Slot { host: None, buf, generation });
     }
 
     /// The device buffer currently resident in `key` (after `ensure`).
     pub fn get(&self, key: &'static str) -> Result<&xla::PjRtBuffer> {
         self.slots
             .get(key)
-            .map(|s| &s.buf)
+            .map(|s| s.buf.as_ref())
             .ok_or_else(|| anyhow!("session slot '{key}' is empty (ensure first)"))
     }
 
-    /// How many times `key` has been (re-)uploaded; 0 if never.
+    /// Like [`ExecSession::get`] but returns a shared handle, so the
+    /// caller can release the session borrow before building an input
+    /// list that must coexist with other engine borrows.
+    pub fn get_shared(&self, key: &'static str) -> Result<Rc<xla::PjRtBuffer>> {
+        self.slots
+            .get(key)
+            .map(|s| Rc::clone(&s.buf))
+            .ok_or_else(|| anyhow!("session slot '{key}' is empty (ensure first)"))
+    }
+
+    /// How many times `key` has been (re-)uploaded or aliased; 0 if never.
     pub fn generation(&self, key: &'static str) -> u64 {
         self.slots.get(key).map_or(0, |s| s.generation)
     }

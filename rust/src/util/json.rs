@@ -57,6 +57,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
@@ -287,6 +294,8 @@ mod tests {
     #[test]
     fn parses_scalars() {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
         assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));

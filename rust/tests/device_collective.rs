@@ -1,0 +1,162 @@
+//! DeviceCollective parity: the on-device reduce must be BIT-identical to
+//! the host collective on the downloaded result AND produce the identical
+//! `CommStats`/`ClusterMeter` accounting — the property that keeps the
+//! paper's Table-1 counts authoritative no matter which plane the bytes
+//! moved on. Requires `make artifacts`.
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::runtime::{DeviceVec, Engine};
+use mbprox::util::testkit::{forall, normal_vec};
+
+fn engine() -> Engine {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::new(&dir).expect("run `make artifacts` before cargo test")
+}
+
+fn upload_all(e: &mut Engine, locals: &[Vec<f32>]) -> Vec<DeviceVec> {
+    locals.iter().map(|v| e.upload_dev(v, &[v.len()]).unwrap()).collect()
+}
+
+fn assert_bitwise(host: &[f32], dev: &[f32], what: &str) {
+    assert_eq!(host.len(), dev.len(), "{what}: length");
+    for (i, (h, d)) in host.iter().zip(dev).enumerate() {
+        assert_eq!(
+            h.to_bits(),
+            d.to_bits(),
+            "{what}: element {i} differs: host {h} ({:#010x}) vs device {d} ({:#010x})",
+            h.to_bits(),
+            d.to_bits()
+        );
+    }
+}
+
+#[test]
+fn prop_device_avg_bitwise_matches_host_collective() {
+    let mut e = engine();
+    forall(24, |rng| {
+        let m = [2usize, 4, 8][rng.next_below(3)];
+        let d = [64usize, 128][rng.next_below(2)];
+        let locals: Vec<Vec<f32>> = (0..m).map(|_| normal_vec(rng, d)).collect();
+
+        // host path
+        let mut host_net = Network::new(m, NetModel::default());
+        let mut host_meter = ClusterMeter::new(m);
+        let mut host_locals = locals.clone();
+        host_net.all_reduce_avg(&mut host_meter, &mut host_locals);
+
+        // device path
+        let mut dev_net = Network::new(m, NetModel::default());
+        let mut dev_meter = ClusterMeter::new(m);
+        let handles = upload_all(&mut e, &locals);
+        let out = dev_net
+            .device_all_reduce_avg(&mut dev_meter, &mut e, &handles)
+            .expect("device all-reduce");
+        let dev_result = e.materialize(&out).unwrap();
+
+        assert_bitwise(&host_locals[0], &dev_result, "all_reduce_avg");
+        // identical comm accounting, field for field
+        assert_eq!(host_net.stats.rounds, dev_net.stats.rounds);
+        assert_eq!(host_net.stats.vectors_moved, dev_net.stats.vectors_moved);
+        assert_eq!(host_net.stats.sim_time_s, dev_net.stats.sim_time_s);
+        assert_eq!(host_meter.report(), dev_meter.report());
+    });
+}
+
+#[test]
+fn prop_device_weighted_bitwise_matches_host_collective() {
+    let mut e = engine();
+    forall(24, |rng| {
+        let m = [2usize, 4, 8][rng.next_below(3)];
+        let d = [64usize, 128][rng.next_below(2)];
+        let locals: Vec<Vec<f32>> = (0..m).map(|_| normal_vec(rng, d)).collect();
+        // integer-valued weights (batch counts) — exactly representable
+        // in f32, which is what the device plane carries
+        let weights: Vec<f64> = (0..m).map(|_| (1 + rng.next_below(1 << 20)) as f64).collect();
+
+        let mut host_net = Network::new(m, NetModel::default());
+        let mut host_meter = ClusterMeter::new(m);
+        let mut host_locals = locals.clone();
+        host_net.all_reduce_weighted(&mut host_meter, &weights, &mut host_locals);
+
+        let mut dev_net = Network::new(m, NetModel::default());
+        let mut dev_meter = ClusterMeter::new(m);
+        let handles = upload_all(&mut e, &locals);
+        let out = dev_net
+            .device_all_reduce_weighted(&mut dev_meter, &mut e, &weights, &handles)
+            .expect("device weighted all-reduce");
+        let dev_result = e.materialize(&out).unwrap();
+
+        assert_bitwise(&host_locals[0], &dev_result, "all_reduce_weighted");
+        assert_eq!(host_net.stats.rounds, dev_net.stats.rounds);
+        assert_eq!(host_net.stats.vectors_moved, dev_net.stats.vectors_moved);
+        assert_eq!(host_net.stats.sim_time_s, dev_net.stats.sim_time_s);
+        assert_eq!(host_meter.report(), dev_meter.report());
+    });
+}
+
+#[test]
+fn device_reduce_stays_on_device_until_materialize() {
+    let mut e = engine();
+    let m = 4;
+    let d = 64;
+    let locals: Vec<Vec<f32>> = (0..m).map(|i| vec![i as f32 * 0.5; d]).collect();
+    let handles = upload_all(&mut e, &locals);
+    let mut net = Network::new(m, NetModel::default());
+    let mut meter = ClusterMeter::new(m);
+    let before = e.stats.downloads;
+    let out = net.device_all_reduce_avg(&mut meter, &mut e, &handles).unwrap();
+    assert_eq!(e.stats.downloads, before, "the reduce itself must download nothing");
+    let _ = e.materialize(&out).unwrap();
+    assert_eq!(e.stats.downloads, before + 1, "materialize is the only download");
+}
+
+#[test]
+fn fallback_cluster_sizes_charge_identical_rounds() {
+    // m = 3 has no redm artifact: the device path must fall back to the
+    // host collective yet charge the identical round accounting
+    let mut e = engine();
+    let m = 3;
+    let d = 64;
+    let locals: Vec<Vec<f32>> = (0..m).map(|i| vec![(i + 1) as f32; d]).collect();
+
+    let mut host_net = Network::new(m, NetModel::default());
+    let mut host_meter = ClusterMeter::new(m);
+    let mut host_locals = locals.clone();
+    host_net.all_reduce_avg(&mut host_meter, &mut host_locals);
+
+    let mut dev_net = Network::new(m, NetModel::default());
+    let mut dev_meter = ClusterMeter::new(m);
+    let handles = upload_all(&mut e, &locals);
+    let out = dev_net.device_all_reduce_avg(&mut dev_meter, &mut e, &handles).unwrap();
+    let dev_result = e.materialize(&out).unwrap();
+
+    assert_bitwise(&host_locals[0], &dev_result, "fallback all_reduce_avg");
+    assert_eq!(host_net.stats.rounds, dev_net.stats.rounds);
+    assert_eq!(host_net.stats.sim_time_s, dev_net.stats.sim_time_s);
+    assert_eq!(host_meter.report(), dev_meter.report());
+}
+
+#[test]
+fn device_broadcast_charges_like_host_broadcast() {
+    let mut e = engine();
+    let m = 4;
+    let d = 64;
+    let v: Vec<f32> = (0..d).map(|j| j as f32 * 0.01).collect();
+
+    let mut host_net = Network::new(m, NetModel::default());
+    let mut host_meter = ClusterMeter::new(m);
+    let mut host_locals: Vec<Vec<f32>> = (0..m).map(|_| v.clone()).collect();
+    host_net.broadcast(&mut host_meter, 1, &mut host_locals);
+
+    let mut dev_net = Network::new(m, NetModel::default());
+    let mut dev_meter = ClusterMeter::new(m);
+    let h = e.upload_dev(&v, &[d]).unwrap();
+    let out = dev_net.device_broadcast(&mut dev_meter, 1, &h);
+    assert!(out.same_buffer(&h), "simulated broadcast is a handle clone");
+
+    assert_eq!(host_net.stats.rounds, dev_net.stats.rounds);
+    assert_eq!(host_net.stats.vectors_moved, dev_net.stats.vectors_moved);
+    assert_eq!(host_net.stats.sim_time_s, dev_net.stats.sim_time_s);
+    assert_eq!(host_meter.report(), dev_meter.report());
+}

@@ -4,6 +4,8 @@
 //! Requires `make artifacts` (the Makefile `test` target guarantees it).
 
 use mbprox::accounting::ClusterMeter;
+use mbprox::algos::solvers::{vr_sweep_machine, vr_sweep_machine_grouped, LocalSolver};
+use mbprox::algos::RunContext;
 use mbprox::comm::{netmodel::NetModel, Network};
 use mbprox::data::blocks::{pack_all, BLOCK_ROWS};
 use mbprox::data::synth::{SynthSpec, SynthStream};
@@ -197,6 +199,101 @@ fn grad_only_pack_serves_grad_but_refuses_vr() {
     let out = local_grad_sum(&mut e, Loss::Squared, &batch, &w, meter.machine(0)).unwrap();
     assert_eq!(out.count, 300.0);
     assert!(batch.vr_lits(&mut e).is_err(), "grad-only pack must refuse VR materialization");
+}
+
+/// One-machine context for the sweep parity tests.
+fn sweep_ctx<'e>(e: &'e mut Engine, loss: Loss, d: usize) -> RunContext<'e> {
+    let root = match loss {
+        Loss::Squared => SynthStream::new(SynthSpec::least_squares(d), 31),
+        Loss::Logistic => SynthStream::new(SynthSpec::logistic(d), 31),
+    };
+    let streams: Vec<Box<dyn SampleStream>> =
+        vec![Box::new(root.fork_stream(0)) as Box<dyn SampleStream>];
+    RunContext {
+        engine: e,
+        net: Network::new(1, NetModel::default()),
+        meter: ClusterMeter::new(1),
+        loss,
+        d,
+        streams,
+        evaluator: None,
+        eval_every: 0,
+    }
+}
+
+#[test]
+fn grouped_vr_sweep_matches_legacy_per_block_sweep() {
+    // the group-aligned chained sweep vs the legacy per-block path on
+    // ragged batches, both losses, both solvers (satellite: VR parity)
+    let mut e = engine();
+    let d = 64;
+    // ragged: 5 full blocks + a 60-row tail -> one k=4 group + two k=1
+    for loss in [Loss::Squared, Loss::Logistic] {
+        for solver in [LocalSolver::Svrg, LocalSolver::Saga] {
+            let samples = draw(loss, d, 5 * BLOCK_ROWS + 60, 17);
+            let x0: Vec<f32> = (0..d).map(|j| 0.01 * (j as f32 - 30.0)).collect();
+            let z: Vec<f32> = (0..d).map(|j| (j as f32 * 0.05).cos() * 0.1).collect();
+            let mu: Vec<f32> = (0..d).map(|j| (j as f32 * 0.03).sin() * 0.1).collect();
+            let center = vec![0.0f32; d];
+            let (gamma, eta) = (0.5f32, 0.03f32);
+
+            let (xe_legacy, xa_legacy, legacy_ops) = {
+                let mut ctx = sweep_ctx(&mut e, loss, d);
+                let batch = MachineBatch::pack(ctx.engine, d, &samples).unwrap();
+                let blocks = 0..batch.n_blocks();
+                let (xe, xa) = vr_sweep_machine(
+                    &mut ctx, solver, blocks, &batch, 0, &x0, &z, &mu, &center, gamma, eta,
+                )
+                .unwrap();
+                (xe, xa, ctx.meter.report().vec_ops)
+            };
+
+            let (xe_grouped, xa_grouped, grouped_ops) = {
+                let mut ctx = sweep_ctx(&mut e, loss, d);
+                let batch = MachineBatch::pack_grad_only(ctx.engine, d, &samples).unwrap();
+                let groups = 0..batch.groups.len();
+                let (xe, xa) = vr_sweep_machine_grouped(
+                    &mut ctx, solver, groups, &batch, 0, &x0, &z, &mu, &center, gamma, eta,
+                )
+                .unwrap();
+                (xe, xa, ctx.meter.report().vec_ops)
+            };
+
+            // the carried iterate is near-bitwise (the host round-trip the
+            // chain replaces was lossless); the average tolerates the f32
+            // on-device accumulator
+            assert_close(&xe_grouped, &xe_legacy, 1e-5, 1e-6);
+            assert_close(&xa_grouped, &xa_legacy, 1e-4, 1e-5);
+            assert_eq!(grouped_ops, legacy_ops, "identical vec-op accounting");
+        }
+    }
+}
+
+#[test]
+fn grouped_vr_sweep_handles_empty_batch() {
+    let mut e = engine();
+    let d = 64;
+    let mut ctx = sweep_ctx(&mut e, Loss::Squared, d);
+    let batch = MachineBatch::empty(d);
+    let x0: Vec<f32> = (0..d).map(|j| 0.1 + j as f32 * 0.01).collect();
+    let zeros = vec![0.0f32; d];
+    let (xe, xa) = vr_sweep_machine_grouped(
+        &mut ctx,
+        LocalSolver::Svrg,
+        0..batch.groups.len(),
+        &batch,
+        0,
+        &x0,
+        &zeros,
+        &zeros,
+        &zeros,
+        0.5,
+        0.05,
+    )
+    .unwrap();
+    // nothing swept: iterate unchanged, average falls back to the iterate
+    assert_close(&xe, &x0, 0.0, 0.0);
+    assert_close(&xa, &x0, 0.0, 0.0);
 }
 
 #[test]

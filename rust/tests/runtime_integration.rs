@@ -282,6 +282,92 @@ fn manifest_rejects_corrupt_json() {
 }
 
 #[test]
+fn chained_vec_plane_matches_host_math() {
+    let mut e = engine();
+    let d = 64;
+    let u_host: Vec<f32> = (0..d).map(|j| (j as f32 * 0.1).sin()).collect();
+    let v_host: Vec<f32> = (0..d).map(|j| (j as f32 * 0.07).cos()).collect();
+    let u = e.upload_dev(&u_host, &[d]).unwrap();
+    let v = e.upload_dev(&v_host, &[d]).unwrap();
+
+    let scaled = e.vec_scale(&u, 2.5).unwrap();
+    let got = e.materialize(&scaled).unwrap();
+    let expect: Vec<f32> = u_host.iter().map(|&x| 2.5 * x).collect();
+    assert_close(&got, &expect, 1e-6, 1e-7);
+
+    let comb = e.vec_axpby(1.5, &u, -0.5, &v).unwrap();
+    let got = e.materialize(&comb).unwrap();
+    let expect: Vec<f32> =
+        u_host.iter().zip(&v_host).map(|(&a, &b)| 1.5 * a - 0.5 * b).collect();
+    assert_close(&got, &expect, 1e-5, 1e-6);
+
+    let dot = e.vec_dot(&u, &v).unwrap();
+    let expect: f64 = u_host.iter().zip(&v_host).map(|(&a, &b)| a as f64 * b as f64).sum();
+    assert!((dot - expect).abs() < 1e-3, "vec_dot {dot} vs {expect}");
+}
+
+#[test]
+fn chained_grad_acc_matches_tupled_dispatch() {
+    let mut e = engine();
+    for loss in [Loss::Squared, Loss::Logistic] {
+        let d = 64;
+        let (lits, _, _, _) = make_lits(&mut e, loss, d, 180, 33);
+        let w_host: Vec<f32> = (0..d).map(|j| ((j % 7) as f32 - 3.0) * 0.05).collect();
+        let tupled = e.grad_block(loss, &lits, &w_host).unwrap();
+
+        let w = e.upload_dev(&w_host, &[d]).unwrap();
+        let zero = e.zeros_dev(d).unwrap();
+        let before_downloads = e.stats.downloads;
+        let acc = e.grad_acc(loss, &lits, &w, &zero).unwrap();
+        assert_eq!(e.stats.downloads, before_downloads, "grad_acc must not download");
+        let got = e.materialize(&acc).unwrap();
+        assert_close(&got, &tupled.grad_sum, 1e-4, 1e-4);
+
+        // chaining: seeding with the previous output doubles the gradient
+        let acc2 = e.grad_acc(loss, &lits, &w, &acc).unwrap();
+        let got2 = e.materialize(&acc2).unwrap();
+        let expect: Vec<f32> = tupled.grad_sum.iter().map(|&g| 2.0 * g).collect();
+        assert_close(&got2, &expect, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn chained_vr_state_round_trips() {
+    let mut e = engine();
+    let d = 64;
+    let x0: Vec<f32> = (0..d).map(|j| j as f32 * 0.01).collect();
+    let s = e.vr_state_from(&x0).unwrap();
+    assert_eq!(s.dims(), [2, d]);
+    let host = e.materialize(&s).unwrap();
+    assert_close(&host[..d], &x0, 0.0, 0.0);
+    assert!(host[d..].iter().all(|&a| a == 0.0), "fresh accumulator must be zero");
+    // vr_avg with inv weight 0 falls back to the carried iterate
+    let fallback = e.vr_avg(&s, 0.0).unwrap();
+    let got = e.materialize(&fallback).unwrap();
+    assert_close(&got, &x0, 0.0, 0.0);
+}
+
+#[test]
+fn dev_iterate_grad_matches_host_iterate_grad() {
+    // grad_block_dev (aliased device iterate) == grad_block (host iterate)
+    let mut e = engine();
+    let d = 64;
+    let (lits, _, _, _) = make_lits(&mut e, Loss::Squared, d, 120, 44);
+    let w_host: Vec<f32> = (0..d).map(|j| (j as f32 * 0.04).sin() * 0.2).collect();
+    let host_out = e.grad_block(Loss::Squared, &lits, &w_host).unwrap();
+    let w_dev = e.upload_dev(&w_host, &[d]).unwrap();
+    let aliases_before = e.stats.alias_installs;
+    let uploads_before = e.stats.uploads;
+    let dev_out = e.grad_block_dev(Loss::Squared, &lits, &w_dev).unwrap();
+    assert_eq!(e.stats.alias_installs, aliases_before + 1, "device iterate must alias");
+    assert_eq!(e.stats.uploads, uploads_before, "aliasing must not upload");
+    // the aliased buffer holds the identical bits: identical outputs
+    assert_eq!(host_out.grad_sum, dev_out.grad_sum);
+    assert_eq!(host_out.loss_sum, dev_out.loss_sum);
+    assert_eq!(host_out.count, dev_out.count);
+}
+
+#[test]
 fn engine_stats_accumulate() {
     let mut e = engine();
     let (lits, _, _, _) = make_lits(&mut e, Loss::Squared, 64, 50, 2);
