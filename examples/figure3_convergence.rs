@@ -107,6 +107,7 @@ fn context_from_shards<'e>(
     let evaluator = Some(Evaluator::new(&mut runner.engine, d, loss, eval)?);
     Ok(RunContext {
         engine: &mut runner.engine,
+        shards: runner.shards.as_ref(),
         net: Network::new(m, NetModel::default()),
         meter: ClusterMeter::new(m),
         loss,

@@ -35,6 +35,7 @@ fn run(runner: &mut Runner, method: &mut dyn Method, seed: u64) -> (f64, u64, u6
     let evaluator = Evaluator::new(&mut runner.engine, DIM, Loss::Squared, &eval_samples).unwrap();
     let mut ctx = RunContext {
         engine: &mut runner.engine,
+        shards: runner.shards.as_ref(),
         net: Network::new(M, NetModel::default()),
         meter: ClusterMeter::new(M),
         loss: Loss::Squared,

@@ -89,6 +89,7 @@ fn run(
     let evaluator = Evaluator::new(&mut runner.engine, d, Loss::Logistic, eval).unwrap();
     let mut ctx = RunContext {
         engine: &mut runner.engine,
+        shards: runner.shards.as_ref(),
         net: Network::new(m, NetModel::default()),
         meter: ClusterMeter::new(m),
         loss: Loss::Logistic,

@@ -61,6 +61,7 @@ fn main() {
         let evaluator = Evaluator::new(&mut runner.engine, dim, Loss::Squared, &eval_samples).unwrap();
         let mut ctx = RunContext {
             engine: &mut runner.engine,
+            shards: runner.shards.as_ref(),
             net: Network::new(m, NetModel::default()),
             meter: ClusterMeter::new(m),
             loss: Loss::Squared,

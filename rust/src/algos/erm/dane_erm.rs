@@ -6,9 +6,11 @@
 //! for quadratics, n/m memory. Reuses the same mu = global-gradient
 //! identity as the minibatch DANE solver (see solvers/dane.rs).
 
-use crate::algos::solvers::svrg_sweep_machine;
+use crate::algos::solvers::{vr_sweep_machine, LocalSolver};
 use crate::algos::{Method, Recorder, RunContext, RunResult};
+use crate::objective::fan_machines;
 use anyhow::Result;
+use std::sync::Arc;
 
 use super::ErmProblem;
 
@@ -29,7 +31,6 @@ impl Method for DaneErm {
     fn run(&mut self, ctx: &mut RunContext) -> Result<RunResult> {
         let mut rec = Recorder::new(self.name());
         let prob = ErmProblem::draw(ctx, self.n_total, self.nu)?;
-        let m = prob.shards.len();
         let d = ctx.d;
         let zero = vec![0.0f32; d];
         let mut z = vec![0.0f32; d];
@@ -37,27 +38,42 @@ impl Method for DaneErm {
             let g = prob.full_grad(ctx, &z)?;
             let mut g_smooth = g.clone();
             crate::linalg::axpy(-(self.nu as f32), &z, &mut g_smooth);
-            let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
-            for (i, shard) in prob.shards.iter().enumerate() {
-                let mut xi = z.clone();
-                for _pass in 0..self.local_passes.max(1) {
-                    let blocks = 0..shard.n_blocks();
-                    let (_xe, xa) = svrg_sweep_machine(
-                        ctx,
-                        blocks,
-                        shard,
-                        i,
-                        &xi,
-                        &z,
-                        &g_smooth,
-                        &zero,
-                        self.nu as f32,
-                        self.eta as f32,
-                    )?;
-                    xi = xa;
-                }
-                locals.push(xi);
-            }
+            // every machine's local solve fans to its owning shard (or
+            // runs inline on the sequential plane)
+            let loss = ctx.loss;
+            let passes = self.local_passes.max(1);
+            let (nu32, eta32) = (self.nu as f32, self.eta as f32);
+            let z_s: Arc<[f32]> = Arc::from(&z[..]);
+            let g_s: Arc<[f32]> = Arc::from(&g_smooth[..]);
+            let zero_s: Arc<[f32]> = Arc::from(&zero[..]);
+            let mut locals: Vec<Vec<f32>> = fan_machines(
+                ctx.engine,
+                ctx.shards,
+                &prob.shards,
+                &mut ctx.meter,
+                move |eng, shard, _i, meter| {
+                    let mut xi = z_s.to_vec();
+                    for _pass in 0..passes {
+                        let blocks = 0..shard.n_blocks();
+                        let (_xe, xa) = vr_sweep_machine(
+                            eng,
+                            loss,
+                            LocalSolver::Svrg,
+                            blocks,
+                            shard,
+                            &xi,
+                            &z_s,
+                            &g_s,
+                            &zero_s,
+                            nu32,
+                            eta32,
+                            meter,
+                        )?;
+                        xi = xa;
+                    }
+                    Ok(xi)
+                },
+            )?;
             ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
             z = locals.pop().unwrap();
             if let Some(obj) = ctx.maybe_eval(k + 1, &z)? {

@@ -9,7 +9,7 @@
 //! epochs reach eps on both the empirical and stochastic objectives —
 //! giving the Table-1 row: O(1)~log communication, n/m memory.
 
-use crate::algos::solvers::svrg_sweep_machine;
+use crate::algos::solvers::{vr_sweep_on, LocalSolver};
 use crate::algos::{Method, Recorder, RunContext, RunResult};
 use anyhow::Result;
 
@@ -47,10 +47,13 @@ impl Method for DsvrgErm {
             let j = k % m;
             let zero = vec![0.0f32; d];
             let blocks = 0..prob.shards[j].n_blocks();
-            let (x_end, x_avg) = svrg_sweep_machine(
+            // the designated sweep runs on machine j's shard when the
+            // problem shards are shard-plane-resident
+            let (x_end, x_avg) = vr_sweep_on(
                 ctx,
+                LocalSolver::Svrg,
                 blocks,
-                &prob.shards[j],
+                &prob.shards,
                 j,
                 &x,
                 &z,

@@ -58,6 +58,7 @@ impl ErmProblem {
     pub fn full_grad(&self, ctx: &mut RunContext, w: &[f32]) -> Result<Vec<f32>> {
         let (mut g, _, _) = crate::objective::distributed_mean_grad(
             ctx.engine,
+            ctx.shards,
             ctx.loss,
             &self.shards,
             w,
@@ -78,6 +79,7 @@ impl ErmProblem {
     ) -> Result<crate::runtime::DeviceVec> {
         let g = crate::objective::distributed_mean_grad_dev(
             ctx.engine,
+            ctx.shards,
             ctx.loss,
             &self.shards,
             w,

@@ -68,8 +68,12 @@ impl<S: ProxSolver> Method for MinibatchProx<S> {
             w = w_new;
             let weight = if self.weighted { t as f64 } else { 1.0 };
             avg.add(weight, &w);
-            if let Some(obj) = ctx.maybe_eval(t, &avg.mean())? {
-                rec.point(ctx, t, Some(obj));
+            // the d-length averaged iterate is only materialized at
+            // checkpoints — not every outer iteration
+            if ctx.eval_due(t) {
+                if let Some(obj) = ctx.eval_now(&avg.mean())? {
+                    rec.point(ctx, t, Some(obj));
+                }
             }
         }
         for i in 0..ctx.meter.m() {

@@ -39,6 +39,7 @@ impl Method for MinibatchSgd {
             let batches = ctx.draw_batches_grad_only(self.b_local, false)?;
             let (g, _, _) = distributed_mean_grad(
                 ctx.engine,
+                ctx.shards,
                 ctx.loss,
                 &batches,
                 &w,
@@ -54,9 +55,13 @@ impl Method for MinibatchSgd {
             if 2 * t > self.t_outer {
                 avg.add(1.0, &w);
             }
-            let eval_w = if avg.total_weight() > 0.0 { avg.mean() } else { w.clone() };
-            if let Some(obj) = ctx.maybe_eval(t, &eval_w)? {
-                rec.point(ctx, t, Some(obj));
+            // evaluation iterate built only at checkpoints (the mean is a
+            // d-length allocation)
+            if ctx.eval_due(t) {
+                let eval_w = if avg.total_weight() > 0.0 { avg.mean() } else { w.clone() };
+                if let Some(obj) = ctx.eval_now(&eval_w)? {
+                    rec.point(ctx, t, Some(obj));
+                }
             }
         }
         for i in 0..ctx.meter.m() {

@@ -18,7 +18,7 @@ use crate::accounting::{ClusterMeter, ResourceReport};
 use crate::comm::Network;
 use crate::data::{Loss, SampleStream};
 use crate::objective::{Evaluator, MachineBatch};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ShardPool};
 use anyhow::Result;
 
 /// How a drawn batch is packed for the engine (see `MachineBatch`).
@@ -36,6 +36,10 @@ enum PackMode {
 /// per-machine streams, and the evaluation hook.
 pub struct RunContext<'e> {
     pub engine: &'e mut Engine,
+    /// the shard plane (engine-per-worker machine parallelism); `None`
+    /// drives every machine sequentially on the coordinator engine. Both
+    /// planes produce bit-identical results (see `runtime::shard`).
+    pub shards: Option<&'e ShardPool>,
     pub net: Network,
     pub meter: ClusterMeter,
     pub loss: Loss,
@@ -90,6 +94,9 @@ impl<'e> RunContext<'e> {
         mode: PackMode,
     ) -> Result<Vec<MachineBatch>> {
         let d = self.d;
+        if let Some(pool) = self.shards {
+            return self.draw_batches_sharded(pool, b_local, hold, mode);
+        }
         let mut out = Vec::with_capacity(self.streams.len());
         for (i, s) in self.streams.iter_mut().enumerate() {
             let samples = s.draw_many(b_local);
@@ -114,6 +121,55 @@ impl<'e> RunContext<'e> {
         Ok(out)
     }
 
+    /// Sharded draw: samples are drawn on the coordinator (the stream
+    /// order — and therefore every sample — is identical to the
+    /// sequential plane), shipped to the owning shard as host data, and
+    /// packed there in parallel. The coordinator keeps one metadata stub
+    /// per machine; sample/memory charges are identical to the
+    /// sequential draw.
+    fn draw_batches_sharded(
+        &mut self,
+        pool: &ShardPool,
+        b_local: usize,
+        hold: bool,
+        mode: PackMode,
+    ) -> Result<Vec<MachineBatch>> {
+        let d = self.d;
+        let mut pends = Vec::with_capacity(self.streams.len());
+        for (i, s) in self.streams.iter_mut().enumerate() {
+            let samples = s.draw_many(b_local);
+            let drawn = samples.len() as u64;
+            let meter = self.meter.machine(i);
+            meter.add_samples(drawn);
+            if hold {
+                meter.hold(drawn);
+            }
+            let pend = pool.submit(pool.shard_of(i), move |state| {
+                let batch = match mode {
+                    PackMode::Full => MachineBatch::pack(&mut state.engine, d, &samples)?,
+                    PackMode::GradOnly => {
+                        MachineBatch::pack_grad_only(&mut state.engine, d, &samples)?
+                    }
+                    PackMode::VrAligned(p) => {
+                        MachineBatch::pack_vr_aligned(&mut state.engine, d, &samples, p)?
+                    }
+                };
+                let reply = (batch.n, batch.n_blocks(), batch.shard_meta(i));
+                state.batches.insert(i, batch);
+                Ok(reply)
+            });
+            pends.push((drawn, pend));
+        }
+        let mut out = Vec::with_capacity(pends.len());
+        for (drawn, pend) in pends {
+            let (n, n_blocks, meta) = pend.wait()?;
+            let mut stub = MachineBatch::stub(d, n, n_blocks, meta);
+            stub.held = if hold { drawn } else { 0 };
+            out.push(stub);
+        }
+        Ok(out)
+    }
+
     /// Release the memory charged when `batches` were drawn: each batch
     /// records its own held count, so ragged final batches release
     /// exactly what they held (the b_local assumption corrupted the
@@ -125,7 +181,11 @@ impl<'e> RunContext<'e> {
         }
     }
 
-    fn eval_due(&self, t: usize) -> bool {
+    /// Whether outer iteration `t` is an evaluation checkpoint. Public so
+    /// methods can skip building their evaluation iterate (e.g. the
+    /// running average's d-length mean) on the iterations that will not
+    /// evaluate it.
+    pub fn eval_due(&self, t: usize) -> bool {
         self.eval_every > 0 && t % self.eval_every == 0
     }
 

@@ -39,7 +39,6 @@ impl Method for LocalSgd {
         let chunk = self.chunk.max(1);
         let steps = self.n_total.div_ceil(chunk);
         let step = (1.0 / self.gamma) as f32;
-        let eval_every = ctx.eval_every;
         for t in 1..=steps {
             let samples = ctx.streams[0].draw_many(chunk);
             ctx.meter.machine(0).add_samples(chunk as u64);
@@ -54,7 +53,9 @@ impl Method for LocalSgd {
             if 2 * t > steps {
                 avg.add(1.0, &w);
             }
-            if eval_every > 0 && t % eval_every == 0 {
+            // eval iterate (and its d-length mean) built only at
+            // checkpoints — the same audit as minibatch_sgd.rs
+            if ctx.eval_due(t) {
                 let eval_w = if avg.total_weight() > 0.0 { avg.mean() } else { w.clone() };
                 if let Some(obj) = ctx.eval_now(&eval_w)? {
                     rec.point(ctx, t, Some(obj));

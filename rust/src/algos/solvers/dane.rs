@@ -17,12 +17,32 @@
 //! with `center = (gamma w_prev + kappa y_{r-1}) / (gamma+kappa)` — i.e.
 //! exactly the `svrg_{loss}` artifact with `mu = g_global`, so the same
 //! Pallas kernel serves DSVRG and DANE.
+//!
+//! # Device-resident steady state
+//!
+//! With the chained artifacts present (and one local pass, the paper's
+//! configuration), a DANE round runs on the device plane: the global
+//! gradient is the `gacc{K}` accumulator chain + DeviceCollective reduce,
+//! every machine's local solve advances a `[2, d]` state through its
+//! *fused* block groups (`svrgc{K}`/`sagac{K}` — no `vr_lits`, no
+//! per-block downloads), and the solution average is the DeviceCollective
+//! again. Downlink per round: ONE d-vector (the broadcast iterate `z`,
+//! which seeds the next round's sweep states) — against two `[d]` vectors
+//! per block per machine on the legacy path. On the shard plane the same
+//! kernels run per machine on the owning shard's engine and the combines
+//! run the host collective in fixed machine order — bit-identical to the
+//! DeviceCollective (see `runtime::shard`). `force_legacy` pins the
+//! per-block host path for parity tests.
 
-use super::{vr_sweep_machine, LocalSolver, ProxSolver};
+use super::{vr_sweep_machine, vr_sweep_machine_grouped, LocalSolver, ProxSolver};
 use crate::algos::RunContext;
 use crate::linalg;
-use crate::objective::{distributed_mean_grad, MachineBatch};
+use crate::objective::{
+    distributed_mean_grad, distributed_mean_grad_dev, fan_machines, local_grad_sum,
+    mean_grad_chained_host, MachineBatch,
+};
 use anyhow::Result;
+use std::sync::Arc;
 
 pub struct DaneSolver {
     /// DANE rounds per AIDE step (theory: O(log n))
@@ -37,6 +57,8 @@ pub struct DaneSolver {
     pub eta: f64,
     /// which VR kernel performs the local solve (paper's App. E: SAGA)
     pub local_solver: LocalSolver,
+    /// pin the legacy per-block host path (parity tests / diagnostics)
+    pub force_legacy: bool,
 }
 
 impl DaneSolver {
@@ -48,6 +70,7 @@ impl DaneSolver {
             local_passes: 1,
             eta,
             local_solver: LocalSolver::Svrg,
+            force_legacy: false,
         }
     }
 
@@ -59,6 +82,7 @@ impl DaneSolver {
             local_passes: 1,
             eta,
             local_solver: LocalSolver::Svrg,
+            force_legacy: false,
         }
     }
 
@@ -67,9 +91,94 @@ impl DaneSolver {
         self
     }
 
+    /// Whether the DANE rounds can ride the chained kernels: needs the
+    /// gacc/VR-chain artifacts plus the one-pass configuration (multi-pass
+    /// re-snapshots stay on the legacy path). No `red_ready` requirement:
+    /// the DeviceCollective's host fallback for unserved cluster sizes is
+    /// bit-identical, so chaining stays worthwhile at any m.
+    fn chain_ready(&self, ctx: &RunContext) -> bool {
+        !self.force_legacy
+            && self.local_passes <= 1
+            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
+            && ctx.engine.chain_vr_ready(ctx.loss.tag(), ctx.d)
+    }
+
     /// K DANE rounds on `min_w phi_I(w) + geff/2 ||w - center||^2`
-    /// starting from `z0`.
-    fn dane_rounds(
+    /// starting from `z0` — legacy per-block plane.
+    fn dane_rounds_legacy(
+        &self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        z0: &[f32],
+        center: &[f32],
+        geff: f64,
+    ) -> Result<Vec<f32>> {
+        let mut z = z0.to_vec();
+        for _k in 0..self.k_inner {
+            // (1) global gradient at z — 1 comm round
+            let (g, _, _) = distributed_mean_grad(
+                ctx.engine,
+                ctx.shards,
+                ctx.loss,
+                batches,
+                &z,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+            // (2) local solves: prox-SVRG sweeps with mu = g (see header),
+            // fanned across the shard plane when one is present
+            let loss = ctx.loss;
+            let d = ctx.d;
+            let solver = self.local_solver;
+            let passes = self.local_passes.max(1);
+            let eta = self.eta as f32;
+            let geff32 = geff as f32;
+            let z_s: Arc<[f32]> = Arc::from(&z[..]);
+            let g_s: Arc<[f32]> = Arc::from(&g[..]);
+            let c_s: Arc<[f32]> = Arc::from(center);
+            let mut locals: Vec<Vec<f32>> = fan_machines(
+                ctx.engine,
+                ctx.shards,
+                batches,
+                &mut ctx.meter,
+                move |eng, batch, _i, m| {
+                    let mut xi = z_s.to_vec();
+                    let mut snapshot = z_s.to_vec();
+                    let mut mu = g_s.to_vec();
+                    for pass in 0..passes {
+                        if pass > 0 {
+                            // re-snapshot locally:
+                            // mu' = grad_i(x) + (g - grad_i(z))
+                            let gi_z = local_grad_sum(eng, loss, batch, &z_s, m)?;
+                            let gi_x = local_grad_sum(eng, loss, batch, &xi, m)?;
+                            let cnt = gi_z.count.max(1.0) as f32;
+                            mu = g_s.to_vec();
+                            for j in 0..d {
+                                mu[j] += gi_x.grad_sum[j] / cnt - gi_z.grad_sum[j] / cnt;
+                            }
+                            snapshot = xi.clone();
+                        }
+                        let blocks = 0..batch.n_blocks();
+                        let (_x_end, x_avg) = vr_sweep_machine(
+                            eng, loss, solver, blocks, batch, &xi, &snapshot, &mu, &c_s,
+                            geff32, eta, m,
+                        )?;
+                        xi = x_avg;
+                    }
+                    Ok(xi)
+                },
+            )?;
+            // (3) average local solutions — 1 comm round
+            ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
+            z = locals.pop().unwrap();
+        }
+        Ok(z)
+    }
+
+    /// K DANE rounds on the chained device plane (single engine): the
+    /// gradient and the local solutions never visit the host except for
+    /// the one `z` materialization per round that seeds the sweep states.
+    fn dane_rounds_chained(
         &self,
         ctx: &mut RunContext,
         batches: &[MachineBatch],
@@ -78,70 +187,130 @@ impl DaneSolver {
         geff: f64,
     ) -> Result<Vec<f32>> {
         let m = batches.len();
+        let d = ctx.d;
+        let mut z_host = z0.to_vec();
+        let mut z_dev = ctx.engine.upload_dev(&z_host, &[d])?;
+        let c_dev = ctx.engine.upload_dev(center, &[d])?;
+        let gamma_dev = ctx.engine.scalar_dev(geff as f32)?;
+        let eta_dev = ctx.engine.scalar_dev(self.eta as f32)?;
+        for _k in 0..self.k_inner {
+            // (1) global gradient at z — 1 comm round, fully chained
+            let g_dev = distributed_mean_grad_dev(
+                ctx.engine,
+                ctx.shards,
+                ctx.loss,
+                batches,
+                &z_dev,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+            // (2) every machine's one-pass local solve rides its fused
+            // groups; only the state seed needs host bits (z, already
+            // known everywhere from the broadcast semantics)
+            let mut locals = Vec::with_capacity(m);
+            for (i, batch) in batches.iter().enumerate() {
+                locals.push(super::vr_sweep_avg_dev(
+                    ctx.engine,
+                    ctx.loss,
+                    self.local_solver,
+                    0..batch.n_groups(),
+                    batch,
+                    &z_host,
+                    &z_dev,
+                    &g_dev,
+                    &c_dev,
+                    &gamma_dev,
+                    &eta_dev,
+                    ctx.meter.machine(i),
+                )?);
+            }
+            // (3) average local solutions — the DeviceCollective reduce
+            z_dev = ctx.net.device_all_reduce_avg(&mut ctx.meter, ctx.engine, &locals)?;
+            // the round-boundary downlink: one d-vector, seeding the next
+            // round's sweep states
+            z_host = ctx.engine.materialize(&z_dev)?;
+        }
+        Ok(z_host)
+    }
+
+    /// The chained rounds on the shard plane: identical kernels per
+    /// machine on the owning shard, host collectives in fixed machine
+    /// order — bit-identical to [`DaneSolver::dane_rounds_chained`].
+    fn dane_rounds_sharded(
+        &self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        z0: &[f32],
+        center: &[f32],
+        geff: f64,
+    ) -> Result<Vec<f32>> {
         let mut z = z0.to_vec();
         for _k in 0..self.k_inner {
-            // (1) global gradient at z — 1 comm round
-            let (g, _, _) = distributed_mean_grad(
+            // (1) chained global gradient at z — 1 comm round
+            let g = mean_grad_chained_host(
                 ctx.engine,
+                ctx.shards,
                 ctx.loss,
                 batches,
                 &z,
                 &mut ctx.net,
                 &mut ctx.meter,
             )?;
-            // (2) local solves: prox-SVRG sweeps with mu = g (see header)
-            let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
-            for (i, batch) in batches.iter().enumerate() {
-                let mut xi = z.clone();
-                let mut snapshot = z.clone();
-                let mut mu = g.clone();
-                for pass in 0..self.local_passes.max(1) {
-                    if pass > 0 {
-                        // re-snapshot locally: mu' = grad_i(x) + (g - grad_i(z))
-                        let gi_z = crate::objective::local_grad_sum(
-                            ctx.engine,
-                            ctx.loss,
-                            batch,
-                            &z,
-                            ctx.meter.machine(i),
-                        )?;
-                        let gi_x = crate::objective::local_grad_sum(
-                            ctx.engine,
-                            ctx.loss,
-                            batch,
-                            &xi,
-                            ctx.meter.machine(i),
-                        )?;
-                        let cnt = gi_z.count.max(1.0) as f32;
-                        mu = g.clone();
-                        for j in 0..ctx.d {
-                            mu[j] += gi_x.grad_sum[j] / cnt - gi_z.grad_sum[j] / cnt;
-                        }
-                        snapshot = xi.clone();
-                    }
-                    let blocks = 0..batch.n_blocks();
-                    let (_x_end, x_avg) = vr_sweep_machine(
-                        ctx,
-                        self.local_solver,
-                        blocks,
+            // (2) local solves fan to the shards, one chained sweep each
+            let loss = ctx.loss;
+            let solver = self.local_solver;
+            let eta = self.eta as f32;
+            let geff32 = geff as f32;
+            let z_s: Arc<[f32]> = Arc::from(&z[..]);
+            let g_s: Arc<[f32]> = Arc::from(&g[..]);
+            let c_s: Arc<[f32]> = Arc::from(center);
+            let mut locals: Vec<Vec<f32>> = fan_machines(
+                ctx.engine,
+                ctx.shards,
+                batches,
+                &mut ctx.meter,
+                move |eng, batch, _i, m| {
+                    let (_x_end, x_avg) = vr_sweep_machine_grouped(
+                        eng,
+                        loss,
+                        solver,
+                        0..batch.n_groups(),
                         batch,
-                        i,
-                        &xi,
-                        &snapshot,
-                        &mu,
-                        center,
-                        geff as f32,
-                        self.eta as f32,
+                        &z_s,
+                        &z_s,
+                        &g_s,
+                        &c_s,
+                        geff32,
+                        eta,
+                        m,
                     )?;
-                    xi = x_avg;
-                }
-                locals.push(xi);
-            }
-            // (3) average local solutions — 1 comm round
+                    Ok(x_avg)
+                },
+            )?;
+            // (3) average — host collective, bit-identical to the reduce
             ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
             z = locals.pop().unwrap();
         }
         Ok(z)
+    }
+
+    fn dane_rounds(
+        &self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        z0: &[f32],
+        center: &[f32],
+        geff: f64,
+    ) -> Result<Vec<f32>> {
+        if self.chain_ready(ctx) {
+            if batches.iter().any(|b| b.shard.is_some()) {
+                self.dane_rounds_sharded(ctx, batches, z0, center, geff)
+            } else {
+                self.dane_rounds_chained(ctx, batches, z0, center, geff)
+            }
+        } else {
+            self.dane_rounds_legacy(ctx, batches, z0, center, geff)
+        }
     }
 }
 
@@ -152,6 +321,12 @@ impl ProxSolver for DaneSolver {
         } else {
             format!("aide(K={},R={},kappa={:.3})", self.k_inner, self.r_outer, self.kappa)
         }
+    }
+
+    /// Host block copies are only needed for the legacy per-block sweeps;
+    /// the chained rounds sweep the fused device groups directly.
+    fn needs_vr_blocks(&self, ctx: &RunContext) -> bool {
+        !self.chain_ready(ctx)
     }
 
     fn solve(

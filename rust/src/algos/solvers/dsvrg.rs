@@ -26,9 +26,14 @@
 //! per inner iteration); `force_legacy` pins the per-block host path for
 //! parity tests and pre-chaining manifests.
 
-use super::{svrg_sweep_machine, sweep_groups_weight, vr_sweep_groups, LocalSolver, ProxSolver};
+use super::{
+    sweep_groups_weight, vr_sweep_grouped_on, vr_sweep_groups, vr_sweep_on, LocalSolver,
+    ProxSolver,
+};
 use crate::algos::RunContext;
-use crate::objective::{distributed_mean_grad, distributed_mean_grad_dev, MachineBatch};
+use crate::objective::{
+    distributed_mean_grad, distributed_mean_grad_dev, mean_grad_chained_host, MachineBatch,
+};
 use crate::runtime::DeviceVec;
 use anyhow::Result;
 
@@ -55,12 +60,15 @@ impl DsvrgSolver {
         crate::data::sampler::shard_ranges(n_blocks, p)
     }
 
-    /// Whether this solve can run device-resident on `ctx`'s engine.
-    fn chain_ready(&self, ctx: &RunContext, m: usize) -> bool {
+    /// Whether this solve can run device-resident on `ctx`'s engine. No
+    /// `red_ready` requirement (consistent with DANE/one-shot): the
+    /// DeviceCollective's host fallback for cluster sizes without a
+    /// `redm{M}` artifact is bit-identical, so chaining stays worthwhile
+    /// at any m.
+    fn chain_ready(&self, ctx: &RunContext) -> bool {
         !self.force_legacy
             && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
             && ctx.engine.chain_vr_ready(ctx.loss.tag(), ctx.d)
-            && ctx.engine.red_ready(m, ctx.d)
     }
 
     /// Legacy per-block host path (the pre-chaining engine contract).
@@ -85,6 +93,7 @@ impl DsvrgSolver {
             // (1) global minibatch gradient at snapshot z — 1 comm round
             let (mu, _, _) = distributed_mean_grad(
                 ctx.engine,
+                ctx.shards,
                 ctx.loss,
                 batches,
                 &z,
@@ -96,11 +105,13 @@ impl DsvrgSolver {
             // the smooth-part gradient only — matching Algorithm 1 step 2.
 
             // (2) machine j sweeps its batch s once without replacement
+            // (on j's shard when the batches are shard-resident)
             let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
-            let (x_end, x_avg) = svrg_sweep_machine(
+            let (x_end, x_avg) = vr_sweep_on(
                 ctx,
+                LocalSolver::Svrg,
                 range,
-                &batches[j],
+                batches,
                 j,
                 &x,
                 &z,
@@ -155,6 +166,7 @@ impl DsvrgSolver {
             // (1) global minibatch gradient at snapshot z — 1 comm round
             let mu = distributed_mean_grad_dev(
                 ctx.engine,
+                ctx.shards,
                 ctx.loss,
                 batches,
                 &z,
@@ -168,17 +180,18 @@ impl DsvrgSolver {
             let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
             let total_w = sweep_groups_weight(&batches[j], range.clone());
             state = vr_sweep_groups(
-                ctx,
+                ctx.engine,
+                ctx.loss,
                 LocalSolver::Svrg,
                 range,
                 &batches[j],
-                j,
                 state,
                 &z,
                 &mu,
                 &wprev_dev,
                 &gamma_dev,
                 &eta_dev,
+                ctx.meter.machine(j),
             )?;
 
             // (3) z_k = sweep average (inv weight 0 = empty-sweep
@@ -196,6 +209,74 @@ impl DsvrgSolver {
         // the round boundary: the ONE device->host transfer of this solve
         ctx.engine.materialize(&z)
     }
+
+    /// Shard-plane chained solve: the identical kernel sequence per
+    /// machine (gacc chains for mu, group-aligned svrgc sweeps on the
+    /// designated machine, the same f32 sweep average), with cross-machine
+    /// values crossing as host bits — f32 round trips are exact and the
+    /// host collective is bit-identical to the device reduce, so this
+    /// reproduces [`DsvrgSolver::solve_chained`] bit-for-bit while the
+    /// per-machine work runs in parallel across shards. The per-iteration
+    /// materialize/upload at the join points is the honest price of
+    /// engines that share no device (metered on each shard).
+    fn solve_sharded(
+        &mut self,
+        ctx: &mut RunContext,
+        batches: &[MachineBatch],
+        wprev: &[f32],
+        gamma: f64,
+    ) -> Result<Vec<f32>> {
+        let m = batches.len();
+        let mut z = wprev.to_vec();
+        let mut x = wprev.to_vec();
+        let mut j = 0usize;
+        let mut s = 0usize;
+        let ranges: Vec<Vec<std::ops::Range<usize>>> =
+            batches.iter().map(|b| b.group_ranges(self.p_batches)).collect();
+
+        for _k in 0..self.k_inner {
+            // (1) chained mean gradient at snapshot z — 1 comm round
+            let mu = mean_grad_chained_host(
+                ctx.engine,
+                ctx.shards,
+                ctx.loss,
+                batches,
+                &z,
+                &mut ctx.net,
+                &mut ctx.meter,
+            )?;
+
+            // (2) machine j's chained sweep runs on machine j's shard
+            let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
+            let (x_end, x_avg) = vr_sweep_grouped_on(
+                ctx,
+                LocalSolver::Svrg,
+                range,
+                batches,
+                j,
+                &x,
+                &z,
+                &mu,
+                wprev,
+                gamma as f32,
+                self.eta as f32,
+            )?;
+            x = x_end;
+
+            // (3) z_k broadcast — 1 round, charged exactly like the
+            // device broadcast of the single-engine path
+            z = x_avg;
+            let mut locals: Vec<Vec<f32>> = (0..m).map(|_| z.clone()).collect();
+            ctx.net.broadcast(&mut ctx.meter, j, &mut locals);
+
+            s += 1;
+            if s >= ranges[j].len() {
+                s = 0;
+                j = (j + 1) % m;
+            }
+        }
+        Ok(z)
+    }
 }
 
 impl ProxSolver for DsvrgSolver {
@@ -206,13 +287,13 @@ impl ProxSolver for DsvrgSolver {
     /// Host block copies are only needed for the legacy per-block sweep;
     /// the chained path sweeps the fused device groups directly.
     fn needs_vr_blocks(&self, ctx: &RunContext) -> bool {
-        !self.chain_ready(ctx, ctx.m())
+        !self.chain_ready(ctx)
     }
 
     /// Chained sweeps want groups aligned to the p-way batch partition,
     /// so the sweep sizes match the legacy path exactly for any p.
     fn vr_group_align(&self, ctx: &RunContext) -> Option<usize> {
-        self.chain_ready(ctx, ctx.m()).then_some(self.p_batches)
+        self.chain_ready(ctx).then_some(self.p_batches)
     }
 
     fn solve(
@@ -223,9 +304,15 @@ impl ProxSolver for DsvrgSolver {
         gamma: f64,
         _t: usize,
     ) -> Result<Vec<f32>> {
-        if self.chain_ready(ctx, batches.len()) {
-            self.solve_chained(ctx, batches, wprev, gamma)
+        let sharded = batches.iter().any(|b| b.shard.is_some());
+        if self.chain_ready(ctx) {
+            if sharded {
+                self.solve_sharded(ctx, batches, wprev, gamma)
+            } else {
+                self.solve_chained(ctx, batches, wprev, gamma)
+            }
         } else {
+            // the legacy path's primitives fan internally on either plane
             self.solve_legacy(ctx, batches, wprev, gamma)
         }
     }

@@ -27,9 +27,12 @@ use super::ProxSolver;
 use crate::algos::RunContext;
 use crate::data::Loss;
 use crate::linalg;
-use crate::objective::{distributed_mean_grad, distributed_mean_grad_dev, MachineBatch};
+use crate::objective::{
+    distributed_mean_grad, distributed_mean_grad_dev, fan_machines, MachineBatch,
+};
 use crate::runtime::DeviceVec;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 pub struct ExactCgSolver {
     pub tol: f64,
@@ -46,32 +49,40 @@ impl Default for ExactCgSolver {
 
 /// One distributed application of v -> (1/n) X^T X v + gamma v.
 /// Charges one comm round and per-machine vec ops; returns the result.
+/// The per-machine partials fan across the shard plane when one owns the
+/// batches; the combine runs in fixed machine order on the coordinator
+/// either way.
 pub fn distributed_normal_matvec(
     ctx: &mut RunContext,
     batches: &[MachineBatch],
     v: &[f32],
     gamma: f64,
 ) -> Result<Vec<f32>> {
-    let m = batches.len();
-    let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
-    let mut weights: Vec<f64> = Vec::with_capacity(m);
-    for (i, batch) in batches.iter().enumerate() {
-        let mut acc = vec![0.0f32; ctx.d];
-        let mut cnt = 0.0f64;
-        // fused groups: one dispatch + one download per group, and `v` is
-        // uploaded once per matvec via the session pool
-        for blk in &batch.groups {
-            let (part, c) = ctx.engine.nm_block(blk, v)?;
-            linalg::axpy(1.0, &part, &mut acc);
-            cnt += c;
-        }
-        if cnt > 0.0 {
-            linalg::scale(1.0 / cnt as f32, &mut acc);
-        }
-        ctx.meter.machine(i).add_vec_ops(batch.n as u64);
-        locals.push(acc);
-        weights.push(cnt);
-    }
+    let d = ctx.d;
+    let v_s: Arc<[f32]> = Arc::from(v);
+    let outs: Vec<(Vec<f32>, f64)> = fan_machines(
+        ctx.engine,
+        ctx.shards,
+        batches,
+        &mut ctx.meter,
+        move |eng, batch, _i, m| {
+            let mut acc = vec![0.0f32; d];
+            let mut cnt = 0.0f64;
+            // fused groups: one dispatch + one download per group, and
+            // `v` is uploaded once per matvec via the session pool
+            for blk in &batch.groups {
+                let (part, c) = eng.nm_block(blk, &v_s)?;
+                linalg::axpy(1.0, &part, &mut acc);
+                cnt += c;
+            }
+            if cnt > 0.0 {
+                linalg::scale(1.0 / cnt as f32, &mut acc);
+            }
+            m.add_vec_ops(batch.n as u64);
+            Ok((acc, cnt))
+        },
+    )?;
+    let (mut locals, weights): (Vec<Vec<f32>>, Vec<f64>) = outs.into_iter().unzip();
     ctx.net.all_reduce_weighted(&mut ctx.meter, &weights, &mut locals);
     let mut out = locals.pop().unwrap();
     linalg::axpy(gamma as f32, v, &mut out);
@@ -89,6 +100,43 @@ pub fn distributed_normal_matvec_dev(
     v: &DeviceVec,
     gamma: f64,
 ) -> Result<DeviceVec> {
+    if batches.iter().any(|b| b.shard.is_some()) {
+        // shard plane: the direction crosses to the shards as host bits
+        // (exact), each machine chains its nacc accumulator on its own
+        // engine, and the combine is the host collective — bit-identical
+        // to the device reduce. The CG recurrence itself stays on the
+        // coordinator engine, so the iterates match the single-engine
+        // chained path bit-for-bit.
+        let d = ctx.d;
+        let v_host = ctx.engine.materialize(v)?;
+        let v_s: Arc<[f32]> = Arc::from(&v_host[..]);
+        let outs: Vec<Vec<f32>> = fan_machines(
+            ctx.engine,
+            ctx.shards,
+            batches,
+            &mut ctx.meter,
+            move |eng, batch, _i, m| {
+                let v_dev = eng.upload_dev(&v_s, &[d])?;
+                let mut acc = eng.zeros_dev(d)?;
+                for blk in &batch.groups {
+                    acc = eng.nm_acc(blk, &v_dev, &acc)?;
+                }
+                let cnt = batch.n as f64;
+                if cnt > 0.0 {
+                    acc = eng.vec_scale(&acc, (1.0 / cnt) as f32)?;
+                }
+                m.add_vec_ops(batch.n as u64);
+                eng.materialize(&acc)
+            },
+        )?;
+        let weights: Vec<f64> = batches.iter().map(|b| b.n as f64).collect();
+        let mut locals = outs;
+        ctx.net.all_reduce_weighted(&mut ctx.meter, &weights, &mut locals);
+        let red = ctx.engine.upload_dev(&locals.pop().unwrap(), &[d])?;
+        let out = ctx.engine.vec_axpby(1.0, &red, gamma as f32, v)?;
+        ctx.meter.all_vec_ops(1);
+        return Ok(out);
+    }
     let m = batches.len();
     let mut locals: Vec<DeviceVec> = Vec::with_capacity(m);
     let mut weights: Vec<f64> = Vec::with_capacity(m);
@@ -219,6 +267,7 @@ impl ExactCgSolver {
         let zero = vec![0.0f32; d];
         let (g0, _, _) = distributed_mean_grad(
             ctx.engine,
+            ctx.shards,
             ctx.loss,
             batches,
             &zero,
@@ -251,6 +300,7 @@ impl ExactCgSolver {
         let zero = ctx.engine.zeros_dev(ctx.d)?;
         let g0 = distributed_mean_grad_dev(
             ctx.engine,
+            ctx.shards,
             ctx.loss,
             batches,
             &zero,

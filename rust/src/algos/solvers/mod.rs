@@ -15,9 +15,11 @@ pub mod exact_cg;
 pub mod oneshot;
 
 use super::RunContext;
-use crate::objective::MachineBatch;
+use crate::accounting::ResourceMeter;
+use crate::data::Loss;
+use crate::objective::{fan_machine, MachineBatch};
 use crate::runtime::chain::VrKernel;
-use crate::runtime::DeviceVec;
+use crate::runtime::{DeviceVec, Engine};
 use anyhow::Result;
 
 /// Which variance-reduced kernel performs the local sweeps.
@@ -89,56 +91,62 @@ pub trait ProxSolver {
 /// Runs the artifact block-by-block, carrying the iterate through, and
 /// combines per-block running averages weighted by their (1 + valid)
 /// counts — the paper's z_k average over r = 0..|B_s|.
-/// Returns `(x_end, x_avg)` and charges `n` vec ops to `machine_idx`.
+/// Returns `(x_end, x_avg)` and charges the swept rows to `meter`.
+///
+/// Takes the engine and the machine's meter directly (not a
+/// [`RunContext`]) so the identical code runs inline on the coordinator
+/// OR inside a shard job — the shard plane's per-machine closures are
+/// exactly these helpers.
 #[allow(clippy::too_many_arguments)]
 pub fn vr_sweep_machine(
-    ctx: &mut RunContext,
+    engine: &mut Engine,
+    loss: Loss,
     solver: LocalSolver,
     batch_blocks: std::ops::Range<usize>,
     batch: &MachineBatch,
-    machine_idx: usize,
     x0: &[f32],
     z: &[f32],
     mu: &[f32],
     center: &[f32],
     gamma: f32,
     eta: f32,
+    meter: &mut ResourceMeter,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
     let mut x = x0.to_vec();
-    let mut avg = crate::linalg::WeightedAvg::new(ctx.d);
+    let mut avg = crate::linalg::WeightedAvg::new(batch.d);
     let mut total_n = 0u64;
     // per-block buffers, materialized on the batch's first sweep
-    let lits = batch.vr_lits(ctx.engine)?;
+    let lits = batch.vr_lits(engine)?;
     for bi in batch_blocks {
         let blk = &lits[bi];
         if blk.valid == 0 {
             continue;
         }
         let (x_end, x_avg) = match solver {
-            LocalSolver::Svrg => {
-                ctx.engine.svrg_block(ctx.loss, blk, &x, z, mu, center, gamma, eta)?
-            }
-            LocalSolver::Saga => {
-                ctx.engine.saga_block(ctx.loss, blk, &x, z, mu, center, gamma, eta)?
-            }
+            LocalSolver::Svrg => engine.svrg_block(loss, blk, &x, z, mu, center, gamma, eta)?,
+            LocalSolver::Saga => engine.saga_block(loss, blk, &x, z, mu, center, gamma, eta)?,
         };
         avg.add((1 + blk.valid) as f64, &x_avg);
         total_n += blk.valid as u64;
         x = x_end;
     }
     drop(lits);
-    ctx.meter.machine(machine_idx).add_vec_ops(total_n);
+    meter.add_vec_ops(total_n);
     let x_avg = if avg.total_weight() > 0.0 { avg.mean() } else { x.clone() };
     Ok((x, x_avg))
 }
 
-/// Backwards-compatible SVRG-only wrapper (Algorithm 1 semantics).
+/// [`vr_sweep_machine`] on whichever plane owns machine `j`'s batch: the
+/// designated-machine sweep of DSVRG/DSVRG-ERM and the per-machine local
+/// solves fan through this to the owning shard (or run inline when the
+/// batches are local).
 #[allow(clippy::too_many_arguments)]
-pub fn svrg_sweep_machine(
+pub fn vr_sweep_on(
     ctx: &mut RunContext,
+    solver: LocalSolver,
     batch_blocks: std::ops::Range<usize>,
-    batch: &MachineBatch,
-    machine_idx: usize,
+    batches: &[MachineBatch],
+    j: usize,
     x0: &[f32],
     z: &[f32],
     mu: &[f32],
@@ -146,8 +154,48 @@ pub fn svrg_sweep_machine(
     gamma: f32,
     eta: f32,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    vr_sweep_machine(
-        ctx, LocalSolver::Svrg, batch_blocks, batch, machine_idx, x0, z, mu, center, gamma, eta,
+    let loss = ctx.loss;
+    if batches[j].shard.is_none() {
+        // sequential plane: run inline on the borrowed slices (no copies)
+        return vr_sweep_machine(
+            ctx.engine,
+            loss,
+            solver,
+            batch_blocks,
+            &batches[j],
+            x0,
+            z,
+            mu,
+            center,
+            gamma,
+            eta,
+            ctx.meter.machine(j),
+        );
+    }
+    // shard plane: the job closure must own its operands
+    let (x0, z, mu, center) = (x0.to_vec(), z.to_vec(), mu.to_vec(), center.to_vec());
+    fan_machine(
+        ctx.engine,
+        ctx.shards,
+        batches,
+        j,
+        &mut ctx.meter,
+        move |eng, batch, _i, m| {
+            vr_sweep_machine(
+                eng,
+                loss,
+                solver,
+                batch_blocks,
+                batch,
+                &x0,
+                &z,
+                &mu,
+                &center,
+                gamma,
+                eta,
+                m,
+            )
+        },
     )
 }
 
@@ -156,20 +204,21 @@ pub fn svrg_sweep_machine(
 /// no `vr_lits` materialization, no downloads, no host round-trips
 /// between groups. Returns the advanced state; divide by
 /// [`sweep_groups_weight`] (via `Engine::vr_avg`) for the sweep average.
-/// Charges the swept valid rows to `machine_idx`, like the legacy path.
+/// Charges the swept valid rows to `meter`, like the legacy path.
 #[allow(clippy::too_many_arguments)]
 pub fn vr_sweep_groups(
-    ctx: &mut RunContext,
+    engine: &mut Engine,
+    loss: Loss,
     solver: LocalSolver,
     group_range: std::ops::Range<usize>,
     batch: &MachineBatch,
-    machine_idx: usize,
     state: DeviceVec,
     z: &DeviceVec,
     mu: &DeviceVec,
     center: &DeviceVec,
     gamma: &DeviceVec,
     eta: &DeviceVec,
+    meter: &mut ResourceMeter,
 ) -> Result<DeviceVec> {
     let mut s = state;
     let mut total_n = 0u64;
@@ -178,62 +227,69 @@ pub fn vr_sweep_groups(
         if blk.valid == 0 {
             continue;
         }
-        s = ctx.engine.vr_chain(solver.kernel(), ctx.loss, blk, &s, z, mu, center, gamma, eta)?;
+        s = engine.vr_chain(solver.kernel(), loss, blk, &s, z, mu, center, gamma, eta)?;
         total_n += blk.valid as u64;
     }
-    ctx.meter.machine(machine_idx).add_vec_ops(total_n);
+    meter.add_vec_ops(total_n);
     Ok(s)
 }
 
 /// Total sweep-average weight of `batch.groups[group_range]`: the
 /// host-side divisor for the chained accumulator (`1 + valid` per
-/// non-empty block, matching the legacy combiner).
+/// non-empty block, matching the legacy combiner). Stub-safe — the
+/// weights ride the batch metadata, so the coordinator can compute the
+/// divisor for a shard-resident batch.
 pub fn sweep_groups_weight(batch: &MachineBatch, group_range: std::ops::Range<usize>) -> f64 {
-    batch.groups[group_range].iter().map(|g| g.sweep_weight()).sum()
+    group_range.map(|gi| batch.group_sweep_weight(gi)).sum()
 }
 
 /// Host-level wrapper over the chained sweep: uploads the state and the
 /// sweep-constant vectors, chains through the groups, and materializes
 /// `(x_end, x_avg)` — one `[2, d]` download per *sweep* instead of two
 /// `[d]` downloads per *block*. Semantics match [`vr_sweep_machine`] over
-/// the same blocks (the parity tests pin this down).
+/// the same blocks (the parity tests pin this down), and the host average
+/// (one f32 multiply per element) is bit-identical to the `vr_avg`
+/// kernel's, so a shard job running this reproduces the single-engine
+/// chained path exactly.
 #[allow(clippy::too_many_arguments)]
 pub fn vr_sweep_machine_grouped(
-    ctx: &mut RunContext,
+    engine: &mut Engine,
+    loss: Loss,
     solver: LocalSolver,
     group_range: std::ops::Range<usize>,
     batch: &MachineBatch,
-    machine_idx: usize,
     x0: &[f32],
     z: &[f32],
     mu: &[f32],
     center: &[f32],
     gamma: f32,
     eta: f32,
+    meter: &mut ResourceMeter,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    let d = ctx.d;
-    let state = ctx.engine.vr_state_from(x0)?;
-    let z_dev = ctx.engine.upload_dev(z, &[d])?;
-    let mu_dev = ctx.engine.upload_dev(mu, &[d])?;
-    let c_dev = ctx.engine.upload_dev(center, &[d])?;
+    let d = batch.d;
+    let state = engine.vr_state_from(x0)?;
+    let z_dev = engine.upload_dev(z, &[d])?;
+    let mu_dev = engine.upload_dev(mu, &[d])?;
+    let c_dev = engine.upload_dev(center, &[d])?;
     // sweep-constant scalars: uploaded once per sweep, not per group
-    let gamma_dev = ctx.engine.scalar_dev(gamma)?;
-    let eta_dev = ctx.engine.scalar_dev(eta)?;
+    let gamma_dev = engine.scalar_dev(gamma)?;
+    let eta_dev = engine.scalar_dev(eta)?;
     let total_w = sweep_groups_weight(batch, group_range.clone());
     let s = vr_sweep_groups(
-        ctx,
+        engine,
+        loss,
         solver,
         group_range,
         batch,
-        machine_idx,
         state,
         &z_dev,
         &mu_dev,
         &c_dev,
         &gamma_dev,
         &eta_dev,
+        meter,
     )?;
-    let host = ctx.engine.materialize(&s)?;
+    let host = engine.materialize(&s)?;
     let (x_end, acc) = host.split_at(d);
     let x_avg = if total_w > 0.0 {
         let inv = (1.0 / total_w) as f32;
@@ -242,4 +298,107 @@ pub fn vr_sweep_machine_grouped(
         x_end.to_vec()
     };
     Ok((x_end.to_vec(), x_avg))
+}
+
+/// One chained sweep-plus-average, fully on device: seed the `[2, d]`
+/// state from the host iterate `x0`, advance it through
+/// `batch.groups[group_range]`, and return the sweep average as a handle
+/// (`vr_avg`, with the empty-sweep fallback to the carried iterate). The
+/// ONE implementation of the parity-sensitive sweep-average sequence —
+/// chained DANE and one-shot local solves both run exactly this, so the
+/// cross-plane bitwise contract cannot drift between them.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_avg_dev(
+    engine: &mut Engine,
+    loss: Loss,
+    solver: LocalSolver,
+    group_range: std::ops::Range<usize>,
+    batch: &MachineBatch,
+    x0: &[f32],
+    z: &DeviceVec,
+    mu: &DeviceVec,
+    center: &DeviceVec,
+    gamma: &DeviceVec,
+    eta: &DeviceVec,
+    meter: &mut ResourceMeter,
+) -> Result<DeviceVec> {
+    let state = engine.vr_state_from(x0)?;
+    let total_w = sweep_groups_weight(batch, group_range.clone());
+    let state = vr_sweep_groups(
+        engine,
+        loss,
+        solver,
+        group_range,
+        batch,
+        state,
+        z,
+        mu,
+        center,
+        gamma,
+        eta,
+        meter,
+    )?;
+    let inv_w = if total_w > 0.0 { (1.0 / total_w) as f32 } else { 0.0 };
+    engine.vr_avg(&state, inv_w)
+}
+
+/// [`vr_sweep_machine_grouped`] on whichever plane owns machine `j`'s
+/// batch — the chained designated-machine sweep as a shard fan-out.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_grouped_on(
+    ctx: &mut RunContext,
+    solver: LocalSolver,
+    group_range: std::ops::Range<usize>,
+    batches: &[MachineBatch],
+    j: usize,
+    x0: &[f32],
+    z: &[f32],
+    mu: &[f32],
+    center: &[f32],
+    gamma: f32,
+    eta: f32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let loss = ctx.loss;
+    if batches[j].shard.is_none() {
+        // sequential plane: run inline on the borrowed slices (no copies)
+        return vr_sweep_machine_grouped(
+            ctx.engine,
+            loss,
+            solver,
+            group_range,
+            &batches[j],
+            x0,
+            z,
+            mu,
+            center,
+            gamma,
+            eta,
+            ctx.meter.machine(j),
+        );
+    }
+    // shard plane: the job closure must own its operands
+    let (x0, z, mu, center) = (x0.to_vec(), z.to_vec(), mu.to_vec(), center.to_vec());
+    fan_machine(
+        ctx.engine,
+        ctx.shards,
+        batches,
+        j,
+        &mut ctx.meter,
+        move |eng, batch, _i, m| {
+            vr_sweep_machine_grouped(
+                eng,
+                loss,
+                solver,
+                group_range,
+                batch,
+                &x0,
+                &z,
+                &mu,
+                &center,
+                gamma,
+                eta,
+                m,
+            )
+        },
+    )
 }

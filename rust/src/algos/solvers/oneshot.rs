@@ -9,27 +9,112 @@
 //! Local solve: SVRG sweeps with local snapshots (works for both losses);
 //! the re-snapshot between sweeps uses the machine's *local* gradient —
 //! no communication until the final average, which is the method's point.
+//!
+//! # Device-resident local solves
+//!
+//! With the chained artifacts present, each local solve runs on device:
+//! the local snapshot gradient is the `gacc{K}` chain + one `vec_scale`,
+//! the sweep advances a `[2, d]` state through the machine's fused groups,
+//! and the per-machine downlink is one d-vector per sweep (the next
+//! sweep's state seed) instead of two per block. On the single-engine
+//! plane the local solutions stay resident and the final average is the
+//! DeviceCollective; on the shard plane each machine solves on its own
+//! shard in parallel and the host collective combines the materialized
+//! solutions — bit-identical either way.
 
-use super::{svrg_sweep_machine, ProxSolver};
+use super::{vr_sweep_avg_dev, vr_sweep_machine, LocalSolver, ProxSolver};
+use crate::accounting::ResourceMeter;
 use crate::algos::RunContext;
-use crate::objective::{local_grad_sum, MachineBatch};
+use crate::data::Loss;
+use crate::objective::{fan_machines, local_grad_sum, local_grad_sum_dev, MachineBatch};
+use crate::runtime::{DeviceVec, Engine};
 use anyhow::Result;
+use std::sync::Arc;
 
 pub struct OneShotSolver {
     /// local SVRG sweeps (each re-snapshots on the local gradient)
     pub local_sweeps: usize,
     pub eta: f64,
+    /// pin the legacy per-block host path (parity tests / diagnostics)
+    pub force_legacy: bool,
 }
 
 impl OneShotSolver {
     pub fn new(local_sweeps: usize, eta: f64) -> Self {
-        Self { local_sweeps, eta }
+        Self { local_sweeps, eta, force_legacy: false }
     }
+
+    /// No `red_ready` requirement: the DeviceCollective's host fallback
+    /// for unserved cluster sizes is bit-identical, so the chained local
+    /// solves stay worthwhile at any m.
+    fn chain_ready(&self, ctx: &RunContext) -> bool {
+        !self.force_legacy
+            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
+            && ctx.engine.chain_vr_ready(ctx.loss.tag(), ctx.d)
+    }
+}
+
+/// One machine's chained local solve: `sweeps` SVRG passes over the fused
+/// groups, each re-snapshotting on the machine's own chained gradient.
+/// Returns the final sweep average as a device handle on `engine` — the
+/// caller decides whether it crosses machines as a handle (single-engine
+/// DeviceCollective) or as host bits (shard plane); the bits agree.
+#[allow(clippy::too_many_arguments)]
+fn chained_local_solve(
+    engine: &mut Engine,
+    loss: Loss,
+    batch: &MachineBatch,
+    wprev: &[f32],
+    gamma: f32,
+    eta: f32,
+    sweeps: usize,
+    meter: &mut ResourceMeter,
+) -> Result<DeviceVec> {
+    let d = batch.d;
+    let wprev_dev = engine.upload_dev(wprev, &[d])?;
+    let gamma_dev = engine.scalar_dev(gamma)?;
+    let eta_dev = engine.scalar_dev(eta)?;
+    let sweeps = sweeps.max(1);
+    let mut xi = wprev.to_vec();
+    let mut last: Option<DeviceVec> = None;
+    for sweep in 0..sweeps {
+        // local snapshot gradient at xi: gacc chain + one scale
+        let xi_dev = engine.upload_dev(&xi, &[d])?;
+        let gs = local_grad_sum_dev(engine, loss, batch, &xi_dev, meter)?;
+        let cnt = batch.n as f64;
+        let mu_dev = if cnt > 0.0 { engine.vec_scale(&gs, (1.0 / cnt) as f32)? } else { gs };
+        // one group-aligned sweep from (and snapshotted at) xi
+        let x_avg = vr_sweep_avg_dev(
+            engine,
+            loss,
+            LocalSolver::Svrg,
+            0..batch.n_groups(),
+            batch,
+            &xi,
+            &xi_dev,
+            &mu_dev,
+            &wprev_dev,
+            &gamma_dev,
+            &eta_dev,
+            meter,
+        )?;
+        if sweep + 1 < sweeps {
+            // the next sweep's state seed — the per-sweep downlink
+            xi = engine.materialize(&x_avg)?;
+        }
+        last = Some(x_avg);
+    }
+    Ok(last.expect("sweeps >= 1"))
 }
 
 impl ProxSolver for OneShotSolver {
     fn name(&self) -> String {
         format!("oneshot-emso(sweeps={})", self.local_sweeps)
+    }
+
+    /// Host block copies are only needed for the legacy per-block sweeps.
+    fn needs_vr_blocks(&self, ctx: &RunContext) -> bool {
+        !self.chain_ready(ctx)
     }
 
     fn solve(
@@ -41,32 +126,79 @@ impl ProxSolver for OneShotSolver {
         _t: usize,
     ) -> Result<Vec<f32>> {
         let m = batches.len();
-        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
-        for (i, batch) in batches.iter().enumerate() {
-            let mut xi = wprev.to_vec();
-            for _sweep in 0..self.local_sweeps.max(1) {
-                // local full gradient at the snapshot (charged locally)
-                let gs = local_grad_sum(ctx.engine, ctx.loss, batch, &xi, ctx.meter.machine(i))?;
-                let cnt = gs.count.max(1.0) as f32;
-                let mu: Vec<f32> = gs.grad_sum.iter().map(|&g| g / cnt).collect();
-                let snapshot = xi.clone();
-                let blocks = 0..batch.n_blocks();
-                let (_x_end, x_avg) = svrg_sweep_machine(
-                    ctx,
-                    blocks,
+        let loss = ctx.loss;
+        let sweeps = self.local_sweeps.max(1);
+        let eta = self.eta as f32;
+        let gamma32 = gamma as f32;
+        let sharded = batches.iter().any(|b| b.shard.is_some());
+
+        if self.chain_ready(ctx) && !sharded {
+            // single-engine chained plane: local solutions stay resident,
+            // the single round is the DeviceCollective
+            let mut locals = Vec::with_capacity(m);
+            for (i, batch) in batches.iter().enumerate() {
+                locals.push(chained_local_solve(
+                    ctx.engine,
+                    loss,
                     batch,
-                    i,
-                    &xi,
-                    &snapshot,
-                    &mu,
                     wprev,
-                    gamma as f32,
-                    self.eta as f32,
-                )?;
-                xi = x_avg;
+                    gamma32,
+                    eta,
+                    sweeps,
+                    ctx.meter.machine(i),
+                )?);
             }
-            locals.push(xi);
+            let z = ctx.net.device_all_reduce_avg(&mut ctx.meter, ctx.engine, &locals)?;
+            return ctx.engine.materialize(&z);
         }
+
+        let wprev_s: Arc<[f32]> = Arc::from(wprev);
+        let mut locals: Vec<Vec<f32>> = if self.chain_ready(ctx) {
+            // shard plane, chained: each machine solves on its own shard
+            // with the same kernel sequence; solutions cross as host bits
+            fan_machines(ctx.engine, ctx.shards, batches, &mut ctx.meter, {
+                let wprev_s = Arc::clone(&wprev_s);
+                move |eng, batch, _i, meter| {
+                    let v = chained_local_solve(
+                        eng, loss, batch, &wprev_s, gamma32, eta, sweeps, meter,
+                    )?;
+                    eng.materialize(&v)
+                }
+            })?
+        } else {
+            // legacy per-block sweeps (either plane)
+            fan_machines(ctx.engine, ctx.shards, batches, &mut ctx.meter, {
+                let wprev_s = Arc::clone(&wprev_s);
+                move |eng, batch, _i, meter| {
+                    let mut xi = wprev_s.to_vec();
+                    for _sweep in 0..sweeps {
+                        // local full gradient at the snapshot (charged
+                        // locally)
+                        let gs = local_grad_sum(eng, loss, batch, &xi, meter)?;
+                        let cnt = gs.count.max(1.0) as f32;
+                        let mu: Vec<f32> = gs.grad_sum.iter().map(|&g| g / cnt).collect();
+                        let snapshot = xi.clone();
+                        let blocks = 0..batch.n_blocks();
+                        let (_x_end, x_avg) = vr_sweep_machine(
+                            eng,
+                            loss,
+                            LocalSolver::Svrg,
+                            blocks,
+                            batch,
+                            &xi,
+                            &snapshot,
+                            &mu,
+                            &wprev_s,
+                            gamma32,
+                            eta,
+                            meter,
+                        )?;
+                        xi = x_avg;
+                    }
+                    Ok(xi)
+                }
+            })?
+        };
         // the single communication round that gives the method its name
         ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
         Ok(locals.pop().unwrap())

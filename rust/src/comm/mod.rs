@@ -7,11 +7,17 @@
 //! `ResourceMeter`, and advance the α–β network time model so the examples
 //! can report simulated wall-clock alongside round counts.
 //!
-//! Substitution note (DESIGN.md §3): xla's PJRT handles are not `Send`, so
-//! machines are deterministic SPMD-simulated states driven by the
-//! coordinator thread rather than tokio tasks; the collectives below are
-//! the *only* way machine state crosses machine boundaries, which is what
-//! makes the round/vector counts trustworthy.
+//! Substitution note (DESIGN.md §3): xla's PJRT handles are not `Send`,
+//! so machines are deterministic SPMD-simulated states rather than tokio
+//! tasks, and the collectives below are the *only* way machine state
+//! crosses machine boundaries — which is what makes the round/vector
+//! counts trustworthy. Since the shard plane (`runtime::shard`) landed,
+//! "driven by the coordinator thread" is no longer the whole story: with
+//! a `ShardPool` attached, per-machine work between collectives runs in
+//! parallel on engine-per-worker threads, and the collectives join the
+//! per-machine partials *in fixed machine order in f64 on the
+//! coordinator* — the identical operation sequence as the sequential
+//! path, so shard count never changes a result bit or a charged round.
 //!
 //! # DeviceCollective
 //!

@@ -25,9 +25,10 @@ use crate::data::synth::{SynthSpec, SynthStream};
 use crate::data::table3::DatasetSpec;
 use crate::data::{Loss, SampleStream};
 use crate::objective::Evaluator;
-use crate::runtime::Engine;
+use crate::runtime::{default_artifacts_dir, Engine, ShardPool};
 use crate::theory::{self, ProblemConsts};
 use anyhow::{anyhow, Result};
+use std::path::Path;
 
 /// Problem constants used for the theory plans; row_norm=1 streams give
 /// beta≈1 (squared) / 0.25 (logistic). The norm bound B tracks the planted
@@ -44,15 +45,54 @@ pub fn problem_consts(cfg: &ExperimentConfig) -> ProblemConsts {
 pub struct Runner {
     pub engine: Engine,
     pub net_model: NetModel,
+    /// the shard plane (engine-per-worker machine parallelism); `None`
+    /// drives machines sequentially on the coordinator engine. Results
+    /// are bit-identical either way — the plane buys wall-clock only.
+    pub shards: Option<ShardPool>,
+}
+
+/// Parse the `SHARDS` environment variable: unset/empty/`0` means the
+/// sequential plane, `n >= 1` a pool of n workers (n = 1 exercises the
+/// full shard machinery on a single worker — the CI parity leg). Any
+/// other value is an error — a typo must not silently fall back to the
+/// sequential plane.
+pub fn shards_from_env() -> Result<Option<usize>> {
+    let raw = match std::env::var("SHARDS") {
+        Err(_) => return Ok(None),
+        Ok(raw) => raw,
+    };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Ok(None);
+    }
+    let n: usize = trimmed
+        .parse()
+        .map_err(|_| anyhow!("SHARDS='{raw}' is not a shard count (unset/0 = sequential)"))?;
+    Ok((n >= 1).then_some(n))
 }
 
 impl Runner {
     pub fn from_env() -> Result<Runner> {
-        Ok(Runner { engine: Engine::from_env()?, net_model: NetModel::default() })
+        Runner::new(Engine::from_env()?).with_env_shards(&default_artifacts_dir())
     }
 
     pub fn new(engine: Engine) -> Runner {
-        Runner { engine, net_model: NetModel::default() }
+        Runner { engine, net_model: NetModel::default(), shards: None }
+    }
+
+    /// Attach an explicit shard pool.
+    pub fn with_shards(mut self, pool: ShardPool) -> Runner {
+        self.shards = Some(pool);
+        self
+    }
+
+    /// Attach a shard pool per the `SHARDS` env var (no-op when unset/0),
+    /// building the workers' engines from `artifacts_dir`.
+    pub fn with_env_shards(mut self, artifacts_dir: &Path) -> Result<Runner> {
+        if let Some(n) = shards_from_env()? {
+            self.shards = Some(ShardPool::new(n, artifacts_dir)?);
+        }
+        Ok(self)
     }
 
     /// Padded artifact dim for a native dim.
@@ -83,8 +123,13 @@ impl Runner {
         let mut eval_stream = root.fork_stream(EVAL_TAG);
         let eval_samples = eval_stream.draw_many(cfg.eval_samples);
         let evaluator = Some(Evaluator::new(&mut self.engine, d, cfg.loss, &eval_samples)?);
+        if let Some(pool) = &self.shards {
+            // stale machine state from a previous run must not leak in
+            pool.clear_machines()?;
+        }
         Ok(RunContext {
             engine: &mut self.engine,
+            shards: self.shards.as_ref(),
             net: Network::new(cfg.m, self.net_model.clone()),
             meter: ClusterMeter::new(cfg.m),
             loss: cfg.loss,

@@ -34,15 +34,31 @@
 //! layer's DeviceCollective, with identical paper-units accounting and
 //! zero steady-state downloads.
 
-use crate::accounting::ClusterMeter;
+use crate::accounting::{ClusterMeter, ResourceMeter};
 use crate::comm::Network;
 use crate::data::blocks::{pack_all, Block};
 use crate::data::{Loss, Sample};
 use crate::linalg;
 use crate::runtime::exec::{BlockLits, GradOut};
+use crate::runtime::shard::{Pending, ShardPool};
 use crate::runtime::{DeviceVec, Engine};
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Result};
 use std::cell::{Ref, RefCell};
+use std::sync::Arc;
+
+/// Host-side description of a shard-resident batch: everything the
+/// coordinator needs for solver bookkeeping (group structure, sweep
+/// weights) without the device buffers, which stay on the owning shard's
+/// engine (the shard plane's affinity rule — see `runtime::shard`).
+#[derive(Clone, Debug)]
+pub struct ShardBatchMeta {
+    /// owning machine (== the key in the shard's batch store)
+    pub machine: usize,
+    /// stacked width k of each fused group, in group order
+    pub group_ks: Vec<usize>,
+    /// sweep-average weight of each group (1 + valid per non-empty block)
+    pub group_weights: Vec<f64>,
+}
 
 /// One machine's current minibatch (or ERM shard), packed for the engine.
 pub struct MachineBatch {
@@ -50,7 +66,9 @@ pub struct MachineBatch {
     /// `vr_lits` materializes, and empty from the start for grad-only packs
     pending: RefCell<Vec<Block>>,
     n_blocks: usize,
-    /// fused multi-block device groups — the grad/normal-matvec hot path
+    /// fused multi-block device groups — the grad/normal-matvec hot path.
+    /// Empty on a coordinator-side stub (see [`MachineBatch::stub`]): the
+    /// real groups live on the owning shard.
     pub groups: Vec<BlockLits>,
     /// lazily-uploaded per-block buffers for the VR sweep path
     vr: RefCell<Option<Vec<BlockLits>>>,
@@ -61,6 +79,11 @@ pub struct MachineBatch {
     /// `RunContext::release_batches` releases exactly this amount, so a
     /// ragged final batch can never corrupt the peak-memory meter.
     pub held: u64,
+    /// `Some` on a coordinator-side stub for a shard-resident batch:
+    /// per-machine compute against it must go through the fan helpers
+    /// ([`fan_machines`] / [`fan_machine`]), which route to the owning
+    /// shard where the device state actually lives.
+    pub shard: Option<ShardBatchMeta>,
 }
 
 impl MachineBatch {
@@ -126,6 +149,7 @@ impl MachineBatch {
             n: samples.len(),
             d: engine_d,
             held: 0,
+            shard: None,
         })
     }
 
@@ -138,12 +162,66 @@ impl MachineBatch {
             n: 0,
             d: engine_d,
             held: 0,
+            shard: None,
+        }
+    }
+
+    /// Describe this (locally packed) batch for a coordinator-side stub —
+    /// the host half of a shard-side pack job's reply.
+    pub fn shard_meta(&self, machine: usize) -> ShardBatchMeta {
+        ShardBatchMeta {
+            machine,
+            group_ks: self.groups.iter().map(|g| g.k).collect(),
+            group_weights: self.groups.iter().map(|g| g.sweep_weight()).collect(),
+        }
+    }
+
+    /// A coordinator-side stub for a batch packed on a shard: carries all
+    /// the bookkeeping (counts, group structure, sweep weights) and no
+    /// device state. Engine calls against a stub's `groups` see nothing —
+    /// route compute through [`fan_machines`] / [`fan_machine`] instead.
+    pub fn stub(engine_d: usize, n: usize, n_blocks: usize, meta: ShardBatchMeta) -> MachineBatch {
+        MachineBatch {
+            pending: RefCell::new(Vec::new()),
+            n_blocks,
+            groups: Vec::new(),
+            vr: RefCell::new(None),
+            n,
+            d: engine_d,
+            held: 0,
+            shard: Some(meta),
         }
     }
 
     /// Number of 256-row blocks (the VR sweep granularity).
     pub fn n_blocks(&self) -> usize {
         self.n_blocks
+    }
+
+    /// Number of fused groups (device groups locally; group metadata on a
+    /// stub).
+    pub fn n_groups(&self) -> usize {
+        match &self.shard {
+            Some(m) => m.group_ks.len(),
+            None => self.groups.len(),
+        }
+    }
+
+    /// Stacked width k of each group, in group order (stub-safe).
+    fn group_widths(&self) -> Vec<usize> {
+        match &self.shard {
+            Some(m) => m.group_ks.clone(),
+            None => self.groups.iter().map(|g| g.k).collect(),
+        }
+    }
+
+    /// Sweep-average weight of group `gi` (stub-safe; see
+    /// [`BlockLits::sweep_weight`]).
+    pub fn group_sweep_weight(&self, gi: usize) -> f64 {
+        match &self.shard {
+            Some(m) => m.group_weights[gi],
+            None => self.groups[gi].sweep_weight(),
+        }
     }
 
     /// Group-index ranges tiling the p-way BLOCK partition
@@ -157,12 +235,14 @@ impl MachineBatch {
     pub fn group_ranges(&self, p: usize) -> Vec<std::ops::Range<usize>> {
         let p = p.clamp(1, self.n_blocks.max(1));
         let block_ranges = crate::data::sampler::shard_ranges(self.n_blocks, p);
-        // cumulative first-block index of each group
-        let mut starts = Vec::with_capacity(self.groups.len());
+        // cumulative first-block index of each group (widths are known on
+        // stubs too, so solver bookkeeping works on either plane)
+        let widths = self.group_widths();
+        let mut starts = Vec::with_capacity(widths.len());
         let mut acc = 0usize;
-        for g in &self.groups {
+        for k in widths {
             starts.push(acc);
-            acc += g.k;
+            acc += k;
         }
         let mut out = Vec::with_capacity(block_ranges.len());
         let mut g = 0usize;
@@ -219,6 +299,103 @@ fn fuse_blocks(engine: &mut Engine, blocks: &[Block]) -> Result<Vec<BlockLits>> 
     Ok(groups)
 }
 
+/// Fan a per-machine computation across the cluster and join in fixed
+/// machine order — THE helper behind every per-machine loop in the
+/// algorithm layer.
+///
+/// `f` runs once per machine against *that machine's* engine and batch:
+/// inline on the coordinator engine when the batches are locally packed
+/// (the sequential plane — this branch IS the old per-machine loop), or
+/// as one job per machine on the owning shard when they are stubs. The
+/// closure sees only host data plus the engine/batch it is handed, so the
+/// two planes execute the identical kernel sequence per machine and the
+/// results are bitwise equal; joins happen in machine order and each
+/// machine's meter delta is merged into `meter.machine(i)` in that order,
+/// so accounting is deterministic and plane-independent.
+pub fn fan_machines<T, F>(
+    engine: &mut Engine,
+    shards: Option<&ShardPool>,
+    batches: &[MachineBatch],
+    meter: &mut ClusterMeter,
+    f: F,
+) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(&mut Engine, &MachineBatch, usize, &mut ResourceMeter) -> Result<T>
+        + Clone
+        + Send
+        + 'static,
+{
+    let stubs = batches.iter().filter(|b| b.shard.is_some()).count();
+    if stubs == 0 {
+        let mut out = Vec::with_capacity(batches.len());
+        for (i, batch) in batches.iter().enumerate() {
+            out.push(f(&mut *engine, batch, i, meter.machine(i))?);
+        }
+        return Ok(out);
+    }
+    ensure!(stubs == batches.len(), "mixed local/shard batches in one fan");
+    let pool = shards.ok_or_else(|| anyhow!("shard-resident batches need a shard plane"))?;
+    let mut pends: Vec<Pending<(T, ResourceMeter)>> = Vec::with_capacity(batches.len());
+    for (i, b) in batches.iter().enumerate() {
+        let machine = b.shard.as_ref().expect("stub checked above").machine;
+        // hard contract, not a debug check: a reordered/filtered stub
+        // slice would otherwise silently mis-attribute meter deltas
+        ensure!(machine == i, "stub for machine {machine} at position {i}");
+        let f = f.clone();
+        pends.push(pool.submit(pool.shard_of(machine), move |state| {
+            let (engine, batch) = state.machine(machine)?;
+            let mut delta = ResourceMeter::new();
+            let out = f(engine, batch, machine, &mut delta)?;
+            Ok((out, delta))
+        }));
+    }
+    let mut out = Vec::with_capacity(batches.len());
+    for (i, p) in pends.into_iter().enumerate() {
+        let (val, delta) = p.wait()?;
+        meter.machine(i).merge(&delta);
+        out.push(val);
+    }
+    Ok(out)
+}
+
+/// [`fan_machines`] for ONE designated machine `i` (e.g. the DSVRG sweep
+/// token holder): inline on the sequential plane, a single job on the
+/// owning shard otherwise.
+pub fn fan_machine<T, F>(
+    engine: &mut Engine,
+    shards: Option<&ShardPool>,
+    batches: &[MachineBatch],
+    i: usize,
+    meter: &mut ClusterMeter,
+    f: F,
+) -> Result<T>
+where
+    T: Send + 'static,
+    F: FnOnce(&mut Engine, &MachineBatch, usize, &mut ResourceMeter) -> Result<T>
+        + Send
+        + 'static,
+{
+    let batch = &batches[i];
+    match &batch.shard {
+        None => f(&mut *engine, batch, i, meter.machine(i)),
+        Some(meta) => {
+            let machine = meta.machine;
+            ensure!(machine == i, "stub for machine {machine} addressed as machine {i}");
+            let pool =
+                shards.ok_or_else(|| anyhow!("shard-resident batch needs a shard plane"))?;
+            let (val, delta) = pool.run_on_machine(machine, move |state| {
+                let (engine, batch) = state.machine(machine)?;
+                let mut delta = ResourceMeter::new();
+                let out = f(engine, batch, machine, &mut delta)?;
+                Ok((out, delta))
+            })?;
+            meter.machine(i).merge(&delta);
+            Ok(val)
+        }
+    }
+}
+
 /// Sum-form gradient over one machine's batch. Charges `n` vec ops.
 /// Iterates the fused groups: one dispatch + one download per group.
 pub fn local_grad_sum(
@@ -263,8 +440,12 @@ pub fn local_grad_sum_dev(
 
 /// Distributed mean gradient over all machines' batches:
 /// one weighted all-reduce round; returns (mean_grad, mean_loss, total_n).
+/// The per-machine gradients fan across the shard plane when one is
+/// given; the combine runs in fixed machine order in f64 on the
+/// coordinator either way, so the result is plane-independent.
 pub fn distributed_mean_grad(
     engine: &mut Engine,
+    shards: Option<&ShardPool>,
     loss: Loss,
     machines: &[MachineBatch],
     w: &[f32],
@@ -276,13 +457,16 @@ pub fn distributed_mean_grad(
     if machines.is_empty() {
         return Ok((vec![0.0; w.len()], 0.0, 0.0));
     }
+    let w_shared: Arc<[f32]> = Arc::from(w);
+    let outs = fan_machines(engine, shards, machines, meter, move |eng, batch, _i, m| {
+        local_grad_sum(eng, loss, batch, &w_shared, m)
+    })?;
     let m = machines.len();
     let mut locals: Vec<Vec<f32>> = Vec::with_capacity(m);
     let mut weights: Vec<f64> = Vec::with_capacity(m);
     let mut loss_total = 0.0;
     let mut n_total = 0.0;
-    for (i, batch) in machines.iter().enumerate() {
-        let out = local_grad_sum(engine, loss, batch, w, meter.machine(i))?;
+    for out in outs {
         let cnt = out.count.max(0.0);
         // local *mean* gradient, weighted by count in the reduce
         let mut gm = out.grad_sum;
@@ -299,6 +483,41 @@ pub fn distributed_mean_grad(
     Ok((locals.pop().unwrap(), mean_loss, n_total))
 }
 
+/// The chained-kernel mean gradient as a host-in/host-out collective:
+/// every machine folds its batch through the same `gacc{K}` chain +
+/// `vec_scale` the single-engine chained path runs, materializes its
+/// local mean on its own engine, and the partials cross machines through
+/// the host collective — whose fixed-machine-order f64 interior is
+/// bit-identical to the `redm{M}` device reduce (pinned by
+/// rust/tests/device_collective.rs). Identical rounds/vectors/sim-time
+/// accounting; the per-machine materialize is the honest price of
+/// engines that share no device.
+pub fn mean_grad_chained_host(
+    engine: &mut Engine,
+    shards: Option<&ShardPool>,
+    loss: Loss,
+    machines: &[MachineBatch],
+    w: &[f32],
+    net: &mut Network,
+    meter: &mut ClusterMeter,
+) -> Result<Vec<f32>> {
+    if machines.is_empty() {
+        return Ok(vec![0.0; w.len()]);
+    }
+    let w_shared: Arc<[f32]> = Arc::from(w);
+    let mut locals: Vec<Vec<f32>> =
+        fan_machines(engine, shards, machines, meter, move |eng, batch, _i, m| {
+            let w_dev = eng.upload_dev(&w_shared, &[w_shared.len()])?;
+            let gsum = local_grad_sum_dev(eng, loss, batch, &w_dev, m)?;
+            let cnt = batch.n as f64;
+            let gm = if cnt > 0.0 { eng.vec_scale(&gsum, (1.0 / cnt) as f32)? } else { gsum };
+            eng.materialize(&gm)
+        })?;
+    let weights: Vec<f64> = machines.iter().map(|b| b.n as f64).collect();
+    net.all_reduce_weighted(meter, &weights, &mut locals);
+    Ok(locals.pop().unwrap())
+}
+
 /// Device-chained [`distributed_mean_grad`]: every machine's local mean
 /// gradient is assembled on device (gacc chain + one scale) and the
 /// weighted combine runs the DeviceCollective reduce — identical
@@ -307,6 +526,7 @@ pub fn distributed_mean_grad(
 /// checkpoints, which take the tupled dispatch path).
 pub fn distributed_mean_grad_dev(
     engine: &mut Engine,
+    shards: Option<&ShardPool>,
     loss: Loss,
     machines: &[MachineBatch],
     w: &DeviceVec,
@@ -315,6 +535,16 @@ pub fn distributed_mean_grad_dev(
 ) -> Result<DeviceVec> {
     if machines.is_empty() {
         return engine.zeros_dev(w.len());
+    }
+    if machines.iter().any(|b| b.shard.is_some()) {
+        // shard plane: the iterate crosses to the shards as host bits and
+        // the mean comes back the same way — f32 round trips are exact,
+        // and the host combine is bit-identical to the device reduce, so
+        // the re-uploaded handle carries the very bits the single-engine
+        // path would hold
+        let w_host = engine.materialize(w)?;
+        let mean = mean_grad_chained_host(engine, shards, loss, machines, &w_host, net, meter)?;
+        return engine.upload_dev(&mean, &[w.len()]);
     }
     let m = machines.len();
     let mut locals: Vec<DeviceVec> = Vec::with_capacity(m);
@@ -394,6 +624,10 @@ pub fn prox_objective(
     wprev: &[f32],
     gamma: f64,
 ) -> Result<f64> {
+    ensure!(
+        machines.iter().all(|b| b.shard.is_none()),
+        "prox_objective reads device groups directly: pack batches locally"
+    );
     let mut lsum = 0.0;
     let mut cnt = 0.0;
     for batch in machines {

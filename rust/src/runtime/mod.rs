@@ -31,6 +31,29 @@
 //!    host `all_reduce_*` on the same inputs — the paper-units
 //!    round/vector accounting stays authoritative either way.
 //!
+//! # The shard plane
+//!
+//! The four verbs describe ONE engine. The [`shard::ShardPool`] scales
+//! them across host cores without changing them: a fixed pool of worker
+//! threads, each owning its *own* engine (PJRT handles are not `Send`, so
+//! engines never cross threads), with machines partitioned machine->shard
+//! at cluster construction. The **engine affinity rule**: all of a
+//! machine's device state — packed blocks, session slots, chained
+//! intermediates — lives on its shard's engine, and work for that machine
+//! only ever runs there. Fan-outs **join only at collectives**: each
+//! machine's partial is materialized on its shard, and the coordinator
+//! reduces the host partials *in fixed machine order in f64* (the same
+//! IEEE operation sequence as `Network::all_reduce_*` and the `redm{M}`
+//! kernel), so every shard count — including the shard-free sequential
+//! path — produces bit-identical iterates and identical paper-units
+//! accounting. What the plane buys is wall-clock: the per-machine compute
+//! between collectives is embarrassingly parallel, and with the chained
+//! pipeline that compute is the hot path. The cost is honest extra
+//! device<->host traffic at the join points (a per-machine partial must
+//! materialize where the single-engine chained path could keep it
+//! resident), all metered through each shard's [`EngineStats`] and
+//! aggregated via [`shard::ShardPool::gathered_stats`].
+//!
 //! # Traffic counters
 //!
 //! [`EngineStats`] meters the contract: `uploads`/`upload_bytes` count
@@ -48,6 +71,7 @@ pub mod artifact;
 pub mod chain;
 pub mod exec;
 pub mod session;
+pub mod shard;
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -57,6 +81,7 @@ use std::time::Instant;
 pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
 pub use chain::DeviceVec;
 pub use session::ExecSession;
+pub use shard::{Pending, ShardPool, ShardState};
 
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
@@ -92,6 +117,41 @@ impl EngineStats {
     /// Total bytes moved across the host<->device boundary.
     pub fn bytes_moved(&self) -> u64 {
         self.upload_bytes + self.download_bytes
+    }
+
+    /// Fold another engine's counters into this one (the shard plane's
+    /// cross-engine aggregation: every field is a flow, so merge is a
+    /// plain sum). Exhaustive destructure — adding a counter without
+    /// aggregating it is a compile error, not a silent zero.
+    pub fn merge(&mut self, other: &EngineStats) {
+        let EngineStats {
+            compiles,
+            compile_ns,
+            executions,
+            execute_ns,
+            literal_conversions,
+            uploads,
+            upload_bytes,
+            downloads,
+            download_bytes,
+            upload_cache_hits,
+            upload_cache_misses,
+            chained_dispatches,
+            alias_installs,
+        } = other;
+        self.compiles += compiles;
+        self.compile_ns += compile_ns;
+        self.executions += executions;
+        self.execute_ns += execute_ns;
+        self.literal_conversions += literal_conversions;
+        self.uploads += uploads;
+        self.upload_bytes += upload_bytes;
+        self.downloads += downloads;
+        self.download_bytes += download_bytes;
+        self.upload_cache_hits += upload_cache_hits;
+        self.upload_cache_misses += upload_cache_misses;
+        self.chained_dispatches += chained_dispatches;
+        self.alias_installs += alias_installs;
     }
 }
 

@@ -9,6 +9,8 @@ use mbprox::runtime::Engine;
 fn runner() -> Runner {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     Runner::new(Engine::new(&dir).expect("run `make artifacts` first"))
+        .with_env_shards(&dir)
+        .expect("shard pool construction")
 }
 
 fn small_cfg() -> ExperimentConfig {

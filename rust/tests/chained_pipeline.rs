@@ -31,6 +31,7 @@ fn ctx_with<'e>(engine: &'e mut Engine, m: usize, loss: Loss, d: usize) -> RunCo
         (0..m).map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>).collect();
     RunContext {
         engine,
+        shards: None,
         net: Network::new(m, NetModel::default()),
         meter: ClusterMeter::new(m),
         loss,

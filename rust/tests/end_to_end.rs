@@ -26,6 +26,8 @@ use mbprox::util::prng::Prng;
 fn runner() -> Runner {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     Runner::new(Engine::new(&dir).expect("run `make artifacts` first"))
+        .with_env_shards(&dir)
+        .expect("shard pool construction")
 }
 
 fn load_via_libsvm(n_total: usize) -> (Vec<Sample>, Vec<Sample>) {
@@ -79,6 +81,7 @@ fn run_method(
     let evaluator = Evaluator::new(&mut r.engine, d, Loss::Logistic, eval).unwrap();
     let mut ctx = RunContext {
         engine: &mut r.engine,
+        shards: r.shards.as_ref(),
         net: Network::new(m, NetModel::default()),
         meter: ClusterMeter::new(m),
         loss: Loss::Logistic,

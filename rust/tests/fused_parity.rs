@@ -5,7 +5,6 @@
 
 use mbprox::accounting::ClusterMeter;
 use mbprox::algos::solvers::{vr_sweep_machine, vr_sweep_machine_grouped, LocalSolver};
-use mbprox::algos::RunContext;
 use mbprox::comm::{netmodel::NetModel, Network};
 use mbprox::data::blocks::{pack_all, BLOCK_ROWS};
 use mbprox::data::synth::{SynthSpec, SynthStream};
@@ -201,26 +200,6 @@ fn grad_only_pack_serves_grad_but_refuses_vr() {
     assert!(batch.vr_lits(&mut e).is_err(), "grad-only pack must refuse VR materialization");
 }
 
-/// One-machine context for the sweep parity tests.
-fn sweep_ctx<'e>(e: &'e mut Engine, loss: Loss, d: usize) -> RunContext<'e> {
-    let root = match loss {
-        Loss::Squared => SynthStream::new(SynthSpec::least_squares(d), 31),
-        Loss::Logistic => SynthStream::new(SynthSpec::logistic(d), 31),
-    };
-    let streams: Vec<Box<dyn SampleStream>> =
-        vec![Box::new(root.fork_stream(0)) as Box<dyn SampleStream>];
-    RunContext {
-        engine: e,
-        net: Network::new(1, NetModel::default()),
-        meter: ClusterMeter::new(1),
-        loss,
-        d,
-        streams,
-        evaluator: None,
-        eval_every: 0,
-    }
-}
-
 #[test]
 fn grouped_vr_sweep_matches_legacy_per_block_sweep() {
     // the group-aligned chained sweep vs the legacy per-block path on
@@ -238,25 +217,47 @@ fn grouped_vr_sweep_matches_legacy_per_block_sweep() {
             let (gamma, eta) = (0.5f32, 0.03f32);
 
             let (xe_legacy, xa_legacy, legacy_ops) = {
-                let mut ctx = sweep_ctx(&mut e, loss, d);
-                let batch = MachineBatch::pack(ctx.engine, d, &samples).unwrap();
+                let batch = MachineBatch::pack(&mut e, d, &samples).unwrap();
+                let mut meter = ClusterMeter::new(1);
                 let blocks = 0..batch.n_blocks();
                 let (xe, xa) = vr_sweep_machine(
-                    &mut ctx, solver, blocks, &batch, 0, &x0, &z, &mu, &center, gamma, eta,
+                    &mut e,
+                    loss,
+                    solver,
+                    blocks,
+                    &batch,
+                    &x0,
+                    &z,
+                    &mu,
+                    &center,
+                    gamma,
+                    eta,
+                    meter.machine(0),
                 )
                 .unwrap();
-                (xe, xa, ctx.meter.report().vec_ops)
+                (xe, xa, meter.report().vec_ops)
             };
 
             let (xe_grouped, xa_grouped, grouped_ops) = {
-                let mut ctx = sweep_ctx(&mut e, loss, d);
-                let batch = MachineBatch::pack_grad_only(ctx.engine, d, &samples).unwrap();
-                let groups = 0..batch.groups.len();
+                let batch = MachineBatch::pack_grad_only(&mut e, d, &samples).unwrap();
+                let mut meter = ClusterMeter::new(1);
+                let groups = 0..batch.n_groups();
                 let (xe, xa) = vr_sweep_machine_grouped(
-                    &mut ctx, solver, groups, &batch, 0, &x0, &z, &mu, &center, gamma, eta,
+                    &mut e,
+                    loss,
+                    solver,
+                    groups,
+                    &batch,
+                    &x0,
+                    &z,
+                    &mu,
+                    &center,
+                    gamma,
+                    eta,
+                    meter.machine(0),
                 )
                 .unwrap();
-                (xe, xa, ctx.meter.report().vec_ops)
+                (xe, xa, meter.report().vec_ops)
             };
 
             // the carried iterate is near-bitwise (the host round-trip the
@@ -273,22 +274,23 @@ fn grouped_vr_sweep_matches_legacy_per_block_sweep() {
 fn grouped_vr_sweep_handles_empty_batch() {
     let mut e = engine();
     let d = 64;
-    let mut ctx = sweep_ctx(&mut e, Loss::Squared, d);
     let batch = MachineBatch::empty(d);
     let x0: Vec<f32> = (0..d).map(|j| 0.1 + j as f32 * 0.01).collect();
     let zeros = vec![0.0f32; d];
+    let mut meter = ClusterMeter::new(1);
     let (xe, xa) = vr_sweep_machine_grouped(
-        &mut ctx,
+        &mut e,
+        Loss::Squared,
         LocalSolver::Svrg,
-        0..batch.groups.len(),
+        0..batch.n_groups(),
         &batch,
-        0,
         &x0,
         &zeros,
         &zeros,
         &zeros,
         0.5,
         0.05,
+        meter.machine(0),
     )
     .unwrap();
     // nothing swept: iterate unchanged, average falls back to the iterate
@@ -305,7 +307,7 @@ fn empty_machine_set_returns_zero_gradient() {
     let mut net = Network::new(0, NetModel::default());
     let mut meter = ClusterMeter::new(0);
     let (g, loss, n) =
-        distributed_mean_grad(&mut e, Loss::Squared, &machines, &w, &mut net, &mut meter)
+        distributed_mean_grad(&mut e, None, Loss::Squared, &machines, &w, &mut net, &mut meter)
             .unwrap();
     assert_eq!(g, vec![0.0f32; 64]);
     assert_eq!(loss, 0.0);
@@ -324,7 +326,7 @@ fn empty_batch_machine_contributes_nothing() {
     let mut net = Network::new(2, NetModel::default());
     let mut meter = ClusterMeter::new(2);
     let (g, _, n) =
-        distributed_mean_grad(&mut e, Loss::Squared, &machines, &w, &mut net, &mut meter)
+        distributed_mean_grad(&mut e, None, Loss::Squared, &machines, &w, &mut net, &mut meter)
             .unwrap();
     assert_eq!(n, 300.0);
     assert_eq!(g.len(), d);

@@ -1,0 +1,135 @@
+//! Shard-determinism parity: shards ∈ {1, 2, m} must reproduce the
+//! shard-free sequential path BIT FOR BIT — identical iterate bits,
+//! identical objective-curve bits, identical ClusterMeter / CommStats /
+//! simulated-time accounting — on both losses, including ragged blocks.
+//!
+//! This is the shard plane's contract (see `runtime::shard`): per-machine
+//! work runs the identical kernel sequence on whichever engine owns the
+//! machine, partials join in fixed machine order, and every cross-machine
+//! combine is the f64 host-order reduce (bit-identical to the `redm{M}`
+//! device kernel, pinned by device_collective.rs). Requires
+//! `make artifacts`.
+
+use mbprox::algos::RunResult;
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::runtime::{Engine, ShardPool};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Run `cfg` on a fresh engine: sequentially (`shards = None`) or over a
+/// fresh pool of n workers.
+fn run_plane(shards: Option<usize>, cfg: &ExperimentConfig) -> RunResult {
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("run `make artifacts` before cargo test"));
+    if let Some(n) = shards {
+        r = r.with_shards(ShardPool::new(n, &dir).expect("shard pool construction"));
+    }
+    r.run(cfg).unwrap_or_else(|e| panic!("{} (shards={shards:?}): {e:?}", cfg.method))
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_identical(seq: &RunResult, sharded: &RunResult, label: &str) {
+    assert_eq!(bits32(&seq.w), bits32(&sharded.w), "{label}: final iterate bits");
+    assert_eq!(seq.report, sharded.report, "{label}: ClusterMeter report");
+    assert_eq!(
+        seq.sim_time_s.to_bits(),
+        sharded.sim_time_s.to_bits(),
+        "{label}: simulated network time"
+    );
+    assert_eq!(seq.curve.len(), sharded.curve.len(), "{label}: curve length");
+    for (a, b) in seq.curve.iter().zip(&sharded.curve) {
+        assert_eq!(a.outer_iter, b.outer_iter, "{label}: curve iters");
+        assert_eq!(a.samples_total, b.samples_total, "{label}: curve samples");
+        assert_eq!(a.comm_rounds, b.comm_rounds, "{label}: curve rounds");
+        assert_eq!(a.vec_ops, b.vec_ops, "{label}: curve vec ops");
+        match (a.objective, b.objective) {
+            (Some(x), Some(y)) => {
+                let t = a.outer_iter;
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: objective bits at t={t}")
+            }
+            (None, None) => {}
+            other => panic!("{label}: objective presence mismatch {other:?}"),
+        }
+    }
+    match (seq.final_objective, sharded.final_objective) {
+        (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits(), "{label}: final objective"),
+        (None, None) => {}
+        other => panic!("{label}: final objective mismatch {other:?}"),
+    }
+}
+
+/// The parity harness: sequential baseline vs shards ∈ {1, 2, m}.
+fn parity(method: &str, loss: Loss, b_local: usize, n_budget: usize) {
+    let m = 4usize;
+    let cfg = ExperimentConfig {
+        method: method.into(),
+        loss,
+        m,
+        b_local,
+        n_budget,
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        dataset: None,
+    };
+    let seq = run_plane(None, &cfg);
+    for n in [1usize, 2, m] {
+        let sharded = run_plane(Some(n), &cfg);
+        assert_identical(&seq, &sharded, &format!("{method}[{}] shards={n}", loss.tag()));
+    }
+}
+
+#[test]
+fn mp_dsvrg_squared_ragged_blocks() {
+    // b = 300 -> a full block + a 44-row ragged tail per machine per draw
+    parity("mp-dsvrg", Loss::Squared, 300, 3600); // T = 3
+}
+
+#[test]
+fn mp_dsvrg_logistic() {
+    parity("mp-dsvrg", Loss::Logistic, 256, 3072); // T = 3
+}
+
+#[test]
+fn mp_dane_squared() {
+    parity("mp-dane", Loss::Squared, 256, 2048); // T = 2
+}
+
+#[test]
+fn mp_dane_saga_logistic_ragged() {
+    // the SAGA chained kernel on the shard plane, ragged blocks
+    parity("mp-dane-saga", Loss::Logistic, 300, 2400); // T = 2
+}
+
+#[test]
+fn mp_oneshot_logistic() {
+    parity("mp-oneshot", Loss::Logistic, 256, 2048); // T = 2
+}
+
+#[test]
+fn mp_exact_cg_squared() {
+    // chained CG: recurrence on the coordinator engine, matvec partials
+    // fanned to the shards
+    parity("mp-exact", Loss::Squared, 256, 2048); // T = 2
+}
+
+#[test]
+fn minibatch_sgd_squared() {
+    parity("minibatch-sgd", Loss::Squared, 64, 1024); // T = 4
+}
+
+#[test]
+fn dsvrg_erm_squared() {
+    // the ERM designated-machine sweep takes the legacy per-block path
+    // (vr_lits materialize on the owning shard)
+    parity("dsvrg-erm", Loss::Squared, 256, 2048);
+}
