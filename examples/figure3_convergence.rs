@@ -19,17 +19,14 @@
 //! {1,2,4,8,16} as in the paper.
 
 use anyhow::Result;
-use mbprox::accounting::ClusterMeter;
 use mbprox::algos::mbprox::MinibatchProx;
 use mbprox::algos::minibatch_sgd::MinibatchSgd;
 use mbprox::algos::solvers::dane::DaneSolver;
 use mbprox::algos::{Method, RunContext};
-use mbprox::comm::{netmodel::NetModel, Network};
 use mbprox::coordinator::Runner;
 use mbprox::data::sampler::{shard_ranges, VecStream};
 use mbprox::data::table3::{DatasetSpec, ALL};
 use mbprox::data::{libsvm, Loss, Sample, SampleStream};
-use mbprox::objective::Evaluator;
 use mbprox::theory::{self, ProblemConsts};
 use mbprox::util::prng::Prng;
 
@@ -104,18 +101,7 @@ fn context_from_shards<'e>(
             Box::new(VecStream::new(shard, loss, root.split(i as u64))) as Box<dyn SampleStream>
         })
         .collect();
-    let evaluator = Some(Evaluator::new(&mut runner.engine, d, loss, eval)?);
-    Ok(RunContext {
-        engine: &mut runner.engine,
-        shards: runner.shards.as_ref(),
-        net: Network::new(m, NetModel::default()),
-        meter: ClusterMeter::new(m),
-        loss,
-        d,
-        streams,
-        evaluator,
-        eval_every: 0,
-    })
+    runner.context_over(loss, d, streams, eval, 0)
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -33,7 +33,7 @@ fn main() -> Result<()> {
         eval_samples: 4096,
         eval_every: 4,
         method: "mp-dsvrg".into(),
-        dataset: None,
+        ..ExperimentConfig::default()
     };
     println!(
         "\nrunning {} on planted least squares (m={}, b={}, n={})",

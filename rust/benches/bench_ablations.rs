@@ -6,17 +6,14 @@
 //!   A3. SVRG stepsize eta sensitivity around the 0.1/(beta+gamma) rule.
 //!   A4. DSVRG local batches p: theory picks p ~ b/kappa; sweep around it.
 
-use mbprox::accounting::ClusterMeter;
 use mbprox::algos::mbprox::MinibatchProx;
 use mbprox::algos::solvers::dane::DaneSolver;
 use mbprox::algos::solvers::dsvrg::DsvrgSolver;
 use mbprox::algos::solvers::LocalSolver;
-use mbprox::algos::{Method, RunContext};
-use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::algos::Method;
 use mbprox::coordinator::Runner;
 use mbprox::data::synth::{SynthSpec, SynthStream};
 use mbprox::data::{Loss, SampleStream};
-use mbprox::objective::Evaluator;
 use mbprox::theory::{self, ProblemConsts};
 use mbprox::util::benchkit;
 
@@ -32,18 +29,7 @@ fn run(runner: &mut Runner, method: &mut dyn Method, seed: u64) -> (f64, u64, u6
         .collect();
     let mut eval_stream = root.fork_stream(4242);
     let eval_samples = eval_stream.draw_many(2048);
-    let evaluator = Evaluator::new(&mut runner.engine, DIM, Loss::Squared, &eval_samples).unwrap();
-    let mut ctx = RunContext {
-        engine: &mut runner.engine,
-        shards: runner.shards.as_ref(),
-        net: Network::new(M, NetModel::default()),
-        meter: ClusterMeter::new(M),
-        loss: Loss::Squared,
-        d: DIM,
-        streams,
-        evaluator: Some(evaluator),
-        eval_every: 0,
-    };
+    let mut ctx = runner.context_over(Loss::Squared, DIM, streams, &eval_samples, 0).unwrap();
     let r = method.run(&mut ctx).unwrap();
     (r.final_objective.unwrap_or(f64::NAN), r.report.comm_rounds, r.report.vec_ops)
 }

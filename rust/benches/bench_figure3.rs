@@ -7,17 +7,14 @@
 //!   2. MP-DANE's objective degrades slowly, and more DANE rounds K help
 //!      with diminishing returns.
 
-use mbprox::accounting::ClusterMeter;
 use mbprox::algos::mbprox::MinibatchProx;
 use mbprox::algos::minibatch_sgd::MinibatchSgd;
 use mbprox::algos::solvers::dane::DaneSolver;
-use mbprox::algos::{Method, RunContext};
-use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::algos::Method;
 use mbprox::coordinator::Runner;
 use mbprox::data::sampler::{shard_ranges, VecStream};
 use mbprox::data::table3::CODRNA;
 use mbprox::data::{Loss, Sample, SampleStream};
-use mbprox::objective::Evaluator;
 use mbprox::theory::{self, ProblemConsts};
 use mbprox::util::benchkit;
 use mbprox::util::prng::Prng;
@@ -86,18 +83,7 @@ fn run(
             )) as Box<dyn SampleStream>
         })
         .collect();
-    let evaluator = Evaluator::new(&mut runner.engine, d, Loss::Logistic, eval).unwrap();
-    let mut ctx = RunContext {
-        engine: &mut runner.engine,
-        shards: runner.shards.as_ref(),
-        net: Network::new(m, NetModel::default()),
-        meter: ClusterMeter::new(m),
-        loss: Loss::Logistic,
-        d,
-        streams,
-        evaluator: Some(evaluator),
-        eval_every: 0,
-    };
+    let mut ctx = runner.context_over(Loss::Logistic, d, streams, eval, 0).unwrap();
     let r = method.run(&mut ctx).expect("run failed");
     (r.final_objective.unwrap_or(f64::NAN), r.report.comm_rounds)
 }

@@ -26,6 +26,9 @@ fn main() {
     runner.engine.warmup_all().expect("warmup");
     let engine = &mut runner.engine;
     let mut report = JsonReport::new();
+    // the process-level plane policy, recorded so cross-PR comparisons
+    // know which plane the tagged scenarios resolved to
+    report.note("plane.policy", runner.plane.as_str());
 
     section("engine dispatch latency (interpret-mode Pallas on CPU PJRT)");
     for (loss, d) in [(Loss::Squared, 64usize), (Loss::Squared, 128), (Loss::Logistic, 64)] {
@@ -188,7 +191,7 @@ fn main() {
         });
         let chained_total = DeviceTraffic::from_stats(&engine.stats).since(&t2);
         println!("{}", s_chain.report());
-        report.push(&s_chain);
+        report.push_on(&s_chain, "chained");
         let per_round_down = chained_total.download_bytes as f64 / rounds;
         println!("{}", chained_total.row("chained rounds (total)"));
         println!(
@@ -218,7 +221,7 @@ fn main() {
         });
         let sync_total = DeviceTraffic::from_stats(&engine.stats).since(&t3);
         println!("{}", s_sync.report());
-        report.push(&s_sync);
+        report.push_on(&s_sync, "host");
         report.counter(
             "round.sync.downlink_bytes_per_round",
             sync_total.download_bytes as f64 / rounds,
@@ -264,6 +267,7 @@ fn main() {
         use mbprox::algos::solvers::dsvrg::DsvrgSolver;
         use mbprox::algos::{Method, RunContext};
         use mbprox::objective::Evaluator;
+        use mbprox::runtime::ExecPlane;
 
         let root = SynthStream::new(SynthSpec::least_squares(64), 3);
         let mut eval_stream = root.fork_stream(99);
@@ -272,11 +276,11 @@ fn main() {
             let streams: Vec<Box<dyn SampleStream>> = (0..4)
                 .map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>)
                 .collect();
+            let mut plane = ExecPlane::chained(&mut *engine);
             let evaluator =
-                Evaluator::new(engine, 64, Loss::Squared, &eval_samples).unwrap();
+                Evaluator::new(&mut plane, 64, Loss::Squared, &eval_samples, 4).unwrap();
             let mut ctx = RunContext {
-                engine: &mut *engine,
-                shards: None,
+                plane,
                 net: Network::new(4, NetModel::default()),
                 meter: ClusterMeter::new(4),
                 loss: Loss::Squared,
@@ -290,7 +294,7 @@ fn main() {
             method.run(&mut ctx).unwrap();
         });
         println!("{}", s.report());
-        report.push(&s);
+        report.push_on(&s, "chained");
     }
 
     section("chained all-reduce: m sweep beyond the redm{2,4,8} artifact set");
@@ -370,7 +374,7 @@ fn main() {
             eval_samples: 256,
             eval_every: 0,
             loss: Loss::Squared,
-            dataset: None,
+            ..ExperimentConfig::default()
         };
         let run_once = |r: &mut Runner| {
             let mut ctx = r.context(&cfg).unwrap();
@@ -396,12 +400,12 @@ fn main() {
             run_once(&mut r1);
         });
         println!("{}", s1.report());
-        report.push(&s1);
+        report.push_on(&s1, "sharded");
         let sn = bench(&format!("mp-dsvrg run (m=8, shards={n_shards})"), 1, 5, || {
             run_once(&mut rn);
         });
         println!("{}", sn.report());
-        report.push(&sn);
+        report.push_on(&sn, "sharded");
 
         let speedup = s1.median_ns / sn.median_ns.max(1.0);
         println!("  -> shard-plane speedup at {n_shards} workers: {speedup:.2}x");

@@ -6,15 +6,12 @@
 //! convention (B = 1) so both regimes are reachable at bench scale; the
 //! data-scale plans are exercised by the coordinator tests.
 
-use mbprox::accounting::ClusterMeter;
 use mbprox::algos::mbprox::MinibatchProx;
 use mbprox::algos::solvers::dane::DaneSolver;
-use mbprox::algos::{Method, RunContext};
-use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::algos::Method;
 use mbprox::coordinator::Runner;
 use mbprox::data::synth::{SynthSpec, SynthStream};
 use mbprox::data::{Loss, SampleStream};
-use mbprox::objective::Evaluator;
 use mbprox::theory::{self, ProblemConsts};
 use mbprox::util::benchkit;
 
@@ -58,18 +55,8 @@ fn main() {
             .collect();
         let mut eval_stream = root.fork_stream(999);
         let eval_samples = eval_stream.draw_many(2048);
-        let evaluator = Evaluator::new(&mut runner.engine, dim, Loss::Squared, &eval_samples).unwrap();
-        let mut ctx = RunContext {
-            engine: &mut runner.engine,
-            shards: runner.shards.as_ref(),
-            net: Network::new(m, NetModel::default()),
-            meter: ClusterMeter::new(m),
-            loss: Loss::Squared,
-            d: dim,
-            streams,
-            evaluator: Some(evaluator),
-            eval_every: 0,
-        };
+        let mut ctx =
+            runner.context_over(Loss::Squared, dim, streams, &eval_samples, 0).unwrap();
         match method.run(&mut ctx) {
             Ok(r) => println!(
                 "{:<26} {:>8} {:>12} {:>12} {:>10} {:>12}",

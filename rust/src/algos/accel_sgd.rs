@@ -15,7 +15,6 @@
 
 use super::{Method, Recorder, RunContext, RunResult};
 use crate::linalg::WeightedAvg;
-use crate::objective::distributed_mean_grad;
 use anyhow::Result;
 
 pub struct AccelMinibatchSgd {
@@ -45,15 +44,7 @@ impl Method for AccelMinibatchSgd {
             let y: Vec<f32> =
                 (0..d).map(|j| w[j] + mom * (w[j] - w_prev[j])).collect();
             let batches = ctx.draw_batches_grad_only(self.b_local, false)?;
-            let (g, _, _) = distributed_mean_grad(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                &batches,
-                &y,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
+            let (g, _, _) = ctx.mean_grad_loss(&batches, &y)?;
             drop(batches);
             w_prev = std::mem::replace(
                 &mut w,

@@ -1,16 +1,16 @@
-//! DANE on the regularized ERM objective (Shamir, Srebro & Zhang 2014).
+//! DANE on the regularized ERM objective (Shamir, Srebro & Zhang 2014),
+//! written against the execution plane.
 //!
 //! Each round: all-reduce the full gradient (1 round), every machine
-//! solves its local corrected objective with SVRG sweeps over its shard,
+//! solves its local corrected objective with VR sweeps over its shard,
 //! all-reduce the local solutions (1 round). Table 1 row: O(B^2 m) rounds
 //! for quadratics, n/m memory. Reuses the same mu = global-gradient
-//! identity as the minibatch DANE solver (see solvers/dane.rs).
+//! identity as the minibatch DANE solver (see solvers/dane.rs) — and the
+//! same plane verb for the local solves, so the two cannot drift.
 
-use crate::algos::solvers::{vr_sweep_machine, LocalSolver};
+use crate::algos::solvers::{Lane, LocalSolver};
 use crate::algos::{Method, Recorder, RunContext, RunResult};
-use crate::objective::fan_machines;
 use anyhow::Result;
-use std::sync::Arc;
 
 use super::ErmProblem;
 
@@ -18,7 +18,7 @@ pub struct DaneErm {
     pub n_total: usize,
     pub nu: f64,
     pub rounds: usize,
-    /// local SVRG sweeps per round
+    /// local VR sweeps per round (multi-pass re-snapshots, Host lane only)
     pub local_passes: usize,
     pub eta: f64,
 }
@@ -33,49 +33,35 @@ impl Method for DaneErm {
         let prob = ErmProblem::draw(ctx, self.n_total, self.nu)?;
         let d = ctx.d;
         let zero = vec![0.0f32; d];
+        let lane = if self.local_passes > 1 {
+            Lane::Host
+        } else {
+            ctx.plane.vr_lane(ctx.loss, ctx.d)
+        };
         let mut z = vec![0.0f32; d];
         for k in 0..self.rounds {
+            // full regularized gradient at z — 1 comm round (host path)
             let g = prob.full_grad(ctx, &z)?;
             let mut g_smooth = g.clone();
             crate::linalg::axpy(-(self.nu as f32), &z, &mut g_smooth);
-            // every machine's local solve fans to its owning shard (or
-            // runs inline on the sequential plane)
-            let loss = ctx.loss;
-            let passes = self.local_passes.max(1);
-            let (nu32, eta32) = (self.nu as f32, self.eta as f32);
-            let z_s: Arc<[f32]> = Arc::from(&z[..]);
-            let g_s: Arc<[f32]> = Arc::from(&g_smooth[..]);
-            let zero_s: Arc<[f32]> = Arc::from(&zero[..]);
-            let mut locals: Vec<Vec<f32>> = fan_machines(
-                ctx.engine,
-                ctx.shards,
+            // every machine's local solve fans to its plane home (shard or
+            // coordinator engine) through the shared DANE-local verb
+            let z_pv = ctx.plane.lift(lane, &z)?;
+            let g_pv = ctx.plane.lift(lane, &g_smooth)?;
+            let locals = ctx.local_sweep_all(
+                lane,
+                LocalSolver::Svrg,
                 &prob.shards,
-                &mut ctx.meter,
-                move |eng, shard, _i, meter| {
-                    let mut xi = z_s.to_vec();
-                    for _pass in 0..passes {
-                        let blocks = 0..shard.n_blocks();
-                        let (_xe, xa) = vr_sweep_machine(
-                            eng,
-                            loss,
-                            LocalSolver::Svrg,
-                            blocks,
-                            shard,
-                            &xi,
-                            &z_s,
-                            &g_s,
-                            &zero_s,
-                            nu32,
-                            eta32,
-                            meter,
-                        )?;
-                        xi = xa;
-                    }
-                    Ok(xi)
-                },
+                &z,
+                &z_pv,
+                &g_pv,
+                &zero,
+                self.nu as f32,
+                self.eta as f32,
+                self.local_passes.max(1),
             )?;
-            ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
-            z = locals.pop().unwrap();
+            let z_red = ctx.all_reduce_avg_pv(locals)?;
+            z = ctx.plane.into_host(z_red)?;
             if let Some(obj) = ctx.maybe_eval(k + 1, &z)? {
                 rec.point(ctx, k + 1, Some(obj));
             }

@@ -1,5 +1,6 @@
 //! DiSCO-style distributed inexact (damped) Newton on the regularized ERM
-//! objective (Zhang & Lin 2015), squared loss only.
+//! objective (Zhang & Lin 2015), squared loss only — written ONCE against
+//! the execution plane.
 //!
 //! Each Newton iteration solves `(H + nu I) v = grad` by *distributed
 //! preconditioner-free CG*: every CG iteration applies the Hessian-vector
@@ -8,20 +9,16 @@
 //! `B^{1/2} m^{1/4}` round count comes from. The update is the damped step
 //! `w <- w - v / (1 + delta)` with the Newton decrement damping.
 //!
-//! With the chained artifacts present the Newton state (`w`, `g`, `v`,
-//! CG residuals) stays on device: the Hessian-vector product is the
-//! `nacc{K}` chain + DeviceCollective reduce, and only `vdot` scalars
-//! cross to the host per CG step. `w` materializes at evaluation
-//! checkpoints and at the end of the run — the same places the host path
-//! reads it.
+//! On the Dev lane the Newton state (`w`, `g`, `v`, CG residuals) stays
+//! on device: the Hessian-vector product is the `nacc{K}` chain +
+//! DeviceCollective reduce, and only `vdot` scalars cross to the host per
+//! CG step. `w` materializes at evaluation checkpoints and at the end of
+//! the run — the same places the Host lane reads it.
 
-use crate::algos::solvers::exact_cg::{
-    chained_cg, distributed_normal_matvec, distributed_normal_matvec_dev, host_cg,
-};
+use crate::algos::solvers::exact_cg::{normal_matvec_pv, plane_cg};
 use crate::algos::{Method, Recorder, RunContext, RunResult};
 use crate::data::Loss;
-use crate::linalg;
-use crate::runtime::DeviceVec;
+use crate::runtime::PlaneVec;
 use anyhow::{bail, Result};
 
 use super::ErmProblem;
@@ -32,80 +29,6 @@ pub struct Disco {
     pub newton_iters: usize,
     pub cg_tol: f64,
     pub cg_max: usize,
-}
-
-impl Disco {
-    fn chain_ready(&self, ctx: &RunContext) -> bool {
-        ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
-            && ctx.engine.chain_nm_ready(ctx.d)
-            && ctx.engine.red_ready(ctx.m(), ctx.d)
-    }
-
-    fn run_legacy(
-        &mut self,
-        ctx: &mut RunContext,
-        prob: &ErmProblem,
-        rec: &mut Recorder,
-    ) -> Result<Vec<f32>> {
-        let d = ctx.d;
-        let mut w = vec![0.0f32; d];
-        for it in 0..self.newton_iters {
-            let g = prob.full_grad(ctx, &w)?; // 1 round
-            // distributed CG on (H + nu I) v = g — the shared driver;
-            // 1 comm round per CG iteration through the hvp matvec
-            let v = host_cg(
-                ctx,
-                |ctx, p| hvp(ctx, prob, p),
-                &g,
-                vec![0.0f32; d],
-                self.cg_tol,
-                self.cg_max,
-            )?;
-            // damped Newton step: delta = sqrt(v^T (H+nu) v)
-            let hv_final = hvp(ctx, prob, &v)?;
-            let delta = linalg::dot(&v, &hv_final).max(0.0).sqrt();
-            let damp = (1.0 / (1.0 + delta)) as f32;
-            linalg::axpy(-damp, &v, &mut w);
-            ctx.meter.all_vec_ops(1);
-            if let Some(obj) = ctx.maybe_eval(it + 1, &w)? {
-                rec.point(ctx, it + 1, Some(obj));
-            }
-        }
-        Ok(w)
-    }
-
-    fn run_chained(
-        &mut self,
-        ctx: &mut RunContext,
-        prob: &ErmProblem,
-        rec: &mut Recorder,
-    ) -> Result<Vec<f32>> {
-        let mut w = ctx.engine.zeros_dev(ctx.d)?;
-        for it in 0..self.newton_iters {
-            let g = prob.full_grad_dev(ctx, &w)?; // 1 round
-            let x0 = ctx.engine.zeros_dev(ctx.d)?;
-            let v = chained_cg(
-                ctx,
-                |ctx, p| hvp_dev(ctx, prob, p),
-                &g,
-                x0,
-                self.cg_tol,
-                self.cg_max,
-            )?;
-            let hv_final = hvp_dev(ctx, prob, &v)?;
-            let delta = ctx.engine.vec_dot(&v, &hv_final)?.max(0.0).sqrt();
-            let damp = (1.0 / (1.0 + delta)) as f32;
-            w = ctx.engine.vec_axpby(1.0, &w, -damp, &v)?;
-            ctx.meter.all_vec_ops(1);
-            // evaluation checkpoint: the same policy as the legacy path,
-            // read THROUGH the device iterate (aliased, no materialization)
-            if let Some(obj) = ctx.maybe_eval_dev(it + 1, &w)? {
-                rec.point(ctx, it + 1, Some(obj));
-            }
-        }
-        // the run boundary: materialize the final iterate once
-        ctx.engine.materialize(&w)
-    }
 }
 
 impl Method for Disco {
@@ -119,25 +42,43 @@ impl Method for Disco {
         }
         let mut rec = Recorder::new(self.name());
         let prob = ErmProblem::draw_grad_only(ctx, self.n_total, self.nu)?;
-        let w = if self.chain_ready(ctx) {
-            self.run_chained(ctx, &prob, &mut rec)?
-        } else {
-            self.run_legacy(ctx, &prob, &mut rec)?
-        };
+        let lane = ctx.plane.cg_lane(ctx.loss, ctx.d, ctx.m());
+        let mut w = ctx.plane.zeros(lane, ctx.d)?;
+        for it in 0..self.newton_iters {
+            let g = prob.full_grad_pv(ctx, lane, &w)?; // 1 round
+            // distributed CG on (H + nu I) v = g — the shared driver;
+            // 1 comm round per CG iteration through the hvp matvec
+            let x0 = ctx.plane.zeros(lane, ctx.d)?;
+            let v = plane_cg(
+                ctx,
+                |ctx, p| hvp(ctx, &prob, p),
+                &g,
+                x0,
+                self.cg_tol,
+                self.cg_max,
+            )?;
+            // damped Newton step: delta = sqrt(v^T (H+nu) v)
+            let hv_final = hvp(ctx, &prob, &v)?;
+            let delta = ctx.plane.dot(&v, &hv_final)?.max(0.0).sqrt();
+            let damp = (1.0 / (1.0 + delta)) as f32;
+            w = ctx.plane.axpby(1.0, &w, -damp, &v)?;
+            ctx.meter.all_vec_ops(1);
+            // evaluation checkpoint: read through the plane iterate (the
+            // Dev lane aliases the handle — no materialization)
+            if let Some(obj) = ctx.maybe_eval_pv(it + 1, &w)? {
+                rec.point(ctx, it + 1, Some(obj));
+            }
+        }
+        // the run boundary: materialize the final iterate once
+        let w_host = ctx.plane.into_host(w)?;
         prob.release(ctx);
-        rec.finish(ctx, w)
+        rec.finish(ctx, w_host)
     }
 }
 
 /// Distributed regularized Hessian-vector product (1 comm round): the
 /// same operator as the exact-CG prox system with `gamma = nu` — one
 /// implementation, two callers, no drift.
-fn hvp(ctx: &mut RunContext, prob: &ErmProblem, v: &[f32]) -> Result<Vec<f32>> {
-    distributed_normal_matvec(ctx, &prob.shards, v, prob.nu)
-}
-
-/// Device-chained [`hvp`]: `nacc{K}` chains + DeviceCollective reduce,
-/// identical accounting, zero downloads.
-fn hvp_dev(ctx: &mut RunContext, prob: &ErmProblem, v: &DeviceVec) -> Result<DeviceVec> {
-    distributed_normal_matvec_dev(ctx, &prob.shards, v, prob.nu)
+fn hvp(ctx: &mut RunContext, prob: &ErmProblem, v: &PlaneVec) -> Result<PlaneVec> {
+    normal_matvec_pv(ctx, &prob.shards, v, prob.nu)
 }

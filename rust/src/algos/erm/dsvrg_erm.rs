@@ -1,5 +1,5 @@
 //! DSVRG on the regularized ERM objective (Section 2; Lee et al. 2015,
-//! Shamir 2016).
+//! Shamir 2016), written against the execution plane.
 //!
 //! Outer epoch k: all machines all-reduce the full regularized gradient at
 //! the snapshot z (1 round); a single designated machine then performs one
@@ -8,8 +8,14 @@
 //! n/m >= condition number (n >= m^2 regime, see the paper), O(log 1/eps)
 //! epochs reach eps on both the empirical and stochastic objectives —
 //! giving the Table-1 row: O(1)~log communication, n/m memory.
+//!
+//! The designated sweep rides the plane's VR lane: per-block host kernels
+//! on the Host lane, `[2, d]`-state chains over the fused groups on the
+//! chained lanes (on the owning shard when the problem shards are
+//! shard-resident). The full gradient stays on the host tupled path — the
+//! epoch gradient is read once per round, so chaining it buys nothing.
 
-use crate::algos::solvers::{vr_sweep_on, LocalSolver};
+use crate::algos::solvers::LocalSolver;
 use crate::algos::{Method, Recorder, RunContext, RunResult};
 use anyhow::Result;
 
@@ -33,40 +39,37 @@ impl Method for DsvrgErm {
         let prob = ErmProblem::draw(ctx, self.n_total, self.nu)?;
         let m = prob.shards.len();
         let d = ctx.d;
+        let lane = ctx.plane.vr_lane(ctx.loss, ctx.d);
+        let zero = vec![0.0f32; d];
+        // p = 1: each designated pass sweeps the machine's WHOLE shard.
+        // The svrg kernel's quadratic term gamma (x - center) realizes
+        // the nu/2 ||w||^2 regularizer with gamma = nu, center = 0.
+        let mut sweeper = ctx.plane.vr_sweeper(
+            lane,
+            &prob.shards,
+            1,
+            LocalSolver::Svrg,
+            &zero,
+            &zero,
+            self.nu as f32,
+            self.eta as f32,
+        )?;
         let mut z = vec![0.0f32; d];
-        let mut x = vec![0.0f32; d];
         for k in 0..self.epochs {
             // full regularized gradient at the snapshot — 1 comm round
             let mu = prob.full_grad(ctx, &z)?;
-            // designated machine sweeps its local shard once.
-            // The svrg kernel's quadratic term gamma (x - center) realizes
-            // the nu/2 ||w||^2 regularizer with gamma = nu, center = 0, so
-            // mu must be the *unregularized* smooth gradient: subtract nu z.
+            // mu must be the *unregularized* smooth gradient (the kernel
+            // adds the quadratic term itself): subtract nu z.
             let mut mu_smooth = mu.clone();
             crate::linalg::axpy(-(self.nu as f32), &z, &mut mu_smooth);
             let j = k % m;
-            let zero = vec![0.0f32; d];
-            let blocks = 0..prob.shards[j].n_blocks();
-            // the designated sweep runs on machine j's shard when the
-            // problem shards are shard-plane-resident
-            let (x_end, x_avg) = vr_sweep_on(
-                ctx,
-                LocalSolver::Svrg,
-                blocks,
-                &prob.shards,
-                j,
-                &x,
-                &z,
-                &mu_smooth,
-                &zero,
-                self.nu as f32,
-                self.eta as f32,
-            )?;
-            x = x_end;
-            z = x_avg;
+            // the designated sweep runs on machine j's plane home
+            let z_pv = ctx.plane.lift(lane, &z)?;
+            let mu_pv = ctx.plane.lift(lane, &mu_smooth)?;
+            let z_new = ctx.vr_sweep(&mut sweeper, &prob.shards, j, 0, &z_pv, &mu_pv)?;
             // broadcast the new iterate — 1 comm round
-            let mut locals: Vec<Vec<f32>> = (0..m).map(|_| z.clone()).collect();
-            ctx.net.broadcast(&mut ctx.meter, j, &mut locals);
+            let z_bc = ctx.broadcast_pv(j, z_new);
+            z = ctx.plane.into_host(z_bc)?;
             if let Some(obj) = ctx.maybe_eval(k + 1, &z)? {
                 rec.point(ctx, k + 1, Some(obj));
             }

@@ -11,7 +11,9 @@
 //!
 //! Shared setup lives here; the individual optimizers are DSVRG-on-ERM
 //! (Lee et al. 2015), DANE (Shamir et al. 2014), distributed accelerated
-//! GD, and a DiSCO-style distributed inexact Newton.
+//! GD, and a DiSCO-style distributed inexact Newton. Like the minibatch
+//! solvers, each optimizer has one body programmed against the execution
+//! plane.
 
 pub mod agd;
 pub mod dane_erm;
@@ -20,6 +22,7 @@ pub mod dsvrg_erm;
 
 use super::RunContext;
 use crate::objective::MachineBatch;
+use crate::runtime::plane::{Lane, PlaneVec};
 use anyhow::Result;
 
 /// The fixed training set, sharded: machine i owns `shards[i]`.
@@ -54,39 +57,27 @@ impl ErmProblem {
         ctx.release_batches(&self.shards);
     }
 
-    /// Regularized full gradient: one all-reduce round.
+    /// Regularized full gradient: one all-reduce round (the host tupled
+    /// dispatch path — the gradient-only baselines read it on every
+    /// plane).
     pub fn full_grad(&self, ctx: &mut RunContext, w: &[f32]) -> Result<Vec<f32>> {
-        let (mut g, _, _) = crate::objective::distributed_mean_grad(
-            ctx.engine,
-            ctx.shards,
-            ctx.loss,
-            &self.shards,
-            w,
-            &mut ctx.net,
-            &mut ctx.meter,
-        )?;
+        let (mut g, _, _) = ctx.mean_grad_loss(&self.shards, w)?;
         crate::linalg::axpy(self.nu as f32, w, &mut g);
         ctx.meter.all_vec_ops(1);
         Ok(g)
     }
 
-    /// Device-chained [`ErmProblem::full_grad`]: identical accounting,
-    /// the gradient never visits the host.
-    pub fn full_grad_dev(
+    /// [`ErmProblem::full_grad`] on an explicit lane over plane vectors
+    /// (DiSCO's Newton gradient): identical accounting, and on the Dev
+    /// lane the gradient never visits the host.
+    pub fn full_grad_pv(
         &self,
         ctx: &mut RunContext,
-        w: &crate::runtime::DeviceVec,
-    ) -> Result<crate::runtime::DeviceVec> {
-        let g = crate::objective::distributed_mean_grad_dev(
-            ctx.engine,
-            ctx.shards,
-            ctx.loss,
-            &self.shards,
-            w,
-            &mut ctx.net,
-            &mut ctx.meter,
-        )?;
-        let out = ctx.engine.vec_axpby(1.0, &g, self.nu as f32, w)?;
+        lane: Lane,
+        w: &PlaneVec,
+    ) -> Result<PlaneVec> {
+        let g = ctx.mean_grad_pv(lane, &self.shards, w)?;
+        let out = ctx.plane.axpby(1.0, &g, self.nu as f32, w)?;
         ctx.meter.all_vec_ops(1);
         Ok(out)
     }

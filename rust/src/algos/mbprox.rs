@@ -50,18 +50,13 @@ impl<S: ProxSolver> Method for MinibatchProx<S> {
             ctx.meter.machine(i).hold(2);
         }
         for t in 1..=self.t_outer {
-            // fresh minibatch, held in memory for the inner solve; host
-            // block copies are only retained when the solver sweeps
-            // through the legacy per-block path (chained group-aligned
-            // sweeps ride the fused device groups instead, packed so no
-            // group straddles the solver's batch partition)
-            let batches = if let Some(p) = self.solver.vr_group_align(ctx) {
-                ctx.draw_batches_vr_aligned(self.b_local, true, p)?
-            } else if self.solver.needs_vr_blocks(ctx) {
-                ctx.draw_batches(self.b_local, true)?
-            } else {
-                ctx.draw_batches_grad_only(self.b_local, true)?
-            };
+            // fresh minibatch, held in memory for the inner solve, packed
+            // the way the solver's lane wants it (host blocks retained for
+            // Host-lane per-block sweeps; fused groups — aligned so none
+            // straddles the solver's batch partition — for chained sweeps;
+            // grad-only for dispatch-verb solvers)
+            let mode = self.solver.pack_mode(ctx);
+            let batches = ctx.draw_batches_mode(self.b_local, true, mode)?;
             let w_new = self.solver.solve(ctx, &batches, &w, self.gamma, t)?;
             ctx.release_batches(&batches);
             drop(batches);

@@ -8,7 +8,6 @@
 
 use super::{Method, Recorder, RunContext, RunResult};
 use crate::linalg::{self, WeightedAvg};
-use crate::objective::distributed_mean_grad;
 use anyhow::Result;
 
 pub struct MinibatchSgd {
@@ -37,15 +36,7 @@ impl Method for MinibatchSgd {
             // streaming batch: packed, used once, dropped (no hold charge);
             // grad-only: no host block retention
             let batches = ctx.draw_batches_grad_only(self.b_local, false)?;
-            let (g, _, _) = distributed_mean_grad(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                &batches,
-                &w,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
+            let (g, _, _) = ctx.mean_grad_loss(&batches, &w)?;
             drop(batches);
             linalg::axpy(-step, &g, &mut w);
             ctx.meter.all_vec_ops(1);

@@ -2,10 +2,13 @@
 //! solvers (DSVRG / DANE / exact-CG / one-shot averaging), and every
 //! baseline from Table 1.
 //!
-//! All methods implement [`Method`] over a shared [`RunContext`] that owns
-//! the engine handle, the simulated network, per-machine meters, the
-//! per-machine sample streams and the held-out evaluator. Resource
-//! accounting conventions are in `accounting` / `objective`.
+//! All methods implement [`Method`] over a shared [`RunContext`] that
+//! owns ONE [`ExecPlane`] (engine access + fan/join + collectives + VR
+//! sweeps + materialization points — see `runtime::plane`), the simulated
+//! network, per-machine meters, the per-machine sample streams and the
+//! held-out evaluator. Solvers are written once against the plane verbs;
+//! which plane executes them is runtime policy, not algorithm code.
+//! Resource accounting conventions are in `accounting` / `objective`.
 
 pub mod accel_sgd;
 pub mod erm;
@@ -17,14 +20,17 @@ pub mod solvers;
 use crate::accounting::{ClusterMeter, ResourceReport};
 use crate::comm::Network;
 use crate::data::{Loss, SampleStream};
-use crate::objective::{Evaluator, MachineBatch};
-use crate::runtime::{Engine, ShardPool};
+use crate::objective::{self, Evaluator, MachineBatch};
+use crate::runtime::plane::{
+    ExecPlane, Lane, LocalSolver, PlaneLocals, PlaneVec, VrSweeper,
+};
 use anyhow::Result;
 
 /// How a drawn batch is packed for the engine (see `MachineBatch`).
-#[derive(Clone, Copy, Debug)]
-enum PackMode {
-    /// fused groups + host blocks retained for legacy per-block sweeps
+/// Solvers pick a mode per plane via [`solvers::ProxSolver::pack_mode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackMode {
+    /// fused groups + host blocks retained for Host-lane per-block sweeps
     Full,
     /// fused groups only (grad/normal-matvec consumers)
     GradOnly,
@@ -32,14 +38,12 @@ enum PackMode {
     VrAligned(usize),
 }
 
-/// Everything a method needs to run: engine, simulated cluster fabric,
-/// per-machine streams, and the evaluation hook.
+/// Everything a method needs to run: the execution plane, simulated
+/// cluster fabric, per-machine streams, and the evaluation hook.
 pub struct RunContext<'e> {
-    pub engine: &'e mut Engine,
-    /// the shard plane (engine-per-worker machine parallelism); `None`
-    /// drives every machine sequentially on the coordinator engine. Both
-    /// planes produce bit-identical results (see `runtime::shard`).
-    pub shards: Option<&'e ShardPool>,
+    /// THE execution plane (host | chained | sharded) every engine access
+    /// goes through; selection is coordinator policy (`plane=` / `PLANE`)
+    pub plane: ExecPlane<'e>,
     pub net: Network,
     pub meter: ClusterMeter,
     pub loss: Loss,
@@ -60,7 +64,7 @@ impl<'e> RunContext<'e> {
     /// charging samples (and memory if `hold`). Batches support the full
     /// engine surface including VR sweeps.
     pub fn draw_batches(&mut self, b_local: usize, hold: bool) -> Result<Vec<MachineBatch>> {
-        self.draw_batches_opts(b_local, hold, PackMode::Full)
+        self.draw_batches_mode(b_local, hold, PackMode::Full)
     }
 
     /// Like [`RunContext::draw_batches`] for methods that only take the
@@ -71,12 +75,12 @@ impl<'e> RunContext<'e> {
         b_local: usize,
         hold: bool,
     ) -> Result<Vec<MachineBatch>> {
-        self.draw_batches_opts(b_local, hold, PackMode::GradOnly)
+        self.draw_batches_mode(b_local, hold, PackMode::GradOnly)
     }
 
     /// Draw batches whose fused groups are aligned to a p-way block
     /// partition ([`MachineBatch::pack_vr_aligned`]): chained VR sweeps
-    /// over `group_ranges(p)` then touch exactly the blocks the legacy
+    /// over `group_ranges(p)` then touch exactly the blocks the Host-lane
     /// per-block partition would. No host blocks are retained.
     pub fn draw_batches_vr_aligned(
         &mut self,
@@ -84,17 +88,19 @@ impl<'e> RunContext<'e> {
         hold: bool,
         p: usize,
     ) -> Result<Vec<MachineBatch>> {
-        self.draw_batches_opts(b_local, hold, PackMode::VrAligned(p))
+        self.draw_batches_mode(b_local, hold, PackMode::VrAligned(p))
     }
 
-    fn draw_batches_opts(
+    /// Draw with an explicit [`PackMode`] (the outer loops pass the
+    /// solver's [`solvers::ProxSolver::pack_mode`] verdict through here).
+    pub fn draw_batches_mode(
         &mut self,
         b_local: usize,
         hold: bool,
         mode: PackMode,
     ) -> Result<Vec<MachineBatch>> {
         let d = self.d;
-        if let Some(pool) = self.shards {
+        if let Some(pool) = self.plane.shards {
             return self.draw_batches_sharded(pool, b_local, hold, mode);
         }
         let mut out = Vec::with_capacity(self.streams.len());
@@ -108,12 +114,11 @@ impl<'e> RunContext<'e> {
             if hold {
                 meter.hold(drawn);
             }
+            let engine = &mut *self.plane.engine;
             let mut batch = match mode {
-                PackMode::Full => MachineBatch::pack(self.engine, d, &samples)?,
-                PackMode::GradOnly => MachineBatch::pack_grad_only(self.engine, d, &samples)?,
-                PackMode::VrAligned(p) => {
-                    MachineBatch::pack_vr_aligned(self.engine, d, &samples, p)?
-                }
+                PackMode::Full => MachineBatch::pack(engine, d, &samples)?,
+                PackMode::GradOnly => MachineBatch::pack_grad_only(engine, d, &samples)?,
+                PackMode::VrAligned(p) => MachineBatch::pack_vr_aligned(engine, d, &samples, p)?,
             };
             batch.held = if hold { drawn } else { 0 };
             out.push(batch);
@@ -129,7 +134,7 @@ impl<'e> RunContext<'e> {
     /// sequential draw.
     fn draw_batches_sharded(
         &mut self,
-        pool: &ShardPool,
+        pool: &crate::runtime::ShardPool,
         b_local: usize,
         hold: bool,
         mode: PackMode,
@@ -181,6 +186,95 @@ impl<'e> RunContext<'e> {
         }
     }
 
+    // ---- plane verbs, with the context's net/meter/loss threaded in ----
+
+    /// Distributed mean gradient at `z` on `lane` — one all-reduce round
+    /// (see [`ExecPlane::mean_grad`]).
+    pub fn mean_grad_pv(
+        &mut self,
+        lane: Lane,
+        batches: &[MachineBatch],
+        z: &PlaneVec,
+    ) -> Result<PlaneVec> {
+        self.plane.mean_grad(lane, &mut self.net, &mut self.meter, self.loss, batches, z)
+    }
+
+    /// Host-level distributed mean gradient with the mean loss and total
+    /// count — the O(1)-memory SGD baselines read gradient AND loss on
+    /// every plane through the tupled dispatch path.
+    pub fn mean_grad_loss(
+        &mut self,
+        batches: &[MachineBatch],
+        w: &[f32],
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        objective::distributed_mean_grad(
+            self.plane.engine,
+            self.plane.shards,
+            self.loss,
+            batches,
+            w,
+            &mut self.net,
+            &mut self.meter,
+        )
+    }
+
+    /// Average per-machine locals — one round ([`ExecPlane::all_reduce_avg`]).
+    pub fn all_reduce_avg_pv(&mut self, locals: PlaneLocals) -> Result<PlaneVec> {
+        self.plane.all_reduce_avg(&mut self.net, &mut self.meter, locals)
+    }
+
+    /// Broadcast machine `src`'s value — one round ([`ExecPlane::broadcast`]).
+    pub fn broadcast_pv(&mut self, src: usize, v: PlaneVec) -> PlaneVec {
+        self.plane.broadcast(&mut self.net, &mut self.meter, src, v)
+    }
+
+    /// Advance a designated-machine sweep session ([`VrSweeper::sweep`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn vr_sweep(
+        &mut self,
+        sweeper: &mut VrSweeper,
+        batches: &[MachineBatch],
+        j: usize,
+        s: usize,
+        z: &PlaneVec,
+        mu: &PlaneVec,
+    ) -> Result<PlaneVec> {
+        sweeper.sweep(&mut self.plane, &mut self.meter, self.loss, batches, j, s, z, mu)
+    }
+
+    /// Per-machine DANE-style local solves ([`ExecPlane::local_sweep_all`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_sweep_all(
+        &mut self,
+        lane: Lane,
+        kernel: LocalSolver,
+        batches: &[MachineBatch],
+        z_host: &[f32],
+        z: &PlaneVec,
+        mu: &PlaneVec,
+        center: &[f32],
+        gamma: f32,
+        eta: f32,
+        passes: usize,
+    ) -> Result<PlaneLocals> {
+        self.plane.local_sweep_all(
+            lane,
+            &mut self.meter,
+            self.loss,
+            kernel,
+            batches,
+            z_host,
+            z,
+            mu,
+            center,
+            gamma,
+            eta,
+            passes,
+        )
+    }
+
+    // ---- evaluation ----------------------------------------------------
+
     /// Whether outer iteration `t` is an evaluation checkpoint. Public so
     /// methods can skip building their evaluation iterate (e.g. the
     /// running average's d-length mean) on the iterations that will not
@@ -196,26 +290,23 @@ impl<'e> RunContext<'e> {
         self.eval_now(w)
     }
 
-    /// [`RunContext::maybe_eval`] at a device-resident iterate: the same
-    /// checkpoint policy, evaluated through the session-alias path so the
-    /// iterate is never materialized for the checkpoint.
-    pub fn maybe_eval_dev(
-        &mut self,
-        t: usize,
-        w: &crate::runtime::DeviceVec,
-    ) -> Result<Option<f64>> {
+    /// [`RunContext::maybe_eval`] at a plane-resident iterate: the same
+    /// checkpoint policy, evaluated through the session-alias path on the
+    /// chained plane so the iterate is never materialized for the
+    /// checkpoint.
+    pub fn maybe_eval_pv(&mut self, t: usize, w: &PlaneVec) -> Result<Option<f64>> {
         if !self.eval_due(t) {
             return Ok(None);
         }
         match &self.evaluator {
-            Some(ev) => Ok(Some(ev.objective_dev(self.engine, w)?)),
+            Some(ev) => Ok(Some(ev.objective_pv(&mut self.plane, w)?)),
             None => Ok(None),
         }
     }
 
     pub fn eval_now(&mut self, w: &[f32]) -> Result<Option<f64>> {
         match &self.evaluator {
-            Some(ev) => Ok(Some(ev.objective(self.engine, w)?)),
+            Some(ev) => Ok(Some(ev.objective(&mut self.plane, w)?)),
             None => Ok(None),
         }
     }
@@ -285,8 +376,9 @@ impl Recorder {
 #[cfg(test)]
 mod tests {
     // RunContext/Recorder behaviour is exercised end-to-end by the
-    // integration tests (rust/tests/algo_integration.rs); unit coverage
-    // here focuses on the pure helpers.
+    // integration tests (rust/tests/algo_integration.rs and
+    // rust/tests/plane_matrix.rs); unit coverage here focuses on the pure
+    // helpers.
     use super::*;
 
     #[test]

@@ -42,8 +42,11 @@ impl Method for LocalSgd {
         for t in 1..=steps {
             let samples = ctx.streams[0].draw_many(chunk);
             ctx.meter.machine(0).add_samples(chunk as u64);
-            let batch = MachineBatch::pack(ctx.engine, d, &samples)?;
-            let out = local_grad_sum(ctx.engine, ctx.loss, &batch, &w, ctx.meter.machine(0))?;
+            // single-machine method: the batch lives (and dies) on the
+            // coordinator engine on every plane
+            let batch = MachineBatch::pack(ctx.plane.engine, d, &samples)?;
+            let out =
+                local_grad_sum(ctx.plane.engine, ctx.loss, &batch, &w, ctx.meter.machine(0))?;
             let cnt = out.count.max(1.0) as f32;
             for j in 0..d {
                 w[j] -= step * out.grad_sum[j] / cnt;

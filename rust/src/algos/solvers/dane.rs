@@ -1,10 +1,11 @@
-//! Inexact DANE (+ AIDE catalyst) inner solver — Algorithm 2.
+//! Inexact DANE (+ AIDE catalyst) inner solver — Algorithm 2, written
+//! ONCE against the execution plane.
 //!
 //! Three nested loops: minibatch-prox (outer, lives in `mbprox`), AIDE
 //! extrapolation (R), DANE rounds (K). Each DANE round:
 //!   1. one all-reduce computes the global gradient at `z_{k-1}`;
 //!   2. every machine approximately solves its local corrected objective
-//!      (equation 33) with prox-SVRG sweeps over its local minibatch;
+//!      (equation 33) with prox-VR sweeps over its local minibatch;
 //!   3. one all-reduce averages the local solutions (equation 34).
 //!
 //! Key identity (see DESIGN.md): with snapshot `z_{k-1}` the SVRG step for
@@ -15,34 +16,23 @@
 //! ```
 //!
 //! with `center = (gamma w_prev + kappa y_{r-1}) / (gamma+kappa)` — i.e.
-//! exactly the `svrg_{loss}` artifact with `mu = g_global`, so the same
-//! Pallas kernel serves DSVRG and DANE.
+//! exactly the VR artifact with `mu = g_global`, so the same Pallas kernel
+//! serves DSVRG and DANE.
 //!
-//! # Device-resident steady state
-//!
-//! With the chained artifacts present (and one local pass, the paper's
-//! configuration), a DANE round runs on the device plane: the global
-//! gradient is the `gacc{K}` accumulator chain + DeviceCollective reduce,
-//! every machine's local solve advances a `[2, d]` state through its
-//! *fused* block groups (`svrgc{K}`/`sagac{K}` — no `vr_lits`, no
-//! per-block downloads), and the solution average is the DeviceCollective
-//! again. Downlink per round: ONE d-vector (the broadcast iterate `z`,
-//! which seeds the next round's sweep states) — against two `[d]` vectors
-//! per block per machine on the legacy path. On the shard plane the same
-//! kernels run per machine on the owning shard's engine and the combines
-//! run the host collective in fixed machine order — bit-identical to the
-//! DeviceCollective (see `runtime::shard`). `force_legacy` pins the
-//! per-block host path for parity tests.
+//! Lane notes: with one local pass (the paper's configuration) the rounds
+//! ride whatever lane the plane resolves — on the Dev lane the global
+//! gradient is the `gacc{K}` chain + DeviceCollective, every local solve
+//! advances a `[2, d]` state over the machine's fused groups, and the
+//! downlink per round is ONE d-vector (the averaged `z`, which seeds the
+//! next round's sweep states). Multi-pass local solves re-snapshot on
+//! corrected local gradients, which only the Host lane implements — the
+//! solver forces `Lane::Host` for them, exactly the pre-plane behavior.
 
-use super::{vr_sweep_machine, vr_sweep_machine_grouped, LocalSolver, ProxSolver};
+use super::{Lane, LocalSolver, PackMode, ProxSolver};
 use crate::algos::RunContext;
 use crate::linalg;
-use crate::objective::{
-    distributed_mean_grad, distributed_mean_grad_dev, fan_machines, local_grad_sum,
-    mean_grad_chained_host, MachineBatch,
-};
+use crate::objective::MachineBatch;
 use anyhow::Result;
-use std::sync::Arc;
 
 pub struct DaneSolver {
     /// DANE rounds per AIDE step (theory: O(log n))
@@ -57,8 +47,6 @@ pub struct DaneSolver {
     pub eta: f64,
     /// which VR kernel performs the local solve (paper's App. E: SAGA)
     pub local_solver: LocalSolver,
-    /// pin the legacy per-block host path (parity tests / diagnostics)
-    pub force_legacy: bool,
 }
 
 impl DaneSolver {
@@ -70,7 +58,6 @@ impl DaneSolver {
             local_passes: 1,
             eta,
             local_solver: LocalSolver::Svrg,
-            force_legacy: false,
         }
     }
 
@@ -82,7 +69,6 @@ impl DaneSolver {
             local_passes: 1,
             eta,
             local_solver: LocalSolver::Svrg,
-            force_legacy: false,
         }
     }
 
@@ -91,209 +77,18 @@ impl DaneSolver {
         self
     }
 
-    /// Whether the DANE rounds can ride the chained kernels: needs the
-    /// gacc/VR-chain artifacts plus the one-pass configuration (multi-pass
-    /// re-snapshots stay on the legacy path). No `red_ready` requirement:
-    /// the DeviceCollective's host fallback for unserved cluster sizes is
-    /// bit-identical, so chaining stays worthwhile at any m.
-    fn chain_ready(&self, ctx: &RunContext) -> bool {
-        !self.force_legacy
-            && self.local_passes <= 1
-            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
-            && ctx.engine.chain_vr_ready(ctx.loss.tag(), ctx.d)
+    /// The lane this solver's rounds run on: the plane's VR lane, except
+    /// that multi-pass local solves (re-snapshotting) are Host-lane only.
+    fn lane(&self, ctx: &RunContext) -> Lane {
+        if self.local_passes > 1 {
+            Lane::Host
+        } else {
+            ctx.plane.vr_lane(ctx.loss, ctx.d)
+        }
     }
 
     /// K DANE rounds on `min_w phi_I(w) + geff/2 ||w - center||^2`
-    /// starting from `z0` — legacy per-block plane.
-    fn dane_rounds_legacy(
-        &self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        z0: &[f32],
-        center: &[f32],
-        geff: f64,
-    ) -> Result<Vec<f32>> {
-        let mut z = z0.to_vec();
-        for _k in 0..self.k_inner {
-            // (1) global gradient at z — 1 comm round
-            let (g, _, _) = distributed_mean_grad(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                batches,
-                &z,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
-            // (2) local solves: prox-SVRG sweeps with mu = g (see header),
-            // fanned across the shard plane when one is present
-            let loss = ctx.loss;
-            let d = ctx.d;
-            let solver = self.local_solver;
-            let passes = self.local_passes.max(1);
-            let eta = self.eta as f32;
-            let geff32 = geff as f32;
-            let z_s: Arc<[f32]> = Arc::from(&z[..]);
-            let g_s: Arc<[f32]> = Arc::from(&g[..]);
-            let c_s: Arc<[f32]> = Arc::from(center);
-            let mut locals: Vec<Vec<f32>> = fan_machines(
-                ctx.engine,
-                ctx.shards,
-                batches,
-                &mut ctx.meter,
-                move |eng, batch, _i, m| {
-                    let mut xi = z_s.to_vec();
-                    let mut snapshot = z_s.to_vec();
-                    let mut mu = g_s.to_vec();
-                    for pass in 0..passes {
-                        if pass > 0 {
-                            // re-snapshot locally:
-                            // mu' = grad_i(x) + (g - grad_i(z))
-                            let gi_z = local_grad_sum(eng, loss, batch, &z_s, m)?;
-                            let gi_x = local_grad_sum(eng, loss, batch, &xi, m)?;
-                            let cnt = gi_z.count.max(1.0) as f32;
-                            mu = g_s.to_vec();
-                            for j in 0..d {
-                                mu[j] += gi_x.grad_sum[j] / cnt - gi_z.grad_sum[j] / cnt;
-                            }
-                            snapshot = xi.clone();
-                        }
-                        let blocks = 0..batch.n_blocks();
-                        let (_x_end, x_avg) = vr_sweep_machine(
-                            eng, loss, solver, blocks, batch, &xi, &snapshot, &mu, &c_s,
-                            geff32, eta, m,
-                        )?;
-                        xi = x_avg;
-                    }
-                    Ok(xi)
-                },
-            )?;
-            // (3) average local solutions — 1 comm round
-            ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
-            z = locals.pop().unwrap();
-        }
-        Ok(z)
-    }
-
-    /// K DANE rounds on the chained device plane (single engine): the
-    /// gradient and the local solutions never visit the host except for
-    /// the one `z` materialization per round that seeds the sweep states.
-    fn dane_rounds_chained(
-        &self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        z0: &[f32],
-        center: &[f32],
-        geff: f64,
-    ) -> Result<Vec<f32>> {
-        let m = batches.len();
-        let d = ctx.d;
-        let mut z_host = z0.to_vec();
-        let mut z_dev = ctx.engine.upload_dev(&z_host, &[d])?;
-        let c_dev = ctx.engine.upload_dev(center, &[d])?;
-        let gamma_dev = ctx.engine.scalar_dev(geff as f32)?;
-        let eta_dev = ctx.engine.scalar_dev(self.eta as f32)?;
-        for _k in 0..self.k_inner {
-            // (1) global gradient at z — 1 comm round, fully chained
-            let g_dev = distributed_mean_grad_dev(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                batches,
-                &z_dev,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
-            // (2) every machine's one-pass local solve rides its fused
-            // groups; only the state seed needs host bits (z, already
-            // known everywhere from the broadcast semantics)
-            let mut locals = Vec::with_capacity(m);
-            for (i, batch) in batches.iter().enumerate() {
-                locals.push(super::vr_sweep_avg_dev(
-                    ctx.engine,
-                    ctx.loss,
-                    self.local_solver,
-                    0..batch.n_groups(),
-                    batch,
-                    &z_host,
-                    &z_dev,
-                    &g_dev,
-                    &c_dev,
-                    &gamma_dev,
-                    &eta_dev,
-                    ctx.meter.machine(i),
-                )?);
-            }
-            // (3) average local solutions — the DeviceCollective reduce
-            z_dev = ctx.net.device_all_reduce_avg(&mut ctx.meter, ctx.engine, &locals)?;
-            // the round-boundary downlink: one d-vector, seeding the next
-            // round's sweep states
-            z_host = ctx.engine.materialize(&z_dev)?;
-        }
-        Ok(z_host)
-    }
-
-    /// The chained rounds on the shard plane: identical kernels per
-    /// machine on the owning shard, host collectives in fixed machine
-    /// order — bit-identical to [`DaneSolver::dane_rounds_chained`].
-    fn dane_rounds_sharded(
-        &self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        z0: &[f32],
-        center: &[f32],
-        geff: f64,
-    ) -> Result<Vec<f32>> {
-        let mut z = z0.to_vec();
-        for _k in 0..self.k_inner {
-            // (1) chained global gradient at z — 1 comm round
-            let g = mean_grad_chained_host(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                batches,
-                &z,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
-            // (2) local solves fan to the shards, one chained sweep each
-            let loss = ctx.loss;
-            let solver = self.local_solver;
-            let eta = self.eta as f32;
-            let geff32 = geff as f32;
-            let z_s: Arc<[f32]> = Arc::from(&z[..]);
-            let g_s: Arc<[f32]> = Arc::from(&g[..]);
-            let c_s: Arc<[f32]> = Arc::from(center);
-            let mut locals: Vec<Vec<f32>> = fan_machines(
-                ctx.engine,
-                ctx.shards,
-                batches,
-                &mut ctx.meter,
-                move |eng, batch, _i, m| {
-                    let (_x_end, x_avg) = vr_sweep_machine_grouped(
-                        eng,
-                        loss,
-                        solver,
-                        0..batch.n_groups(),
-                        batch,
-                        &z_s,
-                        &z_s,
-                        &g_s,
-                        &c_s,
-                        geff32,
-                        eta,
-                        m,
-                    )?;
-                    Ok(x_avg)
-                },
-            )?;
-            // (3) average — host collective, bit-identical to the reduce
-            ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
-            z = locals.pop().unwrap();
-        }
-        Ok(z)
-    }
-
+    /// starting from `z0` — the one body, lane-polymorphic via the plane.
     fn dane_rounds(
         &self,
         ctx: &mut RunContext,
@@ -302,15 +97,33 @@ impl DaneSolver {
         center: &[f32],
         geff: f64,
     ) -> Result<Vec<f32>> {
-        if self.chain_ready(ctx) {
-            if batches.iter().any(|b| b.shard.is_some()) {
-                self.dane_rounds_sharded(ctx, batches, z0, center, geff)
-            } else {
-                self.dane_rounds_chained(ctx, batches, z0, center, geff)
-            }
-        } else {
-            self.dane_rounds_legacy(ctx, batches, z0, center, geff)
+        let lane = self.lane(ctx);
+        let mut z_host = z0.to_vec();
+        let mut z = ctx.plane.lift(lane, z0)?;
+        for _k in 0..self.k_inner {
+            // (1) global gradient at z — 1 comm round
+            let g = ctx.mean_grad_pv(lane, batches, &z)?;
+            // (2) every machine's local solve: VR sweeps with mu = g (see
+            // header), fanned across the shard plane when one is present
+            let locals = ctx.local_sweep_all(
+                lane,
+                self.local_solver,
+                batches,
+                &z_host,
+                &z,
+                &g,
+                center,
+                geff as f32,
+                self.eta as f32,
+                self.local_passes.max(1),
+            )?;
+            // (3) average local solutions — 1 comm round
+            z = ctx.all_reduce_avg_pv(locals)?;
+            // the round-boundary downlink on the Dev lane: one d-vector,
+            // seeding the next round's sweep states (a copy elsewhere)
+            z_host = ctx.plane.to_host(&z)?;
         }
+        Ok(z_host)
     }
 }
 
@@ -323,10 +136,13 @@ impl ProxSolver for DaneSolver {
         }
     }
 
-    /// Host block copies are only needed for the legacy per-block sweeps;
-    /// the chained rounds sweep the fused device groups directly.
-    fn needs_vr_blocks(&self, ctx: &RunContext) -> bool {
-        !self.chain_ready(ctx)
+    /// Host blocks are only needed for Host-lane per-block sweeps; the
+    /// chained lanes sweep each machine's full fused-group set directly.
+    fn pack_mode(&self, ctx: &RunContext) -> PackMode {
+        match self.lane(ctx) {
+            Lane::Host => PackMode::Full,
+            _ => PackMode::GradOnly,
+        }
     }
 
     fn solve(

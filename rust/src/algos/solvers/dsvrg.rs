@@ -1,4 +1,5 @@
-//! DSVRG inner solver — Algorithm 1's inner loop.
+//! DSVRG inner solver — Algorithm 1's inner loop, written ONCE against
+//! the execution plane.
 //!
 //! Each inner iteration k:
 //!   1. one all-reduce round computes the global minibatch gradient
@@ -12,29 +13,22 @@
 //! by batch, exactly as the paper's `s <- s+1; if s > p_j { s <- 1,
 //! j <- j+1 }` bookkeeping.
 //!
-//! # Device-resident steady state
-//!
-//! When the engine carries the chained artifacts, the whole inner loop
-//! runs on [`DeviceVec`] handles: `mu` comes from the `gacc{K}`
-//! accumulator chain + DeviceCollective reduce, the sweep advances a
-//! `[2, d]` state through the *fused* block groups (`svrgc{K}` — batch
-//! ranges are **group-aligned**, so sweeps ride the same uploads as the
-//! gradient hot path and `vr_lits` never materializes), and the broadcast
-//! is a charged handle clone. Bytes leave the device exactly once per
-//! `solve`: the final iterate materialization at the round boundary.
-//! Communication accounting is identical to the legacy path (2 rounds
-//! per inner iteration); `force_legacy` pins the per-block host path for
-//! parity tests and pre-chaining manifests.
+//! The plane decides how each step executes. On the Dev lane the whole
+//! loop runs on [`crate::runtime::DeviceVec`] handles — `mu` from the
+//! `gacc{K}` chain + DeviceCollective, the sweep advancing a `[2, d]`
+//! state over the *fused* group uploads (batch ranges are group-aligned,
+//! so `vr_lits` never materializes), the broadcast a charged handle clone
+//! — and bytes leave the device exactly once per solve, at the final
+//! round-boundary materialize. On the Grouped lane (shard plane) the
+//! identical kernels run per machine on the owning shard with host-bits
+//! collectives, bit-identical to the Dev lane. On the Host lane the
+//! legacy per-block kernels run (the pre-chaining contract / `plane=host`
+//! policy). Communication accounting is identical on every lane: 2 rounds
+//! per inner iteration.
 
-use super::{
-    sweep_groups_weight, vr_sweep_grouped_on, vr_sweep_groups, vr_sweep_on, LocalSolver,
-    ProxSolver,
-};
+use super::{Lane, LocalSolver, PackMode, ProxSolver};
 use crate::algos::RunContext;
-use crate::objective::{
-    distributed_mean_grad, distributed_mean_grad_dev, mean_grad_chained_host, MachineBatch,
-};
-use crate::runtime::DeviceVec;
+use crate::objective::MachineBatch;
 use anyhow::Result;
 
 pub struct DsvrgSolver {
@@ -44,238 +38,11 @@ pub struct DsvrgSolver {
     pub p_batches: usize,
     /// SVRG stepsize
     pub eta: f64,
-    /// pin the legacy per-block host path (parity tests / diagnostics)
-    pub force_legacy: bool,
 }
 
 impl DsvrgSolver {
     pub fn new(k_inner: usize, p_batches: usize, eta: f64) -> Self {
-        Self { k_inner, p_batches, eta, force_legacy: false }
-    }
-
-    /// Split a machine's block list into p near-equal contiguous batches
-    /// (batch granularity is whole 256-row blocks).
-    fn batch_ranges(n_blocks: usize, p: usize) -> Vec<std::ops::Range<usize>> {
-        let p = p.clamp(1, n_blocks.max(1));
-        crate::data::sampler::shard_ranges(n_blocks, p)
-    }
-
-    /// Whether this solve can run device-resident on `ctx`'s engine. No
-    /// `red_ready` requirement (consistent with DANE/one-shot): the
-    /// DeviceCollective's host fallback for cluster sizes without a
-    /// `redm{M}` artifact is bit-identical, so chaining stays worthwhile
-    /// at any m.
-    fn chain_ready(&self, ctx: &RunContext) -> bool {
-        !self.force_legacy
-            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
-            && ctx.engine.chain_vr_ready(ctx.loss.tag(), ctx.d)
-    }
-
-    /// Legacy per-block host path (the pre-chaining engine contract).
-    fn solve_legacy(
-        &mut self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        wprev: &[f32],
-        gamma: f64,
-    ) -> Result<Vec<f32>> {
-        let m = batches.len();
-        let mut z = wprev.to_vec();
-        let mut x = wprev.to_vec();
-        let mut j = 0usize; // designated machine
-        let mut s = 0usize; // batch index within machine j
-        let ranges: Vec<Vec<std::ops::Range<usize>>> = batches
-            .iter()
-            .map(|b| Self::batch_ranges(b.n_blocks(), self.p_batches))
-            .collect();
-
-        for _k in 0..self.k_inner {
-            // (1) global minibatch gradient at snapshot z — 1 comm round
-            let (mu, _, _) = distributed_mean_grad(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                batches,
-                &z,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
-            // add the prox term's gradient? No: the svrg kernel adds
-            // gamma (x - wprev) at the *current* iterate exactly, so mu is
-            // the smooth-part gradient only — matching Algorithm 1 step 2.
-
-            // (2) machine j sweeps its batch s once without replacement
-            // (on j's shard when the batches are shard-resident)
-            let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
-            let (x_end, x_avg) = vr_sweep_on(
-                ctx,
-                LocalSolver::Svrg,
-                range,
-                batches,
-                j,
-                &x,
-                &z,
-                &mu,
-                wprev,
-                gamma as f32,
-                self.eta as f32,
-            )?;
-            x = x_end;
-            // (3) z_k = sweep average, broadcast to all machines — 1 round
-            z = x_avg;
-            let mut locals: Vec<Vec<f32>> = (0..m).map(|_| z.clone()).collect();
-            ctx.net.broadcast(&mut ctx.meter, j, &mut locals);
-
-            // advance the (j, s) token
-            s += 1;
-            if s >= ranges[j].len() {
-                s = 0;
-                j = (j + 1) % m;
-            }
-        }
-        Ok(z)
-    }
-
-    /// Chained device-resident path: identical algorithm and accounting,
-    /// zero downloads until the final `materialize`.
-    fn solve_chained(
-        &mut self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        wprev: &[f32],
-        gamma: f64,
-    ) -> Result<Vec<f32>> {
-        let m = batches.len();
-        let wprev_dev = ctx.engine.upload_dev(wprev, &[ctx.d])?;
-        // solve-constant scalars: uploaded once, reused by every dispatch
-        let gamma_dev = ctx.engine.scalar_dev(gamma as f32)?;
-        let eta_dev = ctx.engine.scalar_dev(self.eta as f32)?;
-        let mut z: DeviceVec = wprev_dev.clone();
-        // [x; avg_accum] — x carries across inner iterations like the
-        // legacy loop's `x = x_end`
-        let mut state = ctx.engine.vr_state_from(wprev)?;
-        let mut j = 0usize;
-        let mut s = 0usize;
-        // group ranges tiling the SAME p-way block partition as the
-        // legacy path (exact when the batches were packed VR-aligned, the
-        // mbprox outer loop's contract via vr_group_align)
-        let ranges: Vec<Vec<std::ops::Range<usize>>> =
-            batches.iter().map(|b| b.group_ranges(self.p_batches)).collect();
-
-        for _k in 0..self.k_inner {
-            // (1) global minibatch gradient at snapshot z — 1 comm round
-            let mu = distributed_mean_grad_dev(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                batches,
-                &z,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
-
-            // (2) machine j sweeps its group-range s; fresh accumulator,
-            // carried iterate
-            state = ctx.engine.vr_reset(&state)?;
-            let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
-            let total_w = sweep_groups_weight(&batches[j], range.clone());
-            state = vr_sweep_groups(
-                ctx.engine,
-                ctx.loss,
-                LocalSolver::Svrg,
-                range,
-                &batches[j],
-                state,
-                &z,
-                &mu,
-                &wprev_dev,
-                &gamma_dev,
-                &eta_dev,
-                ctx.meter.machine(j),
-            )?;
-
-            // (3) z_k = sweep average (inv weight 0 = empty-sweep
-            // fallback to the carried iterate), broadcast — 1 round
-            let inv_w = if total_w > 0.0 { (1.0 / total_w) as f32 } else { 0.0 };
-            let z_new = ctx.engine.vr_avg(&state, inv_w)?;
-            z = ctx.net.device_broadcast(&mut ctx.meter, j, &z_new);
-
-            s += 1;
-            if s >= ranges[j].len() {
-                s = 0;
-                j = (j + 1) % m;
-            }
-        }
-        // the round boundary: the ONE device->host transfer of this solve
-        ctx.engine.materialize(&z)
-    }
-
-    /// Shard-plane chained solve: the identical kernel sequence per
-    /// machine (gacc chains for mu, group-aligned svrgc sweeps on the
-    /// designated machine, the same f32 sweep average), with cross-machine
-    /// values crossing as host bits — f32 round trips are exact and the
-    /// host collective is bit-identical to the device reduce, so this
-    /// reproduces [`DsvrgSolver::solve_chained`] bit-for-bit while the
-    /// per-machine work runs in parallel across shards. The per-iteration
-    /// materialize/upload at the join points is the honest price of
-    /// engines that share no device (metered on each shard).
-    fn solve_sharded(
-        &mut self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        wprev: &[f32],
-        gamma: f64,
-    ) -> Result<Vec<f32>> {
-        let m = batches.len();
-        let mut z = wprev.to_vec();
-        let mut x = wprev.to_vec();
-        let mut j = 0usize;
-        let mut s = 0usize;
-        let ranges: Vec<Vec<std::ops::Range<usize>>> =
-            batches.iter().map(|b| b.group_ranges(self.p_batches)).collect();
-
-        for _k in 0..self.k_inner {
-            // (1) chained mean gradient at snapshot z — 1 comm round
-            let mu = mean_grad_chained_host(
-                ctx.engine,
-                ctx.shards,
-                ctx.loss,
-                batches,
-                &z,
-                &mut ctx.net,
-                &mut ctx.meter,
-            )?;
-
-            // (2) machine j's chained sweep runs on machine j's shard
-            let range = ranges[j][s.min(ranges[j].len() - 1)].clone();
-            let (x_end, x_avg) = vr_sweep_grouped_on(
-                ctx,
-                LocalSolver::Svrg,
-                range,
-                batches,
-                j,
-                &x,
-                &z,
-                &mu,
-                wprev,
-                gamma as f32,
-                self.eta as f32,
-            )?;
-            x = x_end;
-
-            // (3) z_k broadcast — 1 round, charged exactly like the
-            // device broadcast of the single-engine path
-            z = x_avg;
-            let mut locals: Vec<Vec<f32>> = (0..m).map(|_| z.clone()).collect();
-            ctx.net.broadcast(&mut ctx.meter, j, &mut locals);
-
-            s += 1;
-            if s >= ranges[j].len() {
-                s = 0;
-                j = (j + 1) % m;
-            }
-        }
-        Ok(z)
+        Self { k_inner, p_batches, eta }
     }
 }
 
@@ -284,16 +51,15 @@ impl ProxSolver for DsvrgSolver {
         format!("dsvrg(K={},p={})", self.k_inner, self.p_batches)
     }
 
-    /// Host block copies are only needed for the legacy per-block sweep;
-    /// the chained path sweeps the fused device groups directly.
-    fn needs_vr_blocks(&self, ctx: &RunContext) -> bool {
-        !self.chain_ready(ctx)
-    }
-
-    /// Chained sweeps want groups aligned to the p-way batch partition,
-    /// so the sweep sizes match the legacy path exactly for any p.
-    fn vr_group_align(&self, ctx: &RunContext) -> Option<usize> {
-        self.chain_ready(ctx).then_some(self.p_batches)
+    /// Host blocks are only needed for Host-lane per-block sweeps; the
+    /// chained lanes sweep fused groups aligned to the p-way batch
+    /// partition, so sweep sizes match the per-block partition exactly
+    /// for any p.
+    fn pack_mode(&self, ctx: &RunContext) -> PackMode {
+        match ctx.plane.vr_lane(ctx.loss, ctx.d) {
+            Lane::Host => PackMode::Full,
+            _ => PackMode::VrAligned(self.p_batches),
+        }
     }
 
     fn solve(
@@ -304,16 +70,46 @@ impl ProxSolver for DsvrgSolver {
         gamma: f64,
         _t: usize,
     ) -> Result<Vec<f32>> {
-        let sharded = batches.iter().any(|b| b.shard.is_some());
-        if self.chain_ready(ctx) {
-            if sharded {
-                self.solve_sharded(ctx, batches, wprev, gamma)
-            } else {
-                self.solve_chained(ctx, batches, wprev, gamma)
+        let m = batches.len();
+        let lane = ctx.plane.vr_lane(ctx.loss, ctx.d);
+        // the sweep session owns the (j, s) partition, the solve-constant
+        // operands and the carried iterate/state for this lane
+        let mut sweeper = ctx.plane.vr_sweeper(
+            lane,
+            batches,
+            self.p_batches,
+            LocalSolver::Svrg,
+            wprev,
+            wprev,
+            gamma as f32,
+            self.eta as f32,
+        )?;
+        let mut z = ctx.plane.lift(lane, wprev)?;
+        let mut j = 0usize; // designated machine
+        let mut s = 0usize; // batch index within machine j
+
+        for _k in 0..self.k_inner {
+            // (1) global minibatch gradient at snapshot z — 1 comm round.
+            // The prox term's gradient is NOT added here: the VR kernels
+            // add gamma (x - wprev) at the *current* iterate exactly, so
+            // mu is the smooth-part gradient only — Algorithm 1 step 2.
+            let mu = ctx.mean_grad_pv(lane, batches, &z)?;
+
+            // (2) machine j sweeps its batch s once without replacement
+            // (on j's shard when the batches are shard-resident)
+            let z_new = ctx.vr_sweep(&mut sweeper, batches, j, s, &z, &mu)?;
+
+            // (3) z_k = sweep average, broadcast to all machines — 1 round
+            z = ctx.broadcast_pv(j, z_new);
+
+            // advance the (j, s) token
+            s += 1;
+            if s >= sweeper.n_batches(j) {
+                s = 0;
+                j = (j + 1) % m;
             }
-        } else {
-            // the legacy path's primitives fan internally on either plane
-            self.solve_legacy(ctx, batches, wprev, gamma)
         }
+        // the round boundary: the Dev lane's ONE device->host transfer
+        ctx.plane.into_host(z)
     }
 }

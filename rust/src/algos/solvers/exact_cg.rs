@@ -1,4 +1,5 @@
-//! Exact prox solver for least squares via distributed conjugate gradient.
+//! Exact prox solver for least squares via distributed conjugate
+//! gradient, written ONCE against the execution plane.
 //!
 //! The prox subproblem for the squared loss has a linear optimality system
 //!
@@ -13,314 +14,194 @@
 //! that the inexact solvers are validated against, and doubles as the
 //! DiSCO-style Newton system solver for the ERM baselines.
 //!
-//! # Device-resident steady state
-//!
-//! With the chained artifacts present, the CG vectors (`x`, `r`, `p`,
-//! `Ap`, `b`) live on device: the matvec chains `nacc{K}` accumulators
-//! into the DeviceCollective reduce, the recurrences are `vaxpby`
-//! dispatches, and the only steady-state downlink is the two `vdot`
-//! scalars per iteration (8 bytes) — against 2 full vectors per machine
-//! per iteration on the legacy path. The solution materializes once at
-//! the end. `force_legacy` pins the host path for parity tests.
+//! Lane notes: the CG recurrence runs on the coordinator either way —
+//! [`plane_cg`] is ONE recurrence over [`PlaneVec`]s whose per-lane
+//! primitives are f64 host dots (Host lane) or the f32 `vdot` kernel (Dev
+//! lane, two scalar downloads per iteration as the entire steady-state
+//! downlink). On the Dev lane the vectors live on device: the matvec
+//! chains `nacc{K}` accumulators into the DeviceCollective reduce (or
+//! fans host-bits partials across the shard plane, where the recurrence
+//! still holds device handles on the coordinator engine), the recurrences
+//! are `vaxpby` dispatches, and the solution materializes once at the
+//! end.
 
-use super::ProxSolver;
+use super::{PackMode, ProxSolver};
 use crate::algos::RunContext;
 use crate::data::Loss;
 use crate::linalg;
-use crate::objective::{
-    distributed_mean_grad, distributed_mean_grad_dev, fan_machines, MachineBatch,
-};
-use crate::runtime::DeviceVec;
+use crate::objective::{fan_machines, MachineBatch};
+use crate::runtime::PlaneVec;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
 pub struct ExactCgSolver {
     pub tol: f64,
     pub max_iters: usize,
-    /// pin the legacy host path (parity tests / diagnostics)
-    pub force_legacy: bool,
 }
 
 impl Default for ExactCgSolver {
     fn default() -> Self {
-        Self { tol: 1e-9, max_iters: 512, force_legacy: false }
+        Self { tol: 1e-9, max_iters: 512 }
     }
 }
 
 /// One distributed application of v -> (1/n) X^T X v + gamma v.
-/// Charges one comm round and per-machine vec ops; returns the result.
-/// The per-machine partials fan across the shard plane when one owns the
-/// batches; the combine runs in fixed machine order on the coordinator
-/// either way.
-pub fn distributed_normal_matvec(
+/// Charges one comm round and per-machine vec ops; the lane follows the
+/// representation of `v`. Host bits: fused tupled dispatches with host
+/// accumulation. Device handle: `nacc{K}` accumulator chains per machine
+/// into the DeviceCollective reduce (zero downloads) — or, with
+/// shard-resident batches, host-bits partials fanned to the shards whose
+/// fixed-order f64 combine is bit-identical to the device reduce.
+pub fn normal_matvec_pv(
     ctx: &mut RunContext,
     batches: &[MachineBatch],
-    v: &[f32],
+    v: &PlaneVec,
     gamma: f64,
-) -> Result<Vec<f32>> {
+) -> Result<PlaneVec> {
     let d = ctx.d;
-    let v_s: Arc<[f32]> = Arc::from(v);
-    let outs: Vec<(Vec<f32>, f64)> = fan_machines(
-        ctx.engine,
-        ctx.shards,
-        batches,
-        &mut ctx.meter,
-        move |eng, batch, _i, m| {
-            let mut acc = vec![0.0f32; d];
-            let mut cnt = 0.0f64;
-            // fused groups: one dispatch + one download per group, and
-            // `v` is uploaded once per matvec via the session pool
-            for blk in &batch.groups {
-                let (part, c) = eng.nm_block(blk, &v_s)?;
-                linalg::axpy(1.0, &part, &mut acc);
-                cnt += c;
+    match v {
+        PlaneVec::Host(vh) => {
+            let v_s: Arc<[f32]> = Arc::from(&vh[..]);
+            let outs: Vec<(Vec<f32>, f64)> = fan_machines(
+                ctx.plane.engine,
+                ctx.plane.shards,
+                batches,
+                &mut ctx.meter,
+                move |eng, batch, _i, m| {
+                    let mut acc = vec![0.0f32; d];
+                    let mut cnt = 0.0f64;
+                    // fused groups: one dispatch + one download per group,
+                    // and `v` is uploaded once per matvec via the session
+                    // pool
+                    for blk in &batch.groups {
+                        let (part, c) = eng.nm_block(blk, &v_s)?;
+                        linalg::axpy(1.0, &part, &mut acc);
+                        cnt += c;
+                    }
+                    if cnt > 0.0 {
+                        linalg::scale(1.0 / cnt as f32, &mut acc);
+                    }
+                    m.add_vec_ops(batch.n as u64);
+                    Ok((acc, cnt))
+                },
+            )?;
+            let (mut locals, weights): (Vec<Vec<f32>>, Vec<f64>) = outs.into_iter().unzip();
+            ctx.net.all_reduce_weighted(&mut ctx.meter, &weights, &mut locals);
+            let mut out = locals.pop().unwrap();
+            linalg::axpy(gamma as f32, vh, &mut out);
+            // local axpy: O(1) vector ops per machine
+            ctx.meter.all_vec_ops(1);
+            Ok(PlaneVec::Host(out))
+        }
+        PlaneVec::Dev(vd) => {
+            if batches.iter().any(|b| b.shard.is_some()) {
+                // shard plane: the direction crosses to the shards as host
+                // bits (exact), each machine chains its nacc accumulator
+                // on its own engine, and the combine is the host
+                // collective — bit-identical to the device reduce. The CG
+                // recurrence itself stays on the coordinator engine, so
+                // the iterates match the single-engine chained path
+                // bit-for-bit.
+                let v_host = ctx.plane.engine.materialize(vd)?;
+                let v_s: Arc<[f32]> = Arc::from(&v_host[..]);
+                let outs: Vec<Vec<f32>> = fan_machines(
+                    ctx.plane.engine,
+                    ctx.plane.shards,
+                    batches,
+                    &mut ctx.meter,
+                    move |eng, batch, _i, m| {
+                        let v_dev = eng.upload_dev(&v_s, &[d])?;
+                        let mut acc = eng.zeros_dev(d)?;
+                        for blk in &batch.groups {
+                            acc = eng.nm_acc(blk, &v_dev, &acc)?;
+                        }
+                        let cnt = batch.n as f64;
+                        if cnt > 0.0 {
+                            acc = eng.vec_scale(&acc, (1.0 / cnt) as f32)?;
+                        }
+                        m.add_vec_ops(batch.n as u64);
+                        eng.materialize(&acc)
+                    },
+                )?;
+                let weights: Vec<f64> = batches.iter().map(|b| b.n as f64).collect();
+                let mut locals = outs;
+                ctx.net.all_reduce_weighted(&mut ctx.meter, &weights, &mut locals);
+                let red = ctx.plane.engine.upload_dev(&locals.pop().unwrap(), &[d])?;
+                let out = ctx.plane.engine.vec_axpby(1.0, &red, gamma as f32, vd)?;
+                ctx.meter.all_vec_ops(1);
+                return Ok(PlaneVec::Dev(out));
             }
-            if cnt > 0.0 {
-                linalg::scale(1.0 / cnt as f32, &mut acc);
-            }
-            m.add_vec_ops(batch.n as u64);
-            Ok((acc, cnt))
-        },
-    )?;
-    let (mut locals, weights): (Vec<Vec<f32>>, Vec<f64>) = outs.into_iter().unzip();
-    ctx.net.all_reduce_weighted(&mut ctx.meter, &weights, &mut locals);
-    let mut out = locals.pop().unwrap();
-    linalg::axpy(gamma as f32, v, &mut out);
-    // local axpy: O(1) vector ops per machine
-    ctx.meter.all_vec_ops(1);
-    Ok(out)
-}
-
-/// Device-chained [`distributed_normal_matvec`]: `nacc{K}` accumulator
-/// chains per machine, DeviceCollective reduce, one `vaxpby` for the
-/// `gamma v` shift. Identical rounds/vec-ops accounting, zero downloads.
-pub fn distributed_normal_matvec_dev(
-    ctx: &mut RunContext,
-    batches: &[MachineBatch],
-    v: &DeviceVec,
-    gamma: f64,
-) -> Result<DeviceVec> {
-    if batches.iter().any(|b| b.shard.is_some()) {
-        // shard plane: the direction crosses to the shards as host bits
-        // (exact), each machine chains its nacc accumulator on its own
-        // engine, and the combine is the host collective — bit-identical
-        // to the device reduce. The CG recurrence itself stays on the
-        // coordinator engine, so the iterates match the single-engine
-        // chained path bit-for-bit.
-        let d = ctx.d;
-        let v_host = ctx.engine.materialize(v)?;
-        let v_s: Arc<[f32]> = Arc::from(&v_host[..]);
-        let outs: Vec<Vec<f32>> = fan_machines(
-            ctx.engine,
-            ctx.shards,
-            batches,
-            &mut ctx.meter,
-            move |eng, batch, _i, m| {
-                let v_dev = eng.upload_dev(&v_s, &[d])?;
-                let mut acc = eng.zeros_dev(d)?;
+            let m = batches.len();
+            let mut locals = Vec::with_capacity(m);
+            let mut weights: Vec<f64> = Vec::with_capacity(m);
+            for (i, batch) in batches.iter().enumerate() {
+                let mut acc = ctx.plane.engine.zeros_dev(ctx.d)?;
                 for blk in &batch.groups {
-                    acc = eng.nm_acc(blk, &v_dev, &acc)?;
+                    acc = ctx.plane.engine.nm_acc(blk, vd, &acc)?;
                 }
+                // pack-time count replaces the downloaded one (same value)
                 let cnt = batch.n as f64;
                 if cnt > 0.0 {
-                    acc = eng.vec_scale(&acc, (1.0 / cnt) as f32)?;
+                    acc = ctx.plane.engine.vec_scale(&acc, (1.0 / cnt) as f32)?;
                 }
-                m.add_vec_ops(batch.n as u64);
-                eng.materialize(&acc)
-            },
-        )?;
-        let weights: Vec<f64> = batches.iter().map(|b| b.n as f64).collect();
-        let mut locals = outs;
-        ctx.net.all_reduce_weighted(&mut ctx.meter, &weights, &mut locals);
-        let red = ctx.engine.upload_dev(&locals.pop().unwrap(), &[d])?;
-        let out = ctx.engine.vec_axpby(1.0, &red, gamma as f32, v)?;
-        ctx.meter.all_vec_ops(1);
-        return Ok(out);
-    }
-    let m = batches.len();
-    let mut locals: Vec<DeviceVec> = Vec::with_capacity(m);
-    let mut weights: Vec<f64> = Vec::with_capacity(m);
-    for (i, batch) in batches.iter().enumerate() {
-        let mut acc = ctx.engine.zeros_dev(ctx.d)?;
-        for blk in &batch.groups {
-            acc = ctx.engine.nm_acc(blk, v, &acc)?;
+                ctx.meter.machine(i).add_vec_ops(batch.n as u64);
+                locals.push(acc);
+                weights.push(cnt);
+            }
+            let red = ctx.net.device_all_reduce_weighted(
+                &mut ctx.meter,
+                ctx.plane.engine,
+                &weights,
+                &locals,
+            )?;
+            let out = ctx.plane.engine.vec_axpby(1.0, &red, gamma as f32, vd)?;
+            ctx.meter.all_vec_ops(1);
+            Ok(PlaneVec::Dev(out))
         }
-        // pack-time count replaces the downloaded one (same value)
-        let cnt = batch.n as f64;
-        if cnt > 0.0 {
-            acc = ctx.engine.vec_scale(&acc, (1.0 / cnt) as f32)?;
-        }
-        ctx.meter.machine(i).add_vec_ops(batch.n as u64);
-        locals.push(acc);
-        weights.push(cnt);
     }
-    let red = ctx.net.device_all_reduce_weighted(
-        &mut ctx.meter,
-        ctx.engine,
-        &weights,
-        &locals,
-    )?;
-    let out = ctx.engine.vec_axpby(1.0, &red, gamma as f32, v)?;
-    ctx.meter.all_vec_ops(1);
-    Ok(out)
 }
 
-/// Shared distributed-CG driver, host plane: solve `A x = b` from warm
-/// start `x0`, where `matvec` applies `A` (charging its own comm round
-/// and vec ops). Stopping rules: relative residual below `tol` against
-/// the rhs norm, or a non-positive curvature `p^T A p`. One
-/// implementation serves the exact-prox system AND the DiSCO Newton
-/// system — the recurrence cannot drift between them.
-pub fn host_cg(
+/// Shared distributed-CG driver over [`PlaneVec`]s: solve `A x = b` from
+/// warm start `x0`, where `matvec` applies `A` (charging its own comm
+/// round and vec ops). Stopping rules: relative residual below `tol`
+/// against the rhs norm, or a non-positive curvature `p^T A p`. The
+/// recurrence is ONE code path — per-lane only the primitives differ (f64
+/// host dots vs the f32 `vdot` kernel; the host `axpby` loop mirrors the
+/// `vaxpby` kernel bit-for-bit) — and it serves the exact-prox system AND
+/// the DiSCO Newton system, so the recurrence cannot drift between them.
+pub fn plane_cg(
     ctx: &mut RunContext,
-    mut matvec: impl FnMut(&mut RunContext, &[f32]) -> Result<Vec<f32>>,
-    b: &[f32],
-    x0: Vec<f32>,
+    mut matvec: impl FnMut(&mut RunContext, &PlaneVec) -> Result<PlaneVec>,
+    b: &PlaneVec,
+    x0: PlaneVec,
     tol: f64,
     max_iters: usize,
-) -> Result<Vec<f32>> {
-    let d = b.len();
+) -> Result<PlaneVec> {
     let mut x = x0;
     let mut ap = matvec(ctx, &x)?;
-    let mut r: Vec<f32> = (0..d).map(|j| b[j] - ap[j]).collect();
+    let mut r = ctx.plane.axpby(1.0, b, -1.0, &ap)?;
     let mut p = r.clone();
-    let rhs_norm = linalg::nrm2(b).max(1e-30);
-    let mut rs_old = linalg::dot(&r, &r);
+    let rhs_norm = ctx.plane.dot(b, b)?.sqrt().max(1e-30);
+    let mut rs_old = ctx.plane.dot(&r, &r)?;
     for _ in 0..max_iters {
         if rs_old.sqrt() / rhs_norm <= tol {
             break;
         }
         ap = matvec(ctx, &p)?;
-        let p_ap = linalg::dot(&p, &ap);
+        let p_ap = ctx.plane.dot(&p, &ap)?;
         if p_ap <= 0.0 {
             break;
         }
         let alpha = (rs_old / p_ap) as f32;
-        linalg::axpy(alpha, &p, &mut x);
-        linalg::axpy(-alpha, &ap, &mut r);
-        let rs_new = linalg::dot(&r, &r);
+        x = ctx.plane.axpby(1.0, &x, alpha, &p)?;
+        r = ctx.plane.axpby(1.0, &r, -alpha, &ap)?;
+        let rs_new = ctx.plane.dot(&r, &r)?;
         let beta = (rs_new / rs_old) as f32;
-        for j in 0..d {
-            p[j] = r[j] + beta * p[j];
-        }
+        p = ctx.plane.axpby(1.0, &r, beta, &p)?;
         ctx.meter.all_vec_ops(3);
         rs_old = rs_new;
     }
     Ok(x)
-}
-
-/// [`host_cg`] on the device plane: the identical recurrence
-/// scalar-for-scalar, with the vectors as [`DeviceVec`] handles and the
-/// two `vec_dot` scalars per iteration as the only downlink.
-pub fn chained_cg(
-    ctx: &mut RunContext,
-    mut matvec: impl FnMut(&mut RunContext, &DeviceVec) -> Result<DeviceVec>,
-    b: &DeviceVec,
-    x0: DeviceVec,
-    tol: f64,
-    max_iters: usize,
-) -> Result<DeviceVec> {
-    let mut x = x0;
-    let mut ap = matvec(ctx, &x)?;
-    let mut r = ctx.engine.vec_axpby(1.0, b, -1.0, &ap)?;
-    let mut p = r.clone();
-    let rhs_norm = ctx.engine.vec_dot(b, b)?.sqrt().max(1e-30);
-    let mut rs_old = ctx.engine.vec_dot(&r, &r)?;
-    for _ in 0..max_iters {
-        if rs_old.sqrt() / rhs_norm <= tol {
-            break;
-        }
-        ap = matvec(ctx, &p)?;
-        let p_ap = ctx.engine.vec_dot(&p, &ap)?;
-        if p_ap <= 0.0 {
-            break;
-        }
-        let alpha = (rs_old / p_ap) as f32;
-        x = ctx.engine.vec_axpby(1.0, &x, alpha, &p)?;
-        r = ctx.engine.vec_axpby(1.0, &r, -alpha, &ap)?;
-        let rs_new = ctx.engine.vec_dot(&r, &r)?;
-        let beta = (rs_new / rs_old) as f32;
-        p = ctx.engine.vec_axpby(1.0, &r, beta, &p)?;
-        ctx.meter.all_vec_ops(3);
-        rs_old = rs_new;
-    }
-    Ok(x)
-}
-
-impl ExactCgSolver {
-    fn chain_ready(&self, ctx: &RunContext, m: usize) -> bool {
-        !self.force_legacy
-            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
-            && ctx.engine.chain_nm_ready(ctx.d)
-            && ctx.engine.red_ready(m, ctx.d)
-    }
-
-    fn solve_legacy(
-        &mut self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        wprev: &[f32],
-        gamma: f64,
-    ) -> Result<Vec<f32>> {
-        let d = ctx.d;
-        // rhs = (1/n) X^T y + gamma wprev = -grad(0) + gamma wprev
-        let zero = vec![0.0f32; d];
-        let (g0, _, _) = distributed_mean_grad(
-            ctx.engine,
-            ctx.shards,
-            ctx.loss,
-            batches,
-            &zero,
-            &mut ctx.net,
-            &mut ctx.meter,
-        )?;
-        let mut b = vec![0.0f32; d];
-        for j in 0..d {
-            b[j] = -g0[j] + (gamma as f32) * wprev[j];
-        }
-        // CG with the distributed operator (warm start from wprev)
-        host_cg(
-            ctx,
-            |ctx, v| distributed_normal_matvec(ctx, batches, v, gamma),
-            &b,
-            wprev.to_vec(),
-            self.tol,
-            self.max_iters,
-        )
-    }
-
-    /// Chained CG: same recurrence scalar-for-scalar, vectors on device.
-    fn solve_chained(
-        &mut self,
-        ctx: &mut RunContext,
-        batches: &[MachineBatch],
-        wprev: &[f32],
-        gamma: f64,
-    ) -> Result<Vec<f32>> {
-        let zero = ctx.engine.zeros_dev(ctx.d)?;
-        let g0 = distributed_mean_grad_dev(
-            ctx.engine,
-            ctx.shards,
-            ctx.loss,
-            batches,
-            &zero,
-            &mut ctx.net,
-            &mut ctx.meter,
-        )?;
-        let wprev_dev = ctx.engine.upload_dev(wprev, &[ctx.d])?;
-        // b = -g0 + gamma wprev
-        let b = ctx.engine.vec_axpby(-1.0, &g0, gamma as f32, &wprev_dev)?;
-        let x = chained_cg(
-            ctx,
-            |ctx, v| distributed_normal_matvec_dev(ctx, batches, v, gamma),
-            &b,
-            wprev_dev.clone(),
-            self.tol,
-            self.max_iters,
-        )?;
-        // the round boundary: the one full-vector download of this solve
-        ctx.engine.materialize(&x)
-    }
 }
 
 impl ProxSolver for ExactCgSolver {
@@ -329,8 +210,8 @@ impl ProxSolver for ExactCgSolver {
     }
 
     /// CG only needs grad + normal-matvec dispatches — no VR sweeps.
-    fn needs_vr_blocks(&self, _ctx: &RunContext) -> bool {
-        false
+    fn pack_mode(&self, _ctx: &RunContext) -> PackMode {
+        PackMode::GradOnly
     }
 
     fn solve(
@@ -344,10 +225,22 @@ impl ProxSolver for ExactCgSolver {
         if ctx.loss != Loss::Squared {
             bail!("exact-cg prox solver requires the squared loss");
         }
-        if self.chain_ready(ctx, batches.len()) {
-            self.solve_chained(ctx, batches, wprev, gamma)
-        } else {
-            self.solve_legacy(ctx, batches, wprev, gamma)
-        }
+        let lane = ctx.plane.cg_lane(ctx.loss, ctx.d, batches.len());
+        // rhs = (1/n) X^T y + gamma wprev = -grad(0) + gamma wprev
+        let zero = ctx.plane.zeros(lane, ctx.d)?;
+        let g0 = ctx.mean_grad_pv(lane, batches, &zero)?;
+        let wprev_pv = ctx.plane.lift(lane, wprev)?;
+        let b = ctx.plane.axpby(-1.0, &g0, gamma as f32, &wprev_pv)?;
+        // CG with the distributed operator (warm start from wprev)
+        let x = plane_cg(
+            ctx,
+            |ctx, v| normal_matvec_pv(ctx, batches, v, gamma),
+            &b,
+            wprev_pv,
+            self.tol,
+            self.max_iters,
+        )?;
+        // the round boundary: the Dev lane's one full-vector download
+        ctx.plane.into_host(x)
     }
 }

@@ -8,69 +8,38 @@
 //! require an inexact solution with error eta_t decaying polynomially in t,
 //! which is what makes the communication-efficient inner loops (DSVRG,
 //! DANE) sufficient.
+//!
+//! Every solver has exactly ONE body, programmed against the execution
+//! plane's verbs (`runtime::plane`): the solver resolves a [`Lane`] per
+//! solve and the plane supplies lane-correct mean gradients, sweeps,
+//! collectives and materialization points. Which plane runs underneath —
+//! host, chained, or sharded — is coordinator policy, never solver code.
 
 pub mod dane;
 pub mod dsvrg;
 pub mod exact_cg;
 pub mod oneshot;
 
-use super::RunContext;
-use crate::accounting::ResourceMeter;
-use crate::data::Loss;
-use crate::objective::{fan_machine, MachineBatch};
-use crate::runtime::chain::VrKernel;
-use crate::runtime::{DeviceVec, Engine};
+use super::{PackMode, RunContext};
 use anyhow::Result;
 
-/// Which variance-reduced kernel performs the local sweeps.
-///
-/// The paper's Appendix E uses SAGA for the local DANE subproblems; SVRG
-/// is the Algorithm-1 (DSVRG) choice. Both are single AOT Pallas kernels
-/// with identical interfaces (see python/compile/kernels/).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum LocalSolver {
-    Svrg,
-    Saga,
-}
-
-impl LocalSolver {
-    pub fn tag(self) -> &'static str {
-        match self {
-            LocalSolver::Svrg => "svrg",
-            LocalSolver::Saga => "saga",
-        }
-    }
-
-    /// The chained kernel family implementing this solver's sweeps.
-    pub fn kernel(self) -> VrKernel {
-        match self {
-            LocalSolver::Svrg => VrKernel::Svrg,
-            LocalSolver::Saga => VrKernel::Saga,
-        }
-    }
-}
+// The sweep machinery lives on the plane (`runtime::plane`); re-exported
+// here because it is the solvers' vocabulary (and the parity tests').
+pub use crate::runtime::plane::{
+    batch_ranges, sweep_groups_weight, vr_sweep_avg_dev, vr_sweep_groups, vr_sweep_machine,
+    vr_sweep_machine_grouped, Lane, LocalSolver, VrSweeper,
+};
 
 /// Approximately solve the prox subproblem on the current minibatches.
 pub trait ProxSolver {
     fn name(&self) -> String;
 
-    /// Whether `solve` runs *legacy per-block* VR sweeps over the batches
-    /// (which need the host block copies retained for the lazy per-block
-    /// uploads). Grad/CG-only solvers — and solvers whose sweeps ride the
-    /// chained group-aligned path on this engine — return false so the
-    /// outer loop can pack grad-only batches and skip the host retention.
-    fn needs_vr_blocks(&self, _ctx: &RunContext) -> bool {
-        true
-    }
-
-    /// `Some(p)` when the solver's chained sweeps want fused groups
-    /// aligned to its p-way batch partition: the outer loop then draws
-    /// via `RunContext::draw_batches_vr_aligned`, so
-    /// `MachineBatch::group_ranges(p)` tiles exactly the block partition
-    /// the legacy sweep would use. `None` keeps the default (widest)
-    /// packing.
-    fn vr_group_align(&self, _ctx: &RunContext) -> Option<usize> {
-        None
+    /// How the outer loop should pack this solver's fresh minibatches on
+    /// `ctx`'s plane: grad-only for dispatch-verb solvers (CG), VR-aligned
+    /// fused groups for chained sweeps, full packs (host blocks retained
+    /// for the lazy per-block uploads) for Host-lane sweeps.
+    fn pack_mode(&self, _ctx: &RunContext) -> PackMode {
+        PackMode::Full
     }
 
     /// Return an (inexact) minimizer of `f_t`; `t` is the outer iteration
@@ -78,327 +47,9 @@ pub trait ProxSolver {
     fn solve(
         &mut self,
         ctx: &mut RunContext,
-        batches: &[MachineBatch],
+        batches: &[crate::objective::MachineBatch],
         wprev: &[f32],
         gamma: f64,
         t: usize,
     ) -> Result<Vec<f32>>;
-}
-
-/// Shared helper: sweep one machine's blocks with chained
-/// variance-reduced passes (SVRG or SAGA kernels).
-///
-/// Runs the artifact block-by-block, carrying the iterate through, and
-/// combines per-block running averages weighted by their (1 + valid)
-/// counts — the paper's z_k average over r = 0..|B_s|.
-/// Returns `(x_end, x_avg)` and charges the swept rows to `meter`.
-///
-/// Takes the engine and the machine's meter directly (not a
-/// [`RunContext`]) so the identical code runs inline on the coordinator
-/// OR inside a shard job — the shard plane's per-machine closures are
-/// exactly these helpers.
-#[allow(clippy::too_many_arguments)]
-pub fn vr_sweep_machine(
-    engine: &mut Engine,
-    loss: Loss,
-    solver: LocalSolver,
-    batch_blocks: std::ops::Range<usize>,
-    batch: &MachineBatch,
-    x0: &[f32],
-    z: &[f32],
-    mu: &[f32],
-    center: &[f32],
-    gamma: f32,
-    eta: f32,
-    meter: &mut ResourceMeter,
-) -> Result<(Vec<f32>, Vec<f32>)> {
-    let mut x = x0.to_vec();
-    let mut avg = crate::linalg::WeightedAvg::new(batch.d);
-    let mut total_n = 0u64;
-    // per-block buffers, materialized on the batch's first sweep
-    let lits = batch.vr_lits(engine)?;
-    for bi in batch_blocks {
-        let blk = &lits[bi];
-        if blk.valid == 0 {
-            continue;
-        }
-        let (x_end, x_avg) = match solver {
-            LocalSolver::Svrg => engine.svrg_block(loss, blk, &x, z, mu, center, gamma, eta)?,
-            LocalSolver::Saga => engine.saga_block(loss, blk, &x, z, mu, center, gamma, eta)?,
-        };
-        avg.add((1 + blk.valid) as f64, &x_avg);
-        total_n += blk.valid as u64;
-        x = x_end;
-    }
-    drop(lits);
-    meter.add_vec_ops(total_n);
-    let x_avg = if avg.total_weight() > 0.0 { avg.mean() } else { x.clone() };
-    Ok((x, x_avg))
-}
-
-/// [`vr_sweep_machine`] on whichever plane owns machine `j`'s batch: the
-/// designated-machine sweep of DSVRG/DSVRG-ERM and the per-machine local
-/// solves fan through this to the owning shard (or run inline when the
-/// batches are local).
-#[allow(clippy::too_many_arguments)]
-pub fn vr_sweep_on(
-    ctx: &mut RunContext,
-    solver: LocalSolver,
-    batch_blocks: std::ops::Range<usize>,
-    batches: &[MachineBatch],
-    j: usize,
-    x0: &[f32],
-    z: &[f32],
-    mu: &[f32],
-    center: &[f32],
-    gamma: f32,
-    eta: f32,
-) -> Result<(Vec<f32>, Vec<f32>)> {
-    let loss = ctx.loss;
-    if batches[j].shard.is_none() {
-        // sequential plane: run inline on the borrowed slices (no copies)
-        return vr_sweep_machine(
-            ctx.engine,
-            loss,
-            solver,
-            batch_blocks,
-            &batches[j],
-            x0,
-            z,
-            mu,
-            center,
-            gamma,
-            eta,
-            ctx.meter.machine(j),
-        );
-    }
-    // shard plane: the job closure must own its operands
-    let (x0, z, mu, center) = (x0.to_vec(), z.to_vec(), mu.to_vec(), center.to_vec());
-    fan_machine(
-        ctx.engine,
-        ctx.shards,
-        batches,
-        j,
-        &mut ctx.meter,
-        move |eng, batch, _i, m| {
-            vr_sweep_machine(
-                eng,
-                loss,
-                solver,
-                batch_blocks,
-                batch,
-                &x0,
-                &z,
-                &mu,
-                &center,
-                gamma,
-                eta,
-                m,
-            )
-        },
-    )
-}
-
-/// Chained core of the group-aligned VR sweep: advance the `[2, d]` state
-/// through `batch.groups[group_range]` riding the *fused* block uploads —
-/// no `vr_lits` materialization, no downloads, no host round-trips
-/// between groups. Returns the advanced state; divide by
-/// [`sweep_groups_weight`] (via `Engine::vr_avg`) for the sweep average.
-/// Charges the swept valid rows to `meter`, like the legacy path.
-#[allow(clippy::too_many_arguments)]
-pub fn vr_sweep_groups(
-    engine: &mut Engine,
-    loss: Loss,
-    solver: LocalSolver,
-    group_range: std::ops::Range<usize>,
-    batch: &MachineBatch,
-    state: DeviceVec,
-    z: &DeviceVec,
-    mu: &DeviceVec,
-    center: &DeviceVec,
-    gamma: &DeviceVec,
-    eta: &DeviceVec,
-    meter: &mut ResourceMeter,
-) -> Result<DeviceVec> {
-    let mut s = state;
-    let mut total_n = 0u64;
-    for gi in group_range {
-        let blk = &batch.groups[gi];
-        if blk.valid == 0 {
-            continue;
-        }
-        s = engine.vr_chain(solver.kernel(), loss, blk, &s, z, mu, center, gamma, eta)?;
-        total_n += blk.valid as u64;
-    }
-    meter.add_vec_ops(total_n);
-    Ok(s)
-}
-
-/// Total sweep-average weight of `batch.groups[group_range]`: the
-/// host-side divisor for the chained accumulator (`1 + valid` per
-/// non-empty block, matching the legacy combiner). Stub-safe — the
-/// weights ride the batch metadata, so the coordinator can compute the
-/// divisor for a shard-resident batch.
-pub fn sweep_groups_weight(batch: &MachineBatch, group_range: std::ops::Range<usize>) -> f64 {
-    group_range.map(|gi| batch.group_sweep_weight(gi)).sum()
-}
-
-/// Host-level wrapper over the chained sweep: uploads the state and the
-/// sweep-constant vectors, chains through the groups, and materializes
-/// `(x_end, x_avg)` — one `[2, d]` download per *sweep* instead of two
-/// `[d]` downloads per *block*. Semantics match [`vr_sweep_machine`] over
-/// the same blocks (the parity tests pin this down), and the host average
-/// (one f32 multiply per element) is bit-identical to the `vr_avg`
-/// kernel's, so a shard job running this reproduces the single-engine
-/// chained path exactly.
-#[allow(clippy::too_many_arguments)]
-pub fn vr_sweep_machine_grouped(
-    engine: &mut Engine,
-    loss: Loss,
-    solver: LocalSolver,
-    group_range: std::ops::Range<usize>,
-    batch: &MachineBatch,
-    x0: &[f32],
-    z: &[f32],
-    mu: &[f32],
-    center: &[f32],
-    gamma: f32,
-    eta: f32,
-    meter: &mut ResourceMeter,
-) -> Result<(Vec<f32>, Vec<f32>)> {
-    let d = batch.d;
-    let state = engine.vr_state_from(x0)?;
-    let z_dev = engine.upload_dev(z, &[d])?;
-    let mu_dev = engine.upload_dev(mu, &[d])?;
-    let c_dev = engine.upload_dev(center, &[d])?;
-    // sweep-constant scalars: uploaded once per sweep, not per group
-    let gamma_dev = engine.scalar_dev(gamma)?;
-    let eta_dev = engine.scalar_dev(eta)?;
-    let total_w = sweep_groups_weight(batch, group_range.clone());
-    let s = vr_sweep_groups(
-        engine,
-        loss,
-        solver,
-        group_range,
-        batch,
-        state,
-        &z_dev,
-        &mu_dev,
-        &c_dev,
-        &gamma_dev,
-        &eta_dev,
-        meter,
-    )?;
-    let host = engine.materialize(&s)?;
-    let (x_end, acc) = host.split_at(d);
-    let x_avg = if total_w > 0.0 {
-        let inv = (1.0 / total_w) as f32;
-        acc.iter().map(|&a| a * inv).collect()
-    } else {
-        x_end.to_vec()
-    };
-    Ok((x_end.to_vec(), x_avg))
-}
-
-/// One chained sweep-plus-average, fully on device: seed the `[2, d]`
-/// state from the host iterate `x0`, advance it through
-/// `batch.groups[group_range]`, and return the sweep average as a handle
-/// (`vr_avg`, with the empty-sweep fallback to the carried iterate). The
-/// ONE implementation of the parity-sensitive sweep-average sequence —
-/// chained DANE and one-shot local solves both run exactly this, so the
-/// cross-plane bitwise contract cannot drift between them.
-#[allow(clippy::too_many_arguments)]
-pub fn vr_sweep_avg_dev(
-    engine: &mut Engine,
-    loss: Loss,
-    solver: LocalSolver,
-    group_range: std::ops::Range<usize>,
-    batch: &MachineBatch,
-    x0: &[f32],
-    z: &DeviceVec,
-    mu: &DeviceVec,
-    center: &DeviceVec,
-    gamma: &DeviceVec,
-    eta: &DeviceVec,
-    meter: &mut ResourceMeter,
-) -> Result<DeviceVec> {
-    let state = engine.vr_state_from(x0)?;
-    let total_w = sweep_groups_weight(batch, group_range.clone());
-    let state = vr_sweep_groups(
-        engine,
-        loss,
-        solver,
-        group_range,
-        batch,
-        state,
-        z,
-        mu,
-        center,
-        gamma,
-        eta,
-        meter,
-    )?;
-    let inv_w = if total_w > 0.0 { (1.0 / total_w) as f32 } else { 0.0 };
-    engine.vr_avg(&state, inv_w)
-}
-
-/// [`vr_sweep_machine_grouped`] on whichever plane owns machine `j`'s
-/// batch — the chained designated-machine sweep as a shard fan-out.
-#[allow(clippy::too_many_arguments)]
-pub fn vr_sweep_grouped_on(
-    ctx: &mut RunContext,
-    solver: LocalSolver,
-    group_range: std::ops::Range<usize>,
-    batches: &[MachineBatch],
-    j: usize,
-    x0: &[f32],
-    z: &[f32],
-    mu: &[f32],
-    center: &[f32],
-    gamma: f32,
-    eta: f32,
-) -> Result<(Vec<f32>, Vec<f32>)> {
-    let loss = ctx.loss;
-    if batches[j].shard.is_none() {
-        // sequential plane: run inline on the borrowed slices (no copies)
-        return vr_sweep_machine_grouped(
-            ctx.engine,
-            loss,
-            solver,
-            group_range,
-            &batches[j],
-            x0,
-            z,
-            mu,
-            center,
-            gamma,
-            eta,
-            ctx.meter.machine(j),
-        );
-    }
-    // shard plane: the job closure must own its operands
-    let (x0, z, mu, center) = (x0.to_vec(), z.to_vec(), mu.to_vec(), center.to_vec());
-    fan_machine(
-        ctx.engine,
-        ctx.shards,
-        batches,
-        j,
-        &mut ctx.meter,
-        move |eng, batch, _i, m| {
-            vr_sweep_machine_grouped(
-                eng,
-                loss,
-                solver,
-                group_range,
-                batch,
-                &x0,
-                &z,
-                &mu,
-                &center,
-                gamma,
-                eta,
-                m,
-            )
-        },
-    )
 }

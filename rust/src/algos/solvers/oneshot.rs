@@ -1,4 +1,5 @@
-//! One-shot averaging (EMSO, Li et al. 2014 / Zhang et al. 2012).
+//! One-shot averaging (EMSO, Li et al. 2014 / Zhang et al. 2012),
+//! written ONCE against the execution plane.
 //!
 //! Each machine solves its *local* prox subproblem (equation 13) on its own
 //! minibatch to high accuracy, then a single all-reduce averages the local
@@ -10,23 +11,21 @@
 //! the re-snapshot between sweeps uses the machine's *local* gradient —
 //! no communication until the final average, which is the method's point.
 //!
-//! # Device-resident local solves
-//!
-//! With the chained artifacts present, each local solve runs on device:
-//! the local snapshot gradient is the `gacc{K}` chain + one `vec_scale`,
-//! the sweep advances a `[2, d]` state through the machine's fused groups,
-//! and the per-machine downlink is one d-vector per sweep (the next
-//! sweep's state seed) instead of two per block. On the single-engine
-//! plane the local solutions stay resident and the final average is the
-//! DeviceCollective; on the shard plane each machine solves on its own
-//! shard in parallel and the host collective combines the materialized
-//! solutions — bit-identical either way.
+//! Lane notes: on the chained lanes each local solve runs on device — the
+//! local snapshot gradient is the `gacc{K}` chain + one `vec_scale`, the
+//! sweep advances a `[2, d]` state over the machine's fused groups, and
+//! the per-machine downlink is one d-vector per extra sweep (the next
+//! sweep's state seed). On the Dev lane the local solutions stay resident
+//! and the single round is the DeviceCollective; on the Grouped lane each
+//! machine solves on its own shard in parallel and the host collective
+//! combines the materialized solutions — bit-identical either way.
 
-use super::{vr_sweep_avg_dev, vr_sweep_machine, LocalSolver, ProxSolver};
+use super::{vr_sweep_avg_dev, vr_sweep_machine, Lane, LocalSolver, PackMode, ProxSolver};
 use crate::accounting::ResourceMeter;
 use crate::algos::RunContext;
 use crate::data::Loss;
 use crate::objective::{fan_machines, local_grad_sum, local_grad_sum_dev, MachineBatch};
+use crate::runtime::plane::PlaneLocals;
 use crate::runtime::{DeviceVec, Engine};
 use anyhow::Result;
 use std::sync::Arc;
@@ -35,30 +34,19 @@ pub struct OneShotSolver {
     /// local SVRG sweeps (each re-snapshots on the local gradient)
     pub local_sweeps: usize,
     pub eta: f64,
-    /// pin the legacy per-block host path (parity tests / diagnostics)
-    pub force_legacy: bool,
 }
 
 impl OneShotSolver {
     pub fn new(local_sweeps: usize, eta: f64) -> Self {
-        Self { local_sweeps, eta, force_legacy: false }
-    }
-
-    /// No `red_ready` requirement: the DeviceCollective's host fallback
-    /// for unserved cluster sizes is bit-identical, so the chained local
-    /// solves stay worthwhile at any m.
-    fn chain_ready(&self, ctx: &RunContext) -> bool {
-        !self.force_legacy
-            && ctx.engine.chain_grad_ready(ctx.loss.tag(), ctx.d)
-            && ctx.engine.chain_vr_ready(ctx.loss.tag(), ctx.d)
+        Self { local_sweeps, eta }
     }
 }
 
 /// One machine's chained local solve: `sweeps` SVRG passes over the fused
 /// groups, each re-snapshotting on the machine's own chained gradient.
 /// Returns the final sweep average as a device handle on `engine` — the
-/// caller decides whether it crosses machines as a handle (single-engine
-/// DeviceCollective) or as host bits (shard plane); the bits agree.
+/// caller decides whether it crosses machines as a handle (Dev lane's
+/// DeviceCollective) or as host bits (Grouped lane); the bits agree.
 #[allow(clippy::too_many_arguments)]
 fn chained_local_solve(
     engine: &mut Engine,
@@ -112,9 +100,12 @@ impl ProxSolver for OneShotSolver {
         format!("oneshot-emso(sweeps={})", self.local_sweeps)
     }
 
-    /// Host block copies are only needed for the legacy per-block sweeps.
-    fn needs_vr_blocks(&self, ctx: &RunContext) -> bool {
-        !self.chain_ready(ctx)
+    /// Host blocks are only needed for Host-lane per-block sweeps.
+    fn pack_mode(&self, ctx: &RunContext) -> PackMode {
+        match ctx.plane.vr_lane(ctx.loss, ctx.d) {
+            Lane::Host => PackMode::Full,
+            _ => PackMode::GradOnly,
+        }
     }
 
     fn solve(
@@ -125,82 +116,90 @@ impl ProxSolver for OneShotSolver {
         gamma: f64,
         _t: usize,
     ) -> Result<Vec<f32>> {
-        let m = batches.len();
         let loss = ctx.loss;
         let sweeps = self.local_sweeps.max(1);
         let eta = self.eta as f32;
         let gamma32 = gamma as f32;
-        let sharded = batches.iter().any(|b| b.shard.is_some());
-
-        if self.chain_ready(ctx) && !sharded {
-            // single-engine chained plane: local solutions stay resident,
-            // the single round is the DeviceCollective
-            let mut locals = Vec::with_capacity(m);
-            for (i, batch) in batches.iter().enumerate() {
-                locals.push(chained_local_solve(
-                    ctx.engine,
-                    loss,
-                    batch,
-                    wprev,
-                    gamma32,
-                    eta,
-                    sweeps,
-                    ctx.meter.machine(i),
-                )?);
-            }
-            let z = ctx.net.device_all_reduce_avg(&mut ctx.meter, ctx.engine, &locals)?;
-            return ctx.engine.materialize(&z);
-        }
-
+        let lane = ctx.plane.vr_lane(ctx.loss, ctx.d);
         let wprev_s: Arc<[f32]> = Arc::from(wprev);
-        let mut locals: Vec<Vec<f32>> = if self.chain_ready(ctx) {
-            // shard plane, chained: each machine solves on its own shard
-            // with the same kernel sequence; solutions cross as host bits
-            fan_machines(ctx.engine, ctx.shards, batches, &mut ctx.meter, {
-                let wprev_s = Arc::clone(&wprev_s);
-                move |eng, batch, _i, meter| {
-                    let v = chained_local_solve(
-                        eng, loss, batch, &wprev_s, gamma32, eta, sweeps, meter,
-                    )?;
-                    eng.materialize(&v)
+
+        let locals = match lane {
+            Lane::Dev => {
+                // single-engine chained lane: local solutions stay
+                // resident, the single round is the DeviceCollective
+                let mut ls = Vec::with_capacity(batches.len());
+                for (i, batch) in batches.iter().enumerate() {
+                    ls.push(chained_local_solve(
+                        ctx.plane.engine,
+                        loss,
+                        batch,
+                        wprev,
+                        gamma32,
+                        eta,
+                        sweeps,
+                        ctx.meter.machine(i),
+                    )?);
                 }
-            })?
-        } else {
-            // legacy per-block sweeps (either plane)
-            fan_machines(ctx.engine, ctx.shards, batches, &mut ctx.meter, {
+                PlaneLocals::Dev(ls)
+            }
+            Lane::Grouped => {
+                // shard plane: each machine solves on its own shard with
+                // the same kernel sequence; solutions cross as host bits
                 let wprev_s = Arc::clone(&wprev_s);
-                move |eng, batch, _i, meter| {
-                    let mut xi = wprev_s.to_vec();
-                    for _sweep in 0..sweeps {
-                        // local full gradient at the snapshot (charged
-                        // locally)
-                        let gs = local_grad_sum(eng, loss, batch, &xi, meter)?;
-                        let cnt = gs.count.max(1.0) as f32;
-                        let mu: Vec<f32> = gs.grad_sum.iter().map(|&g| g / cnt).collect();
-                        let snapshot = xi.clone();
-                        let blocks = 0..batch.n_blocks();
-                        let (_x_end, x_avg) = vr_sweep_machine(
-                            eng,
-                            loss,
-                            LocalSolver::Svrg,
-                            blocks,
-                            batch,
-                            &xi,
-                            &snapshot,
-                            &mu,
-                            &wprev_s,
-                            gamma32,
-                            eta,
-                            meter,
+                PlaneLocals::Host(fan_machines(
+                    ctx.plane.engine,
+                    ctx.plane.shards,
+                    batches,
+                    &mut ctx.meter,
+                    move |eng, batch, _i, meter| {
+                        let v = chained_local_solve(
+                            eng, loss, batch, &wprev_s, gamma32, eta, sweeps, meter,
                         )?;
-                        xi = x_avg;
-                    }
-                    Ok(xi)
-                }
-            })?
+                        eng.materialize(&v)
+                    },
+                )?)
+            }
+            Lane::Host => {
+                // legacy per-block sweeps (either machine plane)
+                let wprev_s = Arc::clone(&wprev_s);
+                PlaneLocals::Host(fan_machines(
+                    ctx.plane.engine,
+                    ctx.plane.shards,
+                    batches,
+                    &mut ctx.meter,
+                    move |eng, batch, _i, meter| {
+                        let mut xi = wprev_s.to_vec();
+                        for _sweep in 0..sweeps {
+                            // local full gradient at the snapshot
+                            // (charged locally)
+                            let gs = local_grad_sum(eng, loss, batch, &xi, meter)?;
+                            let cnt = gs.count.max(1.0) as f32;
+                            let mu: Vec<f32> = gs.grad_sum.iter().map(|&g| g / cnt).collect();
+                            let snapshot = xi.clone();
+                            let blocks = 0..batch.n_blocks();
+                            let (_x_end, x_avg) = vr_sweep_machine(
+                                eng,
+                                loss,
+                                LocalSolver::Svrg,
+                                blocks,
+                                batch,
+                                &xi,
+                                &snapshot,
+                                &mu,
+                                &wprev_s,
+                                gamma32,
+                                eta,
+                                meter,
+                            )?;
+                            xi = x_avg;
+                        }
+                        Ok(xi)
+                    },
+                )?)
+            }
         };
         // the single communication round that gives the method its name
-        ctx.net.all_reduce_avg(&mut ctx.meter, &mut locals);
-        Ok(locals.pop().unwrap())
+        let z = ctx.all_reduce_avg_pv(locals)?;
+        ctx.plane.into_host(z)
     }
 }

@@ -5,11 +5,34 @@
 //! File format: one `key = value` per line, `#` comments, sections are
 //! flattened as `section.key`. This covers everything the examples and
 //! benches need without a full TOML grammar.
+//!
+//! Unknown keys are REJECTED with a did-you-mean suggestion when a
+//! `KvConfig` is turned into an [`ExperimentConfig`]: a typo like
+//! `b_locl=1024` must not silently fall back to the default. The accepted
+//! key set is [`CONFIG_KEYS`] — the single source of truth the CLI's
+//! `run --help` / `list` output prints.
 
 use crate::data::Loss;
+use crate::runtime::PlanePolicy;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+
+/// The accepted experiment keys with one-line help — ONE source of truth
+/// for parsing, validation and the CLI usage output.
+pub const CONFIG_KEYS: &[(&str, &str)] = &[
+    ("method", "method name (see `mbprox list`)"),
+    ("m", "number of machines"),
+    ("b_local", "per-machine minibatch size b"),
+    ("n_budget", "total sample budget n"),
+    ("loss", "loss function: sq | log"),
+    ("dim", "native feature dimension"),
+    ("seed", "PRNG seed (u64)"),
+    ("eval_samples", "held-out evaluation set size"),
+    ("eval_every", "evaluate every k outer iterations (0 = end only)"),
+    ("dataset", "named dataset: codrna | covtype | kddcup99 | year"),
+    ("plane", "execution plane: auto | host | chained | sharded"),
+];
 
 #[derive(Clone, Debug, Default)]
 pub struct KvConfig {
@@ -63,6 +86,16 @@ impl KvConfig {
         }
     }
 
+    /// Full-width u64 accessor (seeds): `get_usize(...) as u64` would
+    /// truncate on 32-bit targets and reject values above usize::MAX
+    /// inconsistently across platforms.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config key '{key}'='{v}'")),
+        }
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -77,6 +110,46 @@ impl KvConfig {
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(String::as_str)
     }
+
+    /// Reject any key outside `known`, suggesting the closest accepted
+    /// key by edit distance ("did you mean ...?"). Namespaced keys
+    /// (`section.key` — what `[section]` headers flatten to) are config
+    /// extensions outside the experiment namespace and pass through: the
+    /// typo guard covers the flat experiment keys only.
+    pub fn expect_keys(&self, known: &[(&str, &str)]) -> Result<()> {
+        for key in self.keys() {
+            if key.contains('.') || known.iter().any(|(k, _)| *k == key) {
+                continue;
+            }
+            let suggestion = known
+                .iter()
+                .map(|(k, _)| (*k, edit_distance(key, k)))
+                .min_by_key(|&(_, d)| d)
+                .filter(|&(_, d)| d <= 3);
+            match suggestion {
+                Some((best, _)) => bail!("unknown config key '{key}' (did you mean '{best}'?)"),
+                None => bail!("unknown config key '{key}' (see `mbprox run --help` for keys)"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Classic Levenshtein distance (tiny inputs: config key names).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 /// Top-level experiment description shared by the CLI and examples.
@@ -92,6 +165,9 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     pub method: String,
     pub dataset: Option<String>,
+    /// execution-plane policy (`plane=` key; `Auto` defers to the
+    /// runner's `PLANE` env / default)
+    pub plane: PlanePolicy,
 }
 
 impl Default for ExperimentConfig {
@@ -107,12 +183,14 @@ impl Default for ExperimentConfig {
             eval_every: 0,
             method: "mp-dsvrg".to_string(),
             dataset: None,
+            plane: PlanePolicy::Auto,
         }
     }
 }
 
 impl ExperimentConfig {
     pub fn from_kv(kv: &KvConfig) -> Result<ExperimentConfig> {
+        kv.expect_keys(CONFIG_KEYS)?;
         let dflt = ExperimentConfig::default();
         let loss_s = kv.get_str("loss", dflt.loss.tag());
         let loss = Loss::parse(&loss_s).ok_or_else(|| anyhow!("bad loss '{loss_s}'"))?;
@@ -120,17 +198,21 @@ impl ExperimentConfig {
         if dim == 0 {
             bail!("dim must be positive");
         }
+        let plane_s = kv.get_str("plane", dflt.plane.as_str());
+        let plane = PlanePolicy::parse(&plane_s)
+            .ok_or_else(|| anyhow!("bad plane '{plane_s}' (auto|host|chained|sharded)"))?;
         Ok(ExperimentConfig {
             m: kv.get_usize("m", dflt.m)?,
             b_local: kv.get_usize("b_local", dflt.b_local)?,
             n_budget: kv.get_usize("n_budget", dflt.n_budget)?,
             loss,
             dim,
-            seed: kv.get_usize("seed", dflt.seed as usize)? as u64,
+            seed: kv.get_u64("seed", dflt.seed)?,
             eval_samples: kv.get_usize("eval_samples", dflt.eval_samples)?,
             eval_every: kv.get_usize("eval_every", dflt.eval_every)?,
             method: kv.get_str("method", &dflt.method),
             dataset: kv.get("dataset").map(str::to_string),
+            plane,
         })
     }
 
@@ -162,11 +244,14 @@ mod tests {
 
     #[test]
     fn typed_getters_with_defaults() {
-        let kv = KvConfig::parse("a = 3\nb = 2.5\n").unwrap();
+        let kv = KvConfig::parse("a = 3\nb = 2.5\nc = 18446744073709551615\n").unwrap();
         assert_eq!(kv.get_usize("a", 0).unwrap(), 3);
         assert_eq!(kv.get_f64("b", 0.0).unwrap(), 2.5);
         assert_eq!(kv.get_usize("missing", 7).unwrap(), 7);
         assert!(kv.get_usize("b", 0).is_err());
+        // u64 accessor takes the full range regardless of usize width
+        assert_eq!(kv.get_u64("c", 0).unwrap(), u64::MAX);
+        assert_eq!(kv.get_u64("missing", 9).unwrap(), 9);
     }
 
     #[test]
@@ -178,6 +263,40 @@ mod tests {
         assert_eq!(ec.m, 2);
         assert_eq!(ec.b_local, 128);
         assert_eq!(ec.loss, Loss::Logistic);
+        assert_eq!(ec.plane, PlanePolicy::Auto);
+    }
+
+    #[test]
+    fn plane_key_parses() {
+        let kv = KvConfig::parse("plane = host\n").unwrap();
+        assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().plane, PlanePolicy::Host);
+        let kv = KvConfig::parse("plane = warp\n").unwrap();
+        assert!(ExperimentConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_rejected_with_suggestion() {
+        // the motivating typo: b_locl silently fell back to b_local=512
+        let kv = KvConfig::parse("b_locl = 1024\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("b_locl"), "{err}");
+        assert!(err.contains("did you mean 'b_local'"), "{err}");
+        // far-from-everything keys get the generic pointer
+        let kv = KvConfig::parse("zzzzqqqq = 1\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("unknown config key"), "{err}");
+        // sectioned keys are the documented file format, not typos:
+        // '[net]\nalpha=...' flattens to 'net.alpha' and must pass
+        let kv = KvConfig::parse("m = 8\n[net]\nalpha = 1e-4\n").unwrap();
+        assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().m, 8);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("b_local", "b_local"), 0);
+        assert_eq!(edit_distance("b_locl", "b_local"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

@@ -23,9 +23,9 @@ use crate::comm::{netmodel::NetModel, Network};
 use crate::config::ExperimentConfig;
 use crate::data::synth::{SynthSpec, SynthStream};
 use crate::data::table3::DatasetSpec;
-use crate::data::{Loss, SampleStream};
+use crate::data::{Loss, Sample, SampleStream};
 use crate::objective::Evaluator;
-use crate::runtime::{default_artifacts_dir, Engine, ShardPool};
+use crate::runtime::{default_artifacts_dir, Engine, ExecPlane, PlanePolicy, ShardPool};
 use crate::theory::{self, ProblemConsts};
 use anyhow::{anyhow, Result};
 use std::path::Path;
@@ -45,10 +45,19 @@ pub fn problem_consts(cfg: &ExperimentConfig) -> ProblemConsts {
 pub struct Runner {
     pub engine: Engine,
     pub net_model: NetModel,
-    /// the shard plane (engine-per-worker machine parallelism); `None`
-    /// drives machines sequentially on the coordinator engine. Results
-    /// are bit-identical either way — the plane buys wall-clock only.
+    /// the shard pool backing the sharded plane; `None` drives machines
+    /// on the coordinator engine. Results are bit-identical either way —
+    /// the pool buys wall-clock only.
     pub shards: Option<ShardPool>,
+    /// process-level execution-plane policy (`PLANE` env / default
+    /// `Auto`); a per-run `plane=` config key overrides it when not
+    /// `Auto`. Resolved ONCE per context into an [`ExecPlane`].
+    pub plane: PlanePolicy,
+    /// the pool in `shards` was self-attached by a `plane=sharded` run
+    /// (not by `SHARDS`/`with_shards`): it is kept for later sharded
+    /// runs but ignored when resolving `auto`/`chained`/`host`, so one
+    /// sharded run cannot change which plane later runs resolve to
+    self_pool: bool,
 }
 
 /// Parse the `SHARDS` environment variable: unset/empty/`0` means the
@@ -73,16 +82,25 @@ pub fn shards_from_env() -> Result<Option<usize>> {
 
 impl Runner {
     pub fn from_env() -> Result<Runner> {
-        Runner::new(Engine::from_env()?).with_env_shards(&default_artifacts_dir())
+        Runner::new(Engine::from_env()?)
+            .with_env_shards(&default_artifacts_dir())?
+            .with_env_plane()
     }
 
     pub fn new(engine: Engine) -> Runner {
-        Runner { engine, net_model: NetModel::default(), shards: None }
+        Runner {
+            engine,
+            net_model: NetModel::default(),
+            shards: None,
+            plane: PlanePolicy::Auto,
+            self_pool: false,
+        }
     }
 
     /// Attach an explicit shard pool.
     pub fn with_shards(mut self, pool: ShardPool) -> Runner {
         self.shards = Some(pool);
+        self.self_pool = false;
         self
     }
 
@@ -91,13 +109,45 @@ impl Runner {
     pub fn with_env_shards(mut self, artifacts_dir: &Path) -> Result<Runner> {
         if let Some(n) = shards_from_env()? {
             self.shards = Some(ShardPool::new(n, artifacts_dir)?);
+            self.self_pool = false;
         }
+        Ok(self)
+    }
+
+    /// Set the process-level plane policy explicitly.
+    pub fn with_plane(mut self, plane: PlanePolicy) -> Runner {
+        self.plane = plane;
+        self
+    }
+
+    /// Adopt the `PLANE` env var as the process-level policy (unset =
+    /// `Auto`; a typo is an error, not a silent fallback). Composes with
+    /// `SHARDS`: e.g. `PLANE=host SHARDS=4` runs the legacy kernels
+    /// fanned across four shard engines.
+    pub fn with_env_plane(mut self) -> Result<Runner> {
+        self.plane = PlanePolicy::from_env()?;
         Ok(self)
     }
 
     /// Padded artifact dim for a native dim.
     pub fn padded_dim(&self, native: usize) -> Result<usize> {
         self.engine.manifest().padded_dim(native)
+    }
+
+    /// Resolve the effective policy for one run (per-run `plane=` key
+    /// beats the process-level policy unless it is `Auto`) and make sure
+    /// the pool it needs exists: `plane=sharded` with no pool attaches a
+    /// single-worker pool (the full shard machinery on one worker), so
+    /// the policy is self-sufficient without `SHARDS`.
+    fn resolve_plane(&mut self, cfg_plane: PlanePolicy) -> Result<PlanePolicy> {
+        let policy =
+            if cfg_plane != PlanePolicy::Auto { cfg_plane } else { self.plane };
+        if policy == PlanePolicy::Sharded && self.shards.is_none() {
+            let dir = self.engine.manifest().dir.clone();
+            self.shards = Some(ShardPool::new(1, &dir)?);
+            self.self_pool = true;
+        }
+        Ok(policy)
     }
 
     /// Build a context with synthetic per-machine streams + evaluator.
@@ -122,21 +172,58 @@ impl Runner {
             .collect();
         let mut eval_stream = root.fork_stream(EVAL_TAG);
         let eval_samples = eval_stream.draw_many(cfg.eval_samples);
-        let evaluator = Some(Evaluator::new(&mut self.engine, d, cfg.loss, &eval_samples)?);
+        self.build_context(cfg.plane, cfg.loss, d, streams, &eval_samples, cfg.eval_every)
+    }
+
+    /// Build a context over caller-supplied per-machine streams and a
+    /// held-out evaluation set — the examples/benches/tests entry point.
+    /// Plane policy resolves exactly as in [`Runner::context`] (the
+    /// process-level policy; no per-run override).
+    pub fn context_over(
+        &mut self,
+        loss: Loss,
+        d: usize,
+        streams: Vec<Box<dyn SampleStream>>,
+        eval_samples: &[Sample],
+        eval_every: usize,
+    ) -> Result<RunContext<'_>> {
+        self.build_context(PlanePolicy::Auto, loss, d, streams, eval_samples, eval_every)
+    }
+
+    fn build_context(
+        &mut self,
+        cfg_plane: PlanePolicy,
+        loss: Loss,
+        d: usize,
+        streams: Vec<Box<dyn SampleStream>>,
+        eval_samples: &[Sample],
+        eval_every: usize,
+    ) -> Result<RunContext<'_>> {
+        let m = streams.len();
+        let policy = self.resolve_plane(cfg_plane)?;
         if let Some(pool) = &self.shards {
-            // stale machine state from a previous run must not leak in
+            // stale machine/evaluator state from a previous run must not
+            // leak in (the evaluator below packs onto the cleared shards)
             pool.clear_machines()?;
         }
+        // a self-attached pool serves plane=sharded runs only: for every
+        // other policy the runner behaves as if SHARDS were never set
+        let pool = if self.self_pool && policy != PlanePolicy::Sharded {
+            None
+        } else {
+            self.shards.as_ref()
+        };
+        let mut plane = ExecPlane::new(&mut self.engine, pool, policy)?;
+        let evaluator = Some(Evaluator::new(&mut plane, d, loss, eval_samples, m)?);
         Ok(RunContext {
-            engine: &mut self.engine,
-            shards: self.shards.as_ref(),
-            net: Network::new(cfg.m, self.net_model.clone()),
-            meter: ClusterMeter::new(cfg.m),
-            loss: cfg.loss,
+            plane,
+            net: Network::new(m, self.net_model.clone()),
+            meter: ClusterMeter::new(m),
+            loss,
             d,
             streams,
             evaluator,
-            eval_every: cfg.eval_every,
+            eval_every,
         })
     }
 

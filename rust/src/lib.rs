@@ -12,7 +12,8 @@
 //!   AOT-lowered once to HLO text (`make artifacts`) and executed here via
 //!   the PJRT CPU client — Python is never on the request path.
 //!
-//! Start with [`runtime::Engine`] + [`algos`]; see `examples/quickstart.rs`.
+//! Start with [`runtime::Engine`] + [`runtime::plane::ExecPlane`] +
+//! [`algos`]; see `examples/quickstart.rs`.
 
 pub mod accounting;
 pub mod algos;

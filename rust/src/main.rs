@@ -1,17 +1,22 @@
 //! mbprox CLI — run distributed stochastic optimization experiments.
 //!
 //! Usage:
-//!   mbprox run   [key=value ...]        run one method (see --help)
+//!   mbprox run   [key=value ...]        run one method (see run --help)
 //!   mbprox sweep [key=value ...]        sweep b_local over a log grid
-//!   mbprox list                         list registered methods
+//!   mbprox list                         list methods + accepted keys
 //!   mbprox info                         engine / artifact information
 //!
-//! Common keys: method, m, b_local, n_budget, loss (sq|log), dim, seed,
-//! eval_samples, eval_every, dataset (codrna|covtype|kddcup99|year),
-//! config=<path> loads a key=value file first.
+//! Configuration is `key = value` pairs (`config=<path>` loads a file
+//! first); the accepted key set is `config::CONFIG_KEYS` — unknown keys
+//! are rejected with a did-you-mean suggestion. The `plane=` key (or the
+//! `PLANE` env var) selects the execution plane: `auto` (sharded when
+//! `SHARDS` attaches a pool, chained otherwise), `host` (legacy
+//! per-block), `chained` (single-engine device-resident), or `sharded`
+//! (engine-per-worker). All planes produce the same results with
+//! identical paper-units accounting — see `runtime::plane`.
 
 use anyhow::{anyhow, Result};
-use mbprox::config::{ExperimentConfig, KvConfig};
+use mbprox::config::{ExperimentConfig, KvConfig, CONFIG_KEYS};
 use mbprox::coordinator::{Runner, METHODS};
 use mbprox::metrics;
 
@@ -29,7 +34,21 @@ fn parse_cfg(args: &[String]) -> Result<ExperimentConfig> {
     ExperimentConfig::from_kv(&kv)
 }
 
+/// The accepted key set, rendered from the one source of truth.
+fn print_keys() {
+    println!("keys (key=value; config=<path> loads a file first):");
+    for (key, help) in CONFIG_KEYS {
+        println!("  {key:<14} {help}");
+    }
+}
+
 fn cmd_run(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "--help" || a == "-h" || a == "help") {
+        println!("mbprox run [key=value ...]\n");
+        print_keys();
+        println!("\nmethods: {}", METHODS.join(" "));
+        return Ok(());
+    }
     let cfg = parse_cfg(args)?;
     let mut runner = Runner::from_env()?;
     eprintln!(
@@ -69,6 +88,7 @@ fn cmd_info() -> Result<()> {
     let runner = Runner::from_env()?;
     let m = runner.engine.manifest();
     println!("platform: {}", runner.engine.platform());
+    println!("plane policy: {}", runner.plane.as_str());
     println!("artifacts dir: {}", m.dir.display());
     println!("block rows: {}", m.block);
     println!("dims: {:?}", m.dims);
@@ -84,20 +104,23 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("list") => {
+            println!("methods:");
             for m in METHODS {
-                println!("{m}");
+                println!("  {m}");
             }
+            println!();
+            print_keys();
             Ok(())
         }
         Some("info") => cmd_info(),
         Some("help") | Some("--help") | None => {
             println!(
                 "mbprox — Minibatch-Prox distributed stochastic optimization\n\n\
-                 subcommands:\n  run [key=value ...]\n  sweep [key=value ...]\n  list\n  info\n\n\
-                 keys: method m b_local n_budget loss dim seed eval_samples eval_every dataset\n\
-                 methods: {}",
-                METHODS.join(" ")
+                 subcommands:\n  run [key=value ...]   (run --help for keys)\n  \
+                 sweep [key=value ...]\n  list\n  info\n"
             );
+            print_keys();
+            println!("\nmethods: {}", METHODS.join(" "));
             Ok(())
         }
         Some(other) => Err(anyhow!("unknown subcommand '{other}' (try help)")),

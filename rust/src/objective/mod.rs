@@ -564,51 +564,148 @@ pub fn distributed_mean_grad_dev(
 }
 
 /// Held-out estimator of the population objective phi(w).
+///
+/// The evaluation set is split into one fixed segment per cluster machine
+/// (`shard_ranges(n_eval, m)`), each packed grad-only as its own batch.
+/// The segmentation is plane-independent: on the sharded plane the
+/// segments live on their owning shards and evaluation fans across them
+/// in parallel, while host/chained planes evaluate the same segments
+/// inline on the coordinator engine — per-segment `(loss_sum, count)`
+/// partials are combined in fixed segment order in f64 either way, so the
+/// objective value is bit-identical on every plane and shard count
+/// (pinned by `rust/tests/shard_parity.rs`).
 pub struct Evaluator {
     pub loss: Loss,
-    pub batch: MachineBatch,
+    /// one grad-only batch per segment; stubs when shard-resident
+    pub segments: Vec<MachineBatch>,
+}
+
+/// One segment's unnormalized loss: `(loss_sum, count)` summed over the
+/// fused groups in order. The shared kernel of every evaluation plane.
+fn segment_loss(
+    engine: &mut Engine,
+    loss: Loss,
+    batch: &MachineBatch,
+    w: &[f32],
+) -> Result<(f64, f64)> {
+    let mut lsum = 0.0;
+    let mut cnt = 0.0;
+    for blk in &batch.groups {
+        let out = engine.grad_block(loss, blk, w)?;
+        lsum += out.loss_sum;
+        cnt += out.count;
+    }
+    Ok((lsum, cnt))
 }
 
 impl Evaluator {
+    /// Pack `samples` into `segments` per-segment grad-only batches on
+    /// `plane`: on the coordinator engine, or each on its owning shard
+    /// when the plane carries a pool (`segment i` lives on `shard_of(i)`,
+    /// like machine state).
     pub fn new(
-        engine: &mut Engine,
+        plane: &mut crate::runtime::ExecPlane,
         engine_d: usize,
         loss: Loss,
         samples: &[Sample],
+        segments: usize,
     ) -> Result<Evaluator> {
-        // evaluation only ever takes the grad path: skip the host block
-        // retention entirely
-        Ok(Evaluator { loss, batch: MachineBatch::pack_grad_only(engine, engine_d, samples)? })
+        let ranges = crate::data::sampler::shard_ranges(samples.len(), segments.max(1));
+        let segments = if let Some(pool) = plane.shards {
+            let mut pends = Vec::with_capacity(ranges.len());
+            for (i, r) in ranges.iter().enumerate() {
+                let seg: Vec<Sample> = samples[r.clone()].to_vec();
+                pends.push(pool.submit(pool.shard_of(i), move |state| {
+                    let batch = MachineBatch::pack_grad_only(&mut state.engine, engine_d, &seg)?;
+                    let reply = (batch.n, batch.n_blocks(), batch.shard_meta(i));
+                    state.eval.insert(i, batch);
+                    Ok(reply)
+                }));
+            }
+            let mut stubs = Vec::with_capacity(pends.len());
+            for pend in pends {
+                let (n, n_blocks, meta) = pend.wait()?;
+                stubs.push(MachineBatch::stub(engine_d, n, n_blocks, meta));
+            }
+            stubs
+        } else {
+            ranges
+                .iter()
+                .map(|r| MachineBatch::pack_grad_only(plane.engine, engine_d, &samples[r.clone()]))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Evaluator { loss, segments })
     }
 
     /// Mean instantaneous loss over the evaluation set (not metered:
     /// evaluation is experimenter-side, not part of the algorithm).
-    /// `w` is uploaded once per call via the session pool — evaluation
-    /// no longer pays a per-block upload.
-    pub fn objective(&self, engine: &mut Engine, w: &[f32]) -> Result<f64> {
+    /// Fans one job per segment across the shard plane when the segments
+    /// are shard-resident; `w` rides each engine's session pool either
+    /// way, so evaluation never pays a per-block upload.
+    pub fn objective(&self, plane: &mut crate::runtime::ExecPlane, w: &[f32]) -> Result<f64> {
+        let loss = self.loss;
+        let sharded = self.segments.iter().any(|b| b.shard.is_some());
         let mut lsum = 0.0;
         let mut cnt = 0.0;
-        for blk in &self.batch.groups {
-            let out = engine.grad_block(self.loss, blk, w)?;
-            lsum += out.loss_sum;
-            cnt += out.count;
+        if sharded {
+            let pool = plane
+                .shards
+                .ok_or_else(|| anyhow!("shard-resident evaluator needs a shard plane"))?;
+            let w_shared: Arc<[f32]> = Arc::from(w);
+            let pends: Vec<_> = (0..self.segments.len())
+                .map(|i| {
+                    let w_shared = Arc::clone(&w_shared);
+                    pool.submit(pool.shard_of(i), move |state| {
+                        let (engine, batch) = state.eval_segment(i)?;
+                        segment_loss(engine, loss, batch, &w_shared)
+                    })
+                })
+                .collect();
+            // combine in fixed segment order — the plane-independent fold
+            for pend in pends {
+                let (l, c) = pend.wait()?;
+                lsum += l;
+                cnt += c;
+            }
+        } else {
+            for batch in &self.segments {
+                let (l, c) = segment_loss(plane.engine, loss, batch, w)?;
+                lsum += l;
+                cnt += c;
+            }
         }
         Ok(if cnt > 0.0 { lsum / cnt } else { 0.0 })
     }
 
-    /// [`Evaluator::objective`] at a device-resident iterate: the handle
-    /// is aliased into the session pool (zero uploads), so a chained
-    /// round can hit an evaluation checkpoint without materializing its
-    /// iterate first. Downloads only the per-group loss tuples.
-    pub fn objective_dev(&self, engine: &mut Engine, w: &DeviceVec) -> Result<f64> {
-        let mut lsum = 0.0;
-        let mut cnt = 0.0;
-        for blk in &self.batch.groups {
-            let out = engine.grad_block_dev(self.loss, blk, w)?;
-            lsum += out.loss_sum;
-            cnt += out.count;
+    /// [`Evaluator::objective`] at a plane-resident iterate. A Dev-lane
+    /// handle on the single-engine plane is aliased into the session pool
+    /// (zero uploads), so a chained round can hit an evaluation
+    /// checkpoint without materializing its iterate; with shard-resident
+    /// segments the iterate crosses as host bits (f32-exact, metered).
+    pub fn objective_pv(
+        &self,
+        plane: &mut crate::runtime::ExecPlane,
+        w: &crate::runtime::PlaneVec,
+    ) -> Result<f64> {
+        match w {
+            crate::runtime::PlaneVec::Host(h) => self.objective(plane, h),
+            crate::runtime::PlaneVec::Dev(dv) => {
+                if self.segments.iter().any(|b| b.shard.is_some()) {
+                    let host = plane.engine.materialize(dv)?;
+                    return self.objective(plane, &host);
+                }
+                let mut lsum = 0.0;
+                let mut cnt = 0.0;
+                for batch in &self.segments {
+                    for blk in &batch.groups {
+                        let out = plane.engine.grad_block_dev(self.loss, blk, dv)?;
+                        lsum += out.loss_sum;
+                        cnt += out.count;
+                    }
+                }
+                Ok(if cnt > 0.0 { lsum / cnt } else { 0.0 })
+            }
         }
-        Ok(if cnt > 0.0 { lsum / cnt } else { 0.0 })
     }
 }
 

@@ -31,6 +31,23 @@
 //!    host `all_reduce_*` on the same inputs — the paper-units
 //!    round/vector accounting stays authoritative either way.
 //!
+//! # The execution plane
+//!
+//! Algorithms never touch the verbs directly: they program against
+//! [`plane::ExecPlane`], the ONE execution-plane API that owns engine
+//! access, the per-machine fan/join, the collectives, the VR sweeps and
+//! the materialization points. It has three implementations — `Host`
+//! (legacy per-block dispatches), `Chained` (the DeviceVec pipeline) and
+//! `Sharded` (the engine-per-worker [`shard::ShardPool`]) — selected by
+//! runtime policy ([`plane::PlanePolicy`]: the `plane=` config key /
+//! `PLANE` env, resolved once in the coordinator; `auto` = sharded when a
+//! pool is attached, chained otherwise). Every solver has exactly one
+//! body; a GPU/TPU backend that implements the four verbs below plugs in
+//! underneath the plane and inherits every algorithm. See
+//! `rust/tests/plane_matrix.rs` for the cross-plane contract (chained and
+//! sharded bit-identical; host numerically equivalent with identical
+//! paper-units accounting).
+//!
 //! # The shard plane
 //!
 //! The four verbs describe ONE engine. The [`shard::ShardPool`] scales
@@ -70,6 +87,7 @@
 pub mod artifact;
 pub mod chain;
 pub mod exec;
+pub mod plane;
 pub mod session;
 pub mod shard;
 
@@ -80,6 +98,7 @@ use std::time::Instant;
 
 pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
 pub use chain::DeviceVec;
+pub use plane::{ExecPlane, Lane, LocalSolver, PlaneKind, PlaneLocals, PlanePolicy, PlaneVec};
 pub use session::ExecSession;
 pub use shard::{Pending, ShardPool, ShardState};
 

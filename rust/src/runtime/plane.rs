@@ -1,0 +1,1036 @@
+//! ExecPlane: ONE execution-plane API through which every algorithm
+//! drives the runtime.
+//!
+//! The paper's point is that minibatch-prox trades communication for
+//! memory across deployment regimes; the codebase's point is that the
+//! *algorithms* should not care which regime they run in. An
+//! [`ExecPlane`] owns engine access, the per-machine fan/join, the
+//! collectives, the VR sweeps and the materialization points, with three
+//! interchangeable implementations behind one verb set:
+//!
+//! - **Host** — the legacy per-block pipeline: tupled dispatches, host
+//!   accumulation, host collectives. The pre-chaining engine contract,
+//!   kept alive (and CI-tested under `PLANE=host`) as the reference
+//!   implementation and the fallback for manifests without chained
+//!   artifacts.
+//! - **Chained** — the single-engine device-resident pipeline: gradients
+//!   fold through `gacc{K}` accumulator chains, VR sweeps advance `[2,d]`
+//!   states over the fused group uploads, collectives run the `redm{M}`
+//!   device reduce, and bytes leave the device only at explicit
+//!   materialization points.
+//! - **Sharded** — the engine-per-worker plane ([`ShardPool`]): the SAME
+//!   chained kernels run per machine on the owning shard's engine, and
+//!   cross-machine values travel as host bits through the fixed-order f64
+//!   host collectives — bit-identical to the Chained plane for every
+//!   shard count (f32 host round trips are exact, and the host collective
+//!   interior is bit-identical to the device reduce).
+//!
+//! Solvers are written ONCE against the verbs below and resolve a
+//! [`Lane`] per solve; plane selection is runtime policy
+//! ([`PlanePolicy`]: the `plane=` config key / `PLANE` env, resolved once
+//! in the coordinator), not per-solver gating. A GPU/TPU backend
+//! implements the four runtime verbs (upload/dispatch/chain/reduce — see
+//! the `runtime` module docs) and inherits every algorithm through this
+//! API.
+//!
+//! # Lanes
+//!
+//! A [`Lane`] is the *numerical* route a solve takes on its plane:
+//! `Host` (legacy per-block kernels), `Grouped` (chained kernels, host
+//! collectives — the Sharded plane's lane) or `Dev` (chained kernels,
+//! device collectives — the Chained plane's lane). The plane resolves the
+//! lane from its kind and the manifest's capabilities
+//! ([`ExecPlane::vr_lane`] / [`ExecPlane::cg_lane`]), so a manifest
+//! without chained artifacts degrades honestly to the Host lane instead
+//! of erroring. `Grouped` and `Dev` are bit-identical by construction;
+//! `Host` is numerically equivalent (the parity tests pin 1e-4) with
+//! identical paper-units accounting.
+
+use super::chain::VrKernel;
+use super::shard::ShardPool;
+use super::{DeviceVec, Engine};
+use crate::accounting::{ClusterMeter, ResourceMeter};
+use crate::comm::Network;
+use crate::data::Loss;
+use crate::objective::{
+    distributed_mean_grad, distributed_mean_grad_dev, fan_machine, fan_machines,
+    mean_grad_chained_host, MachineBatch,
+};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// The `plane=` policy: how the coordinator picks an execution plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PlanePolicy {
+    /// `Sharded` when a shard pool is attached, `Chained` otherwise —
+    /// exactly the pre-policy behavior, bit for bit.
+    #[default]
+    Auto,
+    Host,
+    Chained,
+    Sharded,
+}
+
+impl PlanePolicy {
+    pub fn parse(s: &str) -> Option<PlanePolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(PlanePolicy::Auto),
+            "host" => Some(PlanePolicy::Host),
+            "chained" => Some(PlanePolicy::Chained),
+            "sharded" => Some(PlanePolicy::Sharded),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanePolicy::Auto => "auto",
+            PlanePolicy::Host => "host",
+            PlanePolicy::Chained => "chained",
+            PlanePolicy::Sharded => "sharded",
+        }
+    }
+
+    /// Parse the `PLANE` environment variable (unset/empty = `Auto`).
+    /// Any other unrecognized value is an error — a typo must not
+    /// silently fall back to a different plane.
+    pub fn from_env() -> Result<PlanePolicy> {
+        match std::env::var("PLANE") {
+            Err(_) => Ok(PlanePolicy::Auto),
+            Ok(raw) if raw.trim().is_empty() => Ok(PlanePolicy::Auto),
+            Ok(raw) => PlanePolicy::parse(&raw)
+                .ok_or_else(|| anyhow!("PLANE='{raw}' is not auto|host|chained|sharded")),
+        }
+    }
+}
+
+/// A resolved execution plane (no `Auto` left).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaneKind {
+    Host,
+    Chained,
+    Sharded,
+}
+
+impl PlaneKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlaneKind::Host => "host",
+            PlaneKind::Chained => "chained",
+            PlaneKind::Sharded => "sharded",
+        }
+    }
+}
+
+/// The numerical route a solve takes on its plane (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// legacy per-block kernels, host collectives
+    Host,
+    /// chained kernels, host-bits collectives (the Sharded plane's lane)
+    Grouped,
+    /// chained kernels, device-resident collectives (single engine)
+    Dev,
+}
+
+/// Which variance-reduced kernel performs the local sweeps.
+///
+/// The paper's Appendix E uses SAGA for the local DANE subproblems; SVRG
+/// is the Algorithm-1 (DSVRG) choice. Both exist as per-block AOT kernels
+/// (Host lane) and chained `[2,d]`-state kernels (Grouped/Dev lanes) with
+/// identical interfaces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalSolver {
+    Svrg,
+    Saga,
+}
+
+impl LocalSolver {
+    pub fn tag(self) -> &'static str {
+        match self {
+            LocalSolver::Svrg => "svrg",
+            LocalSolver::Saga => "saga",
+        }
+    }
+
+    /// The chained kernel family implementing this solver's sweeps.
+    pub fn kernel(self) -> VrKernel {
+        match self {
+            LocalSolver::Svrg => VrKernel::Svrg,
+            LocalSolver::Saga => VrKernel::Saga,
+        }
+    }
+}
+
+/// A plane-resident vector value: host bits on the Host/Grouped lanes, a
+/// device handle on the Dev lane. Conversions are f32-exact both ways;
+/// only the metered traffic differs, which is why [`ExecPlane::to_host`]
+/// charges the Dev-lane materialize like any other download.
+#[derive(Clone, Debug)]
+pub enum PlaneVec {
+    Host(Vec<f32>),
+    Dev(DeviceVec),
+}
+
+impl PlaneVec {
+    pub fn len(&self) -> usize {
+        match self {
+            PlaneVec::Host(v) => v.len(),
+            PlaneVec::Dev(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Host bits, without a device round trip (errors on a Dev value —
+    /// the lane contract guarantees reprs line up; use
+    /// [`ExecPlane::to_host`] for a charged materialize).
+    pub fn host(&self) -> Result<&[f32]> {
+        match self {
+            PlaneVec::Host(v) => Ok(v),
+            PlaneVec::Dev(v) => bail!("expected host-lane vector, got device handle {v:?}"),
+        }
+    }
+
+    /// The device handle (errors on a host value).
+    pub fn dev(&self) -> Result<&DeviceVec> {
+        match self {
+            PlaneVec::Dev(v) => Ok(v),
+            PlaneVec::Host(_) => bail!("expected device-lane vector, got host bits"),
+        }
+    }
+}
+
+/// Per-machine locals awaiting a collective, in lane representation.
+pub enum PlaneLocals {
+    Host(Vec<Vec<f32>>),
+    Dev(Vec<DeviceVec>),
+}
+
+/// The execution plane: engine access + (optional) shard pool + the
+/// resolved kind, behind the verb set every algorithm is written against.
+pub struct ExecPlane<'e> {
+    pub engine: &'e mut Engine,
+    /// the shard pool backing the Sharded plane; `Some` on the Host plane
+    /// too when the process has one attached (legacy per-machine work
+    /// still fans across it — engine affinity is a property of where the
+    /// batches live, not of the kernel lane)
+    pub shards: Option<&'e ShardPool>,
+    kind: PlaneKind,
+}
+
+impl<'e> ExecPlane<'e> {
+    /// Resolve `policy` against the attached pool. `Chained` with a pool
+    /// is an error (the single-engine pipeline cannot honor shard-resident
+    /// batches); `Sharded` without a pool is an error (the coordinator
+    /// attaches one — see `Runner::context`).
+    pub fn new(
+        engine: &'e mut Engine,
+        shards: Option<&'e ShardPool>,
+        policy: PlanePolicy,
+    ) -> Result<ExecPlane<'e>> {
+        let kind = match policy {
+            PlanePolicy::Auto => {
+                if shards.is_some() {
+                    PlaneKind::Sharded
+                } else {
+                    PlaneKind::Chained
+                }
+            }
+            PlanePolicy::Host => PlaneKind::Host,
+            PlanePolicy::Chained => {
+                ensure!(
+                    shards.is_none(),
+                    "plane=chained is the single-engine pipeline: unset SHARDS or use plane=sharded"
+                );
+                PlaneKind::Chained
+            }
+            PlanePolicy::Sharded => {
+                ensure!(shards.is_some(), "plane=sharded needs a shard pool (set SHARDS>=1)");
+                PlaneKind::Sharded
+            }
+        };
+        Ok(ExecPlane { engine, shards, kind })
+    }
+
+    /// The `Auto` resolution (infallible): Sharded with a pool, Chained
+    /// without.
+    pub fn auto(engine: &'e mut Engine, shards: Option<&'e ShardPool>) -> ExecPlane<'e> {
+        ExecPlane::new(engine, shards, PlanePolicy::Auto).expect("auto resolution is infallible")
+    }
+
+    /// The single-engine chained plane (tests/benches).
+    pub fn chained(engine: &'e mut Engine) -> ExecPlane<'e> {
+        ExecPlane { engine, shards: None, kind: PlaneKind::Chained }
+    }
+
+    /// The legacy per-block host plane (tests/benches/diagnostics).
+    pub fn host(engine: &'e mut Engine) -> ExecPlane<'e> {
+        ExecPlane { engine, shards: None, kind: PlaneKind::Host }
+    }
+
+    pub fn kind(&self) -> PlaneKind {
+        self.kind
+    }
+
+    /// The VR-family lane (gradient chains + group-aligned sweeps) for
+    /// `(loss, d)` on this plane. Degrades to `Host` when the manifest
+    /// lacks the chained artifacts.
+    pub fn vr_lane(&self, loss: Loss, d: usize) -> Lane {
+        let ready = self.engine.chain_grad_ready(loss.tag(), d)
+            && self.engine.chain_vr_ready(loss.tag(), d);
+        match self.kind {
+            PlaneKind::Host => Lane::Host,
+            _ if !ready => Lane::Host,
+            PlaneKind::Sharded => Lane::Grouped,
+            PlaneKind::Chained => Lane::Dev,
+        }
+    }
+
+    /// The CG-family lane (gradient chains + normal-matvec chains + the
+    /// `redm{M}` reduce for `m` machines). The CG recurrence runs on the
+    /// coordinator engine on BOTH device-capable planes — the Sharded
+    /// plane fans only the matvec partials — so the Dev lane serves both.
+    pub fn cg_lane(&self, loss: Loss, d: usize, m: usize) -> Lane {
+        let ready = self.engine.chain_grad_ready(loss.tag(), d)
+            && self.engine.chain_nm_ready(d)
+            && self.engine.red_ready(m, d);
+        match self.kind {
+            PlaneKind::Host => Lane::Host,
+            _ if !ready => Lane::Host,
+            _ => Lane::Dev,
+        }
+    }
+
+    // ---- PlaneVec plumbing ---------------------------------------------
+
+    /// Bring host bits into lane representation (one upload on the Dev
+    /// lane, a copy otherwise).
+    pub fn lift(&mut self, lane: Lane, v: &[f32]) -> Result<PlaneVec> {
+        match lane {
+            Lane::Dev => Ok(PlaneVec::Dev(self.engine.upload_dev(v, &[v.len()])?)),
+            _ => Ok(PlaneVec::Host(v.to_vec())),
+        }
+    }
+
+    /// The lane's zero vector (the cached device zero on the Dev lane —
+    /// uploaded once per length, ever).
+    pub fn zeros(&mut self, lane: Lane, n: usize) -> Result<PlaneVec> {
+        match lane {
+            Lane::Dev => Ok(PlaneVec::Dev(self.engine.zeros_dev(n)?)),
+            _ => Ok(PlaneVec::Host(vec![0.0; n])),
+        }
+    }
+
+    /// Host bits of a plane vector — THE materialization point: on the
+    /// Dev lane this is a charged download (the only way bytes leave the
+    /// device), on host lanes a copy.
+    pub fn to_host(&mut self, v: &PlaneVec) -> Result<Vec<f32>> {
+        match v {
+            PlaneVec::Host(h) => Ok(h.clone()),
+            PlaneVec::Dev(d) => self.engine.materialize(d),
+        }
+    }
+
+    /// [`ExecPlane::to_host`], consuming (no copy on host lanes).
+    pub fn into_host(&mut self, v: PlaneVec) -> Result<Vec<f32>> {
+        match v {
+            PlaneVec::Host(h) => Ok(h),
+            PlaneVec::Dev(d) => self.engine.materialize(&d),
+        }
+    }
+
+    /// `<u, v>` in the lane's native precision: f64 accumulation on host
+    /// bits, the f32 `vdot` kernel (one scalar download) on device.
+    pub fn dot(&mut self, u: &PlaneVec, v: &PlaneVec) -> Result<f64> {
+        match (u, v) {
+            (PlaneVec::Host(a), PlaneVec::Host(b)) => Ok(crate::linalg::dot(a, b)),
+            (PlaneVec::Dev(a), PlaneVec::Dev(b)) => self.engine.vec_dot(a, b),
+            _ => bail!("dot across lanes: materialize first"),
+        }
+    }
+
+    /// `a*u + b*v` elementwise in f32 — identical bit sequence on both
+    /// representations (the host loop mirrors the `vaxpby` kernel).
+    pub fn axpby(&mut self, a: f32, u: &PlaneVec, b: f32, v: &PlaneVec) -> Result<PlaneVec> {
+        match (u, v) {
+            (PlaneVec::Host(x), PlaneVec::Host(y)) => {
+                ensure!(x.len() == y.len(), "axpby length mismatch");
+                Ok(PlaneVec::Host(
+                    x.iter().zip(y).map(|(&xi, &yi)| a * xi + b * yi).collect(),
+                ))
+            }
+            (PlaneVec::Dev(x), PlaneVec::Dev(y)) => {
+                Ok(PlaneVec::Dev(self.engine.vec_axpby(a, x, b, y)?))
+            }
+            _ => bail!("axpby across lanes: materialize first"),
+        }
+    }
+
+    // ---- collectives (one charged round each; identical accounting on
+    // every lane — both arms funnel through the same Network::charge) ----
+
+    /// Average per-machine locals; returns the mean every machine ends
+    /// with. One round.
+    pub fn all_reduce_avg(
+        &mut self,
+        net: &mut Network,
+        meter: &mut ClusterMeter,
+        locals: PlaneLocals,
+    ) -> Result<PlaneVec> {
+        match locals {
+            PlaneLocals::Host(mut ls) => {
+                net.all_reduce_avg(meter, &mut ls);
+                Ok(PlaneVec::Host(ls.pop().expect("nonempty collective")))
+            }
+            PlaneLocals::Dev(ls) => {
+                Ok(PlaneVec::Dev(net.device_all_reduce_avg(meter, self.engine, &ls)?))
+            }
+        }
+    }
+
+    /// Machine `src`'s value becomes known to all. One round.
+    pub fn broadcast(
+        &mut self,
+        net: &mut Network,
+        meter: &mut ClusterMeter,
+        src: usize,
+        v: PlaneVec,
+    ) -> PlaneVec {
+        match v {
+            PlaneVec::Host(h) => {
+                let mut ls: Vec<Vec<f32>> = (0..net.m).map(|_| h.clone()).collect();
+                net.broadcast(meter, src, &mut ls);
+                PlaneVec::Host(ls.swap_remove(src))
+            }
+            PlaneVec::Dev(d) => PlaneVec::Dev(net.device_broadcast(meter, src, &d)),
+        }
+    }
+
+    // ---- gradient verbs ------------------------------------------------
+
+    /// Distributed mean gradient at `z` — one weighted all-reduce round,
+    /// on the lane's kernels: legacy tupled dispatches (Host), chained
+    /// accumulators with the host collective (Grouped), or the fully
+    /// device-resident chain + reduce (Dev).
+    pub fn mean_grad(
+        &mut self,
+        lane: Lane,
+        net: &mut Network,
+        meter: &mut ClusterMeter,
+        loss: Loss,
+        batches: &[MachineBatch],
+        z: &PlaneVec,
+    ) -> Result<PlaneVec> {
+        match lane {
+            Lane::Dev => Ok(PlaneVec::Dev(distributed_mean_grad_dev(
+                self.engine,
+                self.shards,
+                loss,
+                batches,
+                z.dev()?,
+                net,
+                meter,
+            )?)),
+            Lane::Grouped => Ok(PlaneVec::Host(mean_grad_chained_host(
+                self.engine,
+                self.shards,
+                loss,
+                batches,
+                z.host()?,
+                net,
+                meter,
+            )?)),
+            Lane::Host => Ok(PlaneVec::Host(
+                distributed_mean_grad(
+                    self.engine,
+                    self.shards,
+                    loss,
+                    batches,
+                    z.host()?,
+                    net,
+                    meter,
+                )?
+                .0,
+            )),
+        }
+    }
+
+    // ---- VR sweeps -----------------------------------------------------
+
+    /// Open a designated-machine VR sweep session over `batches` with a
+    /// `p`-way batch partition per machine (the DSVRG `(j, s)` token's
+    /// sweep side): block ranges on the Host lane, fused-group ranges on
+    /// the chained lanes, the carried iterate / `[2,d]` device state held
+    /// inside.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vr_sweeper(
+        &mut self,
+        lane: Lane,
+        batches: &[MachineBatch],
+        p: usize,
+        kernel: LocalSolver,
+        x0: &[f32],
+        center: &[f32],
+        gamma: f32,
+        eta: f32,
+    ) -> Result<VrSweeper> {
+        let ranges: Vec<Vec<Range<usize>>> = batches
+            .iter()
+            .map(|b| match lane {
+                Lane::Host => batch_ranges(b.n_blocks(), p),
+                _ => b.group_ranges(p),
+            })
+            .collect();
+        let (state, center_dev, gamma_dev, eta_dev) = if lane == Lane::Dev {
+            (
+                Some(self.engine.vr_state_from(x0)?),
+                Some(self.engine.upload_dev(center, &[center.len()])?),
+                Some(self.engine.scalar_dev(gamma)?),
+                Some(self.engine.scalar_dev(eta)?),
+            )
+        } else {
+            (None, None, None, None)
+        };
+        Ok(VrSweeper {
+            lane,
+            kernel,
+            gamma,
+            eta,
+            center: center.to_vec(),
+            ranges,
+            x: x0.to_vec(),
+            state,
+            center_dev,
+            gamma_dev,
+            eta_dev,
+        })
+    }
+
+    /// One DANE-style local solve per machine: `passes` VR sweeps over
+    /// each machine's FULL batch seeded at `z` (snapshot `z`, gradient
+    /// hint `mu`, prox center `center`, strength `gamma`), returning the
+    /// per-machine sweep averages in lane representation. `passes > 1`
+    /// re-snapshots on the corrected local gradient and runs on the Host
+    /// lane only (callers force `Lane::Host`). `z_host` must carry the
+    /// same bits as `z` (the caller's round-boundary materialize) so the
+    /// Dev lane can seed its sweep states without an extra download.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_sweep_all(
+        &mut self,
+        lane: Lane,
+        meter: &mut ClusterMeter,
+        loss: Loss,
+        kernel: LocalSolver,
+        batches: &[MachineBatch],
+        z_host: &[f32],
+        z: &PlaneVec,
+        mu: &PlaneVec,
+        center: &[f32],
+        gamma: f32,
+        eta: f32,
+        passes: usize,
+    ) -> Result<PlaneLocals> {
+        let d = z_host.len();
+        match lane {
+            Lane::Dev => {
+                ensure!(passes <= 1, "multi-pass local solves run on the host lane");
+                let z_dev = z.dev()?;
+                let mu_dev = mu.dev()?;
+                let c_dev = self.engine.upload_dev(center, &[d])?;
+                let gamma_dev = self.engine.scalar_dev(gamma)?;
+                let eta_dev = self.engine.scalar_dev(eta)?;
+                let mut locals = Vec::with_capacity(batches.len());
+                for (i, batch) in batches.iter().enumerate() {
+                    locals.push(vr_sweep_avg_dev(
+                        self.engine,
+                        loss,
+                        kernel,
+                        0..batch.n_groups(),
+                        batch,
+                        z_host,
+                        z_dev,
+                        mu_dev,
+                        &c_dev,
+                        &gamma_dev,
+                        &eta_dev,
+                        meter.machine(i),
+                    )?);
+                }
+                Ok(PlaneLocals::Dev(locals))
+            }
+            Lane::Grouped => {
+                ensure!(passes <= 1, "multi-pass local solves run on the host lane");
+                let z_s: Arc<[f32]> = Arc::from(z.host()?);
+                let g_s: Arc<[f32]> = Arc::from(mu.host()?);
+                let c_s: Arc<[f32]> = Arc::from(center);
+                let locals = fan_machines(
+                    self.engine,
+                    self.shards,
+                    batches,
+                    meter,
+                    move |eng, batch, _i, m| {
+                        let (_x_end, x_avg) = vr_sweep_machine_grouped(
+                            eng,
+                            loss,
+                            kernel,
+                            0..batch.n_groups(),
+                            batch,
+                            &z_s,
+                            &z_s,
+                            &g_s,
+                            &c_s,
+                            gamma,
+                            eta,
+                            m,
+                        )?;
+                        Ok(x_avg)
+                    },
+                )?;
+                Ok(PlaneLocals::Host(locals))
+            }
+            Lane::Host => {
+                let z_s: Arc<[f32]> = Arc::from(z.host()?);
+                let g_s: Arc<[f32]> = Arc::from(mu.host()?);
+                let c_s: Arc<[f32]> = Arc::from(center);
+                let passes = passes.max(1);
+                let locals = fan_machines(
+                    self.engine,
+                    self.shards,
+                    batches,
+                    meter,
+                    move |eng, batch, _i, m| {
+                        let mut xi = z_s.to_vec();
+                        let mut snapshot = z_s.to_vec();
+                        let mut mu = g_s.to_vec();
+                        for pass in 0..passes {
+                            if pass > 0 {
+                                // re-snapshot locally:
+                                // mu' = grad_i(x) + (g - grad_i(z))
+                                let gi_z =
+                                    crate::objective::local_grad_sum(eng, loss, batch, &z_s, m)?;
+                                let gi_x =
+                                    crate::objective::local_grad_sum(eng, loss, batch, &xi, m)?;
+                                let cnt = gi_z.count.max(1.0) as f32;
+                                mu = g_s.to_vec();
+                                for j in 0..d {
+                                    mu[j] += gi_x.grad_sum[j] / cnt - gi_z.grad_sum[j] / cnt;
+                                }
+                                snapshot = xi.clone();
+                            }
+                            let blocks = 0..batch.n_blocks();
+                            let (_x_end, x_avg) = vr_sweep_machine(
+                                eng, loss, kernel, blocks, batch, &xi, &snapshot, &mu, &c_s,
+                                gamma, eta, m,
+                            )?;
+                            xi = x_avg;
+                        }
+                        Ok(xi)
+                    },
+                )?;
+                Ok(PlaneLocals::Host(locals))
+            }
+        }
+    }
+}
+
+/// Split a machine's block list into `p` near-equal contiguous batches
+/// (batch granularity is whole 256-row blocks) — the Host lane's sweep
+/// partition; the chained lanes use the group-range equivalent
+/// ([`MachineBatch::group_ranges`]).
+pub fn batch_ranges(n_blocks: usize, p: usize) -> Vec<Range<usize>> {
+    let p = p.clamp(1, n_blocks.max(1));
+    crate::data::sampler::shard_ranges(n_blocks, p)
+}
+
+/// A designated-machine VR sweep session (see [`ExecPlane::vr_sweeper`]):
+/// holds the sweep partition, the solve-constant operands and the carried
+/// state, so the solver's `(j, s)` token loop is lane-free.
+pub struct VrSweeper {
+    lane: Lane,
+    kernel: LocalSolver,
+    gamma: f32,
+    eta: f32,
+    /// prox center, host bits (the Dev lane also holds a resident handle)
+    center: Vec<f32>,
+    /// per-machine sweep partition: block ranges (Host lane) or fused
+    /// group ranges (Grouped/Dev)
+    ranges: Vec<Vec<Range<usize>>>,
+    /// Host/Grouped lanes: the carried iterate x
+    x: Vec<f32>,
+    /// Dev lane: the carried `[2, d]` sweep state
+    state: Option<DeviceVec>,
+    center_dev: Option<DeviceVec>,
+    gamma_dev: Option<DeviceVec>,
+    eta_dev: Option<DeviceVec>,
+}
+
+impl VrSweeper {
+    /// Number of sweep batches machine `j` holds (the `s` token bound).
+    pub fn n_batches(&self, j: usize) -> usize {
+        self.ranges[j].len()
+    }
+
+    pub fn lane(&self) -> Lane {
+        self.lane
+    }
+
+    /// Sweep machine `j`'s batch `s` once at snapshot `z` with gradient
+    /// `mu`; returns the sweep average (the next iterate) and carries the
+    /// end-of-sweep state for the next call. Runs inline on the
+    /// coordinator engine or on machine `j`'s shard, whichever owns the
+    /// batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep(
+        &mut self,
+        plane: &mut ExecPlane,
+        meter: &mut ClusterMeter,
+        loss: Loss,
+        batches: &[MachineBatch],
+        j: usize,
+        s: usize,
+        z: &PlaneVec,
+        mu: &PlaneVec,
+    ) -> Result<PlaneVec> {
+        let range = self.ranges[j][s.min(self.ranges[j].len() - 1)].clone();
+        match self.lane {
+            Lane::Dev => {
+                // fresh accumulator, carried iterate
+                let state = self.state.take().expect("Dev-lane sweeper holds a state");
+                let state = plane.engine.vr_reset(&state)?;
+                let total_w = sweep_groups_weight(&batches[j], range.clone());
+                let state = vr_sweep_groups(
+                    plane.engine,
+                    loss,
+                    self.kernel,
+                    range,
+                    &batches[j],
+                    state,
+                    z.dev()?,
+                    mu.dev()?,
+                    self.center_dev.as_ref().expect("Dev-lane center"),
+                    self.gamma_dev.as_ref().expect("Dev-lane gamma"),
+                    self.eta_dev.as_ref().expect("Dev-lane eta"),
+                    meter.machine(j),
+                )?;
+                // sweep average (inv weight 0 = empty-sweep fallback to
+                // the carried iterate)
+                let inv_w = if total_w > 0.0 { (1.0 / total_w) as f32 } else { 0.0 };
+                let avg = plane.engine.vr_avg(&state, inv_w)?;
+                self.state = Some(state);
+                Ok(PlaneVec::Dev(avg))
+            }
+            // the two host-representation lanes differ ONLY in which
+            // sweep primitive advances the iterate
+            Lane::Grouped => self.sweep_host_repr(
+                plane,
+                meter,
+                loss,
+                batches,
+                j,
+                range,
+                z,
+                mu,
+                vr_sweep_machine_grouped,
+            ),
+            Lane::Host => {
+                self.sweep_host_repr(plane, meter, loss, batches, j, range, z, mu, vr_sweep_machine)
+            }
+        }
+    }
+
+    /// The shared host-representation arm: run `sweep` on machine `j`'s
+    /// batch — inline on the coordinator engine, or as one job on the
+    /// owning shard (the closure owns its operands) — and carry `x_end`.
+    #[allow(clippy::too_many_arguments)]
+    fn sweep_host_repr(
+        &mut self,
+        plane: &mut ExecPlane,
+        meter: &mut ClusterMeter,
+        loss: Loss,
+        batches: &[MachineBatch],
+        j: usize,
+        range: Range<usize>,
+        z: &PlaneVec,
+        mu: &PlaneVec,
+        sweep: HostSweepFn,
+    ) -> Result<PlaneVec> {
+        let (x_end, x_avg) = if batches[j].shard.is_none() {
+            sweep(
+                plane.engine,
+                loss,
+                self.kernel,
+                range,
+                &batches[j],
+                &self.x,
+                z.host()?,
+                mu.host()?,
+                &self.center,
+                self.gamma,
+                self.eta,
+                meter.machine(j),
+            )?
+        } else {
+            let (kernel, gamma, eta) = (self.kernel, self.gamma, self.eta);
+            let x0 = self.x.clone();
+            let (zv, muv) = (z.host()?.to_vec(), mu.host()?.to_vec());
+            let cv = self.center.clone();
+            fan_machine(
+                plane.engine,
+                plane.shards,
+                batches,
+                j,
+                meter,
+                move |eng, batch, _i, m| {
+                    sweep(eng, loss, kernel, range, batch, &x0, &zv, &muv, &cv, gamma, eta, m)
+                },
+            )?
+        };
+        self.x = x_end;
+        Ok(PlaneVec::Host(x_avg))
+    }
+}
+
+/// A host-representation sweep primitive ([`vr_sweep_machine`] per-block
+/// or [`vr_sweep_machine_grouped`]): the one signature both host-repr
+/// lanes dispatch through, so the inline-vs-shard plumbing exists once.
+type HostSweepFn = fn(
+    &mut Engine,
+    Loss,
+    LocalSolver,
+    Range<usize>,
+    &MachineBatch,
+    &[f32],
+    &[f32],
+    &[f32],
+    &[f32],
+    f32,
+    f32,
+    &mut ResourceMeter,
+) -> Result<(Vec<f32>, Vec<f32>)>;
+
+// ---- the sweep primitives (one implementation each, shared by every
+// lane arm above and by the parity tests) -------------------------------
+
+/// Sweep one machine's blocks with per-block variance-reduced passes
+/// (SVRG or SAGA kernels) — the Host lane's sweep.
+///
+/// Runs the artifact block-by-block, carrying the iterate through, and
+/// combines per-block running averages weighted by their (1 + valid)
+/// counts — the paper's z_k average over r = 0..|B_s|. Returns
+/// `(x_end, x_avg)` and charges the swept rows to `meter`.
+///
+/// Takes the engine and the machine's meter directly (not a run context)
+/// so the identical code runs inline on the coordinator OR inside a shard
+/// job — the shard plane's per-machine closures are exactly these
+/// helpers.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_machine(
+    engine: &mut Engine,
+    loss: Loss,
+    solver: LocalSolver,
+    batch_blocks: Range<usize>,
+    batch: &MachineBatch,
+    x0: &[f32],
+    z: &[f32],
+    mu: &[f32],
+    center: &[f32],
+    gamma: f32,
+    eta: f32,
+    meter: &mut ResourceMeter,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut x = x0.to_vec();
+    let mut avg = crate::linalg::WeightedAvg::new(batch.d);
+    let mut total_n = 0u64;
+    // per-block buffers, materialized on the batch's first sweep
+    let lits = batch.vr_lits(engine)?;
+    for bi in batch_blocks {
+        let blk = &lits[bi];
+        if blk.valid == 0 {
+            continue;
+        }
+        let (x_end, x_avg) = match solver {
+            LocalSolver::Svrg => engine.svrg_block(loss, blk, &x, z, mu, center, gamma, eta)?,
+            LocalSolver::Saga => engine.saga_block(loss, blk, &x, z, mu, center, gamma, eta)?,
+        };
+        avg.add((1 + blk.valid) as f64, &x_avg);
+        total_n += blk.valid as u64;
+        x = x_end;
+    }
+    drop(lits);
+    meter.add_vec_ops(total_n);
+    let x_avg = if avg.total_weight() > 0.0 { avg.mean() } else { x.clone() };
+    Ok((x, x_avg))
+}
+
+/// Chained core of the group-aligned VR sweep: advance the `[2, d]` state
+/// through `batch.groups[group_range]` riding the *fused* block uploads —
+/// no `vr_lits` materialization, no downloads, no host round-trips
+/// between groups. Returns the advanced state; divide by
+/// [`sweep_groups_weight`] (via `Engine::vr_avg`) for the sweep average.
+/// Charges the swept valid rows to `meter`, like the Host lane.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_groups(
+    engine: &mut Engine,
+    loss: Loss,
+    solver: LocalSolver,
+    group_range: Range<usize>,
+    batch: &MachineBatch,
+    state: DeviceVec,
+    z: &DeviceVec,
+    mu: &DeviceVec,
+    center: &DeviceVec,
+    gamma: &DeviceVec,
+    eta: &DeviceVec,
+    meter: &mut ResourceMeter,
+) -> Result<DeviceVec> {
+    let mut s = state;
+    let mut total_n = 0u64;
+    for gi in group_range {
+        let blk = &batch.groups[gi];
+        if blk.valid == 0 {
+            continue;
+        }
+        s = engine.vr_chain(solver.kernel(), loss, blk, &s, z, mu, center, gamma, eta)?;
+        total_n += blk.valid as u64;
+    }
+    meter.add_vec_ops(total_n);
+    Ok(s)
+}
+
+/// Total sweep-average weight of `batch.groups[group_range]`: the
+/// host-side divisor for the chained accumulator (`1 + valid` per
+/// non-empty block, matching the Host-lane combiner). Stub-safe — the
+/// weights ride the batch metadata, so the coordinator can compute the
+/// divisor for a shard-resident batch.
+pub fn sweep_groups_weight(batch: &MachineBatch, group_range: Range<usize>) -> f64 {
+    group_range.map(|gi| batch.group_sweep_weight(gi)).sum()
+}
+
+/// Host-level wrapper over the chained sweep: uploads the state and the
+/// sweep-constant vectors, chains through the groups, and materializes
+/// `(x_end, x_avg)` — one `[2, d]` download per *sweep* instead of two
+/// `[d]` downloads per *block*. Semantics match [`vr_sweep_machine`] over
+/// the same blocks (the parity tests pin this down), and the host average
+/// (one f32 multiply per element) is bit-identical to the `vr_avg`
+/// kernel's, so a shard job running this reproduces the single-engine
+/// chained path exactly — the Grouped lane's sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_machine_grouped(
+    engine: &mut Engine,
+    loss: Loss,
+    solver: LocalSolver,
+    group_range: Range<usize>,
+    batch: &MachineBatch,
+    x0: &[f32],
+    z: &[f32],
+    mu: &[f32],
+    center: &[f32],
+    gamma: f32,
+    eta: f32,
+    meter: &mut ResourceMeter,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let d = batch.d;
+    let state = engine.vr_state_from(x0)?;
+    let z_dev = engine.upload_dev(z, &[d])?;
+    let mu_dev = engine.upload_dev(mu, &[d])?;
+    let c_dev = engine.upload_dev(center, &[d])?;
+    // sweep-constant scalars: uploaded once per sweep, not per group
+    let gamma_dev = engine.scalar_dev(gamma)?;
+    let eta_dev = engine.scalar_dev(eta)?;
+    let total_w = sweep_groups_weight(batch, group_range.clone());
+    let s = vr_sweep_groups(
+        engine,
+        loss,
+        solver,
+        group_range,
+        batch,
+        state,
+        &z_dev,
+        &mu_dev,
+        &c_dev,
+        &gamma_dev,
+        &eta_dev,
+        meter,
+    )?;
+    let host = engine.materialize(&s)?;
+    let (x_end, acc) = host.split_at(d);
+    let x_avg = if total_w > 0.0 {
+        let inv = (1.0 / total_w) as f32;
+        acc.iter().map(|&a| a * inv).collect()
+    } else {
+        x_end.to_vec()
+    };
+    Ok((x_end.to_vec(), x_avg))
+}
+
+/// One chained sweep-plus-average, fully on device: seed the `[2, d]`
+/// state from the host iterate `x0`, advance it through
+/// `batch.groups[group_range]`, and return the sweep average as a handle
+/// (`vr_avg`, with the empty-sweep fallback to the carried iterate). The
+/// ONE implementation of the parity-sensitive sweep-average sequence —
+/// the Dev-lane DANE and one-shot local solves both run exactly this, so
+/// the cross-plane bitwise contract cannot drift between them.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_sweep_avg_dev(
+    engine: &mut Engine,
+    loss: Loss,
+    solver: LocalSolver,
+    group_range: Range<usize>,
+    batch: &MachineBatch,
+    x0: &[f32],
+    z: &DeviceVec,
+    mu: &DeviceVec,
+    center: &DeviceVec,
+    gamma: &DeviceVec,
+    eta: &DeviceVec,
+    meter: &mut ResourceMeter,
+) -> Result<DeviceVec> {
+    let state = engine.vr_state_from(x0)?;
+    let total_w = sweep_groups_weight(batch, group_range.clone());
+    let state = vr_sweep_groups(
+        engine,
+        loss,
+        solver,
+        group_range,
+        batch,
+        state,
+        z,
+        mu,
+        center,
+        gamma,
+        eta,
+        meter,
+    )?;
+    let inv_w = if total_w > 0.0 { (1.0 / total_w) as f32 } else { 0.0 };
+    engine.vr_avg(&state, inv_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_and_round_trips() {
+        for p in [PlanePolicy::Auto, PlanePolicy::Host, PlanePolicy::Chained, PlanePolicy::Sharded]
+        {
+            assert_eq!(PlanePolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(PlanePolicy::parse(" Host "), Some(PlanePolicy::Host));
+        assert_eq!(PlanePolicy::parse("hots"), None);
+    }
+
+    #[test]
+    fn batch_ranges_partition_blocks() {
+        let r = batch_ranges(10, 3);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0].start, 0);
+        assert_eq!(r.last().unwrap().end, 10);
+        // p clamps to the block count
+        assert_eq!(batch_ranges(2, 5).len(), 2);
+        assert_eq!(batch_ranges(0, 3).len(), 1);
+    }
+}

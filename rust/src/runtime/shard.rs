@@ -44,6 +44,10 @@ pub struct ShardState {
     /// machine id -> that machine's current packed batch (replaced on
     /// every fresh draw; cleared between runs)
     pub batches: HashMap<usize, crate::objective::MachineBatch>,
+    /// held-out evaluator segments owned by this shard (segment id ->
+    /// grad-only batch; packed once per run context, cleared between
+    /// runs) — the sharded `Evaluator` fan reads these
+    pub eval: HashMap<usize, crate::objective::MachineBatch>,
 }
 
 impl ShardState {
@@ -54,6 +58,18 @@ impl ShardState {
             .batches
             .get(&i)
             .ok_or_else(|| anyhow!("machine {i} has no batch on this shard (draw first)"))?;
+        Ok((&mut self.engine, batch))
+    }
+
+    /// Evaluator segment `i`'s batch alongside the engine.
+    pub fn eval_segment(
+        &mut self,
+        i: usize,
+    ) -> Result<(&mut Engine, &crate::objective::MachineBatch)> {
+        let batch = self
+            .eval
+            .get(&i)
+            .ok_or_else(|| anyhow!("evaluator segment {i} is not resident on this shard"))?;
         Ok((&mut self.engine, batch))
     }
 }
@@ -150,14 +166,15 @@ impl ShardPool {
         self.submit(self.shard_of(machine), f).wait()
     }
 
-    /// Drop every shard-resident machine batch and session slot (between
-    /// runs: stale machine state from a previous experiment must not
-    /// outlive it).
+    /// Drop every shard-resident machine batch, evaluator segment and
+    /// session slot (between runs: stale machine state from a previous
+    /// experiment must not outlive it).
     pub fn clear_machines(&self) -> Result<()> {
         let pends: Vec<Pending<()>> = (0..self.shards())
             .map(|s| {
                 self.submit(s, |state| {
                     state.batches.clear();
+                    state.eval.clear();
                     state.engine.reset_session();
                     Ok(())
                 })
@@ -213,7 +230,7 @@ fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result
         }
     };
     let _ = ready.send(Ok(()));
-    let mut state = ShardState { engine, batches: HashMap::new() };
+    let mut state = ShardState { engine, batches: HashMap::new(), eval: HashMap::new() };
     while let Ok(job) = rx.recv() {
         job(&mut state);
     }

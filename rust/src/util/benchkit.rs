@@ -119,13 +119,20 @@ pub fn section(title: &str) {
 /// ```json
 /// {"benches": [{"name": "...", "iters": 50, "mean_ns": 1.0,
 ///               "p50_ns": 1.0, "p10_ns": 1.0, "p90_ns": 1.0,
-///               "min_ns": 1.0, "throughput_ops_per_sec": 1.0}],
-///  "counters": {"engine.uploads": 12.0}}
+///               "min_ns": 1.0, "throughput_ops_per_sec": 1.0,
+///               "plane": "chained"}],
+///  "counters": {"engine.uploads": 12.0},
+///  "notes": {"plane.policy": "auto"}}
 /// ```
+///
+/// The optional per-record `plane` field tags a scenario with the
+/// execution plane it ran on (raw per-kernel microbenches carry none);
+/// `notes` holds report-level strings.
 #[derive(Clone, Debug, Default)]
 pub struct JsonReport {
-    records: Vec<BenchStats>,
+    records: Vec<(BenchStats, Option<String>)>,
     counters: Vec<(String, f64)>,
+    notes: Vec<(String, String)>,
 }
 
 impl JsonReport {
@@ -135,7 +142,13 @@ impl JsonReport {
 
     /// Record one bench result (call after printing its text report).
     pub fn push(&mut self, stats: &BenchStats) {
-        self.records.push(stats.clone());
+        self.records.push((stats.clone(), None));
+    }
+
+    /// Record one bench result tagged with the execution plane the
+    /// scenario resolved to ("host" | "chained" | "sharded").
+    pub fn push_on(&mut self, stats: &BenchStats, plane: &str) {
+        self.records.push((stats.clone(), Some(plane.to_string())));
     }
 
     /// Record a named scalar (engine counters, derived ratios, ...).
@@ -143,16 +156,21 @@ impl JsonReport {
         self.counters.push((name.to_string(), value));
     }
 
+    /// Record a report-level string (e.g. the resolved plane policy).
+    pub fn note(&mut self, name: &str, value: &str) {
+        self.notes.push((name.to_string(), value.to_string()));
+    }
+
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n  \"benches\": [");
-        for (i, s) in self.records.iter().enumerate() {
+        for (i, (s, plane)) in self.records.iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }
             out.push_str(&format!(
                 "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
                  \"p50_ns\": {:.1}, \"p10_ns\": {:.1}, \"p90_ns\": {:.1}, \
-                 \"min_ns\": {:.1}, \"throughput_ops_per_sec\": {:.3}}}",
+                 \"min_ns\": {:.1}, \"throughput_ops_per_sec\": {:.3}",
                 escape(&s.name),
                 s.iters,
                 s.mean_ns,
@@ -162,6 +180,10 @@ impl JsonReport {
                 s.min_ns,
                 s.throughput_ops_per_sec(),
             ));
+            if let Some(p) = plane {
+                out.push_str(&format!(", \"plane\": \"{}\"", escape(p)));
+            }
+            out.push('}');
         }
         out.push_str("\n  ],\n  \"counters\": {");
         for (i, (name, value)) in self.counters.iter().enumerate() {
@@ -169,6 +191,13 @@ impl JsonReport {
                 out.push(',');
             }
             out.push_str(&format!("\n    \"{}\": {:.3}", escape(name), value));
+        }
+        out.push_str("\n  },\n  \"notes\": {");
+        for (i, (name, value)) in self.notes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{}\": \"{}\"", escape(name), escape(value)));
         }
         out.push_str("\n  }\n}\n");
         out
@@ -236,5 +265,30 @@ mod tests {
             > 0.0);
         let up = parsed.get("counters").and_then(|c| c.get("engine.uploads")).unwrap();
         assert_eq!(up.as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn json_report_plane_tags_and_notes() {
+        let mut report = JsonReport::new();
+        let s = bench("tagged", 1, 4, || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        report.push_on(&s, "chained");
+        report.push(&s);
+        report.note("plane.policy", "auto");
+        let parsed = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        let benches = parsed.get("benches").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert_eq!(
+            benches[0].get("plane").and_then(crate::util::json::Json::as_str),
+            Some("chained")
+        );
+        assert!(benches[1].get("plane").is_none(), "untagged records carry no plane field");
+        assert_eq!(
+            parsed
+                .get("notes")
+                .and_then(|n| n.get("plane.policy"))
+                .and_then(crate::util::json::Json::as_str),
+            Some("auto")
+        );
     }
 }

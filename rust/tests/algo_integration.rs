@@ -11,6 +11,8 @@ fn runner() -> Runner {
     Runner::new(Engine::new(&dir).expect("run `make artifacts` first"))
         .with_env_shards(&dir)
         .expect("shard pool construction")
+        .with_env_plane()
+        .expect("PLANE policy")
 }
 
 fn small_cfg() -> ExperimentConfig {

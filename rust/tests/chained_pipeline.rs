@@ -2,18 +2,20 @@
 //! keep every intermediate vector on device (the acceptance criterion:
 //! NO full-vector downloads between evaluation checkpoints — the one
 //! round-boundary materialize is the entire downlink), while reproducing
-//! the legacy per-block path to 1e-4. Requires `make artifacts`.
+//! the host plane (legacy per-block kernels, selected via
+//! `ExecPlane::host` — the `plane=host` policy) to 1e-4. Requires
+//! `make artifacts`.
 
 use mbprox::accounting::{ClusterMeter, DeviceTraffic};
 use mbprox::algos::solvers::dsvrg::DsvrgSolver;
 use mbprox::algos::solvers::exact_cg::ExactCgSolver;
 use mbprox::algos::solvers::ProxSolver;
-use mbprox::algos::RunContext;
+use mbprox::algos::{PackMode, RunContext};
 use mbprox::comm::{netmodel::NetModel, Network};
 use mbprox::data::synth::{SynthSpec, SynthStream};
 use mbprox::data::{Loss, SampleStream};
 use mbprox::objective::MachineBatch;
-use mbprox::runtime::Engine;
+use mbprox::runtime::{Engine, ExecPlane};
 use mbprox::util::testkit::assert_close;
 
 fn engine() -> Engine {
@@ -21,8 +23,9 @@ fn engine() -> Engine {
     Engine::new(&dir).expect("run `make artifacts` before cargo test")
 }
 
-/// A context over pre-drawn machine batches (streams unused by solvers).
-fn ctx_with<'e>(engine: &'e mut Engine, m: usize, loss: Loss, d: usize) -> RunContext<'e> {
+/// A context over pre-drawn machine batches (streams unused by solvers)
+/// on an explicit plane.
+fn ctx_on(plane: ExecPlane<'_>, m: usize, loss: Loss, d: usize) -> RunContext<'_> {
     let root = match loss {
         Loss::Squared => SynthStream::new(SynthSpec::least_squares(d), 7),
         Loss::Logistic => SynthStream::new(SynthSpec::logistic(d), 7),
@@ -30,8 +33,7 @@ fn ctx_with<'e>(engine: &'e mut Engine, m: usize, loss: Loss, d: usize) -> RunCo
     let streams: Vec<Box<dyn SampleStream>> =
         (0..m).map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>).collect();
     RunContext {
-        engine,
-        shards: None,
+        plane,
         net: Network::new(m, NetModel::default()),
         meter: ClusterMeter::new(m),
         loss,
@@ -40,6 +42,14 @@ fn ctx_with<'e>(engine: &'e mut Engine, m: usize, loss: Loss, d: usize) -> RunCo
         evaluator: None,
         eval_every: 0,
     }
+}
+
+fn ctx_chained(engine: &mut Engine, m: usize, loss: Loss, d: usize) -> RunContext<'_> {
+    ctx_on(ExecPlane::chained(engine), m, loss, d)
+}
+
+fn ctx_host(engine: &mut Engine, m: usize, loss: Loss, d: usize) -> RunContext<'_> {
+    ctx_on(ExecPlane::host(engine), m, loss, d)
 }
 
 fn draw_batches(ctx: &mut RunContext, n_per_machine: usize, retain: bool) -> Vec<MachineBatch> {
@@ -55,11 +65,11 @@ fn mp_dsvrg_round_performs_no_full_vector_downloads() {
     let mut e = engine();
     let d = 64;
     let m = 4;
-    let mut ctx = ctx_with(&mut e, m, Loss::Squared, d);
+    let mut ctx = ctx_chained(&mut e, m, Loss::Squared, d);
     assert!(
-        ctx.engine.chain_grad_ready("sq", d)
-            && ctx.engine.chain_vr_ready("sq", d)
-            && ctx.engine.red_ready(m, d),
+        ctx.plane.engine.chain_grad_ready("sq", d)
+            && ctx.plane.engine.chain_vr_ready("sq", d)
+            && ctx.plane.engine.red_ready(m, d),
         "manifest must carry the chained artifacts"
     );
     // ragged batches: 5 blocks/machine under (8,4) widths -> one k=4
@@ -68,9 +78,9 @@ fn mp_dsvrg_round_performs_no_full_vector_downloads() {
     let wprev = vec![0.01f32; d];
 
     let mut solver = DsvrgSolver::new(6, 2, 0.05);
-    let before = DeviceTraffic::from_stats(&ctx.engine.stats);
+    let before = DeviceTraffic::from_stats(&ctx.plane.engine.stats);
     let z = solver.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
-    let traffic = DeviceTraffic::from_stats(&ctx.engine.stats).since(&before);
+    let traffic = DeviceTraffic::from_stats(&ctx.plane.engine.stats).since(&before);
 
     assert_eq!(z.len(), d);
     // the acceptance criterion, metered by DeviceTraffic: across K=6
@@ -84,18 +94,18 @@ fn mp_dsvrg_round_performs_no_full_vector_downloads() {
     );
     assert!(traffic.chained > 0, "the round must ride the chain verb");
     // paper-units accounting is untouched by the plane change: 2 rounds
-    // per inner iteration exactly as the legacy path charges
+    // per inner iteration exactly as the host plane charges
     assert_eq!(ctx.meter.report().comm_rounds, 2 * 6);
 }
 
 #[test]
-fn chained_dsvrg_matches_legacy_per_block_path() {
+fn chained_dsvrg_matches_host_per_block_plane() {
     let mut e = engine();
     let d = 64;
     let m = 2;
     // p=1 sweeps the whole batch per iteration; p=3 exercises the
     // VR-aligned packing (groups tile the 3-way block partition, so the
-    // chained sweep sizes equal the legacy per-block partition's)
+    // chained sweep sizes equal the per-block partition's)
     for (loss, p) in
         [(Loss::Squared, 1), (Loss::Logistic, 1), (Loss::Squared, 3), (Loss::Logistic, 3)]
     {
@@ -103,31 +113,32 @@ fn chained_dsvrg_matches_legacy_per_block_path() {
         let n_per = 5 * 256 + 100; // 6 blocks/machine
 
         let (z_chained, rounds_chained, ops_chained) = {
-            let mut ctx = ctx_with(&mut e, m, loss, d);
+            let mut ctx = ctx_chained(&mut e, m, loss, d);
             let mut chained = DsvrgSolver::new(4, p, 0.05);
-            assert!(!chained.needs_vr_blocks(&ctx), "chained path must not need host blocks");
-            assert_eq!(chained.vr_group_align(&ctx), Some(p));
+            // the chained plane packs VR-aligned fused groups — no host
+            // block retention
+            assert_eq!(chained.pack_mode(&ctx), PackMode::VrAligned(p));
             let batches = ctx.draw_batches_vr_aligned(n_per, false, p).unwrap();
             let z = chained.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
             let rep = ctx.meter.report();
             (z, rep.comm_rounds, rep.vec_ops)
         };
 
-        // identical streams -> identical batches for the legacy run
-        let (z_legacy, rounds_legacy, ops_legacy) = {
-            let mut ctx = ctx_with(&mut e, m, loss, d);
+        // identical streams -> identical batches for the host-plane run
+        let (z_host, rounds_host, ops_host) = {
+            let mut ctx = ctx_host(&mut e, m, loss, d);
             let batches = draw_batches(&mut ctx, n_per, true);
-            let mut legacy = DsvrgSolver::new(4, p, 0.05);
-            legacy.force_legacy = true;
-            assert!(legacy.needs_vr_blocks(&ctx), "legacy path sweeps per block");
-            let z = legacy.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
+            let mut host = DsvrgSolver::new(4, p, 0.05);
+            // the host plane sweeps per block and needs the host copies
+            assert_eq!(host.pack_mode(&ctx), PackMode::Full);
+            let z = host.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
             let rep = ctx.meter.report();
             (z, rep.comm_rounds, rep.vec_ops)
         };
 
-        assert_close(&z_chained, &z_legacy, 1e-4, 1e-4);
-        assert_eq!(rounds_chained, rounds_legacy, "identical comm accounting (p={p})");
-        assert_eq!(ops_chained, ops_legacy, "identical sweep granularity (p={p})");
+        assert_close(&z_chained, &z_host, 1e-4, 1e-4);
+        assert_eq!(rounds_chained, rounds_host, "identical comm accounting (p={p})");
+        assert_eq!(ops_chained, ops_host, "identical sweep granularity (p={p})");
     }
 }
 
@@ -135,7 +146,7 @@ fn chained_dsvrg_matches_legacy_per_block_path() {
 fn vr_aligned_groups_tile_the_legacy_block_partition() {
     let mut e = engine();
     let d = 64;
-    let mut ctx = ctx_with(&mut e, 1, Loss::Squared, d);
+    let mut ctx = ctx_chained(&mut e, 1, Loss::Squared, d);
     // 10 blocks; p=3 -> block partition [0..4, 4..7, 7..10]
     let batches = ctx.draw_batches_vr_aligned(9 * 256 + 50, false, 3).unwrap();
     let b = &batches[0];
@@ -160,19 +171,19 @@ fn vr_aligned_groups_tile_the_legacy_block_partition() {
 }
 
 #[test]
-fn chained_cg_matches_legacy_path() {
+fn chained_cg_matches_host_plane() {
     let mut e = engine();
     let d = 64;
     let m = 2;
     let wprev: Vec<f32> = (0..d).map(|j| (j as f32 * 0.02).sin() * 0.1).collect();
 
     let x_chained = {
-        let mut ctx = ctx_with(&mut e, m, Loss::Squared, d);
+        let mut ctx = ctx_chained(&mut e, m, Loss::Squared, d);
         let batches = draw_batches(&mut ctx, 256 + 60, false);
-        let before = DeviceTraffic::from_stats(&ctx.engine.stats);
+        let before = DeviceTraffic::from_stats(&ctx.plane.engine.stats);
         let mut chained = ExactCgSolver::default();
         let x = chained.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
-        let traffic = DeviceTraffic::from_stats(&ctx.engine.stats).since(&before);
+        let traffic = DeviceTraffic::from_stats(&ctx.plane.engine.stats).since(&before);
         // steady-state downlink is O(1) small values: the vdot scalars (4
         // bytes each) plus the single final materialize
         let scalar_downloads = traffic.downloads - 1;
@@ -185,30 +196,30 @@ fn chained_cg_matches_legacy_path() {
         x
     };
 
-    let mut ctx = ctx_with(&mut e, m, Loss::Squared, d);
+    let mut ctx = ctx_host(&mut e, m, Loss::Squared, d);
     let batches = draw_batches(&mut ctx, 256 + 60, false);
-    let mut legacy = ExactCgSolver { force_legacy: true, ..ExactCgSolver::default() };
-    let x_legacy = legacy.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
+    let mut host = ExactCgSolver::default();
+    let x_host = host.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
 
-    // the two CG loops run the same recurrence with f32-vs-f64 dot
+    // the two CG lanes run the same recurrence with f32-vs-f64 dot
     // products: both converge to the same regularized solution
-    assert_close(&x_chained, &x_legacy, 1e-3, 1e-3);
+    assert_close(&x_chained, &x_host, 1e-3, 1e-3);
 }
 
 #[test]
 fn chained_solver_skips_host_block_retention() {
-    // needs_vr_blocks(false) lets the outer loop pack grad-only batches;
-    // the chained sweep must then run WITHOUT materializing vr_lits
+    // a chained-plane pack_mode never asks for host blocks; the chained
+    // sweep must then run WITHOUT materializing vr_lits
     let mut e = engine();
     let d = 64;
-    let mut ctx = ctx_with(&mut e, 2, Loss::Squared, d);
+    let mut ctx = ctx_chained(&mut e, 2, Loss::Squared, d);
     let batches = draw_batches(&mut ctx, 2 * 256, false); // grad-only pack
     let wprev = vec![0.0f32; d];
     let mut solver = DsvrgSolver::new(2, 1, 0.05);
-    // would error with "packed grad-only" if the legacy sweep ran
+    // would error with "packed grad-only" if the host-lane sweep ran
     let z = solver.solve(&mut ctx, &batches, &wprev, 0.5, 1).unwrap();
     assert_eq!(z.len(), d);
     for b in &batches {
-        assert!(b.vr_lits(ctx.engine).is_err(), "vr_lits must never materialize");
+        assert!(b.vr_lits(ctx.plane.engine).is_err(), "vr_lits must never materialize");
     }
 }

@@ -8,17 +8,14 @@
 //!   (b) more DANE rounds K do not hurt (diminishing returns allowed);
 //!   (c) the libsvm round trip is lossless at parse precision.
 
-use mbprox::accounting::ClusterMeter;
 use mbprox::algos::mbprox::MinibatchProx;
 use mbprox::algos::minibatch_sgd::MinibatchSgd;
 use mbprox::algos::solvers::dane::DaneSolver;
-use mbprox::algos::{Method, RunContext};
-use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::algos::Method;
 use mbprox::coordinator::Runner;
 use mbprox::data::sampler::{shard_ranges, VecStream};
 use mbprox::data::table3::CODRNA;
 use mbprox::data::{libsvm, Loss, Sample, SampleStream};
-use mbprox::objective::Evaluator;
 use mbprox::runtime::Engine;
 use mbprox::theory::{self, ProblemConsts};
 use mbprox::util::prng::Prng;
@@ -28,6 +25,8 @@ fn runner() -> Runner {
     Runner::new(Engine::new(&dir).expect("run `make artifacts` first"))
         .with_env_shards(&dir)
         .expect("shard pool construction")
+        .with_env_plane()
+        .expect("PLANE policy")
 }
 
 fn load_via_libsvm(n_total: usize) -> (Vec<Sample>, Vec<Sample>) {
@@ -78,18 +77,7 @@ fn run_method(
             )) as Box<dyn SampleStream>
         })
         .collect();
-    let evaluator = Evaluator::new(&mut r.engine, d, Loss::Logistic, eval).unwrap();
-    let mut ctx = RunContext {
-        engine: &mut r.engine,
-        shards: r.shards.as_ref(),
-        net: Network::new(m, NetModel::default()),
-        meter: ClusterMeter::new(m),
-        loss: Loss::Logistic,
-        d,
-        streams,
-        evaluator: Some(evaluator),
-        eval_every: 0,
-    };
+    let mut ctx = r.context_over(Loss::Logistic, d, streams, eval, 0).unwrap();
     let result = match k_dane {
         Some(k) => {
             let eta = 0.1 / (consts.beta_smooth + plan.gamma);

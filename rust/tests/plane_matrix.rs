@@ -1,0 +1,170 @@
+//! The plane matrix: every registered method × plane ∈ {host, chained,
+//! sharded} through the public `Runner` API, pinning the execution-plane
+//! contract (see `runtime::plane`):
+//!
+//! - **chained ≡ sharded, bit for bit** — identical iterate bits,
+//!   objective-curve bits, ClusterMeter reports and simulated time. The
+//!   sharded plane runs the same chained kernels per machine with
+//!   fixed-order f64 host collectives, which are bit-identical to the
+//!   device reduce.
+//! - **host ≡ chained in paper units** — the host plane runs the legacy
+//!   per-block kernels, so iterates agree numerically (not bitwise), but
+//!   samples/memory accounting is identical, and rounds/vec-ops are
+//!   identical for every method whose iteration count is
+//!   data-independent (the CG-based solvers may stop at a different
+//!   iteration under f64-vs-f32 dot products, so only their sample and
+//!   memory charges are pinned).
+//!
+//! This subsumes the per-solver `force_legacy` toggles the plane API
+//! replaced. Requires `make artifacts`.
+
+use mbprox::algos::RunResult;
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::{Runner, METHODS};
+use mbprox::data::Loss;
+use mbprox::runtime::{Engine, PlanePolicy, ShardPool};
+use mbprox::util::testkit::assert_close;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Run `cfg` on a fresh engine under an explicit plane policy.
+fn run_plane(policy: PlanePolicy, cfg: &ExperimentConfig) -> RunResult {
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("run `make artifacts` before cargo test"))
+        .with_plane(policy);
+    if policy == PlanePolicy::Sharded {
+        r = r.with_shards(ShardPool::new(2, &dir).expect("shard pool construction"));
+    }
+    r.run(cfg).unwrap_or_else(|e| panic!("{} (plane={}): {e:?}", cfg.method, policy.as_str()))
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full bitwise identity: iterates, curves, meters, simulated time.
+fn assert_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(bits32(&a.w), bits32(&b.w), "{label}: final iterate bits");
+    assert_eq!(a.report, b.report, "{label}: ClusterMeter report");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{label}: simulated time");
+    assert_eq!(a.curve.len(), b.curve.len(), "{label}: curve length");
+    for (p, q) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(p.outer_iter, q.outer_iter, "{label}: curve iters");
+        assert_eq!(p.samples_total, q.samples_total, "{label}: curve samples");
+        assert_eq!(p.comm_rounds, q.comm_rounds, "{label}: curve rounds");
+        assert_eq!(p.vec_ops, q.vec_ops, "{label}: curve vec ops");
+        match (p.objective, q.objective) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: objective bits")
+            }
+            (None, None) => {}
+            other => panic!("{label}: objective presence mismatch {other:?}"),
+        }
+    }
+    match (a.final_objective, b.final_objective) {
+        (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits(), "{label}: final objective"),
+        (None, None) => {}
+        other => panic!("{label}: final objective mismatch {other:?}"),
+    }
+}
+
+/// Paper-units identity + numerical agreement (host vs chained). The CG
+/// solvers may stop at a different iteration (f64 vs f32 residual dots),
+/// so their round/vec-op counts are not pinned.
+fn assert_equivalent(host: &RunResult, chained: &RunResult, pin_rounds: bool, label: &str) {
+    assert_eq!(
+        host.report.total_samples, chained.report.total_samples,
+        "{label}: samples are draw-determined, not lane-determined"
+    );
+    assert_eq!(
+        host.report.peak_vectors, chained.report.peak_vectors,
+        "{label}: memory charges are plane-independent"
+    );
+    if pin_rounds {
+        assert_eq!(host.report.comm_rounds, chained.report.comm_rounds, "{label}: rounds");
+        assert_eq!(host.report.vec_ops, chained.report.vec_ops, "{label}: vec ops");
+        assert_eq!(
+            host.sim_time_s.to_bits(),
+            chained.sim_time_s.to_bits(),
+            "{label}: identical rounds/dims give identical simulated time"
+        );
+    }
+    assert_close(&host.w, &chained.w, 2e-2, 2e-3);
+    match (host.final_objective, chained.final_objective) {
+        (Some(x), Some(y)) => {
+            let rel = (x - y).abs() / y.abs().max(1e-9);
+            assert!(rel < 2e-2, "{label}: final objective {x} vs {y} (rel {rel:.2e})");
+        }
+        (None, None) => {}
+        other => panic!("{label}: final objective mismatch {other:?}"),
+    }
+}
+
+fn matrix(method: &str, loss: Loss) {
+    let cfg = ExperimentConfig {
+        method: method.into(),
+        loss,
+        m: 4,
+        b_local: 256,
+        n_budget: 2048, // T = 2 outer steps for the minibatch-prox family
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 512,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    let host = run_plane(PlanePolicy::Host, &cfg);
+    let chained = run_plane(PlanePolicy::Chained, &cfg);
+    let sharded = run_plane(PlanePolicy::Sharded, &cfg);
+    let tag = format!("{method}[{}]", loss.tag());
+    assert_identical(&chained, &sharded, &format!("{tag} chained-vs-sharded"));
+    // CG iteration counts are residual-dependent, hence lane-dependent
+    let pin_rounds = !matches!(method, "mp-exact" | "disco-erm");
+    assert_equivalent(&host, &chained, pin_rounds, &format!("{tag} host-vs-chained"));
+}
+
+#[test]
+fn every_method_runs_on_every_plane_squared() {
+    for method in METHODS {
+        matrix(method, Loss::Squared);
+    }
+}
+
+#[test]
+fn dsvrg_plane_matrix_logistic() {
+    // the logistic chained kernels across all three planes
+    matrix("mp-dsvrg", Loss::Logistic);
+}
+
+#[test]
+fn plane_config_key_is_honored() {
+    // plane=chained with a pool attached must error loudly, not fall back
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("engine"))
+        .with_shards(ShardPool::new(1, &dir).expect("pool"));
+    let cfg = ExperimentConfig {
+        method: "minibatch-sgd".into(),
+        n_budget: 512,
+        b_local: 64,
+        eval_samples: 128,
+        plane: PlanePolicy::Chained,
+        ..ExperimentConfig::default()
+    };
+    assert!(r.run(&cfg).is_err(), "plane=chained over a shard pool must be rejected");
+    // plane=sharded without SHARDS self-attaches a one-worker pool
+    let mut r = Runner::new(Engine::new(&dir).expect("engine"));
+    let cfg = ExperimentConfig { plane: PlanePolicy::Sharded, ..cfg };
+    let res = r.run(&cfg).expect("plane=sharded attaches its own pool");
+    assert!(res.final_objective.is_some());
+    assert!(r.shards.is_some(), "the self-attached pool persists on the runner");
+    // ...but it must not leak into later runs' plane resolution: auto
+    // still resolves chained and plane=chained is still legal on the
+    // same runner (the user never set SHARDS)
+    let cfg_chained = ExperimentConfig { plane: PlanePolicy::Chained, ..cfg.clone() };
+    r.run(&cfg_chained).expect("self-attached pool must not block plane=chained");
+    let cfg_auto = ExperimentConfig { plane: PlanePolicy::Auto, ..cfg };
+    r.run(&cfg_auto).expect("auto after a self-attached sharded run");
+}

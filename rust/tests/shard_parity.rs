@@ -79,7 +79,7 @@ fn parity(method: &str, loss: Loss, b_local: usize, n_budget: usize) {
         seed: 20170707,
         eval_samples: 1024,
         eval_every: 1,
-        dataset: None,
+        ..ExperimentConfig::default()
     };
     let seq = run_plane(None, &cfg);
     for n in [1usize, 2, m] {
@@ -129,7 +129,47 @@ fn minibatch_sgd_squared() {
 
 #[test]
 fn dsvrg_erm_squared() {
-    // the ERM designated-machine sweep takes the legacy per-block path
-    // (vr_lits materialize on the owning shard)
+    // the ERM designated-machine sweep rides the plane's VR lane
+    // (chained on the sequential plane, grouped-on-shard when sharded)
     parity("dsvrg-erm", Loss::Squared, 256, 2048);
+}
+
+/// The sharded evaluator in isolation: held-out evaluation fans one
+/// segment per machine across the shards, and the fixed-segment-order f64
+/// combine must reproduce the coordinator-engine evaluation bit for bit
+/// (every objective above is already pinned through `assert_identical`;
+/// this pins the evaluator without an algorithm in the loop).
+#[test]
+fn sharded_evaluator_objective_bits() {
+    use mbprox::data::synth::{SynthSpec, SynthStream};
+    use mbprox::data::SampleStream;
+    use mbprox::objective::Evaluator;
+    use mbprox::runtime::ExecPlane;
+
+    let dir = artifacts_dir();
+    let d = 64usize;
+    let m = 4usize;
+    let mut stream = SynthStream::new(SynthSpec::least_squares(d), 99);
+    // ragged: segments of 1024+3 samples split 4 ways
+    let samples = stream.draw_many(4 * 256 + 3);
+    let w: Vec<f32> = (0..d).map(|j| (j as f32 * 0.1).cos() * 0.05).collect();
+
+    let seq_obj = {
+        let mut engine = Engine::new(&dir).expect("engine");
+        let mut plane = ExecPlane::chained(&mut engine);
+        let ev = Evaluator::new(&mut plane, d, Loss::Squared, &samples, m).unwrap();
+        ev.objective(&mut plane, &w).unwrap()
+    };
+    for shards in [1usize, 2, m] {
+        let mut engine = Engine::new(&dir).expect("engine");
+        let pool = ShardPool::new(shards, &dir).expect("pool");
+        let mut plane = ExecPlane::auto(&mut engine, Some(&pool));
+        let ev = Evaluator::new(&mut plane, d, Loss::Squared, &samples, m).unwrap();
+        let obj = ev.objective(&mut plane, &w).unwrap();
+        assert_eq!(
+            seq_obj.to_bits(),
+            obj.to_bits(),
+            "evaluator objective bits (shards={shards})"
+        );
+    }
 }
