@@ -6,10 +6,12 @@
 //! packing + upload cost, a collective round, one full MP-DSVRG outer
 //! step, the chained all-reduce across cluster sizes beyond the
 //! `redm{2,4,8}` artifact set (asserting the host fallback is honestly
-//! metered), and the shard plane's engine-per-worker speedup (shards=N
-//! wall-clock must beat shards=1 on the multi-machine workload). Writes
-//! `BENCH_runtime.json` (stats + engine traffic counters) so the perf
-//! trajectory is trackable across PRs.
+//! metered), the shard plane's engine-per-worker speedup (shards=N
+//! wall-clock must beat shards=1 on the multi-machine workload), and the
+//! DataPlane draw verb's draw+pack throughput (sequential vs
+//! shard-resident draws, with the held draw's per-machine peak-vector
+//! meter recorded). Writes `BENCH_runtime.json` (stats + engine traffic
+//! counters) so the perf trajectory is trackable across PRs.
 
 use mbprox::accounting::{ClusterMeter, DeviceTraffic};
 use mbprox::comm::{netmodel::NetModel, Network};
@@ -285,7 +287,7 @@ fn main() {
                 meter: ClusterMeter::new(4),
                 loss: Loss::Squared,
                 d: 64,
-                streams,
+                streams: mbprox::data::MachineStreams::Local(streams),
                 evaluator: Some(evaluator),
                 eval_every: 0,
             };
@@ -434,6 +436,76 @@ fn main() {
         report.counter("shard.pool.uploads", pooled_traffic.uploads as f64);
         report.counter("shard.pool.downloads", pooled_traffic.downloads as f64);
         report.counter("shard.pool.executions", pooled_traffic.executions as f64);
+    }
+
+    section("data plane: draw+pack throughput (sequential vs sharded draw)");
+    {
+        use mbprox::config::ExperimentConfig;
+        use mbprox::runtime::{default_artifacts_dir, Engine, ShardPool};
+
+        let dir = default_artifacts_dir();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let n_shards = cores.min(4).max(1);
+        let m = 8usize;
+        let b = 2048usize; // 8 blocks per machine per draw
+        let cfg = ExperimentConfig {
+            method: "minibatch-sgd".into(),
+            m,
+            b_local: b,
+            dim: 64,
+            seed: 23,
+            eval_samples: 64,
+            ..ExperimentConfig::default()
+        };
+
+        // sequential draw: coordinator-held streams, packed inline on the
+        // coordinator engine (the chained plane)
+        let mut r_seq = Runner::new(Engine::new(&dir).unwrap());
+        let mut ctx_seq = r_seq.context(&cfg).unwrap();
+        let s_seq = bench_batched(&format!("draw+pack b={b} m={m} (sequential)"), 1, 8, || {
+            std::hint::black_box(ctx_seq.draw_batches_grad_only(b, false).unwrap());
+            m
+        });
+        println!("{}", s_seq.report());
+        report.push_on(&s_seq, "chained");
+
+        // honest peak-memory metering rides the same draw path: one held
+        // draw's per-machine peaks land in the report (the paper's
+        // memory axis)
+        let held = ctx_seq.draw_batches(b, true).unwrap();
+        let rep = ctx_seq.meter.report();
+        println!(
+            "  held draw peak vectors: {} (per machine: {})",
+            rep.peak_vectors,
+            rep.peaks_display()
+        );
+        report.counter("draw.held.peak_vectors", rep.peak_vectors as f64);
+        ctx_seq.release_batches(&held);
+        drop(held);
+
+        // sharded draw: shard-resident streams generate AND pack on the
+        // owning shards — no coordinator-side sample materialization
+        let mut r_sh = Runner::new(Engine::new(&dir).unwrap())
+            .with_shards(ShardPool::new(n_shards, &dir).unwrap());
+        let mut ctx_sh = r_sh.context(&cfg).unwrap();
+        let s_sh = bench_batched(
+            &format!("draw+pack b={b} m={m} (sharded x{n_shards})"),
+            1,
+            8,
+            || {
+                std::hint::black_box(ctx_sh.draw_batches_grad_only(b, false).unwrap());
+                m
+            },
+        );
+        println!("{}", s_sh.report());
+        report.push_on(&s_sh, "sharded");
+
+        let speedup = s_seq.median_ns / s_sh.median_ns.max(1.0);
+        println!("  -> sharded draw speedup at {n_shards} workers: {speedup:.2}x");
+        report.counter("draw.workers", n_shards as f64);
+        report.counter("draw.seq_median_ns", s_seq.median_ns);
+        report.counter("draw.sharded_median_ns", s_sh.median_ns);
+        report.counter("draw.speedup", speedup);
     }
 
     section("engine cumulative stats");

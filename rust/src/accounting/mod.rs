@@ -113,6 +113,7 @@ impl ClusterMeter {
             vectors_sent: mx(|r| r.vectors_sent),
             vec_ops: mx(|r| r.vec_ops),
             peak_vectors: mx(|r| r.peak_vectors),
+            peak_per_machine: self.machines.iter().map(|r| r.peak_vectors).collect(),
         }
     }
 }
@@ -196,7 +197,13 @@ pub struct ResourceReport {
     pub comm_rounds: u64,
     pub vectors_sent: u64,
     pub vec_ops: u64,
+    /// cluster max of the per-machine peaks — the paper's "memory per
+    /// machine" bound
     pub peak_vectors: u64,
+    /// every machine's peak held-vector count, in machine order: the
+    /// honest memory axis (a ragged draw or a designated-sweeper role
+    /// shows up here, not just in the max)
+    pub peak_per_machine: Vec<u64>,
 }
 
 impl ResourceReport {
@@ -213,6 +220,11 @@ impl ResourceReport {
             name, self.total_samples, self.comm_rounds, self.vec_ops, self.peak_vectors,
             self.vectors_sent
         )
+    }
+
+    /// Per-machine peaks as a compact display string, e.g. `"514 514 513"`.
+    pub fn peaks_display(&self) -> String {
+        self.peak_per_machine.iter().map(u64::to_string).collect::<Vec<_>>().join(" ")
     }
 }
 
@@ -295,6 +307,19 @@ mod tests {
         let c = ClusterMeter::new(2);
         let r = c.report();
         assert_eq!(ResourceReport::header().len(), r.row("x").len());
+    }
+
+    #[test]
+    fn report_carries_per_machine_peaks() {
+        let mut c = ClusterMeter::new(3);
+        c.machine(0).hold(5);
+        c.machine(1).hold(9);
+        c.machine(1).release(9);
+        c.machine(2).hold(2);
+        let r = c.report();
+        assert_eq!(r.peak_per_machine, vec![5, 9, 2]);
+        assert_eq!(r.peak_vectors, 9, "cluster peak is the per-machine max");
+        assert_eq!(r.peaks_display(), "5 9 2");
     }
 
     #[test]

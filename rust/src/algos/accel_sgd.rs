@@ -12,6 +12,10 @@
 //!
 //! with eta = 1/gamma, gamma = beta + sqrt(4T/(bm)) L/B (the smoothed
 //! stepsize of Prop. 13 — the same scaling Cotter et al. use).
+//!
+//! Like minibatch SGD, the gradient at the momentum point rides the
+//! plane's gradient lane (chained kernels + collective on the
+//! device-capable planes, tupled dispatches on the host plane).
 
 use super::{Method, Recorder, RunContext, RunResult};
 use crate::linalg::WeightedAvg;
@@ -39,12 +43,15 @@ impl Method for AccelMinibatchSgd {
         for i in 0..ctx.meter.m() {
             ctx.meter.machine(i).hold(3);
         }
+        let lane = ctx.plane.grad_lane(ctx.loss, d);
         for t in 1..=self.t_outer {
             let mom = ((t - 1) as f32) / ((t + 2) as f32);
             let y: Vec<f32> =
                 (0..d).map(|j| w[j] + mom * (w[j] - w_prev[j])).collect();
             let batches = ctx.draw_batches_grad_only(self.b_local, false)?;
-            let (g, _, _) = ctx.mean_grad_loss(&batches, &y)?;
+            let y_pv = ctx.plane.lift(lane, &y)?;
+            let g_pv = ctx.mean_grad_pv(lane, &batches, &y_pv)?;
+            let g = ctx.plane.into_host(g_pv)?;
             drop(batches);
             w_prev = std::mem::replace(
                 &mut w,

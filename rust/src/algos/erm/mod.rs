@@ -33,13 +33,16 @@ pub struct ErmProblem {
 }
 
 impl ErmProblem {
-    /// Draw `n_total` fresh samples (n/m per machine), charge memory, and
-    /// build the regularized ERM problem.
+    /// Draw `n_total` fresh samples (n/m requested per machine), charge
+    /// memory, and build the regularized ERM problem. `n_total` records
+    /// what was *actually* drawn — a finite-ERM scenario's epoch-bounded
+    /// stream may return a short final shard.
     pub fn draw(ctx: &mut RunContext, n_total: usize, nu: f64) -> Result<ErmProblem> {
         let m = ctx.m();
         let per = n_total.div_ceil(m);
         let shards = ctx.draw_batches(per, true)?;
-        Ok(ErmProblem { shards, n_total: per * m, nu })
+        let n_total = shards.iter().map(|b| b.n).sum();
+        Ok(ErmProblem { shards, n_total, nu })
     }
 
     /// Like [`ErmProblem::draw`] for optimizers that only take the
@@ -48,7 +51,8 @@ impl ErmProblem {
         let m = ctx.m();
         let per = n_total.div_ceil(m);
         let shards = ctx.draw_batches_grad_only(per, true)?;
-        Ok(ErmProblem { shards, n_total: per * m, nu })
+        let n_total = shards.iter().map(|b| b.n).sum();
+        Ok(ErmProblem { shards, n_total, nu })
     }
 
     /// Release the held shard memory (end of run): each shard recorded

@@ -5,6 +5,12 @@
 //! `w <- w - (1/gamma_t) grad`. Streaming: the batch is *not* retained —
 //! memory is O(1) vectors per machine, which is exactly the property the
 //! paper contrasts with minibatch-prox's b-vector memory.
+//!
+//! The mean gradient rides the plane's gradient lane
+//! (`ExecPlane::grad_lane`): the `gacc{K}` chain + device/host collective
+//! on the chained and sharded planes (one d-vector materialize per round
+//! on the Dev lane), the legacy tupled dispatches on the host plane —
+//! identical rounds/vec-ops/sample accounting on every lane.
 
 use super::{Method, Recorder, RunContext, RunResult};
 use crate::linalg::{self, WeightedAvg};
@@ -32,11 +38,14 @@ impl Method for MinibatchSgd {
         for i in 0..ctx.meter.m() {
             ctx.meter.machine(i).hold(2);
         }
+        let lane = ctx.plane.grad_lane(ctx.loss, d);
         for t in 1..=self.t_outer {
             // streaming batch: packed, used once, dropped (no hold charge);
             // grad-only: no host block retention
             let batches = ctx.draw_batches_grad_only(self.b_local, false)?;
-            let (g, _, _) = ctx.mean_grad_loss(&batches, &w)?;
+            let w_pv = ctx.plane.lift(lane, &w)?;
+            let g_pv = ctx.mean_grad_pv(lane, &batches, &w_pv)?;
+            let g = ctx.plane.into_host(g_pv)?;
             drop(batches);
             linalg::axpy(-step, &g, &mut w);
             ctx.meter.all_vec_ops(1);

@@ -19,27 +19,18 @@ pub mod solvers;
 
 use crate::accounting::{ClusterMeter, ResourceReport};
 use crate::comm::Network;
-use crate::data::{Loss, SampleStream};
+use crate::data::{Loss, MachineStreams};
 use crate::objective::{self, Evaluator, MachineBatch};
 use crate::runtime::plane::{
     ExecPlane, Lane, LocalSolver, PlaneLocals, PlaneVec, VrSweeper,
 };
 use anyhow::Result;
 
-/// How a drawn batch is packed for the engine (see `MachineBatch`).
-/// Solvers pick a mode per plane via [`solvers::ProxSolver::pack_mode`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PackMode {
-    /// fused groups + host blocks retained for Host-lane per-block sweeps
-    Full,
-    /// fused groups only (grad/normal-matvec consumers)
-    GradOnly,
-    /// fused groups aligned to a p-way block partition (chained sweeps)
-    VrAligned(usize),
-}
+pub use crate::objective::PackMode;
 
 /// Everything a method needs to run: the execution plane, simulated
-/// cluster fabric, per-machine streams, and the evaluation hook.
+/// cluster fabric, the per-machine streams (coordinator-held or
+/// shard-resident — see [`MachineStreams`]), and the evaluation hook.
 pub struct RunContext<'e> {
     /// THE execution plane (host | chained | sharded) every engine access
     /// goes through; selection is coordinator policy (`plane=` / `PLANE`)
@@ -49,7 +40,9 @@ pub struct RunContext<'e> {
     pub loss: Loss,
     /// padded (artifact) feature dimension
     pub d: usize,
-    pub streams: Vec<Box<dyn SampleStream>>,
+    /// the DataPlane state: machine streams, drawn from exclusively
+    /// through the plane's draw verb
+    pub streams: MachineStreams,
     pub evaluator: Option<Evaluator>,
     /// evaluate every `eval_every` outer iterations (0 = only at the end)
     pub eval_every: usize,
@@ -91,8 +84,10 @@ impl<'e> RunContext<'e> {
         self.draw_batches_mode(b_local, hold, PackMode::VrAligned(p))
     }
 
-    /// Draw with an explicit [`PackMode`] (the outer loops pass the
-    /// solver's [`solvers::ProxSolver::pack_mode`] verdict through here).
+    /// Draw with an explicit [`PackMode`] — the plane's draw verb
+    /// ([`ExecPlane::draw_batches`]): inline on the coordinator engine,
+    /// or generated AND packed on the owning shards with no
+    /// coordinator-side sample materialization.
     pub fn draw_batches_mode(
         &mut self,
         b_local: usize,
@@ -100,79 +95,21 @@ impl<'e> RunContext<'e> {
         mode: PackMode,
     ) -> Result<Vec<MachineBatch>> {
         let d = self.d;
-        if let Some(pool) = self.plane.shards {
-            return self.draw_batches_sharded(pool, b_local, hold, mode);
-        }
-        let mut out = Vec::with_capacity(self.streams.len());
-        for (i, s) in self.streams.iter_mut().enumerate() {
-            let samples = s.draw_many(b_local);
-            // charge what was actually drawn, not what was requested: a
-            // stream may run short on its final (ragged) batch
-            let drawn = samples.len() as u64;
-            let meter = self.meter.machine(i);
-            meter.add_samples(drawn);
-            if hold {
-                meter.hold(drawn);
-            }
-            let engine = &mut *self.plane.engine;
-            let mut batch = match mode {
-                PackMode::Full => MachineBatch::pack(engine, d, &samples)?,
-                PackMode::GradOnly => MachineBatch::pack_grad_only(engine, d, &samples)?,
-                PackMode::VrAligned(p) => MachineBatch::pack_vr_aligned(engine, d, &samples, p)?,
-            };
-            batch.held = if hold { drawn } else { 0 };
-            out.push(batch);
-        }
-        Ok(out)
+        self.plane.draw_batches(&mut self.streams, &mut self.meter, d, b_local, hold, mode)
     }
 
-    /// Sharded draw: samples are drawn on the coordinator (the stream
-    /// order — and therefore every sample — is identical to the
-    /// sequential plane), shipped to the owning shard as host data, and
-    /// packed there in parallel. The coordinator keeps one metadata stub
-    /// per machine; sample/memory charges are identical to the
-    /// sequential draw.
-    fn draw_batches_sharded(
+    /// Draw verb for ONE machine ([`ExecPlane::draw_machine`]): the
+    /// single-machine methods' stream advances wherever the machine
+    /// lives.
+    pub fn draw_machine(
         &mut self,
-        pool: &crate::runtime::ShardPool,
-        b_local: usize,
+        i: usize,
+        n: usize,
         hold: bool,
         mode: PackMode,
-    ) -> Result<Vec<MachineBatch>> {
+    ) -> Result<MachineBatch> {
         let d = self.d;
-        let mut pends = Vec::with_capacity(self.streams.len());
-        for (i, s) in self.streams.iter_mut().enumerate() {
-            let samples = s.draw_many(b_local);
-            let drawn = samples.len() as u64;
-            let meter = self.meter.machine(i);
-            meter.add_samples(drawn);
-            if hold {
-                meter.hold(drawn);
-            }
-            let pend = pool.submit(pool.shard_of(i), move |state| {
-                let batch = match mode {
-                    PackMode::Full => MachineBatch::pack(&mut state.engine, d, &samples)?,
-                    PackMode::GradOnly => {
-                        MachineBatch::pack_grad_only(&mut state.engine, d, &samples)?
-                    }
-                    PackMode::VrAligned(p) => {
-                        MachineBatch::pack_vr_aligned(&mut state.engine, d, &samples, p)?
-                    }
-                };
-                let reply = (batch.n, batch.n_blocks(), batch.shard_meta(i));
-                state.batches.insert(i, batch);
-                Ok(reply)
-            });
-            pends.push((drawn, pend));
-        }
-        let mut out = Vec::with_capacity(pends.len());
-        for (drawn, pend) in pends {
-            let (n, n_blocks, meta) = pend.wait()?;
-            let mut stub = MachineBatch::stub(d, n, n_blocks, meta);
-            stub.held = if hold { drawn } else { 0 };
-            out.push(stub);
-        }
-        Ok(out)
+        self.plane.draw_machine(&mut self.streams, &mut self.meter, i, d, n, hold, mode)
     }
 
     /// Release the memory charged when `batches` were drawn: each batch
@@ -199,9 +136,23 @@ impl<'e> RunContext<'e> {
         self.plane.mean_grad(lane, &mut self.net, &mut self.meter, self.loss, batches, z)
     }
 
+    /// Machine-local mean gradient on `lane` — no collective, no round
+    /// charged (see [`ExecPlane::local_mean_grad`]). The single-machine
+    /// methods' gradient read.
+    pub fn local_mean_grad_pv(
+        &mut self,
+        lane: Lane,
+        batches: &[MachineBatch],
+        i: usize,
+        z: &PlaneVec,
+    ) -> Result<PlaneVec> {
+        self.plane.local_mean_grad(lane, &mut self.meter, self.loss, batches, i, z)
+    }
+
     /// Host-level distributed mean gradient with the mean loss and total
-    /// count — the O(1)-memory SGD baselines read gradient AND loss on
-    /// every plane through the tupled dispatch path.
+    /// count — the tupled dispatch path (ERM full gradients, evaluation
+    /// probes; the SGD baselines now ride the plane's chained lane via
+    /// [`RunContext::mean_grad_pv`]).
     pub fn mean_grad_loss(
         &mut self,
         batches: &[MachineBatch],

@@ -10,10 +10,15 @@
 //! stepsizes do not survive chunking (the sum of per-sample steps over a
 //! chunk would exceed the stability region). Suffix averaging as in
 //! minibatch_sgd.rs.
+//!
+//! Machine 0's stream, batch and gradient all live wherever the plane
+//! puts machine 0: the chunk is drawn through the plane's draw verb and
+//! the chunk-mean gradient through `ExecPlane::local_mean_grad` (no
+//! collective — this method communicates nothing), so on the sharded
+//! plane the samples never visit the coordinator.
 
-use super::{Method, Recorder, RunContext, RunResult};
-use crate::linalg::WeightedAvg;
-use crate::objective::{local_grad_sum, MachineBatch};
+use super::{Method, PackMode, Recorder, RunContext, RunResult};
+use crate::linalg::{self, WeightedAvg};
 use anyhow::Result;
 
 pub struct LocalSgd {
@@ -39,18 +44,17 @@ impl Method for LocalSgd {
         let chunk = self.chunk.max(1);
         let steps = self.n_total.div_ceil(chunk);
         let step = (1.0 / self.gamma) as f32;
+        let lane = ctx.plane.grad_lane(ctx.loss, d);
         for t in 1..=steps {
-            let samples = ctx.streams[0].draw_many(chunk);
-            ctx.meter.machine(0).add_samples(chunk as u64);
-            // single-machine method: the batch lives (and dies) on the
-            // coordinator engine on every plane
-            let batch = MachineBatch::pack(ctx.plane.engine, d, &samples)?;
-            let out =
-                local_grad_sum(ctx.plane.engine, ctx.loss, &batch, &w, ctx.meter.machine(0))?;
-            let cnt = out.count.max(1.0) as f32;
-            for j in 0..d {
-                w[j] -= step * out.grad_sum[j] / cnt;
-            }
+            // the draw verb charges machine 0's samples where they are
+            // actually generated (coordinator or owning shard)
+            let batch = ctx.draw_machine(0, chunk, false, PackMode::GradOnly)?;
+            let batches = [batch];
+            let w_pv = ctx.plane.lift(lane, &w)?;
+            let g_pv = ctx.local_mean_grad_pv(lane, &batches, 0, &w_pv)?;
+            let g = ctx.plane.into_host(g_pv)?;
+            drop(batches);
+            linalg::axpy(-step, &g, &mut w);
             ctx.meter.machine(0).add_vec_ops(1);
             // suffix averaging (last half) — see minibatch_sgd.rs
             if 2 * t > steps {

@@ -14,6 +14,7 @@
 
 use crate::data::Loss;
 use crate::runtime::PlanePolicy;
+use crate::util::closest_name;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -30,6 +31,8 @@ pub const CONFIG_KEYS: &[(&str, &str)] = &[
     ("seed", "PRNG seed (u64)"),
     ("eval_samples", "held-out evaluation set size"),
     ("eval_every", "evaluate every k outer iterations (0 = end only)"),
+    ("scenario", "named data scenario (the registry list below / `mbprox list`)"),
+    ("data_path", "libsvm file path (scenario=libsvm)"),
     ("dataset", "named dataset: codrna | covtype | kddcup99 | year"),
     ("plane", "execution plane: auto | host | chained | sharded"),
 ];
@@ -121,35 +124,15 @@ impl KvConfig {
             if key.contains('.') || known.iter().any(|(k, _)| *k == key) {
                 continue;
             }
-            let suggestion = known
-                .iter()
-                .map(|(k, _)| (*k, edit_distance(key, k)))
-                .min_by_key(|&(_, d)| d)
-                .filter(|&(_, d)| d <= 3);
-            match suggestion {
-                Some((best, _)) => bail!("unknown config key '{key}' (did you mean '{best}'?)"),
+            // shared matcher (util::closest_name) — scenario names reject
+            // typos with the identical behavior
+            match closest_name(key, known.iter().map(|(k, _)| *k)) {
+                Some(best) => bail!("unknown config key '{key}' (did you mean '{best}'?)"),
                 None => bail!("unknown config key '{key}' (see `mbprox run --help` for keys)"),
             }
         }
         Ok(())
     }
-}
-
-/// Classic Levenshtein distance (tiny inputs: config key names).
-fn edit_distance(a: &str, b: &str) -> usize {
-    let a: Vec<char> = a.chars().collect();
-    let b: Vec<char> = b.chars().collect();
-    let mut prev: Vec<usize> = (0..=b.len()).collect();
-    let mut cur = vec![0usize; b.len() + 1];
-    for (i, &ca) in a.iter().enumerate() {
-        cur[0] = i + 1;
-        for (j, &cb) in b.iter().enumerate() {
-            let sub = prev[j] + usize::from(ca != cb);
-            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
-        }
-        std::mem::swap(&mut prev, &mut cur);
-    }
-    prev[b.len()]
 }
 
 /// Top-level experiment description shared by the CLI and examples.
@@ -164,6 +147,11 @@ pub struct ExperimentConfig {
     pub eval_samples: usize,
     pub eval_every: usize,
     pub method: String,
+    /// named data scenario from the registry (`scenario=` key; see
+    /// `data::scenario::SCENARIOS`). Mutually exclusive with `dataset`.
+    pub scenario: Option<String>,
+    /// on-disk libsvm path (`data_path=` key; the `libsvm` scenario)
+    pub data_path: Option<String>,
     pub dataset: Option<String>,
     /// execution-plane policy (`plane=` key; `Auto` defers to the
     /// runner's `PLANE` env / default)
@@ -182,6 +170,8 @@ impl Default for ExperimentConfig {
             eval_samples: 4096,
             eval_every: 0,
             method: "mp-dsvrg".to_string(),
+            scenario: None,
+            data_path: None,
             dataset: None,
             plane: PlanePolicy::Auto,
         }
@@ -211,6 +201,8 @@ impl ExperimentConfig {
             eval_samples: kv.get_usize("eval_samples", dflt.eval_samples)?,
             eval_every: kv.get_usize("eval_every", dflt.eval_every)?,
             method: kv.get_str("method", &dflt.method),
+            scenario: kv.get("scenario").map(str::to_string),
+            data_path: kv.get("data_path").map(str::to_string),
             dataset: kv.get("dataset").map(str::to_string),
             plane,
         })
@@ -292,11 +284,15 @@ mod tests {
     }
 
     #[test]
-    fn edit_distance_basics() {
-        assert_eq!(edit_distance("b_local", "b_local"), 0);
-        assert_eq!(edit_distance("b_locl", "b_local"), 1);
-        assert_eq!(edit_distance("", "abc"), 3);
-        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    fn scenario_keys_parse() {
+        let kv = KvConfig::parse("scenario = drift\ndata_path = /tmp/x.libsvm\n").unwrap();
+        let ec = ExperimentConfig::from_kv(&kv).unwrap();
+        assert_eq!(ec.scenario.as_deref(), Some("drift"));
+        assert_eq!(ec.data_path.as_deref(), Some("/tmp/x.libsvm"));
+        // the scenario key itself is typo-guarded like every other key
+        let kv = KvConfig::parse("scenaro = drift\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'scenario'"), "{err}");
     }
 
     #[test]

@@ -21,13 +21,16 @@ use crate::algos::{Method, RunContext, RunResult};
 use crate::accounting::ClusterMeter;
 use crate::comm::{netmodel::NetModel, Network};
 use crate::config::ExperimentConfig;
+use crate::data::scenario::{self, ScenarioParams, Setting, StreamFamily};
 use crate::data::synth::{SynthSpec, SynthStream};
 use crate::data::table3::DatasetSpec;
-use crate::data::{Loss, Sample, SampleStream};
+use crate::data::{Loss, MachineStreams, Sample, SampleStream};
 use crate::objective::Evaluator;
-use crate::runtime::{default_artifacts_dir, Engine, ExecPlane, PlanePolicy, ShardPool};
+use crate::runtime::{
+    default_artifacts_dir, Engine, ExecPlane, Pending, PlanePolicy, ShardPool,
+};
 use crate::theory::{self, ProblemConsts};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::path::Path;
 
 /// Problem constants used for the theory plans; row_norm=1 streams give
@@ -150,29 +153,19 @@ impl Runner {
         Ok(policy)
     }
 
-    /// Build a context with synthetic per-machine streams + evaluator.
+    /// Build a context from the config's data axis (the scenario
+    /// registry, a named dataset, or the default planted-model stream) +
+    /// evaluator, validating the method/scenario setting pairing.
     pub fn context(&mut self, cfg: &ExperimentConfig) -> Result<RunContext<'_>> {
-        let (root, native_dim) = match &cfg.dataset {
-            Some(name) => {
-                let spec = DatasetSpec::by_name(name)
-                    .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
-                (spec.stream(cfg.seed), spec.dim)
-            }
-            None => {
-                let spec = match cfg.loss {
-                    Loss::Squared => SynthSpec::least_squares(cfg.dim),
-                    Loss::Logistic => SynthSpec::logistic(cfg.dim),
-                };
-                (SynthStream::new(spec, cfg.seed), cfg.dim)
-            }
-        };
-        let d = self.padded_dim(native_dim)?;
-        let streams: Vec<Box<dyn SampleStream>> = (0..cfg.m)
-            .map(|i| Box::new(root.fork_stream(i as u64)) as Box<dyn SampleStream>)
-            .collect();
-        let mut eval_stream = root.fork_stream(EVAL_TAG);
+        let family = build_family(cfg)?;
+        validate_pairing(&cfg.method, family.as_ref())?;
+        let d = self.padded_dim(family.dim())?;
+        let loss = family.loss();
+        let streams: Vec<Box<dyn SampleStream>> =
+            (0..cfg.m).map(|i| family.fork_stream(i as u64)).collect();
+        let mut eval_stream = family.fork_stream(EVAL_TAG);
         let eval_samples = eval_stream.draw_many(cfg.eval_samples);
-        self.build_context(cfg.plane, cfg.loss, d, streams, &eval_samples, cfg.eval_every)
+        self.build_context(cfg.plane, loss, d, streams, &eval_samples, cfg.eval_every)
     }
 
     /// Build a context over caller-supplied per-machine streams and a
@@ -202,8 +195,8 @@ impl Runner {
         let m = streams.len();
         let policy = self.resolve_plane(cfg_plane)?;
         if let Some(pool) = &self.shards {
-            // stale machine/evaluator state from a previous run must not
-            // leak in (the evaluator below packs onto the cleared shards)
+            // stale machine/stream/evaluator state from a previous run
+            // must not leak in (the installs below land on cleared shards)
             pool.clear_machines()?;
         }
         // a self-attached pool serves plane=sharded runs only: for every
@@ -214,6 +207,27 @@ impl Runner {
             self.shards.as_ref()
         };
         let mut plane = ExecPlane::new(&mut self.engine, pool, policy)?;
+        // DataPlane residency: with a pool on the plane, each machine's
+        // stream moves to its owning shard (next to its batches) and the
+        // draw verb generates + packs shard-side from then on
+        let streams = if let Some(pool) = plane.shards {
+            let pends: Vec<Pending<()>> = streams
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    pool.submit(pool.shard_of(i), move |state| {
+                        state.streams.insert(i, s);
+                        Ok(())
+                    })
+                })
+                .collect();
+            for p in pends {
+                p.wait()?;
+            }
+            MachineStreams::Sharded { m }
+        } else {
+            MachineStreams::Local(streams)
+        };
         let evaluator = Some(Evaluator::new(&mut plane, d, loss, eval_samples, m)?);
         Ok(RunContext {
             plane,
@@ -232,16 +246,119 @@ impl Runner {
         build_method(&cfg.method, cfg)
     }
 
-    /// Run one experiment end to end.
+    /// Run one experiment end to end. A `dataset=` run first resolves the
+    /// dataset's native loss/dim into the config ([`effective_config`]) so
+    /// the theory-driven method plan and the data the context serves
+    /// cannot disagree.
     pub fn run(&mut self, cfg: &ExperimentConfig) -> Result<RunResult> {
-        let mut method = self.method(cfg)?;
-        let mut ctx = self.context(cfg)?;
+        let cfg = effective_config(cfg)?;
+        let mut method = self.method(&cfg)?;
+        let mut ctx = self.context(&cfg)?;
         method.run(&mut ctx)
+    }
+}
+
+/// Resolve the data axis back into the config: a named dataset imposes
+/// its own loss and native dimension (the scenario registry already
+/// takes both from the config, so only `dataset=` needs this). Without
+/// it, `dataset=codrna method=mp-dsvrg` would build squared-loss theory
+/// plans (the `loss=` default) while the context serves logistic data.
+pub fn effective_config(cfg: &ExperimentConfig) -> Result<ExperimentConfig> {
+    match &cfg.dataset {
+        Some(name) => {
+            let spec = DatasetSpec::by_name(name)
+                .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+            Ok(ExperimentConfig { loss: spec.loss, dim: spec.dim, ..cfg.clone() })
+        }
+        None => Ok(cfg.clone()),
     }
 }
 
 /// Stream-split tag reserved for the held-out evaluation stream.
 const EVAL_TAG: u64 = 0xE7A1;
+
+/// Resolve the config's data axis into a stream family: the `scenario=`
+/// registry (did-you-mean rejection on unknown names), a named Table-3
+/// dataset, or the default planted-model stream. `scenario=` and
+/// `dataset=` are mutually exclusive — the dataset specs predate the
+/// registry and remain the Figure-3 protocol's entry point.
+pub fn build_family(cfg: &ExperimentConfig) -> Result<Box<dyn StreamFamily>> {
+    match (&cfg.scenario, &cfg.dataset) {
+        (Some(_), Some(_)) => {
+            bail!("scenario= and dataset= are mutually exclusive (pick one data axis)")
+        }
+        (Some(name), None) => {
+            let params = ScenarioParams {
+                dim: cfg.dim,
+                loss: cfg.loss,
+                seed: cfg.seed,
+                m: cfg.m,
+                n_budget: cfg.n_budget,
+                data_path: cfg.data_path.clone(),
+            };
+            scenario::by_name(name)?.build(&params)
+        }
+        (None, Some(name)) => {
+            let spec = DatasetSpec::by_name(name)
+                .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+            Ok(Box::new(spec.stream(cfg.seed)))
+        }
+        (None, None) => {
+            let spec = match cfg.loss {
+                Loss::Squared => SynthSpec::least_squares(cfg.dim),
+                Loss::Logistic => SynthSpec::logistic(cfg.dim),
+            };
+            Ok(Box::new(SynthStream::new(spec, cfg.seed)))
+        }
+    }
+}
+
+/// Per-method declared optimization setting — one row per registered
+/// method (the tests pin that this table and [`METHODS`] agree exactly,
+/// so a new method cannot be registered without declaring its setting).
+/// Streaming methods require fresh i.i.d. draws; the ERM baselines
+/// materialize a fixed set up front and accept either setting (a stream
+/// can always feed a finite draw).
+pub const METHOD_SETTINGS: [(&str, Setting); 12] = [
+    ("mp-dsvrg", Setting::StreamingSo),
+    ("mp-dane", Setting::StreamingSo),
+    ("mp-dane-saga", Setting::StreamingSo),
+    ("mp-exact", Setting::StreamingSo),
+    ("mp-oneshot", Setting::StreamingSo),
+    ("minibatch-sgd", Setting::StreamingSo),
+    ("acc-minibatch-sgd", Setting::StreamingSo),
+    ("local-sgd", Setting::StreamingSo),
+    ("dsvrg-erm", Setting::FiniteErm),
+    ("dane-erm", Setting::FiniteErm),
+    ("agd-erm", Setting::FiniteErm),
+    ("disco-erm", Setting::FiniteErm),
+];
+
+/// Look a method's setting up in [`METHOD_SETTINGS`]. Unlisted names
+/// (the `emso`/`ideal` aliases) default to streaming — the stricter of
+/// the two pairings.
+pub fn method_setting(name: &str) -> Setting {
+    METHOD_SETTINGS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|&(_, s)| s)
+        .unwrap_or(Setting::StreamingSo)
+}
+
+/// Reject method/scenario pairings the paper's accounting cannot honor:
+/// a streaming-SO method on a finite-ERM scenario would recycle a fixed
+/// sample set while charging it as fresh population draws.
+fn validate_pairing(method: &str, family: &dyn StreamFamily) -> Result<()> {
+    if method_setting(method) == Setting::StreamingSo && family.setting() == Setting::FiniteErm {
+        bail!(
+            "method '{method}' is streaming-SO (fresh i.i.d. draws every round) but the \
+             scenario is {}: pick an ERM method (dsvrg-erm | dane-erm | agd-erm | disco-erm) \
+             or a streaming scenario",
+            family.setting().as_str()
+        );
+    }
+    Ok(())
+}
 
 /// Construct a method by name using the theory plans (DESIGN.md §6).
 pub fn build_method(name: &str, cfg: &ExperimentConfig) -> Result<Box<dyn Method>> {
@@ -390,6 +507,74 @@ mod tests {
             assert!(!m.name().is_empty());
         }
         assert!(build_method("nope", &cfg).is_err());
+    }
+
+    #[test]
+    fn family_axis_resolves_and_validates() {
+        // default: planted synth, streaming
+        let cfg = ExperimentConfig::default();
+        let fam = build_family(&cfg).unwrap();
+        assert_eq!(fam.setting(), Setting::StreamingSo);
+        assert_eq!(fam.dim(), cfg.dim);
+        // registry scenarios resolve by name; typos get a suggestion
+        let cfg_drift =
+            ExperimentConfig { scenario: Some("drift".into()), ..ExperimentConfig::default() };
+        assert_eq!(build_family(&cfg_drift).unwrap().setting(), Setting::StreamingSo);
+        let cfg_typo =
+            ExperimentConfig { scenario: Some("drfit".into()), ..ExperimentConfig::default() };
+        let err = build_family(&cfg_typo).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'drift'"), "{err}");
+        // scenario and dataset are mutually exclusive
+        let cfg_both = ExperimentConfig {
+            scenario: Some("drift".into()),
+            dataset: Some("year".into()),
+            ..ExperimentConfig::default()
+        };
+        assert!(build_family(&cfg_both).is_err());
+        // the pairing guard: streaming methods reject finite-ERM families
+        let cfg_erm =
+            ExperimentConfig { scenario: Some("erm-fixed".into()), ..ExperimentConfig::default() };
+        let fam = build_family(&cfg_erm).unwrap();
+        assert!(validate_pairing("mp-dsvrg", fam.as_ref()).is_err());
+        assert!(validate_pairing("minibatch-sgd", fam.as_ref()).is_err());
+        assert!(validate_pairing("dsvrg-erm", fam.as_ref()).is_ok());
+        // ERM methods also run on streaming families (they draw n up front)
+        let fam = build_family(&ExperimentConfig::default()).unwrap();
+        assert!(validate_pairing("dane-erm", fam.as_ref()).is_ok());
+    }
+
+    #[test]
+    fn effective_config_resolves_dataset_loss_and_dim() {
+        // the theory plan must see the dataset's native loss/dim, not the
+        // `loss=`/`dim=` defaults
+        let cfg =
+            ExperimentConfig { dataset: Some("codrna".into()), ..ExperimentConfig::default() };
+        let eff = effective_config(&cfg).unwrap();
+        assert_eq!(eff.loss, Loss::Logistic);
+        assert_eq!(eff.dim, 8);
+        // non-dataset configs pass through untouched
+        let eff = effective_config(&ExperimentConfig::default()).unwrap();
+        assert_eq!(eff.loss, Loss::Squared);
+        let bad = ExperimentConfig { dataset: Some("nope".into()), ..ExperimentConfig::default() };
+        assert!(effective_config(&bad).is_err());
+    }
+
+    #[test]
+    fn method_settings_cover_the_registry() {
+        // every registered method must have a declared settings row (a
+        // new METHODS entry without one fails here, not silently at
+        // validate_pairing time) — and no stale rows either
+        for m in METHODS {
+            assert!(
+                METHOD_SETTINGS.iter().any(|(n, _)| *n == m),
+                "method '{m}' missing from METHOD_SETTINGS"
+            );
+        }
+        assert_eq!(METHOD_SETTINGS.len(), METHODS.len());
+        assert_eq!(method_setting("mp-dsvrg"), Setting::StreamingSo);
+        assert_eq!(method_setting("disco-erm"), Setting::FiniteErm);
+        // aliases default to the stricter streaming classification
+        assert_eq!(method_setting("emso"), Setting::StreamingSo);
     }
 
     #[test]

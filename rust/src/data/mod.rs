@@ -1,18 +1,33 @@
-//! Data substrate: sample streams, synthetic generators, dataset specs,
-//! libsvm text IO, samplers and block packing.
+//! Data substrate: the DataPlane's stream side — sample streams, the
+//! scenario registry, samplers, libsvm IO and block packing.
 //!
 //! The paper's setting is *stochastic* optimization: each machine has a
-//! "button" producing i.i.d. samples. `SampleStream` is that button;
-//! `synth` provides planted-model implementations; `table3` mirrors the
+//! "button" producing i.i.d. samples. [`SampleStream`] is that button. It
+//! is `Send` by contract: a machine's stream is a shard-resident object
+//! on the sharded execution plane — moved to the owning shard at context
+//! construction, drawn and packed there by the plane's **draw** verb
+//! (`runtime::plane::ExecPlane::draw_batches`, the fifth verb next to
+//! upload/dispatch/chain/reduce) with zero coordinator-side sample
+//! materialization. [`MachineStreams`] names the two homes a cluster's
+//! streams can have.
+//!
+//! `scenario` is the registry of named, config-selectable stream families
+//! (`scenario=` key): planted-model synth, streaming drift, heavy-tailed
+//! covariates, sparse features, fixed finite sample sets and chunked
+//! out-of-core libsvm — each declaring whether it is streaming-SO or
+//! finite-ERM so the coordinator can validate method/scenario pairings.
+//! `synth` provides the planted-model generators; `table3` mirrors the
 //! paper's four evaluation datasets (Appendix E, Table 3) with synthetic
-//! equivalents (substitution documented in DESIGN.md §3); `libsvm` gives a
-//! real on-disk format so the end-to-end driver exercises a genuine
-//! load/parse path; `blocks` packs samples into the fixed-shape padded
-//! blocks the AOT artifacts consume.
+//! equivalents (substitution documented in DESIGN.md §3); `libsvm` gives
+//! a real on-disk format (whole-file and chunked out-of-core readers);
+//! `sampler` holds the without-replacement epoch machinery; `blocks`
+//! packs samples into the fixed-shape padded blocks the AOT artifacts
+//! consume.
 
 pub mod blocks;
 pub mod libsvm;
 pub mod sampler;
+pub mod scenario;
 pub mod synth;
 pub mod table3;
 
@@ -49,13 +64,60 @@ pub struct Sample {
 }
 
 /// The i.i.d. "button": draw samples from the underlying distribution.
-pub trait SampleStream {
+///
+/// `Send` is part of the contract: on the sharded execution plane a
+/// machine's stream lives on the owning shard's worker thread (see
+/// `runtime::shard::ShardState`), so the draw verb can generate and pack
+/// entirely shard-side.
+///
+/// `draw_many` may return FEWER than `n` samples: finite streams (epoch
+/// samplers, out-of-core files) never cross an epoch boundary inside one
+/// batch, so the final batch of an epoch can run short — callers must
+/// charge what was actually drawn, not what was requested. The default
+/// implementation (infinite streams) always returns exactly `n`.
+pub trait SampleStream: Send {
     fn dim(&self) -> usize;
     fn loss(&self) -> Loss;
     fn draw(&mut self) -> Sample;
 
     fn draw_many(&mut self, n: usize) -> Vec<Sample> {
         (0..n).map(|_| self.draw()).collect()
+    }
+}
+
+/// Where a cluster's per-machine sample streams live — the DataPlane's
+/// state side, owned by the run context and operated on exclusively
+/// through the plane's draw verb.
+pub enum MachineStreams {
+    /// Streams held by the coordinator (host/chained planes, and any
+    /// context built over caller-supplied streams without a shard pool):
+    /// the draw verb draws and packs them inline on the coordinator
+    /// engine.
+    Local(Vec<Box<dyn SampleStream>>),
+    /// Streams moved to their owning shards at context construction
+    /// (machine i's stream lives on `shard_of(i)` next to its batches):
+    /// the draw verb generates and packs on the shard, and the
+    /// coordinator holds only the machine count.
+    Sharded { m: usize },
+}
+
+impl MachineStreams {
+    /// Number of machines (= streams) in the cluster.
+    pub fn len(&self) -> usize {
+        match self {
+            MachineStreams::Local(v) => v.len(),
+            MachineStreams::Sharded { m } => *m,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl From<Vec<Box<dyn SampleStream>>> for MachineStreams {
+    fn from(streams: Vec<Box<dyn SampleStream>>) -> MachineStreams {
+        MachineStreams::Local(streams)
     }
 }
 

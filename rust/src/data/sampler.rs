@@ -47,10 +47,27 @@ impl WithoutReplacement {
         i
     }
 
-    /// Draw `k` indices without replacement *within* the current epoch
-    /// (spilling into a fresh epoch if fewer than `k` remain).
+    /// Draw `k` indices, SPILLING into a fresh epoch when fewer than `k`
+    /// remain: the batch is always full-length, but its tail samples the
+    /// next permutation (so a sample can repeat within the batch). This
+    /// is the recycling protocol of the Figure-3 driver. For honest
+    /// finite-sample batches use [`WithoutReplacement::next_batch_in_epoch`].
     pub fn next_batch(&mut self, k: usize) -> Vec<usize> {
         (0..k).map(|_| self.next_index()).collect()
+    }
+
+    /// Draw up to `k` indices strictly within the current epoch — the
+    /// final batch of an epoch may be SHORT, and callers must charge what
+    /// was actually drawn. A call that begins exactly at the boundary
+    /// starts a fresh permutation (a batch never straddles two epochs).
+    pub fn next_batch_in_epoch(&mut self, k: usize) -> Vec<usize> {
+        if self.pos >= self.perm.len() {
+            self.reshuffle();
+        }
+        let take = k.min(self.perm.len() - self.pos);
+        let out = self.perm[self.pos..self.pos + take].to_vec();
+        self.pos += take;
+        out
     }
 
     /// Remaining indices in the current epoch.
@@ -60,19 +77,36 @@ impl WithoutReplacement {
 }
 
 /// A materialized dataset exposed as a `SampleStream` via permutation
-/// epochs (the Figure-3 protocol: minibatches drawn from a fixed training
-/// half). Used by the libsvm-loading end-to-end driver.
+/// epochs. Two explicit epoch-boundary policies:
+///
+/// - [`VecStream::new`] — *recycling*: `draw_many` always returns the
+///   requested count, spilling into a fresh permutation mid-batch (the
+///   Figure-3 protocol: minibatches drawn from a fixed training half).
+/// - [`VecStream::epoch_bounded`] — *honest finite batches*: `draw_many`
+///   never crosses an epoch boundary, so the final batch of an epoch runs
+///   short and the caller charges only what was drawn. This is what the
+///   finite-ERM scenarios serve.
 pub struct VecStream {
     samples: Vec<super::Sample>,
     order: WithoutReplacement,
     loss: super::Loss,
+    epoch_bounded: bool,
 }
 
 impl VecStream {
     pub fn new(samples: Vec<super::Sample>, loss: super::Loss, rng: Prng) -> Self {
         assert!(!samples.is_empty(), "VecStream needs at least one sample");
         let order = WithoutReplacement::new(samples.len(), rng);
-        Self { samples, order, loss }
+        Self { samples, order, loss, epoch_bounded: false }
+    }
+
+    /// The epoch-bounded variant: `draw_many` may return a short final
+    /// batch at the epoch boundary instead of spilling into the next
+    /// permutation.
+    pub fn epoch_bounded(samples: Vec<super::Sample>, loss: super::Loss, rng: Prng) -> Self {
+        let mut s = Self::new(samples, loss, rng);
+        s.epoch_bounded = true;
+        s
     }
 
     pub fn len(&self) -> usize {
@@ -95,6 +129,15 @@ impl super::SampleStream for VecStream {
 
     fn draw(&mut self) -> super::Sample {
         self.samples[self.order.next_index()].clone()
+    }
+
+    fn draw_many(&mut self, n: usize) -> Vec<super::Sample> {
+        let idx = if self.epoch_bounded {
+            self.order.next_batch_in_epoch(n)
+        } else {
+            self.order.next_batch(n)
+        };
+        idx.into_iter().map(|i| self.samples[i].clone()).collect()
     }
 }
 
@@ -214,5 +257,59 @@ mod tests {
         let mut first4 = batch[..4].to_vec();
         first4.sort_unstable();
         assert_eq!(first4, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn epoch_bounded_batch_runs_short_at_boundary() {
+        let mut s = WithoutReplacement::new(10, Prng::seed_from_u64(5));
+        let b1 = s.next_batch_in_epoch(6);
+        let b2 = s.next_batch_in_epoch(6);
+        assert_eq!(b1.len(), 6);
+        assert_eq!(b2.len(), 4, "final batch charges only what remains");
+        let mut all: Vec<usize> = b1.iter().chain(&b2).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>(), "one epoch, no repeats");
+        // the next call starts a fresh permutation, full-length again
+        assert_eq!(s.next_batch_in_epoch(6).len(), 6);
+    }
+
+    #[test]
+    fn prop_epoch_bounded_batches_tile_epochs() {
+        forall(24, |rng| {
+            let n = 1 + rng.next_below(60);
+            let k = 1 + rng.next_below(20);
+            let mut s = WithoutReplacement::new(n, Prng::seed_from_u64(rng.next_u64()));
+            let mut seen = vec![false; n];
+            let mut drawn = 0usize;
+            while drawn < n {
+                let b = s.next_batch_in_epoch(k);
+                assert!(!b.is_empty() && b.len() <= k);
+                assert!(b.len() == k || drawn + b.len() == n, "only the final batch is short");
+                for i in b {
+                    assert!(!seen[i], "index {i} repeated within epoch");
+                    seen[i] = true;
+                    drawn += 1;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn vec_stream_epoch_bounded_draw_many() {
+        use crate::data::{Loss, Sample, SampleStream};
+        let samples: Vec<Sample> =
+            (0..5).map(|i| Sample { x: vec![i as f32], y: i as f32 }).collect();
+        let mut vs =
+            VecStream::epoch_bounded(samples.clone(), Loss::Squared, Prng::seed_from_u64(8));
+        let b1 = vs.draw_many(3);
+        let b2 = vs.draw_many(3);
+        assert_eq!(b1.len(), 3);
+        assert_eq!(b2.len(), 2, "short final batch at the epoch boundary");
+        let mut ys: Vec<f32> = b1.iter().chain(&b2).map(|s| s.y).collect();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ys, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        // the recycling constructor keeps the always-full contract
+        let mut vr = VecStream::new(samples, Loss::Squared, Prng::seed_from_u64(8));
+        assert_eq!(vr.draw_many(7).len(), 7);
     }
 }

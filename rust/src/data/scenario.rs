@@ -1,0 +1,808 @@
+//! The scenario registry: named, config-selectable stream families.
+//!
+//! The paper's setting (arXiv:1702.06269) is streaming stochastic
+//! optimization — every machine holds a "button" producing fresh i.i.d.
+//! samples — while the related work it is measured against (one-shot
+//! averaging, arXiv:1209.4129; distributed SVRG, arXiv:1507.07595)
+//! largely lives in the finite-sample ERM regime. The registry makes that
+//! distinction a first-class, configurable axis: a [`ScenarioDef`] names
+//! a [`StreamFamily`] constructor and declares its [`Setting`], and the
+//! coordinator validates the method/scenario pairing (a streaming-SO
+//! method must not silently run on a finite sample set as if it were a
+//! population).
+//!
+//! Families are selected with the `scenario=` config key; an unknown name
+//! is rejected with a did-you-mean suggestion, exactly like unknown
+//! config keys. Every stream a family forks is `Send`, so on the sharded
+//! execution plane machine streams move to their owning shards and the
+//! draw verb generates + packs entirely shard-side.
+//!
+//! Registered families:
+//!
+//! | name         | setting       | what it streams                               |
+//! |--------------|---------------|-----------------------------------------------|
+//! | `synth`      | streaming-SO  | planted-model i.i.d. stream (`loss=` sq/log)  |
+//! | `drift`      | streaming-SO  | planted model w* rotates over time             |
+//! | `heavy-tail` | streaming-SO  | Pareto-scaled elliptical covariates            |
+//! | `sparse`     | streaming-SO  | Bernoulli-masked sparse features               |
+//! | `erm-fixed`  | finite-ERM    | fixed planted sample set, epoch shards         |
+//! | `libsvm`     | finite-ERM    | chunked out-of-core libsvm file (`data_path=`) |
+
+use super::libsvm::{count_samples, LibsvmChunkStream};
+use super::sampler::{shard_ranges, VecStream};
+use super::synth::{eigen_scales, label_for, planted_model, SynthSpec, SynthStream};
+use super::{Loss, Sample, SampleStream};
+use crate::util::closest_name;
+use crate::util::prng::Prng;
+use anyhow::{anyhow, bail, Result};
+
+/// Which optimization setting a scenario serves: fresh i.i.d. draws from
+/// a population (the paper's streaming setting) or epochs over a fixed
+/// finite sample set (the ERM baselines' setting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Setting {
+    StreamingSo,
+    FiniteErm,
+}
+
+impl Setting {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Setting::StreamingSo => "streaming-SO",
+            Setting::FiniteErm => "finite-ERM",
+        }
+    }
+}
+
+/// A configured stream family: one planted model / dataset, arbitrarily
+/// many independent per-machine streams over it. `fork_stream(i)` for
+/// machine tags `0..m` yields the machine streams (independent forks for
+/// streaming families, disjoint shards for finite-ERM families); any
+/// other tag (the coordinator's held-out evaluation tag) yields a fresh
+/// population stream for estimating the stochastic objective.
+pub trait StreamFamily: Send {
+    /// Native feature dimension of every stream in the family.
+    fn dim(&self) -> usize;
+    fn loss(&self) -> Loss;
+    fn setting(&self) -> Setting {
+        Setting::StreamingSo
+    }
+    fn fork_stream(&self, tag: u64) -> Box<dyn SampleStream>;
+}
+
+/// The baseline planted-model stream is itself a (streaming-SO) family.
+impl StreamFamily for SynthStream {
+    fn dim(&self) -> usize {
+        self.spec().dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec().loss
+    }
+
+    fn fork_stream(&self, tag: u64) -> Box<dyn SampleStream> {
+        Box::new(SynthStream::fork_stream(self, tag))
+    }
+}
+
+/// Everything a scenario constructor may draw on, lifted from the
+/// experiment config by the coordinator.
+#[derive(Clone, Debug)]
+pub struct ScenarioParams {
+    pub dim: usize,
+    pub loss: Loss,
+    pub seed: u64,
+    /// number of machines (finite-ERM families shard their sample set
+    /// m ways; machine tags are `0..m`)
+    pub m: usize,
+    /// total sample budget (the finite-ERM families' fixed set size)
+    pub n_budget: usize,
+    /// on-disk dataset path (`data_path=` key; required by `libsvm`)
+    pub data_path: Option<String>,
+}
+
+type BuildFn = fn(&ScenarioParams) -> Result<Box<dyn StreamFamily>>;
+
+/// One registry entry: a named family constructor and its declared
+/// setting.
+pub struct ScenarioDef {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub setting: Setting,
+    build: BuildFn,
+}
+
+impl ScenarioDef {
+    pub fn build(&self, p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
+        (self.build)(p)
+    }
+}
+
+/// The registry — ONE source of truth for scenario names, shown by the
+/// CLI help and matched by the did-you-mean rejection.
+pub const SCENARIOS: &[ScenarioDef] = &[
+    ScenarioDef {
+        name: "synth",
+        help: "planted-model i.i.d. stream (loss= picks sq|log)",
+        setting: Setting::StreamingSo,
+        build: build_synth,
+    },
+    ScenarioDef {
+        name: "drift",
+        help: "planted model w* rotates over time (streaming non-stationarity)",
+        setting: Setting::StreamingSo,
+        build: build_drift,
+    },
+    ScenarioDef {
+        name: "heavy-tail",
+        help: "Pareto-scaled elliptical covariates (finite variance, heavy tails)",
+        setting: Setting::StreamingSo,
+        build: build_heavy_tail,
+    },
+    ScenarioDef {
+        name: "sparse",
+        help: "Bernoulli-masked sparse features, rescaled to keep E||x||^2",
+        setting: Setting::StreamingSo,
+        build: build_sparse,
+    },
+    ScenarioDef {
+        name: "erm-fixed",
+        help: "fixed planted sample set (n_budget), sharded per machine in epochs",
+        setting: Setting::FiniteErm,
+        build: build_erm_fixed,
+    },
+    ScenarioDef {
+        name: "libsvm",
+        help: "chunked out-of-core libsvm streaming (data_path=, strided machine shards)",
+        setting: Setting::FiniteErm,
+        build: build_libsvm,
+    },
+];
+
+/// Look a scenario up by name; unknown names are rejected with the same
+/// did-you-mean behavior as unknown config keys.
+pub fn by_name(name: &str) -> Result<&'static ScenarioDef> {
+    if let Some(def) = SCENARIOS.iter().find(|d| d.name == name) {
+        return Ok(def);
+    }
+    match closest_name(name, SCENARIOS.iter().map(|d| d.name)) {
+        Some(best) => bail!("unknown scenario '{name}' (did you mean '{best}'?)"),
+        None => {
+            let known: Vec<&str> = SCENARIOS.iter().map(|d| d.name).collect();
+            bail!("unknown scenario '{name}' (known: {})", known.join(" | "))
+        }
+    }
+}
+
+fn base_spec(p: &ScenarioParams) -> SynthSpec {
+    match p.loss {
+        Loss::Squared => SynthSpec::least_squares(p.dim),
+        Loss::Logistic => SynthSpec::logistic(p.dim),
+    }
+}
+
+fn build_synth(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
+    Ok(Box::new(SynthStream::new(base_spec(p), p.seed)))
+}
+
+// ---- drift: the planted model rotates over time -----------------------
+
+/// Seed-mixing tag for the drift rotation plane (distinct from the
+/// synth WSTAR tag so the two scenarios plant different models).
+const DRIFT_TAG: u64 = 0x4452_4946_5421; // "DRIFT!"
+
+/// Default drift rate: one full revolution of w* every 8192 samples per
+/// stream — slow against a typical minibatch, visible across a run.
+const DRIFT_OMEGA: f64 = std::f64::consts::TAU / 8192.0;
+
+/// Streaming non-stationarity: the planted model rotates in a fixed
+/// random 2-plane, w*(t) = cos(omega t) u + sin(omega t) v with u ⊥ v,
+/// ‖u‖ = ‖v‖ = model_norm, where t counts the *stream's own* draws (so a
+/// machine's sequence does not depend on cluster interleaving).
+pub struct DriftFamily {
+    spec: SynthSpec,
+    u: Vec<f32>,
+    v: Vec<f32>,
+    scales: Vec<f32>,
+    omega: f64,
+    rng: Prng,
+}
+
+impl DriftFamily {
+    pub fn new(spec: SynthSpec, seed: u64) -> DriftFamily {
+        let mut model_rng = Prng::seed_from_u64(seed ^ DRIFT_TAG);
+        let u = planted_model(spec.dim, spec.model_norm, &mut model_rng);
+        let v = if spec.dim > 1 {
+            // second direction: plant, orthogonalize against u, renorm
+            let raw = planted_model(spec.dim, spec.model_norm, &mut model_rng);
+            let uu: f64 = u.iter().map(|&a| (a as f64) * (a as f64)).sum();
+            let uv: f64 = u.iter().zip(&raw).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let proj = uv / uu.max(f64::MIN_POSITIVE);
+            let mut w: Vec<f64> =
+                raw.iter().zip(&u).map(|(&r, &a)| r as f64 - proj * a as f64).collect();
+            let norm = w.iter().map(|&x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-9 {
+                for x in &mut w {
+                    *x = *x / norm * spec.model_norm;
+                }
+                w.iter().map(|&x| x as f32).collect()
+            } else {
+                u.clone() // astronomically unlikely parallel draw
+            }
+        } else {
+            u.clone()
+        };
+        let scales = eigen_scales(spec.dim, spec.cond, spec.row_norm);
+        DriftFamily { spec, u, v, scales, omega: DRIFT_OMEGA, rng: Prng::seed_from_u64(seed) }
+    }
+
+    /// The rotation-plane basis (tests pin orthogonality and norms).
+    pub fn basis(&self) -> (&[f32], &[f32]) {
+        (&self.u, &self.v)
+    }
+}
+
+impl StreamFamily for DriftFamily {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec.loss
+    }
+
+    fn fork_stream(&self, tag: u64) -> Box<dyn SampleStream> {
+        Box::new(DriftStream {
+            spec: self.spec.clone(),
+            u: self.u.clone(),
+            v: self.v.clone(),
+            scales: self.scales.clone(),
+            omega: self.omega,
+            t: 0,
+            rng: self.rng.split(tag.wrapping_add(1)),
+        })
+    }
+}
+
+pub struct DriftStream {
+    spec: SynthSpec,
+    u: Vec<f32>,
+    v: Vec<f32>,
+    scales: Vec<f32>,
+    omega: f64,
+    /// stream-local draw counter (the rotation clock)
+    t: u64,
+    rng: Prng,
+}
+
+impl SampleStream for DriftStream {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec.loss
+    }
+
+    fn draw(&mut self) -> Sample {
+        let d = self.spec.dim;
+        let mut x = vec![0.0f32; d];
+        for j in 0..d {
+            x[j] = self.rng.next_normal_f32() * self.scales[j];
+        }
+        let theta = self.omega * self.t as f64;
+        let zu: f64 = x.iter().zip(&self.u).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let zv: f64 = x.iter().zip(&self.v).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let z = theta.cos() * zu + theta.sin() * zv;
+        let y = label_for(self.spec.loss, z, self.spec.noise, &mut self.rng);
+        self.t += 1;
+        Sample { x, y }
+    }
+}
+
+fn build_drift(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
+    Ok(Box::new(DriftFamily::new(base_spec(p), p.seed)))
+}
+
+// ---- heavy-tail: Pareto-scaled elliptical covariates ------------------
+
+const HEAVY_TAG: u64 = 0x4845_4156_5921; // "HEAVY!"
+
+/// Pareto tail index of the radial scale. alpha = 4 keeps the covariate
+/// second moment finite (E[s^2] = alpha/(alpha-2) = 2) while the fourth
+/// moment diverges — gradients see genuinely heavy tails.
+const HEAVY_ALPHA: f64 = 4.0;
+
+/// Elliptical heavy-tailed covariates: x = s · diag(scales) · g with
+/// g ~ N(0, I) and s ~ Pareto(alpha), normalized by sqrt(E[s^2]) so
+/// E‖x‖² stays row_norm² (the smoothness pin) while tail events dominate
+/// individual gradients.
+pub struct HeavyTailFamily {
+    spec: SynthSpec,
+    w_star: Vec<f32>,
+    scales: Vec<f32>,
+    alpha: f64,
+    rng: Prng,
+}
+
+impl HeavyTailFamily {
+    pub fn new(spec: SynthSpec, seed: u64) -> HeavyTailFamily {
+        let mut model_rng = Prng::seed_from_u64(seed ^ HEAVY_TAG);
+        let w_star = planted_model(spec.dim, spec.model_norm, &mut model_rng);
+        let scales = eigen_scales(spec.dim, spec.cond, spec.row_norm);
+        HeavyTailFamily { spec, w_star, scales, alpha: HEAVY_ALPHA, rng: Prng::seed_from_u64(seed) }
+    }
+}
+
+impl StreamFamily for HeavyTailFamily {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec.loss
+    }
+
+    fn fork_stream(&self, tag: u64) -> Box<dyn SampleStream> {
+        Box::new(HeavyTailStream {
+            spec: self.spec.clone(),
+            w_star: self.w_star.clone(),
+            scales: self.scales.clone(),
+            alpha: self.alpha,
+            inv_rms: (self.alpha / (self.alpha - 2.0)).sqrt().recip() as f32,
+            rng: self.rng.split(tag.wrapping_add(1)),
+        })
+    }
+}
+
+pub struct HeavyTailStream {
+    spec: SynthSpec,
+    w_star: Vec<f32>,
+    scales: Vec<f32>,
+    alpha: f64,
+    /// 1 / sqrt(E[s^2]) — keeps E‖x‖² at row_norm²
+    inv_rms: f32,
+    rng: Prng,
+}
+
+impl SampleStream for HeavyTailStream {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec.loss
+    }
+
+    fn draw(&mut self) -> Sample {
+        let d = self.spec.dim;
+        let s = (self.rng.next_pareto(self.alpha) as f32) * self.inv_rms;
+        let mut x = vec![0.0f32; d];
+        for j in 0..d {
+            x[j] = self.rng.next_normal_f32() * self.scales[j] * s;
+        }
+        let z: f64 = x.iter().zip(&self.w_star).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let y = label_for(self.spec.loss, z, self.spec.noise, &mut self.rng);
+        Sample { x, y }
+    }
+}
+
+fn build_heavy_tail(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
+    Ok(Box::new(HeavyTailFamily::new(base_spec(p), p.seed)))
+}
+
+// ---- sparse: Bernoulli-masked features --------------------------------
+
+const SPARSE_TAG: u64 = 0x5350_4152_5321; // "SPARS!"
+
+/// Default keep probability per coordinate.
+const SPARSE_DENSITY: f64 = 0.1;
+
+/// Sparse features: each coordinate is nonzero with probability
+/// `density`, scaled by 1/sqrt(density) so E‖x‖² stays row_norm². Labels
+/// come from the planted model on the *sparse* covariate.
+pub struct SparseFamily {
+    spec: SynthSpec,
+    w_star: Vec<f32>,
+    scales: Vec<f32>,
+    density: f64,
+    rng: Prng,
+}
+
+impl SparseFamily {
+    pub fn new(spec: SynthSpec, seed: u64) -> SparseFamily {
+        let mut model_rng = Prng::seed_from_u64(seed ^ SPARSE_TAG);
+        let w_star = planted_model(spec.dim, spec.model_norm, &mut model_rng);
+        let scales = eigen_scales(spec.dim, spec.cond, spec.row_norm);
+        let rng = Prng::seed_from_u64(seed);
+        SparseFamily { spec, w_star, scales, density: SPARSE_DENSITY, rng }
+    }
+}
+
+impl StreamFamily for SparseFamily {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec.loss
+    }
+
+    fn fork_stream(&self, tag: u64) -> Box<dyn SampleStream> {
+        Box::new(SparseStream {
+            spec: self.spec.clone(),
+            w_star: self.w_star.clone(),
+            scales: self.scales.clone(),
+            density: self.density,
+            inv_sqrt_density: (1.0 / self.density.sqrt()) as f32,
+            rng: self.rng.split(tag.wrapping_add(1)),
+        })
+    }
+}
+
+pub struct SparseStream {
+    spec: SynthSpec,
+    w_star: Vec<f32>,
+    scales: Vec<f32>,
+    density: f64,
+    inv_sqrt_density: f32,
+    rng: Prng,
+}
+
+impl SampleStream for SparseStream {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.spec.loss
+    }
+
+    fn draw(&mut self) -> Sample {
+        let d = self.spec.dim;
+        let mut x = vec![0.0f32; d];
+        for j in 0..d {
+            if self.rng.next_f64() < self.density {
+                x[j] = self.rng.next_normal_f32() * self.scales[j] * self.inv_sqrt_density;
+            }
+        }
+        let z: f64 = x.iter().zip(&self.w_star).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let y = label_for(self.spec.loss, z, self.spec.noise, &mut self.rng);
+        Sample { x, y }
+    }
+}
+
+fn build_sparse(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
+    Ok(Box::new(SparseFamily::new(base_spec(p), p.seed)))
+}
+
+// ---- erm-fixed: a fixed finite sample set, sharded per machine --------
+
+/// Stream-split tag for the materialized training set (machine tags are
+/// 0..m, the coordinator's eval tag is large — this one must collide with
+/// neither).
+const ERM_DATA_TAG: u64 = 0x4552_4D21; // "ERM!"
+
+/// Finite-ERM: `n_budget` planted-model samples materialized once and
+/// sharded contiguously across machines; machine tag `i < m` gets an
+/// epoch-bounded [`VecStream`] over shard i (honest short batches at the
+/// epoch boundary — see `data::sampler`), any other tag a fresh
+/// population stream (the held-out evaluator estimates the *stochastic*
+/// objective either way).
+pub struct ErmFixedFamily {
+    root: SynthStream,
+    shards: Vec<Vec<Sample>>,
+    prng: Prng,
+}
+
+impl ErmFixedFamily {
+    pub fn new(spec: SynthSpec, seed: u64, m: usize, n_total: usize) -> ErmFixedFamily {
+        assert!(m >= 1, "need at least one machine shard");
+        let root = SynthStream::new(spec, seed);
+        let mut data = SynthStream::fork_stream(&root, ERM_DATA_TAG);
+        let n = n_total.max(m);
+        let samples = data.draw_many(n);
+        let shards = shard_ranges(n, m).into_iter().map(|r| samples[r].to_vec()).collect();
+        ErmFixedFamily { root, shards, prng: Prng::seed_from_u64(seed ^ ERM_DATA_TAG) }
+    }
+
+    /// Total fixed-set size across machine shards.
+    pub fn n_total(&self) -> usize {
+        self.shards.iter().map(Vec::len).sum()
+    }
+}
+
+impl StreamFamily for ErmFixedFamily {
+    fn dim(&self) -> usize {
+        self.root.spec().dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.root.spec().loss
+    }
+
+    fn setting(&self) -> Setting {
+        Setting::FiniteErm
+    }
+
+    fn fork_stream(&self, tag: u64) -> Box<dyn SampleStream> {
+        match self.shards.get(tag as usize) {
+            Some(shard) => Box::new(VecStream::epoch_bounded(
+                shard.clone(),
+                self.loss(),
+                self.prng.split(tag.wrapping_add(1)),
+            )),
+            // non-machine tags (held-out evaluation): fresh population draws
+            None => Box::new(SynthStream::fork_stream(&self.root, tag)),
+        }
+    }
+}
+
+fn build_erm_fixed(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
+    Ok(Box::new(ErmFixedFamily::new(base_spec(p), p.seed, p.m.max(1), p.n_budget)))
+}
+
+// ---- libsvm: chunked out-of-core file streaming -----------------------
+
+/// Read-ahead depth of each machine's chunk reader, in samples.
+const LIBSVM_CHUNK: usize = 4096;
+
+/// Finite-ERM over an on-disk libsvm file, never materialized: machine
+/// tag `i < m` streams the data lines with `index % m == i` through a
+/// [`LibsvmChunkStream`] (epochs in file order; short final batches at
+/// the epoch boundary), any other tag streams the whole file (the
+/// held-out evaluator's pass).
+pub struct LibsvmFamily {
+    path: std::path::PathBuf,
+    dim: usize,
+    loss: Loss,
+    m: usize,
+    n_samples: usize,
+}
+
+impl LibsvmFamily {
+    pub fn open(
+        path: impl Into<std::path::PathBuf>,
+        dim: usize,
+        loss: Loss,
+        m: usize,
+    ) -> Result<LibsvmFamily> {
+        let path = path.into();
+        let n_samples = count_samples(&path, dim)
+            .map_err(|e| anyhow!("libsvm scenario {}: {e}", path.display()))?;
+        if n_samples < m.max(1) {
+            bail!(
+                "libsvm scenario {}: {n_samples} samples cannot shard across {m} machines",
+                path.display()
+            );
+        }
+        Ok(LibsvmFamily { path, dim, loss, m: m.max(1), n_samples })
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+}
+
+impl StreamFamily for LibsvmFamily {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss(&self) -> Loss {
+        self.loss
+    }
+
+    fn setting(&self) -> Setting {
+        Setting::FiniteErm
+    }
+
+    fn fork_stream(&self, tag: u64) -> Box<dyn SampleStream> {
+        let (stride, offset) = if (tag as usize) < self.m {
+            (self.m, tag as usize)
+        } else {
+            (1, 0)
+        };
+        Box::new(
+            LibsvmChunkStream::open(&self.path, self.dim, self.loss, stride, offset, LIBSVM_CHUNK)
+                .unwrap_or_else(|e| panic!("libsvm reopen {}: {e}", self.path.display())),
+        )
+    }
+}
+
+fn build_libsvm(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
+    let path = p
+        .data_path
+        .as_ref()
+        .ok_or_else(|| anyhow!("scenario=libsvm needs data_path=<file.libsvm>"))?;
+    Ok(Box::new(LibsvmFamily::open(path, p.dim, p.loss, p.m.max(1))?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ScenarioParams {
+        ScenarioParams {
+            dim: 16,
+            loss: Loss::Squared,
+            seed: 7,
+            m: 4,
+            n_budget: 103, // deliberately ragged across 4 shards
+            data_path: None,
+        }
+    }
+
+    fn assert_send<T: Send + ?Sized>() {}
+
+    #[test]
+    fn streams_and_families_are_send() {
+        assert_send::<Box<dyn SampleStream>>();
+        assert_send::<Box<dyn StreamFamily>>();
+    }
+
+    #[test]
+    fn registry_lookup_and_did_you_mean() {
+        assert_eq!(by_name("drift").unwrap().setting, Setting::StreamingSo);
+        assert_eq!(by_name("erm-fixed").unwrap().setting, Setting::FiniteErm);
+        let err = by_name("drfit").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'drift'"), "{err}");
+        let err = by_name("zzzzqqqq").unwrap_err().to_string();
+        assert!(err.contains("unknown scenario"), "{err}");
+    }
+
+    #[test]
+    fn forks_are_deterministic_and_independent() {
+        for def in SCENARIOS {
+            if def.name == "libsvm" {
+                continue; // needs a file; covered below
+            }
+            let p = params();
+            let fam_a = def.build(&p).unwrap();
+            let fam_b = def.build(&p).unwrap();
+            let mut s1 = fam_a.fork_stream(2);
+            let mut s2 = fam_b.fork_stream(2);
+            for k in 0..20 {
+                assert_eq!(s1.draw(), s2.draw(), "{}: draw {k} not deterministic", def.name);
+            }
+            let mut o1 = fam_a.fork_stream(0);
+            let mut o2 = fam_a.fork_stream(1);
+            assert_ne!(o1.draw(), o2.draw(), "{}: forks must be independent", def.name);
+        }
+    }
+
+    #[test]
+    fn drift_basis_is_orthonormal_and_labels_drift() {
+        let fam = DriftFamily::new(SynthSpec::least_squares(16), 11);
+        let (u, v) = fam.basis();
+        let uu: f64 = u.iter().map(|&a| (a as f64).powi(2)).sum();
+        let vv: f64 = v.iter().map(|&a| (a as f64).powi(2)).sum();
+        let uv: f64 = u.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((uu.sqrt() - 4.0).abs() < 1e-3, "norm u {}", uu.sqrt());
+        assert!((vv.sqrt() - 4.0).abs() < 1e-3, "norm v {}", vv.sqrt());
+        assert!(uv.abs() / uu < 1e-5, "u.v = {uv}");
+        // the label-generating direction rotates: the same stream's
+        // empirical E[x y] correlates with u early and decorrelates after
+        // a quarter turn
+        let mut s = fam.fork_stream(0);
+        let estimate = |s: &mut Box<dyn SampleStream>, n: usize| -> Vec<f64> {
+            let mut g = vec![0.0f64; 16];
+            for _ in 0..n {
+                let smp = s.draw();
+                for j in 0..16 {
+                    g[j] += smp.x[j] as f64 * smp.y as f64;
+                }
+            }
+            g
+        };
+        let early = estimate(&mut s, 512);
+        // skip to a quarter turn (8192/4 = 2048 draws in)
+        for _ in 0..1536 {
+            s.draw();
+        }
+        let late = estimate(&mut s, 512);
+        let corr = |g: &[f64], dir: &[f32]| -> f64 {
+            let num: f64 = g.iter().zip(dir).map(|(&a, &b)| a * b as f64).sum();
+            let gn = g.iter().map(|&a| a * a).sum::<f64>().sqrt();
+            let dn = dir.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+            num / (gn * dn)
+        };
+        assert!(corr(&early, u) > 0.6, "early window tracks u: {}", corr(&early, u));
+        assert!(
+            corr(&late, u) < corr(&late, v),
+            "after a quarter turn the signal rotated toward v"
+        );
+    }
+
+    #[test]
+    fn heavy_tail_keeps_second_moment_with_heavy_tails() {
+        let fam = HeavyTailFamily::new(SynthSpec::least_squares(16), 3);
+        let mut s = fam.fork_stream(0);
+        let n = 6000;
+        let mut acc = 0.0;
+        let mut max_sq: f64 = 0.0;
+        for _ in 0..n {
+            let smp = s.draw();
+            let sq: f64 = smp.x.iter().map(|&v| (v as f64).powi(2)).sum();
+            acc += sq;
+            max_sq = max_sq.max(sq);
+        }
+        // s^2 has tail index 2 (log-divergent variance), so the empirical
+        // second moment converges slowly — bounds are deliberately loose
+        let mean_sq = acc / n as f64;
+        assert!((0.5..2.0).contains(&mean_sq), "E||x||^2 = {mean_sq}");
+        assert!(max_sq > 5.0 * mean_sq, "tails should dominate: max {max_sq} mean {mean_sq}");
+    }
+
+    #[test]
+    fn sparse_density_and_moment() {
+        let fam = SparseFamily::new(SynthSpec::least_squares(32), 5);
+        let mut s = fam.fork_stream(0);
+        let n = 3000;
+        let mut nnz = 0usize;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let smp = s.draw();
+            nnz += smp.x.iter().filter(|&&v| v != 0.0).count();
+            acc += smp.x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        }
+        let density = nnz as f64 / (n * 32) as f64;
+        assert!((density - SPARSE_DENSITY).abs() < 0.02, "density {density}");
+        let mean_sq = acc / n as f64;
+        assert!((mean_sq - 1.0).abs() < 0.15, "E||x||^2 = {mean_sq}");
+    }
+
+    #[test]
+    fn erm_fixed_shards_partition_and_run_short() {
+        let p = params();
+        let fam = ErmFixedFamily::new(base_spec(&p), p.seed, p.m, p.n_budget);
+        assert_eq!(fam.n_total(), 103);
+        assert_eq!(fam.setting(), Setting::FiniteErm);
+        // each machine's first epoch is a permutation of its shard; a
+        // 26/26/26/25 split drawn as 30-sample batches runs short
+        let mut total = 0usize;
+        for i in 0..4u64 {
+            let mut s = fam.fork_stream(i);
+            let b = s.draw_many(30);
+            assert!(b.len() == 26 || b.len() == 25, "machine {i} epoch size {}", b.len());
+            total += b.len();
+        }
+        assert_eq!(total, 103, "machine shards partition the fixed set");
+        // eval tag is a fresh population stream, not a shard
+        let mut ev = fam.fork_stream(0xE7A1);
+        assert_eq!(ev.draw_many(40).len(), 40);
+    }
+
+    #[test]
+    fn libsvm_family_strides_machines() {
+        use crate::data::libsvm::write_samples;
+        let mut root = SynthStream::new(SynthSpec::least_squares(8), 31);
+        let samples = root.draw_many(10);
+        let dir = std::env::temp_dir().join("mbprox_scenario_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("family.libsvm");
+        write_samples(&path, &samples).unwrap();
+
+        let p = ScenarioParams {
+            data_path: Some(path.to_string_lossy().into_owned()),
+            dim: 8,
+            m: 3,
+            ..params()
+        };
+        let fam = by_name("libsvm").unwrap().build(&p).unwrap();
+        assert_eq!(fam.setting(), Setting::FiniteErm);
+        // machine shards stride the file: 4 + 3 + 3 samples
+        let mut total = 0usize;
+        for i in 0..3u64 {
+            let b = fam.fork_stream(i).draw_many(10);
+            assert!(b.len() == 4 || b.len() == 3, "machine {i} shard size {}", b.len());
+            total += b.len();
+        }
+        assert_eq!(total, 10);
+        // missing data_path is rejected at build
+        let p_missing = ScenarioParams { data_path: None, ..params() };
+        let err = by_name("libsvm").unwrap().build(&p_missing).unwrap_err().to_string();
+        assert!(err.contains("data_path"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

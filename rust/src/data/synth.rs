@@ -69,6 +69,53 @@ impl SynthSpec {
     }
 }
 
+/// A random-direction planted model of norm `model_norm`, drawn from
+/// `rng`. Shared by every planted-model scenario stream (synth, drift,
+/// heavy-tail, sparse) so their models are constructed identically.
+pub(crate) fn planted_model(dim: usize, model_norm: f64, rng: &mut Prng) -> Vec<f32> {
+    let mut w: Vec<f32> = (0..dim).map(|_| rng.next_normal_f32()).collect();
+    let norm = (w.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()).sqrt();
+    for v in &mut w {
+        *v = (*v as f64 / norm * model_norm) as f32;
+    }
+    w
+}
+
+/// Per-coordinate feature scales: geometric eigenvalue decay
+/// lambda_j ∝ cond^(−j/(d−1)), normalized so E‖x‖² = row_norm².
+pub(crate) fn eigen_scales(dim: usize, cond: f64, row_norm: f64) -> Vec<f32> {
+    let mut scales: Vec<f32> = (0..dim)
+        .map(|j| {
+            let t = if dim > 1 { j as f64 / (dim - 1) as f64 } else { 0.0 };
+            (cond.powf(-t)).sqrt() as f32
+        })
+        .collect();
+    let sum_sq: f64 = scales.iter().map(|&s| (s as f64) * (s as f64)).sum();
+    let fix = (row_norm * row_norm / sum_sq).sqrt();
+    for s in &mut scales {
+        *s = (*s as f64 * fix) as f32;
+    }
+    scales
+}
+
+/// A planted-model label for margin `z = <x, w*>`: additive Gaussian
+/// noise (squared loss) or a sigmoid sign with flip probability `noise`
+/// (logistic). Consumes the stream rng in a fixed order, so every
+/// scenario stream built on it stays deterministic.
+pub(crate) fn label_for(loss: Loss, z: f64, noise: f64, rng: &mut Prng) -> f32 {
+    match loss {
+        Loss::Squared => (z + noise * rng.next_normal()) as f32,
+        Loss::Logistic => {
+            let p = 1.0 / (1.0 + (-z).exp());
+            let mut y = if rng.next_f64() < p { 1.0 } else { -1.0 };
+            if rng.next_f64() < noise {
+                y = -y;
+            }
+            y
+        }
+    }
+}
+
 /// Deterministic stream of planted-model samples.
 pub struct SynthStream {
     spec: SynthSpec,
@@ -85,26 +132,8 @@ impl SynthStream {
     /// planted model.
     pub fn new(spec: SynthSpec, seed: u64) -> Self {
         let mut model_rng = Prng::seed_from_u64(seed ^ WSTAR_TAG);
-        let mut w: Vec<f32> = (0..spec.dim).map(|_| model_rng.next_normal_f32()).collect();
-        let norm = (w.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()).sqrt();
-        let target = spec.model_norm;
-        for v in &mut w {
-            *v = (*v as f64 / norm * target) as f32;
-        }
-        // geometric decay of covariance eigenvalues: lambda_j ∝ cond^(−j/(d−1))
-        let d = spec.dim;
-        let mut scales: Vec<f32> = (0..d)
-            .map(|j| {
-                let t = if d > 1 { j as f64 / (d - 1) as f64 } else { 0.0 };
-                (spec.cond.powf(-t)).sqrt() as f32
-            })
-            .collect();
-        // normalize E‖x‖² = Σ scales² to row_norm²
-        let sum_sq: f64 = scales.iter().map(|&s| (s as f64) * (s as f64)).sum();
-        let fix = (spec.row_norm * spec.row_norm / sum_sq).sqrt();
-        for s in &mut scales {
-            *s = (*s as f64 * fix) as f32;
-        }
+        let w = planted_model(spec.dim, spec.model_norm, &mut model_rng);
+        let scales = eigen_scales(spec.dim, spec.cond, spec.row_norm);
         Self { spec, w_star: w, scales, rng: Prng::seed_from_u64(seed) }
     }
 
@@ -152,17 +181,7 @@ impl SampleStream for SynthStream {
             x[j] = self.rng.next_normal_f32() * self.scales[j];
         }
         let z: f64 = x.iter().zip(&self.w_star).map(|(&a, &b)| a as f64 * b as f64).sum();
-        let y = match self.spec.loss {
-            Loss::Squared => (z + self.spec.noise * self.rng.next_normal()) as f32,
-            Loss::Logistic => {
-                let p = 1.0 / (1.0 + (-z).exp());
-                let mut y = if self.rng.next_f64() < p { 1.0 } else { -1.0 };
-                if self.rng.next_f64() < self.spec.noise {
-                    y = -y;
-                }
-                y
-            }
-        };
+        let y = label_for(self.spec.loss, z, self.spec.noise, &mut self.rng);
         Sample { x, y }
     }
 }

@@ -18,6 +18,7 @@
 use anyhow::{anyhow, Result};
 use mbprox::config::{ExperimentConfig, KvConfig, CONFIG_KEYS};
 use mbprox::coordinator::{Runner, METHODS};
+use mbprox::data::scenario::SCENARIOS;
 use mbprox::metrics;
 
 fn parse_cfg(args: &[String]) -> Result<ExperimentConfig> {
@@ -40,6 +41,10 @@ fn print_keys() {
     for (key, help) in CONFIG_KEYS {
         println!("  {key:<14} {help}");
     }
+    println!("\nscenarios (scenario=; from the data::scenario registry):");
+    for def in SCENARIOS {
+        println!("  {:<12} [{}] {}", def.name, def.setting.as_str(), def.help);
+    }
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
@@ -58,6 +63,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
     );
     let result = runner.run(&cfg)?;
     print!("{}", metrics::resource_table(&[&result]));
+    // the paper's memory axis, per machine ("memory" above is their max)
+    println!("# peak vectors per machine: {}", result.report.peaks_display());
     if !result.curve.is_empty() {
         println!("\n# trajectory");
         print!("{}", metrics::curve_csv(&result));

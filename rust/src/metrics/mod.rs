@@ -66,6 +66,9 @@ pub fn run_json(run: &RunResult) -> String {
         run.report.total_samples, run.report.comm_rounds, run.report.vec_ops,
         run.report.peak_vectors
     );
+    // the paper's memory axis, per machine (cluster max is "memory")
+    let peaks: Vec<String> = run.report.peak_per_machine.iter().map(u64::to_string).collect();
+    let _ = write!(out, "\"peak_vectors_per_machine\": [{}], ", peaks.join(","));
     let _ = write!(out, "\"sim_time_s\": {}, ", run.sim_time_s);
     match run.final_objective {
         Some(o) => {
@@ -117,6 +120,7 @@ mod tests {
                 vectors_sent: 5,
                 vec_ops: 50,
                 peak_vectors: 12,
+                peak_per_machine: vec![12, 7],
             },
             curve: vec![CurvePoint {
                 outer_iter: 1,
@@ -152,5 +156,9 @@ mod tests {
         let v = Json::parse(&j).expect("valid json");
         assert_eq!(v.get("samples").unwrap().as_usize(), Some(100));
         assert_eq!(v.get("curve").unwrap().as_arr().unwrap().len(), 1);
+        let peaks = v.get("peak_vectors_per_machine").unwrap().as_arr().unwrap();
+        assert_eq!(peaks.len(), 2);
+        assert_eq!(peaks[0].as_usize(), Some(12));
+        assert_eq!(peaks[1].as_usize(), Some(7));
     }
 }

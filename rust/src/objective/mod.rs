@@ -46,6 +46,20 @@ use anyhow::{anyhow, ensure, Result};
 use std::cell::{Ref, RefCell};
 use std::sync::Arc;
 
+/// How a drawn batch is packed for the engine (see [`MachineBatch`]).
+/// Solvers pick a mode per plane via their `pack_mode` hook; the plane's
+/// draw verb applies it wherever the machine lives (coordinator engine or
+/// owning shard).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackMode {
+    /// fused groups + host blocks retained for Host-lane per-block sweeps
+    Full,
+    /// fused groups only (grad/normal-matvec consumers)
+    GradOnly,
+    /// fused groups aligned to a p-way block partition (chained sweeps)
+    VrAligned(usize),
+}
+
 /// Host-side description of a shard-resident batch: everything the
 /// coordinator needs for solver bookkeeping (group structure, sweep
 /// weights) without the device buffers, which stay on the owning shard's
@@ -118,6 +132,21 @@ impl MachineBatch {
         p: usize,
     ) -> Result<MachineBatch> {
         Self::pack_opts(engine, engine_d, samples, false, Some(p))
+    }
+
+    /// Pack per an explicit [`PackMode`] — the draw verb's one switch
+    /// (identical on the coordinator engine and inside a shard job).
+    pub fn pack_mode(
+        engine: &mut Engine,
+        engine_d: usize,
+        samples: &[Sample],
+        mode: PackMode,
+    ) -> Result<MachineBatch> {
+        match mode {
+            PackMode::Full => Self::pack(engine, engine_d, samples),
+            PackMode::GradOnly => Self::pack_grad_only(engine, engine_d, samples),
+            PackMode::VrAligned(p) => Self::pack_vr_aligned(engine, engine_d, samples, p),
+        }
     }
 
     fn pack_opts(

@@ -3,10 +3,11 @@
 //! `PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
 //! execute`. Executables are cached per artifact; Python never runs here.
 //!
-//! # The four-verb backend contract
+//! # The five-verb contract
 //!
-//! Everything a backend must implement to serve this crate is four verbs;
-//! a GPU/TPU port supplies these and inherits every algorithm unchanged:
+//! The runtime's contract is five verbs. Four are *device* verbs a
+//! backend must implement — a GPU/TPU port supplies these and inherits
+//! every algorithm unchanged:
 //!
 //! 1. **upload** — move host bytes into a device buffer. Block operands
 //!    (`X`, `y`, `mask`) are uploaded once at pack time
@@ -31,6 +32,23 @@
 //!    host `all_reduce_*` on the same inputs — the paper-units
 //!    round/vector accounting stays authoritative either way.
 //!
+//! The fifth is the *data-plane* verb, owned by the execution plane
+//! rather than the backend:
+//!
+//! 5. **draw** — generate a fresh per-machine minibatch from the
+//!    machine's sample stream and pack it through verbs 1–2, on the
+//!    engine that owns the machine ([`plane::ExecPlane::draw_batches`]).
+//!    Streams are `Send`, shard-resident objects (`shard::ShardState`
+//!    owns them next to the machine's batches), so on the sharded plane
+//!    samples are generated AND packed shard-side — the coordinator sees
+//!    only metadata stubs, and the serial coordinator draw bottleneck is
+//!    gone. Per-machine streams are independent forks, which makes the
+//!    draw site irrelevant to the bits: every plane draws the identical
+//!    sample sequence (pinned by `rust/tests/draw_parity.rs`). Sample and
+//!    memory meters charge what was actually drawn — finite streams
+//!    (`data::scenario`'s finite-ERM families) may return short final
+//!    batches at epoch boundaries.
+//!
 //! # The execution plane
 //!
 //! Algorithms never touch the verbs directly: they program against
@@ -42,21 +60,21 @@
 //! runtime policy ([`plane::PlanePolicy`]: the `plane=` config key /
 //! `PLANE` env, resolved once in the coordinator; `auto` = sharded when a
 //! pool is attached, chained otherwise). Every solver has exactly one
-//! body; a GPU/TPU backend that implements the four verbs below plugs in
-//! underneath the plane and inherits every algorithm. See
+//! body; a GPU/TPU backend that implements the four device verbs below
+//! plugs in underneath the plane and inherits every algorithm. See
 //! `rust/tests/plane_matrix.rs` for the cross-plane contract (chained and
 //! sharded bit-identical; host numerically equivalent with identical
 //! paper-units accounting).
 //!
 //! # The shard plane
 //!
-//! The four verbs describe ONE engine. The [`shard::ShardPool`] scales
+//! The device verbs describe ONE engine. The [`shard::ShardPool`] scales
 //! them across host cores without changing them: a fixed pool of worker
 //! threads, each owning its *own* engine (PJRT handles are not `Send`, so
 //! engines never cross threads), with machines partitioned machine->shard
 //! at cluster construction. The **engine affinity rule**: all of a
-//! machine's device state — packed blocks, session slots, chained
-//! intermediates — lives on its shard's engine, and work for that machine
+//! machine's state — its sample stream, packed blocks, session slots,
+//! chained intermediates — lives on its shard, and work for that machine
 //! only ever runs there. Fan-outs **join only at collectives**: each
 //! machine's partial is materialized on its shard, and the coordinator
 //! reduces the host partials *in fixed machine order in f64* (the same

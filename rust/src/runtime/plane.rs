@@ -5,8 +5,12 @@
 //! memory across deployment regimes; the codebase's point is that the
 //! *algorithms* should not care which regime they run in. An
 //! [`ExecPlane`] owns engine access, the per-machine fan/join, the
-//! collectives, the VR sweeps and the materialization points, with three
-//! interchangeable implementations behind one verb set:
+//! collectives, the VR sweeps, the materialization points AND the sample
+//! **draw** path (the fifth plane verb — see
+//! [`ExecPlane::draw_batches`]: shard-resident streams generate and pack
+//! on the owning shard with zero coordinator-side sample
+//! materialization), with three interchangeable implementations behind
+//! one verb set:
 //!
 //! - **Host** — the legacy per-block pipeline: tupled dispatches, host
 //!   accumulation, host collectives. The pre-chaining engine contract,
@@ -29,9 +33,9 @@
 //! [`Lane`] per solve; plane selection is runtime policy
 //! ([`PlanePolicy`]: the `plane=` config key / `PLANE` env, resolved once
 //! in the coordinator), not per-solver gating. A GPU/TPU backend
-//! implements the four runtime verbs (upload/dispatch/chain/reduce — see
-//! the `runtime` module docs) and inherits every algorithm through this
-//! API.
+//! implements the four device verbs (upload/dispatch/chain/reduce — see
+//! the `runtime` module docs; the fifth verb, draw, lives on the plane
+//! itself) and inherits every algorithm through this API.
 //!
 //! # Lanes
 //!
@@ -47,14 +51,15 @@
 //! identical paper-units accounting.
 
 use super::chain::VrKernel;
-use super::shard::ShardPool;
+use super::shard::{Pending, ShardPool};
 use super::{DeviceVec, Engine};
 use crate::accounting::{ClusterMeter, ResourceMeter};
 use crate::comm::Network;
-use crate::data::Loss;
+use crate::data::{Loss, MachineStreams};
 use crate::objective::{
     distributed_mean_grad, distributed_mean_grad_dev, fan_machine, fan_machines,
-    mean_grad_chained_host, MachineBatch,
+    local_grad_sum, local_grad_sum_dev, mean_grad_chained_host, MachineBatch, PackMode,
+    ShardBatchMeta,
 };
 use anyhow::{anyhow, bail, ensure, Result};
 use std::ops::Range;
@@ -305,6 +310,110 @@ impl<'e> ExecPlane<'e> {
         }
     }
 
+    /// The gradient-only lane: just the `gacc{K}` accumulator chain, no
+    /// VR or CG artifacts required. The SGD baselines' mean-gradient
+    /// route (one chained fold per machine, one materialize per round on
+    /// the Dev lane instead of a tupled download per group).
+    pub fn grad_lane(&self, loss: Loss, d: usize) -> Lane {
+        let ready = self.engine.chain_grad_ready(loss.tag(), d);
+        match self.kind {
+            PlaneKind::Host => Lane::Host,
+            _ if !ready => Lane::Host,
+            PlaneKind::Sharded => Lane::Grouped,
+            PlaneKind::Chained => Lane::Dev,
+        }
+    }
+
+    // ---- the draw verb -------------------------------------------------
+
+    /// THE draw verb — the fifth plane verb next to
+    /// upload/dispatch/chain/reduce: draw a fresh minibatch of `b_local`
+    /// samples per machine from `streams` and pack it (per `mode`) on the
+    /// engine that owns the machine.
+    ///
+    /// Shard-resident streams generate AND pack on the owning shard — no
+    /// coordinator-side `Vec<Sample>` ever exists for a shard-owned
+    /// machine; the coordinator receives one metadata stub per machine.
+    /// Per-machine streams are independent forks, so moving the draw site
+    /// changes no sample: every plane draws the identical sequence.
+    /// Sample/memory charges land on the per-machine meters in fixed
+    /// machine order and count what was *actually* drawn (a finite stream
+    /// may come up short at an epoch boundary), identically on every
+    /// plane.
+    pub fn draw_batches(
+        &mut self,
+        streams: &mut MachineStreams,
+        meter: &mut ClusterMeter,
+        d: usize,
+        b_local: usize,
+        hold: bool,
+        mode: PackMode,
+    ) -> Result<Vec<MachineBatch>> {
+        match streams {
+            MachineStreams::Local(ss) => {
+                let mut out = Vec::with_capacity(ss.len());
+                for (i, s) in ss.iter_mut().enumerate() {
+                    let samples = s.draw_many(b_local);
+                    let mut batch = MachineBatch::pack_mode(self.engine, d, &samples, mode)?;
+                    charge_draw(meter, i, samples.len() as u64, hold, &mut batch);
+                    out.push(batch);
+                }
+                Ok(out)
+            }
+            MachineStreams::Sharded { m } => {
+                let pool = self
+                    .shards
+                    .ok_or_else(|| anyhow!("shard-resident streams need a shard pool"))?;
+                let pends: Vec<_> =
+                    (0..*m).map(|i| shard_draw_job(pool, i, d, b_local, mode)).collect();
+                let mut out = Vec::with_capacity(*m);
+                for (i, pend) in pends.into_iter().enumerate() {
+                    let (drawn, n, n_blocks, batch_meta) = pend.wait()?;
+                    let mut stub = MachineBatch::stub(d, n, n_blocks, batch_meta);
+                    charge_draw(meter, i, drawn, hold, &mut stub);
+                    out.push(stub);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// The draw verb for ONE machine (single-machine methods like the
+    /// ideal-solution local SGD): machine `i`'s stream advances and the
+    /// batch packs wherever the machine lives. Same charging rules as
+    /// [`ExecPlane::draw_batches`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn draw_machine(
+        &mut self,
+        streams: &mut MachineStreams,
+        meter: &mut ClusterMeter,
+        i: usize,
+        d: usize,
+        n: usize,
+        hold: bool,
+        mode: PackMode,
+    ) -> Result<MachineBatch> {
+        match streams {
+            MachineStreams::Local(ss) => {
+                let samples = ss[i].draw_many(n);
+                let mut batch = MachineBatch::pack_mode(self.engine, d, &samples, mode)?;
+                charge_draw(meter, i, samples.len() as u64, hold, &mut batch);
+                Ok(batch)
+            }
+            MachineStreams::Sharded { m } => {
+                ensure!(i < *m, "machine {i} out of range for {m} shard-resident streams");
+                let pool = self
+                    .shards
+                    .ok_or_else(|| anyhow!("shard-resident streams need a shard pool"))?;
+                let (drawn, bn, n_blocks, batch_meta) =
+                    shard_draw_job(pool, i, d, n, mode).wait()?;
+                let mut stub = MachineBatch::stub(d, bn, n_blocks, batch_meta);
+                charge_draw(meter, i, drawn, hold, &mut stub);
+                Ok(stub)
+            }
+        }
+    }
+
     // ---- PlaneVec plumbing ---------------------------------------------
 
     /// Bring host bits into lane representation (one upload on the Dev
@@ -456,6 +565,79 @@ impl<'e> ExecPlane<'e> {
                 )?
                 .0,
             )),
+        }
+    }
+
+    /// Machine-local mean gradient at `z` on `lane` — NO collective, no
+    /// round charged: the single-machine methods' gradient read. Runs the
+    /// lane's kernels on machine `i`'s engine (inline, or one job on the
+    /// owning shard); Grouped and Dev produce bit-identical results (the
+    /// same chain + `vec_scale` kernel sequence on whichever engine owns
+    /// the batch).
+    pub fn local_mean_grad(
+        &mut self,
+        lane: Lane,
+        meter: &mut ClusterMeter,
+        loss: Loss,
+        batches: &[MachineBatch],
+        i: usize,
+        z: &PlaneVec,
+    ) -> Result<PlaneVec> {
+        match lane {
+            Lane::Dev => {
+                let batch = &batches[i];
+                let gsum =
+                    local_grad_sum_dev(self.engine, loss, batch, z.dev()?, meter.machine(i))?;
+                let cnt = batch.n as f64;
+                let gm = if cnt > 0.0 {
+                    self.engine.vec_scale(&gsum, (1.0 / cnt) as f32)?
+                } else {
+                    gsum
+                };
+                Ok(PlaneVec::Dev(gm))
+            }
+            Lane::Grouped => {
+                let z_s: Arc<[f32]> = Arc::from(z.host()?);
+                let g = fan_machine(
+                    self.engine,
+                    self.shards,
+                    batches,
+                    i,
+                    meter,
+                    move |eng, batch, _i, m| {
+                        let z_dev = eng.upload_dev(&z_s, &[z_s.len()])?;
+                        let gsum = local_grad_sum_dev(eng, loss, batch, &z_dev, m)?;
+                        let cnt = batch.n as f64;
+                        let gm = if cnt > 0.0 {
+                            eng.vec_scale(&gsum, (1.0 / cnt) as f32)?
+                        } else {
+                            gsum
+                        };
+                        eng.materialize(&gm)
+                    },
+                )?;
+                Ok(PlaneVec::Host(g))
+            }
+            Lane::Host => {
+                let z_s: Arc<[f32]> = Arc::from(z.host()?);
+                let g = fan_machine(
+                    self.engine,
+                    self.shards,
+                    batches,
+                    i,
+                    meter,
+                    move |eng, batch, _i, m| {
+                        let out = local_grad_sum(eng, loss, batch, &z_s, m)?;
+                        let cnt = out.count.max(0.0);
+                        let mut gm = out.grad_sum;
+                        if cnt > 0.0 {
+                            crate::linalg::scale((1.0 / cnt) as f32, &mut gm);
+                        }
+                        Ok(gm)
+                    },
+                )?;
+                Ok(PlaneVec::Host(g))
+            }
         }
     }
 
@@ -635,6 +817,50 @@ impl<'e> ExecPlane<'e> {
             }
         }
     }
+}
+
+/// The draw verb's ONE charging rule: count what was actually drawn on
+/// machine `i`'s meter (holding if requested) and record the hold on the
+/// batch itself, so `release_batches` can return exactly it — a ragged
+/// final batch can never corrupt the peak-memory meter, on any plane.
+fn charge_draw(
+    meter: &mut ClusterMeter,
+    i: usize,
+    drawn: u64,
+    hold: bool,
+    batch: &mut MachineBatch,
+) {
+    let mm = meter.machine(i);
+    mm.add_samples(drawn);
+    if hold {
+        mm.hold(drawn);
+    }
+    batch.held = if hold { drawn } else { 0 };
+}
+
+/// Submit machine `i`'s draw+pack to its owning shard: the stream
+/// advances on the shard, the batch packs on the shard's engine and is
+/// stored in the shard's batch map; only `(drawn, n, n_blocks, meta)` —
+/// pure bookkeeping — crosses back to the coordinator.
+fn shard_draw_job(
+    pool: &ShardPool,
+    i: usize,
+    d: usize,
+    n: usize,
+    mode: PackMode,
+) -> Pending<(u64, usize, usize, ShardBatchMeta)> {
+    pool.submit(pool.shard_of(i), move |state| {
+        let samples = state
+            .streams
+            .get_mut(&i)
+            .ok_or_else(|| anyhow!("machine {i} has no stream on this shard"))?
+            .draw_many(n);
+        let drawn = samples.len() as u64;
+        let batch = MachineBatch::pack_mode(&mut state.engine, d, &samples, mode)?;
+        let reply = (drawn, batch.n, batch.n_blocks(), batch.shard_meta(i));
+        state.batches.insert(i, batch);
+        Ok(reply)
+    })
 }
 
 /// Split a machine's block list into `p` near-equal contiguous batches

@@ -10,12 +10,14 @@
 //! # Engine affinity
 //!
 //! Machines are partitioned machine -> shard once, at pool construction
-//! (`shard_of(i) = i % shards`). ALL of a machine's device state — its
-//! packed [`crate::objective::MachineBatch`], its session-pool slots, any
-//! chained [`super::DeviceVec`] intermediates — lives on its shard's
-//! engine for the machine's whole lifetime. A job for machine `i` is only
-//! ever submitted to `shard_of(i)`, so the affinity rule is structural:
-//! there is no API through which a buffer could reach another thread.
+//! (`shard_of(i) = i % shards`). ALL of a machine's state — its sample
+//! stream (installed at context construction; the draw verb generates
+//! and packs shard-side), its packed
+//! [`crate::objective::MachineBatch`], its session-pool slots, any
+//! chained [`super::DeviceVec`] intermediates — lives on its shard for
+//! the machine's whole lifetime. A job for machine `i` is only ever
+//! submitted to `shard_of(i)`, so the affinity rule is structural: there
+//! is no API through which a buffer could reach another thread.
 //!
 //! # Join points and determinism
 //!
@@ -36,14 +38,20 @@ use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
 
-/// Everything a worker thread owns: its private engine and the device
-/// state of the machines assigned to its shard. Lives on the worker
+/// Everything a worker thread owns: its private engine, the device state
+/// of the machines assigned to its shard, and those machines' sample
+/// streams (the DataPlane's shard-resident side). Lives on the worker
 /// thread only — jobs receive `&mut ShardState` and must keep it there.
 pub struct ShardState {
     pub engine: Engine,
     /// machine id -> that machine's current packed batch (replaced on
     /// every fresh draw; cleared between runs)
     pub batches: HashMap<usize, crate::objective::MachineBatch>,
+    /// machine id -> that machine's sample stream, installed at context
+    /// construction (cleared between runs). The plane's draw verb
+    /// advances it and packs the drawn samples here, on this engine — no
+    /// coordinator-side sample materialization for shard-owned machines.
+    pub streams: HashMap<usize, Box<dyn crate::data::SampleStream>>,
     /// held-out evaluator segments owned by this shard (segment id ->
     /// grad-only batch; packed once per run context, cleared between
     /// runs) — the sharded `Evaluator` fan reads these
@@ -166,14 +174,15 @@ impl ShardPool {
         self.submit(self.shard_of(machine), f).wait()
     }
 
-    /// Drop every shard-resident machine batch, evaluator segment and
-    /// session slot (between runs: stale machine state from a previous
-    /// experiment must not outlive it).
+    /// Drop every shard-resident machine batch, sample stream, evaluator
+    /// segment and session slot (between runs: stale machine state from a
+    /// previous experiment must not outlive it).
     pub fn clear_machines(&self) -> Result<()> {
         let pends: Vec<Pending<()>> = (0..self.shards())
             .map(|s| {
                 self.submit(s, |state| {
                     state.batches.clear();
+                    state.streams.clear();
                     state.eval.clear();
                     state.engine.reset_session();
                     Ok(())
@@ -230,7 +239,12 @@ fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result
         }
     };
     let _ = ready.send(Ok(()));
-    let mut state = ShardState { engine, batches: HashMap::new(), eval: HashMap::new() };
+    let mut state = ShardState {
+        engine,
+        batches: HashMap::new(),
+        streams: HashMap::new(),
+        eval: HashMap::new(),
+    };
     while let Ok(job) = rx.recv() {
         job(&mut state);
     }

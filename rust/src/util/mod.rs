@@ -1,8 +1,62 @@
 //! Dependency-light utility substrates (the image is offline; see
-//! Cargo.toml): JSON parsing, deterministic splittable PRNG, and in-tree
-//! property-test / micro-bench harnesses.
+//! Cargo.toml): JSON parsing, deterministic splittable PRNG, in-tree
+//! property-test / micro-bench harnesses, and the shared did-you-mean
+//! name matcher (config keys, scenario names).
 
 pub mod benchkit;
 pub mod json;
 pub mod prng;
 pub mod testkit;
+
+/// Classic Levenshtein distance (tiny inputs: config keys, scenario
+/// names). Shared by every "unknown name" rejection in the crate so the
+/// did-you-mean behavior cannot drift between the config parser and the
+/// scenario registry.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest candidate within edit distance 3 ("did you mean ...?"),
+/// or `None` when nothing is plausibly a typo of `name`.
+pub fn closest_name<'a>(
+    name: &str,
+    candidates: impl IntoIterator<Item = &'a str>,
+) -> Option<&'a str> {
+    candidates
+        .into_iter()
+        .map(|c| (c, edit_distance(name, c)))
+        .min_by_key(|&(_, d)| d)
+        .filter(|&(_, d)| d <= 3)
+        .map(|(c, _)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("b_local", "b_local"), 0);
+        assert_eq!(edit_distance("b_locl", "b_local"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn closest_name_suggests_and_gives_up() {
+        assert_eq!(closest_name("drfit", ["synth", "drift", "sparse"]), Some("drift"));
+        assert_eq!(closest_name("zzzzqqqq", ["synth", "drift"]), None);
+    }
+}

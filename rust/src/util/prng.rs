@@ -107,6 +107,20 @@ impl Prng {
         self.next_normal() as f32
     }
 
+    /// Pareto(scale = 1, tail index `alpha`) via inverse CDF: u^(-1/alpha)
+    /// with u ~ U(0,1). Second moment is finite iff alpha > 2, with
+    /// E[X^2] = alpha / (alpha - 2) — the heavy-tailed covariate streams
+    /// divide by its square root to keep E‖x‖² pinned.
+    pub fn next_pareto(&mut self, alpha: f64) -> f64 {
+        debug_assert!(alpha > 0.0);
+        loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                return u.powf(-1.0 / alpha);
+            }
+        }
+    }
+
     /// In-place Fisher-Yates shuffle (used by the without-replacement
     /// samplers that Algorithm 1 step 2 requires).
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
@@ -185,6 +199,23 @@ mod tests {
             seen[i] = true;
         }
         assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn pareto_moments() {
+        let mut r = Prng::seed_from_u64(5);
+        let alpha = 4.0;
+        let n = 50_000;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let x = r.next_pareto(alpha);
+            assert!(x >= 1.0);
+            s2 += x * x;
+        }
+        // E[X^2] = alpha/(alpha-2) = 2; heavy tails make this slow, so
+        // the tolerance is loose
+        let m2 = s2 / n as f64;
+        assert!((m2 - 2.0).abs() < 0.4, "E[X^2] = {m2}");
     }
 
     #[test]

@@ -13,7 +13,7 @@ use mbprox::algos::solvers::ProxSolver;
 use mbprox::algos::{PackMode, RunContext};
 use mbprox::comm::{netmodel::NetModel, Network};
 use mbprox::data::synth::{SynthSpec, SynthStream};
-use mbprox::data::{Loss, SampleStream};
+use mbprox::data::{Loss, MachineStreams, SampleStream};
 use mbprox::objective::MachineBatch;
 use mbprox::runtime::{Engine, ExecPlane};
 use mbprox::util::testkit::assert_close;
@@ -38,7 +38,7 @@ fn ctx_on(plane: ExecPlane<'_>, m: usize, loss: Loss, d: usize) -> RunContext<'_
         meter: ClusterMeter::new(m),
         loss,
         d,
-        streams,
+        streams: MachineStreams::Local(streams),
         evaluator: None,
         eval_every: 0,
     }

@@ -1,0 +1,267 @@
+//! DataPlane draw-path parity: the draw verb must be a pure relocation.
+//!
+//! Per-machine streams are independent forks, so moving a machine's
+//! stream to its owning shard (where the draw verb generates AND packs
+//! with no coordinator-side sample materialization) must change NOTHING:
+//! drawn samples, iterates, objective curves, and the sample/memory
+//! meters are bit-identical between the sequential (chained) plane and
+//! the sharded plane at every shard count — for a streaming scenario and
+//! a finite-ERM scenario (short ragged epoch-boundary batches included)
+//! from the registry. The host plane draws the identical samples and
+//! charges the identical sample/memory meters (its kernels differ
+//! numerically, so iterates are pinned to tolerance only).
+//!
+//! Requires `make artifacts`.
+
+use mbprox::accounting::ClusterMeter;
+use mbprox::algos::RunResult;
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::scenario::{self, ScenarioParams};
+use mbprox::data::Loss;
+use mbprox::objective::{mean_grad_chained_host, MachineBatch};
+use mbprox::runtime::{Engine, PlanePolicy, ShardPool};
+use mbprox::util::testkit::assert_close;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Run `cfg` on a fresh engine under an explicit plane policy (and pool).
+fn run_with(policy: PlanePolicy, shards: Option<usize>, cfg: &ExperimentConfig) -> RunResult {
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("run `make artifacts` before cargo test"))
+        .with_plane(policy);
+    if let Some(n) = shards {
+        r = r.with_shards(ShardPool::new(n, &dir).expect("shard pool construction"));
+    }
+    r.run(cfg).unwrap_or_else(|e| {
+        panic!("{} (plane={}, shards={shards:?}): {e:?}", cfg.method, policy.as_str())
+    })
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full bitwise identity: iterates, meters (incl. per-machine peaks),
+/// curves, simulated time.
+fn assert_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(bits32(&a.w), bits32(&b.w), "{label}: final iterate bits");
+    assert_eq!(a.report, b.report, "{label}: ClusterMeter report");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{label}: simulated time");
+    assert_eq!(a.curve.len(), b.curve.len(), "{label}: curve length");
+    for (p, q) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(p.samples_total, q.samples_total, "{label}: curve samples");
+        assert_eq!(p.comm_rounds, q.comm_rounds, "{label}: curve rounds");
+        assert_eq!(p.vec_ops, q.vec_ops, "{label}: curve vec ops");
+        match (p.objective, q.objective) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: objective bits")
+            }
+            (None, None) => {}
+            other => panic!("{label}: objective presence mismatch {other:?}"),
+        }
+    }
+}
+
+/// The draw side of the host plane: identical samples drawn, identical
+/// sample/memory charges; iterates only numerically equivalent (host
+/// kernels).
+fn assert_draws_identical(host: &RunResult, chained: &RunResult, label: &str) {
+    assert_eq!(
+        host.report.total_samples, chained.report.total_samples,
+        "{label}: samples are draw-determined, not plane-determined"
+    );
+    assert_eq!(
+        host.report.peak_per_machine, chained.report.peak_per_machine,
+        "{label}: per-machine memory peaks are draw-determined"
+    );
+    assert_close(&host.w, &chained.w, 2e-2, 2e-3);
+    match (host.final_objective, chained.final_objective) {
+        (Some(x), Some(y)) => {
+            let rel = (x - y).abs() / y.abs().max(1e-9);
+            assert!(rel < 2e-2, "{label}: final objective {x} vs {y} (rel {rel:.2e})");
+        }
+        (None, None) => {}
+        other => panic!("{label}: final objective mismatch {other:?}"),
+    }
+}
+
+/// The parity harness: sequential (chained) baseline vs sharded draws at
+/// shards ∈ {1, 2, 4}, plus the host plane's draw-side identity.
+fn draw_parity(cfg: &ExperimentConfig) {
+    let seq = run_with(PlanePolicy::Chained, None, cfg);
+    for n in [1usize, 2, 4] {
+        let sharded = run_with(PlanePolicy::Sharded, Some(n), cfg);
+        assert_identical(&seq, &sharded, &format!("{}[{}] shards={n}", cfg.method, cfg.b_local));
+    }
+    let host = run_with(PlanePolicy::Host, None, cfg);
+    assert_draws_identical(&host, &seq, &format!("{} host draws", cfg.method));
+}
+
+#[test]
+fn streaming_scenario_drift_ragged() {
+    // b = 300 -> one full block + a 44-row ragged tail per machine draw
+    let cfg = ExperimentConfig {
+        method: "mp-dsvrg".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 300,
+        n_budget: 2400, // T = 2
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    draw_parity(&cfg);
+}
+
+#[test]
+fn erm_scenario_fixed_short_epoch_batches() {
+    // 2051 fixed samples shard 513/513/513/512; per-machine draws of
+    // ceil(2051/4) = 513 leave machine 3 one short — the honest ragged
+    // epoch boundary must meter identically on every plane
+    let cfg = ExperimentConfig {
+        method: "dsvrg-erm".into(),
+        scenario: Some("erm-fixed".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 256,
+        n_budget: 2051,
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    let seq = run_with(PlanePolicy::Chained, None, &cfg);
+    // the short draw is real: total samples < ceil(n/m) * m
+    assert!(
+        seq.report.total_samples < 513 * 4,
+        "expected a short epoch-boundary draw, got {} samples",
+        seq.report.total_samples
+    );
+    assert_eq!(
+        seq.report.peak_per_machine.iter().filter(|&&p| p < seq.report.peak_vectors).count(),
+        1,
+        "exactly one machine drew (and held) short: {:?}",
+        seq.report.peak_per_machine
+    );
+    draw_parity(&cfg);
+}
+
+/// Sample-level pinning: the batches a sharded context draws carry the
+/// EXACT samples of the family's coordinator-side forks. Both sides run
+/// the identical chained-kernel mean gradient (bit-identical across
+/// engines by the Grouped-lane contract), so equal gradient bits ⟺ equal
+/// drawn + packed samples.
+#[test]
+fn sharded_draw_packs_expected_fork_samples() {
+    let dir = artifacts_dir();
+    let (d, m, b) = (64usize, 4usize, 300usize);
+    let params = ScenarioParams {
+        dim: d,
+        loss: Loss::Squared,
+        seed: 99,
+        m,
+        n_budget: 4096,
+        data_path: None,
+    };
+    let family = scenario::by_name("heavy-tail").unwrap().build(&params).unwrap();
+    let w: Vec<f32> = (0..d).map(|j| (j as f32 * 0.1).cos() * 0.05).collect();
+
+    // expected: fork each machine's stream on the coordinator, pack on a
+    // fresh engine, fold through the chained mean gradient
+    let g_expected = {
+        let mut engine = Engine::new(&dir).expect("engine");
+        let batches: Vec<MachineBatch> = (0..m)
+            .map(|i| {
+                let samples = family.fork_stream(i as u64).draw_many(b);
+                assert_eq!(samples.len(), b);
+                MachineBatch::pack_grad_only(&mut engine, d, &samples).unwrap()
+            })
+            .collect();
+        let mut net = Network::new(m, NetModel::default());
+        let mut meter = ClusterMeter::new(m);
+        mean_grad_chained_host(&mut engine, None, Loss::Squared, &batches, &w, &mut net, &mut meter)
+            .unwrap()
+    };
+
+    // actual: a sharded context draws the same forks ON THE SHARDS
+    let mut r = Runner::new(Engine::new(&dir).expect("engine"))
+        .with_plane(PlanePolicy::Sharded)
+        .with_shards(ShardPool::new(2, &dir).expect("pool"));
+    let cfg = ExperimentConfig {
+        method: "minibatch-sgd".into(),
+        scenario: Some("heavy-tail".into()),
+        loss: Loss::Squared,
+        m,
+        b_local: b,
+        dim: d,
+        seed: 99,
+        eval_samples: 64,
+        ..ExperimentConfig::default()
+    };
+    let mut ctx = r.context(&cfg).unwrap();
+    let batches = ctx.draw_batches_grad_only(b, false).unwrap();
+    assert!(batches.iter().all(|bt| bt.shard.is_some()), "sharded draws return stubs");
+    let g_actual = {
+        let mut net = Network::new(m, NetModel::default());
+        mean_grad_chained_host(
+            ctx.plane.engine,
+            ctx.plane.shards,
+            Loss::Squared,
+            &batches,
+            &w,
+            &mut net,
+            &mut ctx.meter,
+        )
+        .unwrap()
+    };
+    assert_eq!(
+        bits32(&g_expected),
+        bits32(&g_actual),
+        "shard-drawn batches must hold the forks' exact samples"
+    );
+    // and the draw charged exactly what was drawn
+    let rep = ctx.meter.report();
+    assert_eq!(rep.total_samples, (m * b) as u64);
+}
+
+/// The coordinator's method/scenario pairing guard and the registry's
+/// did-you-mean rejection, through the public Runner API.
+#[test]
+fn scenario_pairing_and_typos_are_rejected() {
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("engine"));
+    let base = ExperimentConfig {
+        n_budget: 512,
+        b_local: 64,
+        eval_samples: 64,
+        ..ExperimentConfig::default()
+    };
+    // streaming method on a finite-ERM scenario: loud rejection
+    let cfg = ExperimentConfig {
+        method: "mp-dsvrg".into(),
+        scenario: Some("erm-fixed".into()),
+        ..base.clone()
+    };
+    let err = r.run(&cfg).unwrap_err().to_string();
+    assert!(err.contains("streaming-SO"), "{err}");
+    // an ERM method on the same scenario runs
+    let cfg = ExperimentConfig {
+        method: "dsvrg-erm".into(),
+        scenario: Some("erm-fixed".into()),
+        ..base.clone()
+    };
+    r.run(&cfg).expect("ERM method on finite-ERM scenario");
+    // unknown scenario names get the did-you-mean treatment
+    let cfg = ExperimentConfig { scenario: Some("drfit".into()), ..base };
+    let err = r.run(&cfg).unwrap_err().to_string();
+    assert!(err.contains("did you mean 'drift'"), "{err}");
+}
