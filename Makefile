@@ -6,7 +6,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts pytest test bench fmt lint doc clean
+.PHONY: artifacts pytest test bench bench-gate fmt lint doc clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS)
@@ -19,6 +19,11 @@ test: artifacts
 
 bench: artifacts
 	cd rust && cargo bench
+
+# diff the fresh BENCH_runtime.json against the committed baseline bounds
+# (run `make bench` first; CI runs this after its bench leg)
+bench-gate:
+	cd rust && cargo run --release --bin bench_gate -- BENCH_baseline.json BENCH_runtime.json
 
 fmt:
 	cd rust && cargo fmt --check

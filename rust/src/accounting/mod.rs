@@ -189,6 +189,56 @@ impl DeviceTraffic {
     }
 }
 
+/// Draw-staging counters for the shard plane's prefetch lane: how many
+/// machine draws the engine thread requested (`takes`), how many were
+/// served from a warm stage (`hits`) vs drawn synchronously on demand
+/// (`misses`), and the total wall-clock the engine thread spent blocked
+/// waiting for packs (`stall_ns` — the dispatch stall the lane exists to
+/// hide). One meter per shard; reset between runs so the numbers are
+/// per-run, and gathered via [`crate::runtime::ShardPool::gathered_stalls`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StallMeter {
+    /// draw requests the engine thread routed through the lane
+    pub takes: u64,
+    /// takes served from a warm stage (the pack was ready before the ask)
+    pub hits: u64,
+    /// takes that drew synchronously (cold stage, size mismatch, or
+    /// prefetch off)
+    pub misses: u64,
+    /// nanoseconds the engine thread blocked waiting for its packs
+    pub stall_ns: u64,
+}
+
+impl StallMeter {
+    /// Record one served take.
+    pub fn record(&mut self, hit: bool, stall_ns: u64) {
+        self.takes += 1;
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        self.stall_ns += stall_ns;
+    }
+
+    /// Fold another shard's meter in (cluster totals).
+    pub fn merge(&mut self, other: &StallMeter) {
+        self.takes += other.takes;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.stall_ns += other.stall_ns;
+    }
+
+    /// Fraction of takes served from a warm stage (0 when nothing drawn).
+    pub fn hit_rate(&self) -> f64 {
+        if self.takes == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.takes as f64
+        }
+    }
+}
+
 /// The Table-1 row: per-machine maxima + total samples.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ResourceReport {
@@ -320,6 +370,27 @@ mod tests {
         assert_eq!(r.peak_per_machine, vec![5, 9, 2]);
         assert_eq!(r.peak_vectors, 9, "cluster peak is the per-machine max");
         assert_eq!(r.peaks_display(), "5 9 2");
+    }
+
+    #[test]
+    fn stall_meter_records_and_merges() {
+        let mut a = StallMeter::default();
+        a.record(true, 10);
+        a.record(false, 100);
+        a.record(true, 5);
+        assert_eq!(a.takes, 3);
+        assert_eq!(a.hits, 2);
+        assert_eq!(a.misses, 1);
+        assert_eq!(a.stall_ns, 115);
+        assert!((a.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let mut b = StallMeter::default();
+        b.record(false, 50);
+        b.merge(&a);
+        assert_eq!(b.takes, 4);
+        assert_eq!(b.hits, 2);
+        assert_eq!(b.misses, 2);
+        assert_eq!(b.stall_ns, 165);
+        assert_eq!(StallMeter::default().hit_rate(), 0.0);
     }
 
     #[test]

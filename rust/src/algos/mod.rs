@@ -17,7 +17,7 @@ pub mod minibatch_sgd;
 pub mod sgd_local;
 pub mod solvers;
 
-use crate::accounting::{ClusterMeter, ResourceReport};
+use crate::accounting::{ClusterMeter, ResourceReport, StallMeter};
 use crate::comm::Network;
 use crate::data::{Loss, MachineStreams};
 use crate::objective::{self, Evaluator, MachineBatch};
@@ -281,6 +281,12 @@ pub struct RunResult {
     pub curve: Vec<CurvePoint>,
     pub sim_time_s: f64,
     pub final_objective: Option<f64>,
+    /// Dispatch-stall accounting for the sharded plane's draw verb
+    /// (wall-clock the workers spent waiting on their prefetch lanes,
+    /// plus the staged-pack hit rate). `None` off the sharded plane.
+    /// Wall-clock only — never part of the simulated cost model, so it
+    /// carries no parity obligation (see `runtime::shard`).
+    pub stalls: Option<StallMeter>,
 }
 
 /// A distributed stochastic optimization method.
@@ -313,12 +319,17 @@ impl Recorder {
 
     pub fn finish(self, ctx: &mut RunContext, w: Vec<f32>) -> Result<RunResult> {
         let final_objective = ctx.eval_now(&w)?;
+        let stalls = match ctx.plane.shards {
+            Some(pool) => Some(pool.gathered_stalls()?),
+            None => None,
+        };
         Ok(RunResult {
             name: self.name,
             report: ctx.meter.report(),
             curve: self.curve,
             sim_time_s: ctx.net.stats.sim_time_s,
             final_objective,
+            stalls,
             w,
         })
     }

@@ -1,0 +1,189 @@
+//! bench_gate — diff a fresh `BENCH_runtime.json` against the committed
+//! `BENCH_baseline.json`, failing (exit 1) on regression.
+//!
+//! Usage: `bench_gate <baseline.json> <fresh.json>`
+//!
+//! The baseline pins two kinds of expectations:
+//!
+//! - `counters`: machine-independent bounds on the bench's named scalars
+//!   (`{"name": {"min": x, "max": y}}`, either side optional). These are
+//!   structural invariants — upload counts per round, cache-hit totals,
+//!   served-reduce flags, prefetch hit rates — that hold on any host, so
+//!   CI can gate on them without a calibrated reference machine.
+//! - `medians`: optional wall-clock pins (`{"bench name": {"p50_ns": n,
+//!   "rel_tol": t}}`) checked as `fresh_p50 <= p50_ns * (1 + rel_tol)`.
+//!   Empty by default: raw latencies are machine-dependent, so entries
+//!   belong here only when CI runs on calibrated hardware.
+//!
+//! Baseline names that the fresh report does not carry are violations
+//! too — a silently dropped counter is how a perf gate rots.
+
+use mbprox::util::json::Json;
+use std::process::ExitCode;
+
+/// One checked expectation, pass or fail.
+struct Check {
+    name: String,
+    detail: String,
+    ok: bool,
+}
+
+fn check_counters(baseline: &Json, fresh: &Json, out: &mut Vec<Check>) {
+    let bounds = match baseline.get("counters").and_then(Json::as_obj) {
+        Some(m) => m,
+        None => return,
+    };
+    let fresh_counters = fresh.get("counters");
+    for (name, bound) in bounds {
+        let min = bound.get("min").and_then(Json::as_f64);
+        let max = bound.get("max").and_then(Json::as_f64);
+        let got = fresh_counters.and_then(|c| c.get(name)).and_then(Json::as_f64);
+        let (ok, detail) = match got {
+            None => (false, "missing from fresh report".to_string()),
+            Some(v) => {
+                let lo_ok = min.map_or(true, |lo| v >= lo);
+                let hi_ok = max.map_or(true, |hi| v <= hi);
+                let range = match (min, max) {
+                    (Some(lo), Some(hi)) => format!("[{lo}, {hi}]"),
+                    (Some(lo), None) => format!(">= {lo}"),
+                    (None, Some(hi)) => format!("<= {hi}"),
+                    (None, None) => "(unbounded)".to_string(),
+                };
+                (lo_ok && hi_ok, format!("{v} vs {range}"))
+            }
+        };
+        out.push(Check { name: format!("counter {name}"), detail, ok });
+    }
+}
+
+fn check_medians(baseline: &Json, fresh: &Json, out: &mut Vec<Check>) {
+    let pins = match baseline.get("medians").and_then(Json::as_obj) {
+        Some(m) => m,
+        None => return,
+    };
+    let benches = fresh.get("benches").and_then(Json::as_arr).unwrap_or(&[]);
+    for (name, pin) in pins {
+        let p50 = pin.get("p50_ns").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let tol = pin.get("rel_tol").and_then(Json::as_f64).unwrap_or(0.25);
+        let got = benches
+            .iter()
+            .find(|b| b.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|b| b.get("p50_ns"))
+            .and_then(Json::as_f64);
+        let (ok, detail) = match got {
+            None => (false, "bench missing from fresh report".to_string()),
+            Some(v) => {
+                let limit = p50 * (1.0 + tol);
+                (v <= limit, format!("{v:.0}ns vs limit {limit:.0}ns (p50 {p50:.0} +{tol})"))
+            }
+        };
+        out.push(Check { name: format!("median {name}"), detail, ok });
+    }
+}
+
+/// Run every baseline expectation against the fresh report.
+fn gate(baseline: &Json, fresh: &Json) -> Vec<Check> {
+    let mut checks = Vec::new();
+    check_counters(baseline, fresh, &mut checks);
+    check_medians(baseline, fresh, &mut checks);
+    checks
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (baseline_path, fresh_path) = match args.as_slice() {
+        [b, f] => (b.as_str(), f.as_str()),
+        _ => {
+            eprintln!("usage: bench_gate <baseline.json> <fresh.json>");
+            return ExitCode::from(2);
+        }
+    };
+    let (baseline, fresh) = match (load(baseline_path), load(fresh_path)) {
+        (Ok(b), Ok(f)) => (b, f),
+        (b, f) => {
+            for e in [b.err(), f.err()].into_iter().flatten() {
+                eprintln!("bench_gate: {e}");
+            }
+            return ExitCode::from(2);
+        }
+    };
+
+    let checks = gate(&baseline, &fresh);
+    let failed = checks.iter().filter(|c| !c.ok).count();
+    println!("bench_gate: {} vs {}", fresh_path, baseline_path);
+    for c in &checks {
+        println!("  [{}] {:<48} {}", if c.ok { "ok" } else { "FAIL" }, c.name, c.detail);
+    }
+    if failed > 0 {
+        eprintln!("bench_gate: {failed}/{} checks failed", checks.len());
+        return ExitCode::FAILURE;
+    }
+    println!("bench_gate: {} checks passed", checks.len());
+    ExitCode::SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    fn fresh() -> Json {
+        let text = r#"{
+          "benches": [{"name": "pack 256", "iters": 8, "mean_ns": 1000.0,
+                       "p50_ns": 900.0, "p10_ns": 800.0, "p90_ns": 1200.0,
+                       "min_ns": 700.0, "throughput_ops_per_sec": 1.0}],
+          "counters": {"round.same_w.uploads": 0.0, "prefetch.on.hit_rate": 0.857},
+          "notes": {}
+        }"#;
+        parse(text)
+    }
+
+    #[test]
+    fn counter_bounds_pass_and_fail() {
+        let text = r#"{"counters": {
+          "round.same_w.uploads": {"max": 0},
+          "prefetch.on.hit_rate": {"min": 0.5, "max": 1.0}
+        }}"#;
+        let checks = gate(&parse(text), &fresh());
+        assert_eq!(checks.len(), 2);
+        assert!(checks.iter().all(|c| c.ok), "both in bounds");
+
+        let tight = r#"{"counters": {"prefetch.on.hit_rate": {"min": 0.9}}}"#;
+        let checks = gate(&parse(tight), &fresh());
+        assert!(!checks[0].ok, "0.857 < min 0.9 must fail");
+    }
+
+    #[test]
+    fn missing_counter_is_a_violation() {
+        let text = r#"{"counters": {"engine.executions": {"min": 1}}}"#;
+        let checks = gate(&parse(text), &fresh());
+        assert!(!checks[0].ok);
+        assert!(checks[0].detail.contains("missing"));
+    }
+
+    #[test]
+    fn median_pins_respect_rel_tol() {
+        // 900 <= 800 * 1.25 = 1000
+        let ok = r#"{"medians": {"pack 256": {"p50_ns": 800.0, "rel_tol": 0.25}}}"#;
+        assert!(gate(&parse(ok), &fresh())[0].ok);
+        // 900 > 700 * 1.1 = 770
+        let slow = r#"{"medians": {"pack 256": {"p50_ns": 700.0, "rel_tol": 0.1}}}"#;
+        assert!(!gate(&parse(slow), &fresh())[0].ok);
+        let gone = r#"{"medians": {"no such bench": {"p50_ns": 1.0, "rel_tol": 0.5}}}"#;
+        assert!(!gate(&parse(gone), &fresh())[0].ok);
+    }
+
+    #[test]
+    fn empty_baseline_passes() {
+        let empty = r#"{"counters": {}, "medians": {}}"#;
+        assert!(gate(&parse(empty), &fresh()).is_empty());
+    }
+}

@@ -13,7 +13,7 @@
 //! `run --help` / `list` output prints.
 
 use crate::data::Loss;
-use crate::runtime::PlanePolicy;
+use crate::runtime::{PlanePolicy, PrefetchPolicy};
 use crate::util::closest_name;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -35,6 +35,10 @@ pub const CONFIG_KEYS: &[(&str, &str)] = &[
     ("data_path", "libsvm file path (scenario=libsvm)"),
     ("dataset", "named dataset: codrna | covtype | kddcup99 | year"),
     ("plane", "execution plane: auto | host | chained | sharded"),
+    ("prefetch", "shard-plane draw prefetch: auto | on | off (bit-identical either way)"),
+    ("scenario.drift_omega", "drift scenario: per-draw rotation angle (radians; default tau/8192)"),
+    ("scenario.pareto_alpha", "heavy-tail scenario: Pareto tail index (> 2 for finite variance)"),
+    ("scenario.sparse_density", "sparse scenario: expected fraction of active features (0, 1]"),
 ];
 
 #[derive(Clone, Debug, Default)]
@@ -116,12 +120,17 @@ impl KvConfig {
 
     /// Reject any key outside `known`, suggesting the closest accepted
     /// key by edit distance ("did you mean ...?"). Namespaced keys
-    /// (`section.key` — what `[section]` headers flatten to) are config
-    /// extensions outside the experiment namespace and pass through: the
-    /// typo guard covers the flat experiment keys only.
+    /// (`section.key` — what `[section]` headers flatten to) pass through
+    /// as config extensions outside the experiment namespace, EXCEPT the
+    /// `scenario.` section: its keys (the scenario-knob namespace —
+    /// `scenario.drift_omega` etc.) are part of the accepted set, so a
+    /// typo there gets the same did-you-mean rejection as a flat key.
     pub fn expect_keys(&self, known: &[(&str, &str)]) -> Result<()> {
         for key in self.keys() {
-            if key.contains('.') || known.iter().any(|(k, _)| *k == key) {
+            if known.iter().any(|(k, _)| *k == key) {
+                continue;
+            }
+            if key.contains('.') && !key.starts_with("scenario.") {
                 continue;
             }
             // shared matcher (util::closest_name) — scenario names reject
@@ -132,6 +141,17 @@ impl KvConfig {
             }
         }
         Ok(())
+    }
+
+    /// Optional float accessor (no default: absent key = `None`).
+    pub fn get_opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .with_context(|| format!("config key '{key}'='{v}'")),
+        }
     }
 }
 
@@ -156,6 +176,19 @@ pub struct ExperimentConfig {
     /// execution-plane policy (`plane=` key; `Auto` defers to the
     /// runner's `PLANE` env / default)
     pub plane: PlanePolicy,
+    /// shard-plane draw prefetch (`prefetch=` key; `Auto` defers to the
+    /// runner's `PREFETCH` env / default). Bit-parity is unconditional —
+    /// this knob trades dispatch-stall time only.
+    pub prefetch: PrefetchPolicy,
+    /// drift scenario: per-draw rotation angle in radians
+    /// (`scenario.drift_omega`; `None` = the scenario's default)
+    pub drift_omega: Option<f64>,
+    /// heavy-tail scenario: Pareto tail index (`scenario.pareto_alpha`;
+    /// must exceed 2 so gradients keep finite variance)
+    pub pareto_alpha: Option<f64>,
+    /// sparse scenario: expected active-feature fraction in (0, 1]
+    /// (`scenario.sparse_density`)
+    pub sparse_density: Option<f64>,
 }
 
 impl Default for ExperimentConfig {
@@ -174,6 +207,10 @@ impl Default for ExperimentConfig {
             data_path: None,
             dataset: None,
             plane: PlanePolicy::Auto,
+            prefetch: PrefetchPolicy::Auto,
+            drift_omega: None,
+            pareto_alpha: None,
+            sparse_density: None,
         }
     }
 }
@@ -191,6 +228,29 @@ impl ExperimentConfig {
         let plane_s = kv.get_str("plane", dflt.plane.as_str());
         let plane = PlanePolicy::parse(&plane_s)
             .ok_or_else(|| anyhow!("bad plane '{plane_s}' (auto|host|chained|sharded)"))?;
+        let prefetch_s = kv.get_str("prefetch", dflt.prefetch.as_str());
+        let prefetch = PrefetchPolicy::parse(&prefetch_s)
+            .ok_or_else(|| anyhow!("bad prefetch '{prefetch_s}' (auto|on|off)"))?;
+        let drift_omega = kv.get_opt_f64("scenario.drift_omega")?;
+        if let Some(w) = drift_omega {
+            if !w.is_finite() || w < 0.0 {
+                bail!("scenario.drift_omega must be a finite angle >= 0, got {w}");
+            }
+        }
+        let pareto_alpha = kv.get_opt_f64("scenario.pareto_alpha")?;
+        if let Some(a) = pareto_alpha {
+            if !a.is_finite() || a <= 2.0 {
+                bail!(
+                    "scenario.pareto_alpha must exceed 2 (finite gradient variance), got {a}"
+                );
+            }
+        }
+        let sparse_density = kv.get_opt_f64("scenario.sparse_density")?;
+        if let Some(p) = sparse_density {
+            if !p.is_finite() || p <= 0.0 || p > 1.0 {
+                bail!("scenario.sparse_density must lie in (0, 1], got {p}");
+            }
+        }
         Ok(ExperimentConfig {
             m: kv.get_usize("m", dflt.m)?,
             b_local: kv.get_usize("b_local", dflt.b_local)?,
@@ -205,6 +265,10 @@ impl ExperimentConfig {
             data_path: kv.get("data_path").map(str::to_string),
             dataset: kv.get("dataset").map(str::to_string),
             plane,
+            prefetch,
+            drift_omega,
+            pareto_alpha,
+            sparse_density,
         })
     }
 
@@ -293,6 +357,66 @@ mod tests {
         let kv = KvConfig::parse("scenaro = drift\n").unwrap();
         let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
         assert!(err.contains("did you mean 'scenario'"), "{err}");
+    }
+
+    #[test]
+    fn prefetch_key_parses() {
+        let kv = KvConfig::parse("prefetch = off\n").unwrap();
+        assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().prefetch, PrefetchPolicy::Off);
+        let kv = KvConfig::parse("prefetch = sometimes\n").unwrap();
+        assert!(ExperimentConfig::from_kv(&kv).is_err());
+        assert_eq!(
+            ExperimentConfig::default().prefetch,
+            PrefetchPolicy::Auto,
+            "prefetch defaults to auto (= on wherever the lane exists)"
+        );
+    }
+
+    #[test]
+    fn scenario_namespace_parses_and_validates() {
+        // section syntax and flat dotted keys are the same namespace
+        let kv = KvConfig::parse(
+            "[scenario]\ndrift_omega = 0.01\npareto_alpha = 3.5\nsparse_density = 0.2\n",
+        )
+        .unwrap();
+        let ec = ExperimentConfig::from_kv(&kv).unwrap();
+        assert_eq!(ec.drift_omega, Some(0.01));
+        assert_eq!(ec.pareto_alpha, Some(3.5));
+        assert_eq!(ec.sparse_density, Some(0.2));
+        // absent keys mean "the scenario's own default"
+        let ec = ExperimentConfig::from_kv(&KvConfig::parse("m = 2\n").unwrap()).unwrap();
+        assert_eq!(ec.drift_omega, None);
+        assert_eq!(ec.pareto_alpha, None);
+        assert_eq!(ec.sparse_density, None);
+        // domain guards: alpha <= 2 has infinite gradient variance,
+        // density outside (0,1] is not a probability
+        for bad in ["scenario.pareto_alpha = 2.0\n", "scenario.pareto_alpha = nan\n"] {
+            let err =
+                ExperimentConfig::from_kv(&KvConfig::parse(bad).unwrap()).unwrap_err().to_string();
+            assert!(err.contains("pareto_alpha"), "{err}");
+        }
+        for bad in ["scenario.sparse_density = 0\n", "scenario.sparse_density = 1.5\n"] {
+            let err =
+                ExperimentConfig::from_kv(&KvConfig::parse(bad).unwrap()).unwrap_err().to_string();
+            assert!(err.contains("sparse_density"), "{err}");
+        }
+        let err = ExperimentConfig::from_kv(&KvConfig::parse("scenario.drift_omega = -1\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("drift_omega"), "{err}");
+    }
+
+    #[test]
+    fn scenario_namespace_typos_are_rejected() {
+        // unlike other sections, scenario.* is part of the accepted key
+        // set — a typo must not silently leave the scenario on defaults
+        let kv = KvConfig::parse("[scenario]\ndrift_omga = 0.01\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("scenario.drift_omga"), "{err}");
+        assert!(err.contains("did you mean 'scenario.drift_omega'"), "{err}");
+        // other sections still pass through as config extensions
+        let kv = KvConfig::parse("m = 8\n[net]\nalpha = 1e-4\n").unwrap();
+        assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().m, 8);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::data::table3::DatasetSpec;
 use crate::data::{Loss, MachineStreams, Sample, SampleStream};
 use crate::objective::Evaluator;
 use crate::runtime::{
-    default_artifacts_dir, Engine, ExecPlane, Pending, PlanePolicy, ShardPool,
+    default_artifacts_dir, Engine, ExecPlane, PlanePolicy, PrefetchPolicy, ShardPool,
 };
 use crate::theory::{self, ProblemConsts};
 use anyhow::{anyhow, bail, Result};
@@ -56,6 +56,11 @@ pub struct Runner {
     /// `Auto`); a per-run `plane=` config key overrides it when not
     /// `Auto`. Resolved ONCE per context into an [`ExecPlane`].
     pub plane: PlanePolicy,
+    /// process-level draw-prefetch policy (`PREFETCH` env / default
+    /// `Auto` = on); a per-run `prefetch=` config key overrides it when
+    /// not `Auto`. Bit-parity is unconditional — this only moves
+    /// dispatch-stall time.
+    pub prefetch: PrefetchPolicy,
     /// the pool in `shards` was self-attached by a `plane=sharded` run
     /// (not by `SHARDS`/`with_shards`): it is kept for later sharded
     /// runs but ignored when resolving `auto`/`chained`/`host`, so one
@@ -87,7 +92,8 @@ impl Runner {
     pub fn from_env() -> Result<Runner> {
         Runner::new(Engine::from_env()?)
             .with_env_shards(&default_artifacts_dir())?
-            .with_env_plane()
+            .with_env_plane()?
+            .with_env_prefetch()
     }
 
     pub fn new(engine: Engine) -> Runner {
@@ -96,6 +102,7 @@ impl Runner {
             net_model: NetModel::default(),
             shards: None,
             plane: PlanePolicy::Auto,
+            prefetch: PrefetchPolicy::Auto,
             self_pool: false,
         }
     }
@@ -132,6 +139,19 @@ impl Runner {
         Ok(self)
     }
 
+    /// Set the process-level draw-prefetch policy explicitly.
+    pub fn with_prefetch(mut self, prefetch: PrefetchPolicy) -> Runner {
+        self.prefetch = prefetch;
+        self
+    }
+
+    /// Adopt the `PREFETCH` env var as the process-level prefetch policy
+    /// (unset = `Auto` = on; a typo is an error, not a silent fallback).
+    pub fn with_env_prefetch(mut self) -> Result<Runner> {
+        self.prefetch = PrefetchPolicy::from_env()?;
+        Ok(self)
+    }
+
     /// Padded artifact dim for a native dim.
     pub fn padded_dim(&self, native: usize) -> Result<usize> {
         self.engine.manifest().padded_dim(native)
@@ -153,6 +173,17 @@ impl Runner {
         Ok(policy)
     }
 
+    /// Resolve the effective prefetch policy for one run: a per-run
+    /// `prefetch=` key beats the process-level policy unless it is
+    /// `Auto` — exactly [`Runner::resolve_plane`]'s rule.
+    fn resolve_prefetch(&self, cfg_prefetch: PrefetchPolicy) -> PrefetchPolicy {
+        if cfg_prefetch != PrefetchPolicy::Auto {
+            cfg_prefetch
+        } else {
+            self.prefetch
+        }
+    }
+
     /// Build a context from the config's data axis (the scenario
     /// registry, a named dataset, or the default planted-model stream) +
     /// evaluator, validating the method/scenario setting pairing.
@@ -165,7 +196,15 @@ impl Runner {
             (0..cfg.m).map(|i| family.fork_stream(i as u64)).collect();
         let mut eval_stream = family.fork_stream(EVAL_TAG);
         let eval_samples = eval_stream.draw_many(cfg.eval_samples);
-        self.build_context(cfg.plane, loss, d, streams, &eval_samples, cfg.eval_every)
+        self.build_context(
+            cfg.plane,
+            cfg.prefetch,
+            loss,
+            d,
+            streams,
+            &eval_samples,
+            cfg.eval_every,
+        )
     }
 
     /// Build a context over caller-supplied per-machine streams and a
@@ -180,12 +219,22 @@ impl Runner {
         eval_samples: &[Sample],
         eval_every: usize,
     ) -> Result<RunContext<'_>> {
-        self.build_context(PlanePolicy::Auto, loss, d, streams, eval_samples, eval_every)
+        self.build_context(
+            PlanePolicy::Auto,
+            PrefetchPolicy::Auto,
+            loss,
+            d,
+            streams,
+            eval_samples,
+            eval_every,
+        )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn build_context(
         &mut self,
         cfg_plane: PlanePolicy,
+        cfg_prefetch: PrefetchPolicy,
         loss: Loss,
         d: usize,
         streams: Vec<Box<dyn SampleStream>>,
@@ -194,6 +243,7 @@ impl Runner {
     ) -> Result<RunContext<'_>> {
         let m = streams.len();
         let policy = self.resolve_plane(cfg_plane)?;
+        let prefetch = self.resolve_prefetch(cfg_prefetch);
         if let Some(pool) = &self.shards {
             // stale machine/stream/evaluator state from a previous run
             // must not leak in (the installs below land on cleared shards)
@@ -206,23 +256,14 @@ impl Runner {
         } else {
             self.shards.as_ref()
         };
-        let mut plane = ExecPlane::new(&mut self.engine, pool, policy)?;
+        let mut plane = ExecPlane::new(&mut self.engine, pool, policy)?.with_prefetch(prefetch);
         // DataPlane residency: with a pool on the plane, each machine's
-        // stream moves to its owning shard (next to its batches) and the
-        // draw verb generates + packs shard-side from then on
+        // stream moves to its owning shard's prefetch lane (next to its
+        // batches) and the draw verb generates + packs shard-side — one
+        // round ahead of the engine when prefetch is on — from then on
         let streams = if let Some(pool) = plane.shards {
-            let pends: Vec<Pending<()>> = streams
-                .into_iter()
-                .enumerate()
-                .map(|(i, s)| {
-                    pool.submit(pool.shard_of(i), move |state| {
-                        state.streams.insert(i, s);
-                        Ok(())
-                    })
-                })
-                .collect();
-            for p in pends {
-                p.wait()?;
+            for (i, s) in streams.into_iter().enumerate() {
+                pool.install_stream(i, s)?;
             }
             MachineStreams::Sharded { m }
         } else {
@@ -295,6 +336,9 @@ pub fn build_family(cfg: &ExperimentConfig) -> Result<Box<dyn StreamFamily>> {
                 m: cfg.m,
                 n_budget: cfg.n_budget,
                 data_path: cfg.data_path.clone(),
+                drift_omega: cfg.drift_omega,
+                pareto_alpha: cfg.pareto_alpha,
+                sparse_density: cfg.sparse_density,
             };
             scenario::by_name(name)?.build(&params)
         }

@@ -248,6 +248,12 @@ impl SampleStream for LibsvmChunkStream {
         }
         out
     }
+
+    fn draws_decompose(&self) -> bool {
+        // draw_many bounds epochs per call (single draws roll across
+        // them), so a read-ahead cannot be re-split bit-identically
+        false
+    }
 }
 
 #[cfg(test)]

@@ -83,6 +83,17 @@ pub trait SampleStream: Send {
     fn draw_many(&mut self, n: usize) -> Vec<Sample> {
         (0..n).map(|_| self.draw()).collect()
     }
+
+    /// Whether `draw_many(a + b)` yields the same samples as
+    /// `draw_many(a)` then `draw_many(b)` — true for the default
+    /// implementation (sequential `draw` calls) and every infinite
+    /// stream. Epoch-batching streams, whose `draw_many` decides epoch
+    /// boundaries per CALL, must return false: the shard plane's prefetch
+    /// lane re-splits a speculative read-ahead only when this holds, and
+    /// refuses (pointing at `prefetch=off`) otherwise.
+    fn draws_decompose(&self) -> bool {
+        true
+    }
 }
 
 /// Where a cluster's per-machine sample streams live — the DataPlane's
@@ -95,9 +106,10 @@ pub enum MachineStreams {
     /// engine.
     Local(Vec<Box<dyn SampleStream>>),
     /// Streams moved to their owning shards at context construction
-    /// (machine i's stream lives on `shard_of(i)` next to its batches):
-    /// the draw verb generates and packs on the shard, and the
-    /// coordinator holds only the machine count.
+    /// (machine i's stream lives on `shard_of(i)`'s prefetch lane — see
+    /// `runtime::shard` — next to its batches): the draw verb generates
+    /// and packs on the shard, optionally one round ahead of the engine,
+    /// and the coordinator holds only the machine count.
     Sharded { m: usize },
 }
 

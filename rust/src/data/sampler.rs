@@ -139,6 +139,13 @@ impl super::SampleStream for VecStream {
         };
         idx.into_iter().map(|i| self.samples[i].clone()).collect()
     }
+
+    fn draws_decompose(&self) -> bool {
+        // the recycling variant is a plain sequence of single draws; the
+        // epoch-bounded one decides boundaries per call and cannot be
+        // re-split by the prefetch lane
+        !self.epoch_bounded
+    }
 }
 
 /// Split a materialized dataset into `m` contiguous shards (machine i gets

@@ -99,6 +99,16 @@ pub struct ScenarioParams {
     pub n_budget: usize,
     /// on-disk dataset path (`data_path=` key; required by `libsvm`)
     pub data_path: Option<String>,
+    /// drift scenario: per-draw rotation angle override
+    /// (`scenario.drift_omega`; `None` = [`DriftFamily`]'s default)
+    pub drift_omega: Option<f64>,
+    /// heavy-tail scenario: Pareto tail index override
+    /// (`scenario.pareto_alpha`; must exceed 2 — the config layer
+    /// validates, the builder re-checks)
+    pub pareto_alpha: Option<f64>,
+    /// sparse scenario: active-feature fraction override in (0, 1]
+    /// (`scenario.sparse_density`)
+    pub sparse_density: Option<f64>,
 }
 
 type BuildFn = fn(&ScenarioParams) -> Result<Box<dyn StreamFamily>>;
@@ -236,6 +246,18 @@ impl DriftFamily {
         DriftFamily { spec, u, v, scales, omega: DRIFT_OMEGA, rng: Prng::seed_from_u64(seed) }
     }
 
+    /// Override the rotation rate (`scenario.drift_omega`; radians per
+    /// draw). The planted basis is unchanged, so omega=default reproduces
+    /// `new` exactly.
+    pub fn with_omega(mut self, omega: f64) -> DriftFamily {
+        self.omega = omega;
+        self
+    }
+
+    pub fn omega(&self) -> f64 {
+        self.omega
+    }
+
     /// The rotation-plane basis (tests pin orthogonality and norms).
     pub fn basis(&self) -> (&[f32], &[f32]) {
         (&self.u, &self.v)
@@ -301,7 +323,14 @@ impl SampleStream for DriftStream {
 }
 
 fn build_drift(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
-    Ok(Box::new(DriftFamily::new(base_spec(p), p.seed)))
+    let mut fam = DriftFamily::new(base_spec(p), p.seed);
+    if let Some(omega) = p.drift_omega {
+        if !omega.is_finite() || omega < 0.0 {
+            bail!("scenario.drift_omega must be a finite angle >= 0, got {omega}");
+        }
+        fam = fam.with_omega(omega);
+    }
+    Ok(Box::new(fam))
 }
 
 // ---- heavy-tail: Pareto-scaled elliptical covariates ------------------
@@ -331,6 +360,20 @@ impl HeavyTailFamily {
         let w_star = planted_model(spec.dim, spec.model_norm, &mut model_rng);
         let scales = eigen_scales(spec.dim, spec.cond, spec.row_norm);
         HeavyTailFamily { spec, w_star, scales, alpha: HEAVY_ALPHA, rng: Prng::seed_from_u64(seed) }
+    }
+
+    /// Override the Pareto tail index (`scenario.pareto_alpha`; must
+    /// exceed 2 so E[s^2] = alpha/(alpha-2) stays finite — smaller alpha
+    /// means heavier tails). The normalization tracks the new alpha, so
+    /// E‖x‖² stays pinned at row_norm² for every valid choice.
+    pub fn with_alpha(mut self, alpha: f64) -> HeavyTailFamily {
+        assert!(alpha > 2.0, "Pareto tail index must exceed 2, got {alpha}");
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
     }
 }
 
@@ -388,7 +431,14 @@ impl SampleStream for HeavyTailStream {
 }
 
 fn build_heavy_tail(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
-    Ok(Box::new(HeavyTailFamily::new(base_spec(p), p.seed)))
+    let mut fam = HeavyTailFamily::new(base_spec(p), p.seed);
+    if let Some(alpha) = p.pareto_alpha {
+        if !alpha.is_finite() || alpha <= 2.0 {
+            bail!("scenario.pareto_alpha must exceed 2 (finite variance), got {alpha}");
+        }
+        fam = fam.with_alpha(alpha);
+    }
+    Ok(Box::new(fam))
 }
 
 // ---- sparse: Bernoulli-masked features --------------------------------
@@ -416,6 +466,22 @@ impl SparseFamily {
         let scales = eigen_scales(spec.dim, spec.cond, spec.row_norm);
         let rng = Prng::seed_from_u64(seed);
         SparseFamily { spec, w_star, scales, density: SPARSE_DENSITY, rng }
+    }
+
+    /// Override the per-coordinate keep probability
+    /// (`scenario.sparse_density`, in (0, 1]). The 1/sqrt(density)
+    /// rescale tracks the new density, so E‖x‖² stays at row_norm².
+    pub fn with_density(mut self, density: f64) -> SparseFamily {
+        assert!(
+            density > 0.0 && density <= 1.0,
+            "sparse density must lie in (0, 1], got {density}"
+        );
+        self.density = density;
+        self
+    }
+
+    pub fn density(&self) -> f64 {
+        self.density
     }
 }
 
@@ -473,7 +539,14 @@ impl SampleStream for SparseStream {
 }
 
 fn build_sparse(p: &ScenarioParams) -> Result<Box<dyn StreamFamily>> {
-    Ok(Box::new(SparseFamily::new(base_spec(p), p.seed)))
+    let mut fam = SparseFamily::new(base_spec(p), p.seed);
+    if let Some(density) = p.sparse_density {
+        if !density.is_finite() || density <= 0.0 || density > 1.0 {
+            bail!("scenario.sparse_density must lie in (0, 1], got {density}");
+        }
+        fam = fam.with_density(density);
+    }
+    Ok(Box::new(fam))
 }
 
 // ---- erm-fixed: a fixed finite sample set, sharded per machine --------
@@ -630,6 +703,9 @@ mod tests {
             m: 4,
             n_budget: 103, // deliberately ragged across 4 shards
             data_path: None,
+            drift_omega: None,
+            pareto_alpha: None,
+            sparse_density: None,
         }
     }
 
@@ -750,6 +826,59 @@ mod tests {
         assert!((density - SPARSE_DENSITY).abs() < 0.02, "density {density}");
         let mean_sq = acc / n as f64;
         assert!((mean_sq - 1.0).abs() < 0.15, "E||x||^2 = {mean_sq}");
+    }
+
+    #[test]
+    fn scenario_knobs_override_the_defaults() {
+        // drift: a zero rotation rate makes the stream stationary — the
+        // same seed's samples match a DriftFamily pinned at theta=0
+        let p_frozen = ScenarioParams { drift_omega: Some(0.0), ..params() };
+        let frozen = by_name("drift").unwrap().build(&p_frozen).unwrap();
+        let manual = DriftFamily::new(base_spec(&params()), params().seed).with_omega(0.0);
+        let mut a = frozen.fork_stream(0);
+        let mut b = manual.fork_stream(0);
+        for _ in 0..16 {
+            assert_eq!(a.draw(), b.draw());
+        }
+        // no override = the registry default (an omega() accessor pins it)
+        let dflt = DriftFamily::new(base_spec(&params()), 1);
+        assert_eq!(dflt.omega(), std::f64::consts::TAU / 8192.0);
+
+        // sparse: the configured density shows up empirically
+        let p_dense = ScenarioParams { sparse_density: Some(0.5), ..params() };
+        let fam = by_name("sparse").unwrap().build(&p_dense).unwrap();
+        let mut s = fam.fork_stream(0);
+        let n = 2000;
+        let mut nnz = 0usize;
+        for _ in 0..n {
+            nnz += s.draw().x.iter().filter(|&&v| v != 0.0).count();
+        }
+        let density = nnz as f64 / (n * 16) as f64;
+        assert!((density - 0.5).abs() < 0.03, "density {density}");
+
+        // heavy-tail: the normalization tracks the configured alpha, so
+        // the second moment stays pinned (bounds loose — smaller alpha
+        // converges slower)
+        let p_heavy = ScenarioParams { pareto_alpha: Some(3.0), ..params() };
+        let fam = by_name("heavy-tail").unwrap().build(&p_heavy).unwrap();
+        let mut s = fam.fork_stream(0);
+        let mut acc = 0.0;
+        for _ in 0..6000 {
+            acc += s.draw().x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        }
+        let mean_sq = acc / 6000.0;
+        assert!((0.3..3.0).contains(&mean_sq), "E||x||^2 = {mean_sq}");
+
+        // invalid overrides are rejected at build with the key name
+        let bad = ScenarioParams { pareto_alpha: Some(2.0), ..params() };
+        let err = by_name("heavy-tail").unwrap().build(&bad).unwrap_err().to_string();
+        assert!(err.contains("pareto_alpha"), "{err}");
+        let bad = ScenarioParams { sparse_density: Some(0.0), ..params() };
+        let err = by_name("sparse").unwrap().build(&bad).unwrap_err().to_string();
+        assert!(err.contains("sparse_density"), "{err}");
+        let bad = ScenarioParams { drift_omega: Some(f64::NAN), ..params() };
+        let err = by_name("drift").unwrap().build(&bad).unwrap_err().to_string();
+        assert!(err.contains("drift_omega"), "{err}");
     }
 
     #[test]

@@ -65,6 +65,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
     print!("{}", metrics::resource_table(&[&result]));
     // the paper's memory axis, per machine ("memory" above is their max)
     println!("# peak vectors per machine: {}", result.report.peaks_display());
+    if let Some(s) = &result.stalls {
+        println!(
+            "# draw dispatch: {} takes, {:.0}% prefetch hits, {:.3} ms stalled",
+            s.takes,
+            s.hit_rate() * 100.0,
+            s.stall_ns as f64 / 1e6
+        );
+    }
     if !result.curve.is_empty() {
         println!("\n# trajectory");
         print!("{}", metrics::curve_csv(&result));

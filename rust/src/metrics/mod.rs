@@ -78,6 +78,25 @@ pub fn run_json(run: &RunResult) -> String {
             let _ = write!(out, "\"objective\": null, ");
         }
     }
+    // wall-clock dispatch-stall accounting (sharded plane only; see
+    // `runtime::shard` — never part of the simulated cost model)
+    match &run.stalls {
+        Some(s) => {
+            let _ = write!(
+                out,
+                "\"stalls\": {{\"takes\": {}, \"hits\": {}, \"misses\": {}, \
+                 \"stall_ns\": {}, \"hit_rate\": {}}}, ",
+                s.takes,
+                s.hits,
+                s.misses,
+                s.stall_ns,
+                s.hit_rate()
+            );
+        }
+        None => {
+            let _ = write!(out, "\"stalls\": null, ");
+        }
+    }
     let _ = write!(out, "\"curve\": [");
     for (i, p) in run.curve.iter().enumerate() {
         if i > 0 {
@@ -105,7 +124,7 @@ pub fn write_report(path: &Path, text: &str) -> std::io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accounting::ResourceReport;
+    use crate::accounting::{ResourceReport, StallMeter};
     use crate::algos::CurvePoint;
     use crate::util::json::Json;
 
@@ -131,6 +150,7 @@ mod tests {
             }],
             sim_time_s: 0.5,
             final_objective: Some(0.125),
+            stalls: Some(StallMeter { takes: 8, hits: 6, misses: 2, stall_ns: 1500 }),
         }
     }
 
@@ -160,5 +180,13 @@ mod tests {
         assert_eq!(peaks.len(), 2);
         assert_eq!(peaks[0].as_usize(), Some(12));
         assert_eq!(peaks[1].as_usize(), Some(7));
+        let stalls = v.get("stalls").unwrap();
+        assert_eq!(stalls.get("takes").unwrap().as_usize(), Some(8));
+        assert_eq!(stalls.get("hit_rate").unwrap().as_f64(), Some(0.75));
+        // off the sharded plane, stalls is an explicit null
+        let mut run = dummy_run();
+        run.stalls = None;
+        let v = Json::parse(&run_json(&run)).expect("valid json");
+        assert!(matches!(v.get("stalls"), Some(Json::Null)));
     }
 }

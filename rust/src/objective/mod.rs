@@ -156,8 +156,34 @@ impl MachineBatch {
         retain_host: bool,
         vr_align: Option<usize>,
     ) -> Result<MachineBatch> {
-        let blocks: Vec<Block> = pack_all(samples, engine_d);
+        let mode = match (retain_host, vr_align) {
+            (_, Some(p)) => PackMode::VrAligned(p),
+            (true, None) => PackMode::Full,
+            (false, None) => PackMode::GradOnly,
+        };
+        Self::pack_blocks_mode(engine, engine_d, pack_all(samples, engine_d), mode)
+    }
+
+    /// Pack from pre-packed host blocks — the prefetch lane's staged
+    /// packs. `pack_all` is pure, so a batch built here from
+    /// `pack_all(samples, d)` is indistinguishable from
+    /// [`MachineBatch::pack_mode`] over the same samples: only the fuse
+    /// grouping and device uploads (the engine-affine half of packing)
+    /// happen in this call. `n` is recovered from the blocks' valid
+    /// counts, which sum to the drawn sample count.
+    pub fn pack_blocks_mode(
+        engine: &mut Engine,
+        engine_d: usize,
+        blocks: Vec<Block>,
+        mode: PackMode,
+    ) -> Result<MachineBatch> {
+        let n: usize = blocks.iter().map(|b| b.valid).sum();
         let n_blocks = blocks.len();
+        let (retain_host, vr_align) = match mode {
+            PackMode::Full => (true, None),
+            PackMode::GradOnly => (false, None),
+            PackMode::VrAligned(p) => (false, Some(p)),
+        };
         let groups = match vr_align {
             None => fuse_blocks(engine, &blocks)?,
             Some(p) => {
@@ -175,7 +201,7 @@ impl MachineBatch {
             n_blocks,
             groups,
             vr: RefCell::new(None),
-            n: samples.len(),
+            n,
             d: engine_d,
             held: 0,
             shard: None,

@@ -38,16 +38,18 @@
 //! 5. **draw** — generate a fresh per-machine minibatch from the
 //!    machine's sample stream and pack it through verbs 1–2, on the
 //!    engine that owns the machine ([`plane::ExecPlane::draw_batches`]).
-//!    Streams are `Send`, shard-resident objects (`shard::ShardState`
-//!    owns them next to the machine's batches), so on the sharded plane
-//!    samples are generated AND packed shard-side — the coordinator sees
-//!    only metadata stubs, and the serial coordinator draw bottleneck is
-//!    gone. Per-machine streams are independent forks, which makes the
-//!    draw site irrelevant to the bits: every plane draws the identical
-//!    sample sequence (pinned by `rust/tests/draw_parity.rs`). Sample and
-//!    memory meters charge what was actually drawn — finite streams
-//!    (`data::scenario`'s finite-ERM families) may return short final
-//!    batches at epoch boundaries.
+//!    Streams are `Send`, shard-resident objects — on the sharded plane
+//!    each stream lives on its shard's *prefetch lane* thread
+//!    (`runtime::shard`'s lane; see below), so samples are generated AND
+//!    packed shard-side, optionally one round ahead of the engine — the
+//!    coordinator sees only metadata stubs, and the serial coordinator
+//!    draw bottleneck is gone. Per-machine streams are independent forks,
+//!    which makes the draw site irrelevant to the bits: every plane draws
+//!    the identical sample sequence (pinned by
+//!    `rust/tests/draw_parity.rs` and `rust/tests/prefetch_parity.rs`).
+//!    Sample and memory meters charge what was actually drawn — finite
+//!    streams (`data::scenario`'s finite-ERM families) may return short
+//!    final batches at epoch boundaries.
 //!
 //! # The execution plane
 //!
@@ -89,6 +91,27 @@
 //! resident), all metered through each shard's [`EngineStats`] and
 //! aggregated via [`shard::ShardPool::gathered_stats`].
 //!
+//! # The prefetch lane
+//!
+//! Each shard worker has a companion host-only **prefetch lane** thread
+//! that owns the shard's sample streams and runs round t+1's draw+pack
+//! into staged host-side block packs while the engine thread dispatches
+//! round t (double buffering: one stage per machine, refilled right after
+//! it is consumed). The worker's draw job collects the staged pack over a
+//! handoff channel ([`shard::LaneClient::take`]) and performs only the
+//! engine-affine fuse+upload itself; the wait inside `take` is the
+//! **dispatch stall** the lane hides, metered per shard
+//! ([`accounting::StallMeter`](crate::accounting::StallMeter), gathered
+//! by [`shard::ShardPool::gathered_stalls`] into each run's report).
+//! Bit-parity is unconditional — a cold stage (and `prefetch=off`
+//! entirely) falls back to the identical synchronous draw, and a warm
+//! stage holds exactly the `draw_many` result the request would have
+//! produced — so the `prefetch=` policy ([`plane::PrefetchPolicy`]: the
+//! `prefetch=` config key / `PREFETCH` env, default auto = on) trades
+//! stall time only, never bytes. The full staging contract (stream
+//! ownership, mismatched-size re-splits, epoch-boundary refusal) is in
+//! the `shard` module docs.
+//!
 //! # Traffic counters
 //!
 //! [`EngineStats`] meters the contract: `uploads`/`upload_bytes` count
@@ -116,9 +139,11 @@ use std::time::Instant;
 
 pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
 pub use chain::DeviceVec;
-pub use plane::{ExecPlane, Lane, LocalSolver, PlaneKind, PlaneLocals, PlanePolicy, PlaneVec};
+pub use plane::{
+    ExecPlane, Lane, LocalSolver, PlaneKind, PlaneLocals, PlanePolicy, PlaneVec, PrefetchPolicy,
+};
 pub use session::ExecSession;
-pub use shard::{Pending, ShardPool, ShardState};
+pub use shard::{LaneClient, Pending, ShardPool, ShardState, TakeReply};
 
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {

@@ -64,6 +64,7 @@ use crate::objective::{
 use anyhow::{anyhow, bail, ensure, Result};
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// The `plane=` policy: how the coordinator picks an execution plane.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -107,6 +108,60 @@ impl PlanePolicy {
             Ok(raw) => PlanePolicy::parse(&raw)
                 .ok_or_else(|| anyhow!("PLANE='{raw}' is not auto|host|chained|sharded")),
         }
+    }
+}
+
+/// The `prefetch=` policy: whether the Sharded plane's draw verb runs one
+/// round ahead of the engine on the per-shard prefetch lane (see
+/// `runtime::shard`). Bit-parity is unconditional — the policy trades
+/// dispatch-stall time, never bytes — so `Auto` enables it wherever it
+/// applies (shard-resident streams); `Off` forces the synchronous
+/// draw-then-pack path for diagnostics and A/B stall measurement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PrefetchPolicy {
+    /// Prefetch on the Sharded plane (where the lane exists), no-op
+    /// elsewhere — the default.
+    #[default]
+    Auto,
+    On,
+    Off,
+}
+
+impl PrefetchPolicy {
+    pub fn parse(s: &str) -> Option<PrefetchPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(PrefetchPolicy::Auto),
+            "on" => Some(PrefetchPolicy::On),
+            "off" => Some(PrefetchPolicy::Off),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PrefetchPolicy::Auto => "auto",
+            PrefetchPolicy::On => "on",
+            PrefetchPolicy::Off => "off",
+        }
+    }
+
+    /// Parse the `PREFETCH` environment variable (unset/empty = `Auto`).
+    /// Unrecognized values error — a typo must not silently change the
+    /// stall profile being measured.
+    pub fn from_env() -> Result<PrefetchPolicy> {
+        match std::env::var("PREFETCH") {
+            Err(_) => Ok(PrefetchPolicy::Auto),
+            Ok(raw) if raw.trim().is_empty() => Ok(PrefetchPolicy::Auto),
+            Ok(raw) => PrefetchPolicy::parse(&raw)
+                .ok_or_else(|| anyhow!("PREFETCH='{raw}' is not auto|on|off")),
+        }
+    }
+
+    /// Whether the lane should stage the next round (`Auto` resolves to
+    /// on — parity is unconditional, so there is nothing to protect by
+    /// defaulting off).
+    pub fn enabled(self) -> bool {
+        self != PrefetchPolicy::Off
     }
 }
 
@@ -225,6 +280,10 @@ pub struct ExecPlane<'e> {
     /// batches live, not of the kernel lane)
     pub shards: Option<&'e ShardPool>,
     kind: PlaneKind,
+    /// whether the Sharded draw verb stages one round ahead on the
+    /// prefetch lane (resolved from the `prefetch=` key / `PREFETCH` env
+    /// by the coordinator; `Auto` = on)
+    prefetch: PrefetchPolicy,
 }
 
 impl<'e> ExecPlane<'e> {
@@ -258,7 +317,18 @@ impl<'e> ExecPlane<'e> {
                 PlaneKind::Sharded
             }
         };
-        Ok(ExecPlane { engine, shards, kind })
+        Ok(ExecPlane { engine, shards, kind, prefetch: PrefetchPolicy::default() })
+    }
+
+    /// Set the prefetch policy (builder; the coordinator resolves the
+    /// per-run key against the process policy before calling this).
+    pub fn with_prefetch(mut self, prefetch: PrefetchPolicy) -> ExecPlane<'e> {
+        self.prefetch = prefetch;
+        self
+    }
+
+    pub fn prefetch(&self) -> PrefetchPolicy {
+        self.prefetch
     }
 
     /// The `Auto` resolution (infallible): Sharded with a pool, Chained
@@ -269,12 +339,17 @@ impl<'e> ExecPlane<'e> {
 
     /// The single-engine chained plane (tests/benches).
     pub fn chained(engine: &'e mut Engine) -> ExecPlane<'e> {
-        ExecPlane { engine, shards: None, kind: PlaneKind::Chained }
+        ExecPlane {
+            engine,
+            shards: None,
+            kind: PlaneKind::Chained,
+            prefetch: PrefetchPolicy::default(),
+        }
     }
 
     /// The legacy per-block host plane (tests/benches/diagnostics).
     pub fn host(engine: &'e mut Engine) -> ExecPlane<'e> {
-        ExecPlane { engine, shards: None, kind: PlaneKind::Host }
+        ExecPlane { engine, shards: None, kind: PlaneKind::Host, prefetch: PrefetchPolicy::default() }
     }
 
     pub fn kind(&self) -> PlaneKind {
@@ -364,8 +439,10 @@ impl<'e> ExecPlane<'e> {
                 let pool = self
                     .shards
                     .ok_or_else(|| anyhow!("shard-resident streams need a shard pool"))?;
-                let pends: Vec<_> =
-                    (0..*m).map(|i| shard_draw_job(pool, i, d, b_local, mode)).collect();
+                let prefetch = self.prefetch.enabled();
+                let pends: Vec<_> = (0..*m)
+                    .map(|i| shard_draw_job(pool, i, d, b_local, mode, prefetch))
+                    .collect();
                 let mut out = Vec::with_capacity(*m);
                 for (i, pend) in pends.into_iter().enumerate() {
                     let (drawn, n, n_blocks, batch_meta) = pend.wait()?;
@@ -406,7 +483,7 @@ impl<'e> ExecPlane<'e> {
                     .shards
                     .ok_or_else(|| anyhow!("shard-resident streams need a shard pool"))?;
                 let (drawn, bn, n_blocks, batch_meta) =
-                    shard_draw_job(pool, i, d, n, mode).wait()?;
+                    shard_draw_job(pool, i, d, n, mode, self.prefetch.enabled()).wait()?;
                 let mut stub = MachineBatch::stub(d, bn, n_blocks, batch_meta);
                 charge_draw(meter, i, drawn, hold, &mut stub);
                 Ok(stub)
@@ -838,28 +915,30 @@ fn charge_draw(
     batch.held = if hold { drawn } else { 0 };
 }
 
-/// Submit machine `i`'s draw+pack to its owning shard: the stream
-/// advances on the shard, the batch packs on the shard's engine and is
-/// stored in the shard's batch map; only `(drawn, n, n_blocks, meta)` —
-/// pure bookkeeping — crosses back to the coordinator.
+/// Submit machine `i`'s draw+pack to its owning shard: the worker asks
+/// the shard's prefetch lane for the packed host blocks (a staged hit
+/// when the lane ran ahead, a synchronous draw+pack otherwise — identical
+/// samples either way; see `runtime::shard`), times the wait as this
+/// round's dispatch stall, uploads/fuses per `mode` on the shard's engine
+/// and stores the batch in the shard's batch map; only
+/// `(drawn, n, n_blocks, meta)` — pure bookkeeping — crosses back to the
+/// coordinator.
 fn shard_draw_job(
     pool: &ShardPool,
     i: usize,
     d: usize,
     n: usize,
     mode: PackMode,
+    prefetch: bool,
 ) -> Pending<(u64, usize, usize, ShardBatchMeta)> {
-    pool.submit(pool.shard_of(i), move |state| {
-        let samples = state
-            .streams
-            .get_mut(&i)
-            .ok_or_else(|| anyhow!("machine {i} has no stream on this shard"))?
-            .draw_many(n);
-        let drawn = samples.len() as u64;
-        let batch = MachineBatch::pack_mode(&mut state.engine, d, &samples, mode)?;
-        let reply = (drawn, batch.n, batch.n_blocks(), batch.shard_meta(i));
+    pool.submit_named(pool.shard_of(i), &format!("machine {i} draw"), move |state| {
+        let t0 = Instant::now();
+        let reply = state.lane.take(i, n, d, prefetch)?;
+        state.stalls.record(reply.hit, t0.elapsed().as_nanos() as u64);
+        let batch = MachineBatch::pack_blocks_mode(&mut state.engine, d, reply.blocks, mode)?;
+        let out = (reply.drawn, batch.n, batch.n_blocks(), batch.shard_meta(i));
         state.batches.insert(i, batch);
-        Ok(reply)
+        Ok(out)
     })
 }
 
@@ -1247,6 +1326,20 @@ mod tests {
         }
         assert_eq!(PlanePolicy::parse(" Host "), Some(PlanePolicy::Host));
         assert_eq!(PlanePolicy::parse("hots"), None);
+    }
+
+    #[test]
+    fn prefetch_policy_parses_and_resolves() {
+        for p in [PrefetchPolicy::Auto, PrefetchPolicy::On, PrefetchPolicy::Off] {
+            assert_eq!(PrefetchPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(PrefetchPolicy::parse(" ON "), Some(PrefetchPolicy::On));
+        assert_eq!(PrefetchPolicy::parse("of"), None);
+        // Auto resolves to on: parity is unconditional, only stalls differ
+        assert!(PrefetchPolicy::Auto.enabled());
+        assert!(PrefetchPolicy::On.enabled());
+        assert!(!PrefetchPolicy::Off.enabled());
+        assert_eq!(PrefetchPolicy::default(), PrefetchPolicy::Auto);
     }
 
     #[test]

@@ -30,32 +30,74 @@
 //! the host (`comm::Network`), which is the same operation sequence the
 //! sequential path performs — results are bit-identical for every shard
 //! count. See `objective::fan_machines` for the fan/join helper.
+//!
+//! # The prefetch lane
+//!
+//! Every worker has a companion **prefetch lane** thread that owns the
+//! shard's [`crate::data::SampleStream`]s (streams are installed on the
+//! lane, not the worker — see [`ShardPool::install_stream`]). The lane is
+//! host-only: it draws round t+1's samples and packs them into staged
+//! [`Block`]s while the engine thread is dispatching round t; the engine
+//! thread's draw job then merely collects the staged pack over the
+//! handoff channel ([`LaneClient::take`]) and does the engine-affine
+//! fuse+upload itself. Stages are one-deep per machine and the lane
+//! re-draws a machine's last request right after serving it, which is
+//! exactly double buffering: one pack in flight on the lane, one being
+//! consumed by the engine.
+//!
+//! **Why bit-parity holds.** The lane never invents or reorders draws: a
+//! take with a cold stage draws synchronously (the fallback — also the
+//! entire behavior when prefetch is off), and a warm stage holds exactly
+//! the `draw_many(n)` result the next same-sized request would have
+//! produced, because requests arrive per machine in submission order and
+//! each speculative draw is consumed by the next request before another
+//! speculation may start. A request whose size differs from the staged
+//! pack pushes the staged *samples* back into a leftover queue and
+//! re-serves from it — bit-exact whenever the stream's `draw_many`
+//! decomposes into single draws ([`crate::data::SampleStream::
+//! draws_decompose`]); epoch-batching streams (where re-splitting would
+//! change epoch boundaries) refuse with an error naming `prefetch=off`.
+//! One trailing speculative draw per machine can remain un-consumed at
+//! run end; it is never metered (only served takes charge samples) and
+//! the stream dies with the run's `clear_machines`, so no later run can
+//! observe it.
+//!
+//! The engine thread's wait inside `take` is the **dispatch stall** the
+//! lane exists to hide; each worker meters it (plus stage hit/miss
+//! counts) in its [`StallMeter`], gathered per run via
+//! [`ShardPool::gathered_stalls`].
 
 use super::{Engine, EngineStats};
+use crate::accounting::StallMeter;
+use crate::data::blocks::{pack_all, Block};
+use crate::data::{Sample, SampleStream};
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
 
 /// Everything a worker thread owns: its private engine, the device state
-/// of the machines assigned to its shard, and those machines' sample
-/// streams (the DataPlane's shard-resident side). Lives on the worker
+/// of the machines assigned to its shard, and the handle to its prefetch
+/// lane (which owns those machines' sample streams). Lives on the worker
 /// thread only — jobs receive `&mut ShardState` and must keep it there.
 pub struct ShardState {
     pub engine: Engine,
     /// machine id -> that machine's current packed batch (replaced on
     /// every fresh draw; cleared between runs)
     pub batches: HashMap<usize, crate::objective::MachineBatch>,
-    /// machine id -> that machine's sample stream, installed at context
-    /// construction (cleared between runs). The plane's draw verb
-    /// advances it and packs the drawn samples here, on this engine — no
-    /// coordinator-side sample materialization for shard-owned machines.
-    pub streams: HashMap<usize, Box<dyn crate::data::SampleStream>>,
     /// held-out evaluator segments owned by this shard (segment id ->
     /// grad-only batch; packed once per run context, cleared between
     /// runs) — the sharded `Evaluator` fan reads these
     pub eval: HashMap<usize, crate::objective::MachineBatch>,
+    /// this shard's prefetch lane: the draw verb takes staged packs from
+    /// it (or has it draw synchronously when prefetch is off / the stage
+    /// is cold) and fuses+uploads them on `engine`
+    pub lane: LaneClient,
+    /// per-run draw staging counters (dispatch stall, stage hits/misses);
+    /// reset by `clear_machines`
+    pub stalls: StallMeter,
 }
 
 impl ShardState {
@@ -92,9 +134,199 @@ pub struct Pending<T> {
 
 impl<T> Pending<T> {
     pub fn wait(self) -> Result<T> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("shard worker died before replying (panicked job?)"))?
+        self.rx.recv().map_err(|_| anyhow!("shard worker is gone (pool shut down?)"))?
+    }
+}
+
+/// One message to a shard's prefetch lane thread.
+enum LaneCmd {
+    /// Move machine `i`'s stream onto the lane (context construction).
+    Install(usize, Box<dyn SampleStream>),
+    /// Serve machine `machine` its next `n`-sample pack at block dim `d`;
+    /// the engine thread blocks on `reply`. With `prefetch` set, the lane
+    /// immediately re-draws the same request into the stage afterwards
+    /// (the double buffer).
+    Take {
+        machine: usize,
+        n: usize,
+        d: usize,
+        prefetch: bool,
+        reply: mpsc::Sender<Result<TakeReply>>,
+    },
+    /// Drop all streams, stages, leftovers and queued refills (between
+    /// runs).
+    Clear { reply: mpsc::Sender<()> },
+}
+
+/// What a take hands back to the engine thread: host-packed blocks ready
+/// for the engine-affine fuse+upload, the honest drawn count (short at an
+/// epoch boundary), and whether the stage was warm.
+pub struct TakeReply {
+    pub blocks: Vec<Block>,
+    pub drawn: u64,
+    pub hit: bool,
+}
+
+/// Handle to one shard's prefetch lane (cloneable: the pool keeps one for
+/// stream installs, the worker's [`ShardState`] one for takes).
+#[derive(Clone)]
+pub struct LaneClient {
+    tx: mpsc::Sender<LaneCmd>,
+}
+
+impl LaneClient {
+    /// Ask the lane for machine `machine`'s next `n`-sample pack and
+    /// block until it arrives. The caller times this wait — it is the
+    /// dispatch stall.
+    pub fn take(&self, machine: usize, n: usize, d: usize, prefetch: bool) -> Result<TakeReply> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(LaneCmd::Take { machine, n, d, prefetch, reply })
+            .map_err(|_| anyhow!("prefetch lane for machine {machine} is gone"))?;
+        rx.recv().map_err(|_| anyhow!("prefetch lane died before replying (machine {machine})"))?
+    }
+}
+
+/// A speculatively drawn pack, one-deep per machine. The samples are kept
+/// alongside the packed blocks so a mismatched follow-up request can push
+/// them back (leftover queue) instead of losing them.
+struct Staged {
+    n_request: usize,
+    d: usize,
+    samples: Vec<Sample>,
+    blocks: Vec<Block>,
+}
+
+/// The lane thread's state: the shard's streams plus staging buffers.
+#[derive(Default)]
+struct LaneState {
+    streams: HashMap<usize, Box<dyn SampleStream>>,
+    staged: HashMap<usize, Staged>,
+    /// samples pushed back from a mismatched stage, served before any new
+    /// stream draw (preserves the draw order bit-for-bit)
+    leftovers: HashMap<usize, VecDeque<Sample>>,
+    /// queued speculative refills `(machine, n, d)`, run only when no
+    /// command is waiting
+    want: VecDeque<(usize, usize, usize)>,
+}
+
+impl LaneState {
+    fn handle(&mut self, cmd: LaneCmd) {
+        match cmd {
+            LaneCmd::Install(i, stream) => {
+                self.staged.remove(&i);
+                self.leftovers.remove(&i);
+                self.streams.insert(i, stream);
+            }
+            LaneCmd::Take { machine, n, d, prefetch, reply } => {
+                let res = self.serve_take(machine, n, d);
+                let ok = res.is_ok();
+                let _ = reply.send(res);
+                if prefetch && ok {
+                    self.want.push_back((machine, n, d));
+                }
+            }
+            LaneCmd::Clear { reply } => {
+                self.streams.clear();
+                self.staged.clear();
+                self.leftovers.clear();
+                self.want.clear();
+                let _ = reply.send(());
+            }
+        }
+    }
+
+    fn serve_take(&mut self, i: usize, n: usize, d: usize) -> Result<TakeReply> {
+        if let Some(stage) = self.staged.remove(&i) {
+            if stage.n_request == n && stage.d == d {
+                return Ok(TakeReply {
+                    drawn: stage.samples.len() as u64,
+                    blocks: stage.blocks,
+                    hit: true,
+                });
+            }
+            // mismatched speculation: re-splitting the read-ahead only
+            // changes no bits when draw_many decomposes into single draws
+            let decomposes = self.streams.get(&i).map(|s| s.draws_decompose()).unwrap_or(false);
+            anyhow::ensure!(
+                decomposes,
+                "prefetch staged a {}-sample pack for machine {i} but the next draw \
+                 requested {n}; this stream's epoch batching cannot re-split a read-ahead \
+                 bit-identically — rerun with prefetch=off",
+                stage.n_request
+            );
+            // the staged samples were drawn (leftovers-then-stream) before
+            // anything still sitting in the leftover queue, so they go to
+            // the FRONT to restore the draw order exactly
+            let left = self.leftovers.entry(i).or_default();
+            for s in stage.samples.into_iter().rev() {
+                left.push_front(s);
+            }
+        }
+        let samples = self.draw_samples(i, n)?;
+        let blocks = pack_all(&samples, d);
+        Ok(TakeReply { drawn: samples.len() as u64, blocks, hit: false })
+    }
+
+    /// Draw `n` samples for machine `i`: leftovers first (pushed-back
+    /// read-ahead), then the stream — the exact order a lane-less draw
+    /// sequence would have produced.
+    fn draw_samples(&mut self, i: usize, n: usize) -> Result<Vec<Sample>> {
+        let stream = self
+            .streams
+            .get_mut(&i)
+            .ok_or_else(|| anyhow!("machine {i} has no stream on this shard"))?;
+        let mut out = Vec::with_capacity(n);
+        if let Some(left) = self.leftovers.get_mut(&i) {
+            while out.len() < n {
+                match left.pop_front() {
+                    Some(s) => out.push(s),
+                    None => break,
+                }
+            }
+        }
+        if out.len() < n {
+            out.extend(stream.draw_many(n - out.len()));
+        }
+        Ok(out)
+    }
+
+    /// Run one queued speculative draw. A still-warm stage means the last
+    /// speculation was never consumed — drawing again would lose samples,
+    /// so the refill is dropped (the next take will miss, never misdraw).
+    fn refill(&mut self, i: usize, n: usize, d: usize) {
+        if self.staged.contains_key(&i) || !self.streams.contains_key(&i) {
+            return;
+        }
+        let samples = match self.draw_samples(i, n) {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let blocks = pack_all(&samples, d);
+        self.staged.insert(i, Staged { n_request: n, d, samples, blocks });
+    }
+}
+
+fn lane_main(rx: mpsc::Receiver<LaneCmd>) {
+    let mut st = LaneState::default();
+    loop {
+        // a queued take must never wait behind speculative work: drain
+        // every pending command, then do at most ONE refill, then re-check
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => st.handle(cmd),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return,
+            }
+        }
+        if let Some((i, n, d)) = st.want.pop_front() {
+            st.refill(i, n, d);
+            continue;
+        }
+        match rx.recv() {
+            Ok(cmd) => st.handle(cmd),
+            Err(_) => return,
+        }
     }
 }
 
@@ -103,10 +335,17 @@ struct Worker {
     handle: Option<thread::JoinHandle<()>>,
 }
 
-/// A fixed pool of worker threads, each owning one [`Engine`] (see module
-/// docs). Dropping the pool shuts the workers down and joins them.
+struct Lane {
+    tx: mpsc::Sender<LaneCmd>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+/// A fixed pool of worker threads, each owning one [`Engine`] plus a
+/// companion prefetch lane thread (see module docs). Dropping the pool
+/// shuts the workers down, then the lanes, and joins them all.
 pub struct ShardPool {
     workers: Vec<Worker>,
+    lanes: Vec<Lane>,
 }
 
 impl ShardPool {
@@ -116,19 +355,27 @@ impl ShardPool {
     pub fn new(shards: usize, artifacts_dir: &Path) -> Result<ShardPool> {
         anyhow::ensure!(shards >= 1, "shard pool needs at least one worker");
         let mut workers = Vec::with_capacity(shards);
+        let mut lanes = Vec::with_capacity(shards);
         let mut readies = Vec::with_capacity(shards);
         for s in 0..shards {
+            let (lane_tx, lane_rx) = mpsc::channel::<LaneCmd>();
+            let lane_handle = thread::Builder::new()
+                .name(format!("shard-{s}-lane"))
+                .spawn(move || lane_main(lane_rx))
+                .with_context(|| format!("spawning prefetch lane {s}"))?;
+            lanes.push(Lane { tx: lane_tx.clone(), handle: Some(lane_handle) });
+            let lane = LaneClient { tx: lane_tx };
             let (tx, rx) = mpsc::channel::<Job>();
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
             let dir: PathBuf = artifacts_dir.to_path_buf();
             let handle = thread::Builder::new()
                 .name(format!("shard-{s}"))
-                .spawn(move || worker_main(rx, dir, ready_tx))
+                .spawn(move || worker_main(rx, dir, ready_tx, lane))
                 .with_context(|| format!("spawning shard worker {s}"))?;
             workers.push(Worker { tx, handle: Some(handle) });
             readies.push(ready_rx);
         }
-        let pool = ShardPool { workers };
+        let pool = ShardPool { workers, lanes };
         for (s, ready) in readies.into_iter().enumerate() {
             ready
                 .recv()
@@ -155,9 +402,31 @@ impl ShardPool {
         shard: usize,
         f: impl FnOnce(&mut ShardState) -> Result<T> + Send + 'static,
     ) -> Pending<T> {
+        self.submit_named(shard, "shard job", f)
+    }
+
+    /// [`ShardPool::submit`] with a label naming the job in failure
+    /// reports. The closure runs under `catch_unwind`, so a panicking job
+    /// no longer kills its worker silently: the panic message (and the
+    /// label saying which machine/verb) travels back through the reply
+    /// channel and the worker stays up for subsequent jobs.
+    pub fn submit_named<T: Send + 'static>(
+        &self,
+        shard: usize,
+        label: &str,
+        f: impl FnOnce(&mut ShardState) -> Result<T> + Send + 'static,
+    ) -> Pending<T> {
+        let label = label.to_string();
         let (tx, rx) = mpsc::channel::<Result<T>>();
         let job: Job = Box::new(move |state| {
-            let _ = tx.send(f(state));
+            // AssertUnwindSafe: a panicking job may leave its own
+            // machine's shard state partially updated; the run that hit
+            // the panic is abandoned and `clear_machines` rebuilds state
+            // before the next one
+            let result = catch_unwind(AssertUnwindSafe(|| f(state))).unwrap_or_else(|payload| {
+                Err(anyhow!("{label} panicked on its shard worker: {}", panic_message(&*payload)))
+            });
+            let _ = tx.send(result);
         });
         // a dead worker drops the job (and with it the reply sender), so
         // `wait` surfaces the failure instead of hanging
@@ -171,19 +440,31 @@ impl ShardPool {
         machine: usize,
         f: impl FnOnce(&mut ShardState) -> Result<T> + Send + 'static,
     ) -> Result<T> {
-        self.submit(self.shard_of(machine), f).wait()
+        self.submit_named(self.shard_of(machine), &format!("machine {machine} job"), f).wait()
     }
 
-    /// Drop every shard-resident machine batch, sample stream, evaluator
-    /// segment and session slot (between runs: stale machine state from a
-    /// previous experiment must not outlive it).
+    /// Install machine `machine`'s sample stream on its shard's prefetch
+    /// lane. Safe to call before submitting draw jobs: the install is
+    /// enqueued on the lane channel ahead of any take those jobs send.
+    pub fn install_stream(&self, machine: usize, stream: Box<dyn SampleStream>) -> Result<()> {
+        let shard = self.shard_of(machine);
+        self.lanes[shard]
+            .tx
+            .send(LaneCmd::Install(machine, stream))
+            .map_err(|_| anyhow!("prefetch lane {shard} is gone"))
+    }
+
+    /// Drop every shard-resident machine batch, sample stream (lane-side),
+    /// staged pack, evaluator segment and session slot, and zero the stall
+    /// meters (between runs: stale machine state from a previous
+    /// experiment must not outlive it, and stall numbers are per-run).
     pub fn clear_machines(&self) -> Result<()> {
         let pends: Vec<Pending<()>> = (0..self.shards())
             .map(|s| {
-                self.submit(s, |state| {
+                self.submit_named(s, "clear shard state", |state| {
                     state.batches.clear();
-                    state.streams.clear();
                     state.eval.clear();
+                    state.stalls = StallMeter::default();
                     state.engine.reset_session();
                     Ok(())
                 })
@@ -191,6 +472,13 @@ impl ShardPool {
             .collect();
         for p in pends {
             p.wait()?;
+        }
+        for (s, lane) in self.lanes.iter().enumerate() {
+            let (reply, rx) = mpsc::channel::<()>();
+            lane.tx
+                .send(LaneCmd::Clear { reply })
+                .map_err(|_| anyhow!("prefetch lane {s} is gone"))?;
+            rx.recv().map_err(|_| anyhow!("prefetch lane {s} died during clear"))?;
         }
         Ok(())
     }
@@ -213,11 +501,30 @@ impl ShardPool {
         }
         Ok(total)
     }
+
+    /// Per-shard draw-staging counters (dispatch stall, stage hit/miss),
+    /// gathered in shard order. Per-run: zeroed by `clear_machines`.
+    pub fn per_shard_stalls(&self) -> Result<Vec<StallMeter>> {
+        let pends: Vec<Pending<StallMeter>> = (0..self.shards())
+            .map(|s| self.submit(s, |state| Ok(state.stalls.clone())))
+            .collect();
+        pends.into_iter().map(|p| p.wait()).collect()
+    }
+
+    /// All shards' stall meters folded into one cluster total.
+    pub fn gathered_stalls(&self) -> Result<StallMeter> {
+        let mut total = StallMeter::default();
+        for s in self.per_shard_stalls()? {
+            total.merge(&s);
+        }
+        Ok(total)
+    }
 }
 
 impl Drop for ShardPool {
     fn drop(&mut self) {
-        // closing the channels ends the worker loops; then join
+        // closing the channels ends the worker loops; workers first (they
+        // hold lane clients and may have takes in flight), then the lanes
         for w in &mut self.workers {
             let (dead_tx, _) = mpsc::channel::<Job>();
             w.tx = dead_tx; // drop the live sender
@@ -227,10 +534,29 @@ impl Drop for ShardPool {
                 let _ = h.join();
             }
         }
+        for l in &mut self.lanes {
+            let (dead_tx, _) = mpsc::channel::<LaneCmd>();
+            l.tx = dead_tx;
+        }
+        for l in &mut self.lanes {
+            if let Some(h) = l.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
-fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result<()>>) {
+fn panic_message(payload: &dyn std::any::Any) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result<()>>, lane: LaneClient) {
     let engine = match Engine::new(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -242,8 +568,9 @@ fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result
     let mut state = ShardState {
         engine,
         batches: HashMap::new(),
-        streams: HashMap::new(),
         eval: HashMap::new(),
+        lane,
+        stalls: StallMeter::default(),
     };
     while let Ok(job) = rx.recv() {
         job(&mut state);
@@ -253,8 +580,169 @@ fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result
 #[cfg(test)]
 mod tests {
     // ShardPool needs compiled artifacts; behavioural coverage lives in
-    // rust/tests/shard_parity.rs. The pure helpers are testable here.
+    // rust/tests/shard_parity.rs and rust/tests/prefetch_parity.rs. The
+    // prefetch lane is host-only (no engine), so its staging protocol is
+    // fully testable here.
     use super::*;
+    use crate::data::sampler::VecStream;
+    use crate::data::synth::{SynthSpec, SynthStream};
+    use crate::data::Loss;
+    use crate::util::prng::Prng;
+
+    fn spawn_lane() -> (LaneClient, thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel::<LaneCmd>();
+        let h = thread::spawn(move || lane_main(rx));
+        (LaneClient { tx }, h)
+    }
+
+    fn block_ys(blocks: &[Block]) -> Vec<f32> {
+        blocks.iter().flat_map(|b| b.y[..b.valid].to_vec()).collect()
+    }
+
+    fn ys(samples: &[Sample]) -> Vec<f32> {
+        samples.iter().map(|s| s.y).collect()
+    }
+
+    fn tiny_epoch_stream() -> VecStream {
+        let samples: Vec<Sample> =
+            (0..5).map(|i| Sample { x: vec![i as f32], y: i as f32 }).collect();
+        VecStream::epoch_bounded(samples, Loss::Squared, Prng::seed_from_u64(11))
+    }
+
+    #[test]
+    fn lane_thread_serves_the_exact_draw_sequence() {
+        let (client, h) = spawn_lane();
+        client
+            .tx
+            .send(LaneCmd::Install(3, Box::new(SynthStream::new(SynthSpec::least_squares(8), 42))))
+            .unwrap();
+        let mut reference = SynthStream::new(SynthSpec::least_squares(8), 42);
+        let mut first_hit = true;
+        for _ in 0..5 {
+            let reply = client.take(3, 300, 8, true).unwrap();
+            let want = reference.draw_many(300);
+            assert_eq!(reply.drawn as usize, want.len());
+            assert_eq!(block_ys(&reply.blocks), ys(&want));
+            if first_hit {
+                assert!(!reply.hit, "the first take is a cold miss");
+                first_hit = false;
+            }
+        }
+        drop(client);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn lane_thread_resplits_mismatched_sizes_bit_exactly() {
+        // whether each take lands on a warm stage (leftover re-split) or a
+        // cold one (synchronous draw) is timing-dependent; EITHER path must
+        // serve the exact draw sequence of a lane-less stream
+        let (client, h) = spawn_lane();
+        client
+            .tx
+            .send(LaneCmd::Install(0, Box::new(SynthStream::new(SynthSpec::least_squares(4), 7))))
+            .unwrap();
+        let mut reference = SynthStream::new(SynthSpec::least_squares(4), 7);
+        for &n in &[300usize, 100, 37, 300, 513] {
+            let reply = client.take(0, n, 4, true).unwrap();
+            let want = reference.draw_many(n);
+            assert_eq!(reply.drawn as usize, n);
+            assert_eq!(block_ys(&reply.blocks), ys(&want), "request size {n}");
+        }
+        drop(client);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn warm_stage_hits_and_serves_identical_samples() {
+        let mut st = LaneState::default();
+        st.handle(LaneCmd::Install(0, Box::new(SynthStream::new(SynthSpec::least_squares(4), 9))));
+        let mut reference = SynthStream::new(SynthSpec::least_squares(4), 9);
+        let r1 = st.serve_take(0, 10, 4).unwrap();
+        assert!(!r1.hit, "cold stage draws synchronously");
+        assert_eq!(block_ys(&r1.blocks), ys(&reference.draw_many(10)));
+        st.refill(0, 10, 4);
+        let r2 = st.serve_take(0, 10, 4).unwrap();
+        assert!(r2.hit, "refilled stage serves warm");
+        assert_eq!(block_ys(&r2.blocks), ys(&reference.draw_many(10)));
+    }
+
+    #[test]
+    fn mismatched_resplit_on_decomposable_stream_preserves_order() {
+        let mut st = LaneState::default();
+        st.handle(LaneCmd::Install(0, Box::new(SynthStream::new(SynthSpec::least_squares(4), 5))));
+        let mut reference = SynthStream::new(SynthSpec::least_squares(4), 5);
+        // stage 300, consume 100 (leftovers keep 200), restage 100 from
+        // leftovers, then mismatch again — the push-back must go to the
+        // FRONT so the remaining leftover suffix stays behind it
+        st.refill(0, 300, 4);
+        let r1 = st.serve_take(0, 100, 4).unwrap();
+        assert!(!r1.hit);
+        assert_eq!(block_ys(&r1.blocks), ys(&reference.draw_many(100)));
+        st.refill(0, 100, 4);
+        let r2 = st.serve_take(0, 37, 4).unwrap();
+        assert_eq!(block_ys(&r2.blocks), ys(&reference.draw_many(37)));
+        let r3 = st.serve_take(0, 400, 4).unwrap();
+        assert_eq!(block_ys(&r3.blocks), ys(&reference.draw_many(400)));
+    }
+
+    #[test]
+    fn epoch_bounded_streams_stage_short_batches_exactly() {
+        let mut st = LaneState::default();
+        st.handle(LaneCmd::Install(1, Box::new(tiny_epoch_stream())));
+        let mut reference = tiny_epoch_stream();
+        // 5 samples drawn 3 at a time: 3, short 2, fresh epoch's 3 — the
+        // warm stage carries the short batch with its honest drawn count
+        for round in 0..4 {
+            st.refill(1, 3, 4);
+            let reply = st.serve_take(1, 3, 4).unwrap();
+            let want = reference.draw_many(3);
+            assert!(reply.hit || round == 0);
+            assert_eq!(reply.drawn as usize, want.len());
+            assert_eq!(block_ys(&reply.blocks), ys(&want), "round {round}");
+        }
+    }
+
+    #[test]
+    fn mismatched_resplit_of_epoch_batched_stream_errors() {
+        let mut st = LaneState::default();
+        st.handle(LaneCmd::Install(0, Box::new(tiny_epoch_stream())));
+        st.refill(0, 3, 4);
+        let err = st.serve_take(0, 2, 4).unwrap_err().to_string();
+        assert!(err.contains("prefetch=off"), "{err}");
+    }
+
+    #[test]
+    fn refill_never_overwrites_a_live_stage() {
+        let mut st = LaneState::default();
+        st.handle(LaneCmd::Install(0, Box::new(SynthStream::new(SynthSpec::least_squares(4), 3))));
+        let mut reference = SynthStream::new(SynthSpec::least_squares(4), 3);
+        st.refill(0, 8, 4);
+        st.refill(0, 8, 4); // dropped: the first stage is still warm
+        assert_eq!(block_ys(&st.serve_take(0, 8, 4).unwrap().blocks), ys(&reference.draw_many(8)));
+        assert_eq!(block_ys(&st.serve_take(0, 8, 4).unwrap().blocks), ys(&reference.draw_many(8)));
+    }
+
+    #[test]
+    fn clear_drops_streams_stages_and_queued_refills() {
+        let mut st = LaneState::default();
+        st.handle(LaneCmd::Install(0, Box::new(SynthStream::new(SynthSpec::least_squares(4), 1))));
+        st.refill(0, 4, 4);
+        st.want.push_back((0, 4, 4));
+        let (reply, rx) = mpsc::channel();
+        st.handle(LaneCmd::Clear { reply });
+        rx.recv().unwrap();
+        assert!(st.streams.is_empty() && st.staged.is_empty() && st.want.is_empty());
+        let err = st.serve_take(0, 4, 4).unwrap_err().to_string();
+        assert!(err.contains("no stream"), "{err}");
+    }
+
+    #[test]
+    fn panic_messages_downcast() {
+        assert_eq!(panic_message(&"boom"), "boom");
+        assert_eq!(panic_message(&String::from("kaboom")), "kaboom");
+        assert_eq!(panic_message(&42usize), "non-string panic payload");
+    }
 
     #[test]
     fn shard_of_is_a_partition() {

@@ -171,6 +171,9 @@ fn sharded_draw_packs_expected_fork_samples() {
         m,
         n_budget: 4096,
         data_path: None,
+        drift_omega: None,
+        pareto_alpha: None,
+        sparse_density: None,
     };
     let family = scenario::by_name("heavy-tail").unwrap().build(&params).unwrap();
     let w: Vec<f32> = (0..d).map(|j| (j as f32 * 0.1).cos() * 0.05).collect();

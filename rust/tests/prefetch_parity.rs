@@ -1,0 +1,209 @@
+//! Prefetch-lane parity: `prefetch=on` vs `prefetch=off` is a pure
+//! scheduling change. The lane's staged packs must serve the EXACT
+//! samples a synchronous draw would have produced — so iterates,
+//! objective curves, sample/memory meters, and simulated time are
+//! bit-identical either way, at every shard count, for streaming and
+//! finite-ERM (ragged epoch boundary) scenarios, and under mismatched
+//! draw sizes that force the stage-to-leftover re-split. Only the
+//! wall-clock [`StallMeter`] is allowed to differ (it is excluded from
+//! the parity surface — see `runtime::shard`).
+//!
+//! Requires `make artifacts`.
+
+use mbprox::algos::RunResult;
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::objective::mean_grad_chained_host;
+use mbprox::runtime::{Engine, PlanePolicy, PrefetchPolicy, ShardPool};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Run `cfg` on a fresh sharded runner under an explicit prefetch policy.
+fn run_with(prefetch: PrefetchPolicy, shards: usize, cfg: &ExperimentConfig) -> RunResult {
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("run `make artifacts` before cargo test"))
+        .with_plane(PlanePolicy::Sharded)
+        .with_shards(ShardPool::new(shards, &dir).expect("shard pool construction"))
+        .with_prefetch(prefetch);
+    r.run(cfg).unwrap_or_else(|e| {
+        panic!("{} (prefetch={}, shards={shards}): {e:?}", cfg.method, prefetch.as_str())
+    })
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full bitwise identity on everything except the wall-clock stall meter.
+fn assert_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(bits32(&a.w), bits32(&b.w), "{label}: final iterate bits");
+    assert_eq!(a.report, b.report, "{label}: ClusterMeter report");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{label}: simulated time");
+    assert_eq!(a.curve.len(), b.curve.len(), "{label}: curve length");
+    for (p, q) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(p.samples_total, q.samples_total, "{label}: curve samples");
+        assert_eq!(p.comm_rounds, q.comm_rounds, "{label}: curve rounds");
+        assert_eq!(p.vec_ops, q.vec_ops, "{label}: curve vec ops");
+        match (p.objective, q.objective) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: objective bits")
+            }
+            (None, None) => {}
+            other => panic!("{label}: objective presence mismatch {other:?}"),
+        }
+    }
+}
+
+/// on vs off at shards ∈ {1, 2, 4} — the off run at shards=1 is the one
+/// reference every other leg must match bit for bit.
+fn prefetch_parity(cfg: &ExperimentConfig) {
+    let reference = run_with(PrefetchPolicy::Off, 1, cfg);
+    for n in [1usize, 2, 4] {
+        let off = run_with(PrefetchPolicy::Off, n, cfg);
+        let on = run_with(PrefetchPolicy::On, n, cfg);
+        assert_identical(&reference, &off, &format!("{} off shards={n}", cfg.method));
+        assert_identical(&reference, &on, &format!("{} on shards={n}", cfg.method));
+    }
+}
+
+#[test]
+fn streaming_drift_on_off_parity() {
+    // b = 300 -> one full block + a 44-row ragged tail per machine draw;
+    // constant-b draws mean every warm stage is an exact-size hit
+    let cfg = ExperimentConfig {
+        method: "mp-dsvrg".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 300,
+        n_budget: 2400, // T = 2
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    prefetch_parity(&cfg);
+}
+
+#[test]
+fn erm_fixed_ragged_epoch_on_off_parity() {
+    // 2051 fixed samples shard 513/513/513/512: the epoch-bounded streams
+    // return honestly-short boundary batches, and `prefetch=on` must
+    // stage exactly those short batches (epoch-bounded streams do not
+    // decompose, so only exact-request staging is ever used)
+    let cfg = ExperimentConfig {
+        method: "dsvrg-erm".into(),
+        scenario: Some("erm-fixed".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 256,
+        n_budget: 2051,
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        // the config-key path (rather than Runner::with_prefetch): the
+        // per-run key must beat the runner's Auto default
+        prefetch: PrefetchPolicy::On,
+        ..ExperimentConfig::default()
+    };
+    let via_cfg = {
+        let dir = artifacts_dir();
+        let mut r = Runner::new(Engine::new(&dir).expect("engine"))
+            .with_plane(PlanePolicy::Sharded)
+            .with_shards(ShardPool::new(2, &dir).expect("pool"));
+        r.run(&cfg).expect("erm-fixed with prefetch=on from the config")
+    };
+    let cfg_default = ExperimentConfig { prefetch: PrefetchPolicy::Auto, ..cfg.clone() };
+    let off = run_with(PrefetchPolicy::Off, 2, &cfg_default);
+    assert_identical(&off, &via_cfg, "erm-fixed cfg-key prefetch=on");
+    prefetch_parity(&cfg_default);
+}
+
+/// Mismatched draw sizes force the stage-to-leftover re-split: a staged
+/// 300-sample pack answered by a 200-sample request must be torn down
+/// into the leftover queue and re-served in draw order. The packed
+/// gradients (chained kernels: bit-identical across engines) pin the
+/// served samples bit for bit against the synchronous path.
+#[test]
+fn mismatched_draw_sizes_resplit_bitwise() {
+    let grads_with = |prefetch: PrefetchPolicy| -> Vec<Vec<u32>> {
+        let dir = artifacts_dir();
+        let (d, m) = (64usize, 4usize);
+        let mut r = Runner::new(Engine::new(&dir).expect("engine"))
+            .with_plane(PlanePolicy::Sharded)
+            .with_shards(ShardPool::new(2, &dir).expect("pool"))
+            .with_prefetch(prefetch);
+        let cfg = ExperimentConfig {
+            method: "minibatch-sgd".into(),
+            scenario: Some("heavy-tail".into()),
+            loss: Loss::Squared,
+            m,
+            b_local: 300,
+            dim: d,
+            seed: 99,
+            eval_samples: 64,
+            ..ExperimentConfig::default()
+        };
+        let mut ctx = r.context(&cfg).unwrap();
+        let w: Vec<f32> = (0..d).map(|j| (j as f32 * 0.1).cos() * 0.05).collect();
+        // 300 stages 300; asking 200 splits the stage; 44 rides the
+        // leftover tail; 300 spans leftovers + a fresh draw
+        [300usize, 200, 44, 300]
+            .into_iter()
+            .map(|b| {
+                let batches = ctx.draw_batches_grad_only(b, false).unwrap();
+                let mut net = Network::new(m, NetModel::default());
+                let g = mean_grad_chained_host(
+                    ctx.plane.engine,
+                    ctx.plane.shards,
+                    Loss::Squared,
+                    &batches,
+                    &w,
+                    &mut net,
+                    &mut ctx.meter,
+                )
+                .unwrap();
+                bits32(&g)
+            })
+            .collect()
+    };
+    let off = grads_with(PrefetchPolicy::Off);
+    let on = grads_with(PrefetchPolicy::On);
+    assert_eq!(off, on, "re-split staged samples must preserve draw order bit for bit");
+}
+
+/// The stall meter itself: surfaced on sharded runs, honest about the
+/// policy that ran, and never part of the parity surface above.
+#[test]
+fn stall_meter_reports_the_policy_that_ran() {
+    let cfg = ExperimentConfig {
+        method: "minibatch-sgd".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 256,
+        n_budget: 4096, // 4 outer steps of drawing
+        dim: 64,
+        seed: 11,
+        eval_samples: 64,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    };
+    let off = run_with(PrefetchPolicy::Off, 2, &cfg);
+    let s_off = off.stalls.expect("sharded runs surface a stall meter");
+    assert!(s_off.takes > 0, "draws must be routed through the lane");
+    assert_eq!(s_off.hits, 0, "prefetch=off never serves from a stage");
+    assert_eq!(s_off.takes, s_off.misses, "off: every take is a synchronous miss");
+
+    let on = run_with(PrefetchPolicy::On, 2, &cfg);
+    let s_on = on.stalls.expect("sharded runs surface a stall meter");
+    assert_eq!(s_on.takes, s_off.takes, "identical draw schedule either way");
+    assert_eq!(s_on.hits + s_on.misses, s_on.takes, "hits and misses partition takes");
+}
