@@ -10,8 +10,10 @@
 //! wall-clock must beat shards=1 on the multi-machine workload), and the
 //! DataPlane draw verb's draw+pack throughput (sequential vs
 //! shard-resident draws, with the held draw's per-machine peak-vector
-//! meter recorded), and the prefetch lane's dispatch-stall comparison
-//! (prefetch on vs off: takes, hit rates, per-shard stall time). Writes
+//! meter recorded), the prefetch lane's dispatch-stall comparison
+//! (prefetch on vs off: takes, hit rates, per-shard stall time), and the
+//! batched-fan pipeline comparison (pipeline on vs off: overlap meters,
+//! per-shard overlap time, serialized-vs-pipelined wall-clock). Writes
 //! `BENCH_runtime.json` (stats + engine traffic counters) so the perf
 //! trajectory is trackable across PRs; CI diffs the counters against the
 //! committed `BENCH_baseline.json` via the `bench_gate` binary.
@@ -600,6 +602,105 @@ fn main() {
                 "prefetch on ({:.1}ms stalled) must beat off ({:.1}ms stalled)",
                 on.stall_ns as f64 / 1e6,
                 off.stall_ns as f64 / 1e6
+            );
+        }
+    }
+
+    section("pipelined shard dispatch (batched fans, pipeline on vs off)");
+    {
+        use mbprox::accounting::OverlapMeter;
+        use mbprox::config::ExperimentConfig;
+        use mbprox::runtime::{
+            default_artifacts_dir, Engine, PipelinePolicy, PrefetchPolicy, ShardPool,
+        };
+        use mbprox::util::benchkit::BenchStats;
+
+        let dir = default_artifacts_dir();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let n_shards = cores.min(4).max(1);
+        let m = 8usize;
+        let b = 2048usize; // 8 blocks per machine per draw — pack-heavy
+        let cfg = ExperimentConfig {
+            method: "minibatch-sgd".into(),
+            m,
+            b_local: b,
+            dim: 64,
+            seed: 31,
+            eval_samples: 64,
+            ..ExperimentConfig::default()
+        };
+
+        // both legs run with prefetch OFF so the only overlap in play is
+        // the fan pipeline's own (pack machine k+1's lane draw while
+        // machine k's dispatch is still in flight). off: every pack runs
+        // with an empty ticket window, so overlap_ns stays zero. on: with
+        // >= 2 machines per shard (m=8, <= 4 shards) every non-final pack
+        // runs staged.
+        let mut measured: Vec<(&str, OverlapMeter, BenchStats)> = Vec::new();
+        for (policy, tag) in [(PipelinePolicy::Off, "off"), (PipelinePolicy::On, "on")] {
+            let mut r = Runner::new(Engine::new(&dir).unwrap())
+                .with_shards(ShardPool::new(n_shards, &dir).unwrap())
+                .with_prefetch(PrefetchPolicy::Off)
+                .with_pipeline(policy);
+            let mut ctx = r.context(&cfg).unwrap();
+            let s = bench_batched(&format!("draw+pack b={b} m={m} (pipeline {tag})"), 1, 6, || {
+                std::hint::black_box(ctx.draw_batches_grad_only(b, false).unwrap());
+                m
+            });
+            println!("{}", s.report());
+            report.push_on(&s, "sharded");
+
+            let pool = ctx.plane.shards.expect("sharded context");
+            let overlap = pool.gathered_overlap().unwrap();
+            println!(
+                "  pipeline {tag}: {} fans, {} staged packs, overlap {:.3} ms, \
+                 serial {:.3} ms ({:.0}% overlapped)",
+                overlap.fans,
+                overlap.staged,
+                overlap.overlap_ns as f64 / 1e6,
+                overlap.serial_ns as f64 / 1e6,
+                overlap.overlap_frac() * 100.0
+            );
+            report.counter(&format!("pipeline.{tag}.fans"), overlap.fans as f64);
+            report.counter(&format!("pipeline.{tag}.staged"), overlap.staged as f64);
+            report.counter(&format!("pipeline.{tag}.overlap_ns"), overlap.overlap_ns as f64);
+            report.counter(&format!("pipeline.{tag}.serial_ns"), overlap.serial_ns as f64);
+            report.counter(&format!("pipeline.{tag}.overlap_frac"), overlap.overlap_frac());
+            // the per-shard breakdown the acceptance criterion asks for
+            for (shard, o) in pool.per_shard_overlap().unwrap().iter().enumerate() {
+                let key = format!("pipeline.{tag}.shard{shard}.overlap_ns");
+                report.counter(&key, o.overlap_ns as f64);
+            }
+            measured.push((tag, overlap, s));
+        }
+
+        let (off, s_off) = (&measured[0].1, &measured[0].2);
+        let (on, s_on) = (&measured[1].1, &measured[1].2);
+        // honesty: the serial path must never claim overlapped work, and
+        // the pipelined path must always stage (>= 2 machines per shard
+        // by construction, so every fan has at least one non-final pack).
+        // Neither assert needs a second core — staging is a property of
+        // the dispatch order, not of wall-clock parallelism.
+        assert_eq!(off.staged, 0, "pipeline=off must not stage packs");
+        assert_eq!(off.overlap_ns, 0, "pipeline=off must not report overlapped work");
+        assert!(on.staged >= 1, "pipeline=on staged no packs: {on:?}");
+        assert!(on.overlap_ns >= 1, "pipeline=on overlapped no work: {on:?}");
+        // fan count is policy-independent: batching is unconditional
+        assert_eq!(off.fans, on.fans, "fan count must not depend on the pipeline policy");
+
+        let speedup = s_off.median_ns / s_on.median_ns.max(1.0);
+        println!("  -> pipelined dispatch speedup at {n_shards} workers: {speedup:.2}x");
+        report.counter("pipeline.speedup", speedup);
+        // the acceptance criterion: pipelining must be a wall-clock win on
+        // the dispatch path — wherever a second core exists for the lane
+        // to draw on while the worker packs. Medians, not means, for the
+        // same shared-CI-runner reason as the shard-plane assert above.
+        if cores > 1 {
+            assert!(
+                s_on.median_ns < s_off.median_ns,
+                "pipeline on ({:.1}ms) must beat off ({:.1}ms)",
+                s_on.median_ns / 1e6,
+                s_off.median_ns / 1e6
             );
         }
     }

@@ -239,6 +239,60 @@ impl StallMeter {
     }
 }
 
+/// Software-pipeline counters for the shard plane's batched fans: how many
+/// batched per-shard fan jobs the worker executed (`fans`), how many lane
+/// requests were issued ahead of their collect point (`staged`), and how
+/// the engine thread's wall-clock split between work done while a staged
+/// request was in flight on the lane (`overlap_ns`) and work done with
+/// nothing staged (`serial_ns` — all of it when `pipeline=off`). Like
+/// [`StallMeter`], this is wall-clock-only diagnostics: it measures what
+/// the real machine overlapped, NOT the paper's simulated cost model,
+/// which charges identical units whether the pipeline is on or off. One
+/// meter per shard; reset between runs and gathered via
+/// [`crate::runtime::ShardPool::gathered_overlap`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OverlapMeter {
+    /// batched per-shard fan jobs the worker executed
+    pub fans: u64,
+    /// lane requests issued ahead of their collect point
+    pub staged: u64,
+    /// engine-work nanoseconds spent while a staged request was in flight
+    pub overlap_ns: u64,
+    /// engine-work nanoseconds spent with nothing staged
+    pub serial_ns: u64,
+}
+
+impl OverlapMeter {
+    /// Record one machine's engine-work slice within a fan.
+    pub fn record(&mut self, staged: bool, work_ns: u64) {
+        if staged {
+            self.staged += 1;
+            self.overlap_ns += work_ns;
+        } else {
+            self.serial_ns += work_ns;
+        }
+    }
+
+    /// Fold another shard's meter in (cluster totals).
+    pub fn merge(&mut self, other: &OverlapMeter) {
+        self.fans += other.fans;
+        self.staged += other.staged;
+        self.overlap_ns += other.overlap_ns;
+        self.serial_ns += other.serial_ns;
+    }
+
+    /// Fraction of engine-work wall-clock that ran under a staged request
+    /// (0 when no work was recorded).
+    pub fn overlap_frac(&self) -> f64 {
+        let total = self.overlap_ns + self.serial_ns;
+        if total == 0 {
+            0.0
+        } else {
+            self.overlap_ns as f64 / total as f64
+        }
+    }
+}
+
 /// The Table-1 row: per-machine maxima + total samples.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ResourceReport {
@@ -391,6 +445,29 @@ mod tests {
         assert_eq!(b.misses, 2);
         assert_eq!(b.stall_ns, 165);
         assert_eq!(StallMeter::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn overlap_meter_records_and_merges() {
+        let mut a = OverlapMeter::default();
+        a.fans += 1;
+        a.record(true, 10);
+        a.record(false, 100);
+        a.record(true, 5);
+        assert_eq!(a.fans, 1);
+        assert_eq!(a.staged, 2);
+        assert_eq!(a.overlap_ns, 15);
+        assert_eq!(a.serial_ns, 100);
+        assert!((a.overlap_frac() - 15.0 / 115.0).abs() < 1e-12);
+        let mut b = OverlapMeter::default();
+        b.fans += 1;
+        b.record(false, 50);
+        b.merge(&a);
+        assert_eq!(b.fans, 2);
+        assert_eq!(b.staged, 2);
+        assert_eq!(b.overlap_ns, 15);
+        assert_eq!(b.serial_ns, 150);
+        assert_eq!(OverlapMeter::default().overlap_frac(), 0.0);
     }
 
     #[test]

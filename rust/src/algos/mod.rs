@@ -17,7 +17,7 @@ pub mod minibatch_sgd;
 pub mod sgd_local;
 pub mod solvers;
 
-use crate::accounting::{ClusterMeter, ResourceReport, StallMeter};
+use crate::accounting::{ClusterMeter, OverlapMeter, ResourceReport, StallMeter};
 use crate::comm::Network;
 use crate::data::{Loss, MachineStreams};
 use crate::objective::{self, Evaluator, MachineBatch};
@@ -287,6 +287,11 @@ pub struct RunResult {
     /// Wall-clock only — never part of the simulated cost model, so it
     /// carries no parity obligation (see `runtime::shard`).
     pub stalls: Option<StallMeter>,
+    /// Fan-pipelining accounting for the sharded plane (how much pack
+    /// work ran while the next lane draw was already in flight).
+    /// `None` off the sharded plane. Wall-clock only, like `stalls` —
+    /// never part of the simulated cost model.
+    pub overlap: Option<OverlapMeter>,
 }
 
 /// A distributed stochastic optimization method.
@@ -319,9 +324,12 @@ impl Recorder {
 
     pub fn finish(self, ctx: &mut RunContext, w: Vec<f32>) -> Result<RunResult> {
         let final_objective = ctx.eval_now(&w)?;
-        let stalls = match ctx.plane.shards {
-            Some(pool) => Some(pool.gathered_stalls()?),
-            None => None,
+        let (stalls, overlap) = match ctx.plane.shards {
+            Some(pool) => {
+                let (s, o) = pool.gathered_run_meters()?;
+                (Some(s), Some(o))
+            }
+            None => (None, None),
         };
         Ok(RunResult {
             name: self.name,
@@ -330,6 +338,7 @@ impl Recorder {
             sim_time_s: ctx.net.stats.sim_time_s,
             final_objective,
             stalls,
+            overlap,
             w,
         })
     }

@@ -13,7 +13,7 @@
 //! `run --help` / `list` output prints.
 
 use crate::data::Loss;
-use crate::runtime::{PlanePolicy, PrefetchPolicy};
+use crate::runtime::{PipelinePolicy, PlanePolicy, PrefetchPolicy};
 use crate::util::closest_name;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -36,6 +36,7 @@ pub const CONFIG_KEYS: &[(&str, &str)] = &[
     ("dataset", "named dataset: codrna | covtype | kddcup99 | year"),
     ("plane", "execution plane: auto | host | chained | sharded"),
     ("prefetch", "shard-plane draw prefetch: auto | on | off (bit-identical either way)"),
+    ("pipeline", "shard-plane batched-fan pipelining: auto | on | off (bit-identical either way)"),
     ("scenario.drift_omega", "drift scenario: per-draw rotation angle (radians; default tau/8192)"),
     ("scenario.pareto_alpha", "heavy-tail scenario: Pareto tail index (> 2 for finite variance)"),
     ("scenario.sparse_density", "sparse scenario: expected fraction of active features (0, 1]"),
@@ -180,6 +181,10 @@ pub struct ExperimentConfig {
     /// runner's `PREFETCH` env / default). Bit-parity is unconditional —
     /// this knob trades dispatch-stall time only.
     pub prefetch: PrefetchPolicy,
+    /// shard-plane batched-fan pipelining (`pipeline=` key; `Auto` defers
+    /// to the runner's `PIPELINE` env / default). Bit-parity is
+    /// unconditional — this knob trades engine idle time only.
+    pub pipeline: PipelinePolicy,
     /// drift scenario: per-draw rotation angle in radians
     /// (`scenario.drift_omega`; `None` = the scenario's default)
     pub drift_omega: Option<f64>,
@@ -208,6 +213,7 @@ impl Default for ExperimentConfig {
             dataset: None,
             plane: PlanePolicy::Auto,
             prefetch: PrefetchPolicy::Auto,
+            pipeline: PipelinePolicy::Auto,
             drift_omega: None,
             pareto_alpha: None,
             sparse_density: None,
@@ -231,6 +237,9 @@ impl ExperimentConfig {
         let prefetch_s = kv.get_str("prefetch", dflt.prefetch.as_str());
         let prefetch = PrefetchPolicy::parse(&prefetch_s)
             .ok_or_else(|| anyhow!("bad prefetch '{prefetch_s}' (auto|on|off)"))?;
+        let pipeline_s = kv.get_str("pipeline", dflt.pipeline.as_str());
+        let pipeline = PipelinePolicy::parse(&pipeline_s)
+            .ok_or_else(|| anyhow!("bad pipeline '{pipeline_s}' (auto|on|off)"))?;
         let drift_omega = kv.get_opt_f64("scenario.drift_omega")?;
         if let Some(w) = drift_omega {
             if !w.is_finite() || w < 0.0 {
@@ -266,6 +275,7 @@ impl ExperimentConfig {
             dataset: kv.get("dataset").map(str::to_string),
             plane,
             prefetch,
+            pipeline,
             drift_omega,
             pareto_alpha,
             sparse_density,
@@ -370,6 +380,23 @@ mod tests {
             PrefetchPolicy::Auto,
             "prefetch defaults to auto (= on wherever the lane exists)"
         );
+    }
+
+    #[test]
+    fn pipeline_key_parses() {
+        let kv = KvConfig::parse("pipeline = off\n").unwrap();
+        assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().pipeline, PipelinePolicy::Off);
+        let kv = KvConfig::parse("pipeline = maybe\n").unwrap();
+        assert!(ExperimentConfig::from_kv(&kv).is_err());
+        assert_eq!(
+            ExperimentConfig::default().pipeline,
+            PipelinePolicy::Auto,
+            "pipeline defaults to auto (= on wherever batched fans run)"
+        );
+        // the new key is typo-guarded like every other key
+        let kv = KvConfig::parse("pipelin = on\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'pipeline'"), "{err}");
     }
 
     #[test]

@@ -27,7 +27,8 @@ use crate::data::table3::DatasetSpec;
 use crate::data::{Loss, MachineStreams, Sample, SampleStream};
 use crate::objective::Evaluator;
 use crate::runtime::{
-    default_artifacts_dir, Engine, ExecPlane, PlanePolicy, PrefetchPolicy, ShardPool,
+    default_artifacts_dir, Engine, ExecPlane, PipelinePolicy, PlanePolicy, PrefetchPolicy,
+    ShardPool,
 };
 use crate::theory::{self, ProblemConsts};
 use anyhow::{anyhow, bail, Result};
@@ -61,6 +62,11 @@ pub struct Runner {
     /// not `Auto`. Bit-parity is unconditional — this only moves
     /// dispatch-stall time.
     pub prefetch: PrefetchPolicy,
+    /// process-level batched-fan pipeline policy (`PIPELINE` env /
+    /// default `Auto` = on); a per-run `pipeline=` config key overrides
+    /// it when not `Auto`. Bit-parity is unconditional — this only moves
+    /// engine idle time.
+    pub pipeline: PipelinePolicy,
     /// the pool in `shards` was self-attached by a `plane=sharded` run
     /// (not by `SHARDS`/`with_shards`): it is kept for later sharded
     /// runs but ignored when resolving `auto`/`chained`/`host`, so one
@@ -93,7 +99,8 @@ impl Runner {
         Runner::new(Engine::from_env()?)
             .with_env_shards(&default_artifacts_dir())?
             .with_env_plane()?
-            .with_env_prefetch()
+            .with_env_prefetch()?
+            .with_env_pipeline()
     }
 
     pub fn new(engine: Engine) -> Runner {
@@ -103,6 +110,7 @@ impl Runner {
             shards: None,
             plane: PlanePolicy::Auto,
             prefetch: PrefetchPolicy::Auto,
+            pipeline: PipelinePolicy::Auto,
             self_pool: false,
         }
     }
@@ -152,6 +160,19 @@ impl Runner {
         Ok(self)
     }
 
+    /// Set the process-level batched-fan pipeline policy explicitly.
+    pub fn with_pipeline(mut self, pipeline: PipelinePolicy) -> Runner {
+        self.pipeline = pipeline;
+        self
+    }
+
+    /// Adopt the `PIPELINE` env var as the process-level pipeline policy
+    /// (unset = `Auto` = on; a typo is an error, not a silent fallback).
+    pub fn with_env_pipeline(mut self) -> Result<Runner> {
+        self.pipeline = PipelinePolicy::from_env()?;
+        Ok(self)
+    }
+
     /// Padded artifact dim for a native dim.
     pub fn padded_dim(&self, native: usize) -> Result<usize> {
         self.engine.manifest().padded_dim(native)
@@ -184,6 +205,17 @@ impl Runner {
         }
     }
 
+    /// Resolve the effective pipeline policy for one run: a per-run
+    /// `pipeline=` key beats the process-level policy unless it is
+    /// `Auto` — exactly [`Runner::resolve_plane`]'s rule.
+    fn resolve_pipeline(&self, cfg_pipeline: PipelinePolicy) -> PipelinePolicy {
+        if cfg_pipeline != PipelinePolicy::Auto {
+            cfg_pipeline
+        } else {
+            self.pipeline
+        }
+    }
+
     /// Build a context from the config's data axis (the scenario
     /// registry, a named dataset, or the default planted-model stream) +
     /// evaluator, validating the method/scenario setting pairing.
@@ -199,6 +231,7 @@ impl Runner {
         self.build_context(
             cfg.plane,
             cfg.prefetch,
+            cfg.pipeline,
             loss,
             d,
             streams,
@@ -222,6 +255,7 @@ impl Runner {
         self.build_context(
             PlanePolicy::Auto,
             PrefetchPolicy::Auto,
+            PipelinePolicy::Auto,
             loss,
             d,
             streams,
@@ -235,6 +269,7 @@ impl Runner {
         &mut self,
         cfg_plane: PlanePolicy,
         cfg_prefetch: PrefetchPolicy,
+        cfg_pipeline: PipelinePolicy,
         loss: Loss,
         d: usize,
         streams: Vec<Box<dyn SampleStream>>,
@@ -244,6 +279,7 @@ impl Runner {
         let m = streams.len();
         let policy = self.resolve_plane(cfg_plane)?;
         let prefetch = self.resolve_prefetch(cfg_prefetch);
+        let pipeline = self.resolve_pipeline(cfg_pipeline);
         if let Some(pool) = &self.shards {
             // stale machine/stream/evaluator state from a previous run
             // must not leak in (the installs below land on cleared shards)
@@ -256,7 +292,9 @@ impl Runner {
         } else {
             self.shards.as_ref()
         };
-        let mut plane = ExecPlane::new(&mut self.engine, pool, policy)?.with_prefetch(prefetch);
+        let mut plane = ExecPlane::new(&mut self.engine, pool, policy)?
+            .with_prefetch(prefetch)
+            .with_pipeline(pipeline);
         // DataPlane residency: with a pool on the plane, each machine's
         // stream moves to its owning shard's prefetch lane (next to its
         // batches) and the draw verb generates + packs shard-side — one

@@ -73,6 +73,15 @@ fn cmd_run(args: &[String]) -> Result<()> {
             s.stall_ns as f64 / 1e6
         );
     }
+    if let Some(o) = &result.overlap {
+        println!(
+            "# fan pipeline: {} fans, {} staged packs, {:.0}% of pack work overlapped ({:.3} ms)",
+            o.fans,
+            o.staged,
+            o.overlap_frac() * 100.0,
+            o.overlap_ns as f64 / 1e6
+        );
+    }
     if !result.curve.is_empty() {
         println!("\n# trajectory");
         print!("{}", metrics::curve_csv(&result));

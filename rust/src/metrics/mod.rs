@@ -97,6 +97,25 @@ pub fn run_json(run: &RunResult) -> String {
             let _ = write!(out, "\"stalls\": null, ");
         }
     }
+    // wall-clock fan-pipelining accounting (sharded plane only; like
+    // `stalls`, outside the simulated cost model)
+    match &run.overlap {
+        Some(o) => {
+            let _ = write!(
+                out,
+                "\"overlap\": {{\"fans\": {}, \"staged\": {}, \"overlap_ns\": {}, \
+                 \"serial_ns\": {}, \"overlap_frac\": {}}}, ",
+                o.fans,
+                o.staged,
+                o.overlap_ns,
+                o.serial_ns,
+                o.overlap_frac()
+            );
+        }
+        None => {
+            let _ = write!(out, "\"overlap\": null, ");
+        }
+    }
     let _ = write!(out, "\"curve\": [");
     for (i, p) in run.curve.iter().enumerate() {
         if i > 0 {
@@ -124,7 +143,7 @@ pub fn write_report(path: &Path, text: &str) -> std::io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accounting::{ResourceReport, StallMeter};
+    use crate::accounting::{OverlapMeter, ResourceReport, StallMeter};
     use crate::algos::CurvePoint;
     use crate::util::json::Json;
 
@@ -151,6 +170,7 @@ mod tests {
             sim_time_s: 0.5,
             final_objective: Some(0.125),
             stalls: Some(StallMeter { takes: 8, hits: 6, misses: 2, stall_ns: 1500 }),
+            overlap: Some(OverlapMeter { fans: 4, staged: 3, overlap_ns: 900, serial_ns: 300 }),
         }
     }
 
@@ -183,10 +203,15 @@ mod tests {
         let stalls = v.get("stalls").unwrap();
         assert_eq!(stalls.get("takes").unwrap().as_usize(), Some(8));
         assert_eq!(stalls.get("hit_rate").unwrap().as_f64(), Some(0.75));
-        // off the sharded plane, stalls is an explicit null
+        let overlap = v.get("overlap").unwrap();
+        assert_eq!(overlap.get("fans").unwrap().as_usize(), Some(4));
+        assert_eq!(overlap.get("overlap_frac").unwrap().as_f64(), Some(0.75));
+        // off the sharded plane, the wall-clock meters are explicit nulls
         let mut run = dummy_run();
         run.stalls = None;
+        run.overlap = None;
         let v = Json::parse(&run_json(&run)).expect("valid json");
         assert!(matches!(v.get("stalls"), Some(Json::Null)));
+        assert!(matches!(v.get("overlap"), Some(Json::Null)));
     }
 }

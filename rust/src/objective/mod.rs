@@ -40,7 +40,7 @@ use crate::data::blocks::{pack_all, Block};
 use crate::data::{Loss, Sample};
 use crate::linalg;
 use crate::runtime::exec::{BlockLits, GradOut};
-use crate::runtime::shard::{Pending, ShardPool};
+use crate::runtime::shard::ShardPool;
 use crate::runtime::{DeviceVec, Engine};
 use anyhow::{anyhow, ensure, Result};
 use std::cell::{Ref, RefCell};
@@ -361,7 +361,8 @@ fn fuse_blocks(engine: &mut Engine, blocks: &[Block]) -> Result<Vec<BlockLits>> 
 /// `f` runs once per machine against *that machine's* engine and batch:
 /// inline on the coordinator engine when the batches are locally packed
 /// (the sequential plane — this branch IS the old per-machine loop), or
-/// as one job per machine on the owning shard when they are stubs. The
+/// as ONE batched job per shard covering that shard's machines in
+/// ascending order when they are stubs ([`ShardPool::fan_batches`]). The
 /// closure sees only host data plus the engine/batch it is handed, so the
 /// two planes execute the identical kernel sequence per machine and the
 /// results are bitwise equal; joins happen in machine order and each
@@ -391,23 +392,32 @@ where
     }
     ensure!(stubs == batches.len(), "mixed local/shard batches in one fan");
     let pool = shards.ok_or_else(|| anyhow!("shard-resident batches need a shard plane"))?;
-    let mut pends: Vec<Pending<(T, ResourceMeter)>> = Vec::with_capacity(batches.len());
     for (i, b) in batches.iter().enumerate() {
         let machine = b.shard.as_ref().expect("stub checked above").machine;
         // hard contract, not a debug check: a reordered/filtered stub
         // slice would otherwise silently mis-attribute meter deltas
         ensure!(machine == i, "stub for machine {machine} at position {i}");
-        let f = f.clone();
-        pends.push(pool.submit(pool.shard_of(machine), move |state| {
-            let (engine, batch) = state.machine(machine)?;
-            let mut delta = ResourceMeter::new();
-            let out = f(engine, batch, machine, &mut delta)?;
-            Ok((out, delta))
-        }));
     }
-    let mut out = Vec::with_capacity(batches.len());
-    for (i, p) in pends.into_iter().enumerate() {
-        let (val, delta) = p.wait()?;
+    // ONE batched job per shard (ascending machine order inside each —
+    // the identical per-shard execution order the old one-job-per-machine
+    // fan produced), joined and meter-merged in fixed machine order
+    let m = batches.len();
+    let fans = pool.fan_batches(m, "machine fan", move |state, machine| {
+        let (engine, batch) = state.machine(machine)?;
+        let mut delta = ResourceMeter::new();
+        let out = f(engine, batch, machine, &mut delta)?;
+        Ok((out, delta))
+    });
+    let mut per: Vec<Option<(T, ResourceMeter)>> = (0..m).map(|_| None).collect();
+    for fan in fans {
+        for (i, v) in fan.wait()? {
+            per[i] = Some(v);
+        }
+    }
+    let mut out = Vec::with_capacity(m);
+    for (i, slot) in per.into_iter().enumerate() {
+        let (val, delta) =
+            slot.ok_or_else(|| anyhow!("machine {i} missing from its shard's fan batch"))?;
         meter.machine(i).merge(&delta);
         out.push(val);
     }
@@ -667,19 +677,28 @@ impl Evaluator {
     ) -> Result<Evaluator> {
         let ranges = crate::data::sampler::shard_ranges(samples.len(), segments.max(1));
         let segments = if let Some(pool) = plane.shards {
-            let mut pends = Vec::with_capacity(ranges.len());
-            for (i, r) in ranges.iter().enumerate() {
-                let seg: Vec<Sample> = samples[r.clone()].to_vec();
-                pends.push(pool.submit(pool.shard_of(i), move |state| {
-                    let batch = MachineBatch::pack_grad_only(&mut state.engine, engine_d, &seg)?;
-                    let reply = (batch.n, batch.n_blocks(), batch.shard_meta(i));
-                    state.eval.insert(i, batch);
-                    Ok(reply)
-                }));
+            // one batched pack job per shard; each shard packs its own
+            // segments (ascending segment order) from the shared sample set
+            let all: Arc<Vec<Sample>> = Arc::new(samples.to_vec());
+            let rs: Arc<Vec<std::ops::Range<usize>>> = Arc::new(ranges.clone());
+            let fans = pool.fan_batches(rs.len(), "pack evaluator segment", move |state, i| {
+                let seg = &all[rs[i].clone()];
+                let batch = MachineBatch::pack_grad_only(&mut state.engine, engine_d, seg)?;
+                let reply = (batch.n, batch.n_blocks(), batch.shard_meta(i));
+                state.eval.insert(i, batch);
+                Ok(reply)
+            });
+            let mut per: Vec<Option<(usize, usize, ShardBatchMeta)>> =
+                (0..ranges.len()).map(|_| None).collect();
+            for fan in fans {
+                for (i, v) in fan.wait()? {
+                    per[i] = Some(v);
+                }
             }
-            let mut stubs = Vec::with_capacity(pends.len());
-            for pend in pends {
-                let (n, n_blocks, meta) = pend.wait()?;
+            let mut stubs = Vec::with_capacity(ranges.len());
+            for (i, slot) in per.into_iter().enumerate() {
+                let (n, n_blocks, meta) =
+                    slot.ok_or_else(|| anyhow!("segment {i} missing from its shard's pack fan"))?;
                 stubs.push(MachineBatch::stub(engine_d, n, n_blocks, meta));
             }
             stubs
@@ -707,18 +726,21 @@ impl Evaluator {
                 .shards
                 .ok_or_else(|| anyhow!("shard-resident evaluator needs a shard plane"))?;
             let w_shared: Arc<[f32]> = Arc::from(w);
-            let pends: Vec<_> = (0..self.segments.len())
-                .map(|i| {
-                    let w_shared = Arc::clone(&w_shared);
-                    pool.submit(pool.shard_of(i), move |state| {
-                        let (engine, batch) = state.eval_segment(i)?;
-                        segment_loss(engine, loss, batch, &w_shared)
-                    })
-                })
-                .collect();
+            let n_seg = self.segments.len();
+            let fans = pool.fan_batches(n_seg, "evaluate segment", move |state, i| {
+                let (engine, batch) = state.eval_segment(i)?;
+                segment_loss(engine, loss, batch, &w_shared)
+            });
+            let mut per: Vec<Option<(f64, f64)>> = (0..n_seg).map(|_| None).collect();
+            for fan in fans {
+                for (i, v) in fan.wait()? {
+                    per[i] = Some(v);
+                }
+            }
             // combine in fixed segment order — the plane-independent fold
-            for pend in pends {
-                let (l, c) = pend.wait()?;
+            for (i, slot) in per.into_iter().enumerate() {
+                let (l, c) =
+                    slot.ok_or_else(|| anyhow!("segment {i} missing from its shard's eval fan"))?;
                 lsum += l;
                 cnt += c;
             }

@@ -91,6 +91,23 @@
 //! resident), all metered through each shard's [`EngineStats`] and
 //! aggregated via [`shard::ShardPool::gathered_stats`].
 //!
+//! Fan-outs submit **one batched job per shard** ([`shard::FanBatch`]
+//! via [`shard::ShardPool::fan_batches`]), not one job per machine: the
+//! job runs the shard's machines in ascending machine order — the exact
+//! order the old per-machine submissions executed in, so batching is
+//! bit-invisible — and the coordinator reassembles results into machine
+//! order before any merge. Inside the draw fan the worker additionally
+//! software-pipelines against its prefetch lane under
+//! [`plane::PipelinePolicy`] (the `pipeline=` config key / `PIPELINE`
+//! env): machine k+1's lane draw is requested while machine k's pack
+//! runs ([`shard::LaneClient::request`] / [`shard::LaneTicket`]), with
+//! the overlapped pack time metered by
+//! [`accounting::OverlapMeter`](crate::accounting::OverlapMeter) —
+//! wall-clock only, like the stall meter: it never measures (or
+//! perturbs) the simulated paper-units cost model. Ordering and parity
+//! details are in the `shard` module docs; diagnostics gather in one
+//! round trip per shard via [`shard::ShardPool::per_shard_metrics`].
+//!
 //! # The prefetch lane
 //!
 //! Each shard worker has a companion host-only **prefetch lane** thread
@@ -110,7 +127,12 @@
 //! `prefetch=` config key / `PREFETCH` env, default auto = on) trades
 //! stall time only, never bytes. The full staging contract (stream
 //! ownership, mismatched-size re-splits, epoch-boundary refusal) is in
-//! the `shard` module docs.
+//! the `shard` module docs. When the fan pipeline is on, the worker
+//! overlaps the other direction too — it packs machine k while the lane
+//! already draws machine k+1 — and [`ExecSession`] exposes two-slot
+//! staging rings (`ensure_ring`/`swap`) as the upload-side double-buffer
+//! primitive for backends with asynchronous transfers (see the
+//! `session` module docs for the slot-swap generation rule).
 //!
 //! # Traffic counters
 //!
@@ -140,10 +162,13 @@ use std::time::Instant;
 pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
 pub use chain::DeviceVec;
 pub use plane::{
-    ExecPlane, Lane, LocalSolver, PlaneKind, PlaneLocals, PlanePolicy, PlaneVec, PrefetchPolicy,
+    ExecPlane, Lane, LocalSolver, PipelinePolicy, PlaneKind, PlaneLocals, PlanePolicy, PlaneVec,
+    PrefetchPolicy,
 };
 pub use session::ExecSession;
-pub use shard::{LaneClient, Pending, ShardPool, ShardState, TakeReply};
+pub use shard::{
+    FanBatch, LaneClient, LaneTicket, Pending, ShardMetrics, ShardPool, ShardState, TakeReply,
+};
 
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {

@@ -51,7 +51,7 @@
 //! identical paper-units accounting.
 
 use super::chain::VrKernel;
-use super::shard::{Pending, ShardPool};
+use super::shard::{FanBatch, LaneTicket, Pending, ShardPool};
 use super::{DeviceVec, Engine};
 use crate::accounting::{ClusterMeter, ResourceMeter};
 use crate::comm::Network;
@@ -62,6 +62,7 @@ use crate::objective::{
     ShardBatchMeta,
 };
 use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::Arc;
 use std::time::Instant;
@@ -162,6 +163,64 @@ impl PrefetchPolicy {
     /// defaulting off).
     pub fn enabled(self) -> bool {
         self != PrefetchPolicy::Off
+    }
+}
+
+/// The `pipeline=` policy: whether the Sharded plane's batched fans
+/// software-pipeline within each shard worker — while machine k's packed
+/// blocks upload and dispatch, machine k+1's lane request is already in
+/// flight (see `runtime::shard`). Bit-parity is unconditional: the next
+/// request is issued only AFTER the previous collect, so the lane serves
+/// commands in the identical FIFO order as the serial loop and every
+/// sample/byte is bit-identical — the policy trades engine idle time,
+/// never numerics. `Auto` therefore resolves to on; `Off` forces the
+/// strictly serial per-machine loop for diagnostics and A/B overlap
+/// measurement (the [`crate::accounting::OverlapMeter`] records which ran).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PipelinePolicy {
+    /// Pipeline the batched fans on the Sharded plane, no-op elsewhere —
+    /// the default.
+    #[default]
+    Auto,
+    On,
+    Off,
+}
+
+impl PipelinePolicy {
+    pub fn parse(s: &str) -> Option<PipelinePolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(PipelinePolicy::Auto),
+            "on" => Some(PipelinePolicy::On),
+            "off" => Some(PipelinePolicy::Off),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PipelinePolicy::Auto => "auto",
+            PipelinePolicy::On => "on",
+            PipelinePolicy::Off => "off",
+        }
+    }
+
+    /// Parse the `PIPELINE` environment variable (unset/empty = `Auto`).
+    /// Unrecognized values error — a typo must not silently change the
+    /// overlap profile being measured.
+    pub fn from_env() -> Result<PipelinePolicy> {
+        match std::env::var("PIPELINE") {
+            Err(_) => Ok(PipelinePolicy::Auto),
+            Ok(raw) if raw.trim().is_empty() => Ok(PipelinePolicy::Auto),
+            Ok(raw) => PipelinePolicy::parse(&raw)
+                .ok_or_else(|| anyhow!("PIPELINE='{raw}' is not auto|on|off")),
+        }
+    }
+
+    /// Whether fans should stage the next machine's lane request (`Auto`
+    /// resolves to on — parity is unconditional, so there is nothing to
+    /// protect by defaulting off).
+    pub fn enabled(self) -> bool {
+        self != PipelinePolicy::Off
     }
 }
 
@@ -284,6 +343,10 @@ pub struct ExecPlane<'e> {
     /// prefetch lane (resolved from the `prefetch=` key / `PREFETCH` env
     /// by the coordinator; `Auto` = on)
     prefetch: PrefetchPolicy,
+    /// whether batched shard fans software-pipeline the next machine's
+    /// lane request behind the current machine's pack/upload (resolved
+    /// from the `pipeline=` key / `PIPELINE` env; `Auto` = on)
+    pipeline: PipelinePolicy,
 }
 
 impl<'e> ExecPlane<'e> {
@@ -317,7 +380,13 @@ impl<'e> ExecPlane<'e> {
                 PlaneKind::Sharded
             }
         };
-        Ok(ExecPlane { engine, shards, kind, prefetch: PrefetchPolicy::default() })
+        Ok(ExecPlane {
+            engine,
+            shards,
+            kind,
+            prefetch: PrefetchPolicy::default(),
+            pipeline: PipelinePolicy::default(),
+        })
     }
 
     /// Set the prefetch policy (builder; the coordinator resolves the
@@ -329,6 +398,17 @@ impl<'e> ExecPlane<'e> {
 
     pub fn prefetch(&self) -> PrefetchPolicy {
         self.prefetch
+    }
+
+    /// Set the pipeline policy (builder; the coordinator resolves the
+    /// per-run key against the process policy before calling this).
+    pub fn with_pipeline(mut self, pipeline: PipelinePolicy) -> ExecPlane<'e> {
+        self.pipeline = pipeline;
+        self
+    }
+
+    pub fn pipeline(&self) -> PipelinePolicy {
+        self.pipeline
     }
 
     /// The `Auto` resolution (infallible): Sharded with a pool, Chained
@@ -344,12 +424,19 @@ impl<'e> ExecPlane<'e> {
             shards: None,
             kind: PlaneKind::Chained,
             prefetch: PrefetchPolicy::default(),
+            pipeline: PipelinePolicy::default(),
         }
     }
 
     /// The legacy per-block host plane (tests/benches/diagnostics).
     pub fn host(engine: &'e mut Engine) -> ExecPlane<'e> {
-        ExecPlane { engine, shards: None, kind: PlaneKind::Host, prefetch: PrefetchPolicy::default() }
+        ExecPlane {
+            engine,
+            shards: None,
+            kind: PlaneKind::Host,
+            prefetch: PrefetchPolicy::default(),
+            pipeline: PipelinePolicy::default(),
+        }
     }
 
     pub fn kind(&self) -> PlaneKind {
@@ -439,13 +526,26 @@ impl<'e> ExecPlane<'e> {
                 let pool = self
                     .shards
                     .ok_or_else(|| anyhow!("shard-resident streams need a shard pool"))?;
-                let prefetch = self.prefetch.enabled();
-                let pends: Vec<_> = (0..*m)
-                    .map(|i| shard_draw_job(pool, i, d, b_local, mode, prefetch))
-                    .collect();
+                let fans = shard_draw_fan(
+                    pool,
+                    *m,
+                    d,
+                    b_local,
+                    mode,
+                    self.prefetch.enabled(),
+                    self.pipeline.enabled(),
+                );
+                let mut per: Vec<Option<(u64, usize, usize, ShardBatchMeta)>> =
+                    (0..*m).map(|_| None).collect();
+                for fan in fans {
+                    for (i, r) in fan.wait()? {
+                        per[i] = Some(r);
+                    }
+                }
                 let mut out = Vec::with_capacity(*m);
-                for (i, pend) in pends.into_iter().enumerate() {
-                    let (drawn, n, n_blocks, batch_meta) = pend.wait()?;
+                for (i, slot) in per.into_iter().enumerate() {
+                    let (drawn, n, n_blocks, batch_meta) = slot
+                        .ok_or_else(|| anyhow!("machine {i} missing from its shard's draw fan"))?;
                     let mut stub = MachineBatch::stub(d, n, n_blocks, batch_meta);
                     charge_draw(meter, i, drawn, hold, &mut stub);
                     out.push(stub);
@@ -935,9 +1035,68 @@ fn shard_draw_job(
         let t0 = Instant::now();
         let reply = state.lane.take(i, n, d, prefetch)?;
         state.stalls.record(reply.hit, t0.elapsed().as_nanos() as u64);
+        let t1 = Instant::now();
         let batch = MachineBatch::pack_blocks_mode(&mut state.engine, d, reply.blocks, mode)?;
+        state.overlap.record(false, t1.elapsed().as_nanos() as u64);
         let out = (reply.drawn, batch.n, batch.n_blocks(), batch.shard_meta(i));
         state.batches.insert(i, batch);
+        Ok(out)
+    })
+}
+
+/// The batched draw fan: ONE job per shard covering every machine that
+/// shard owns (ascending machine order — identical per-shard execution
+/// order to the old one-job-per-machine interleaving, so samples, bytes
+/// and meters are bit-for-bit unchanged). With `pipeline` on, the worker
+/// software-pipelines the loop: machine k+1's lane request is issued the
+/// moment machine k's reply is collected, so the lane draws/packs k+1's
+/// blocks WHILE the engine thread uploads and fuses k's — the engine-work
+/// slice is recorded on the shard's [`crate::accounting::OverlapMeter`] as
+/// overlapped. The request is issued only AFTER the previous collect, so
+/// lane commands arrive in the identical FIFO order as the serial loop
+/// (`pipeline=off`) and the two paths are bit-identical by construction.
+fn shard_draw_fan(
+    pool: &ShardPool,
+    m: usize,
+    d: usize,
+    n: usize,
+    mode: PackMode,
+    prefetch: bool,
+    pipeline: bool,
+) -> Vec<FanBatch<(u64, usize, usize, ShardBatchMeta)>> {
+    pool.fan_batches_raw(m, "machine draw fan", move |state, machines| {
+        let mut out = Vec::with_capacity(machines.len());
+        if !pipeline {
+            for &i in machines {
+                let t0 = Instant::now();
+                let reply = state.lane.take(i, n, d, prefetch)?;
+                state.stalls.record(reply.hit, t0.elapsed().as_nanos() as u64);
+                let t1 = Instant::now();
+                let batch =
+                    MachineBatch::pack_blocks_mode(&mut state.engine, d, reply.blocks, mode)?;
+                state.overlap.record(false, t1.elapsed().as_nanos() as u64);
+                out.push((i, (reply.drawn, batch.n, batch.n_blocks(), batch.shard_meta(i))));
+                state.batches.insert(i, batch);
+            }
+            return Ok(out);
+        }
+        let mut tickets: VecDeque<LaneTicket> = VecDeque::with_capacity(1);
+        tickets.push_back(state.lane.request(machines[0], n, d, prefetch)?);
+        for (idx, &i) in machines.iter().enumerate() {
+            let ticket = tickets.pop_front().expect("one ticket in flight per collect");
+            let t0 = Instant::now();
+            let reply = ticket.collect()?;
+            state.stalls.record(reply.hit, t0.elapsed().as_nanos() as u64);
+            if let Some(&next) = machines.get(idx + 1) {
+                tickets.push_back(state.lane.request(next, n, d, prefetch)?);
+            }
+            let staged = !tickets.is_empty();
+            let t1 = Instant::now();
+            let batch = MachineBatch::pack_blocks_mode(&mut state.engine, d, reply.blocks, mode)?;
+            state.overlap.record(staged, t1.elapsed().as_nanos() as u64);
+            out.push((i, (reply.drawn, batch.n, batch.n_blocks(), batch.shard_meta(i))));
+            state.batches.insert(i, batch);
+        }
         Ok(out)
     })
 }
@@ -1340,6 +1499,20 @@ mod tests {
         assert!(PrefetchPolicy::On.enabled());
         assert!(!PrefetchPolicy::Off.enabled());
         assert_eq!(PrefetchPolicy::default(), PrefetchPolicy::Auto);
+    }
+
+    #[test]
+    fn pipeline_policy_parses_and_resolves() {
+        for p in [PipelinePolicy::Auto, PipelinePolicy::On, PipelinePolicy::Off] {
+            assert_eq!(PipelinePolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(PipelinePolicy::parse(" ON "), Some(PipelinePolicy::On));
+        assert_eq!(PipelinePolicy::parse("onn"), None);
+        // Auto resolves to on: parity is unconditional, only overlap differs
+        assert!(PipelinePolicy::Auto.enabled());
+        assert!(PipelinePolicy::On.enabled());
+        assert!(!PipelinePolicy::Off.enabled());
+        assert_eq!(PipelinePolicy::default(), PipelinePolicy::Auto);
     }
 
     #[test]

@@ -24,6 +24,32 @@
 //! an iterate that never visited the host). An aliased slot has no host
 //! bytes to compare against, so a later `ensure` with host data always
 //! refreshes it.
+//!
+//! # Staging rings
+//!
+//! A plain slot has one resident buffer, so refreshing it *replaces* the
+//! previous upload — safe on a synchronous backend (a dispatch has
+//! finished with its inputs by the time `ensure` runs again), but a
+//! pipelined worker that stages machine k+1's operand while machine k's
+//! dispatch is still in flight needs two generations alive at once. A
+//! **ring** ([`ExecSession::ensure_ring`] / [`ExecSession::swap`]) is the
+//! double-buffered slot pair for exactly that: each key holds an A and a
+//! B half, reads ([`ExecSession::ring_get`]) resolve the *active* half,
+//! and `ensure_ring` writes only the *staged* (inactive) half — the
+//! in-flight dispatch's operand is never touched. `swap` flips which half
+//! is active once the staged generation is ready to be consumed.
+//!
+//! The slot-swap generation rule: each half carries its own generation,
+//! bumped when `ensure_ring` re-uploads that half (bit-identical staged
+//! bytes are a cache hit, like `ensure`); `swap` changes which half
+//! serves reads but never touches a generation, so
+//! [`ExecSession::ring_generation`] reports how many times the *currently
+//! active* payload was refreshed — staleness stays observable across
+//! swaps. On today's synchronous CPU PJRT the pipelined shard worker
+//! overlaps the prefetch lane instead of device uploads (uploads complete
+//! before control returns — see `runtime::shard`), so rings are the
+//! staging structure an asynchronous backend's upload verb slots into,
+//! shipped and tested ahead of that backend.
 
 use super::EngineStats;
 use anyhow::{anyhow, Result};
@@ -45,15 +71,58 @@ struct Slot {
     generation: u64,
 }
 
+/// The pure half-selection state machine behind a staging ring: which of
+/// the two halves is active, and each half's refresh generation. Kept
+/// separate from the buffers so the swap/generation rules are unit-testable
+/// without a PJRT client (the buffers themselves can only live on the
+/// owning worker thread).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct RingMeta {
+    /// index (0 or 1) of the half that serves reads
+    active: usize,
+    /// per-half refresh generations; 0 = never uploaded
+    gens: [u64; 2],
+}
+
+impl RingMeta {
+    /// The half `ensure_ring` writes into: the one NOT serving reads.
+    fn staged(&self) -> usize {
+        1 - self.active
+    }
+
+    /// A fresh upload landed in the staged half.
+    fn bump_staged(&mut self) {
+        self.gens[self.staged()] += 1;
+    }
+
+    /// Flip which half serves reads. Generations are untouched — swapping
+    /// changes *which* payload is visible, not how often it was refreshed.
+    fn swap(&mut self) {
+        self.active = 1 - self.active;
+    }
+
+    /// Refresh generation of the payload currently serving reads.
+    fn active_generation(&self) -> u64 {
+        self.gens[self.active]
+    }
+}
+
+struct RingSlot {
+    /// the A/B halves; a half is `None` until its first upload
+    halves: [Option<Slot>; 2],
+    meta: RingMeta,
+}
+
 /// Named-slot upload cache (see module docs).
 #[derive(Default)]
 pub struct ExecSession {
     slots: HashMap<&'static str, Slot>,
+    rings: HashMap<&'static str, RingSlot>,
 }
 
 impl ExecSession {
     pub fn new() -> ExecSession {
-        ExecSession { slots: HashMap::new() }
+        ExecSession { slots: HashMap::new(), rings: HashMap::new() }
     }
 
     /// Make `key` hold a device copy of `data`, re-uploading only when the
@@ -127,9 +196,74 @@ impl ExecSession {
         self.slots.remove(key);
     }
 
+    /// Upload `data` into ring `key`'s **staged** half, leaving the active
+    /// half (a potentially in-flight dispatch's operand) untouched. Like
+    /// [`ExecSession::ensure`], bit-identical bytes against what the staged
+    /// half already holds are a cache hit; otherwise the half is re-uploaded
+    /// and its generation bumped. Call [`ExecSession::swap`] to make the
+    /// staged payload the one reads resolve.
+    pub fn ensure_ring(
+        &mut self,
+        client: &xla::PjRtClient,
+        stats: &mut EngineStats,
+        key: &'static str,
+        data: &[f32],
+    ) -> Result<()> {
+        let ring = self
+            .rings
+            .entry(key)
+            .or_insert_with(|| RingSlot { halves: [None, None], meta: RingMeta::default() });
+        let staged = ring.meta.staged();
+        if let Some(slot) = &ring.halves[staged] {
+            if slot.host.as_deref().is_some_and(|h| bitwise_eq(h, data)) {
+                stats.upload_cache_hits += 1;
+                return Ok(());
+            }
+        }
+        let buf = client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .map_err(|e| anyhow!("uploading ring '{key}' [{}]: {e:?}", data.len()))?;
+        stats.uploads += 1;
+        stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
+        stats.upload_cache_misses += 1;
+        ring.meta.bump_staged();
+        let generation = ring.meta.gens[staged];
+        ring.halves[staged] =
+            Some(Slot { host: Some(data.to_vec()), buf: Rc::new(buf), generation });
+        Ok(())
+    }
+
+    /// Flip ring `key` so the half last written by
+    /// [`ExecSession::ensure_ring`] serves subsequent
+    /// [`ExecSession::ring_get`] reads. Errors if the ring does not exist.
+    pub fn swap(&mut self, key: &'static str) -> Result<()> {
+        let ring = self
+            .rings
+            .get_mut(key)
+            .ok_or_else(|| anyhow!("session ring '{key}' is empty (ensure_ring first)"))?;
+        ring.meta.swap();
+        Ok(())
+    }
+
+    /// The device buffer in ring `key`'s **active** half.
+    pub fn ring_get(&self, key: &'static str) -> Result<&xla::PjRtBuffer> {
+        self.rings
+            .get(key)
+            .and_then(|r| r.halves[r.meta.active].as_ref())
+            .map(|s| s.buf.as_ref())
+            .ok_or_else(|| anyhow!("session ring '{key}' has no active payload (swap first)"))
+    }
+
+    /// Refresh generation of ring `key`'s active half; 0 if the ring does
+    /// not exist or its active half was never uploaded.
+    pub fn ring_generation(&self, key: &'static str) -> u64 {
+        self.rings.get(key).map_or(0, |r| r.meta.active_generation())
+    }
+
     /// Drop every cached buffer (e.g. between benchmark sections).
     pub fn clear(&mut self) {
         self.slots.clear();
+        self.rings.clear();
     }
 
     pub fn len(&self) -> usize {
@@ -143,7 +277,7 @@ impl ExecSession {
 
 #[cfg(test)]
 mod tests {
-    use super::bitwise_eq;
+    use super::{bitwise_eq, RingMeta};
 
     #[test]
     fn bit_equality_semantics() {
@@ -153,5 +287,41 @@ mod tests {
         assert!(!bitwise_eq(&[0.0], &[-0.0]));
         // float == would say these differ; the device bits are identical
         assert!(bitwise_eq(&[f32::NAN], &[f32::NAN]));
+    }
+
+    #[test]
+    fn ring_meta_swap_and_generation_rule() {
+        let mut m = RingMeta::default();
+        // fresh ring: half 0 active, nothing uploaded anywhere
+        assert_eq!(m.active, 0);
+        assert_eq!(m.staged(), 1);
+        assert_eq!(m.active_generation(), 0);
+
+        // first upload lands in the staged half; the active payload (none
+        // yet) is untouched until the swap
+        m.bump_staged();
+        assert_eq!(m.gens, [0, 1]);
+        assert_eq!(m.active_generation(), 0);
+        m.swap();
+        assert_eq!(m.active, 1);
+        assert_eq!(m.staged(), 0);
+        assert_eq!(m.active_generation(), 1);
+
+        // second upload refreshes the now-staged half 0
+        m.bump_staged();
+        assert_eq!(m.gens, [1, 1]);
+        m.swap();
+        assert_eq!(m.active_generation(), 1);
+
+        // swapping alone never advances a generation
+        m.swap();
+        m.swap();
+        assert_eq!(m.gens, [1, 1]);
+
+        // repeated refreshes of one half accumulate on that half only
+        m.bump_staged();
+        m.bump_staged();
+        assert_eq!(m.gens[m.staged()], 3);
+        assert_eq!(m.active_generation(), 1);
     }
 }

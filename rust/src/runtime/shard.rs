@@ -66,9 +66,40 @@
 //! lane exists to hide; each worker meters it (plus stage hit/miss
 //! counts) in its [`StallMeter`], gathered per run via
 //! [`ShardPool::gathered_stalls`].
+//!
+//! # Batched fans and the software pipeline
+//!
+//! A plane fan used to submit one job per *machine*; it now submits one
+//! [`FanBatch`] job per *shard* ([`ShardPool::fan_batches`]), covering
+//! every machine the shard owns in ascending machine order. Per-shard
+//! execution order is unchanged — ascending machine order is exactly the
+//! order the old per-machine submissions enqueued — so batching alone is
+//! bit-invisible; it just removes per-machine channel round-trips and
+//! gives the worker a loop it can pipeline.
+//!
+//! With `pipeline=on` (see `PipelinePolicy` in `runtime::plane`) the
+//! worker's batched draw loop runs a one-deep software pipeline against
+//! its lane: split [`LaneClient::take`] into [`LaneClient::request`] /
+//! [`LaneTicket::collect`], and issue machine k+1's request immediately
+//! after collecting machine k's reply — BEFORE the engine-affine
+//! fuse+upload of machine k's blocks. The lane then draws and packs k+1
+//! while the engine uploads k: true thread overlap, biggest when the
+//! stage is cold (prefetch off or first round). Because request(k+1) is
+//! sent only AFTER collect(k), lane commands arrive in the identical FIFO
+//! order as the serial loop — the pipeline changes WHEN the lane works,
+//! never WHAT it draws, so bit-parity is unconditional.
+//!
+//! Each worker's [`OverlapMeter`] records what the pipeline actually
+//! bought: engine-work nanoseconds spent while a staged request was in
+//! flight (`overlap_ns`) vs with nothing staged (`serial_ns`). Like the
+//! [`StallMeter`] it is wall-clock-only diagnostics — the simulated
+//! paper-units (rounds, bytes, samples, memory) are identical with the
+//! pipeline on or off, and the parity tests pin that. Meters travel via
+//! [`ShardPool::per_shard_metrics`]: ONE gather job per shard, all
+//! submitted before any wait, carrying stats + stalls + overlap together.
 
 use super::{Engine, EngineStats};
-use crate::accounting::StallMeter;
+use crate::accounting::{OverlapMeter, StallMeter};
 use crate::data::blocks::{pack_all, Block};
 use crate::data::{Sample, SampleStream};
 use anyhow::{anyhow, Context, Result};
@@ -98,6 +129,10 @@ pub struct ShardState {
     /// per-run draw staging counters (dispatch stall, stage hits/misses);
     /// reset by `clear_machines`
     pub stalls: StallMeter,
+    /// per-run batched-fan pipeline counters (fans run, requests staged,
+    /// overlapped vs serial engine-work wall-clock); reset by
+    /// `clear_machines`
+    pub overlap: OverlapMeter,
 }
 
 impl ShardState {
@@ -135,6 +170,26 @@ pub struct Pending<T> {
 impl<T> Pending<T> {
     pub fn wait(self) -> Result<T> {
         self.rx.recv().map_err(|_| anyhow!("shard worker is gone (pool shut down?)"))?
+    }
+}
+
+/// One shard's slice of a batched fan (see [`ShardPool::fan_batches`]):
+/// the machines this shard's single job covers, in ascending machine
+/// order, and the pending per-machine results. The coordinator waits one
+/// `FanBatch` per shard instead of one `Pending` per machine — fewer
+/// channel round-trips, same fixed-order join (results carry their
+/// machine ids, so the caller reassembles machine order exactly).
+pub struct FanBatch<T> {
+    /// machines this shard's job runs, ascending
+    pub machines: Vec<usize>,
+    pending: Pending<Vec<(usize, T)>>,
+}
+
+impl<T> FanBatch<T> {
+    /// Block until the shard ran every machine in this batch; returns
+    /// `(machine, result)` pairs in ascending machine order.
+    pub fn wait(self) -> Result<Vec<(usize, T)>> {
+        self.pending.wait()
     }
 }
 
@@ -177,13 +232,44 @@ pub struct LaneClient {
 impl LaneClient {
     /// Ask the lane for machine `machine`'s next `n`-sample pack and
     /// block until it arrives. The caller times this wait — it is the
-    /// dispatch stall.
+    /// dispatch stall. Equivalent to [`LaneClient::request`] followed
+    /// immediately by [`LaneTicket::collect`].
     pub fn take(&self, machine: usize, n: usize, d: usize, prefetch: bool) -> Result<TakeReply> {
+        self.request(machine, n, d, prefetch)?.collect()
+    }
+
+    /// Send the take command WITHOUT waiting for the reply — the
+    /// pipelined fan's half of a take. The returned ticket collects the
+    /// reply later; the lane starts drawing/packing the moment the
+    /// command arrives, concurrently with whatever the engine thread does
+    /// until the collect.
+    pub fn request(&self, machine: usize, n: usize, d: usize, pf: bool) -> Result<LaneTicket> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(LaneCmd::Take { machine, n, d, prefetch, reply })
+            .send(LaneCmd::Take { machine, n, d, prefetch: pf, reply })
             .map_err(|_| anyhow!("prefetch lane for machine {machine} is gone"))?;
-        rx.recv().map_err(|_| anyhow!("prefetch lane died before replying (machine {machine})"))?
+        Ok(LaneTicket { machine, rx })
+    }
+}
+
+/// An in-flight lane take (see [`LaneClient::request`]): the reply
+/// channel for one machine's pack, collected at the pipeline's collect
+/// point. At most one is in flight per machine at a time (the lane serves
+/// its command queue in FIFO order, so tickets complete in request order).
+pub struct LaneTicket {
+    machine: usize,
+    rx: mpsc::Receiver<Result<TakeReply>>,
+}
+
+impl LaneTicket {
+    /// Block until the lane serves this request. The caller times this
+    /// wait — with the pipeline on it is the residual dispatch stall the
+    /// overlap could not hide.
+    pub fn collect(self) -> Result<TakeReply> {
+        let machine = self.machine;
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("prefetch lane died before replying (machine {machine})"))?
     }
 }
 
@@ -443,6 +529,54 @@ impl ShardPool {
         self.submit_named(self.shard_of(machine), &format!("machine {machine} job"), f).wait()
     }
 
+    /// The batched fan, raw form: ONE job per shard, handed the full
+    /// ascending list of machines (`0..m` filtered by ownership) that
+    /// shard covers, so the closure controls its own loop — the pipelined
+    /// draw fan lives on this. Shards with no machines (`m` < shard
+    /// count) get no job. Every job is submitted before this returns;
+    /// wait the returned batches in order for the deterministic join.
+    pub fn fan_batches_raw<T, F>(&self, m: usize, label: &str, f: F) -> Vec<FanBatch<T>>
+    where
+        T: Send + 'static,
+        F: Fn(&mut ShardState, &[usize]) -> Result<Vec<(usize, T)>> + Clone + Send + 'static,
+    {
+        let mut out = Vec::with_capacity(self.shards());
+        for s in 0..self.shards() {
+            let machines: Vec<usize> = (s..m).step_by(self.shards()).collect();
+            if machines.is_empty() {
+                continue;
+            }
+            let ms = machines.clone();
+            let f = f.clone();
+            let pending = self.submit_named(s, label, move |state| {
+                state.overlap.fans += 1;
+                f(state, &ms)
+            });
+            out.push(FanBatch { machines, pending });
+        }
+        out
+    }
+
+    /// The batched fan, per-machine form: like the old one-job-per-machine
+    /// fan but with one job per shard running its machines in ascending
+    /// order — the identical per-shard execution order the per-machine
+    /// submissions produced, so results and meters are bit-for-bit
+    /// unchanged. A failing machine fails its whole shard batch (the run
+    /// aborts either way).
+    pub fn fan_batches<T, F>(&self, m: usize, label: &str, f: F) -> Vec<FanBatch<T>>
+    where
+        T: Send + 'static,
+        F: Fn(&mut ShardState, usize) -> Result<T> + Clone + Send + 'static,
+    {
+        self.fan_batches_raw(m, label, move |state, machines| {
+            let mut out = Vec::with_capacity(machines.len());
+            for &i in machines {
+                out.push((i, f(state, i)?));
+            }
+            Ok(out)
+        })
+    }
+
     /// Install machine `machine`'s sample stream on its shard's prefetch
     /// lane. Safe to call before submitting draw jobs: the install is
     /// enqueued on the lane channel ahead of any take those jobs send.
@@ -456,8 +590,9 @@ impl ShardPool {
 
     /// Drop every shard-resident machine batch, sample stream (lane-side),
     /// staged pack, evaluator segment and session slot, and zero the stall
-    /// meters (between runs: stale machine state from a previous
-    /// experiment must not outlive it, and stall numbers are per-run).
+    /// and overlap meters (between runs: stale machine state from a
+    /// previous experiment must not outlive it, and the wall-clock meters
+    /// are per-run).
     pub fn clear_machines(&self) -> Result<()> {
         let pends: Vec<Pending<()>> = (0..self.shards())
             .map(|s| {
@@ -465,6 +600,7 @@ impl ShardPool {
                     state.batches.clear();
                     state.eval.clear();
                     state.stalls = StallMeter::default();
+                    state.overlap = OverlapMeter::default();
                     state.engine.reset_session();
                     Ok(())
                 })
@@ -483,12 +619,29 @@ impl ShardPool {
         Ok(())
     }
 
-    /// Per-shard engine traffic counters, gathered in shard order.
-    pub fn per_shard_stats(&self) -> Result<Vec<EngineStats>> {
-        let pends: Vec<Pending<EngineStats>> = (0..self.shards())
-            .map(|s| self.submit(s, |state| Ok(state.engine.stats.clone())))
+    /// Per-shard diagnostics in shard order, ONE batched job per shard:
+    /// engine traffic counters, stall meter and overlap meter travel
+    /// together, and every gather job is submitted before any wait — a
+    /// single channel round-trip per shard instead of one per meter per
+    /// call.
+    pub fn per_shard_metrics(&self) -> Result<Vec<ShardMetrics>> {
+        let pends: Vec<Pending<ShardMetrics>> = (0..self.shards())
+            .map(|s| {
+                self.submit_named(s, "gather shard metrics", |state| {
+                    Ok(ShardMetrics {
+                        stats: state.engine.stats.clone(),
+                        stalls: state.stalls.clone(),
+                        overlap: state.overlap.clone(),
+                    })
+                })
+            })
             .collect();
         pends.into_iter().map(|p| p.wait()).collect()
+    }
+
+    /// Per-shard engine traffic counters, gathered in shard order.
+    pub fn per_shard_stats(&self) -> Result<Vec<EngineStats>> {
+        Ok(self.per_shard_metrics()?.into_iter().map(|m| m.stats).collect())
     }
 
     /// All shard engines' traffic counters merged into one [`EngineStats`]
@@ -496,8 +649,8 @@ impl ShardPool {
     /// whole-process view).
     pub fn gathered_stats(&self) -> Result<EngineStats> {
         let mut total = EngineStats::default();
-        for s in self.per_shard_stats()? {
-            total.merge(&s);
+        for s in self.per_shard_metrics()? {
+            total.merge(&s.stats);
         }
         Ok(total)
     }
@@ -505,20 +658,54 @@ impl ShardPool {
     /// Per-shard draw-staging counters (dispatch stall, stage hit/miss),
     /// gathered in shard order. Per-run: zeroed by `clear_machines`.
     pub fn per_shard_stalls(&self) -> Result<Vec<StallMeter>> {
-        let pends: Vec<Pending<StallMeter>> = (0..self.shards())
-            .map(|s| self.submit(s, |state| Ok(state.stalls.clone())))
-            .collect();
-        pends.into_iter().map(|p| p.wait()).collect()
+        Ok(self.per_shard_metrics()?.into_iter().map(|m| m.stalls).collect())
     }
 
     /// All shards' stall meters folded into one cluster total.
     pub fn gathered_stalls(&self) -> Result<StallMeter> {
         let mut total = StallMeter::default();
-        for s in self.per_shard_stalls()? {
-            total.merge(&s);
+        for s in self.per_shard_metrics()? {
+            total.merge(&s.stalls);
         }
         Ok(total)
     }
+
+    /// Per-shard batched-fan pipeline counters, gathered in shard order.
+    /// Per-run: zeroed by `clear_machines`.
+    pub fn per_shard_overlap(&self) -> Result<Vec<OverlapMeter>> {
+        Ok(self.per_shard_metrics()?.into_iter().map(|m| m.overlap).collect())
+    }
+
+    /// All shards' overlap meters folded into one cluster total.
+    pub fn gathered_overlap(&self) -> Result<OverlapMeter> {
+        let mut total = OverlapMeter::default();
+        for s in self.per_shard_metrics()? {
+            total.merge(&s.overlap);
+        }
+        Ok(total)
+    }
+
+    /// The run recorder's gather: both per-run wall-clock meters folded
+    /// into cluster totals from ONE per-shard round-trip.
+    pub fn gathered_run_meters(&self) -> Result<(StallMeter, OverlapMeter)> {
+        let mut stalls = StallMeter::default();
+        let mut overlap = OverlapMeter::default();
+        for s in self.per_shard_metrics()? {
+            stalls.merge(&s.stalls);
+            overlap.merge(&s.overlap);
+        }
+        Ok((stalls, overlap))
+    }
+}
+
+/// One shard's gathered diagnostic meters (see
+/// [`ShardPool::per_shard_metrics`]): all host-side bookkeeping, no
+/// engine state.
+#[derive(Clone, Debug)]
+pub struct ShardMetrics {
+    pub stats: EngineStats,
+    pub stalls: StallMeter,
+    pub overlap: OverlapMeter,
 }
 
 impl Drop for ShardPool {
@@ -571,6 +758,7 @@ fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result
         eval: HashMap::new(),
         lane,
         stalls: StallMeter::default(),
+        overlap: OverlapMeter::default(),
     };
     while let Ok(job) = rx.recv() {
         job(&mut state);
@@ -735,6 +923,56 @@ mod tests {
         assert!(st.streams.is_empty() && st.staged.is_empty() && st.want.is_empty());
         let err = st.serve_take(0, 4, 4).unwrap_err().to_string();
         assert!(err.contains("no stream"), "{err}");
+    }
+
+    #[test]
+    fn pipelined_request_collect_serves_the_serial_draw_order() {
+        // the pipelined fan's protocol: request(k+1) is issued after
+        // collect(k) but BEFORE machine k's pack is consumed; the lane
+        // must serve the identical per-machine sequences a serial
+        // take-loop would, interleaving or not
+        let (client, h) = spawn_lane();
+        for i in 0..2usize {
+            client
+                .tx
+                .send(LaneCmd::Install(
+                    i,
+                    Box::new(SynthStream::new(SynthSpec::least_squares(4), 100 + i as u64)),
+                ))
+                .unwrap();
+        }
+        let mut refs: Vec<SynthStream> =
+            (0..2).map(|i| SynthStream::new(SynthSpec::least_squares(4), 100 + i as u64)).collect();
+        for _round in 0..3 {
+            // one-deep window over machines [0, 1], like the batched fan
+            let mut pending = Some(client.request(0, 50, 4, true).unwrap());
+            for i in 0..2usize {
+                let reply = pending.take().unwrap().collect().unwrap();
+                if i + 1 < 2 {
+                    pending = Some(client.request(i + 1, 50, 4, true).unwrap());
+                }
+                assert_eq!(reply.drawn, 50);
+                assert_eq!(block_ys(&reply.blocks), ys(&refs[i].draw_many(50)), "machine {i}");
+            }
+        }
+        drop(client);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn take_is_request_then_collect() {
+        let (client, h) = spawn_lane();
+        client
+            .tx
+            .send(LaneCmd::Install(0, Box::new(SynthStream::new(SynthSpec::least_squares(4), 17))))
+            .unwrap();
+        let mut reference = SynthStream::new(SynthSpec::least_squares(4), 17);
+        let r1 = client.take(0, 20, 4, false).unwrap();
+        assert_eq!(block_ys(&r1.blocks), ys(&reference.draw_many(20)));
+        let r2 = client.request(0, 20, 4, false).unwrap().collect().unwrap();
+        assert_eq!(block_ys(&r2.blocks), ys(&reference.draw_many(20)));
+        drop(client);
+        h.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Fan-pipeline parity: `pipeline=on` vs `pipeline=off` is a pure
+//! scheduling change inside each shard worker. The pipelined loop sends
+//! machine k+1's lane request only AFTER collecting machine k's reply,
+//! so the lane command FIFO sees the identical arrival order either way
+//! and every machine receives the exact samples the serial loop would
+//! have drawn. Iterates, objective curves, sample/memory meters, and
+//! simulated time are therefore bit-identical across
+//! {pipeline on/off} x {prefetch on/off} x shard counts, for streaming
+//! and finite-ERM (ragged epoch boundary) scenarios, and under
+//! mismatched draw sizes. Only the wall-clock [`StallMeter`] /
+//! [`OverlapMeter`] pair may differ (excluded from the parity surface —
+//! see `runtime::shard`).
+//!
+//! Requires `make artifacts`.
+
+use mbprox::algos::RunResult;
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::objective::mean_grad_chained_host;
+use mbprox::runtime::{Engine, PipelinePolicy, PlanePolicy, PrefetchPolicy, ShardPool};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Run `cfg` on a fresh sharded runner under explicit pipeline and
+/// prefetch policies.
+fn run_with(
+    pipeline: PipelinePolicy,
+    prefetch: PrefetchPolicy,
+    shards: usize,
+    cfg: &ExperimentConfig,
+) -> RunResult {
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("run `make artifacts` before cargo test"))
+        .with_plane(PlanePolicy::Sharded)
+        .with_shards(ShardPool::new(shards, &dir).expect("shard pool construction"))
+        .with_prefetch(prefetch)
+        .with_pipeline(pipeline);
+    r.run(cfg).unwrap_or_else(|e| {
+        panic!(
+            "{} (pipeline={}, prefetch={}, shards={shards}): {e:?}",
+            cfg.method,
+            pipeline.as_str(),
+            prefetch.as_str()
+        )
+    })
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full bitwise identity on everything except the wall-clock meters.
+fn assert_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(bits32(&a.w), bits32(&b.w), "{label}: final iterate bits");
+    assert_eq!(a.report, b.report, "{label}: ClusterMeter report");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{label}: simulated time");
+    assert_eq!(a.curve.len(), b.curve.len(), "{label}: curve length");
+    for (p, q) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(p.samples_total, q.samples_total, "{label}: curve samples");
+        assert_eq!(p.comm_rounds, q.comm_rounds, "{label}: curve rounds");
+        assert_eq!(p.vec_ops, q.vec_ops, "{label}: curve vec ops");
+        match (p.objective, q.objective) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: objective bits")
+            }
+            (None, None) => {}
+            other => panic!("{label}: objective presence mismatch {other:?}"),
+        }
+    }
+}
+
+/// The full policy cross-product at shards ∈ {1, 2, 4} — the
+/// (off, off, shards=1) run is the one reference every other leg must
+/// match bit for bit.
+fn pipeline_parity(cfg: &ExperimentConfig) {
+    let reference = run_with(PipelinePolicy::Off, PrefetchPolicy::Off, 1, cfg);
+    for n in [1usize, 2, 4] {
+        for pipeline in [PipelinePolicy::Off, PipelinePolicy::On] {
+            for prefetch in [PrefetchPolicy::Off, PrefetchPolicy::On] {
+                let run = run_with(pipeline, prefetch, n, cfg);
+                let label = format!(
+                    "{} pipeline={} prefetch={} shards={n}",
+                    cfg.method,
+                    pipeline.as_str(),
+                    prefetch.as_str()
+                );
+                assert_identical(&reference, &run, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_drift_pipeline_parity() {
+    // b = 300 -> one full block + a 44-row ragged tail per machine draw;
+    // with m=4 over <= 4 shards every worker owns >= 1 machine and the
+    // 2-shard legs pipeline 2 machines per fan
+    let cfg = ExperimentConfig {
+        method: "mp-dsvrg".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 300,
+        n_budget: 2400, // T = 2
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    pipeline_parity(&cfg);
+}
+
+#[test]
+fn erm_fixed_ragged_epoch_pipeline_parity() {
+    // 2051 fixed samples shard 513/513/513/512: the epoch-bounded streams
+    // return honestly-short boundary batches; the pipelined window must
+    // carry those short replies through unchanged
+    let cfg = ExperimentConfig {
+        method: "dsvrg-erm".into(),
+        scenario: Some("erm-fixed".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 256,
+        n_budget: 2051,
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        // the config-key path (rather than Runner::with_pipeline): the
+        // per-run key must beat the runner's process-level policy
+        pipeline: PipelinePolicy::On,
+        ..ExperimentConfig::default()
+    };
+    let via_cfg = {
+        let dir = artifacts_dir();
+        let mut r = Runner::new(Engine::new(&dir).expect("engine"))
+            .with_plane(PlanePolicy::Sharded)
+            .with_shards(ShardPool::new(2, &dir).expect("pool"))
+            .with_pipeline(PipelinePolicy::Off); // cfg key must win
+        r.run(&cfg).expect("erm-fixed with pipeline=on from the config")
+    };
+    let cfg_default = ExperimentConfig { pipeline: PipelinePolicy::Auto, ..cfg.clone() };
+    let off = run_with(PipelinePolicy::Off, PrefetchPolicy::Off, 2, &cfg_default);
+    assert_identical(&off, &via_cfg, "erm-fixed cfg-key pipeline=on");
+    // the cfg-key run really pipelined: its overlap meter staged packs
+    let o = via_cfg.overlap.expect("sharded runs surface an overlap meter");
+    assert!(o.staged > 0, "cfg-key pipeline=on run never staged a pack: {o:?}");
+    pipeline_parity(&cfg_default);
+}
+
+/// Mismatched draw sizes ride the same lane re-split machinery as the
+/// prefetch stage: a pipelined request window must tear down and re-serve
+/// leftovers in draw order exactly like the serial loop. The packed
+/// gradients (chained kernels: bit-identical across engines) pin the
+/// served samples bit for bit.
+#[test]
+fn mismatched_draw_sizes_pipelined_bitwise() {
+    let grads_with = |pipeline: PipelinePolicy| -> Vec<Vec<u32>> {
+        let dir = artifacts_dir();
+        let (d, m) = (64usize, 4usize);
+        let mut r = Runner::new(Engine::new(&dir).expect("engine"))
+            .with_plane(PlanePolicy::Sharded)
+            .with_shards(ShardPool::new(2, &dir).expect("pool"))
+            .with_prefetch(PrefetchPolicy::On)
+            .with_pipeline(pipeline);
+        let cfg = ExperimentConfig {
+            method: "minibatch-sgd".into(),
+            scenario: Some("heavy-tail".into()),
+            loss: Loss::Squared,
+            m,
+            b_local: 300,
+            dim: d,
+            seed: 99,
+            eval_samples: 64,
+            ..ExperimentConfig::default()
+        };
+        let mut ctx = r.context(&cfg).unwrap();
+        let w: Vec<f32> = (0..d).map(|j| (j as f32 * 0.1).cos() * 0.05).collect();
+        // 300 stages 300; asking 200 splits the stage; 44 rides the
+        // leftover tail; 300 spans leftovers + a fresh draw
+        [300usize, 200, 44, 300]
+            .into_iter()
+            .map(|b| {
+                let batches = ctx.draw_batches_grad_only(b, false).unwrap();
+                let mut net = Network::new(m, NetModel::default());
+                let g = mean_grad_chained_host(
+                    ctx.plane.engine,
+                    ctx.plane.shards,
+                    Loss::Squared,
+                    &batches,
+                    &w,
+                    &mut net,
+                    &mut ctx.meter,
+                )
+                .unwrap();
+                bits32(&g)
+            })
+            .collect()
+    };
+    let off = grads_with(PipelinePolicy::Off);
+    let on = grads_with(PipelinePolicy::On);
+    assert_eq!(off, on, "pipelined draw windows must preserve draw order bit for bit");
+}
+
+/// The overlap meter itself: surfaced on sharded runs, honest about the
+/// policy that ran, and never part of the parity surface above.
+#[test]
+fn overlap_meter_reports_the_policy_that_ran() {
+    let cfg = ExperimentConfig {
+        method: "minibatch-sgd".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 256,
+        n_budget: 4096, // 4 outer steps of drawing
+        dim: 64,
+        seed: 11,
+        eval_samples: 64,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    };
+    let off = run_with(PipelinePolicy::Off, PrefetchPolicy::Off, 2, &cfg);
+    let o_off = off.overlap.expect("sharded runs surface an overlap meter");
+    assert!(o_off.fans > 0, "batched fans must run regardless of policy");
+    assert_eq!(o_off.staged, 0, "pipeline=off never stages a pack");
+    assert_eq!(o_off.overlap_ns, 0, "pipeline=off never overlaps pack work");
+
+    let on = run_with(PipelinePolicy::On, PrefetchPolicy::Off, 2, &cfg);
+    let o_on = on.overlap.expect("sharded runs surface an overlap meter");
+    // batching is unconditional: the fan count is policy-independent
+    assert_eq!(o_on.fans, o_off.fans, "fan count must not depend on the pipeline policy");
+    // 2 machines per shard -> every fan's first pack runs staged
+    assert!(o_on.staged > 0, "pipeline=on staged no packs: {o_on:?}");
+    // identical draw schedule either way, as the stall meter sees it
+    let (s_off, s_on) = (off.stalls.expect("stalls"), on.stalls.expect("stalls"));
+    assert_eq!(s_on.takes, s_off.takes, "identical draw schedule either way");
+}
