@@ -13,7 +13,11 @@
 //! meter recorded), the prefetch lane's dispatch-stall comparison
 //! (prefetch on vs off: takes, hit rates, per-shard stall time), and the
 //! batched-fan pipeline comparison (pipeline on vs off: overlap meters,
-//! per-shard overlap time, serialized-vs-pipelined wall-clock). Writes
+//! per-shard overlap time, serialized-vs-pipelined wall-clock), and the
+//! fault-injection degradation benchmark (mp-dsvrg vs minibatch-SGD
+//! simulated time under increasing straggler severity, plus a seeded
+//! dropout/re-entry run — all counters deterministic from the seed, so
+//! they gate structurally in BENCH_baseline.json). Writes
 //! `BENCH_runtime.json` (stats + engine traffic counters) so the perf
 //! trajectory is trackable across PRs; CI diffs the counters against the
 //! committed `BENCH_baseline.json` via the `bench_gate` binary.
@@ -703,6 +707,111 @@ fn main() {
                 s_off.median_ns / 1e6
             );
         }
+    }
+
+    section("fault injection: degradation under stragglers (mp-dsvrg vs minibatch-SGD)");
+    {
+        use mbprox::comm::faults::FaultsPolicy;
+        use mbprox::config::ExperimentConfig;
+        use mbprox::runtime::{default_artifacts_dir, Engine};
+
+        let dir = default_artifacts_dir();
+        // fresh chained runner (no pool): the fault schedule is drawn
+        // coordinator-side at each collective's network charge, so the
+        // shard plane adds nothing to this measurement and the runs stay
+        // fast. Every counter below is SIMULATED and seed-deterministic —
+        // bounded in BENCH_baseline.json, not wall-clock noise.
+        let mut r = Runner::new(Engine::new(&dir).unwrap());
+        let base = ExperimentConfig {
+            m: 4,
+            b_local: 256,
+            n_budget: 4096,
+            dim: 64,
+            seed: 37,
+            eval_samples: 64,
+            eval_every: 0,
+            loss: Loss::Squared,
+            faults: FaultsPolicy::On,
+            slowdown_alpha: Some(1.5),
+            ..ExperimentConfig::default()
+        };
+        let mut p50_added: Vec<(&str, f64)> = Vec::new();
+        for (method, mtag) in [("mp-dsvrg", "mbprox"), ("minibatch-sgd", "sgd")] {
+            let mut added = Vec::new();
+            let mut sims = Vec::new();
+            for (p, ptag) in [(0.0, "p0"), (0.2, "p20"), (0.5, "p50")] {
+                let cfg = ExperimentConfig {
+                    method: method.into(),
+                    straggler_p: Some(p),
+                    ..base.clone()
+                };
+                let res = r.run(&cfg).unwrap();
+                let fm = res.faults.clone().expect("faults=on must surface a meter");
+                println!(
+                    "  {method} straggler_p={p}: {} stragglers over {} slow rounds, \
+                     +{:.5} s on {:.5} s simulated",
+                    fm.stragglers, fm.slow_rounds, fm.added_time_s, res.sim_time_s
+                );
+                report.counter(&format!("faults.{mtag}.{ptag}.stragglers"), fm.stragglers as f64);
+                report.counter(&format!("faults.{mtag}.{ptag}.added_s"), fm.added_time_s);
+                added.push(fm.added_time_s);
+                sims.push(res.sim_time_s);
+            }
+            // the per-(round,machine) fault rng is pure, so raising p only
+            // ADDS straggler events (the shared events keep identical
+            // Pareto draws): severity is monotone by construction
+            assert!(
+                added[0] == 0.0 && added[1] <= added[2],
+                "straggler cost must be monotone in p for {method}: {added:?}"
+            );
+            let degradation = sims[2] / sims[0];
+            assert!(
+                degradation >= 1.0,
+                "straggling must never make {method} faster: {degradation}"
+            );
+            println!("  -> {method} sim-time degradation at p=0.5: {degradation:.3}x");
+            report.counter(&format!("faults.{mtag}.degradation"), degradation);
+            p50_added.push((mtag, added[2]));
+        }
+        // cross-method shape (recorded, not bounded: the two methods run
+        // different round counts at the same budget, so neither direction
+        // is guaranteed): minibatch-prox's fewer, heavier rounds expose
+        // less straggler surface per sample than SGD's many light ones
+        let ratio = p50_added[1].1 / p50_added[0].1.max(f64::MIN_POSITIVE);
+        println!("  -> straggler cost ratio sgd/mbprox at p=0.5: {ratio:.3}");
+        report.counter("faults.added_ratio_sgd_over_mbprox", ratio);
+
+        // dropout: machines leave for whole windows and re-enter at a
+        // collective boundary; survivors carry the dropped share (the
+        // m/(m-k) redistribution factor) as added simulated time
+        let cfg_drop = ExperimentConfig {
+            method: "minibatch-sgd".into(),
+            straggler_p: Some(0.0),
+            dropout_p: Some(0.5),
+            dropout_rounds: Some(2),
+            ..base.clone()
+        };
+        let res_a = r.run(&cfg_drop).unwrap();
+        let res_b = r.run(&cfg_drop).unwrap();
+        let fa = res_a.faults.clone().expect("faults=on must surface a meter");
+        println!(
+            "  dropout_p=0.5: {} dropouts, {} machine-rounds out, {} re-entries, +{:.5} s",
+            fa.dropouts, fa.dropped_rounds, fa.reentries, fa.added_time_s
+        );
+        assert!(
+            fa.dropouts >= 1 && fa.reentries >= 1,
+            "seeded dropout run produced no dropout/re-entry cycle: {fa:?}"
+        );
+        // seeded reproducibility: the whole schedule and its cost are a
+        // pure function of (seed, m, params) — bit-equal across runs
+        assert_eq!(res_a.faults, res_b.faults, "fault schedule must be seed-deterministic");
+        assert_eq!(
+            res_a.sim_time_s.to_bits(),
+            res_b.sim_time_s.to_bits(),
+            "faulted sim time must be bit-reproducible"
+        );
+        report.counter("faults.dropout.dropouts", fa.dropouts as f64);
+        report.counter("faults.dropout.reentries", fa.reentries as f64);
     }
 
     section("engine cumulative stats");

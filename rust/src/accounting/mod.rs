@@ -293,6 +293,55 @@ impl OverlapMeter {
     }
 }
 
+/// Fault-injection and recovery counters for one run. The simulated-event
+/// fields (stragglers, dropouts, re-entries, `added_time_s`) come from the
+/// seeded `comm::faults::FaultPlan` and are deterministic functions of the
+/// experiment seed — identical across reruns and shard counts. The
+/// recovery fields (`recoveries`, `replays`) count REAL events on this
+/// host: shard workers the pool restarted and fan batches it replayed.
+/// Like [`StallMeter`] and [`OverlapMeter`], nothing here touches the
+/// paper's cost model: rounds, vectors, samples and memory are charged
+/// identically with faults on or off, and the meter does NOT measure
+/// wall-clock — `added_time_s` is simulated network time only.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultMeter {
+    /// collective rounds whose simulated time any fault scaled
+    pub slow_rounds: u64,
+    /// straggler events (machine-rounds drawn slow)
+    pub stragglers: u64,
+    /// dropout events (a machine leaving the cluster)
+    pub dropouts: u64,
+    /// machine-rounds spent dropped out (including the drop round)
+    pub dropped_rounds: u64,
+    /// machines re-admitted at a collective boundary
+    pub reentries: u64,
+    /// shard workers restarted by supervised recovery (real, not simulated)
+    pub recoveries: u64,
+    /// fan batches replayed after a worker death (real, not simulated)
+    pub replays: u64,
+    /// simulated seconds added on top of the fault-free network model
+    pub added_time_s: f64,
+}
+
+impl FaultMeter {
+    /// Fold another meter in (cluster totals / plan + pool combine).
+    pub fn merge(&mut self, other: &FaultMeter) {
+        self.slow_rounds += other.slow_rounds;
+        self.stragglers += other.stragglers;
+        self.dropouts += other.dropouts;
+        self.dropped_rounds += other.dropped_rounds;
+        self.reentries += other.reentries;
+        self.recoveries += other.recoveries;
+        self.replays += other.replays;
+        self.added_time_s += other.added_time_s;
+    }
+
+    /// True when any fault or recovery event was recorded at all.
+    pub fn any(&self) -> bool {
+        *self != FaultMeter::default()
+    }
+}
+
 /// The Table-1 row: per-machine maxima + total samples.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ResourceReport {
@@ -468,6 +517,29 @@ mod tests {
         assert_eq!(b.overlap_ns, 15);
         assert_eq!(b.serial_ns, 150);
         assert_eq!(OverlapMeter::default().overlap_frac(), 0.0);
+    }
+
+    #[test]
+    fn fault_meter_merges_and_reports_any() {
+        let mut a = FaultMeter::default();
+        assert!(!a.any());
+        a.slow_rounds = 2;
+        a.stragglers = 3;
+        a.added_time_s = 0.5;
+        assert!(a.any());
+        let mut b =
+            FaultMeter { dropouts: 1, dropped_rounds: 4, reentries: 1, ..Default::default() };
+        b.recoveries = 1;
+        b.replays = 2;
+        b.merge(&a);
+        assert_eq!(b.slow_rounds, 2);
+        assert_eq!(b.stragglers, 3);
+        assert_eq!(b.dropouts, 1);
+        assert_eq!(b.dropped_rounds, 4);
+        assert_eq!(b.reentries, 1);
+        assert_eq!(b.recoveries, 1);
+        assert_eq!(b.replays, 2);
+        assert!((b.added_time_s - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod minibatch_sgd;
 pub mod sgd_local;
 pub mod solvers;
 
-use crate::accounting::{ClusterMeter, OverlapMeter, ResourceReport, StallMeter};
+use crate::accounting::{ClusterMeter, FaultMeter, OverlapMeter, ResourceReport, StallMeter};
 use crate::comm::Network;
 use crate::data::{Loss, MachineStreams};
 use crate::objective::{self, Evaluator, MachineBatch};
@@ -292,6 +292,14 @@ pub struct RunResult {
     /// `None` off the sharded plane. Wall-clock only, like `stalls` —
     /// never part of the simulated cost model.
     pub overlap: Option<OverlapMeter>,
+    /// Fault accounting: the seeded simulated schedule (stragglers,
+    /// dropouts, added simulated seconds — deterministic, from the
+    /// network's `FaultPlan`) merged with the REAL recovery tally
+    /// (worker revivals and batch replays, from the shard pool).
+    /// `None` when faults are off AND nothing was recovered; a genuine
+    /// worker death is reported even with `faults=off`. Never part of
+    /// the paper's cost model — iterates/curves carry no fault marks.
+    pub faults: Option<FaultMeter>,
 }
 
 /// A distributed stochastic optimization method.
@@ -331,6 +339,16 @@ impl Recorder {
             }
             None => (None, None),
         };
+        // simulated schedule (from the fault plan, deterministic) merged
+        // with the real recovery tally (from the pool); surfaced whenever
+        // either has something to say
+        let mut fm = ctx.net.faults.as_ref().map(|p| p.meter.clone()).unwrap_or_default();
+        if let Some(pool) = ctx.plane.shards {
+            let (recoveries, replays) = pool.recovery_counts();
+            fm.recoveries += recoveries;
+            fm.replays += replays;
+        }
+        let faults = if ctx.net.faults.is_some() || fm.any() { Some(fm) } else { None };
         Ok(RunResult {
             name: self.name,
             report: ctx.meter.report(),
@@ -339,6 +357,7 @@ impl Recorder {
             final_objective,
             stalls,
             overlap,
+            faults,
             w,
         })
     }

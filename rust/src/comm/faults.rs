@@ -1,0 +1,303 @@
+//! Seeded, deterministic fault injection for the simulated cluster.
+//!
+//! A [`FaultPlan`] scales the α–β network model's per-round time with
+//! per-machine straggler slowdowns (heavy-tail Pareto draws) and machine
+//! dropout windows (a dropped machine leaves for `dropout_rounds`
+//! collective rounds; survivors carry its share, and it re-enters at the
+//! next collective boundary). The plan lives strictly OUTSIDE the
+//! bit-parity surface: it multiplies the simulated `sim_time_s` of each
+//! collective round and feeds the [`FaultMeter`], never the iterates,
+//! curves, or paper-units counts (rounds, vectors, samples, memory).
+//!
+//! # Determinism
+//!
+//! Fault randomness forks off the experiment seed through a reserved
+//! stream tag ([`FAULT_TAG`]), so it is independent of every data stream,
+//! and each (round, machine) cell draws from its own pure split —
+//! `root.split(round).split(machine)` — making the whole plan a function
+//! of `(seed, m, params, round)` alone. The coordinator charges each
+//! collective exactly once regardless of plane or shard count, and rounds
+//! are indexed by the network's own monotone round counter, so the same
+//! config produces the identical fault sequence at shards {1, 2, 4} and
+//! across reruns (pinned by `rust/tests/fault_parity.rs`).
+//!
+//! # Exactness of the off switch
+//!
+//! `faults=off` never constructs a plan — the charge path does not even
+//! multiply. A zero-probability plan computes a factor of exactly `1.0`
+//! and returns `dt` untouched (no f64 round-trip: the `1.0` branch is
+//! short-circuited), so it is asserted bitwise equal to no plan at all.
+
+use crate::accounting::FaultMeter;
+use crate::util::prng::Prng;
+
+/// Stream-split tag reserved for fault randomness. Data streams split off
+/// the raw seed with machine tags `0..m` (and the evaluator with its own
+/// tag); the fault stream forks through this tag first so it can never
+/// collide with them.
+const FAULT_TAG: u64 = 0xFA17;
+
+/// Whether the run constructs a [`FaultPlan`] at all. Off is the default
+/// and is bitwise identical to a build without the fault layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultsPolicy {
+    #[default]
+    Off,
+    On,
+}
+
+impl FaultsPolicy {
+    pub fn parse(s: &str) -> Option<FaultsPolicy> {
+        match s {
+            "off" => Some(FaultsPolicy::Off),
+            "on" => Some(FaultsPolicy::On),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultsPolicy::Off => "off",
+            FaultsPolicy::On => "on",
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        matches!(self, FaultsPolicy::On)
+    }
+}
+
+/// The knobs behind the `faults.*` config namespace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultParams {
+    /// per-machine per-round probability of straggling (`faults.straggler_p`)
+    pub straggler_p: f64,
+    /// Pareto tail index of the straggler slowdown factor
+    /// (`faults.slowdown_alpha`); smaller = heavier tail, draws are >= 1
+    pub slowdown_alpha: f64,
+    /// per-machine per-round probability of dropping out (`faults.dropout_p`)
+    pub dropout_p: f64,
+    /// collective rounds a dropped machine stays out before re-entering
+    /// (`faults.dropout_rounds`)
+    pub dropout_rounds: u64,
+}
+
+impl Default for FaultParams {
+    fn default() -> Self {
+        FaultParams { straggler_p: 0.1, slowdown_alpha: 1.5, dropout_p: 0.0, dropout_rounds: 3 }
+    }
+}
+
+impl FaultParams {
+    /// A plan that can never fire — used by the parity tests to assert the
+    /// fault layer's presence is bitwise invisible.
+    pub fn zero() -> Self {
+        FaultParams { straggler_p: 0.0, slowdown_alpha: 1.5, dropout_p: 0.0, dropout_rounds: 1 }
+    }
+}
+
+/// A seeded fault schedule over the m-machine cluster, consulted once per
+/// collective round by `comm::Network::charge`. Stateless per (round,
+/// machine) except for the dropout windows, which advance with the round
+/// counter only — never with wall-clock or thread timing.
+pub struct FaultPlan {
+    root: Prng,
+    m: usize,
+    pub params: FaultParams,
+    /// exclusive round index machine `i` stays dropped until; 0 = in
+    /// (machines re-enter at the first collective boundary past their
+    /// window, which is where the simulated cluster re-admits them)
+    dropped_until: Vec<u64>,
+    /// simulated-event counts plus added sim-time (see [`FaultMeter`])
+    pub meter: FaultMeter,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, m: usize, params: FaultParams) -> FaultPlan {
+        FaultPlan {
+            root: Prng::seed_from_u64(seed).split(FAULT_TAG),
+            m,
+            params,
+            dropped_until: vec![0; m],
+            meter: FaultMeter::default(),
+        }
+    }
+
+    /// The multiplicative sim-time factor for collective round `round`:
+    /// the slowest participating machine's slowdown (a round completes
+    /// when the last machine arrives) times the `m/(m-k)` redistribution
+    /// factor when `k` machines are dropped out (survivors carry their
+    /// share). Exactly `1.0` when nothing fires. The last active machine
+    /// is never allowed to drop, so a round can always complete.
+    pub fn round_factor(&mut self, round: u64) -> f64 {
+        let mut dropped = 0usize;
+        let mut max_slow = 1.0f64;
+        for i in 0..self.m {
+            if self.dropped_until[i] > round {
+                dropped += 1;
+                self.meter.dropped_rounds += 1;
+                continue;
+            }
+            if self.dropped_until[i] != 0 && self.dropped_until[i] == round {
+                self.meter.reentries += 1;
+                self.dropped_until[i] = 0;
+            }
+            // fixed draw order per (round, machine): dropout first, then
+            // straggler — the plan never depends on who asks or when
+            let mut rng = self.root.split(round).split(i as u64);
+            if self.params.dropout_p > 0.0
+                && rng.next_f64() < self.params.dropout_p
+                && self.m - (dropped + 1) >= 1
+            {
+                self.dropped_until[i] = round + self.params.dropout_rounds.max(1);
+                self.meter.dropouts += 1;
+                self.meter.dropped_rounds += 1;
+                dropped += 1;
+                continue; // a dropped machine neither works nor straggles
+            }
+            if self.params.straggler_p > 0.0 && rng.next_f64() < self.params.straggler_p {
+                let slow = rng.next_pareto(self.params.slowdown_alpha);
+                self.meter.stragglers += 1;
+                if slow > max_slow {
+                    max_slow = slow;
+                }
+            }
+        }
+        if dropped > 0 {
+            max_slow *= self.m as f64 / (self.m - dropped) as f64;
+        }
+        max_slow
+    }
+
+    /// Scale one collective round's model time `dt`. A `1.0` factor
+    /// returns `dt` untouched (bitwise — the multiply is skipped), which
+    /// is the entire behaviour of a zero-probability plan.
+    pub fn scale(&mut self, round: u64, dt: f64) -> f64 {
+        let f = self.round_factor(round);
+        if f == 1.0 {
+            return dt;
+        }
+        self.meter.slow_rounds += 1;
+        self.meter.added_time_s += dt * (f - 1.0);
+        dt * f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stormy() -> FaultParams {
+        FaultParams { straggler_p: 0.5, slowdown_alpha: 1.2, dropout_p: 0.3, dropout_rounds: 2 }
+    }
+
+    #[test]
+    fn zero_probability_plan_is_exactly_identity() {
+        let mut plan = FaultPlan::new(7, 4, FaultParams::zero());
+        for round in 0..50u64 {
+            let dt = 0.1 + round as f64 * 1e-3;
+            assert_eq!(plan.scale(round, dt).to_bits(), dt.to_bits(), "round {round}");
+        }
+        assert_eq!(plan.meter, FaultMeter::default(), "nothing may be recorded");
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let mut a = FaultPlan::new(42, 6, stormy());
+        let mut b = FaultPlan::new(42, 6, stormy());
+        for round in 0..200u64 {
+            let ta = a.scale(round, 0.01);
+            let tb = b.scale(round, 0.01);
+            assert_eq!(ta.to_bits(), tb.to_bits(), "round {round}");
+        }
+        assert_eq!(a.meter, b.meter);
+        assert!(a.meter.stragglers > 0, "a stormy plan must actually fire");
+        assert!(a.meter.dropouts > 0);
+        assert!(a.meter.added_time_s > 0.0);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = FaultPlan::new(1, 6, stormy());
+        let mut b = FaultPlan::new(2, 6, stormy());
+        let fa: Vec<u64> = (0..100).map(|r| a.round_factor(r).to_bits()).collect();
+        let fb: Vec<u64> = (0..100).map(|r| b.round_factor(r).to_bits()).collect();
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn straggler_severity_is_monotone_in_p() {
+        // the per-(round, machine) rng is pure, so the p=0.2 straggler set
+        // is a subset of the p=0.5 set with identical slowdown draws —
+        // each round's factor can only grow with p
+        let mild = FaultParams { straggler_p: 0.2, dropout_p: 0.0, ..stormy() };
+        let severe = FaultParams { straggler_p: 0.5, dropout_p: 0.0, ..stormy() };
+        let mut a = FaultPlan::new(9, 8, mild);
+        let mut b = FaultPlan::new(9, 8, severe);
+        for round in 0..200u64 {
+            assert!(b.round_factor(round) >= a.round_factor(round), "round {round}");
+        }
+        assert!(b.meter.stragglers >= a.meter.stragglers);
+    }
+
+    #[test]
+    fn dropout_redistributes_and_reenters() {
+        let params = FaultParams {
+            straggler_p: 0.0,
+            slowdown_alpha: 1.5,
+            dropout_p: 1.0,
+            dropout_rounds: 3,
+        };
+        let mut plan = FaultPlan::new(3, 4, params);
+        // round 0: p=1 drops machines until only one survivor remains
+        // (the last-machine guard), so the factor is m/(m-k) = 4/1
+        let f0 = plan.round_factor(0);
+        assert_eq!(f0, 4.0);
+        assert_eq!(plan.meter.dropouts, 3);
+        // rounds 1..3: the dropped machines are still out; the survivor
+        // cannot drop (guard), so the factor stays at the redistribution
+        for round in 1..3u64 {
+            assert_eq!(plan.round_factor(round), 4.0, "round {round}");
+        }
+        // round 3 = the dropout window's exclusive end: all three re-enter
+        // at this collective boundary (and, with p=1, immediately re-drop —
+        // the re-entry is still counted)
+        plan.round_factor(3);
+        assert_eq!(plan.meter.reentries, 3);
+    }
+
+    #[test]
+    fn last_machine_never_drops() {
+        let params = FaultParams {
+            straggler_p: 0.0,
+            slowdown_alpha: 1.5,
+            dropout_p: 1.0,
+            dropout_rounds: 5,
+        };
+        let mut plan = FaultPlan::new(11, 1, params);
+        for round in 0..20u64 {
+            assert_eq!(plan.round_factor(round), 1.0, "round {round}");
+        }
+        assert_eq!(plan.meter.dropouts, 0);
+    }
+
+    #[test]
+    fn scale_accumulates_added_time() {
+        let params = FaultParams { straggler_p: 1.0, dropout_p: 0.0, ..stormy() };
+        let mut plan = FaultPlan::new(5, 4, params);
+        let dt = 0.25;
+        let scaled = plan.scale(0, dt);
+        assert!(scaled > dt, "p=1 must straggle");
+        assert_eq!(plan.meter.slow_rounds, 1);
+        assert!((plan.meter.added_time_s - (scaled - dt)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!(FaultsPolicy::parse("on"), Some(FaultsPolicy::On));
+        assert_eq!(FaultsPolicy::parse("off"), Some(FaultsPolicy::Off));
+        assert_eq!(FaultsPolicy::parse("maybe"), None);
+        assert!(!FaultsPolicy::default().enabled());
+        assert_eq!(FaultsPolicy::On.as_str(), "on");
+    }
+}

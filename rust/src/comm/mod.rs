@@ -32,12 +32,28 @@
 //! without a `redm{M}` artifact transparently fall back to
 //! materialize -> host collective -> re-upload (same round accounting,
 //! honestly metered extra device traffic).
+//!
+//! # Fault injection
+//!
+//! With `faults=on` a seeded [`faults::FaultPlan`] rides on the network
+//! and every `charge` scales that round's [`NetModel`] time by the plan's
+//! factor for the round (slowest straggler × dropout redistribution; see
+//! the `faults` module docs). The scaling touches `sim_time_s` ONLY —
+//! rounds, vectors, the `ClusterMeter`, and every iterate stay bitwise
+//! identical with faults on or off, and `faults=off` (the default) never
+//! constructs a plan at all, so not even the multiply happens. What the
+//! [`crate::accounting::FaultMeter`] does NOT measure: real wall-clock
+//! (it is simulated network time), and real thread failures (those are
+//! the shard pool's supervised-recovery counters, merged into the same
+//! meter at run end but counted on the host, not drawn from the seed).
 
+pub mod faults;
 pub mod netmodel;
 
 use crate::accounting::ClusterMeter;
 use crate::runtime::{chain, DeviceVec, Engine};
 use anyhow::Result;
+use faults::FaultPlan;
 use netmodel::NetModel;
 
 #[derive(Clone, Debug, Default)]
@@ -51,19 +67,36 @@ pub struct Network {
     pub m: usize,
     pub stats: CommStats,
     pub model: NetModel,
+    /// seeded fault injection (`faults=on`): scales each round's simulated
+    /// time, never the counts. `None` (the default) is bitwise identical
+    /// to a build without the fault layer.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Network {
     pub fn new(m: usize, model: NetModel) -> Self {
-        Self { m, stats: CommStats::default(), model }
+        Self { m, stats: CommStats::default(), model, faults: None }
+    }
+
+    /// Attach (or detach) a fault plan. The plan's round index is this
+    /// network's own round counter, so the schedule is identical on every
+    /// plane and shard count.
+    pub fn with_faults(mut self, faults: Option<FaultPlan>) -> Self {
+        self.faults = faults;
+        self
     }
 
     fn charge(&mut self, meter: &mut ClusterMeter, vectors_per_machine: u64, dim: usize) {
         assert_eq!(meter.m(), self.m);
         meter.all_comm_round(vectors_per_machine);
+        let round = self.stats.rounds;
         self.stats.rounds += 1;
         self.stats.vectors_moved += vectors_per_machine * self.m as u64;
-        self.stats.sim_time_s += self.model.round_time(vectors_per_machine, dim, self.m);
+        let mut dt = self.model.round_time(vectors_per_machine, dim, self.m);
+        if let Some(plan) = self.faults.as_mut() {
+            dt = plan.scale(round, dt);
+        }
+        self.stats.sim_time_s += dt;
     }
 
     /// Average one vector per machine; every machine ends with the mean.
@@ -301,5 +334,51 @@ mod tests {
         assert_eq!(n.stats.rounds, 5);
         assert_eq!(meter.report().comm_rounds, 5);
         assert!(n.stats.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn zero_probability_fault_plan_is_bitwise_invisible() {
+        use faults::{FaultParams, FaultPlan};
+        let m = 4;
+        let drive = |mut n: Network| {
+            let mut meter = ClusterMeter::new(m);
+            let mut locals: Vec<Vec<f32>> = (0..m).map(|i| vec![i as f32; 8]).collect();
+            for _ in 0..7 {
+                n.all_reduce_avg(&mut meter, &mut locals);
+            }
+            (n.stats.sim_time_s.to_bits(), n.stats.rounds, locals)
+        };
+        let plain = drive(Network::new(m, NetModel::default()));
+        let zeroed = drive(
+            Network::new(m, NetModel::default())
+                .with_faults(Some(FaultPlan::new(3, m, FaultParams::zero()))),
+        );
+        assert_eq!(plain, zeroed, "a plan that never fires must not change a bit");
+    }
+
+    #[test]
+    fn live_fault_plan_scales_sim_time_only() {
+        use faults::{FaultParams, FaultPlan};
+        let m = 4;
+        let params = FaultParams { straggler_p: 1.0, ..FaultParams::default() };
+        let mut base = Network::new(m, NetModel::default());
+        let mut hit = Network::new(m, NetModel::default())
+            .with_faults(Some(FaultPlan::new(3, m, params)));
+        let mut meter_a = ClusterMeter::new(m);
+        let mut meter_b = ClusterMeter::new(m);
+        let mut la: Vec<Vec<f32>> = (0..m).map(|i| vec![i as f32; 8]).collect();
+        let mut lb = la.clone();
+        for _ in 0..5 {
+            base.all_reduce_avg(&mut meter_a, &mut la);
+            hit.all_reduce_avg(&mut meter_b, &mut lb);
+        }
+        assert_eq!(la, lb, "faults never touch the reduced values");
+        assert_eq!(base.stats.rounds, hit.stats.rounds);
+        assert_eq!(base.stats.vectors_moved, hit.stats.vectors_moved);
+        assert_eq!(meter_a.report(), meter_b.report(), "paper units are fault-free");
+        assert!(hit.stats.sim_time_s > base.stats.sim_time_s, "p=1 must add time");
+        let fm = &hit.faults.as_ref().unwrap().meter;
+        assert_eq!(fm.slow_rounds, 5);
+        assert!((fm.added_time_s - (hit.stats.sim_time_s - base.stats.sim_time_s)).abs() < 1e-12);
     }
 }

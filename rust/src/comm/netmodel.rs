@@ -9,7 +9,9 @@
 //!
 //! This never enters the paper's resource counts (those are rounds/vectors);
 //! it only converts them into the simulated-time columns the examples print
-//! so the communication-vs-computation crossover is visible.
+//! so the communication-vs-computation crossover is visible. With
+//! `faults=on` the per-round time is additionally scaled by the seeded
+//! fault plan (see `comm::faults`) — still simulated time only.
 
 #[derive(Clone, Debug)]
 pub struct NetModel {
@@ -22,7 +24,8 @@ pub struct NetModel {
 impl Default for NetModel {
     fn default() -> Self {
         // 50 us latency, 1 GiB/s — commodity datacenter Ethernet circa the
-        // paper (2017); configurable from ExperimentConfig.
+        // paper (2017); override per run with the `net.alpha` / `net.beta`
+        // config keys (validated in config::ExperimentConfig).
         Self { alpha: 50e-6, beta_bytes_per_s: 1_073_741_824.0 }
     }
 }

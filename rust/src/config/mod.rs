@@ -12,6 +12,7 @@
 //! key set is [`CONFIG_KEYS`] — the single source of truth the CLI's
 //! `run --help` / `list` output prints.
 
+use crate::comm::faults::{FaultParams, FaultsPolicy};
 use crate::data::Loss;
 use crate::runtime::{PipelinePolicy, PlanePolicy, PrefetchPolicy};
 use crate::util::closest_name;
@@ -40,6 +41,13 @@ pub const CONFIG_KEYS: &[(&str, &str)] = &[
     ("scenario.drift_omega", "drift scenario: per-draw rotation angle (radians; default tau/8192)"),
     ("scenario.pareto_alpha", "heavy-tail scenario: Pareto tail index (> 2 for finite variance)"),
     ("scenario.sparse_density", "sparse scenario: expected fraction of active features (0, 1]"),
+    ("net.alpha", "network model per-message latency, seconds (default 50e-6)"),
+    ("net.beta", "network model bandwidth, bytes/second (default 1 GiB/s)"),
+    ("faults", "fault injection: on | off (default off = bitwise identical to no fault layer)"),
+    ("faults.straggler_p", "per-machine per-round straggler probability in [0, 1] (default 0.1)"),
+    ("faults.slowdown_alpha", "straggler Pareto tail index > 0; smaller = heavier (default 1.5)"),
+    ("faults.dropout_p", "per-machine per-round dropout probability in [0, 1] (default 0)"),
+    ("faults.dropout_rounds", "rounds a dropped machine stays out before re-entry (default 3)"),
 ];
 
 #[derive(Clone, Debug, Default)]
@@ -123,15 +131,17 @@ impl KvConfig {
     /// key by edit distance ("did you mean ...?"). Namespaced keys
     /// (`section.key` — what `[section]` headers flatten to) pass through
     /// as config extensions outside the experiment namespace, EXCEPT the
-    /// `scenario.` section: its keys (the scenario-knob namespace —
-    /// `scenario.drift_omega` etc.) are part of the accepted set, so a
-    /// typo there gets the same did-you-mean rejection as a flat key.
+    /// `scenario.`, `net.` and `faults.` sections: their keys
+    /// (`scenario.drift_omega`, `net.alpha`, `faults.straggler_p`, ...)
+    /// are part of the accepted set, so a typo there gets the same
+    /// did-you-mean rejection as a flat key.
     pub fn expect_keys(&self, known: &[(&str, &str)]) -> Result<()> {
+        const GUARDED: &[&str] = &["scenario.", "net.", "faults."];
         for key in self.keys() {
             if known.iter().any(|(k, _)| *k == key) {
                 continue;
             }
-            if key.contains('.') && !key.starts_with("scenario.") {
+            if key.contains('.') && !GUARDED.iter().any(|ns| key.starts_with(ns)) {
                 continue;
             }
             // shared matcher (util::closest_name) — scenario names reject
@@ -146,6 +156,17 @@ impl KvConfig {
 
     /// Optional float accessor (no default: absent key = `None`).
     pub fn get_opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .with_context(|| format!("config key '{key}'='{v}'")),
+        }
+    }
+
+    /// Optional u64 accessor (no default: absent key = `None`).
+    pub fn get_opt_u64(&self, key: &str) -> Result<Option<u64>> {
         match self.get(key) {
             None => Ok(None),
             Some(v) => v
@@ -194,6 +215,24 @@ pub struct ExperimentConfig {
     /// sparse scenario: expected active-feature fraction in (0, 1]
     /// (`scenario.sparse_density`)
     pub sparse_density: Option<f64>,
+    /// network model per-message latency override in seconds
+    /// (`net.alpha`; `None` = the runner's model)
+    pub net_alpha: Option<f64>,
+    /// network model bandwidth override in bytes/second (`net.beta`)
+    pub net_beta: Option<f64>,
+    /// fault injection switch (`faults=` key). Off (the default) never
+    /// constructs a fault plan, so the run is bitwise identical to a
+    /// build without the fault layer; the `faults.*` knobs below are
+    /// rejected unless this is on — fault injection never runs implicitly.
+    pub faults: FaultsPolicy,
+    /// straggler probability (`faults.straggler_p`; `None` = default 0.1)
+    pub straggler_p: Option<f64>,
+    /// straggler Pareto tail index (`faults.slowdown_alpha`)
+    pub slowdown_alpha: Option<f64>,
+    /// dropout probability (`faults.dropout_p`; `None` = default 0)
+    pub dropout_p: Option<f64>,
+    /// dropout window in collective rounds (`faults.dropout_rounds`)
+    pub dropout_rounds: Option<u64>,
 }
 
 impl Default for ExperimentConfig {
@@ -217,6 +256,13 @@ impl Default for ExperimentConfig {
             drift_omega: None,
             pareto_alpha: None,
             sparse_density: None,
+            net_alpha: None,
+            net_beta: None,
+            faults: FaultsPolicy::Off,
+            straggler_p: None,
+            slowdown_alpha: None,
+            dropout_p: None,
+            dropout_rounds: None,
         }
     }
 }
@@ -260,6 +306,64 @@ impl ExperimentConfig {
                 bail!("scenario.sparse_density must lie in (0, 1], got {p}");
             }
         }
+        let net_alpha = kv.get_opt_f64("net.alpha")?;
+        if let Some(a) = net_alpha {
+            if !a.is_finite() || a < 0.0 {
+                bail!("net.alpha must be a finite latency >= 0 seconds, got {a}");
+            }
+        }
+        let net_beta = kv.get_opt_f64("net.beta")?;
+        if let Some(b) = net_beta {
+            // infinity is legal (a free network, like NetModel::zero)
+            if !(b > 0.0) {
+                bail!("net.beta must be a positive bandwidth in bytes/s, got {b}");
+            }
+        }
+        let faults_s = kv.get_str("faults", dflt.faults.as_str());
+        let faults = FaultsPolicy::parse(&faults_s)
+            .ok_or_else(|| anyhow!("bad faults '{faults_s}' (on|off)"))?;
+        let straggler_p = kv.get_opt_f64("faults.straggler_p")?;
+        if let Some(p) = straggler_p {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                bail!("faults.straggler_p must be a probability in [0, 1], got {p}");
+            }
+        }
+        let slowdown_alpha = kv.get_opt_f64("faults.slowdown_alpha")?;
+        if let Some(a) = slowdown_alpha {
+            if !a.is_finite() || a <= 0.0 {
+                bail!("faults.slowdown_alpha must be a finite Pareto index > 0, got {a}");
+            }
+        }
+        let dropout_p = kv.get_opt_f64("faults.dropout_p")?;
+        if let Some(p) = dropout_p {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                bail!("faults.dropout_p must be a probability in [0, 1], got {p}");
+            }
+        }
+        let dropout_rounds = kv.get_opt_u64("faults.dropout_rounds")?;
+        if let Some(r) = dropout_rounds {
+            if r == 0 {
+                bail!("faults.dropout_rounds must be >= 1 (a dropout lasts whole rounds)");
+            }
+        }
+        if !faults.enabled() {
+            // a fault knob on a faults=off run would silently do nothing —
+            // reject it, like a typo'd key
+            const KNOBS: [&str; 4] = [
+                "faults.straggler_p",
+                "faults.slowdown_alpha",
+                "faults.dropout_p",
+                "faults.dropout_rounds",
+            ];
+            for knob in KNOBS {
+                if kv.get(knob).is_some() {
+                    bail!(
+                        "'{knob}' is set but faults=off — add faults=on \
+                         (fault injection never runs implicitly)"
+                    );
+                }
+            }
+        }
         Ok(ExperimentConfig {
             m: kv.get_usize("m", dflt.m)?,
             b_local: kv.get_usize("b_local", dflt.b_local)?,
@@ -279,6 +383,29 @@ impl ExperimentConfig {
             drift_omega,
             pareto_alpha,
             sparse_density,
+            net_alpha,
+            net_beta,
+            faults,
+            straggler_p,
+            slowdown_alpha,
+            dropout_p,
+            dropout_rounds,
+        })
+    }
+
+    /// The fault-plan parameters this run asks for: `None` when
+    /// `faults=off` (no plan is ever built), defaults filled in for
+    /// absent knobs when on.
+    pub fn fault_params(&self) -> Option<FaultParams> {
+        if !self.faults.enabled() {
+            return None;
+        }
+        let d = FaultParams::default();
+        Some(FaultParams {
+            straggler_p: self.straggler_p.unwrap_or(d.straggler_p),
+            slowdown_alpha: self.slowdown_alpha.unwrap_or(d.slowdown_alpha),
+            dropout_p: self.dropout_p.unwrap_or(d.dropout_p),
+            dropout_rounds: self.dropout_rounds.unwrap_or(d.dropout_rounds),
         })
     }
 
@@ -351,9 +478,10 @@ mod tests {
         let kv = KvConfig::parse("zzzzqqqq = 1\n").unwrap();
         let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
         assert!(err.contains("unknown config key"), "{err}");
-        // sectioned keys are the documented file format, not typos:
-        // '[net]\nalpha=...' flattens to 'net.alpha' and must pass
-        let kv = KvConfig::parse("m = 8\n[net]\nalpha = 1e-4\n").unwrap();
+        // sectioned keys outside the guarded namespaces are the documented
+        // file format for extensions, not typos: '[paths]\ncache=...'
+        // flattens to 'paths.cache' and must pass
+        let kv = KvConfig::parse("m = 8\n[paths]\ncache = /tmp/x\n").unwrap();
         assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().m, 8);
     }
 
@@ -441,9 +569,77 @@ mod tests {
         let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
         assert!(err.contains("scenario.drift_omga"), "{err}");
         assert!(err.contains("did you mean 'scenario.drift_omega'"), "{err}");
-        // other sections still pass through as config extensions
-        let kv = KvConfig::parse("m = 8\n[net]\nalpha = 1e-4\n").unwrap();
+        // unguarded sections still pass through as config extensions
+        let kv = KvConfig::parse("m = 8\n[paths]\ncache = /tmp/x\n").unwrap();
         assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().m, 8);
+    }
+
+    #[test]
+    fn net_namespace_parses_and_validates() {
+        let kv = KvConfig::parse("[net]\nalpha = 1e-4\nbeta = 1e9\n").unwrap();
+        let ec = ExperimentConfig::from_kv(&kv).unwrap();
+        assert_eq!(ec.net_alpha, Some(1e-4));
+        assert_eq!(ec.net_beta, Some(1e9));
+        // absent = the runner's model; inf bandwidth = a free network
+        let ec = ExperimentConfig::from_kv(&KvConfig::parse("m = 2\n").unwrap()).unwrap();
+        assert_eq!(ec.net_alpha, None);
+        assert_eq!(ec.net_beta, None);
+        let kv = KvConfig::parse("net.beta = inf\n").unwrap();
+        assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().net_beta, Some(f64::INFINITY));
+        for bad in ["net.alpha = -1\n", "net.alpha = inf\n", "net.beta = 0\n", "net.beta = -2\n"] {
+            let err =
+                ExperimentConfig::from_kv(&KvConfig::parse(bad).unwrap()).unwrap_err().to_string();
+            assert!(err.contains("net."), "{bad}: {err}");
+        }
+        // net.* is a guarded namespace now: typos get did-you-mean
+        let kv = KvConfig::parse("[net]\nalpa = 1e-4\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'net.alpha'"), "{err}");
+    }
+
+    #[test]
+    fn faults_namespace_parses_and_validates() {
+        let kv = KvConfig::parse(
+            "faults = on\n[faults]\nstraggler_p = 0.3\nslowdown_alpha = 1.2\ndropout_p = 0.1\ndropout_rounds = 2\n",
+        )
+        .unwrap();
+        let ec = ExperimentConfig::from_kv(&kv).unwrap();
+        assert_eq!(ec.faults, FaultsPolicy::On);
+        assert_eq!(ec.straggler_p, Some(0.3));
+        assert_eq!(ec.slowdown_alpha, Some(1.2));
+        assert_eq!(ec.dropout_p, Some(0.1));
+        assert_eq!(ec.dropout_rounds, Some(2));
+        let p = ec.fault_params().unwrap();
+        assert_eq!(p.straggler_p, 0.3);
+        assert_eq!(p.dropout_rounds, 2);
+        // defaults fill absent knobs; off builds no plan at all
+        let ec = ExperimentConfig::from_kv(&KvConfig::parse("faults = on\n").unwrap()).unwrap();
+        assert_eq!(ec.fault_params(), Some(FaultParams::default()));
+        let ec = ExperimentConfig::from_kv(&KvConfig::parse("m = 2\n").unwrap()).unwrap();
+        assert_eq!(ec.faults, FaultsPolicy::Off);
+        assert_eq!(ec.fault_params(), None);
+        // domain guards
+        for bad in [
+            "faults = on\nfaults.straggler_p = 1.5\n",
+            "faults = on\nfaults.dropout_p = -0.1\n",
+            "faults = on\nfaults.slowdown_alpha = 0\n",
+            "faults = on\nfaults.dropout_rounds = 0\n",
+            "faults = maybe\n",
+        ] {
+            assert!(ExperimentConfig::from_kv(&KvConfig::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fault_knobs_without_the_switch_are_rejected() {
+        // a knob that silently does nothing is worse than an error
+        let kv = KvConfig::parse("faults.straggler_p = 0.3\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("faults=on"), "{err}");
+        // faults.* is a guarded namespace: typos get did-you-mean
+        let kv = KvConfig::parse("faults = on\nfaults.stragler_p = 0.3\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'faults.straggler_p'"), "{err}");
     }
 
     #[test]

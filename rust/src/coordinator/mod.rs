@@ -19,7 +19,7 @@ use crate::algos::solvers::exact_cg::ExactCgSolver;
 use crate::algos::solvers::oneshot::OneShotSolver;
 use crate::algos::{Method, RunContext, RunResult};
 use crate::accounting::ClusterMeter;
-use crate::comm::{netmodel::NetModel, Network};
+use crate::comm::{faults::FaultPlan, netmodel::NetModel, Network};
 use crate::config::ExperimentConfig;
 use crate::data::scenario::{self, ScenarioParams, Setting, StreamFamily};
 use crate::data::synth::{SynthSpec, SynthStream};
@@ -216,6 +216,16 @@ impl Runner {
         }
     }
 
+    /// Resolve the effective network model for one run: per-run
+    /// `net.alpha` / `net.beta` keys override the runner's model
+    /// field-by-field (an absent key keeps the runner's value).
+    fn resolve_net_model(&self, cfg: &ExperimentConfig) -> NetModel {
+        NetModel {
+            alpha: cfg.net_alpha.unwrap_or(self.net_model.alpha),
+            beta_bytes_per_s: cfg.net_beta.unwrap_or(self.net_model.beta_bytes_per_s),
+        }
+    }
+
     /// Build a context from the config's data axis (the scenario
     /// registry, a named dataset, or the default planted-model stream) +
     /// evaluator, validating the method/scenario setting pairing.
@@ -228,10 +238,15 @@ impl Runner {
             (0..cfg.m).map(|i| family.fork_stream(i as u64)).collect();
         let mut eval_stream = family.fork_stream(EVAL_TAG);
         let eval_samples = eval_stream.draw_many(cfg.eval_samples);
+        // faults ride the network, seeded like scenario.* off the run seed;
+        // faults=off builds no plan (bitwise identical to no fault layer)
+        let faults = cfg.fault_params().map(|p| FaultPlan::new(cfg.seed, cfg.m, p));
         self.build_context(
             cfg.plane,
             cfg.prefetch,
             cfg.pipeline,
+            self.resolve_net_model(cfg),
+            faults,
             loss,
             d,
             streams,
@@ -256,6 +271,8 @@ impl Runner {
             PlanePolicy::Auto,
             PrefetchPolicy::Auto,
             PipelinePolicy::Auto,
+            self.net_model.clone(),
+            None,
             loss,
             d,
             streams,
@@ -270,6 +287,8 @@ impl Runner {
         cfg_plane: PlanePolicy,
         cfg_prefetch: PrefetchPolicy,
         cfg_pipeline: PipelinePolicy,
+        net_model: NetModel,
+        faults: Option<FaultPlan>,
         loss: Loss,
         d: usize,
         streams: Vec<Box<dyn SampleStream>>,
@@ -310,7 +329,7 @@ impl Runner {
         let evaluator = Some(Evaluator::new(&mut plane, d, loss, eval_samples, m)?);
         Ok(RunContext {
             plane,
-            net: Network::new(m, self.net_model.clone()),
+            net: Network::new(m, net_model).with_faults(faults),
             meter: ClusterMeter::new(m),
             loss,
             d,

@@ -82,6 +82,19 @@ fn cmd_run(args: &[String]) -> Result<()> {
             o.overlap_ns as f64 / 1e6
         );
     }
+    if let Some(f) = &result.faults {
+        println!(
+            "# faults: {} stragglers, {} dropouts ({} machine-rounds out, {} re-entries), \
+             {} worker recoveries ({} batches replayed), +{:.4} s simulated",
+            f.stragglers,
+            f.dropouts,
+            f.dropped_rounds,
+            f.reentries,
+            f.recoveries,
+            f.replays,
+            f.added_time_s
+        );
+    }
     if !result.curve.is_empty() {
         println!("\n# trajectory");
         print!("{}", metrics::curve_csv(&result));

@@ -171,6 +171,7 @@ mod tests {
             final_objective: Some(0.125),
             stalls: Some(StallMeter { takes: 8, hits: 6, misses: 2, stall_ns: 1500 }),
             overlap: Some(OverlapMeter { fans: 4, staged: 3, overlap_ns: 900, serial_ns: 300 }),
+            faults: None,
         }
     }
 

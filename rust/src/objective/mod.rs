@@ -410,7 +410,10 @@ where
     });
     let mut per: Vec<Option<(T, ResourceMeter)>> = (0..m).map(|_| None).collect();
     for fan in fans {
-        for (i, v) in fan.wait()? {
+        // elastic wait: a worker death surfaces as a dead channel and is
+        // healed + replayed at this collective boundary (see
+        // ShardPool::wait_elastic); job errors still fail the run
+        for (i, v) in pool.wait_elastic(fan)? {
             per[i] = Some(v);
         }
     }
@@ -681,17 +684,21 @@ impl Evaluator {
             // segments (ascending segment order) from the shared sample set
             let all: Arc<Vec<Sample>> = Arc::new(samples.to_vec());
             let rs: Arc<Vec<std::ops::Range<usize>>> = Arc::new(ranges.clone());
-            let fans = pool.fan_batches(rs.len(), "pack evaluator segment", move |state, i| {
-                let seg = &all[rs[i].clone()];
-                let batch = MachineBatch::pack_grad_only(&mut state.engine, engine_d, seg)?;
-                let reply = (batch.n, batch.n_blocks(), batch.shard_meta(i));
-                state.eval.insert(i, batch);
-                Ok(reply)
-            });
+            // PINNED fan: segment ids are not machine ids — an elastic
+            // machine reassignment must never re-route a same-numbered
+            // segment, so evaluator fans always use the base partition
+            let fans =
+                pool.fan_batches_pinned(rs.len(), "pack evaluator segment", move |state, i| {
+                    let seg = &all[rs[i].clone()];
+                    let batch = MachineBatch::pack_grad_only(&mut state.engine, engine_d, seg)?;
+                    let reply = (batch.n, batch.n_blocks(), batch.shard_meta(i));
+                    state.eval.insert(i, batch);
+                    Ok(reply)
+                });
             let mut per: Vec<Option<(usize, usize, ShardBatchMeta)>> =
                 (0..ranges.len()).map(|_| None).collect();
             for fan in fans {
-                for (i, v) in fan.wait()? {
+                for (i, v) in pool.wait_elastic(fan)? {
                     per[i] = Some(v);
                 }
             }
@@ -727,13 +734,15 @@ impl Evaluator {
                 .ok_or_else(|| anyhow!("shard-resident evaluator needs a shard plane"))?;
             let w_shared: Arc<[f32]> = Arc::from(w);
             let n_seg = self.segments.len();
-            let fans = pool.fan_batches(n_seg, "evaluate segment", move |state, i| {
+            // PINNED: segments route by the base partition, never by an
+            // elastic machine reassignment (see Evaluator::new)
+            let fans = pool.fan_batches_pinned(n_seg, "evaluate segment", move |state, i| {
                 let (engine, batch) = state.eval_segment(i)?;
                 segment_loss(engine, loss, batch, &w_shared)
             });
             let mut per: Vec<Option<(f64, f64)>> = (0..n_seg).map(|_| None).collect();
             for fan in fans {
-                for (i, v) in fan.wait()? {
+                for (i, v) in pool.wait_elastic(fan)? {
                     per[i] = Some(v);
                 }
             }

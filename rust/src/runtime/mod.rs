@@ -134,6 +134,25 @@
 //! primitive for backends with asynchronous transfers (see the
 //! `session` module docs for the slot-swap generation rule).
 //!
+//! # Faults and elasticity
+//!
+//! The shard plane is supervised: a worker thread that dies mid-run
+//! (fault injection via [`shard::ShardPool::kill_worker`], or a genuine
+//! crash) is healed at the next collective boundary by
+//! [`shard::ShardPool::wait_elastic`] — supervised restart from the
+//! retained artifacts dir plus a bit-exact replay of the interrupted fan
+//! batch, falling back to **elastic reassignment** of the dead shard's
+//! machines onto survivors ([`shard::ShardPool::reassign_machine`],
+//! stream and read-ahead migrating lane-to-lane) when the restart
+//! fails. Neither path moves a single bit of the iterates: partials are
+//! engine-independent and collectives join in fixed machine order, so
+//! only wall-clock and the recovery tally
+//! ([`shard::ShardPool::recovery_counts`]) change — the same honesty
+//! rule as the stall and overlap meters. Simulated fault *schedules*
+//! (stragglers/dropouts under `faults=on`) never touch this plane at
+//! all: they scale the simulated network clock in `comm::faults`, and
+//! `rust/tests/fault_parity.rs` pins both surfaces.
+//!
 //! # Traffic counters
 //!
 //! [`EngineStats`] meters the contract: `uploads`/`upload_bytes` count

@@ -538,7 +538,10 @@ impl<'e> ExecPlane<'e> {
                 let mut per: Vec<Option<(u64, usize, usize, ShardBatchMeta)>> =
                     (0..*m).map(|_| None).collect();
                 for fan in fans {
-                    for (i, r) in fan.wait()? {
+                    // elastic wait: a worker death here is healed (revive
+                    // or reassign) and the draw fan replayed bit-exactly —
+                    // streams live on the surviving lanes
+                    for (i, r) in pool.wait_elastic(fan)? {
                         per[i] = Some(r);
                     }
                 }

@@ -97,17 +97,54 @@
 //! pipeline on or off, and the parity tests pin that. Meters travel via
 //! [`ShardPool::per_shard_metrics`]: ONE gather job per shard, all
 //! submitted before any wait, carrying stats + stalls + overlap together.
+//!
+//! # Supervised workers and elastic reassignment
+//!
+//! Worker threads are supervised. A panicking *job* was already contained
+//! by `catch_unwind`; a dying worker *thread* (simulated by
+//! [`ShardPool::kill_worker`], which makes the loop exit exactly like a
+//! hard crash — queued jobs are dropped unran) is healed at the next
+//! collective boundary: every fan batch carries a replay recipe (its
+//! closure is `Clone`), so [`ShardPool::wait_elastic`] turns a dead reply
+//! channel into [`ShardPool::revive`] — join the dead thread, rebuild the
+//! engine from the retained artifacts dir, keep the SAME prefetch lane —
+//! followed by a replay of the interrupted batch. Because streams live on
+//! the lane (which survives the worker) and the dropped job never
+//! consumed its takes, a replayed draw fan draws the exact samples the
+//! dead worker would have: final iterates are bit-identical to an
+//! uninterrupted run (pinned by `rust/tests/fault_parity.rs`). What is
+//! NOT restored: shard-resident state the dead worker had already built
+//! this run (packed batches, evaluator segments, session slots). A
+//! replayed draw re-packs its batches; anything else that addresses lost
+//! state fails with the honest "no batch / not resident" error, and the
+//! between-run `clear_machines` heals the pool for the next run
+//! regardless.
+//!
+//! When a worker cannot be revived (engine reconstruction fails),
+//! `wait_elastic` falls back to **elastic reassignment**: each of the
+//! dead shard's machines moves to a surviving shard
+//! ([`ShardPool::reassign_machine`]) — its stream, with any staged
+//! read-ahead folded back in draw order, migrates lane-to-lane — and the
+//! batch replays under the new grouping. Reassignment only ever happens
+//! at a collective boundary (the wait IS the boundary), and bits never
+//! change: per-machine partials are independent of which engine computes
+//! them, and collectives join in fixed machine order regardless of the
+//! machine->shard grouping. Only wall-clock moves. Both recovery paths
+//! count into [`ShardPool::recovery_counts`], surfaced on the run's
+//! `FaultMeter`.
 
 use super::{Engine, EngineStats};
 use crate::accounting::{OverlapMeter, StallMeter};
 use crate::data::blocks::{pack_all, Block};
 use crate::data::{Sample, SampleStream};
 use anyhow::{anyhow, Context, Result};
+use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
+use std::time::Duration;
 
 /// Everything a worker thread owns: its private engine, the device state
 /// of the machines assigned to its shard, and the handle to its prefetch
@@ -161,15 +198,46 @@ impl ShardState {
 
 type Job = Box<dyn FnOnce(&mut ShardState) + Send + 'static>;
 
+/// One message to a worker thread: a job, or the fault-injection order to
+/// die on the spot (the loop returns immediately, dropping every queued
+/// job — exactly what a hard process crash does to in-flight work).
+enum WorkerMsg {
+    Job(Job),
+    Die,
+}
+
 /// A submitted job's typed reply. `wait` blocks until the worker ran the
 /// closure (or died); join fan-outs in machine order for determinism.
+/// Carries its shard and label so failures name the job that was lost.
 pub struct Pending<T> {
     rx: mpsc::Receiver<Result<T>>,
+    shard: usize,
+    label: String,
 }
 
 impl<T> Pending<T> {
     pub fn wait(self) -> Result<T> {
-        self.rx.recv().map_err(|_| anyhow!("shard worker is gone (pool shut down?)"))?
+        let Pending { rx, shard, label } = self;
+        rx.recv().map_err(|_| {
+            anyhow!("job '{label}' lost: shard worker {shard} is gone (crashed or pool shut down)")
+        })?
+    }
+
+    /// [`Pending::wait`] with a deadline: a worker wedged in a job (or a
+    /// dead channel) surfaces as an error naming the shard and job label
+    /// instead of blocking the coordinator forever.
+    pub fn wait_deadline(self, timeout: Duration) -> Result<T> {
+        let Pending { rx, shard, label } = self;
+        match rx.recv_timeout(timeout) {
+            Ok(res) => res,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!(
+                "job '{label}' on shard worker {shard} did not finish within {timeout:?} \
+                 (worker wedged or job deadlocked)"
+            )),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow!(
+                "job '{label}' lost: shard worker {shard} is gone (crashed or pool shut down)"
+            )),
+        }
     }
 }
 
@@ -178,11 +246,20 @@ impl<T> Pending<T> {
 /// order, and the pending per-machine results. The coordinator waits one
 /// `FanBatch` per shard instead of one `Pending` per machine — fewer
 /// channel round-trips, same fixed-order join (results carry their
-/// machine ids, so the caller reassembles machine order exactly).
+/// machine ids, so the caller reassembles machine order exactly). Each
+/// batch also carries a replay recipe (the fan closure is `Clone`), which
+/// is what lets [`ShardPool::wait_elastic`] heal a dead worker.
 pub struct FanBatch<T> {
     /// machines this shard's job runs, ascending
     pub machines: Vec<usize>,
+    shard: usize,
+    label: String,
+    /// pinned batches address shard-resident state packed at context
+    /// construction (evaluator segments); they may be replayed on their
+    /// own shard but never reassigned to another
+    pinned: bool,
     pending: Pending<Vec<(usize, T)>>,
+    replay: Option<Box<dyn ReplayFan<T>>>,
 }
 
 impl<T> FanBatch<T> {
@@ -191,7 +268,60 @@ impl<T> FanBatch<T> {
     pub fn wait(self) -> Result<Vec<(usize, T)>> {
         self.pending.wait()
     }
+
+    /// [`FanBatch::wait`] with a deadline (see [`Pending::wait_deadline`]);
+    /// the error additionally names the machines the batch covered.
+    pub fn wait_deadline(self, timeout: Duration) -> Result<Vec<(usize, T)>> {
+        let machines = format!("{:?}", self.machines);
+        self.pending
+            .wait_deadline(timeout)
+            .with_context(|| format!("fan batch over machines {machines}"))
+    }
 }
+
+/// The replay half of a fan batch: re-submits the batch's closure for an
+/// arbitrary machine subset on an arbitrary shard, so a lost batch can be
+/// rerun in place (revived worker) or split across survivors
+/// (reassignment).
+trait ReplayFan<T> {
+    fn resubmit(
+        &self,
+        pool: &ShardPool,
+        shard: usize,
+        label: &str,
+        machines: &[usize],
+    ) -> Pending<Vec<(usize, T)>>;
+}
+
+struct ReplayF<F> {
+    f: F,
+}
+
+impl<T, F> ReplayFan<T> for ReplayF<F>
+where
+    T: Send + 'static,
+    F: Fn(&mut ShardState, &[usize]) -> Result<Vec<(usize, T)>> + Clone + Send + 'static,
+{
+    fn resubmit(
+        &self,
+        pool: &ShardPool,
+        shard: usize,
+        label: &str,
+        machines: &[usize],
+    ) -> Pending<Vec<(usize, T)>> {
+        let ms = machines.to_vec();
+        let f = self.f.clone();
+        pool.submit_named(shard, label, move |state| {
+            state.overlap.fans += 1;
+            f(state, &ms)
+        })
+    }
+}
+
+/// A machine's stream plus its pending read-ahead (staged speculation
+/// folded back in draw order), pulled off a lane for elastic
+/// reassignment.
+type StolenStream = (Box<dyn SampleStream>, VecDeque<Sample>);
 
 /// One message to a shard's prefetch lane thread.
 enum LaneCmd {
@@ -208,6 +338,14 @@ enum LaneCmd {
         prefetch: bool,
         reply: mpsc::Sender<Result<TakeReply>>,
     },
+    /// Remove machine `machine`'s stream and read-ahead for elastic
+    /// reassignment; replies `None` when the lane holds no stream for it.
+    /// Any staged pack is folded back into the leftover queue FIRST, so
+    /// the stream's draw position travels bit-exactly.
+    Steal { machine: usize, reply: mpsc::Sender<Option<StolenStream>> },
+    /// Re-install a stolen stream on the reassignment target's lane,
+    /// leftover read-ahead and all.
+    Adopt { machine: usize, stream: Box<dyn SampleStream>, leftovers: VecDeque<Sample> },
     /// Drop all streams, stages, leftovers and queued refills (between
     /// runs).
     Clear { reply: mpsc::Sender<()> },
@@ -311,6 +449,31 @@ impl LaneState {
                 if prefetch && ok {
                     self.want.push_back((machine, n, d));
                 }
+            }
+            LaneCmd::Steal { machine, reply } => {
+                // fold any staged speculation back first — the staged
+                // samples were drawn before anything still in the leftover
+                // queue, so they go to the FRONT (same rule as a
+                // mismatched stage) and the draw position moves intact
+                if let Some(stage) = self.staged.remove(&machine) {
+                    let left = self.leftovers.entry(machine).or_default();
+                    for s in stage.samples.into_iter().rev() {
+                        left.push_front(s);
+                    }
+                }
+                self.want.retain(|&(i, _, _)| i != machine);
+                let leftovers = self.leftovers.remove(&machine).unwrap_or_default();
+                let out = self.streams.remove(&machine).map(|stream| (stream, leftovers));
+                let _ = reply.send(out);
+            }
+            LaneCmd::Adopt { machine, stream, leftovers } => {
+                self.staged.remove(&machine);
+                if leftovers.is_empty() {
+                    self.leftovers.remove(&machine);
+                } else {
+                    self.leftovers.insert(machine, leftovers);
+                }
+                self.streams.insert(machine, stream);
             }
             LaneCmd::Clear { reply } => {
                 self.streams.clear();
@@ -417,7 +580,7 @@ fn lane_main(rx: mpsc::Receiver<LaneCmd>) {
 }
 
 struct Worker {
-    tx: mpsc::Sender<Job>,
+    tx: mpsc::Sender<WorkerMsg>,
     handle: Option<thread::JoinHandle<()>>,
 }
 
@@ -426,12 +589,26 @@ struct Lane {
     handle: Option<thread::JoinHandle<()>>,
 }
 
-/// A fixed pool of worker threads, each owning one [`Engine`] plus a
+/// A supervised pool of worker threads, each owning one [`Engine`] plus a
 /// companion prefetch lane thread (see module docs). Dropping the pool
-/// shuts the workers down, then the lanes, and joins them all.
+/// shuts the workers down, then the lanes, and joins them all. The pool
+/// is coordinator-thread-only (interior mutability backs the supervision
+/// and the elastic partition; none of it is `Sync`).
 pub struct ShardPool {
-    workers: Vec<Worker>,
+    workers: RefCell<Vec<Worker>>,
     lanes: Vec<Lane>,
+    n_shards: usize,
+    /// artifacts dir the engines load from — retained so supervised
+    /// recovery can rebuild a dead worker's engine
+    dir: PathBuf,
+    /// elastic partition overrides (machine -> shard); empty = the
+    /// construction-time partition `i % shards`. Reset between runs by
+    /// `clear_machines`.
+    reassigned: RefCell<HashMap<usize, usize>>,
+    /// supervised worker restarts this run (see `recovery_counts`)
+    recoveries: Cell<u64>,
+    /// fan batches replayed after a worker death this run
+    replays: Cell<u64>,
 }
 
 impl ShardPool {
@@ -451,7 +628,7 @@ impl ShardPool {
                 .with_context(|| format!("spawning prefetch lane {s}"))?;
             lanes.push(Lane { tx: lane_tx.clone(), handle: Some(lane_handle) });
             let lane = LaneClient { tx: lane_tx };
-            let (tx, rx) = mpsc::channel::<Job>();
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
             let dir: PathBuf = artifacts_dir.to_path_buf();
             let handle = thread::Builder::new()
@@ -461,7 +638,15 @@ impl ShardPool {
             workers.push(Worker { tx, handle: Some(handle) });
             readies.push(ready_rx);
         }
-        let pool = ShardPool { workers, lanes };
+        let pool = ShardPool {
+            workers: RefCell::new(workers),
+            lanes,
+            n_shards: shards,
+            dir: artifacts_dir.to_path_buf(),
+            reassigned: RefCell::new(HashMap::new()),
+            recoveries: Cell::new(0),
+            replays: Cell::new(0),
+        };
         for (s, ready) in readies.into_iter().enumerate() {
             ready
                 .recv()
@@ -473,12 +658,24 @@ impl ShardPool {
 
     /// Number of worker shards.
     pub fn shards(&self) -> usize {
-        self.workers.len()
+        self.n_shards
     }
 
-    /// The fixed machine->shard partition (decided at construction).
+    /// The current machine->shard partition: the construction-time
+    /// `i % shards` unless an elastic reassignment overrode the machine.
     pub fn shard_of(&self, machine: usize) -> usize {
-        machine % self.workers.len()
+        if let Some(&s) = self.reassigned.borrow().get(&machine) {
+            return s;
+        }
+        machine % self.n_shards
+    }
+
+    /// The construction-time partition, ignoring elastic overrides.
+    /// Evaluator segments are pinned here: they are packed once per run
+    /// context and must not be re-routed by a machine reassignment whose
+    /// machine id happens to match a segment id.
+    fn shard_of_base(&self, machine: usize) -> usize {
+        machine % self.n_shards
     }
 
     /// Enqueue `f` on `shard`; returns immediately with the typed reply
@@ -503,6 +700,7 @@ impl ShardPool {
         f: impl FnOnce(&mut ShardState) -> Result<T> + Send + 'static,
     ) -> Pending<T> {
         let label = label.to_string();
+        let job_label = label.clone();
         let (tx, rx) = mpsc::channel::<Result<T>>();
         let job: Job = Box::new(move |state| {
             // AssertUnwindSafe: a panicking job may leave its own
@@ -510,14 +708,17 @@ impl ShardPool {
             // the panic is abandoned and `clear_machines` rebuilds state
             // before the next one
             let result = catch_unwind(AssertUnwindSafe(|| f(state))).unwrap_or_else(|payload| {
-                Err(anyhow!("{label} panicked on its shard worker: {}", panic_message(&*payload)))
+                Err(anyhow!(
+                    "{job_label} panicked on its shard worker: {}",
+                    panic_message(&*payload)
+                ))
             });
             let _ = tx.send(result);
         });
         // a dead worker drops the job (and with it the reply sender), so
         // `wait` surfaces the failure instead of hanging
-        let _ = self.workers[shard].tx.send(job);
-        Pending { rx }
+        let _ = self.workers.borrow()[shard].tx.send(WorkerMsg::Job(job));
+        Pending { rx, shard, label }
     }
 
     /// Submit to the shard owning `machine` and block for the result.
@@ -533,26 +734,55 @@ impl ShardPool {
     /// ascending list of machines (`0..m` filtered by ownership) that
     /// shard covers, so the closure controls its own loop — the pipelined
     /// draw fan lives on this. Shards with no machines (`m` < shard
-    /// count) get no job. Every job is submitted before this returns;
-    /// wait the returned batches in order for the deterministic join.
+    /// count, or every machine reassigned away) get no job. Every job is
+    /// submitted before this returns; wait the returned batches in order
+    /// for the deterministic join.
     pub fn fan_batches_raw<T, F>(&self, m: usize, label: &str, f: F) -> Vec<FanBatch<T>>
     where
         T: Send + 'static,
         F: Fn(&mut ShardState, &[usize]) -> Result<Vec<(usize, T)>> + Clone + Send + 'static,
     {
+        self.fan_batches_raw_inner(m, label, f, false)
+    }
+
+    fn fan_batches_raw_inner<T, F>(
+        &self,
+        m: usize,
+        label: &str,
+        f: F,
+        pinned: bool,
+    ) -> Vec<FanBatch<T>>
+    where
+        T: Send + 'static,
+        F: Fn(&mut ShardState, &[usize]) -> Result<Vec<(usize, T)>> + Clone + Send + 'static,
+    {
+        // group machines by their CURRENT shard (base partition when
+        // pinned); iterating 0..m keeps each group ascending, which is
+        // the per-shard execution order bit-parity depends on
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.shards()];
+        for i in 0..m {
+            let s = if pinned { self.shard_of_base(i) } else { self.shard_of(i) };
+            groups[s].push(i);
+        }
         let mut out = Vec::with_capacity(self.shards());
-        for s in 0..self.shards() {
-            let machines: Vec<usize> = (s..m).step_by(self.shards()).collect();
+        for (s, machines) in groups.into_iter().enumerate() {
             if machines.is_empty() {
                 continue;
             }
             let ms = machines.clone();
-            let f = f.clone();
+            let fj = f.clone();
             let pending = self.submit_named(s, label, move |state| {
                 state.overlap.fans += 1;
-                f(state, &ms)
+                fj(state, &ms)
             });
-            out.push(FanBatch { machines, pending });
+            out.push(FanBatch {
+                machines,
+                shard: s,
+                label: label.to_string(),
+                pinned,
+                pending,
+                replay: Some(Box::new(ReplayF { f: f.clone() })),
+            });
         }
         out
     }
@@ -568,13 +798,38 @@ impl ShardPool {
         T: Send + 'static,
         F: Fn(&mut ShardState, usize) -> Result<T> + Clone + Send + 'static,
     {
-        self.fan_batches_raw(m, label, move |state, machines| {
+        self.fan_batches_raw_inner(m, label, Self::per_machine(f), false)
+    }
+
+    /// [`ShardPool::fan_batches`] over the construction-time partition,
+    /// immune to elastic reassignment. For fans whose "machine" ids are
+    /// really ids of shard-resident state packed at context construction
+    /// (evaluator segments): a reassigned MACHINE id must not drag the
+    /// same-numbered SEGMENT to a shard that never packed it.
+    /// [`ShardPool::wait_elastic`] replays pinned batches in place but
+    /// refuses to reassign them.
+    pub fn fan_batches_pinned<T, F>(&self, m: usize, label: &str, f: F) -> Vec<FanBatch<T>>
+    where
+        T: Send + 'static,
+        F: Fn(&mut ShardState, usize) -> Result<T> + Clone + Send + 'static,
+    {
+        self.fan_batches_raw_inner(m, label, Self::per_machine(f), true)
+    }
+
+    fn per_machine<T, F>(
+        f: F,
+    ) -> impl Fn(&mut ShardState, &[usize]) -> Result<Vec<(usize, T)>> + Clone + Send + 'static
+    where
+        T: Send + 'static,
+        F: Fn(&mut ShardState, usize) -> Result<T> + Clone + Send + 'static,
+    {
+        move |state: &mut ShardState, machines: &[usize]| {
             let mut out = Vec::with_capacity(machines.len());
             for &i in machines {
                 out.push((i, f(state, i)?));
             }
             Ok(out)
-        })
+        }
     }
 
     /// Install machine `machine`'s sample stream on its shard's prefetch
@@ -588,12 +843,201 @@ impl ShardPool {
             .map_err(|_| anyhow!("prefetch lane {shard} is gone"))
     }
 
+    /// FAULT INJECTION: order `shard`'s worker thread to die on the spot.
+    /// The worker loop returns at the [`WorkerMsg::Die`] message, dropping
+    /// every queued job unran — the same observable effect as a hard crash
+    /// mid-round (reply channels error instead of delivering). The
+    /// prefetch lane — and with it the shard's streams and read-ahead —
+    /// survives; healing is [`ShardPool::wait_elastic`]'s job at the next
+    /// collective boundary, or [`ShardPool::clear_machines`]' between
+    /// runs.
+    pub fn kill_worker(&self, shard: usize) {
+        let _ = self.workers.borrow()[shard].tx.send(WorkerMsg::Die);
+    }
+
+    /// Definitive liveness probe: send the worker a no-op job. The send
+    /// fails if and only if the worker's receiver is dropped, which
+    /// happens exactly when its loop exited — unlike `JoinHandle::
+    /// is_finished`, which can lag a worker that just processed Die (the
+    /// thread is still tearing down) and wrongly report it alive.
+    fn worker_alive(&self, shard: usize) -> bool {
+        self.workers.borrow()[shard].tx.send(WorkerMsg::Job(Box::new(|_| {}))).is_ok()
+    }
+
+    /// Supervised restart: if `shard`'s worker is dead, join the corpse,
+    /// spawn a fresh worker thread, rebuild its [`Engine`] from the
+    /// retained artifacts dir and hand it the SAME prefetch lane (streams
+    /// and read-ahead survive a worker death untouched). Returns whether a
+    /// restart actually happened — `Ok(false)` means the worker was alive.
+    /// What the new engine does NOT have: shard-resident state the dead
+    /// worker built this run (packed batches, evaluator segments, session
+    /// slots) — see the module docs for what that implies.
+    pub fn revive(&self, shard: usize) -> Result<bool> {
+        anyhow::ensure!(shard < self.n_shards, "no shard worker {shard}");
+        if self.worker_alive(shard) {
+            return Ok(false);
+        }
+        let mut workers = self.workers.borrow_mut();
+        let w = &mut workers[shard];
+        if let Some(h) = w.handle.take() {
+            let _ = h.join();
+        }
+        let lane = LaneClient { tx: self.lanes[shard].tx.clone() };
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = self.dir.clone();
+        let handle = thread::Builder::new()
+            .name(format!("shard-{shard}"))
+            .spawn(move || worker_main(rx, dir, ready_tx, lane))
+            .with_context(|| format!("respawning shard worker {shard}"))?;
+        w.tx = tx;
+        w.handle = Some(handle);
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("shard worker {shard} died again during supervised restart"))?
+            .with_context(|| {
+                format!("supervised restart of shard worker {shard}: engine reconstruction failed")
+            })?;
+        self.recoveries.set(self.recoveries.get() + 1);
+        Ok(true)
+    }
+
+    /// Elastically move `machine` to `to_shard`: its sample stream — with
+    /// any staged read-ahead folded back in draw order — migrates
+    /// lane-to-lane, its stale device state is evicted from the old worker
+    /// (if that worker still lives), and every subsequent non-pinned fan
+    /// routes it to `to_shard`. Only call at a collective boundary; bits
+    /// never change (per-machine partials are engine-independent and
+    /// collectives join in fixed machine order), only wall-clock balance
+    /// does. Overrides last until `clear_machines`.
+    pub fn reassign_machine(&self, machine: usize, to_shard: usize) -> Result<()> {
+        anyhow::ensure!(to_shard < self.n_shards, "no shard worker {to_shard}");
+        let from = self.shard_of(machine);
+        if from == to_shard {
+            return Ok(());
+        }
+        let (reply, rx) = mpsc::channel();
+        self.lanes[from]
+            .tx
+            .send(LaneCmd::Steal { machine, reply })
+            .map_err(|_| anyhow!("prefetch lane {from} is gone"))?;
+        let stolen = rx.recv().map_err(|_| anyhow!("prefetch lane {from} died during steal"))?;
+        if let Some((stream, leftovers)) = stolen {
+            self.lanes[to_shard]
+                .tx
+                .send(LaneCmd::Adopt { machine, stream, leftovers })
+                .map_err(|_| anyhow!("prefetch lane {to_shard} is gone"))?;
+        }
+        // fire-and-forget eviction: a dead old worker has no state to
+        // evict, and a live one must not serve the machine stale batches
+        let _ = self.workers.borrow()[from].tx.send(WorkerMsg::Job(Box::new(move |state| {
+            state.batches.remove(&machine);
+        })));
+        self.reassigned.borrow_mut().insert(machine, to_shard);
+        Ok(())
+    }
+
+    /// [`FanBatch::wait`] with supervised healing: a batch lost to a
+    /// worker death (dead reply channel, NOT a job error — job errors and
+    /// contained panics pass straight through) is replayed instead of
+    /// failing the run. First choice is [`ShardPool::revive`] + replay on
+    /// the same shard; if the worker is unrecoverable, the dead shard's
+    /// machines are reassigned round-robin over surviving shards
+    /// ([`ShardPool::reassign_machine`]) and the batch replays under the
+    /// new grouping — unless the batch is pinned, which cannot move (its
+    /// state exists only on its packing shard). Results come back in
+    /// ascending machine order either way, bit-identical to an
+    /// uninterrupted run; only `recovery_counts` and wall-clock tell the
+    /// difference.
+    pub fn wait_elastic<T: Send + 'static>(&self, batch: FanBatch<T>) -> Result<Vec<(usize, T)>> {
+        let FanBatch { machines, shard, label, pinned, pending, replay } = batch;
+        if let Ok(res) = pending.rx.recv() {
+            return res;
+        }
+        // the reply sender was dropped without sending: the worker loop
+        // exited with the job queued or running — a worker death
+        let replay = replay.ok_or_else(|| {
+            anyhow!(
+                "job '{label}' lost: shard worker {shard} is gone and the batch carries no \
+                 replay recipe"
+            )
+        })?;
+        match self.revive(shard) {
+            Ok(_) => {
+                self.replays.set(self.replays.get() + 1);
+                replay.resubmit(self, shard, &label, &machines).wait().with_context(|| {
+                    format!("replaying '{label}' after reviving shard worker {shard}")
+                })
+            }
+            Err(revive_err) => {
+                anyhow::ensure!(
+                    !pinned,
+                    "shard worker {shard} is unrecoverable ({revive_err:#}) and pinned batch \
+                     '{label}' addresses state only that shard holds — it cannot be reassigned"
+                );
+                let survivors: Vec<usize> =
+                    (0..self.n_shards).filter(|&s| s != shard && self.worker_alive(s)).collect();
+                anyhow::ensure!(
+                    !survivors.is_empty(),
+                    "shard worker {shard} is unrecoverable ({revive_err:#}) and no surviving \
+                     shard remains to adopt its machines"
+                );
+                for (k, &i) in machines.iter().enumerate() {
+                    self.reassign_machine(i, survivors[k % survivors.len()])?;
+                }
+                self.replays.set(self.replays.get() + 1);
+                // replay under the new grouping: every sub-batch submitted
+                // before any wait, joined in shard order, reassembled in
+                // machine order
+                let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+                for &i in &machines {
+                    let s = self.shard_of(i);
+                    match groups.iter_mut().find(|(gs, _)| *gs == s) {
+                        Some((_, ms)) => ms.push(i),
+                        None => groups.push((s, vec![i])),
+                    }
+                }
+                groups.sort_by_key(|&(s, _)| s);
+                let pends: Vec<_> =
+                    groups.iter().map(|(s, ms)| replay.resubmit(self, *s, &label, ms)).collect();
+                let mut out = Vec::with_capacity(machines.len());
+                for p in pends {
+                    out.extend(p.wait().with_context(|| {
+                        format!(
+                            "replaying '{label}' after reassigning dead shard worker {shard}'s \
+                             machines"
+                        )
+                    })?);
+                }
+                out.sort_by_key(|&(i, _)| i);
+                Ok(out)
+            }
+        }
+    }
+
+    /// This run's recovery tally: `(supervised worker restarts, fan
+    /// batches replayed)`. Both are REAL host events — they happen (or
+    /// not) per execution, unlike the simulated fault schedule — and both
+    /// reset at `clear_machines`. Surfaced on the run's `FaultMeter`.
+    pub fn recovery_counts(&self) -> (u64, u64) {
+        (self.recoveries.get(), self.replays.get())
+    }
+
     /// Drop every shard-resident machine batch, sample stream (lane-side),
     /// staged pack, evaluator segment and session slot, and zero the stall
     /// and overlap meters (between runs: stale machine state from a
     /// previous experiment must not outlive it, and the wall-clock meters
-    /// are per-run).
+    /// are per-run). Also the pool's healing point: dead workers are
+    /// revived FIRST (so a kill in the previous run never leaks into the
+    /// next), then the elastic overrides and recovery counters reset —
+    /// pre-run healing is not a mid-run recovery.
     pub fn clear_machines(&self) -> Result<()> {
+        for s in 0..self.n_shards {
+            self.revive(s)?;
+        }
+        self.reassigned.borrow_mut().clear();
+        self.recoveries.set(0);
+        self.replays.set(0);
         let pends: Vec<Pending<()>> = (0..self.shards())
             .map(|s| {
                 self.submit_named(s, "clear shard state", |state| {
@@ -712,11 +1156,12 @@ impl Drop for ShardPool {
     fn drop(&mut self) {
         // closing the channels ends the worker loops; workers first (they
         // hold lane clients and may have takes in flight), then the lanes
-        for w in &mut self.workers {
-            let (dead_tx, _) = mpsc::channel::<Job>();
+        let workers = self.workers.get_mut();
+        for w in workers.iter_mut() {
+            let (dead_tx, _) = mpsc::channel::<WorkerMsg>();
             w.tx = dead_tx; // drop the live sender
         }
-        for w in &mut self.workers {
+        for w in workers.iter_mut() {
             if let Some(h) = w.handle.take() {
                 let _ = h.join();
             }
@@ -743,7 +1188,12 @@ fn panic_message(payload: &dyn std::any::Any) -> &str {
     }
 }
 
-fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result<()>>, lane: LaneClient) {
+fn worker_main(
+    rx: mpsc::Receiver<WorkerMsg>,
+    dir: PathBuf,
+    ready: mpsc::Sender<Result<()>>,
+    lane: LaneClient,
+) {
     let engine = match Engine::new(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -760,8 +1210,13 @@ fn worker_main(rx: mpsc::Receiver<Job>, dir: PathBuf, ready: mpsc::Sender<Result
         stalls: StallMeter::default(),
         overlap: OverlapMeter::default(),
     };
-    while let Ok(job) = rx.recv() {
-        job(&mut state);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Job(job) => job(&mut state),
+            // fault injection: exit like a hard crash — every queued job
+            // (and its reply sender) drops unran
+            WorkerMsg::Die => return,
+        }
     }
 }
 
@@ -973,6 +1428,40 @@ mod tests {
         assert_eq!(block_ys(&r2.blocks), ys(&reference.draw_many(20)));
         drop(client);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn steal_then_adopt_preserves_the_draw_position_bit_exactly() {
+        // machine 2 lives on lane A with a warm stage and a leftover
+        // suffix; stealing folds the stage back to the FRONT of the
+        // leftovers, and the adopted lane must continue the exact
+        // lane-less draw sequence
+        let mut a = LaneState::default();
+        a.handle(LaneCmd::Install(2, Box::new(SynthStream::new(SynthSpec::least_squares(4), 21))));
+        let mut reference = SynthStream::new(SynthSpec::least_squares(4), 21);
+        a.refill(2, 300, 4);
+        let r1 = a.serve_take(2, 100, 4).unwrap(); // leaves 200 leftovers
+        assert_eq!(block_ys(&r1.blocks), ys(&reference.draw_many(100)));
+        a.refill(2, 50, 4); // stages 50 drawn FROM the leftovers
+        a.want.push_back((2, 50, 4));
+        let (reply, rx) = mpsc::channel();
+        a.handle(LaneCmd::Steal { machine: 2, reply });
+        let (stream, leftovers) = rx.recv().unwrap().expect("machine 2 had a stream");
+        assert!(a.streams.is_empty() && a.staged.is_empty() && a.want.is_empty());
+        let mut b = LaneState::default();
+        b.handle(LaneCmd::Adopt { machine: 2, stream, leftovers });
+        for &n in &[75usize, 300] {
+            let r = b.serve_take(2, n, 4).unwrap();
+            assert_eq!(block_ys(&r.blocks), ys(&reference.draw_many(n)), "post-adopt take {n}");
+        }
+    }
+
+    #[test]
+    fn steal_of_an_unknown_machine_replies_none() {
+        let mut st = LaneState::default();
+        let (reply, rx) = mpsc::channel();
+        st.handle(LaneCmd::Steal { machine: 9, reply });
+        assert!(rx.recv().unwrap().is_none());
     }
 
     #[test]
