@@ -17,7 +17,10 @@
 //! fault-injection degradation benchmark (mp-dsvrg vs minibatch-SGD
 //! simulated time under increasing straggler severity, plus a seeded
 //! dropout/re-entry run — all counters deterministic from the seed, so
-//! they gate structurally in BENCH_baseline.json). Writes
+//! they gate structurally in BENCH_baseline.json), and the serve
+//! concurrent-clients scenario (cold vs warm executable-cache compile
+//! cost, runs/sec and p50/p99 queue-to-done latency under parallel
+//! clients of one warm `mbprox serve` pool). Writes
 //! `BENCH_runtime.json` (stats + engine traffic counters) so the perf
 //! trajectory is trackable across PRs; CI diffs the counters against the
 //! committed `BENCH_baseline.json` via the `bench_gate` binary.
@@ -31,6 +34,47 @@ use mbprox::data::{Loss, SampleStream};
 use mbprox::objective::{distributed_mean_grad, distributed_mean_grad_dev, MachineBatch};
 use mbprox::runtime::exec::BlockLits;
 use mbprox::util::benchkit::{bench, bench_batched, section, JsonReport};
+
+/// POST one run to the serve endpoint and block to its `done` event:
+/// returns the queue-to-done latency (ns) and the job's cache delta.
+/// Top-level (not a closure) so concurrent client threads can call it.
+fn serve_post_timed(
+    addr: std::net::SocketAddr,
+    body: &str,
+) -> (f64, mbprox::accounting::CacheMeter) {
+    use mbprox::accounting::CacheMeter;
+    use mbprox::util::json::Json;
+    let t0 = std::time::Instant::now();
+    let mut s = mbprox::serve::http_request(addr, "POST", "/run", body).expect("POST /run");
+    assert_eq!(s.status, 200, "accepted run streams 200");
+    let mut cache = None;
+    while let Some(line) = s.next_line() {
+        if line.contains("\"event\":\"error\"") {
+            panic!("serve job failed: {line}");
+        }
+        if line.contains("\"event\":\"done\"") {
+            let ev = Json::parse(&line).expect("done event json");
+            let c = ev.get("run").and_then(|r| r.get("cache")).expect("cache meter");
+            let f = |k: &str| c.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            cache = Some(CacheMeter {
+                hits: f("hits"),
+                misses: f("misses"),
+                compile_ns: f("compile_ns"),
+                evictions: f("evictions"),
+            });
+        }
+    }
+    (t0.elapsed().as_nanos() as f64, cache.expect("stream ended without a done event"))
+}
+
+/// Nearest-rank percentile over an ascending-sorted latency sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
 
 fn main() {
     let mut runner = Runner::from_env().expect("run `make artifacts` first");
@@ -812,6 +856,111 @@ fn main() {
         );
         report.counter("faults.dropout.dropouts", fa.dropouts as f64);
         report.counter("faults.dropout.reentries", fa.reentries as f64);
+    }
+
+    section("serve: concurrent clients (warm pool, bounded queue)");
+    {
+        use mbprox::config::ServeConfig;
+        use mbprox::runtime::default_artifacts_dir;
+        use mbprox::serve::{http_get, http_post, Server};
+        use mbprox::util::json::Json;
+        use std::time::Instant;
+
+        let cfg = ServeConfig { port: 0, queue_depth: 64, ..ServeConfig::default() };
+        let server = Server::bind(&cfg, &default_artifacts_dir()).expect("bind serve port 0");
+        let addr = server.addr();
+        let server_thread = std::thread::spawn(move || server.run().expect("server run"));
+
+        let body = "method = mp-dsvrg\nscenario = drift\nloss = sq\nm = 4\nb_local = 256\n\
+                    n_budget = 2048\ndim = 64\nseed = 4242\neval_samples = 256\n\
+                    eval_every = 0\n";
+
+        // cold job: the resident runner is built and every artifact
+        // compiles — the queue-to-done latency the cache exists to cut
+        let (cold_lat, cold) = serve_post_timed(addr, body);
+        println!(
+            "  cold job: {:.1} ms queue-to-done, {} compiles ({:.1} ms compile)",
+            cold_lat / 1e6,
+            cold.misses,
+            cold.compile_ns as f64 / 1e6
+        );
+        assert!(cold.misses >= 1, "cold job must compile: {cold:?}");
+        assert_eq!(cold.hits, 0, "nothing is warm on the cold job: {cold:?}");
+        report.counter("serve.cold.misses", cold.misses as f64);
+        report.counter("serve.cold.compile_ns", cold.compile_ns as f64);
+        report.counter("serve.cold.latency_ns", cold_lat);
+
+        // warm phase: N concurrent clients hammer the same config; every
+        // job rides the hot cache (hit_rate 1.0, zero compiles) and the
+        // bounded queue serializes them onto the one warm pool
+        let clients = 4usize;
+        let per_client = 3usize;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let body = body.to_string();
+                std::thread::spawn(move || {
+                    (0..per_client)
+                        .map(|_| serve_post_timed(addr, &body))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let warm: Vec<(f64, mbprox::accounting::CacheMeter)> = handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let jobs = warm.len();
+
+        let mut lats: Vec<f64> = warm.iter().map(|(l, _)| *l).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile(&lats, 0.50);
+        let p99 = percentile(&lats, 0.99);
+        let runs_per_sec = jobs as f64 / wall_s.max(f64::MIN_POSITIVE);
+        let warm_misses: u64 = warm.iter().map(|(_, c)| c.misses).sum();
+        let warm_compile: u64 = warm.iter().map(|(_, c)| c.compile_ns).sum();
+        let min_hit_rate = warm
+            .iter()
+            .map(|(_, c)| c.hit_rate())
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "  warm phase: {jobs} jobs from {clients} clients in {wall_s:.2} s \
+             ({runs_per_sec:.1} runs/s), p50 {:.1} ms, p99 {:.1} ms",
+            p50 / 1e6,
+            p99 / 1e6
+        );
+        // after the first job the cache is complete: every warm job is
+        // all hits (hit_rate exactly 1.0), no compiles, no compile time
+        assert_eq!(warm_misses, 0, "warm jobs must not recompile");
+        assert_eq!(min_hit_rate, 1.0, "warm hit rate must be exactly 1.0");
+        report.counter("serve.clients", clients as f64);
+        report.counter("serve.jobs", jobs as f64);
+        report.counter("serve.runs_per_sec", runs_per_sec);
+        report.counter("serve.p50_ns", p50);
+        report.counter("serve.p99_ns", p99);
+        report.counter("serve.warm.misses", warm_misses as f64);
+        report.counter("serve.warm.hit_rate", min_hit_rate);
+        report.counter("serve.warm.compile_ns", warm_compile as f64);
+        // the amortization headline: compile time paid cold vs warm
+        let ratio = cold.compile_ns as f64 / (warm_compile as f64).max(1.0);
+        println!("  -> cold-over-warm compile-time ratio: {ratio:.0}x");
+        report.counter("serve.cold_over_warm_compile_ns", ratio);
+
+        let (status, stats_body) = http_get(addr, "/stats").expect("GET /stats");
+        assert_eq!(status, 200);
+        let v = Json::parse(&stats_body).expect("stats json");
+        let done = v.get("jobs_done").and_then(Json::as_f64).unwrap_or(0.0);
+        assert_eq!(done as usize, jobs + 1, "every job completed: {stats_body}");
+        report.counter(
+            "serve.rejected",
+            v.get("jobs_rejected").and_then(Json::as_f64).unwrap_or(-1.0),
+        );
+
+        let (status, _) = http_post(addr, "/shutdown", "").expect("POST /shutdown");
+        assert_eq!(status, 200);
+        let final_stats = server_thread.join().expect("server thread");
+        assert_eq!(final_stats.jobs_rejected, 0, "depth-64 queue must not reject this load");
     }
 
     section("engine cumulative stats");

@@ -342,6 +342,75 @@ impl FaultMeter {
     }
 }
 
+/// Content-addressed cache counters for the runtime's executable cache
+/// (and the serve layer's warm-instance cache): `hits` are lookups served
+/// from an already-compiled entry, `misses` are lookups that had to
+/// compile (with the wall-clock spent compiling in `compile_ns`), and
+/// `evictions` counts entries dropped by a capacity cap. Like
+/// [`StallMeter`] and [`OverlapMeter`], this is wall-clock/host-side
+/// diagnostics ONLY: it does NOT measure the paper's simulated cost model
+/// — rounds, vectors, samples and memory are charged identically whether
+/// a run compiled everything cold or hit a warm cache, and iterates are
+/// bit-identical either way (pinned by `rust/tests/serve_parity.rs`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheMeter {
+    /// lookups served from an already-resident entry
+    pub hits: u64,
+    /// lookups that had to build (compile) the entry
+    pub misses: u64,
+    /// wall-clock nanoseconds spent building on misses
+    pub compile_ns: u64,
+    /// entries dropped to stay under a capacity cap
+    pub evictions: u64,
+}
+
+impl CacheMeter {
+    /// Record a lookup served warm.
+    pub fn record_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// Record a lookup that compiled, with the build wall-clock.
+    pub fn record_miss(&mut self, compile_ns: u64) {
+        self.misses += 1;
+        self.compile_ns += compile_ns;
+    }
+
+    /// Record one capacity eviction.
+    pub fn record_eviction(&mut self) {
+        self.evictions += 1;
+    }
+
+    /// Fold another meter in (coordinator engine + shard engines).
+    pub fn merge(&mut self, other: &CacheMeter) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.compile_ns += other.compile_ns;
+        self.evictions += other.evictions;
+    }
+
+    /// Counters accrued since an earlier snapshot — the per-job view on a
+    /// resident engine whose meter is cumulative across queued runs.
+    pub fn since(&self, earlier: &CacheMeter) -> CacheMeter {
+        CacheMeter {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            compile_ns: self.compile_ns - earlier.compile_ns,
+            evictions: self.evictions - earlier.evictions,
+        }
+    }
+
+    /// Fraction of lookups served warm (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 /// The Table-1 row: per-machine maxima + total samples.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ResourceReport {
@@ -540,6 +609,31 @@ mod tests {
         assert_eq!(b.recoveries, 1);
         assert_eq!(b.replays, 2);
         assert!((b.added_time_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_meter_records_merges_and_deltas() {
+        let mut a = CacheMeter::default();
+        assert_eq!(a.hit_rate(), 0.0);
+        a.record_miss(100);
+        a.record_hit();
+        a.record_hit();
+        a.record_eviction();
+        assert_eq!(a.hits, 2);
+        assert_eq!(a.misses, 1);
+        assert_eq!(a.compile_ns, 100);
+        assert_eq!(a.evictions, 1);
+        assert!((a.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let mut b = CacheMeter::default();
+        b.record_miss(50);
+        b.merge(&a);
+        assert_eq!(b.hits, 2);
+        assert_eq!(b.misses, 2);
+        assert_eq!(b.compile_ns, 150);
+        assert_eq!(b.evictions, 1);
+        // since: the per-job delta on a cumulative meter
+        let d = b.since(&a);
+        assert_eq!(d, CacheMeter { hits: 0, misses: 1, compile_ns: 50, evictions: 0 });
     }
 
     #[test]

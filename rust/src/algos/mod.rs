@@ -17,7 +17,9 @@ pub mod minibatch_sgd;
 pub mod sgd_local;
 pub mod solvers;
 
-use crate::accounting::{ClusterMeter, FaultMeter, OverlapMeter, ResourceReport, StallMeter};
+use crate::accounting::{
+    CacheMeter, ClusterMeter, FaultMeter, OverlapMeter, ResourceReport, StallMeter,
+};
 use crate::comm::Network;
 use crate::data::{Loss, MachineStreams};
 use crate::objective::{self, Evaluator, MachineBatch};
@@ -300,6 +302,15 @@ pub struct RunResult {
     /// worker death is reported even with `faults=off`. Never part of
     /// the paper's cost model — iterates/curves carry no fault marks.
     pub faults: Option<FaultMeter>,
+    /// Executable-cache accounting for THIS run: the coordinator and
+    /// shard engines' content-addressed cache deltas (hits/misses/compile
+    /// wall-clock/evictions), filled by the coordinator's `Runner::run`
+    /// from before/after snapshots. `None` when no runner recorded it
+    /// (methods driven outside a `Runner`). Wall-clock only, like
+    /// `stalls`/`overlap` — never part of the simulated cost model, so a
+    /// warm-cache run is bit-identical to a cold one everywhere else
+    /// (pinned by `rust/tests/serve_parity.rs`).
+    pub cache: Option<CacheMeter>,
 }
 
 /// A distributed stochastic optimization method.
@@ -358,6 +369,7 @@ impl Recorder {
             stalls,
             overlap,
             faults,
+            cache: None,
             w,
         })
     }

@@ -16,7 +16,11 @@
 //!   belong here only when CI runs on calibrated hardware.
 //!
 //! Baseline names that the fresh report does not carry are violations
-//! too — a silently dropped counter is how a perf gate rots.
+//! too — a silently dropped counter is how a perf gate rots. So are
+//! malformed baseline entries: a bound that is not an object, a
+//! non-numeric `min`/`max`/`p50_ns`/`rel_tol`, or a `counters` section
+//! that is not an object all produce failing checks naming the offending
+//! scenario and field, instead of silently unbounding the gate.
 
 use mbprox::util::json::Json;
 use std::process::ExitCode;
@@ -28,43 +32,138 @@ struct Check {
     ok: bool,
 }
 
+/// Read one bound side (`min`/`max`) of a counter entry. `Ok(None)` means
+/// the side is absent (legitimately unbounded); a present-but-non-numeric
+/// value is an error naming the counter and the side — a typo like
+/// `{"min": "zero"}` must fail the gate, not silently unbound the check.
+fn bound_side(counter: &str, bound: &Json, side: &str) -> Result<Option<f64>, String> {
+    match bound.get(side) {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(x) => Ok(Some(x)),
+            None => Err(format!("counter '{counter}': '{side}' is not a number")),
+        },
+    }
+}
+
 fn check_counters(baseline: &Json, fresh: &Json, out: &mut Vec<Check>) {
-    let bounds = match baseline.get("counters").and_then(Json::as_obj) {
-        Some(m) => m,
+    let bounds = match baseline.get("counters") {
         None => return,
+        Some(section) => match section.as_obj() {
+            Some(m) => m,
+            None => {
+                out.push(Check {
+                    name: "baseline counters".into(),
+                    detail: "'counters' is not an object of {name: {min, max}} bounds".into(),
+                    ok: false,
+                });
+                return;
+            }
+        },
     };
-    let fresh_counters = fresh.get("counters");
+    let fresh_counters = match fresh.get("counters") {
+        Some(section) => match section.as_obj() {
+            Some(m) => Some(m),
+            None => {
+                out.push(Check {
+                    name: "fresh counters".into(),
+                    detail: "'counters' is not an object in the fresh report".into(),
+                    ok: false,
+                });
+                return;
+            }
+        },
+        None => None,
+    };
     for (name, bound) in bounds {
-        let min = bound.get("min").and_then(Json::as_f64);
-        let max = bound.get("max").and_then(Json::as_f64);
-        let got = fresh_counters.and_then(|c| c.get(name)).and_then(Json::as_f64);
+        if bound.as_obj().is_none() {
+            out.push(Check {
+                name: format!("counter {name}"),
+                detail: "baseline bound is not an object (want {\"min\": x, \"max\": y})"
+                    .to_string(),
+                ok: false,
+            });
+            continue;
+        }
+        let (min, max) = match (bound_side(name, bound, "min"), bound_side(name, bound, "max")) {
+            (Ok(lo), Ok(hi)) => (lo, hi),
+            (lo, hi) => {
+                for e in [lo.err(), hi.err()].into_iter().flatten() {
+                    out.push(Check {
+                        name: format!("counter {name}"),
+                        detail: format!("malformed baseline bound: {e}"),
+                        ok: false,
+                    });
+                }
+                continue;
+            }
+        };
+        let got = fresh_counters.and_then(|c| c.get(name));
         let (ok, detail) = match got {
             None => (false, "missing from fresh report".to_string()),
-            Some(v) => {
-                let lo_ok = min.map_or(true, |lo| v >= lo);
-                let hi_ok = max.map_or(true, |hi| v <= hi);
-                let range = match (min, max) {
-                    (Some(lo), Some(hi)) => format!("[{lo}, {hi}]"),
-                    (Some(lo), None) => format!(">= {lo}"),
-                    (None, Some(hi)) => format!("<= {hi}"),
-                    (None, None) => "(unbounded)".to_string(),
-                };
-                (lo_ok && hi_ok, format!("{v} vs {range}"))
-            }
+            Some(v) => match v.as_f64() {
+                None => (false, "fresh value is not a number".to_string()),
+                Some(v) => {
+                    let lo_ok = min.map_or(true, |lo| v >= lo);
+                    let hi_ok = max.map_or(true, |hi| v <= hi);
+                    let range = match (min, max) {
+                        (Some(lo), Some(hi)) => format!("[{lo}, {hi}]"),
+                        (Some(lo), None) => format!(">= {lo}"),
+                        (None, Some(hi)) => format!("<= {hi}"),
+                        (None, None) => "(unbounded)".to_string(),
+                    };
+                    (lo_ok && hi_ok, format!("{v} vs {range}"))
+                }
+            },
         };
         out.push(Check { name: format!("counter {name}"), detail, ok });
     }
 }
 
 fn check_medians(baseline: &Json, fresh: &Json, out: &mut Vec<Check>) {
-    let pins = match baseline.get("medians").and_then(Json::as_obj) {
-        Some(m) => m,
+    let pins = match baseline.get("medians") {
         None => return,
+        Some(section) => match section.as_obj() {
+            Some(m) => m,
+            None => {
+                out.push(Check {
+                    name: "baseline medians".into(),
+                    detail: "'medians' is not an object of {name: {p50_ns, rel_tol}} pins".into(),
+                    ok: false,
+                });
+                return;
+            }
+        },
     };
     let benches = fresh.get("benches").and_then(Json::as_arr).unwrap_or(&[]);
     for (name, pin) in pins {
-        let p50 = pin.get("p50_ns").and_then(Json::as_f64).unwrap_or(f64::NAN);
-        let tol = pin.get("rel_tol").and_then(Json::as_f64).unwrap_or(0.25);
+        // a pin without a numeric p50_ns can never gate anything — name it
+        // rather than comparing against NaN and printing garbage
+        let p50 = match pin.get("p50_ns").and_then(Json::as_f64) {
+            Some(x) => x,
+            None => {
+                out.push(Check {
+                    name: format!("median {name}"),
+                    detail: "malformed baseline pin: 'p50_ns' missing or not a number".into(),
+                    ok: false,
+                });
+                continue;
+            }
+        };
+        let tol = match pin.get("rel_tol") {
+            None => 0.25,
+            Some(v) => match v.as_f64() {
+                Some(t) => t,
+                None => {
+                    out.push(Check {
+                        name: format!("median {name}"),
+                        detail: "malformed baseline pin: 'rel_tol' is not a number".into(),
+                        ok: false,
+                    });
+                    continue;
+                }
+            },
+        };
         let got = benches
             .iter()
             .find(|b| b.get("name").and_then(Json::as_str) == Some(name))
@@ -185,5 +284,71 @@ mod tests {
     fn empty_baseline_passes() {
         let empty = r#"{"counters": {}, "medians": {}}"#;
         assert!(gate(&parse(empty), &fresh()).is_empty());
+    }
+
+    #[test]
+    fn malformed_counter_bound_names_the_counter() {
+        // non-numeric min: must FAIL naming counter + side, not pass unbounded
+        let bad = r#"{"counters": {"round.same_w.uploads": {"min": "zero"}}}"#;
+        let checks = gate(&parse(bad), &fresh());
+        assert_eq!(checks.len(), 1);
+        assert!(!checks[0].ok);
+        assert!(checks[0].name.contains("round.same_w.uploads"), "{}", checks[0].name);
+        assert!(checks[0].detail.contains("'min' is not a number"), "{}", checks[0].detail);
+
+        // bound that is not an object at all
+        let scalar = r#"{"counters": {"prefetch.on.hit_rate": 0.5}}"#;
+        let checks = gate(&parse(scalar), &fresh());
+        assert!(!checks[0].ok);
+        assert!(checks[0].name.contains("prefetch.on.hit_rate"));
+        assert!(checks[0].detail.contains("not an object"), "{}", checks[0].detail);
+
+        // both sides malformed → one named failure per side
+        let both = r#"{"counters": {"x": {"min": [], "max": "a"}}}"#;
+        let checks = gate(&parse(both), &fresh());
+        assert_eq!(checks.len(), 2);
+        assert!(checks.iter().all(|c| !c.ok && c.name.contains('x')));
+    }
+
+    #[test]
+    fn malformed_sections_fail_loudly() {
+        let checks = gate(&parse(r#"{"counters": [1, 2]}"#), &fresh());
+        assert_eq!(checks.len(), 1);
+        assert!(!checks[0].ok);
+        assert!(checks[0].detail.contains("not an object"));
+
+        let checks = gate(&parse(r#"{"medians": "fast"}"#), &fresh());
+        assert_eq!(checks.len(), 1);
+        assert!(!checks[0].ok);
+
+        // fresh report with a scalar counters section
+        let base = r#"{"counters": {"a": {"min": 0}}}"#;
+        let bad_fresh = parse(r#"{"counters": 7, "benches": []}"#);
+        let checks = gate(&parse(base), &bad_fresh);
+        assert_eq!(checks.len(), 1);
+        assert!(!checks[0].ok);
+        assert!(checks[0].name.contains("fresh counters"));
+    }
+
+    #[test]
+    fn malformed_median_pins_name_the_field() {
+        let no_p50 = r#"{"medians": {"pack 256": {"rel_tol": 0.25}}}"#;
+        let checks = gate(&parse(no_p50), &fresh());
+        assert!(!checks[0].ok);
+        assert!(checks[0].detail.contains("p50_ns"), "{}", checks[0].detail);
+
+        let bad_tol = r#"{"medians": {"pack 256": {"p50_ns": 800.0, "rel_tol": "loose"}}}"#;
+        let checks = gate(&parse(bad_tol), &fresh());
+        assert!(!checks[0].ok);
+        assert!(checks[0].detail.contains("rel_tol"), "{}", checks[0].detail);
+    }
+
+    #[test]
+    fn non_numeric_fresh_counter_fails() {
+        let base = r#"{"counters": {"round.same_w.uploads": {"max": 0}}}"#;
+        let f = parse(r#"{"counters": {"round.same_w.uploads": "none"}, "benches": []}"#);
+        let checks = gate(&parse(base), &f);
+        assert!(!checks[0].ok);
+        assert!(checks[0].detail.contains("not a number"), "{}", checks[0].detail);
     }
 }

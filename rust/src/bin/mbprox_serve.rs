@@ -1,0 +1,57 @@
+//! `mbprox_serve` — dedicated binary for the persistent run service.
+//!
+//! Thin wrapper over `serve::Server`: the same service `mbprox serve`
+//! starts, packaged as its own binary so deployments that only ever run
+//! the service don't need the full CLI. Takes ONLY `serve.*` keys
+//! (experiment configs are POSTed to /run as KvConfig key=value lines);
+//! blocks until `POST /shutdown`.
+
+use anyhow::Result;
+use mbprox::config::{ExperimentConfig, KvConfig, ServeConfig, CONFIG_KEYS};
+use mbprox::runtime::default_artifacts_dir;
+use mbprox::serve::Server;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h" || a == "help") {
+        println!(
+            "mbprox_serve [serve.key=value ...]\n\n\
+             Persistent run service: POST experiment configs (the same\n\
+             key=value lines `mbprox run` accepts) to /run and stream\n\
+             ndjson progress events; GET /stats for cumulative job and\n\
+             cache counters; POST /shutdown to stop.\n\n\
+             serve keys (from config::CONFIG_KEYS):"
+        );
+        for (key, help) in CONFIG_KEYS.iter().filter(|(k, _)| k.starts_with("serve.")) {
+            println!("  {key:<22} {help}");
+        }
+        return Ok(());
+    }
+    let mut kv = KvConfig::default();
+    for a in &args {
+        if let Some(path) = a.strip_prefix("config=") {
+            kv = KvConfig::load(std::path::Path::new(path))?;
+        }
+    }
+    let overrides: Vec<String> =
+        args.iter().filter(|a| !a.starts_with("config=")).cloned().collect();
+    let kv = ExperimentConfig::apply_overrides(kv, &overrides)?;
+    let cfg = ServeConfig::from_kv(&kv)?;
+    let server = Server::bind(&cfg, &default_artifacts_dir())?;
+    eprintln!(
+        "# mbprox_serve listening on http://{} (queue_depth={}, cache_capacity={})",
+        server.addr(),
+        cfg.queue_depth,
+        cfg.cache_capacity.map(|c| c.to_string()).unwrap_or_else(|| "unbounded".into())
+    );
+    let stats = server.run()?;
+    eprintln!(
+        "# mbprox_serve stopped: {} done, {} failed, {} rejected, cache {}h/{}m",
+        stats.jobs_done,
+        stats.jobs_failed,
+        stats.jobs_rejected,
+        stats.exec_cache.hits,
+        stats.exec_cache.misses
+    );
+    Ok(())
+}

@@ -48,9 +48,15 @@ pub const CONFIG_KEYS: &[(&str, &str)] = &[
     ("faults.slowdown_alpha", "straggler Pareto tail index > 0; smaller = heavier (default 1.5)"),
     ("faults.dropout_p", "per-machine per-round dropout probability in [0, 1] (default 0)"),
     ("faults.dropout_rounds", "rounds a dropped machine stays out before re-entry (default 3)"),
+    ("serve.port", "mbprox serve: TCP port to listen on (0 = OS-assigned; serve mode only)"),
+    ("serve.queue_depth", "mbprox serve: bounded FIFO job-queue depth >= 1 (serve mode only)"),
+    (
+        "serve.cache_capacity",
+        "mbprox serve: max resident compiled executables per engine (unset = unbounded)",
+    ),
 ];
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct KvConfig {
     map: BTreeMap<String, String>,
 }
@@ -127,6 +133,34 @@ impl KvConfig {
         self.map.keys().map(String::as_str)
     }
 
+    /// Canonical serialization: one `key=value` line per entry in sorted
+    /// key order (the backing map is a `BTreeMap`, so ordering is free),
+    /// values exactly as stored after parse normalization (comments
+    /// stripped, whitespace trimmed, quotes removed, `[section]` headers
+    /// flattened to `section.key`). Two configs that parse to the same
+    /// map — whatever their surface syntax — serialize identically, and
+    /// parsing a canonical string reproduces the exact map. This is the
+    /// serve layer's content-hash input, so the format must stay stable:
+    /// values are NOT reformatted (`1e-2` and `0.01` are different
+    /// canonical texts by design — the hash addresses the config text,
+    /// not parsed semantics).
+    pub fn to_canonical_string(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.map {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Stable 64-bit content hash of the canonical serialization
+    /// (FNV-1a; comparable across processes and releases).
+    pub fn content_hash(&self) -> u64 {
+        crate::util::hash::fnv1a_64(self.to_canonical_string().as_bytes())
+    }
+
     /// Reject any key outside `known`, suggesting the closest accepted
     /// key by edit distance ("did you mean ...?"). Namespaced keys
     /// (`section.key` — what `[section]` headers flatten to) pass through
@@ -136,7 +170,7 @@ impl KvConfig {
     /// are part of the accepted set, so a typo there gets the same
     /// did-you-mean rejection as a flat key.
     pub fn expect_keys(&self, known: &[(&str, &str)]) -> Result<()> {
-        const GUARDED: &[&str] = &["scenario.", "net.", "faults."];
+        const GUARDED: &[&str] = &["scenario.", "net.", "faults.", "serve."];
         for key in self.keys() {
             if known.iter().any(|(k, _)| *k == key) {
                 continue;
@@ -270,6 +304,17 @@ impl Default for ExperimentConfig {
 impl ExperimentConfig {
     pub fn from_kv(kv: &KvConfig) -> Result<ExperimentConfig> {
         kv.expect_keys(CONFIG_KEYS)?;
+        // serve.* keys configure the run service, not a run: accepting
+        // them here would silently do nothing (mirrors the
+        // faults.*-without-faults=on rule below)
+        for key in kv.keys() {
+            if key.starts_with("serve.") {
+                bail!(
+                    "'{key}' is a serve-mode setting — serve.* keys are only accepted \
+                     by `mbprox serve` (job configs POSTed to /run carry no serve.* keys)"
+                );
+            }
+        }
         let dflt = ExperimentConfig::default();
         let loss_s = kv.get_str("loss", dflt.loss.tag());
         let loss = Loss::parse(&loss_s).ok_or_else(|| anyhow!("bad loss '{loss_s}'"))?;
@@ -417,6 +462,62 @@ impl ExperimentConfig {
             kv.set(k.trim(), v.trim());
         }
         Ok(kv)
+    }
+}
+
+/// The run service's own settings (`mbprox serve`): the `serve.*`
+/// namespace, and ONLY that namespace — experiment keys belong to job
+/// configs POSTed to `/run`, and a stray one here is rejected exactly as
+/// loudly as a `serve.*` key inside an experiment config.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// TCP port to listen on; 0 = OS-assigned ephemeral port (the bound
+    /// address is printed at startup and queryable via `Server::addr`)
+    pub port: u16,
+    /// bounded FIFO job-queue depth (>= 1); a full queue rejects with
+    /// HTTP 429 rather than blocking the client
+    pub queue_depth: usize,
+    /// max resident compiled executables per engine (`None` = unbounded,
+    /// the non-serve default)
+    pub cache_capacity: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { port: 7070, queue_depth: 16, cache_capacity: None }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_kv(kv: &KvConfig) -> Result<ServeConfig> {
+        for key in kv.keys() {
+            if !key.starts_with("serve.") {
+                bail!(
+                    "'{key}' is not a serve.* setting — `mbprox serve` takes only serve.* \
+                     keys (experiment configs are POSTed to /run, not passed at startup)"
+                );
+            }
+        }
+        // typo'd serve.* keys get the shared did-you-mean path
+        kv.expect_keys(CONFIG_KEYS)?;
+        let dflt = ServeConfig::default();
+        let port = kv.get_u64("serve.port", u64::from(dflt.port))?;
+        if port > 65_535 {
+            bail!("serve.port must lie in [0, 65535] (0 = OS-assigned), got {port}");
+        }
+        let queue_depth = kv.get_usize("serve.queue_depth", dflt.queue_depth)?;
+        if queue_depth == 0 {
+            bail!("serve.queue_depth must be >= 1 (a depth-0 queue could accept no job)");
+        }
+        let cache_capacity = match kv.get_opt_u64("serve.cache_capacity")? {
+            None => None,
+            Some(0) => bail!(
+                "serve.cache_capacity must be >= 1 (a capacity-0 cache would recompile \
+                 every dispatch); unset it for an unbounded cache"
+            ),
+            Some(c) => Some(c as usize),
+        };
+        Ok(ServeConfig { port: port as u16, queue_depth, cache_capacity })
     }
 }
 
@@ -660,5 +761,139 @@ mod tests {
         assert!(KvConfig::parse("novalue\n").is_err());
         let kv = KvConfig::parse("loss = martian\n").unwrap();
         assert!(ExperimentConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn canonical_serialization_round_trips() {
+        // property: parse -> serialize -> parse is the identity, and the
+        // canonical text is a fixed point of serialization
+        use crate::util::testkit::forall;
+        const KEYS: [&str; 8] = [
+            "m",
+            "b_local",
+            "seed",
+            "plane",
+            "scenario",
+            "scenario.drift_omega",
+            "net.alpha",
+            "serve.port",
+        ];
+        const VALS: [&str; 6] = ["1", "8", "2.5", "1e-4", "drift", "auto"];
+        forall(64, |rng| {
+            let mut kv = KvConfig::default();
+            for _ in 0..rng.next_below(KEYS.len() + 1) {
+                kv.set(KEYS[rng.next_below(KEYS.len())], VALS[rng.next_below(VALS.len())]);
+            }
+            let text = kv.to_canonical_string();
+            let re = KvConfig::parse(&text).unwrap();
+            assert_eq!(re, kv, "parse(serialize(kv)) != kv for:\n{text}");
+            assert_eq!(re.to_canonical_string(), text, "canonical text is not a fixed point");
+            assert_eq!(re.content_hash(), kv.content_hash());
+        });
+    }
+
+    #[test]
+    fn canonical_ordering_is_stable() {
+        // insertion order must not leak into the canonical form
+        let mut a = KvConfig::default();
+        a.set("m", 8);
+        a.set("b_local", 512);
+        let mut b = KvConfig::default();
+        b.set("b_local", 512);
+        b.set("m", 8);
+        assert_eq!(a.to_canonical_string(), "b_local=512\nm=8\n");
+        assert_eq!(a.to_canonical_string(), b.to_canonical_string());
+        assert_eq!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn semantically_equal_configs_hash_equal() {
+        // surface syntax — sections vs dotted keys, comments, quotes,
+        // whitespace, line order — must not change the content hash
+        let variants = [
+            "m = 8\nscenario.drift_omega = 0.01\n",
+            "m=8 # machines\n[scenario]\ndrift_omega = \"0.01\"\n",
+            "[scenario]\ndrift_omega = 0.01\n# trailing comment\nm =\t8\n",
+        ];
+        let hashes: Vec<u64> =
+            variants.iter().map(|t| KvConfig::parse(t).unwrap().content_hash()).collect();
+        assert!(hashes.windows(2).all(|w| w[0] == w[1]), "{hashes:x?}");
+        // a real difference must change it
+        let other = KvConfig::parse("m = 8\nscenario.drift_omega = 0.02\n").unwrap();
+        assert_ne!(other.content_hash(), hashes[0]);
+        // exact value formatting is part of the address by design
+        let reformatted = KvConfig::parse("m = 8\nscenario.drift_omega = 1e-2\n").unwrap();
+        assert_ne!(reformatted.content_hash(), hashes[0]);
+    }
+
+    #[test]
+    fn serve_config_parses_and_validates() {
+        let kv = KvConfig::parse(
+            "[serve]\nport = 8080\nqueue_depth = 4\ncache_capacity = 32\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_kv(&kv).unwrap();
+        assert_eq!(sc.port, 8080);
+        assert_eq!(sc.queue_depth, 4);
+        assert_eq!(sc.cache_capacity, Some(32));
+        // defaults: absent keys, empty config
+        let sc = ServeConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(sc, ServeConfig::default());
+        assert_eq!(sc.cache_capacity, None, "default cache is unbounded");
+        // port 0 is the documented OS-assigned form
+        let sc = ServeConfig::from_kv(&KvConfig::parse("serve.port = 0\n").unwrap()).unwrap();
+        assert_eq!(sc.port, 0);
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_values_loudly() {
+        // non-numeric port
+        let err = ServeConfig::from_kv(&KvConfig::parse("serve.port = http\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serve.port"), "{err}");
+        // out-of-range port
+        let err = ServeConfig::from_kv(&KvConfig::parse("serve.port = 70000\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("65535"), "{err}");
+        // a depth-0 queue could accept no job
+        let err = ServeConfig::from_kv(&KvConfig::parse("serve.queue_depth = 0\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serve.queue_depth"), "{err}");
+        // capacity 0 would recompile every dispatch
+        let err = ServeConfig::from_kv(&KvConfig::parse("serve.cache_capacity = 0\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serve.cache_capacity"), "{err}");
+    }
+
+    #[test]
+    fn serve_namespace_typos_get_did_you_mean() {
+        // serve.* is a guarded namespace: typos take the shared matcher
+        let err = ServeConfig::from_kv(&KvConfig::parse("serve.prot = 8080\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean 'serve.port'"), "{err}");
+        let err = ServeConfig::from_kv(&KvConfig::parse("[serve]\nqueue_dept = 4\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean 'serve.queue_depth'"), "{err}");
+    }
+
+    #[test]
+    fn serve_keys_outside_serve_mode_are_rejected() {
+        // mirrors the faults.*-without-faults=on rule: a serve.* key in a
+        // run config would silently do nothing
+        let kv = KvConfig::parse("m = 8\nserve.port = 8080\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("serve.port"), "{err}");
+        assert!(err.contains("mbprox serve"), "{err}");
+        // and the mirror image: experiment keys are not serve settings
+        let kv = KvConfig::parse("serve.port = 8080\nm = 8\n").unwrap();
+        let err = ServeConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("'m'"), "{err}");
+        assert!(err.contains("POSTed to /run"), "{err}");
     }
 }

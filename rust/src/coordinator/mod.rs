@@ -18,7 +18,7 @@ use crate::algos::solvers::dsvrg::DsvrgSolver;
 use crate::algos::solvers::exact_cg::ExactCgSolver;
 use crate::algos::solvers::oneshot::OneShotSolver;
 use crate::algos::{Method, RunContext, RunResult};
-use crate::accounting::ClusterMeter;
+use crate::accounting::{CacheMeter, ClusterMeter};
 use crate::comm::{faults::FaultPlan, netmodel::NetModel, Network};
 use crate::config::ExperimentConfig;
 use crate::data::scenario::{self, ScenarioParams, Setting, StreamFamily};
@@ -299,6 +299,13 @@ impl Runner {
         let policy = self.resolve_plane(cfg_plane)?;
         let prefetch = self.resolve_prefetch(cfg_prefetch);
         let pipeline = self.resolve_pipeline(cfg_pipeline);
+        // the coordinator engine's per-run state resets here too: stale
+        // session slots from a previous run must not alias into this one,
+        // and the cache-meter epoch restarts (one hit/miss per artifact
+        // per run). clear_machines does the same for each shard engine —
+        // before this fix only the shard side was reset, and a resident
+        // Runner leaked coordinator session slots across queued runs.
+        self.engine.reset_session();
         if let Some(pool) = &self.shards {
             // stale machine/stream/evaluator state from a previous run
             // must not leak in (the installs below land on cleared shards)
@@ -347,12 +354,42 @@ impl Runner {
     /// Run one experiment end to end. A `dataset=` run first resolves the
     /// dataset's native loss/dim into the config ([`effective_config`]) so
     /// the theory-driven method plan and the data the context serves
-    /// cannot disagree.
+    /// cannot disagree. The result carries this run's executable-cache
+    /// delta (`RunResult::cache`): the engines' meters are cumulative for
+    /// the runner's lifetime, so the per-run view is a before/after
+    /// snapshot — on a resident serve runner, job N+1's delta is isolated
+    /// from job N's.
     pub fn run(&mut self, cfg: &ExperimentConfig) -> Result<RunResult> {
         let cfg = effective_config(cfg)?;
         let mut method = self.method(&cfg)?;
+        let before = self.cache_meter_total()?;
         let mut ctx = self.context(&cfg)?;
-        method.run(&mut ctx)
+        let mut result = method.run(&mut ctx)?;
+        drop(ctx);
+        let after = self.cache_meter_total()?;
+        result.cache = Some(after.since(&before));
+        Ok(result)
+    }
+
+    /// Whole-process executable-cache meter: the coordinator engine's
+    /// plus every shard engine's, cumulative for their lifetimes. Take
+    /// [`CacheMeter::since`] snapshots for per-run deltas.
+    pub fn cache_meter_total(&self) -> Result<CacheMeter> {
+        let mut total = self.engine.cache_meter().clone();
+        if let Some(pool) = &self.shards {
+            total.merge(&pool.gathered_cache()?);
+        }
+        Ok(total)
+    }
+
+    /// Cap resident compiled executables on the coordinator engine and
+    /// every shard engine (`serve.cache_capacity`).
+    pub fn set_exec_cache_capacity(&mut self, cap: usize) -> Result<()> {
+        self.engine.set_exec_cache_capacity(cap);
+        if let Some(pool) = &self.shards {
+            pool.set_exec_cache_capacity(cap)?;
+        }
+        Ok(())
     }
 }
 

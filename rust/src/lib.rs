@@ -25,6 +25,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod objective;
 pub mod runtime;
+pub mod serve;
 pub mod theory;
 pub mod util;
 

@@ -3,6 +3,7 @@
 //! Usage:
 //!   mbprox run   [key=value ...]        run one method (see run --help)
 //!   mbprox sweep [key=value ...]        sweep b_local over a log grid
+//!   mbprox serve [serve.key=value ...]  persistent run service (serve --help)
 //!   mbprox list                         list methods + accepted keys
 //!   mbprox info                         engine / artifact information
 //!
@@ -16,10 +17,12 @@
 //! identical paper-units accounting — see `runtime::plane`.
 
 use anyhow::{anyhow, Result};
-use mbprox::config::{ExperimentConfig, KvConfig, CONFIG_KEYS};
+use mbprox::config::{ExperimentConfig, KvConfig, ServeConfig, CONFIG_KEYS};
 use mbprox::coordinator::{Runner, METHODS};
 use mbprox::data::scenario::SCENARIOS;
 use mbprox::metrics;
+use mbprox::runtime::default_artifacts_dir;
+use mbprox::serve::Server;
 
 fn parse_cfg(args: &[String]) -> Result<ExperimentConfig> {
     let mut kv = KvConfig::default();
@@ -121,6 +124,54 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `mbprox serve`: the persistent run service (the dedicated
+/// `mbprox_serve` binary is the same entry point packaged standalone).
+/// Takes ONLY `serve.*` keys — experiment configs are POSTed to /run —
+/// and blocks until `POST /shutdown`.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "--help" || a == "-h" || a == "help") {
+        println!(
+            "mbprox serve [serve.key=value ...]\n\n\
+             Persistent run service: POST experiment configs (the same\n\
+             key=value lines `mbprox run` accepts) to /run and stream\n\
+             ndjson progress events; GET /stats for cumulative job and\n\
+             cache counters; POST /shutdown to stop.\n\n\
+             serve keys (from config::CONFIG_KEYS):"
+        );
+        for (key, help) in CONFIG_KEYS.iter().filter(|(k, _)| k.starts_with("serve.")) {
+            println!("  {key:<22} {help}");
+        }
+        return Ok(());
+    }
+    let mut kv = KvConfig::default();
+    for a in args {
+        if let Some(path) = a.strip_prefix("config=") {
+            kv = KvConfig::load(std::path::Path::new(path))?;
+        }
+    }
+    let overrides: Vec<String> =
+        args.iter().filter(|a| !a.starts_with("config=")).cloned().collect();
+    let kv = ExperimentConfig::apply_overrides(kv, &overrides)?;
+    let cfg = ServeConfig::from_kv(&kv)?;
+    let server = Server::bind(&cfg, &default_artifacts_dir())?;
+    eprintln!(
+        "# mbprox serve listening on http://{} (queue_depth={}, cache_capacity={})",
+        server.addr(),
+        cfg.queue_depth,
+        cfg.cache_capacity.map(|c| c.to_string()).unwrap_or_else(|| "unbounded".into())
+    );
+    let stats = server.run()?;
+    eprintln!(
+        "# mbprox serve stopped: {} done, {} failed, {} rejected, cache {}h/{}m",
+        stats.jobs_done,
+        stats.jobs_failed,
+        stats.jobs_rejected,
+        stats.exec_cache.hits,
+        stats.exec_cache.misses
+    );
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     let runner = Runner::from_env()?;
     let m = runner.engine.manifest();
@@ -140,6 +191,7 @@ fn main() -> Result<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("list") => {
             println!("methods:");
             for m in METHODS {
@@ -154,7 +206,8 @@ fn main() -> Result<()> {
             println!(
                 "mbprox — Minibatch-Prox distributed stochastic optimization\n\n\
                  subcommands:\n  run [key=value ...]   (run --help for keys)\n  \
-                 sweep [key=value ...]\n  list\n  info\n"
+                 sweep [key=value ...]\n  serve [serve.key=value ...]   (serve --help)\n  \
+                 list\n  info\n"
             );
             print_keys();
             println!("\nmethods: {}", METHODS.join(" "));

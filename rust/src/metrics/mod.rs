@@ -116,6 +116,27 @@ pub fn run_json(run: &RunResult) -> String {
             let _ = write!(out, "\"overlap\": null, ");
         }
     }
+    // wall-clock executable-cache accounting for this run (filled by
+    // `Runner::run`; like `stalls`/`overlap`, never part of the
+    // simulated cost model — the curve below is bit-identical warm or
+    // cold, which is exactly what the serve parity tests compare)
+    match &run.cache {
+        Some(c) => {
+            let _ = write!(
+                out,
+                "\"cache\": {{\"hits\": {}, \"misses\": {}, \"compile_ns\": {}, \
+                 \"evictions\": {}, \"hit_rate\": {}}}, ",
+                c.hits,
+                c.misses,
+                c.compile_ns,
+                c.evictions,
+                c.hit_rate()
+            );
+        }
+        None => {
+            let _ = write!(out, "\"cache\": null, ");
+        }
+    }
     let _ = write!(out, "\"curve\": [");
     for (i, p) in run.curve.iter().enumerate() {
         if i > 0 {
@@ -143,7 +164,7 @@ pub fn write_report(path: &Path, text: &str) -> std::io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accounting::{OverlapMeter, ResourceReport, StallMeter};
+    use crate::accounting::{CacheMeter, OverlapMeter, ResourceReport, StallMeter};
     use crate::algos::CurvePoint;
     use crate::util::json::Json;
 
@@ -172,6 +193,7 @@ mod tests {
             stalls: Some(StallMeter { takes: 8, hits: 6, misses: 2, stall_ns: 1500 }),
             overlap: Some(OverlapMeter { fans: 4, staged: 3, overlap_ns: 900, serial_ns: 300 }),
             faults: None,
+            cache: Some(CacheMeter { hits: 3, misses: 1, compile_ns: 2000, evictions: 0 }),
         }
     }
 
@@ -207,12 +229,19 @@ mod tests {
         let overlap = v.get("overlap").unwrap();
         assert_eq!(overlap.get("fans").unwrap().as_usize(), Some(4));
         assert_eq!(overlap.get("overlap_frac").unwrap().as_f64(), Some(0.75));
+        let cache = v.get("cache").unwrap();
+        assert_eq!(cache.get("hits").unwrap().as_usize(), Some(3));
+        assert_eq!(cache.get("misses").unwrap().as_usize(), Some(1));
+        assert_eq!(cache.get("compile_ns").unwrap().as_usize(), Some(2000));
+        assert_eq!(cache.get("hit_rate").unwrap().as_f64(), Some(0.75));
         // off the sharded plane, the wall-clock meters are explicit nulls
         let mut run = dummy_run();
         run.stalls = None;
         run.overlap = None;
+        run.cache = None;
         let v = Json::parse(&run_json(&run)).expect("valid json");
         assert!(matches!(v.get("stalls"), Some(Json::Null)));
         assert!(matches!(v.get("overlap"), Some(Json::Null)));
+        assert!(matches!(v.get("cache"), Some(Json::Null)));
     }
 }

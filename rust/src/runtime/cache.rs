@@ -1,0 +1,316 @@
+//! Content-addressed caches for the runtime layer.
+//!
+//! Two cache surfaces live here, both metered by
+//! [`accounting::CacheMeter`](crate::accounting::CacheMeter):
+//!
+//! - [`ExecCache`]: the engine's compiled-executable cache, keyed by the
+//!   **content hash** of an artifact — [`artifact_key`] hashes the lowered
+//!   HLO-text bytes plus the canonical manifest entry (kind, loss, dim,
+//!   block, fuse width, chained flag, argument shapes, outputs, sha256).
+//!   The artifact *name* and *file path* are deliberately excluded: two
+//!   manifest entries with identical content share one compiled
+//!   executable, and re-lowering an artifact to byte-identical HLO keeps
+//!   its cache entry valid. A capacity cap (the `serve.cache_capacity`
+//!   key) evicts in insertion order; an evicted entry recompiles on next
+//!   use — correct, just cold again.
+//! - [`KeyedCache`]: a small LRU map for **warm instances** (the serve
+//!   layer's resident `Runner`/`ShardPool`s), keyed by the canonical
+//!   serialization [`pool_key`] of the cache-relevant config subset:
+//!   artifacts-dir hash ([`manifest_hash`]), shard count, and the
+//!   plane/prefetch/pipeline policies. Everything else (method, b_local,
+//!   seed, scenario, ...) is per-run state the resident instance replays
+//!   from scratch, so it is excluded from the key on purpose.
+//!
+//! Neither cache touches the paper's simulated cost model: a warm run is
+//! bit-identical to a cold one in iterates, curves and paper-unit meters
+//! (`rust/tests/serve_parity.rs`), and the meter records wall-clock
+//! compile time only.
+
+use crate::accounting::CacheMeter;
+use crate::runtime::artifact::{ArtifactMeta, Manifest};
+use crate::runtime::plane::{PipelinePolicy, PlanePolicy, PrefetchPolicy};
+use crate::util::hash::Fnv64;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+
+/// Content hash of one artifact: the lowered HLO bytes + the canonical
+/// manifest entry. Name/path excluded — see the module doc.
+pub fn artifact_key(meta: &ArtifactMeta) -> Result<u64> {
+    let bytes = std::fs::read(&meta.file)
+        .with_context(|| format!("hashing artifact {}", meta.file.display()))?;
+    let mut h = Fnv64::new();
+    h.field(&bytes);
+    h.field(canonical_meta(meta).as_bytes());
+    Ok(h.finish())
+}
+
+/// Canonical (order-stable, unambiguous) serialization of the
+/// cache-relevant manifest fields.
+fn canonical_meta(meta: &ArtifactMeta) -> String {
+    let shapes: Vec<String> = meta
+        .arg_shapes
+        .iter()
+        .map(|s| s.iter().map(usize::to_string).collect::<Vec<_>>().join("x"))
+        .collect();
+    format!(
+        "kind={:?};loss={};d={};block={};k={};chained={};args={};outs={};sha256={}",
+        meta.kind,
+        meta.loss,
+        meta.d,
+        meta.block,
+        meta.k,
+        meta.chained,
+        shapes.join(","),
+        meta.outputs.join(","),
+        meta.sha256,
+    )
+}
+
+/// Content hash of a whole artifacts directory: every artifact's
+/// (name, content key), folded in manifest order with the block size and
+/// dim table. Identifies "the same lowered artifact set" across
+/// processes — the first component of [`pool_key`].
+pub fn manifest_hash(m: &Manifest) -> Result<u64> {
+    let mut h = Fnv64::new();
+    h.field(&(m.block as u64).to_le_bytes());
+    for d in &m.dims {
+        h.field(&(*d as u64).to_le_bytes());
+    }
+    for a in &m.artifacts {
+        h.field(a.name.as_bytes());
+        h.field(&artifact_key(a)?.to_le_bytes());
+    }
+    Ok(h.finish())
+}
+
+/// Canonical serialization of the cache-relevant config subset a warm
+/// `Engine`/`ShardPool` instance is keyed by. Stable field order, exact
+/// value formatting — two configs that agree on this subset may share a
+/// warm instance (bit-parity across planes/policies is unconditional, so
+/// nothing else about a run can invalidate the instance).
+pub fn pool_key(
+    manifest_hash: u64,
+    shards: usize,
+    plane: PlanePolicy,
+    prefetch: PrefetchPolicy,
+    pipeline: PipelinePolicy,
+) -> String {
+    format!(
+        "artifacts={manifest_hash:016x};shards={shards};plane={};prefetch={};pipeline={}",
+        plane.as_str(),
+        prefetch.as_str(),
+        pipeline.as_str(),
+    )
+}
+
+/// The engine's compiled-executable cache: content key -> compiled
+/// executable, with an optional capacity cap (insertion-order eviction)
+/// and a [`CacheMeter`]. The meter is cumulative for the life of the
+/// engine; per-job views are taken with [`CacheMeter::since`] snapshots.
+pub struct ExecCache {
+    map: HashMap<u64, xla::PjRtLoadedExecutable>,
+    order: VecDeque<u64>,
+    cap: Option<usize>,
+    pub meter: CacheMeter,
+}
+
+impl Default for ExecCache {
+    fn default() -> Self {
+        ExecCache::new()
+    }
+}
+
+impl ExecCache {
+    pub fn new() -> ExecCache {
+        ExecCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap: None,
+            meter: CacheMeter::default(),
+        }
+    }
+
+    /// Cap the number of resident executables (>= 1). Entries past the
+    /// cap evict in insertion order, metered as evictions.
+    pub fn set_capacity(&mut self, cap: usize) {
+        self.cap = Some(cap.max(1));
+        self.shrink();
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    pub fn get(&self, key: u64) -> Option<&xla::PjRtLoadedExecutable> {
+        self.map.get(&key)
+    }
+
+    /// Insert a freshly compiled executable under its content key,
+    /// recording the miss and evicting past the cap.
+    pub fn insert(&mut self, key: u64, exe: xla::PjRtLoadedExecutable, compile_ns: u64) {
+        self.meter.record_miss(compile_ns);
+        if self.map.insert(key, exe).is_none() {
+            self.order.push_back(key);
+        }
+        self.shrink();
+    }
+
+    fn shrink(&mut self) {
+        if let Some(cap) = self.cap {
+            while self.map.len() > cap {
+                match self.order.pop_front() {
+                    Some(old) => {
+                        if self.map.remove(&old).is_some() {
+                            self.meter.record_eviction();
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+}
+
+/// A small LRU cache of warm values keyed by canonical strings (the serve
+/// layer's resident `Runner` instances under [`pool_key`]). Generic so the
+/// policy is unit-testable without building engines.
+pub struct KeyedCache<V> {
+    entries: Vec<(String, V)>,
+    cap: usize,
+    pub meter: CacheMeter,
+}
+
+impl<V> KeyedCache<V> {
+    /// `cap` is clamped to >= 1 (a zero-capacity warm cache would rebuild
+    /// every lookup and defeat the resident-service design).
+    pub fn new(cap: usize) -> KeyedCache<V> {
+        KeyedCache { entries: Vec::new(), cap: cap.max(1), meter: CacheMeter::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The warm value for `key`, building (and timing) it on a miss.
+    /// Recently used entries survive the cap; the least recently used is
+    /// evicted past it.
+    pub fn get_or_try_insert_with(
+        &mut self,
+        key: &str,
+        build: impl FnOnce() -> Result<V>,
+    ) -> Result<&mut V> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
+            self.meter.record_hit();
+            let entry = self.entries.remove(pos);
+            self.entries.push(entry); // most recently used last
+        } else {
+            let t0 = std::time::Instant::now();
+            let v = build()?;
+            self.meter.record_miss(t0.elapsed().as_nanos() as u64);
+            self.entries.push((key.to_string(), v));
+            while self.entries.len() > self.cap {
+                self.entries.remove(0);
+                self.meter.record_eviction();
+            }
+        }
+        Ok(&mut self.entries.last_mut().unwrap().1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_key_is_canonical_and_policy_sensitive() {
+        let k = pool_key(0xabc, 4, PlanePolicy::Auto, PrefetchPolicy::On, PipelinePolicy::Off);
+        assert_eq!(k, "artifacts=0000000000000abc;shards=4;plane=auto;prefetch=on;pipeline=off");
+        let k2 = pool_key(0xabc, 4, PlanePolicy::Auto, PrefetchPolicy::On, PipelinePolicy::On);
+        assert_ne!(k, k2, "policy is part of the cache-relevant subset");
+    }
+
+    #[test]
+    fn keyed_cache_hits_misses_and_evicts_lru() {
+        let mut c: KeyedCache<usize> = KeyedCache::new(2);
+        assert!(c.is_empty());
+        assert_eq!(*c.get_or_try_insert_with("a", || Ok(1)).unwrap(), 1);
+        assert_eq!(*c.get_or_try_insert_with("b", || Ok(2)).unwrap(), 2);
+        // warm hit does not rebuild
+        assert_eq!(*c.get_or_try_insert_with("a", || panic!("must not build")).unwrap(), 1);
+        assert_eq!(c.meter.hits, 1);
+        assert_eq!(c.meter.misses, 2);
+        // "b" is now least recently used: inserting "c" evicts it
+        assert_eq!(*c.get_or_try_insert_with("c", || Ok(3)).unwrap(), 3);
+        assert_eq!(c.meter.evictions, 1);
+        assert_eq!(c.len(), 2);
+        assert_eq!(*c.get_or_try_insert_with("b", || Ok(22)).unwrap(), 22, "b was evicted");
+    }
+
+    #[test]
+    fn keyed_cache_build_errors_do_not_poison() {
+        let mut c: KeyedCache<usize> = KeyedCache::new(2);
+        assert!(c.get_or_try_insert_with("a", || anyhow::bail!("boom")).is_err());
+        assert!(c.is_empty());
+        assert_eq!(*c.get_or_try_insert_with("a", || Ok(7)).unwrap(), 7);
+    }
+
+    #[test]
+    fn keyed_cache_capacity_clamps_to_one() {
+        let mut c: KeyedCache<usize> = KeyedCache::new(0);
+        c.get_or_try_insert_with("a", || Ok(1)).unwrap();
+        assert_eq!(c.len(), 1, "cap 0 clamps to 1: the resident value survives");
+    }
+
+    fn meta_fixture(dir: &std::path::Path, file: &str, body: &str) -> ArtifactMeta {
+        std::fs::create_dir_all(dir).unwrap();
+        let path = dir.join(file);
+        std::fs::write(&path, body).unwrap();
+        ArtifactMeta {
+            name: "grad_sq_d2".into(),
+            file: path,
+            kind: crate::runtime::ArtifactKind::Grad,
+            loss: "sq".into(),
+            d: 2,
+            block: 8,
+            arg_shapes: vec![vec![8, 2], vec![8], vec![8], vec![2]],
+            outputs: vec!["grad_sum".into(), "loss_sum".into(), "count".into()],
+            k: 1,
+            chained: false,
+            sha256: "x".into(),
+        }
+    }
+
+    #[test]
+    fn artifact_key_is_content_addressed() {
+        let dir = std::env::temp_dir().join("mbprox_cache_test_key");
+        let a = meta_fixture(&dir, "a.hlo.txt", "HloModule m1");
+        let k1 = artifact_key(&a).unwrap();
+        // same content under a different NAME and PATH: same key
+        let mut b = meta_fixture(&dir, "b.hlo.txt", "HloModule m1");
+        b.name = "grad_sq_d2_alias".into();
+        assert_eq!(artifact_key(&b).unwrap(), k1, "name/path are not content");
+        // different bytes: different key
+        let c = meta_fixture(&dir, "c.hlo.txt", "HloModule m2");
+        assert_ne!(artifact_key(&c).unwrap(), k1);
+        // different manifest entry over the same bytes: different key
+        let mut d = meta_fixture(&dir, "a.hlo.txt", "HloModule m1");
+        d.k = 4;
+        assert_ne!(artifact_key(&d).unwrap(), k1);
+        // a missing file is an error, not a silent hash of nothing
+        let mut gone = meta_fixture(&dir, "a.hlo.txt", "HloModule m1");
+        gone.file = dir.join("missing.hlo.txt");
+        assert!(artifact_key(&gone).is_err());
+    }
+}

@@ -153,6 +153,28 @@
 //! all: they scale the simulated network clock in `comm::faults`, and
 //! `rust/tests/fault_parity.rs` pins both surfaces.
 //!
+//! # The executable cache
+//!
+//! Compiled executables live in a **content-addressed** cache
+//! ([`cache::ExecCache`]): the key is [`cache::artifact_key`] — a stable
+//! FNV-1a hash of the lowered HLO-text bytes plus the canonical manifest
+//! entry, deliberately excluding the artifact's name and path. Two
+//! manifest entries with identical content share one compiled
+//! executable; re-lowering to byte-identical HLO keeps the entry valid.
+//! Name→key resolution is memoized per engine, so the steady-state
+//! dispatch path costs one `HashMap` probe exactly as before. The cache
+//! is unbounded by default (every prior behavior preserved);
+//! [`Engine::set_exec_cache_capacity`] (the `serve.cache_capacity` key)
+//! caps residency with insertion-order eviction — an evicted executable
+//! recompiles on next use, correct but cold. The attached
+//! [`accounting::CacheMeter`](crate::accounting::CacheMeter) records one
+//! hit or miss per *distinct artifact per session epoch*
+//! ([`Engine::reset_session`] starts a new epoch — the serve layer's
+//! per-job boundary), plus compile wall-clock and evictions; like the
+//! stall/overlap meters it is wall-clock-only and never touches the
+//! simulated paper-units cost model. Warm-vs-cold bit-parity is pinned
+//! by `rust/tests/serve_parity.rs`.
+//!
 //! # Traffic counters
 //!
 //! [`EngineStats`] meters the contract: `uploads`/`upload_bytes` count
@@ -167,18 +189,21 @@
 //! `BENCH_runtime.json` so the perf trajectory is trackable across PRs.
 
 pub mod artifact;
+pub mod cache;
 pub mod chain;
 pub mod exec;
 pub mod plane;
 pub mod session;
 pub mod shard;
 
+use crate::accounting::CacheMeter;
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::time::Instant;
 
 pub use artifact::{default_artifacts_dir, ArtifactKind, ArtifactMeta, Manifest};
+pub use cache::{artifact_key, manifest_hash, pool_key, ExecCache, KeyedCache};
 pub use chain::DeviceVec;
 pub use plane::{
     ExecPlane, Lane, LocalSolver, PipelinePolicy, PlaneKind, PlaneLocals, PlanePolicy, PlaneVec,
@@ -266,7 +291,15 @@ impl EngineStats {
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// content-addressed compiled-executable cache (see the module doc's
+    /// "The executable cache" section)
+    execs: ExecCache,
+    /// memoized artifact-name -> content-key resolution (stable for the
+    /// engine's lifetime: the manifest is loaded once)
+    name_keys: HashMap<String, u64>,
+    /// content keys already metered this session epoch — one hit/miss per
+    /// distinct artifact per epoch; cleared by `reset_session`
+    touched: HashSet<u64>,
     session: ExecSession,
     /// supported fused-dispatch widths, computed once from the manifest
     fuse_widths: Vec<usize>,
@@ -289,7 +322,9 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            execs: HashMap::new(),
+            execs: ExecCache::new(),
+            name_keys: HashMap::new(),
+            touched: HashSet::new(),
             session: ExecSession::new(),
             fuse_widths,
             zeros: HashMap::new(),
@@ -318,9 +353,29 @@ impl Engine {
     }
 
     /// Drop every pooled small-operand buffer (block uploads are owned by
-    /// callers and unaffected).
+    /// callers and unaffected) and start a new cache-meter epoch: the
+    /// next touch of each artifact records one hit/miss again. Compiled
+    /// executables stay resident — that warmth is the point.
     pub fn reset_session(&mut self) {
         self.session.clear();
+        self.touched.clear();
+    }
+
+    /// The executable cache's meter (cumulative for the engine's
+    /// lifetime; take [`CacheMeter::since`] snapshots for per-job views).
+    pub fn cache_meter(&self) -> &CacheMeter {
+        &self.execs.meter
+    }
+
+    /// Cap resident compiled executables (insertion-order eviction past
+    /// the cap; `serve.cache_capacity`). Default is unbounded.
+    pub fn set_exec_cache_capacity(&mut self, cap: usize) {
+        self.execs.set_capacity(cap);
+    }
+
+    /// Number of compiled executables currently resident.
+    pub fn exec_cache_len(&self) -> usize {
+        self.execs.len()
     }
 
     pub fn block_rows(&self) -> usize {
@@ -369,9 +424,31 @@ impl Engine {
         Ok(())
     }
 
-    /// Get (compiling if needed) the executable for `name`.
+    /// Resolve an artifact name to its content key (memoized: the file is
+    /// hashed once per name per engine lifetime).
+    fn exec_key(&mut self, name: &str) -> Result<u64> {
+        if let Some(&key) = self.name_keys.get(name) {
+            return Ok(key);
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let key = cache::artifact_key(meta)?;
+        self.name_keys.insert(name.to_string(), key);
+        Ok(key)
+    }
+
+    /// Get (compiling if needed) the executable for `name`, via the
+    /// content-addressed cache: identical artifact content under two
+    /// names compiles once, and a warm entry is a metered cache hit.
     pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.execs.contains_key(name) {
+        let key = self.exec_key(name)?;
+        if self.execs.contains(key) {
+            if self.touched.insert(key) {
+                self.execs.meter.record_hit();
+            }
+        } else {
             let meta = self
                 .manifest
                 .find(name)
@@ -383,11 +460,13 @@ impl Engine {
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe =
                 self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            let dt = t0.elapsed().as_nanos();
             self.stats.compiles += 1;
-            self.stats.compile_ns += t0.elapsed().as_nanos();
-            self.execs.insert(name.to_string(), exe);
+            self.stats.compile_ns += dt;
+            self.touched.insert(key);
+            self.execs.insert(key, exe, dt as u64);
         }
-        Ok(self.execs.get(name).unwrap())
+        Ok(self.execs.get(key).unwrap())
     }
 
     /// Execute artifact `name` with device-buffer inputs; returns the
@@ -405,7 +484,7 @@ impl Engine {
         inputs: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::Literal>> {
         self.executable(name)?; // ensure compiled (borrow gymnastics)
-        let exe = self.execs.get(name).unwrap();
+        let exe = self.execs.get(self.name_keys[name]).unwrap();
         Self::dispatch(&mut self.stats, exe, name, inputs)
     }
 
@@ -430,7 +509,7 @@ impl Engine {
         for (key, _) in pooled_tail {
             inputs.push(self.session.get(key)?);
         }
-        let exe = self.execs.get(name).unwrap();
+        let exe = self.execs.get(self.name_keys[name]).unwrap();
         Self::dispatch(&mut self.stats, exe, name, &inputs)
     }
 
@@ -451,7 +530,7 @@ impl Engine {
         for key in slot_keys {
             inputs.push(self.session.get(key)?);
         }
-        let exe = self.execs.get(name).unwrap();
+        let exe = self.execs.get(self.name_keys[name]).unwrap();
         Self::dispatch(&mut self.stats, exe, name, &inputs)
     }
 
@@ -493,7 +572,7 @@ impl Engine {
         out_dims: Vec<usize>,
     ) -> Result<DeviceVec> {
         self.executable(name)?;
-        let exe = self.execs.get(name).unwrap();
+        let exe = self.execs.get(self.name_keys[name]).unwrap();
         let t0 = Instant::now();
         let mut out = exe
             .execute_b::<&xla::PjRtBuffer>(inputs)

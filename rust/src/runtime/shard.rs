@@ -134,7 +134,7 @@
 //! `FaultMeter`.
 
 use super::{Engine, EngineStats};
-use crate::accounting::{OverlapMeter, StallMeter};
+use crate::accounting::{CacheMeter, OverlapMeter, StallMeter};
 use crate::data::blocks::{pack_all, Block};
 use crate::data::{Sample, SampleStream};
 use anyhow::{anyhow, Context, Result};
@@ -1076,6 +1076,7 @@ impl ShardPool {
                         stats: state.engine.stats.clone(),
                         stalls: state.stalls.clone(),
                         overlap: state.overlap.clone(),
+                        cache: state.engine.cache_meter().clone(),
                     })
                 })
             })
@@ -1140,6 +1141,35 @@ impl ShardPool {
         }
         Ok((stalls, overlap))
     }
+
+    /// All shard engines' executable-cache meters folded into one total.
+    /// Cumulative for the pool's lifetime (NOT zeroed by
+    /// `clear_machines` — warm executables outlive runs by design); the
+    /// serve layer takes [`CacheMeter::since`] snapshots per job.
+    pub fn gathered_cache(&self) -> Result<CacheMeter> {
+        let mut total = CacheMeter::default();
+        for s in self.per_shard_metrics()? {
+            total.merge(&s.cache);
+        }
+        Ok(total)
+    }
+
+    /// Cap every shard engine's resident compiled executables (the
+    /// `serve.cache_capacity` key; see `Engine::set_exec_cache_capacity`).
+    pub fn set_exec_cache_capacity(&self, cap: usize) -> Result<()> {
+        let pends: Vec<Pending<()>> = (0..self.shards())
+            .map(|s| {
+                self.submit_named(s, "cap exec cache", move |state| {
+                    state.engine.set_exec_cache_capacity(cap);
+                    Ok(())
+                })
+            })
+            .collect();
+        for p in pends {
+            p.wait()?;
+        }
+        Ok(())
+    }
 }
 
 /// One shard's gathered diagnostic meters (see
@@ -1150,6 +1180,7 @@ pub struct ShardMetrics {
     pub stats: EngineStats,
     pub stalls: StallMeter,
     pub overlap: OverlapMeter,
+    pub cache: CacheMeter,
 }
 
 impl Drop for ShardPool {

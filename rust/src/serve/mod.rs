@@ -1,0 +1,617 @@
+//! mbprox-serve: a persistent run service over a resident `Runner`.
+//!
+//! The paper's regime is many configurations swept over one problem
+//! family; a cold `mbprox run` pays engine construction plus artifact
+//! compilation before the first minibatch-prox iteration. This module
+//! amortizes that cost the same way the paper amortizes communication
+//! across local work: a long-lived process owns warm
+//! [`Runner`]/[`ShardPool`](crate::runtime::ShardPool) instances and
+//! executes a queue of configs against the content-addressed executable
+//! cache (`runtime::cache`), so a thousand queued configs pay lowering
+//! and compilation once.
+//!
+//! # Wire format
+//!
+//! Plain HTTP/1.1, hand-rolled on `std::net` (the offline image has no
+//! HTTP dependency). The request body of `POST /run` IS the existing
+//! `KvConfig` key set — `key = value` lines, `#` comments and
+//! `[section]` headers exactly as `mbprox run` reads from a file. No new
+//! schema: if a config file runs, its bytes POST.
+//!
+//! - `POST /run` — validate (the full `ExperimentConfig::from_kv` path:
+//!   unknown keys get did-you-mean, `serve.*` keys are rejected — they
+//!   configure the service, not a run), enqueue, and stream progress as
+//!   newline-delimited JSON events until the job finishes:
+//!   `{"event":"queued","job":N}` on acceptance,
+//!   `{"event":"start","job":N}` when execution begins, one
+//!   `{"event":"point",...}` per objective-curve point, and finally
+//!   `{"event":"done","job":N,"run":{...}}` carrying the full `run_json`
+//!   (including the job's `cache` meter delta), or
+//!   `{"event":"error","job":N,"error":"..."}`. A malformed config is
+//!   HTTP 400 before anything is queued; a full queue is HTTP 429.
+//!   Curve points stream when the job completes (runs execute
+//!   synchronously on the warm pool; points are not emitted mid-run).
+//! - `GET /stats` — cumulative [`ServeStats`] as JSON: job counts, the
+//!   executable-cache totals, the warm-runner cache meter and the
+//!   resident runner key.
+//! - `POST /shutdown` — drain the queue, stop accepting, and return from
+//!   [`Server::run`] with the final stats.
+//!
+//! # Queue semantics
+//!
+//! One bounded FIFO queue (`serve.queue_depth`), one executor: the
+//! thread that calls [`Server::run`] owns every engine (PJRT handles are
+//! not `Send`, so runners never cross threads) and executes jobs
+//! strictly in acceptance order. Job ids are assigned inside the enqueue
+//! critical section, so id order IS queue order. A full queue rejects
+//! immediately with 429 — clients retry; the service never blocks a
+//! connection on another job's runtime.
+//!
+//! # What the cache key includes — and excludes
+//!
+//! Warm runners are keyed by [`cache::pool_key`](crate::runtime::cache):
+//! the artifacts-dir content hash, the shard count and the process-level
+//! plane/prefetch/pipeline policies. Method, b_local, seed, scenario and
+//! every other experiment key are deliberately NOT in the key: they are
+//! per-run state the resident runner rebuilds from scratch (its context
+//! teardown resets sessions, meters and shard state between jobs), and
+//! cross-plane bit-parity is unconditional. Compiled executables hash
+//! (artifact bytes, manifest entry) — see `runtime::cache`.
+//!
+//! # What `CacheMeter` does NOT measure
+//!
+//! The meter counts host wall-clock only: compile time saved, hits,
+//! misses, evictions. It never touches the simulated cost model —
+//! rounds, vectors, samples, memory and the objective curve are charged
+//! identically warm or cold, and a warm-cache run returns bit-identical
+//! iterates/curves/paper-unit meters to a cold-process run
+//! (`rust/tests/serve_parity.rs` pins this).
+
+use crate::accounting::CacheMeter;
+use crate::config::{ExperimentConfig, KvConfig, ServeConfig};
+use crate::coordinator::{shards_from_env, Runner};
+use crate::metrics::run_json;
+use crate::runtime::cache::{manifest_hash, pool_key, KeyedCache};
+use crate::runtime::{
+    Engine, Manifest, PipelinePolicy, PlanePolicy, PrefetchPolicy,
+};
+use crate::util::json::escape_str;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How many warm runner instances stay resident at once. One per
+/// cache-relevant config subset; within one server process the subset is
+/// fixed by the artifacts dir and process env, so in practice a single
+/// slot stays hot and the second is headroom.
+const WARM_RUNNERS: usize = 2;
+
+/// Per-connection socket timeout: a stalled peer must not pin a handler
+/// thread forever. Generous — job streams only write when events arrive.
+const IO_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Cumulative service counters, rendered by `GET /stats` and returned by
+/// [`Server::run`] at shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// jobs accepted into the queue (each eventually done or failed)
+    pub jobs_accepted: u64,
+    /// jobs that ran to a `done` event
+    pub jobs_done: u64,
+    /// jobs that errored during execution (`error` event streamed)
+    pub jobs_failed: u64,
+    /// submissions rejected with 429 (bounded queue full)
+    pub jobs_rejected: u64,
+    /// executable-cache totals across all jobs (sum of per-job deltas)
+    pub exec_cache: CacheMeter,
+    /// warm-runner instance cache meter (misses = runner builds)
+    pub runners: CacheMeter,
+}
+
+impl ServeStats {
+    pub fn to_json(&self, runner_key: &str, queue_capacity: usize) -> String {
+        fn meter(c: &CacheMeter) -> String {
+            format!(
+                "{{\"hits\":{},\"misses\":{},\"compile_ns\":{},\"evictions\":{},\"hit_rate\":{}}}",
+                c.hits,
+                c.misses,
+                c.compile_ns,
+                c.evictions,
+                c.hit_rate()
+            )
+        }
+        format!(
+            "{{\"jobs_accepted\":{},\"jobs_done\":{},\"jobs_failed\":{},\"jobs_rejected\":{},\
+             \"queue_capacity\":{},\"exec_cache\":{},\"runners\":{},\"runner_key\":{}}}",
+            self.jobs_accepted,
+            self.jobs_done,
+            self.jobs_failed,
+            self.jobs_rejected,
+            queue_capacity,
+            meter(&self.exec_cache),
+            meter(&self.runners),
+            escape_str(runner_key),
+        )
+    }
+}
+
+/// One accepted unit of work, or the shutdown marker.
+enum Job {
+    Run { id: u64, kv: KvConfig, events: Sender<String> },
+    Shutdown,
+}
+
+/// The enqueue critical section: id assignment and `try_send` happen
+/// under one lock so job-id order is exactly queue order.
+struct Enqueue {
+    tx: SyncSender<Job>,
+    next_id: u64,
+}
+
+/// The run service. [`Server::bind`] claims the port (0 = OS-assigned,
+/// queryable via [`Server::addr`] — the tests' and benches' form);
+/// [`Server::run`] serves until `POST /shutdown`.
+pub struct Server {
+    cfg: ServeConfig,
+    artifacts_dir: PathBuf,
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl Server {
+    pub fn bind(cfg: &ServeConfig, artifacts_dir: &Path) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding serve port {}", cfg.port))?;
+        let addr = listener.local_addr().context("resolving bound serve address")?;
+        Ok(Server { cfg: cfg.clone(), artifacts_dir: artifacts_dir.to_path_buf(), listener, addr })
+    }
+
+    /// The bound address (resolves `serve.port = 0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until `POST /shutdown`, then return the final stats. The
+    /// calling thread becomes the executor and owns every engine; accept
+    /// and per-connection streaming run on companion threads.
+    pub fn run(self) -> Result<ServeStats> {
+        let Server { cfg, artifacts_dir, listener, addr } = self;
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stopping = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
+        let enqueue = Arc::new(Mutex::new(Enqueue { tx, next_id: 1 }));
+        let runner_key = resident_runner_key(&artifacts_dir)?;
+
+        let accept = {
+            let enqueue = Arc::clone(&enqueue);
+            let stats = Arc::clone(&stats);
+            let stopping = Arc::clone(&stopping);
+            let runner_key = runner_key.clone();
+            let queue_depth = cfg.queue_depth;
+            std::thread::Builder::new().name("serve-accept".into()).spawn(move || {
+                for conn in listener.incoming() {
+                    if stopping.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let enqueue = Arc::clone(&enqueue);
+                    let stats = Arc::clone(&stats);
+                    let stopping = Arc::clone(&stopping);
+                    let runner_key = runner_key.clone();
+                    let _ = std::thread::Builder::new().name("serve-conn".into()).spawn(
+                        move || {
+                            if let Err(e) = handle_connection(
+                                stream,
+                                &enqueue,
+                                &stats,
+                                &stopping,
+                                &runner_key,
+                                queue_depth,
+                            ) {
+                                eprintln!("serve: connection error: {e:#}");
+                            }
+                        },
+                    );
+                }
+            })?
+        };
+
+        // the executor: this thread owns the warm runners (PJRT handles
+        // are not Send) and drains the FIFO strictly in id order
+        let mut runners: KeyedCache<Runner> = KeyedCache::new(WARM_RUNNERS);
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Shutdown => break,
+                Job::Run { id, kv, events } => {
+                    let _ = events.send(format!("{{\"event\":\"start\",\"job\":{id}}}"));
+                    let outcome =
+                        execute_job(id, &kv, &runner_key, &cfg, &artifacts_dir, &mut runners, &events);
+                    let mut st = stats.lock().unwrap();
+                    st.runners = runners.meter.clone();
+                    match outcome {
+                        Ok(json) => {
+                            st.jobs_done += 1;
+                            if let Some(delta) = last_run_cache_delta(&json) {
+                                st.exec_cache.merge(&delta);
+                            }
+                            drop(st);
+                            let _ = events
+                                .send(format!("{{\"event\":\"done\",\"job\":{id},\"run\":{json}}}"));
+                        }
+                        Err(e) => {
+                            st.jobs_failed += 1;
+                            drop(st);
+                            let msg = escape_str(&format!("{e:#}"));
+                            let _ = events
+                                .send(format!("{{\"event\":\"error\",\"job\":{id},\"error\":{msg}}}"));
+                        }
+                    }
+                    // dropping `events` ends the client's stream
+                }
+            }
+        }
+
+        stopping.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr); // wake the accept loop
+        let _ = accept.join();
+        let final_stats = stats.lock().unwrap().clone();
+        Ok(final_stats)
+    }
+}
+
+/// The resident-runner cache key for this process: artifacts-dir content
+/// hash + shard count + process-level plane/prefetch/pipeline policies
+/// (see the module doc for what is deliberately excluded).
+fn resident_runner_key(artifacts_dir: &Path) -> Result<String> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    Ok(pool_key(
+        manifest_hash(&manifest)?,
+        shards_from_env()?.unwrap_or(0),
+        PlanePolicy::from_env()?,
+        PrefetchPolicy::from_env()?,
+        PipelinePolicy::from_env()?,
+    ))
+}
+
+/// Run one job on the warm runner for `runner_key`, building (and
+/// capacity-capping) it on first use. Streams one `point` event per
+/// objective-curve point, then returns the run's `run_json`.
+fn execute_job(
+    id: u64,
+    kv: &KvConfig,
+    runner_key: &str,
+    cfg: &ServeConfig,
+    artifacts_dir: &Path,
+    runners: &mut KeyedCache<Runner>,
+    events: &Sender<String>,
+) -> Result<String> {
+    let exp = ExperimentConfig::from_kv(kv)?;
+    let cache_capacity = cfg.cache_capacity;
+    let dir = artifacts_dir.to_path_buf();
+    let runner = runners.get_or_try_insert_with(runner_key, || {
+        let mut r = Runner::new(Engine::new(&dir)?)
+            .with_env_shards(&dir)?
+            .with_env_plane()?
+            .with_env_prefetch()?
+            .with_env_pipeline()?;
+        if let Some(cap) = cache_capacity {
+            r.set_exec_cache_capacity(cap)?;
+        }
+        Ok(r)
+    })?;
+    let result = runner.run(&exp)?;
+    for p in &result.curve {
+        let obj = p.objective.map(|o| o.to_string()).unwrap_or_else(|| "null".into());
+        let _ = events.send(format!(
+            "{{\"event\":\"point\",\"job\":{id},\"t\":{},\"samples\":{},\"rounds\":{},\
+             \"objective\":{obj}}}",
+            p.outer_iter, p.samples_total, p.comm_rounds
+        ));
+    }
+    Ok(run_json(&result))
+}
+
+/// Extract the `cache` meter delta back out of a rendered `run_json`
+/// (the executor aggregates per-job deltas into the service totals
+/// without holding a second copy of the result).
+fn last_run_cache_delta(json: &str) -> Option<CacheMeter> {
+    let v = crate::util::json::Json::parse(json).ok()?;
+    let c = v.get("cache")?;
+    Some(CacheMeter {
+        hits: c.get("hits")?.as_f64()? as u64,
+        misses: c.get("misses")?.as_f64()? as u64,
+        compile_ns: c.get("compile_ns")?.as_f64()? as u64,
+        evictions: c.get("evictions")?.as_f64()? as u64,
+    })
+}
+
+/// One parsed HTTP request (the tiny subset the wire format needs).
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        anyhow::bail!("malformed request line {line:?}");
+    }
+    let mut content_length = 0usize;
+    let mut expects_continue = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("reading header")?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length =
+                    value.parse().with_context(|| format!("Content-Length {value:?}"))?;
+            } else if name == "expect" && value.eq_ignore_ascii_case("100-continue") {
+                expects_continue = true;
+            }
+        }
+    }
+    if expects_continue {
+        stream
+            .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+            .context("writing 100 Continue")?;
+    }
+    anyhow::ensure!(content_length <= 1 << 20, "request body too large ({content_length} bytes)");
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading request body")?;
+    Ok(Request { method, path, body: String::from_utf8_lossy(&body).into_owned() })
+}
+
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    enqueue: &Mutex<Enqueue>,
+    stats: &Mutex<ServeStats>,
+    stopping: &AtomicBool,
+    runner_key: &str,
+    queue_depth: usize,
+) -> Result<()> {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let req = read_request(&mut stream)?;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/run") if stopping.load(Ordering::SeqCst) => respond(
+            &mut stream,
+            503,
+            "Service Unavailable",
+            "{\"error\":\"server is shutting down\"}",
+        ),
+        ("POST", "/run") => handle_run(stream, &req.body, enqueue, stats, queue_depth),
+        ("GET", "/stats") => {
+            let body = stats.lock().unwrap().to_json(runner_key, queue_depth);
+            respond(&mut stream, 200, "OK", &body)
+        }
+        ("POST", "/shutdown") => {
+            stopping.store(true, Ordering::SeqCst);
+            // blocking send: shutdown queues behind accepted jobs, so
+            // every already-queued run still streams its result
+            let tx = enqueue.lock().unwrap().tx.clone();
+            tx.send(Job::Shutdown).map_err(|_| anyhow!("executor is gone"))?;
+            respond(&mut stream, 200, "OK", "{\"ok\":true}")
+        }
+        (_, "/run") | (_, "/stats") | (_, "/shutdown") => respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            "{\"error\":\"use POST /run, GET /stats, POST /shutdown\"}",
+        ),
+        _ => respond(&mut stream, 404, "Not Found", "{\"error\":\"unknown path\"}"),
+    }
+}
+
+fn handle_run(
+    mut stream: TcpStream,
+    body: &str,
+    enqueue: &Mutex<Enqueue>,
+    stats: &Mutex<ServeStats>,
+    queue_depth: usize,
+) -> Result<()> {
+    // validate BEFORE queueing: a malformed config must not occupy a slot
+    let kv = match KvConfig::parse(body) {
+        Ok(kv) => kv,
+        Err(e) => {
+            let msg = format!("{{\"error\":{}}}", escape_str(&format!("{e:#}")));
+            return respond(&mut stream, 400, "Bad Request", &msg);
+        }
+    };
+    if let Err(e) = ExperimentConfig::from_kv(&kv) {
+        let msg = format!("{{\"error\":{}}}", escape_str(&format!("{e:#}")));
+        return respond(&mut stream, 400, "Bad Request", &msg);
+    }
+    let (ev_tx, ev_rx): (Sender<String>, Receiver<String>) = mpsc::channel();
+    let id = {
+        let mut q = enqueue.lock().unwrap();
+        let id = q.next_id;
+        match q.tx.try_send(Job::Run { id, kv, events: ev_tx }) {
+            Ok(()) => {
+                q.next_id += 1;
+                drop(q);
+                stats.lock().unwrap().jobs_accepted += 1;
+                id
+            }
+            Err(TrySendError::Full(_)) => {
+                drop(q);
+                stats.lock().unwrap().jobs_rejected += 1;
+                let msg = format!(
+                    "{{\"error\":\"job queue full (serve.queue_depth={queue_depth}); retry\"}}"
+                );
+                return respond(&mut stream, 429, "Too Many Requests", &msg);
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return respond(
+                    &mut stream,
+                    503,
+                    "Service Unavailable",
+                    "{\"error\":\"executor is gone\"}",
+                );
+            }
+        }
+    };
+    // accepted: stream ndjson events until the executor drops our sender
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n",
+    )?;
+    stream.write_all(format!("{{\"event\":\"queued\",\"job\":{id}}}\n").as_bytes())?;
+    stream.flush()?;
+    while let Ok(line) = ev_rx.recv() {
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tiny blocking HTTP client — shared by the integration tests, the
+// concurrent-clients bench scenario and ad-hoc scripting. Not a general
+// client: it speaks exactly the dialect the server above emits
+// (Connection: close, response terminated by EOF).
+
+/// A streaming response: status line parsed, body readable line-by-line
+/// (the `/run` ndjson event stream).
+pub struct HttpStream {
+    pub status: u16,
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpStream {
+    /// Next body line, `None` at end of stream.
+    pub fn next_line(&mut self) -> Option<String> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => Some(line.trim_end().to_string()),
+        }
+    }
+
+    /// Drain the remaining body.
+    pub fn read_to_end(mut self) -> String {
+        let mut out = String::new();
+        while let Some(l) = self.next_line() {
+            out.push_str(&l);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Open a request and return once the response HEAD is parsed; the body
+/// streams through the returned [`HttpStream`].
+pub fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<HttpStream> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).context("writing request")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("reading status line")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("reading response header")?;
+        if h.trim().is_empty() {
+            break;
+        }
+    }
+    Ok(HttpStream { status, reader })
+}
+
+/// POST and drain: returns `(status, full body)`.
+pub fn http_post(addr: SocketAddr, path: &str, body: &str) -> Result<(u16, String)> {
+    let s = http_request(addr, "POST", path, body)?;
+    let status = s.status;
+    Ok((status, s.read_to_end()))
+}
+
+/// GET and drain: returns `(status, full body)`.
+pub fn http_get(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    let s = http_request(addr, "GET", path, "")?;
+    let status = s.status;
+    Ok((status, s.read_to_end()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_stats_json_is_parseable() {
+        let mut st = ServeStats::default();
+        st.jobs_accepted = 3;
+        st.jobs_done = 2;
+        st.jobs_rejected = 1;
+        st.exec_cache.record_miss(500);
+        st.exec_cache.record_hit();
+        st.runners.record_miss(9);
+        let j = st.to_json("artifacts=00;shards=0;plane=auto;prefetch=auto;pipeline=auto", 4);
+        let v = crate::util::json::Json::parse(&j).expect("valid json");
+        assert_eq!(v.get("jobs_accepted").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("jobs_rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("queue_capacity").unwrap().as_usize(), Some(4));
+        let c = v.get("exec_cache").unwrap();
+        assert_eq!(c.get("hits").unwrap().as_usize(), Some(1));
+        assert_eq!(c.get("misses").unwrap().as_usize(), Some(1));
+        assert_eq!(c.get("hit_rate").unwrap().as_f64(), Some(0.5));
+        assert!(v.get("runner_key").unwrap().as_str().unwrap().contains("plane=auto"));
+    }
+
+    #[test]
+    fn cache_delta_round_trips_through_run_json() {
+        // the executor's stats aggregation reads the delta back out of
+        // the rendered run_json; the formats must stay in sync
+        let json = "{\"cache\": {\"hits\": 4, \"misses\": 2, \"compile_ns\": 77, \
+                     \"evictions\": 1, \"hit_rate\": 0.6666}, \"curve\": []}";
+        let d = last_run_cache_delta(json).expect("delta parses");
+        assert_eq!(d, CacheMeter { hits: 4, misses: 2, compile_ns: 77, evictions: 1 });
+        assert_eq!(last_run_cache_delta("{\"cache\": null}"), None);
+    }
+}

@@ -1,0 +1,81 @@
+//! Stable 64-bit content hashing (FNV-1a): the crate's canonical hash
+//! for content-addressed cache keys. `std::hash` is deliberately NOT
+//! used here — its output is unspecified across releases and per-process
+//! randomized for HashMap, while a content address must be stable (it is
+//! serialized into `/stats` output and compared across processes).
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64 { state: FNV_OFFSET }
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64::default()
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Fnv64 {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Feed a length-prefixed field: two byte strings concatenated must
+    /// not collide with a different split of the same bytes.
+    pub fn field(&mut self, bytes: &[u8]) -> &mut Fnv64 {
+        self.update(&(bytes.len() as u64).to_le_bytes());
+        self.update(bytes)
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte string.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a_64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let mut h = Fnv64::new();
+        h.update(b"foo").update(b"bar");
+        assert_eq!(h.finish(), fnv1a_64(b"foobar"));
+    }
+
+    #[test]
+    fn field_prefix_breaks_concatenation_collisions() {
+        let mut a = Fnv64::new();
+        a.field(b"ab").field(b"c");
+        let mut b = Fnv64::new();
+        b.field(b"a").field(b"bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

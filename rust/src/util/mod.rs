@@ -4,6 +4,7 @@
 //! name matcher (config keys, scenario names).
 
 pub mod benchkit;
+pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod testkit;

@@ -1,0 +1,327 @@
+//! mbprox-serve parity and queue semantics: the warm-cache service may
+//! NEVER move the paper's numbers. A run executed on a resident runner
+//! whose executable cache is already hot must be bit-identical — final
+//! iterates, objective curve, every paper-unit meter, the simulated
+//! clock — to the same config executed by a cold process. The cache
+//! shows up ONLY in the wall-clock `cache` meter (hits/misses/
+//! compile_ns), which is diagnostics, not cost model.
+//!
+//! Also pinned here: the bounded FIFO's contract (job-id order is queue
+//! order, a full queue rejects with 429 without disturbing queued jobs,
+//! per-job cache deltas are isolated) and the satellite fix that
+//! resident runners reset per-run state between queued jobs (meter
+//! leakage regression: two configs back-to-back on one runner vs
+//! fresh-runner runs).
+//!
+//! Requires `make artifacts`. Servers bind port 0 (OS-assigned), so the
+//! tests never collide with each other or a developer's running service.
+
+use mbprox::comm::faults::FaultsPolicy;
+use mbprox::config::{ExperimentConfig, ServeConfig};
+use mbprox::coordinator::Runner;
+use mbprox::data::Loss;
+use mbprox::runtime::Engine;
+use mbprox::serve::{http_get, http_post, http_request, Server, ServeStats};
+use mbprox::util::json::Json;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A fresh runner with the SAME env-derived policies the server applies
+/// to its resident runners — the cold side of every comparison.
+fn cold_runner() -> Runner {
+    let dir = artifacts_dir();
+    Runner::new(Engine::new(&dir).expect("run `make artifacts` before cargo test"))
+        .with_env_shards(&dir)
+        .expect("env shards")
+        .with_env_plane()
+        .expect("env plane")
+        .with_env_prefetch()
+        .expect("env prefetch")
+        .with_env_pipeline()
+        .expect("env pipeline")
+}
+
+/// Bind on port 0 and serve from a companion thread (that thread is the
+/// executor and owns the engines). Returns the address and the handle
+/// whose join yields the final [`ServeStats`] after `POST /shutdown`.
+fn start_server(queue_depth: usize) -> (SocketAddr, std::thread::JoinHandle<ServeStats>) {
+    let cfg = ServeConfig { port: 0, queue_depth, ..ServeConfig::default() };
+    let server = Server::bind(&cfg, &artifacts_dir()).expect("bind serve port 0");
+    let addr = server.addr();
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, handle)
+}
+
+/// The wire body for the drift config below — the SAME key=value lines a
+/// config file holds (`POST /run`'s body IS the KvConfig key set).
+const DRIFT_BODY: &str = "method = mp-dsvrg\nscenario = drift\nloss = sq\nm = 4\n\
+                          b_local = 300\nn_budget = 2400\ndim = 64\nseed = 20170707\n\
+                          eval_samples = 1024\neval_every = 1\n";
+
+fn drift_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        method: "mp-dsvrg".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 300,
+        n_budget: 2400,
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// POST a config and collect the ndjson event stream: returns
+/// `(queued_job_id, done_run_json)` — panics on an `error` event.
+fn post_run(addr: SocketAddr, body: &str) -> (u64, Json) {
+    let mut stream = http_request(addr, "POST", "/run", body).expect("POST /run");
+    assert_eq!(stream.status, 200, "accepted run streams 200");
+    let queued = stream.next_line().expect("queued event");
+    let q = Json::parse(&queued).expect("queued event is json");
+    assert_eq!(q.get("event").and_then(Json::as_str), Some("queued"), "{queued}");
+    let id = q.get("job").and_then(Json::as_f64).expect("job id") as u64;
+    let mut run = None;
+    while let Some(line) = stream.next_line() {
+        let ev = Json::parse(&line).expect("event line is json");
+        match ev.get("event").and_then(Json::as_str) {
+            Some("start") | Some("point") => {}
+            Some("done") => {
+                assert_eq!(ev.get("job").and_then(Json::as_f64), Some(id as f64));
+                run = Some(ev.get("run").expect("done carries run_json").clone());
+            }
+            Some("error") => panic!("job {id} failed: {line}"),
+            other => panic!("unexpected event {other:?}: {line}"),
+        }
+    }
+    (id, run.expect("stream ended without a done event"))
+}
+
+/// Bitwise identity on the deterministic surface of two `run_json`
+/// values: everything EXCEPT the wall-clock diagnostics (`cache` always;
+/// the timing fields of `stalls`/`overlap`, whose deterministic counts
+/// ARE compared). This is exactly the serve contract: warm vs cold may
+/// differ only in wall-clock metering.
+fn assert_same_run_json(a: &Json, b: &Json, label: &str) {
+    for key in [
+        "name",
+        "samples",
+        "comm_rounds",
+        "vec_ops",
+        "memory",
+        "peak_vectors_per_machine",
+        "sim_time_s",
+        "objective",
+        "curve",
+    ] {
+        assert_eq!(a.get(key), b.get(key), "{label}: run_json field {key:?}");
+    }
+    // dispatch counts are seed-determined even though stall/overlap
+    // nanoseconds are not
+    for (section, count) in [("stalls", "takes"), ("overlap", "fans")] {
+        let (sa, sb) = (a.get(section), b.get(section));
+        match (sa, sb) {
+            (Some(Json::Null), Some(Json::Null)) | (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(
+                    x.get(count).map(Json::as_f64),
+                    y.get(count).map(Json::as_f64),
+                    "{label}: {section}.{count}"
+                );
+            }
+            other => panic!("{label}: {section} presence mismatch {other:?}"),
+        }
+    }
+}
+
+/// Pull the `cache` meter out of a `run_json` value.
+fn cache_of(run: &Json) -> &Json {
+    run.get("cache").expect("run_json carries a cache member")
+}
+
+/// The tentpole bar: a job on a warm cache is bit-identical to a cold
+/// process run, and the cache shows up only in the meter — first job all
+/// misses, second job all hits with zero compile time.
+#[test]
+fn warm_cache_run_is_bit_identical_to_cold_process_run() {
+    let cold = cold_runner().run(&drift_cfg()).expect("cold run");
+    let cold_json = Json::parse(&mbprox::metrics::run_json(&cold)).expect("cold run_json");
+
+    let (addr, handle) = start_server(4);
+    let (id1, run1) = post_run(addr, DRIFT_BODY);
+    let (id2, run2) = post_run(addr, DRIFT_BODY);
+    assert_eq!((id1, id2), (1, 2), "job ids are assigned in submission order");
+
+    assert_same_run_json(&cold_json, &run1, "cold process vs first (cold-cache) job");
+    assert_same_run_json(&cold_json, &run2, "cold process vs second (warm-cache) job");
+
+    // per-job cache deltas: job 1 compiled everything, job 2 nothing —
+    // and job 2's delta is NOT polluted by job 1's misses (isolation)
+    let c1 = cache_of(&run1);
+    let c2 = cache_of(&run2);
+    let field = |c: &Json, k: &str| c.get(k).and_then(Json::as_f64).unwrap_or(-1.0);
+    assert!(field(c1, "misses") >= 1.0, "first job compiles: {c1:?}");
+    assert_eq!(field(c1, "hits"), 0.0, "nothing is warm on the first job: {c1:?}");
+    assert!(field(c1, "compile_ns") >= 1.0, "compiles cost wall-clock: {c1:?}");
+    assert_eq!(field(c2, "misses"), 0.0, "warm job recompiles nothing: {c2:?}");
+    assert_eq!(field(c2, "compile_ns"), 0.0, "warm job spends no compile time: {c2:?}");
+    assert_eq!(
+        field(c2, "hits"),
+        field(c1, "misses"),
+        "warm job hits exactly what the cold job compiled"
+    );
+    assert_eq!(field(c2, "hit_rate"), 1.0, "warm hit rate is 1.0: {c2:?}");
+
+    // /stats aggregates the per-job deltas
+    let (status, stats) = http_get(addr, "/stats").expect("GET /stats");
+    assert_eq!(status, 200);
+    let v = Json::parse(&stats).expect("stats json");
+    assert_eq!(v.get("jobs_done").and_then(Json::as_f64), Some(2.0), "{stats}");
+    let ec = v.get("exec_cache").expect("exec_cache section");
+    assert_eq!(field(ec, "misses"), field(c1, "misses"), "{stats}");
+    assert_eq!(field(ec, "hits"), field(c2, "hits"), "{stats}");
+
+    let (status, _) = http_post(addr, "/shutdown", "").expect("POST /shutdown");
+    assert_eq!(status, 200);
+    let final_stats = handle.join().expect("server thread");
+    assert_eq!(final_stats.jobs_done, 2);
+    assert_eq!(final_stats.jobs_failed, 0);
+    assert_eq!(final_stats.runners.misses, 1, "one resident runner built");
+    assert_eq!(final_stats.runners.hits, 1, "second job reused it");
+}
+
+/// Queue semantics: ids are handed out in acceptance order, a malformed
+/// config is rejected before it occupies a slot, and `serve.*` keys are
+/// rejected from job bodies (they configure the service, not a run).
+#[test]
+fn queue_assigns_ids_in_order_and_rejects_bad_configs_unqueued() {
+    let (addr, handle) = start_server(4);
+
+    let (status, body) = http_post(addr, "/run", "metod = mp-dsvrg\n").expect("bad key post");
+    assert_eq!(status, 400, "unknown key is rejected before queueing: {body}");
+    assert!(body.contains("did you mean"), "did-you-mean reaches the wire: {body}");
+
+    let (status, body) =
+        http_post(addr, "/run", &format!("{DRIFT_BODY}serve.port = 1\n")).expect("serve-key post");
+    assert_eq!(status, 400, "serve.* keys are not job keys: {body}");
+    assert!(body.contains("serve"), "error names the serve namespace: {body}");
+
+    let (status, body) = http_get(addr, "/run").expect("GET /run");
+    assert_eq!(status, 405, "{body}");
+    let (status, _) = http_get(addr, "/no-such-path").expect("GET unknown");
+    assert_eq!(status, 404);
+
+    // rejected submissions consumed no ids: the first accepted job is 1,
+    // and sequential accepts stay in order
+    let (id1, _) = post_run(addr, DRIFT_BODY);
+    let (id2, _) = post_run(addr, DRIFT_BODY);
+    let (id3, _) = post_run(addr, DRIFT_BODY);
+    assert_eq!((id1, id2, id3), (1, 2, 3), "FIFO ids in acceptance order");
+
+    let _ = http_post(addr, "/shutdown", "").expect("shutdown");
+    let stats = handle.join().expect("server thread");
+    assert_eq!(stats.jobs_accepted, 3);
+    assert_eq!(stats.jobs_done, 3);
+    assert_eq!(stats.jobs_rejected, 0, "400s are not queue rejections");
+}
+
+/// Bounded-queue rejection: with `serve.queue_depth = 1`, a job queued
+/// behind a running one fills the only slot and the next submission gets
+/// 429 — while both accepted jobs still stream to completion.
+#[test]
+fn full_queue_rejects_with_429() {
+    let (addr, handle) = start_server(1);
+
+    // a heavier config so job 1 is still executing while 2 and 3 arrive
+    let slow_body = "method = mp-dsvrg\nscenario = drift\nloss = sq\nm = 4\n\
+                     b_local = 300\nn_budget = 7200\ndim = 64\nseed = 20170707\n\
+                     eval_samples = 1024\neval_every = 1\n";
+
+    // job 1: accepted, executor picks it up (freeing the buffer slot)
+    let mut s1 = http_request(addr, "POST", "/run", slow_body).expect("job 1");
+    assert_eq!(s1.status, 200);
+    let q1 = s1.next_line().expect("job 1 queued event");
+    assert!(q1.contains("\"queued\""), "{q1}");
+
+    // job 2: occupies the single queue slot behind the running job
+    let mut s2 = http_request(addr, "POST", "/run", slow_body).expect("job 2");
+    assert_eq!(s2.status, 200);
+    let q2 = s2.next_line().expect("job 2 queued event");
+    assert!(q2.contains("\"queued\""), "{q2}");
+
+    // job 3: queue full -> 429 naming the depth, nothing disturbed
+    let (status, body) = http_post(addr, "/run", slow_body).expect("job 3");
+    assert_eq!(status, 429, "bounded queue rejects: {body}");
+    assert!(body.contains("queue full"), "{body}");
+    assert!(body.contains("queue_depth=1"), "rejection names the bound: {body}");
+
+    // both accepted jobs still run to completion in order
+    let done1 = s1.read_to_end();
+    assert!(done1.contains("\"event\":\"done\""), "job 1 completes: {done1}");
+    let done2 = s2.read_to_end();
+    assert!(done2.contains("\"event\":\"done\""), "job 2 completes: {done2}");
+
+    let _ = http_post(addr, "/shutdown", "").expect("shutdown");
+    let stats = handle.join().expect("server thread");
+    assert_eq!(stats.jobs_done, 2);
+    assert_eq!(stats.jobs_rejected, 1, "exactly the third submission was rejected");
+}
+
+/// Meter-leakage regression (satellite 1): a resident runner executing
+/// two different configs back-to-back must produce the SAME deterministic
+/// results as fresh runners — per-run state (sessions, stall/overlap/
+/// fault meters, recovery tallies, ClusterMeter) is reset between queued
+/// runs, and a faulty run's tallies never bleed into the next job.
+#[test]
+fn resident_runner_runs_match_fresh_runner_runs() {
+    let cfg_plain = drift_cfg();
+    let cfg_faulty = ExperimentConfig {
+        faults: FaultsPolicy::On,
+        straggler_p: Some(0.3),
+        slowdown_alpha: Some(1.5),
+        dropout_p: Some(0.1),
+        dropout_rounds: Some(2),
+        seed: 777,
+        ..drift_cfg()
+    };
+
+    let fresh_plain = cold_runner().run(&cfg_plain).expect("fresh plain");
+    let fresh_faulty = cold_runner().run(&cfg_faulty).expect("fresh faulty");
+
+    let mut resident = cold_runner();
+    let r1 = resident.run(&cfg_faulty).expect("resident faulty");
+    let r2 = resident.run(&cfg_plain).expect("resident plain after faulty");
+    let r3 = resident.run(&cfg_faulty).expect("resident faulty again");
+
+    let jsonify = |r: &mbprox::algos::RunResult| {
+        Json::parse(&mbprox::metrics::run_json(r)).expect("run_json parses")
+    };
+    assert_same_run_json(&jsonify(&fresh_faulty), &jsonify(&r1), "faulty: fresh vs resident 1st");
+    assert_same_run_json(&jsonify(&fresh_plain), &jsonify(&r2), "plain: fresh vs resident 2nd");
+    assert_same_run_json(&jsonify(&fresh_faulty), &jsonify(&r3), "faulty: fresh vs resident 3rd");
+
+    // the fault tally itself must not leak: the plain run between two
+    // faulty ones reports no meter, and the repeated faulty run's tally
+    // matches the fresh one exactly (not a running sum)
+    assert_eq!(r2.faults, fresh_plain.faults, "plain run between faulty runs");
+    assert!(r2.faults.is_none(), "faults=off after a faulty job reports no meter");
+    assert_eq!(r1.faults, fresh_faulty.faults, "first faulty tally");
+    assert_eq!(r3.faults, fresh_faulty.faults, "repeat faulty tally is not cumulative");
+
+    // cache deltas are per-run even on the resident runner: run 1 pays
+    // the compiles, later runs on the warm cache pay none
+    let c1 = r1.cache.as_ref().expect("resident run meters its cache");
+    let c2 = r2.cache.as_ref().expect("resident run meters its cache");
+    let c3 = r3.cache.as_ref().expect("resident run meters its cache");
+    assert!(c1.misses >= 1, "first resident run compiles: {c1:?}");
+    assert_eq!(c2.misses, 0, "warm resident run recompiles nothing: {c2:?}");
+    assert_eq!(c3.misses, 0, "warm resident run recompiles nothing: {c3:?}");
+    assert_eq!(c2.hits, c1.misses, "warm run touches exactly the compiled set");
+    assert_eq!(c3.hits, c1.misses, "cache delta is per-run, not cumulative");
+}
