@@ -13,7 +13,10 @@
 //! meter recorded), the prefetch lane's dispatch-stall comparison
 //! (prefetch on vs off: takes, hit rates, per-shard stall time), and the
 //! batched-fan pipeline comparison (pipeline on vs off: overlap meters,
-//! per-shard overlap time, serialized-vs-pipelined wall-clock), and the
+//! per-shard overlap time, serialized-vs-pipelined wall-clock), the
+//! upload-lane comparison (upload on vs off: staged transfers and
+//! overlappable/waited time, with upload counts and bytes asserted
+//! bit-identical either way), and the
 //! fault-injection degradation benchmark (mp-dsvrg vs minibatch-SGD
 //! simulated time under increasing straggler severity, plus a seeded
 //! dropout/re-entry run — all counters deterministic from the seed, so
@@ -751,6 +754,85 @@ fn main() {
                 s_off.median_ns / 1e6
             );
         }
+    }
+
+    section("upload lane: staging rings on the hot path (upload on vs off)");
+    {
+        use mbprox::accounting::UploadMeter;
+        use mbprox::config::ExperimentConfig;
+        use mbprox::runtime::{default_artifacts_dir, Engine, ShardPool, UploadPolicy};
+
+        let dir = default_artifacts_dir();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let n_shards = cores.min(4).max(1);
+        let m = 8usize;
+        let cfg = ExperimentConfig {
+            method: "mp-dsvrg".into(),
+            m,
+            b_local: 256,
+            n_budget: 4 * 256 * m, // T = 4 outer steps, fresh w each round
+            dim: 64,
+            seed: 41,
+            eval_samples: 64,
+            eval_every: 0,
+            loss: Loss::Squared,
+            ..ExperimentConfig::default()
+        };
+
+        // off: every pooled operand goes through the single-slot session
+        // path. on: operands stage into the back ring half and swap at
+        // the dispatch boundary. The meters are wall-clock diagnostics —
+        // upload COUNTS and BYTES must be bit-identical either way (the
+        // ring compares against the active half exactly like the slot
+        // path compares against its last payload).
+        let mut measured: Vec<(&str, UploadMeter, Vec<u32>)> = Vec::new();
+        for (policy, tag) in [(UploadPolicy::Off, "off"), (UploadPolicy::On, "on")] {
+            let mut r = Runner::new(Engine::new(&dir).unwrap())
+                .with_shards(ShardPool::new(n_shards, &dir).unwrap())
+                .with_upload(policy);
+            let res = r.run(&cfg).unwrap();
+            let s = bench(&format!("mp-dsvrg run (m=8, upload {tag})"), 1, 5, || {
+                r.run(&cfg).unwrap();
+            });
+            println!("{}", s.report());
+            report.push_on(&s, "sharded");
+
+            let u = res.uploads.clone().expect("upload meter is present on every plane");
+            println!(
+                "  upload {tag}: {} uploads ({} B), {} staged, {:.3} ms overlappable, \
+                 {:.3} ms waited at the swap boundary",
+                u.uploads,
+                u.bytes,
+                u.staged,
+                u.overlap_ns as f64 / 1e6,
+                u.wait_ns as f64 / 1e6
+            );
+            report.counter(&format!("upload.{tag}.uploads"), u.uploads as f64);
+            report.counter(&format!("upload.{tag}.staged"), u.staged as f64);
+            report.counter(&format!("upload.{tag}.overlap_ns"), u.overlap_ns as f64);
+            report.counter(&format!("upload.{tag}.wait_ns"), u.wait_ns as f64);
+            report.counter(&format!("upload.{tag}.bytes"), u.bytes as f64);
+            let bits = res.w.iter().map(|x| x.to_bits()).collect();
+            measured.push((tag, u, bits));
+        }
+
+        let (off, w_off) = (&measured[0].1, &measured[0].2);
+        let (on, w_on) = (&measured[1].1, &measured[1].2);
+        // parity: the lane must not change the math
+        assert_eq!(w_off, w_on, "upload lane must not change the iterate bits");
+        // honesty: the slot path never claims staged transfers; the lane
+        // must actually stage on this fresh-w-per-round workload. Neither
+        // assert needs a second core — staging is a property of the
+        // dispatch order, not of wall-clock parallelism.
+        assert_eq!(off.staged, 0, "upload=off must not stage: {off:?}");
+        assert_eq!(off.overlap_ns, 0, "upload=off must not claim overlappable time: {off:?}");
+        assert!(on.uploads >= 1, "upload=on moved nothing: {on:?}");
+        assert!(on.staged >= 1, "upload=on staged nothing: {on:?}");
+        assert!(on.overlap_ns >= 1, "upload=on overlapped no transfer time: {on:?}");
+        // traffic parity: counts and bytes identical with the lane on/off
+        assert_eq!(off.uploads, on.uploads, "upload counts must not depend on the policy");
+        assert_eq!(off.bytes, on.bytes, "upload bytes must not depend on the policy");
+        report.counter("upload.bytes_equal", (off.bytes == on.bytes) as u64 as f64);
     }
 
     section("fault injection: degradation under stragglers (mp-dsvrg vs minibatch-SGD)");

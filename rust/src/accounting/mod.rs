@@ -293,6 +293,65 @@ impl OverlapMeter {
     }
 }
 
+/// Upload-lane counters for the engine's staging-ring double buffer:
+/// `uploads`/`bytes` count the host->device transfers the engine actually
+/// performed for pooled small operands (identical with the lane on or off
+/// — the lane reorders transfers, it never adds or drops one), `staged`
+/// counts the transfers that ran into the BACK ring half while a dispatch
+/// could still be in flight (with their wall-clock in `overlap_ns`), and
+/// `wait_ns` is the time the dispatch boundary blocked on a stage that
+/// had not finished. Like [`StallMeter`] and [`OverlapMeter`], this is
+/// wall-clock-only diagnostics: it measures what the real machine
+/// overlapped, NOT the paper's simulated cost model, which charges
+/// identical units whether the lane is on or off. One meter per engine
+/// (coordinator + each shard); reset per run and gathered via
+/// [`crate::runtime::ShardPool::gathered_run_meters`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UploadMeter {
+    /// host->device transfers performed for pooled/ring operands
+    pub uploads: u64,
+    /// transfers staged into the back ring half (lane on only)
+    pub staged: u64,
+    /// wall-clock nanoseconds of staged transfers (overlappable work)
+    pub overlap_ns: u64,
+    /// nanoseconds the dispatch boundary blocked waiting on a stage
+    pub wait_ns: u64,
+    /// bytes moved by the counted transfers (equal with the lane on/off)
+    pub bytes: u64,
+}
+
+impl UploadMeter {
+    /// Record `n` transfers moving `bytes`; `staged` marks them as ring
+    /// stages with `work_ns` of overlappable transfer wall-clock.
+    pub fn record(&mut self, staged: bool, n: u64, bytes: u64, work_ns: u64) {
+        self.uploads += n;
+        self.bytes += bytes;
+        if staged && n > 0 {
+            self.staged += n;
+            self.overlap_ns += work_ns;
+        }
+    }
+
+    /// Charge time the dispatch boundary spent blocked on a stage.
+    pub fn add_wait(&mut self, ns: u64) {
+        self.wait_ns += ns;
+    }
+
+    /// Fold another engine's meter in (cluster totals).
+    pub fn merge(&mut self, other: &UploadMeter) {
+        self.uploads += other.uploads;
+        self.staged += other.staged;
+        self.overlap_ns += other.overlap_ns;
+        self.wait_ns += other.wait_ns;
+        self.bytes += other.bytes;
+    }
+
+    /// True when any transfer was recorded at all.
+    pub fn any(&self) -> bool {
+        *self != UploadMeter::default()
+    }
+}
+
 /// Fault-injection and recovery counters for one run. The simulated-event
 /// fields (stragglers, dropouts, re-entries, `added_time_s`) come from the
 /// seeded `comm::faults::FaultPlan` and are deterministic functions of the
@@ -586,6 +645,32 @@ mod tests {
         assert_eq!(b.overlap_ns, 15);
         assert_eq!(b.serial_ns, 150);
         assert_eq!(OverlapMeter::default().overlap_frac(), 0.0);
+    }
+
+    #[test]
+    fn upload_meter_records_and_merges() {
+        let mut a = UploadMeter::default();
+        a.record(true, 2, 64, 10);
+        a.record(false, 1, 32, 100);
+        a.record(true, 1, 32, 5);
+        // a skipped transfer records nothing, staged or not
+        a.record(true, 0, 0, 7);
+        a.add_wait(3);
+        assert_eq!(a.uploads, 4);
+        assert_eq!(a.staged, 3);
+        assert_eq!(a.overlap_ns, 15);
+        assert_eq!(a.wait_ns, 3);
+        assert_eq!(a.bytes, 128);
+        assert!(a.any());
+        let mut b = UploadMeter::default();
+        b.record(false, 1, 16, 50);
+        b.merge(&a);
+        assert_eq!(b.uploads, 5);
+        assert_eq!(b.staged, 3);
+        assert_eq!(b.overlap_ns, 15);
+        assert_eq!(b.wait_ns, 3);
+        assert_eq!(b.bytes, 144);
+        assert!(!UploadMeter::default().any());
     }
 
     #[test]

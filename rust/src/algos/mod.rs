@@ -18,7 +18,7 @@ pub mod sgd_local;
 pub mod solvers;
 
 use crate::accounting::{
-    CacheMeter, ClusterMeter, FaultMeter, OverlapMeter, ResourceReport, StallMeter,
+    CacheMeter, ClusterMeter, FaultMeter, OverlapMeter, ResourceReport, StallMeter, UploadMeter,
 };
 use crate::comm::Network;
 use crate::data::{Loss, MachineStreams};
@@ -294,6 +294,15 @@ pub struct RunResult {
     /// `None` off the sharded plane. Wall-clock only, like `stalls` —
     /// never part of the simulated cost model.
     pub overlap: Option<OverlapMeter>,
+    /// Upload-lane accounting: host->device transfers this run across
+    /// the coordinator engine AND every shard engine (the lane runs on
+    /// all of them), with how many staged through the rings and the
+    /// wall-clock the staging could overlap with dispatch. Present on
+    /// every plane — the coordinator engine meters even without a pool.
+    /// Wall-clock only, like `stalls`/`overlap` — never part of the
+    /// simulated cost model, and the transfer COUNTS are bit-identical
+    /// with the lane on or off (pinned by `rust/tests/upload_parity.rs`).
+    pub uploads: Option<UploadMeter>,
     /// Fault accounting: the seeded simulated schedule (stragglers,
     /// dropouts, added simulated seconds — deterministic, from the
     /// network's `FaultPlan`) merged with the REAL recovery tally
@@ -343,9 +352,13 @@ impl Recorder {
 
     pub fn finish(self, ctx: &mut RunContext, w: Vec<f32>) -> Result<RunResult> {
         let final_objective = ctx.eval_now(&w)?;
+        // the coordinator engine's lane meters on every plane; shard
+        // engines add theirs when a pool is attached
+        let mut uploads = ctx.plane.engine.upload_meter().clone();
         let (stalls, overlap) = match ctx.plane.shards {
             Some(pool) => {
-                let (s, o) = pool.gathered_run_meters()?;
+                let (s, o, u) = pool.gathered_run_meters()?;
+                uploads.merge(&u);
                 (Some(s), Some(o))
             }
             None => (None, None),
@@ -368,6 +381,7 @@ impl Recorder {
             final_objective,
             stalls,
             overlap,
+            uploads: Some(uploads),
             faults,
             cache: None,
             w,

@@ -3,6 +3,14 @@
 //!
 //! Usage: `bench_gate <baseline.json> <fresh.json>`
 //!
+//! `bench_gate --write-baseline <baseline.json> <fresh.json>` rewrites the
+//! baseline instead of gating: every counter bound is widened just enough
+//! to admit the fresh run's value (absent sides stay absent — a counter
+//! pinned only by `max` never grows a `min`), while `_comment` and
+//! `medians` ride through verbatim. The rewrite is a convenience for
+//! intentional behaviour changes, not a green button: review the diff
+//! before committing, because a real regression would widen its own bound.
+//!
 //! The baseline pins two kinds of expectations:
 //!
 //! - `counters`: machine-independent bounds on the bench's named scalars
@@ -22,7 +30,7 @@
 //! that is not an object all produce failing checks naming the offending
 //! scenario and field, instead of silently unbounding the gate.
 
-use mbprox::util::json::Json;
+use mbprox::util::json::{escape_str, Json};
 use std::process::ExitCode;
 
 /// One checked expectation, pass or fail.
@@ -188,6 +196,123 @@ fn gate(baseline: &Json, fresh: &Json) -> Vec<Check> {
     checks
 }
 
+/// Print a counter bound: integers without a trailing `.0`, everything
+/// else in Rust's (non-scientific, round-trippable) float form.
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 9.0e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Render a preserved JSON subtree (the `_comment` block, `medians` pins)
+/// at `indent` two-space levels: one array element / object field per
+/// line, matching the committed baseline's shape. Keys come out in
+/// BTreeMap order, so the output is deterministic.
+fn render(j: &Json, indent: usize) -> String {
+    let pad = "  ".repeat(indent);
+    match j {
+        Json::Null => "null".into(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(x) => fmt_num(*x),
+        Json::Str(s) => escape_str(s),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                return "[]".into();
+            }
+            let inner: Vec<String> =
+                items.iter().map(|v| format!("{pad}  {}", render(v, indent + 1))).collect();
+            format!("[\n{}\n{pad}]", inner.join(",\n"))
+        }
+        Json::Obj(m) => {
+            if m.is_empty() {
+                return "{}".into();
+            }
+            let inner: Vec<String> = m
+                .iter()
+                .map(|(k, v)| format!("{pad}  {}: {}", escape_str(k), render(v, indent + 1)))
+                .collect();
+            format!("{{\n{}\n{pad}}}", inner.join(",\n"))
+        }
+    }
+}
+
+/// `--write-baseline`: regenerate the baseline text from a fresh report.
+/// Every counter bound is widened just enough to admit the fresh value;
+/// absent bound sides stay absent, extra bound keys ride through, and
+/// `_comment`/`medians` are preserved verbatim. Counters are emitted in
+/// sorted order (the parser's map is ordered), so reruns are stable.
+/// Returns the new baseline text plus human-readable notes on every
+/// change; malformed baselines refuse to rewrite instead of guessing.
+fn write_baseline(old: &Json, fresh: &Json) -> Result<(String, Vec<String>), String> {
+    let bounds = old
+        .get("counters")
+        .and_then(Json::as_obj)
+        .ok_or("baseline has no 'counters' object")?;
+    let fresh_counters = fresh
+        .get("counters")
+        .and_then(Json::as_obj)
+        .ok_or("fresh report has no 'counters' object")?;
+    let mut notes = Vec::new();
+    let mut out = String::from("{\n");
+    if let Some(c) = old.get("_comment") {
+        out.push_str(&format!("  \"_comment\": {},\n", render(c, 1)));
+    }
+    out.push_str("  \"counters\": {\n");
+    let mut entries = Vec::new();
+    for (name, bound) in bounds {
+        let bobj = bound
+            .as_obj()
+            .ok_or_else(|| format!("counter '{name}': bound is not an object"))?;
+        let mut min = bound_side(name, bound, "min")?;
+        let mut max = bound_side(name, bound, "max")?;
+        match fresh_counters.get(name).and_then(Json::as_f64) {
+            None => notes.push(format!("counter '{name}': missing from fresh report (kept)")),
+            Some(v) => {
+                if let Some(lo) = min.filter(|&lo| v < lo) {
+                    notes.push(format!(
+                        "counter '{name}': min widened {} -> {}",
+                        fmt_num(lo),
+                        fmt_num(v)
+                    ));
+                    min = Some(v);
+                }
+                if let Some(hi) = max.filter(|&hi| v > hi) {
+                    notes.push(format!(
+                        "counter '{name}': max widened {} -> {}",
+                        fmt_num(hi),
+                        fmt_num(v)
+                    ));
+                    max = Some(v);
+                }
+            }
+        }
+        let mut parts = Vec::new();
+        if let Some(lo) = min {
+            parts.push(format!("\"min\": {}", fmt_num(lo)));
+        }
+        if let Some(hi) = max {
+            parts.push(format!("\"max\": {}", fmt_num(hi)));
+        }
+        for (k, v) in bobj {
+            if k != "min" && k != "max" {
+                parts.push(format!("{}: {}", escape_str(k), render(v, 2)));
+            }
+        }
+        entries.push(format!("    {}: {{{}}}", escape_str(name), parts.join(", ")));
+    }
+    out.push_str(&entries.join(",\n"));
+    out.push_str("\n  },\n");
+    let medians = old.get("medians").cloned().unwrap_or_else(|| Json::Obj(Default::default()));
+    out.push_str(&format!("  \"medians\": {}\n}}\n", render(&medians, 1)));
+    let unpinned = fresh_counters.keys().filter(|k| !bounds.contains_key(*k)).count();
+    if unpinned > 0 {
+        notes.push(format!("{unpinned} fresh counter(s) have no baseline bound"));
+    }
+    Ok((out, notes))
+}
+
 fn load(path: &str) -> Result<Json, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
     Json::parse(&text).map_err(|e| format!("{path}: {e}"))
@@ -195,10 +320,11 @@ fn load(path: &str) -> Result<Json, String> {
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (baseline_path, fresh_path) = match args.as_slice() {
-        [b, f] => (b.as_str(), f.as_str()),
+    let (write_mode, baseline_path, fresh_path) = match args.as_slice() {
+        [flag, b, f] if flag == "--write-baseline" => (true, b.as_str(), f.as_str()),
+        [b, f] => (false, b.as_str(), f.as_str()),
         _ => {
-            eprintln!("usage: bench_gate <baseline.json> <fresh.json>");
+            eprintln!("usage: bench_gate [--write-baseline] <baseline.json> <fresh.json>");
             return ExitCode::from(2);
         }
     };
@@ -211,6 +337,34 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+
+    if write_mode {
+        return match write_baseline(&baseline, &fresh) {
+            Ok((text, notes)) => {
+                if let Err(e) = std::fs::write(baseline_path, &text) {
+                    eprintln!("bench_gate: writing {baseline_path}: {e}");
+                    return ExitCode::from(2);
+                }
+                println!("bench_gate: rewrote {baseline_path} from {fresh_path}");
+                for n in &notes {
+                    println!("  {n}");
+                }
+                if notes.is_empty() {
+                    println!("  (no bounds needed widening)");
+                }
+                println!(
+                    "bench_gate: REVIEW THE DIFF before committing — bounds were only\n\
+                     widened to admit this fresh run, so a real regression would ride\n\
+                     in unnoticed through a blindly accepted rewrite."
+                );
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("bench_gate: --write-baseline: {e}");
+                ExitCode::from(2)
+            }
+        };
+    }
 
     let checks = gate(&baseline, &fresh);
     let failed = checks.iter().filter(|c| !c.ok).count();
@@ -341,6 +495,77 @@ mod tests {
         let checks = gate(&parse(bad_tol), &fresh());
         assert!(!checks[0].ok);
         assert!(checks[0].detail.contains("rel_tol"), "{}", checks[0].detail);
+    }
+
+    #[test]
+    fn write_baseline_widens_only_what_the_fresh_run_violates() {
+        let base = r#"{
+          "_comment": ["keep me"],
+          "counters": {
+            "round.same_w.uploads": {"max": 0},
+            "prefetch.on.hit_rate": {"min": 0.5, "max": 1.0},
+            "engine.executions": {"min": 10}
+          },
+          "medians": {"pack 256": {"p50_ns": 800.0, "rel_tol": 0.25}}
+        }"#;
+        let f = r#"{"counters": {
+          "round.same_w.uploads": 3.0,
+          "prefetch.on.hit_rate": 0.857,
+          "engine.executions": 4.0,
+          "brand.new.counter": 1.0
+        }, "benches": []}"#;
+        let (text, notes) = write_baseline(&parse(base), &parse(f)).expect("rewrites");
+        let v = parse(&text);
+        let c = v.get("counters").unwrap();
+        // violated bounds widened just enough to admit the fresh values
+        let up = c.get("round.same_w.uploads").unwrap();
+        assert_eq!(up.get("max").unwrap().as_f64(), Some(3.0));
+        assert!(up.get("min").is_none(), "absent sides stay absent");
+        let ex = c.get("engine.executions").unwrap();
+        assert_eq!(ex.get("min").unwrap().as_f64(), Some(4.0));
+        // in-bounds counter untouched
+        let hr = c.get("prefetch.on.hit_rate").unwrap();
+        assert_eq!(hr.get("min").unwrap().as_f64(), Some(0.5));
+        assert_eq!(hr.get("max").unwrap().as_f64(), Some(1.0));
+        // unpinned fresh counters are NOT auto-added
+        assert!(c.get("brand.new.counter").is_none());
+        // _comment and medians ride through verbatim
+        let comment = v.get("_comment").unwrap().as_arr().unwrap();
+        assert_eq!(comment[0].as_str(), Some("keep me"));
+        let pin = v.get("medians").unwrap().get("pack 256").unwrap();
+        assert_eq!(pin.get("p50_ns").unwrap().as_f64(), Some(800.0));
+        // every widening is named so the diff review has a map
+        assert!(notes.iter().any(|n| n.contains("max widened 0 -> 3")), "{notes:?}");
+        assert!(notes.iter().any(|n| n.contains("min widened 10 -> 4")), "{notes:?}");
+        assert!(notes.iter().any(|n| n.contains("no baseline bound")), "{notes:?}");
+    }
+
+    #[test]
+    fn write_baseline_keeps_missing_counters_and_rejects_malformed_bounds() {
+        let base = r#"{"counters": {"gone.counter": {"min": 2, "max": 5}}, "medians": {}}"#;
+        let f = r#"{"counters": {}, "benches": []}"#;
+        let (text, notes) = write_baseline(&parse(base), &parse(f)).expect("rewrites");
+        let v = parse(&text);
+        let b = v.get("counters").unwrap().get("gone.counter").unwrap();
+        assert_eq!(b.get("min").unwrap().as_f64(), Some(2.0));
+        assert_eq!(b.get("max").unwrap().as_f64(), Some(5.0));
+        assert!(notes.iter().any(|n| n.contains("missing")), "{notes:?}");
+
+        // a malformed bound refuses to rewrite instead of guessing
+        let bad = r#"{"counters": {"x": {"min": "zero"}}}"#;
+        let err = write_baseline(&parse(bad), &parse(f)).unwrap_err();
+        assert!(err.contains("'min' is not a number"), "{err}");
+        assert!(write_baseline(&parse(r#"{"medians": {}}"#), &parse(f)).is_err());
+    }
+
+    #[test]
+    fn write_baseline_output_formats_integers_without_decimals() {
+        let base = r#"{"counters": {"a": {"min": 1, "max": 2}}, "medians": {}}"#;
+        let f = r#"{"counters": {"a": 1.5}, "benches": []}"#;
+        let (text, notes) = write_baseline(&parse(base), &parse(f)).expect("rewrites");
+        assert!(notes.is_empty(), "1.5 is in [1, 2]: {notes:?}");
+        assert!(text.contains("\"min\": 1, \"max\": 2"), "{text}");
+        assert!(!text.contains("1.0"), "{text}");
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use crate::comm::faults::{FaultParams, FaultsPolicy};
 use crate::data::Loss;
-use crate::runtime::{PipelinePolicy, PlanePolicy, PrefetchPolicy};
+use crate::runtime::{PipelinePolicy, PlanePolicy, PrefetchPolicy, UploadPolicy};
 use crate::util::closest_name;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -38,6 +38,7 @@ pub const CONFIG_KEYS: &[(&str, &str)] = &[
     ("plane", "execution plane: auto | host | chained | sharded"),
     ("prefetch", "shard-plane draw prefetch: auto | on | off (bit-identical either way)"),
     ("pipeline", "shard-plane batched-fan pipelining: auto | on | off (bit-identical either way)"),
+    ("upload", "engine upload lane: staging rings: auto | on | off (bit-identical either way)"),
     ("scenario.drift_omega", "drift scenario: per-draw rotation angle (radians; default tau/8192)"),
     ("scenario.pareto_alpha", "heavy-tail scenario: Pareto tail index (> 2 for finite variance)"),
     ("scenario.sparse_density", "sparse scenario: expected fraction of active features (0, 1]"),
@@ -240,6 +241,10 @@ pub struct ExperimentConfig {
     /// to the runner's `PIPELINE` env / default). Bit-parity is
     /// unconditional — this knob trades engine idle time only.
     pub pipeline: PipelinePolicy,
+    /// engine upload lane (`upload=` key; `Auto` defers to the runner's
+    /// `UPLOAD` env / default). Bit-parity is unconditional — this knob
+    /// trades host->device staging time only.
+    pub upload: UploadPolicy,
     /// drift scenario: per-draw rotation angle in radians
     /// (`scenario.drift_omega`; `None` = the scenario's default)
     pub drift_omega: Option<f64>,
@@ -287,6 +292,7 @@ impl Default for ExperimentConfig {
             plane: PlanePolicy::Auto,
             prefetch: PrefetchPolicy::Auto,
             pipeline: PipelinePolicy::Auto,
+            upload: UploadPolicy::Auto,
             drift_omega: None,
             pareto_alpha: None,
             sparse_density: None,
@@ -331,6 +337,9 @@ impl ExperimentConfig {
         let pipeline_s = kv.get_str("pipeline", dflt.pipeline.as_str());
         let pipeline = PipelinePolicy::parse(&pipeline_s)
             .ok_or_else(|| anyhow!("bad pipeline '{pipeline_s}' (auto|on|off)"))?;
+        let upload_s = kv.get_str("upload", dflt.upload.as_str());
+        let upload = UploadPolicy::parse(&upload_s)
+            .ok_or_else(|| anyhow!("bad upload '{upload_s}' (auto|on|off)"))?;
         let drift_omega = kv.get_opt_f64("scenario.drift_omega")?;
         if let Some(w) = drift_omega {
             if !w.is_finite() || w < 0.0 {
@@ -425,6 +434,7 @@ impl ExperimentConfig {
             plane,
             prefetch,
             pipeline,
+            upload,
             drift_omega,
             pareto_alpha,
             sparse_density,
@@ -626,6 +636,23 @@ mod tests {
         let kv = KvConfig::parse("pipelin = on\n").unwrap();
         let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
         assert!(err.contains("did you mean 'pipeline'"), "{err}");
+    }
+
+    #[test]
+    fn upload_key_parses() {
+        let kv = KvConfig::parse("upload = off\n").unwrap();
+        assert_eq!(ExperimentConfig::from_kv(&kv).unwrap().upload, UploadPolicy::Off);
+        let kv = KvConfig::parse("upload = maybe\n").unwrap();
+        assert!(ExperimentConfig::from_kv(&kv).is_err());
+        assert_eq!(
+            ExperimentConfig::default().upload,
+            UploadPolicy::Auto,
+            "upload defaults to auto (= on wherever pooled operands upload)"
+        );
+        // the new key is typo-guarded like every other key
+        let kv = KvConfig::parse("uploda = on\n").unwrap();
+        let err = ExperimentConfig::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'upload'"), "{err}");
     }
 
     #[test]

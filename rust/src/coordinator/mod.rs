@@ -28,7 +28,7 @@ use crate::data::{Loss, MachineStreams, Sample, SampleStream};
 use crate::objective::Evaluator;
 use crate::runtime::{
     default_artifacts_dir, Engine, ExecPlane, PipelinePolicy, PlanePolicy, PrefetchPolicy,
-    ShardPool,
+    ShardPool, UploadPolicy,
 };
 use crate::theory::{self, ProblemConsts};
 use anyhow::{anyhow, bail, Result};
@@ -67,6 +67,11 @@ pub struct Runner {
     /// it when not `Auto`. Bit-parity is unconditional — this only moves
     /// engine idle time.
     pub pipeline: PipelinePolicy,
+    /// process-level upload-lane policy (`UPLOAD` env / default `Auto` =
+    /// on); a per-run `upload=` config key overrides it when not `Auto`.
+    /// Bit-parity is unconditional — the lane only moves host->device
+    /// staging time, never bits or the metered transfer counts.
+    pub upload: UploadPolicy,
     /// the pool in `shards` was self-attached by a `plane=sharded` run
     /// (not by `SHARDS`/`with_shards`): it is kept for later sharded
     /// runs but ignored when resolving `auto`/`chained`/`host`, so one
@@ -100,7 +105,8 @@ impl Runner {
             .with_env_shards(&default_artifacts_dir())?
             .with_env_plane()?
             .with_env_prefetch()?
-            .with_env_pipeline()
+            .with_env_pipeline()?
+            .with_env_upload()
     }
 
     pub fn new(engine: Engine) -> Runner {
@@ -111,6 +117,7 @@ impl Runner {
             plane: PlanePolicy::Auto,
             prefetch: PrefetchPolicy::Auto,
             pipeline: PipelinePolicy::Auto,
+            upload: UploadPolicy::Auto,
             self_pool: false,
         }
     }
@@ -173,6 +180,19 @@ impl Runner {
         Ok(self)
     }
 
+    /// Set the process-level upload-lane policy explicitly.
+    pub fn with_upload(mut self, upload: UploadPolicy) -> Runner {
+        self.upload = upload;
+        self
+    }
+
+    /// Adopt the `UPLOAD` env var as the process-level upload-lane policy
+    /// (unset = `Auto` = on; a typo is an error, not a silent fallback).
+    pub fn with_env_upload(mut self) -> Result<Runner> {
+        self.upload = UploadPolicy::from_env()?;
+        Ok(self)
+    }
+
     /// Padded artifact dim for a native dim.
     pub fn padded_dim(&self, native: usize) -> Result<usize> {
         self.engine.manifest().padded_dim(native)
@@ -216,6 +236,17 @@ impl Runner {
         }
     }
 
+    /// Resolve the effective upload-lane policy for one run: a per-run
+    /// `upload=` key beats the process-level policy unless it is `Auto`
+    /// — exactly [`Runner::resolve_plane`]'s rule.
+    fn resolve_upload(&self, cfg_upload: UploadPolicy) -> UploadPolicy {
+        if cfg_upload != UploadPolicy::Auto {
+            cfg_upload
+        } else {
+            self.upload
+        }
+    }
+
     /// Resolve the effective network model for one run: per-run
     /// `net.alpha` / `net.beta` keys override the runner's model
     /// field-by-field (an absent key keeps the runner's value).
@@ -245,6 +276,7 @@ impl Runner {
             cfg.plane,
             cfg.prefetch,
             cfg.pipeline,
+            cfg.upload,
             self.resolve_net_model(cfg),
             faults,
             loss,
@@ -271,6 +303,7 @@ impl Runner {
             PlanePolicy::Auto,
             PrefetchPolicy::Auto,
             PipelinePolicy::Auto,
+            UploadPolicy::Auto,
             self.net_model.clone(),
             None,
             loss,
@@ -287,6 +320,7 @@ impl Runner {
         cfg_plane: PlanePolicy,
         cfg_prefetch: PrefetchPolicy,
         cfg_pipeline: PipelinePolicy,
+        cfg_upload: UploadPolicy,
         net_model: NetModel,
         faults: Option<FaultPlan>,
         loss: Loss,
@@ -299,6 +333,7 @@ impl Runner {
         let policy = self.resolve_plane(cfg_plane)?;
         let prefetch = self.resolve_prefetch(cfg_prefetch);
         let pipeline = self.resolve_pipeline(cfg_pipeline);
+        let upload = self.resolve_upload(cfg_upload);
         // the coordinator engine's per-run state resets here too: stale
         // session slots from a previous run must not alias into this one,
         // and the cache-meter epoch restarts (one hit/miss per artifact
@@ -306,10 +341,16 @@ impl Runner {
         // before this fix only the shard side was reset, and a resident
         // Runner leaked coordinator session slots across queued runs.
         self.engine.reset_session();
+        // the lane flag is per-run too: the coordinator engine and every
+        // shard engine must agree on the resolved policy before any
+        // upload of this run happens (clear_machines resets the shard
+        // meters, so the broadcast goes after it)
+        self.engine.set_upload_lane(upload.enabled());
         if let Some(pool) = &self.shards {
             // stale machine/stream/evaluator state from a previous run
             // must not leak in (the installs below land on cleared shards)
             pool.clear_machines()?;
+            pool.set_upload_lane(upload.enabled())?;
         }
         // a self-attached pool serves plane=sharded runs only: for every
         // other policy the runner behaves as if SHARDS were never set
@@ -320,7 +361,8 @@ impl Runner {
         };
         let mut plane = ExecPlane::new(&mut self.engine, pool, policy)?
             .with_prefetch(prefetch)
-            .with_pipeline(pipeline);
+            .with_pipeline(pipeline)
+            .with_upload(upload);
         // DataPlane residency: with a pool on the plane, each machine's
         // stream moves to its owning shard's prefetch lane (next to its
         // batches) and the draw verb generates + packs shard-side — one

@@ -85,6 +85,17 @@ fn cmd_run(args: &[String]) -> Result<()> {
             o.overlap_ns as f64 / 1e6
         );
     }
+    if let Some(u) = &result.uploads {
+        println!(
+            "# upload lane: {} uploads ({} B), {} staged, {:.3} ms overlappable \
+             ({:.3} ms waited)",
+            u.uploads,
+            u.bytes,
+            u.staged,
+            u.overlap_ns as f64 / 1e6,
+            u.wait_ns as f64 / 1e6
+        );
+    }
     if let Some(f) = &result.faults {
         println!(
             "# faults: {} stragglers, {} dropouts ({} machine-rounds out, {} re-entries), \

@@ -116,6 +116,23 @@ pub fn run_json(run: &RunResult) -> String {
             let _ = write!(out, "\"overlap\": null, ");
         }
     }
+    // wall-clock upload-lane accounting (every plane — the coordinator
+    // engine meters even without a pool; like `stalls`/`overlap`,
+    // outside the simulated cost model, and the counts are identical
+    // with the lane on or off)
+    match &run.uploads {
+        Some(u) => {
+            let _ = write!(
+                out,
+                "\"uploads\": {{\"uploads\": {}, \"staged\": {}, \"overlap_ns\": {}, \
+                 \"wait_ns\": {}, \"bytes\": {}}}, ",
+                u.uploads, u.staged, u.overlap_ns, u.wait_ns, u.bytes
+            );
+        }
+        None => {
+            let _ = write!(out, "\"uploads\": null, ");
+        }
+    }
     // wall-clock executable-cache accounting for this run (filled by
     // `Runner::run`; like `stalls`/`overlap`, never part of the
     // simulated cost model — the curve below is bit-identical warm or
@@ -164,7 +181,7 @@ pub fn write_report(path: &Path, text: &str) -> std::io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accounting::{CacheMeter, OverlapMeter, ResourceReport, StallMeter};
+    use crate::accounting::{CacheMeter, OverlapMeter, ResourceReport, StallMeter, UploadMeter};
     use crate::algos::CurvePoint;
     use crate::util::json::Json;
 
@@ -192,6 +209,13 @@ mod tests {
             final_objective: Some(0.125),
             stalls: Some(StallMeter { takes: 8, hits: 6, misses: 2, stall_ns: 1500 }),
             overlap: Some(OverlapMeter { fans: 4, staged: 3, overlap_ns: 900, serial_ns: 300 }),
+            uploads: Some(UploadMeter {
+                uploads: 10,
+                staged: 7,
+                overlap_ns: 1200,
+                wait_ns: 400,
+                bytes: 2560,
+            }),
             faults: None,
             cache: Some(CacheMeter { hits: 3, misses: 1, compile_ns: 2000, evictions: 0 }),
         }
@@ -234,14 +258,22 @@ mod tests {
         assert_eq!(cache.get("misses").unwrap().as_usize(), Some(1));
         assert_eq!(cache.get("compile_ns").unwrap().as_usize(), Some(2000));
         assert_eq!(cache.get("hit_rate").unwrap().as_f64(), Some(0.75));
+        let uploads = v.get("uploads").unwrap();
+        assert_eq!(uploads.get("uploads").unwrap().as_usize(), Some(10));
+        assert_eq!(uploads.get("staged").unwrap().as_usize(), Some(7));
+        assert_eq!(uploads.get("overlap_ns").unwrap().as_usize(), Some(1200));
+        assert_eq!(uploads.get("wait_ns").unwrap().as_usize(), Some(400));
+        assert_eq!(uploads.get("bytes").unwrap().as_usize(), Some(2560));
         // off the sharded plane, the wall-clock meters are explicit nulls
         let mut run = dummy_run();
         run.stalls = None;
         run.overlap = None;
+        run.uploads = None;
         run.cache = None;
         let v = Json::parse(&run_json(&run)).expect("valid json");
         assert!(matches!(v.get("stalls"), Some(Json::Null)));
         assert!(matches!(v.get("overlap"), Some(Json::Null)));
+        assert!(matches!(v.get("uploads"), Some(Json::Null)));
         assert!(matches!(v.get("cache"), Some(Json::Null)));
     }
 }

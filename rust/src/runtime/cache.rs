@@ -17,7 +17,7 @@
 //!   layer's resident `Runner`/`ShardPool`s), keyed by the canonical
 //!   serialization [`pool_key`] of the cache-relevant config subset:
 //!   artifacts-dir hash ([`manifest_hash`]), shard count, and the
-//!   plane/prefetch/pipeline policies. Everything else (method, b_local,
+//!   plane/prefetch/pipeline/upload policies. Everything else (method, b_local,
 //!   seed, scenario, ...) is per-run state the resident instance replays
 //!   from scratch, so it is excluded from the key on purpose.
 //!
@@ -28,7 +28,7 @@
 
 use crate::accounting::CacheMeter;
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
-use crate::runtime::plane::{PipelinePolicy, PlanePolicy, PrefetchPolicy};
+use crate::runtime::plane::{PipelinePolicy, PlanePolicy, PrefetchPolicy, UploadPolicy};
 use crate::util::hash::Fnv64;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
@@ -94,12 +94,14 @@ pub fn pool_key(
     plane: PlanePolicy,
     prefetch: PrefetchPolicy,
     pipeline: PipelinePolicy,
+    upload: UploadPolicy,
 ) -> String {
     format!(
-        "artifacts={manifest_hash:016x};shards={shards};plane={};prefetch={};pipeline={}",
+        "artifacts={manifest_hash:016x};shards={shards};plane={};prefetch={};pipeline={};upload={}",
         plane.as_str(),
         prefetch.as_str(),
         pipeline.as_str(),
+        upload.as_str(),
     )
 }
 
@@ -235,10 +237,36 @@ mod tests {
 
     #[test]
     fn pool_key_is_canonical_and_policy_sensitive() {
-        let k = pool_key(0xabc, 4, PlanePolicy::Auto, PrefetchPolicy::On, PipelinePolicy::Off);
-        assert_eq!(k, "artifacts=0000000000000abc;shards=4;plane=auto;prefetch=on;pipeline=off");
-        let k2 = pool_key(0xabc, 4, PlanePolicy::Auto, PrefetchPolicy::On, PipelinePolicy::On);
+        let k = pool_key(
+            0xabc,
+            4,
+            PlanePolicy::Auto,
+            PrefetchPolicy::On,
+            PipelinePolicy::Off,
+            UploadPolicy::On,
+        );
+        assert_eq!(
+            k,
+            "artifacts=0000000000000abc;shards=4;plane=auto;prefetch=on;pipeline=off;upload=on"
+        );
+        let k2 = pool_key(
+            0xabc,
+            4,
+            PlanePolicy::Auto,
+            PrefetchPolicy::On,
+            PipelinePolicy::On,
+            UploadPolicy::On,
+        );
         assert_ne!(k, k2, "policy is part of the cache-relevant subset");
+        let k3 = pool_key(
+            0xabc,
+            4,
+            PlanePolicy::Auto,
+            PrefetchPolicy::On,
+            PipelinePolicy::Off,
+            UploadPolicy::Off,
+        );
+        assert_ne!(k, k3, "the upload policy is part of the cache-relevant subset");
     }
 
     #[test]

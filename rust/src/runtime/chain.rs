@@ -259,7 +259,7 @@ impl Engine {
         let w32: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
         // weights are per-batch constants (counts): ride the session
         // pool so K reduces per solve re-upload the vector zero times
-        self.session.ensure(&self.client, &mut self.stats, "red.w", &w32)?;
+        self.session.ensure(&self.client, self.device, &mut self.stats, "red.w", &w32)?;
         let w_buf = self.session.get_shared("red.w")?;
         let mut inputs: Vec<&xla::PjRtBuffer> = parts.iter().map(|p| p.buffer()).collect();
         inputs.push(w_buf.as_ref());

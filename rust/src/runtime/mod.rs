@@ -129,10 +129,41 @@
 //! ownership, mismatched-size re-splits, epoch-boundary refusal) is in
 //! the `shard` module docs. When the fan pipeline is on, the worker
 //! overlaps the other direction too — it packs machine k while the lane
-//! already draws machine k+1 — and [`ExecSession`] exposes two-slot
-//! staging rings (`ensure_ring`/`swap`) as the upload-side double-buffer
-//! primitive for backends with asynchronous transfers (see the
-//! `session` module docs for the slot-swap generation rule).
+//! already draws machine k+1.
+//!
+//! # The upload lane
+//!
+//! Every engine — the coordinator's and each shard worker's — carries an
+//! **upload lane** ([`Engine::set_upload_lane`], resolved by the
+//! coordinator from the `upload=` config key / `UPLOAD` env,
+//! [`plane::UploadPolicy`]): with the lane on, the pooled small operands
+//! of [`Engine::execute_pooled`] route through [`ExecSession`]'s
+//! two-slot **staging rings** (`ring_stage`/`swap`/`ring_get`) instead of
+//! the single-slot pool. A changed operand is staged into the *back*
+//! ring half — the half an in-flight dispatch is NOT reading — and
+//! swapped in at the dispatch boundary, so a backend with asynchronous
+//! transfers can run round t+1's upload while round t's fused dispatch
+//! is still executing; the generation-tagged ring meta guarantees a
+//! stale buffer is never dispatched (see the `session` module docs for
+//! the slot-swap generation rule). Bit-parity is unconditional: the
+//! stage decision compares against the payload last dispatched (never
+//! the back half's stale bytes), so the lane performs the exact transfer
+//! sequence — same uploads, same bytes, same cache hits — as the slot
+//! path, and the steady-state constant operand (the pooled iterate
+//! between evaluations) still costs zero traffic. What changes is only
+//! the staging structure, metered per engine by
+//! [`accounting::UploadMeter`](crate::accounting::UploadMeter):
+//! `staged`/`overlap_ns` record transfers that ran into the back half
+//! (the overlappable work), `wait_ns` the time the dispatch boundary
+//! actually blocked on a stage — ALL of it on today's synchronous CPU
+//! PJRT, shrinking toward zero on an async backend. Like the stall and
+//! overlap meters this is wall-clock-only diagnostics: it never measures
+//! (or perturbs) the simulated paper-units cost model, which charges
+//! identical units with the lane on or off. The lane also seeds the
+//! MultiDev plane: each engine pins its uploads to one PJRT device
+//! ordinal ([`Engine::new_on_device`] — shard s uses device s where the
+//! platform exposes several, degrading to device 0), so the same ring
+//! machinery becomes the per-device data plane.
 //!
 //! # Faults and elasticity
 //!
@@ -196,7 +227,7 @@ pub mod plane;
 pub mod session;
 pub mod shard;
 
-use crate::accounting::CacheMeter;
+use crate::accounting::{CacheMeter, UploadMeter};
 use anyhow::{anyhow, Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
@@ -207,7 +238,7 @@ pub use cache::{artifact_key, manifest_hash, pool_key, ExecCache, KeyedCache};
 pub use chain::DeviceVec;
 pub use plane::{
     ExecPlane, Lane, LocalSolver, PipelinePolicy, PlaneKind, PlaneLocals, PlanePolicy, PlaneVec,
-    PrefetchPolicy,
+    PrefetchPolicy, UploadPolicy,
 };
 pub use session::ExecSession;
 pub use shard::{
@@ -309,15 +340,40 @@ pub struct Engine {
     /// bit-pattern-keyed cache of length-1 scalar operands (gamma/eta,
     /// CG coefficients): recurring constants upload once, ever
     scalars: HashMap<u32, DeviceVec>,
+    /// PJRT device ordinal this engine's uploads land on (`None` = the
+    /// client default, device 0) — the MultiDev seed: shard s pins
+    /// device s where the platform exposes several
+    device: Option<usize>,
+    /// whether pooled operands route through the staging-ring upload
+    /// lane (see the module doc's "The upload lane"); set per run by the
+    /// coordinator from the resolved `upload=` policy
+    upload_lane: bool,
+    /// the upload lane's wall-clock meter (reset per run alongside the
+    /// session; outside the simulated cost model like the stall meter)
+    uploads: UploadMeter,
     pub stats: EngineStats,
 }
 
 impl Engine {
     /// Load the manifest and lazily compile artifacts on first use.
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        Engine::new_on_device(artifacts_dir, 0)
+    }
+
+    /// [`Engine::new`] pinned to PJRT device ordinal `device_index` — the
+    /// MultiDev seed: a shard pool constructs shard s's engine on device
+    /// s, so every upload this engine performs lands on its own device
+    /// where the platform exposes several. An index past the client's
+    /// device count degrades gracefully to the default device 0 (today's
+    /// CPU client exposes one), never an error.
+    pub fn new_on_device(artifacts_dir: &Path, device_index: usize) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        let device = match client.device_count() {
+            n if device_index > 0 && device_index < n => Some(device_index),
+            _ => None,
+        };
         let fuse_widths = manifest.fuse_widths();
         Ok(Engine {
             client,
@@ -329,6 +385,9 @@ impl Engine {
             fuse_widths,
             zeros: HashMap::new(),
             scalars: HashMap::new(),
+            device,
+            upload_lane: false,
+            uploads: UploadMeter::default(),
             stats: EngineStats::default(),
         })
     }
@@ -355,10 +414,38 @@ impl Engine {
     /// Drop every pooled small-operand buffer (block uploads are owned by
     /// callers and unaffected) and start a new cache-meter epoch: the
     /// next touch of each artifact records one hit/miss again. Compiled
-    /// executables stay resident — that warmth is the point.
+    /// executables stay resident — that warmth is the point. The upload
+    /// meter restarts too (per-run semantics); the lane *policy* flag is
+    /// untouched — the coordinator re-resolves it per run.
     pub fn reset_session(&mut self) {
         self.session.clear();
         self.touched.clear();
+        self.uploads = UploadMeter::default();
+    }
+
+    /// Enable/disable the staging-ring upload lane (see the module doc's
+    /// "The upload lane"). Bit-parity is unconditional either way; the
+    /// coordinator resolves the `upload=` policy and flips every engine
+    /// (its own + each shard's) per run.
+    pub fn set_upload_lane(&mut self, on: bool) {
+        self.upload_lane = on;
+    }
+
+    /// Whether pooled operands currently route through the staging rings.
+    pub fn upload_lane(&self) -> bool {
+        self.upload_lane
+    }
+
+    /// The upload lane's meter for the current run (reset with the
+    /// session; gather per shard via `ShardPool::gathered_run_meters`).
+    pub fn upload_meter(&self) -> &UploadMeter {
+        &self.uploads
+    }
+
+    /// The PJRT device ordinal this engine's uploads land on (0 = the
+    /// client default — see [`Engine::new_on_device`]).
+    pub fn device_index(&self) -> usize {
+        self.device.unwrap_or(0)
     }
 
     /// The executable cache's meter (cumulative for the engine's
@@ -490,9 +577,12 @@ impl Engine {
 
     /// Execute with `block_inputs` (caller-owned device buffers) followed
     /// by `pooled_tail`: (slot, host data) pairs routed through the
-    /// session pool, so unchanged operands are not re-uploaded. Input
-    /// order is `block_inputs ++ pooled_tail`, matching every artifact's
-    /// (block operands, small vectors) signature.
+    /// session pool — or through the staging-ring upload lane when it is
+    /// enabled (same transfers, different staging structure; see the
+    /// module doc's "The upload lane") — so unchanged operands are not
+    /// re-uploaded. Input order is `block_inputs ++ pooled_tail`,
+    /// matching every artifact's (block operands, small vectors)
+    /// signature.
     pub fn execute_pooled(
         &mut self,
         name: &str,
@@ -500,14 +590,72 @@ impl Engine {
         pooled_tail: &[(&'static str, &[f32])],
     ) -> Result<Vec<xla::Literal>> {
         self.executable(name)?;
+        if self.upload_lane {
+            return self.execute_ringed(name, block_inputs, pooled_tail);
+        }
         for (key, data) in pooled_tail {
-            self.session.ensure(&self.client, &mut self.stats, key, data)?;
+            let (up0, b0) = (self.stats.uploads, self.stats.upload_bytes);
+            self.session.ensure(&self.client, self.device, &mut self.stats, key, data)?;
+            self.uploads.record(
+                false,
+                self.stats.uploads - up0,
+                self.stats.upload_bytes - b0,
+                0,
+            );
         }
         let mut inputs: Vec<&xla::PjRtBuffer> =
             Vec::with_capacity(block_inputs.len() + pooled_tail.len());
         inputs.extend_from_slice(block_inputs);
         for (key, _) in pooled_tail {
             inputs.push(self.session.get(key)?);
+        }
+        let exe = self.execs.get(self.name_keys[name]).unwrap();
+        Self::dispatch(&mut self.stats, exe, name, &inputs)
+    }
+
+    /// The upload-lane arm of [`Engine::execute_pooled`]: each pooled
+    /// operand stages through its double-buffered ring
+    /// ([`ExecSession::ring_stage`] — an active-half hit costs nothing,
+    /// like the slot path), freshly staged payloads swap in together at
+    /// the dispatch boundary, and the dispatch reads the active halves.
+    /// On today's synchronous backend the stage completes inline, so its
+    /// whole wall-clock is charged as boundary wait alongside the
+    /// overlappable `staged` time; an async backend's upload verb would
+    /// pay only the residue that did not finish under the previous
+    /// dispatch.
+    fn execute_ringed(
+        &mut self,
+        name: &str,
+        block_inputs: &[&xla::PjRtBuffer],
+        pooled_tail: &[(&'static str, &[f32])],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut pending: Vec<&'static str> = Vec::with_capacity(pooled_tail.len());
+        for (key, data) in pooled_tail {
+            let (up0, b0) = (self.stats.uploads, self.stats.upload_bytes);
+            let t0 = Instant::now();
+            let staged =
+                self.session.ring_stage(&self.client, self.device, &mut self.stats, key, data)?;
+            let dt = t0.elapsed().as_nanos() as u64;
+            self.uploads.record(
+                staged,
+                self.stats.uploads - up0,
+                self.stats.upload_bytes - b0,
+                dt,
+            );
+            if staged {
+                self.uploads.add_wait(dt);
+                pending.push(key);
+            }
+        }
+        // the dispatch boundary: expose every freshly staged payload
+        for key in &pending {
+            self.session.swap(key)?;
+        }
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(block_inputs.len() + pooled_tail.len());
+        inputs.extend_from_slice(block_inputs);
+        for (key, _) in pooled_tail {
+            inputs.push(self.session.ring_get(key)?);
         }
         let exe = self.execs.get(self.name_keys[name]).unwrap();
         Self::dispatch(&mut self.stats, exe, name, &inputs)
@@ -659,7 +807,7 @@ impl Engine {
         self.stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
         let buf = self
             .client
-            .buffer_from_host_buffer(data, dims, None)
+            .buffer_from_host_buffer(data, dims, self.device)
             .map_err(|e| anyhow!("uploading DeviceVec{dims:?}: {e:?}"))?;
         Ok(DeviceVec::from_buffer(buf, dims.to_vec()))
     }
@@ -670,7 +818,7 @@ impl Engine {
         self.stats.uploads += 1;
         self.stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
         self.client
-            .buffer_from_host_buffer(data, &[data.len()], None)
+            .buffer_from_host_buffer(data, &[data.len()], self.device)
             .map_err(|e| anyhow!("uploading vec[{}]: {e:?}", data.len()))
     }
 
@@ -680,7 +828,7 @@ impl Engine {
         self.stats.uploads += 1;
         self.stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
         self.client
-            .buffer_from_host_buffer(data, &[rows, cols], None)
+            .buffer_from_host_buffer(data, &[rows, cols], self.device)
             .map_err(|e| anyhow!("uploading mat[{rows}x{cols}]: {e:?}"))
     }
 

@@ -224,6 +224,66 @@ impl PipelinePolicy {
     }
 }
 
+/// The `upload=` policy: whether each engine routes pooled small-operand
+/// transfers through its staging-ring **upload lane**
+/// (`ExecSession::ring_stage` + swap-at-dispatch-boundary — see
+/// `runtime::session`) instead of the single-slot pool. Bit-parity is
+/// unconditional: the lane performs the exact transfer sequence the slot
+/// path would (the stage decision compares against the payload last
+/// dispatched, never the back half's stale bytes), so uploads and bytes
+/// are identical either way and only the staging structure — what an
+/// asynchronous backend can overlap with the in-flight dispatch — changes.
+/// `Auto` therefore resolves to on; `Off` forces the single-slot path for
+/// diagnostics and A/B measurement (the
+/// [`crate::accounting::UploadMeter`] records which ran).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum UploadPolicy {
+    /// Route pooled operands through the staging rings on every engine
+    /// (coordinator + shards) — the default.
+    #[default]
+    Auto,
+    On,
+    Off,
+}
+
+impl UploadPolicy {
+    pub fn parse(s: &str) -> Option<UploadPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(UploadPolicy::Auto),
+            "on" => Some(UploadPolicy::On),
+            "off" => Some(UploadPolicy::Off),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            UploadPolicy::Auto => "auto",
+            UploadPolicy::On => "on",
+            UploadPolicy::Off => "off",
+        }
+    }
+
+    /// Parse the `UPLOAD` environment variable (unset/empty = `Auto`).
+    /// Unrecognized values error — a typo must not silently change the
+    /// staging profile being measured.
+    pub fn from_env() -> Result<UploadPolicy> {
+        match std::env::var("UPLOAD") {
+            Err(_) => Ok(UploadPolicy::Auto),
+            Ok(raw) if raw.trim().is_empty() => Ok(UploadPolicy::Auto),
+            Ok(raw) => UploadPolicy::parse(&raw)
+                .ok_or_else(|| anyhow!("UPLOAD='{raw}' is not auto|on|off")),
+        }
+    }
+
+    /// Whether engines should stage through the rings (`Auto` resolves to
+    /// on — parity is unconditional, so there is nothing to protect by
+    /// defaulting off).
+    pub fn enabled(self) -> bool {
+        self != UploadPolicy::Off
+    }
+}
+
 /// A resolved execution plane (no `Auto` left).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlaneKind {
@@ -347,6 +407,11 @@ pub struct ExecPlane<'e> {
     /// lane request behind the current machine's pack/upload (resolved
     /// from the `pipeline=` key / `PIPELINE` env; `Auto` = on)
     pipeline: PipelinePolicy,
+    /// whether every engine under this plane routes pooled operands
+    /// through the staging-ring upload lane (resolved from the `upload=`
+    /// key / `UPLOAD` env; `Auto` = on). The coordinator enables the
+    /// engine-level lanes to match before handing the plane to a solver.
+    upload: UploadPolicy,
 }
 
 impl<'e> ExecPlane<'e> {
@@ -386,6 +451,7 @@ impl<'e> ExecPlane<'e> {
             kind,
             prefetch: PrefetchPolicy::default(),
             pipeline: PipelinePolicy::default(),
+            upload: UploadPolicy::default(),
         })
     }
 
@@ -411,6 +477,18 @@ impl<'e> ExecPlane<'e> {
         self.pipeline
     }
 
+    /// Set the upload-lane policy (builder; the coordinator resolves the
+    /// per-run key against the process policy — and flips the engine-level
+    /// lanes to match — before calling this).
+    pub fn with_upload(mut self, upload: UploadPolicy) -> ExecPlane<'e> {
+        self.upload = upload;
+        self
+    }
+
+    pub fn upload(&self) -> UploadPolicy {
+        self.upload
+    }
+
     /// The `Auto` resolution (infallible): Sharded with a pool, Chained
     /// without.
     pub fn auto(engine: &'e mut Engine, shards: Option<&'e ShardPool>) -> ExecPlane<'e> {
@@ -425,6 +503,7 @@ impl<'e> ExecPlane<'e> {
             kind: PlaneKind::Chained,
             prefetch: PrefetchPolicy::default(),
             pipeline: PipelinePolicy::default(),
+            upload: UploadPolicy::default(),
         }
     }
 
@@ -436,6 +515,7 @@ impl<'e> ExecPlane<'e> {
             kind: PlaneKind::Host,
             prefetch: PrefetchPolicy::default(),
             pipeline: PipelinePolicy::default(),
+            upload: UploadPolicy::default(),
         }
     }
 
@@ -1516,6 +1596,20 @@ mod tests {
         assert!(PipelinePolicy::On.enabled());
         assert!(!PipelinePolicy::Off.enabled());
         assert_eq!(PipelinePolicy::default(), PipelinePolicy::Auto);
+    }
+
+    #[test]
+    fn upload_policy_parses_and_resolves() {
+        for p in [UploadPolicy::Auto, UploadPolicy::On, UploadPolicy::Off] {
+            assert_eq!(UploadPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(UploadPolicy::parse(" ON "), Some(UploadPolicy::On));
+        assert_eq!(UploadPolicy::parse("uploda"), None);
+        // Auto resolves to on: parity is unconditional, only staging differs
+        assert!(UploadPolicy::Auto.enabled());
+        assert!(UploadPolicy::On.enabled());
+        assert!(!UploadPolicy::Off.enabled());
+        assert_eq!(UploadPolicy::default(), UploadPolicy::Auto);
     }
 
     #[test]

@@ -45,11 +45,24 @@
 //! serves reads but never touches a generation, so
 //! [`ExecSession::ring_generation`] reports how many times the *currently
 //! active* payload was refreshed — staleness stays observable across
-//! swaps. On today's synchronous CPU PJRT the pipelined shard worker
-//! overlaps the prefetch lane instead of device uploads (uploads complete
-//! before control returns — see `runtime::shard`), so rings are the
-//! staging structure an asynchronous backend's upload verb slots into,
-//! shipped and tested ahead of that backend.
+//! swaps. A double swap without a stage in between simply returns reads
+//! to the previous payload: generations never move, so a consumer
+//! comparing generations can always tell a re-exposed old payload from a
+//! fresh one — a stale buffer can never masquerade as a new upload.
+//!
+//! The hot path enters through [`ExecSession::ring_stage`], the engine
+//! upload lane's per-operand step (`upload=` policy — see the `runtime`
+//! module docs): when the *active* half already holds exactly the
+//! requested bits it short-circuits (a cache hit: no stage, no swap — the
+//! steady-state constant operand costs zero traffic, exactly like
+//! `ensure`); otherwise it force-uploads the staged half (even if that
+//! half's stale bytes happen to match — the upload decision must depend
+//! only on the payload last *dispatched*, so lane-on and lane-off perform
+//! bit-identical transfer sequences) and the caller swaps at the dispatch
+//! boundary. On today's synchronous CPU PJRT the stage completes before
+//! control returns, so the boundary never consumes a half-written buffer;
+//! an asynchronous backend's upload verb slots into the staged half and
+//! relies on the generation rule above for the same guarantee.
 
 use super::EngineStats;
 use anyhow::{anyhow, Result};
@@ -125,11 +138,13 @@ impl ExecSession {
         ExecSession { slots: HashMap::new(), rings: HashMap::new() }
     }
 
-    /// Make `key` hold a device copy of `data`, re-uploading only when the
-    /// contents changed. Traffic is charged to `stats`.
+    /// Make `key` hold a device copy of `data` on device `device`,
+    /// re-uploading only when the contents changed. Traffic is charged to
+    /// `stats`.
     pub fn ensure(
         &mut self,
         client: &xla::PjRtClient,
+        device: Option<usize>,
         stats: &mut EngineStats,
         key: &'static str,
         data: &[f32],
@@ -141,7 +156,7 @@ impl ExecSession {
             }
         }
         let buf = client
-            .buffer_from_host_buffer(data, &[data.len()], None)
+            .buffer_from_host_buffer(data, &[data.len()], device)
             .map_err(|e| anyhow!("uploading slot '{key}' [{}]: {e:?}", data.len()))?;
         stats.uploads += 1;
         stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
@@ -205,6 +220,7 @@ impl ExecSession {
     pub fn ensure_ring(
         &mut self,
         client: &xla::PjRtClient,
+        device: Option<usize>,
         stats: &mut EngineStats,
         key: &'static str,
         data: &[f32],
@@ -220,16 +236,62 @@ impl ExecSession {
                 return Ok(());
             }
         }
+        Self::upload_half(client, device, stats, ring, staged, key, data)
+    }
+
+    /// The upload-lane staging step for ring `key` (see module docs).
+    ///
+    /// Returns `false` when the **active** half already holds exactly
+    /// `data` — a cache hit: nothing staged, and the caller must NOT swap
+    /// (the active payload keeps serving reads). Otherwise force-uploads
+    /// `data` into the staged half — deliberately skipping `ensure_ring`'s
+    /// staged-half bit comparison, so the transfer decision depends only
+    /// on the payload last dispatched and the lane performs the exact
+    /// upload sequence the single-slot [`ExecSession::ensure`] path would
+    /// — and returns `true`: the caller swaps at the dispatch boundary.
+    pub fn ring_stage(
+        &mut self,
+        client: &xla::PjRtClient,
+        device: Option<usize>,
+        stats: &mut EngineStats,
+        key: &'static str,
+        data: &[f32],
+    ) -> Result<bool> {
+        let ring = self
+            .rings
+            .entry(key)
+            .or_insert_with(|| RingSlot { halves: [None, None], meta: RingMeta::default() });
+        if let Some(slot) = &ring.halves[ring.meta.active] {
+            if slot.host.as_deref().is_some_and(|h| bitwise_eq(h, data)) {
+                stats.upload_cache_hits += 1;
+                return Ok(false);
+            }
+        }
+        let staged = ring.meta.staged();
+        Self::upload_half(client, device, stats, ring, staged, key, data)?;
+        Ok(true)
+    }
+
+    /// Shared ring-half upload: meter the transfer, bump the staged
+    /// generation and install the fresh payload.
+    fn upload_half(
+        client: &xla::PjRtClient,
+        device: Option<usize>,
+        stats: &mut EngineStats,
+        ring: &mut RingSlot,
+        half: usize,
+        key: &'static str,
+        data: &[f32],
+    ) -> Result<()> {
         let buf = client
-            .buffer_from_host_buffer(data, &[data.len()], None)
+            .buffer_from_host_buffer(data, &[data.len()], device)
             .map_err(|e| anyhow!("uploading ring '{key}' [{}]: {e:?}", data.len()))?;
         stats.uploads += 1;
         stats.upload_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
         stats.upload_cache_misses += 1;
         ring.meta.bump_staged();
-        let generation = ring.meta.gens[staged];
-        ring.halves[staged] =
-            Some(Slot { host: Some(data.to_vec()), buf: Rc::new(buf), generation });
+        let generation = ring.meta.gens[half];
+        ring.halves[half] = Some(Slot { host: Some(data.to_vec()), buf: Rc::new(buf), generation });
         Ok(())
     }
 
@@ -323,5 +385,35 @@ mod tests {
         m.bump_staged();
         assert_eq!(m.gens[m.staged()], 3);
         assert_eq!(m.active_generation(), 1);
+    }
+
+    #[test]
+    fn ring_meta_double_swap_without_stage_restores_the_old_payload() {
+        let mut m = RingMeta::default();
+        // stage+swap twice so both halves hold distinct generations
+        m.bump_staged();
+        m.swap();
+        m.bump_staged();
+        m.bump_staged();
+        m.swap();
+        assert_eq!(m.active, 0);
+        assert_eq!(m.gens, [2, 1]);
+        assert_eq!(m.active_generation(), 2);
+
+        // double swap with NO stage in between: reads return to the
+        // previous payload and no generation moves — the re-exposed old
+        // half is distinguishable from a fresh upload (gen unchanged),
+        // which is the staleness guarantee the upload lane leans on
+        m.swap();
+        assert_eq!(m.active_generation(), 1);
+        m.swap();
+        assert_eq!(m.active, 0);
+        assert_eq!(m.gens, [2, 1]);
+        assert_eq!(m.active_generation(), 2);
+
+        // a stage after the double swap lands in the staged half only
+        m.bump_staged();
+        assert_eq!(m.gens, [2, 2]);
+        assert_eq!(m.active_generation(), 2);
     }
 }

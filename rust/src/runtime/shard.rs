@@ -96,7 +96,22 @@
 //! paper-units (rounds, bytes, samples, memory) are identical with the
 //! pipeline on or off, and the parity tests pin that. Meters travel via
 //! [`ShardPool::per_shard_metrics`]: ONE gather job per shard, all
-//! submitted before any wait, carrying stats + stalls + overlap together.
+//! submitted before any wait, carrying stats + stalls + overlap + uploads
+//! together.
+//!
+//! # The upload lane and MultiDev seeding
+//!
+//! The **upload lane** (see the `runtime` module docs) is engine-level:
+//! when the coordinator broadcasts [`ShardPool::set_upload_lane`], every
+//! shard engine routes its pooled operands through the staging rings, and
+//! each worker's [`crate::accounting::UploadMeter`] fills in as a side
+//! effect of its engine running the exact same `execute_pooled` code the
+//! coordinator runs. Nothing in this file stages or meters uploads
+//! itself. Each worker also constructs its engine with
+//! `Engine::new_on_device(dir, shard_index)` — shard s targets PJRT
+//! device s where the client exposes one, falling back to device 0
+//! otherwise — which seeds the MultiDev plane without changing any bits
+//! (device placement never enters the simulated cost model).
 //!
 //! # Supervised workers and elastic reassignment
 //!
@@ -134,7 +149,7 @@
 //! `FaultMeter`.
 
 use super::{Engine, EngineStats};
-use crate::accounting::{CacheMeter, OverlapMeter, StallMeter};
+use crate::accounting::{CacheMeter, OverlapMeter, StallMeter, UploadMeter};
 use crate::data::blocks::{pack_all, Block};
 use crate::data::{Sample, SampleStream};
 use anyhow::{anyhow, Context, Result};
@@ -633,7 +648,7 @@ impl ShardPool {
             let dir: PathBuf = artifacts_dir.to_path_buf();
             let handle = thread::Builder::new()
                 .name(format!("shard-{s}"))
-                .spawn(move || worker_main(rx, dir, ready_tx, lane))
+                .spawn(move || worker_main(rx, dir, ready_tx, lane, s))
                 .with_context(|| format!("spawning shard worker {s}"))?;
             workers.push(Worker { tx, handle: Some(handle) });
             readies.push(ready_rx);
@@ -888,7 +903,7 @@ impl ShardPool {
         let dir = self.dir.clone();
         let handle = thread::Builder::new()
             .name(format!("shard-{shard}"))
-            .spawn(move || worker_main(rx, dir, ready_tx, lane))
+            .spawn(move || worker_main(rx, dir, ready_tx, lane, shard))
             .with_context(|| format!("respawning shard worker {shard}"))?;
         w.tx = tx;
         w.handle = Some(handle);
@@ -1076,6 +1091,7 @@ impl ShardPool {
                         stats: state.engine.stats.clone(),
                         stalls: state.stalls.clone(),
                         overlap: state.overlap.clone(),
+                        uploads: state.engine.upload_meter().clone(),
                         cache: state.engine.cache_meter().clone(),
                     })
                 })
@@ -1130,16 +1146,20 @@ impl ShardPool {
         Ok(total)
     }
 
-    /// The run recorder's gather: both per-run wall-clock meters folded
-    /// into cluster totals from ONE per-shard round-trip.
-    pub fn gathered_run_meters(&self) -> Result<(StallMeter, OverlapMeter)> {
+    /// The run recorder's gather: all three per-run wall-clock meters
+    /// folded into cluster totals from ONE per-shard round-trip. The
+    /// upload meter is the shard engines' total only — the recorder adds
+    /// the coordinator engine's own meter on top.
+    pub fn gathered_run_meters(&self) -> Result<(StallMeter, OverlapMeter, UploadMeter)> {
         let mut stalls = StallMeter::default();
         let mut overlap = OverlapMeter::default();
+        let mut uploads = UploadMeter::default();
         for s in self.per_shard_metrics()? {
             stalls.merge(&s.stalls);
             overlap.merge(&s.overlap);
+            uploads.merge(&s.uploads);
         }
-        Ok((stalls, overlap))
+        Ok((stalls, overlap, uploads))
     }
 
     /// All shard engines' executable-cache meters folded into one total.
@@ -1152,6 +1172,26 @@ impl ShardPool {
             total.merge(&s.cache);
         }
         Ok(total)
+    }
+
+    /// Switch every shard engine's upload lane on or off (the resolved
+    /// `upload=` policy; see `Engine::set_upload_lane`). The coordinator
+    /// broadcasts this per run, right after `clear_machines` — the lane
+    /// changes wall-clock staging only, never bits, so flipping it
+    /// between runs is always safe.
+    pub fn set_upload_lane(&self, on: bool) -> Result<()> {
+        let pends: Vec<Pending<()>> = (0..self.shards())
+            .map(|s| {
+                self.submit_named(s, "set upload lane", move |state| {
+                    state.engine.set_upload_lane(on);
+                    Ok(())
+                })
+            })
+            .collect();
+        for p in pends {
+            p.wait()?;
+        }
+        Ok(())
     }
 
     /// Cap every shard engine's resident compiled executables (the
@@ -1180,6 +1220,7 @@ pub struct ShardMetrics {
     pub stats: EngineStats,
     pub stalls: StallMeter,
     pub overlap: OverlapMeter,
+    pub uploads: UploadMeter,
     pub cache: CacheMeter,
 }
 
@@ -1224,8 +1265,9 @@ fn worker_main(
     dir: PathBuf,
     ready: mpsc::Sender<Result<()>>,
     lane: LaneClient,
+    device_index: usize,
 ) {
-    let engine = match Engine::new(&dir) {
+    let engine = match Engine::new_on_device(&dir, device_index) {
         Ok(e) => e,
         Err(e) => {
             let _ = ready.send(Err(e));

@@ -32,8 +32,9 @@
 //!   Curve points stream when the job completes (runs execute
 //!   synchronously on the warm pool; points are not emitted mid-run).
 //! - `GET /stats` — cumulative [`ServeStats`] as JSON: job counts, the
-//!   executable-cache totals, the warm-runner cache meter and the
-//!   resident runner key.
+//!   executable-cache totals, the warm-runner cache meter, the resident
+//!   runner key, and the cross-job wall-clock meter totals (`stalls` /
+//!   `overlap` / `uploads` summed over every finished job's run record).
 //! - `POST /shutdown` — drain the queue, stop accepting, and return from
 //!   [`Server::run`] with the final stats.
 //!
@@ -67,13 +68,13 @@
 //! iterates/curves/paper-unit meters to a cold-process run
 //! (`rust/tests/serve_parity.rs` pins this).
 
-use crate::accounting::CacheMeter;
+use crate::accounting::{CacheMeter, OverlapMeter, StallMeter, UploadMeter};
 use crate::config::{ExperimentConfig, KvConfig, ServeConfig};
 use crate::coordinator::{shards_from_env, Runner};
 use crate::metrics::run_json;
 use crate::runtime::cache::{manifest_hash, pool_key, KeyedCache};
 use crate::runtime::{
-    Engine, Manifest, PipelinePolicy, PlanePolicy, PrefetchPolicy,
+    Engine, Manifest, PipelinePolicy, PlanePolicy, PrefetchPolicy, UploadPolicy,
 };
 use crate::util::json::escape_str;
 use anyhow::{anyhow, Context, Result};
@@ -111,6 +112,14 @@ pub struct ServeStats {
     pub exec_cache: CacheMeter,
     /// warm-runner instance cache meter (misses = runner builds)
     pub runners: CacheMeter,
+    /// draw dispatch-stall totals across all finished jobs (sharded-plane
+    /// jobs only contribute; wall-clock diagnostics, never cost model)
+    pub stalls: StallMeter,
+    /// fan-pipeline overlap totals across all finished jobs
+    pub overlap: OverlapMeter,
+    /// upload-lane totals across all finished jobs (every plane
+    /// contributes — the coordinator engine meters even without shards)
+    pub uploads: UploadMeter,
 }
 
 impl ServeStats {
@@ -127,7 +136,11 @@ impl ServeStats {
         }
         format!(
             "{{\"jobs_accepted\":{},\"jobs_done\":{},\"jobs_failed\":{},\"jobs_rejected\":{},\
-             \"queue_capacity\":{},\"exec_cache\":{},\"runners\":{},\"runner_key\":{}}}",
+             \"queue_capacity\":{},\"exec_cache\":{},\"runners\":{},\
+             \"stalls\":{{\"takes\":{},\"hits\":{},\"misses\":{},\"stall_ns\":{}}},\
+             \"overlap\":{{\"fans\":{},\"staged\":{},\"overlap_ns\":{},\"serial_ns\":{}}},\
+             \"uploads\":{{\"uploads\":{},\"staged\":{},\"overlap_ns\":{},\"wait_ns\":{},\
+             \"bytes\":{}}},\"runner_key\":{}}}",
             self.jobs_accepted,
             self.jobs_done,
             self.jobs_failed,
@@ -135,6 +148,19 @@ impl ServeStats {
             queue_capacity,
             meter(&self.exec_cache),
             meter(&self.runners),
+            self.stalls.takes,
+            self.stalls.hits,
+            self.stalls.misses,
+            self.stalls.stall_ns,
+            self.overlap.fans,
+            self.overlap.staged,
+            self.overlap.overlap_ns,
+            self.overlap.serial_ns,
+            self.uploads.uploads,
+            self.uploads.staged,
+            self.uploads.overlap_ns,
+            self.uploads.wait_ns,
+            self.uploads.bytes,
             escape_str(runner_key),
         )
     }
@@ -242,6 +268,16 @@ impl Server {
                             if let Some(delta) = last_run_cache_delta(&json) {
                                 st.exec_cache.merge(&delta);
                             }
+                            let (stalls, overlap, uploads) = last_run_meters(&json);
+                            if let Some(s) = stalls {
+                                st.stalls.merge(&s);
+                            }
+                            if let Some(o) = overlap {
+                                st.overlap.merge(&o);
+                            }
+                            if let Some(u) = uploads {
+                                st.uploads.merge(&u);
+                            }
                             drop(st);
                             let _ = events
                                 .send(format!("{{\"event\":\"done\",\"job\":{id},\"run\":{json}}}"));
@@ -268,8 +304,8 @@ impl Server {
 }
 
 /// The resident-runner cache key for this process: artifacts-dir content
-/// hash + shard count + process-level plane/prefetch/pipeline policies
-/// (see the module doc for what is deliberately excluded).
+/// hash + shard count + process-level plane/prefetch/pipeline/upload
+/// policies (see the module doc for what is deliberately excluded).
 fn resident_runner_key(artifacts_dir: &Path) -> Result<String> {
     let manifest = Manifest::load(artifacts_dir)?;
     Ok(pool_key(
@@ -278,6 +314,7 @@ fn resident_runner_key(artifacts_dir: &Path) -> Result<String> {
         PlanePolicy::from_env()?,
         PrefetchPolicy::from_env()?,
         PipelinePolicy::from_env()?,
+        UploadPolicy::from_env()?,
     ))
 }
 
@@ -301,7 +338,8 @@ fn execute_job(
             .with_env_shards(&dir)?
             .with_env_plane()?
             .with_env_prefetch()?
-            .with_env_pipeline()?;
+            .with_env_pipeline()?
+            .with_env_upload()?;
         if let Some(cap) = cache_capacity {
             r.set_exec_cache_capacity(cap)?;
         }
@@ -331,6 +369,45 @@ fn last_run_cache_delta(json: &str) -> Option<CacheMeter> {
         compile_ns: c.get("compile_ns")?.as_f64()? as u64,
         evictions: c.get("evictions")?.as_f64()? as u64,
     })
+}
+
+/// Extract the per-job wall-clock meters (`stalls` / `overlap` /
+/// `uploads`) back out of a rendered `run_json` — the `GET /stats`
+/// aggregation's read side, mirroring [`last_run_cache_delta`]. A `null`
+/// section (e.g. `stalls` off the sharded plane) contributes nothing.
+fn last_run_meters(
+    json: &str,
+) -> (Option<StallMeter>, Option<OverlapMeter>, Option<UploadMeter>) {
+    let v = match crate::util::json::Json::parse(json) {
+        Ok(v) => v,
+        Err(_) => return (None, None, None),
+    };
+    let stalls = v.get("stalls").and_then(|s| {
+        Some(StallMeter {
+            takes: s.get("takes")?.as_f64()? as u64,
+            hits: s.get("hits")?.as_f64()? as u64,
+            misses: s.get("misses")?.as_f64()? as u64,
+            stall_ns: s.get("stall_ns")?.as_f64()? as u64,
+        })
+    });
+    let overlap = v.get("overlap").and_then(|o| {
+        Some(OverlapMeter {
+            fans: o.get("fans")?.as_f64()? as u64,
+            staged: o.get("staged")?.as_f64()? as u64,
+            overlap_ns: o.get("overlap_ns")?.as_f64()? as u64,
+            serial_ns: o.get("serial_ns")?.as_f64()? as u64,
+        })
+    });
+    let uploads = v.get("uploads").and_then(|u| {
+        Some(UploadMeter {
+            uploads: u.get("uploads")?.as_f64()? as u64,
+            staged: u.get("staged")?.as_f64()? as u64,
+            overlap_ns: u.get("overlap_ns")?.as_f64()? as u64,
+            wait_ns: u.get("wait_ns")?.as_f64()? as u64,
+            bytes: u.get("bytes")?.as_f64()? as u64,
+        })
+    });
+    (stalls, overlap, uploads)
 }
 
 /// One parsed HTTP request (the tiny subset the wire format needs).
@@ -592,7 +669,15 @@ mod tests {
         st.exec_cache.record_miss(500);
         st.exec_cache.record_hit();
         st.runners.record_miss(9);
-        let j = st.to_json("artifacts=00;shards=0;plane=auto;prefetch=auto;pipeline=auto", 4);
+        st.stalls.record(true, 120);
+        st.overlap.fans = 2;
+        st.overlap.record(true, 300);
+        st.uploads.record(true, 5, 1280, 900);
+        st.uploads.add_wait(40);
+        let j = st.to_json(
+            "artifacts=00;shards=0;plane=auto;prefetch=auto;pipeline=auto;upload=auto",
+            4,
+        );
         let v = crate::util::json::Json::parse(&j).expect("valid json");
         assert_eq!(v.get("jobs_accepted").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("jobs_rejected").unwrap().as_usize(), Some(1));
@@ -601,7 +686,19 @@ mod tests {
         assert_eq!(c.get("hits").unwrap().as_usize(), Some(1));
         assert_eq!(c.get("misses").unwrap().as_usize(), Some(1));
         assert_eq!(c.get("hit_rate").unwrap().as_f64(), Some(0.5));
-        assert!(v.get("runner_key").unwrap().as_str().unwrap().contains("plane=auto"));
+        let s = v.get("stalls").unwrap();
+        assert_eq!(s.get("takes").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("stall_ns").unwrap().as_usize(), Some(120));
+        let o = v.get("overlap").unwrap();
+        assert_eq!(o.get("fans").unwrap().as_usize(), Some(2));
+        assert_eq!(o.get("overlap_ns").unwrap().as_usize(), Some(300));
+        let u = v.get("uploads").unwrap();
+        assert_eq!(u.get("uploads").unwrap().as_usize(), Some(5));
+        assert_eq!(u.get("staged").unwrap().as_usize(), Some(5));
+        assert_eq!(u.get("overlap_ns").unwrap().as_usize(), Some(900));
+        assert_eq!(u.get("wait_ns").unwrap().as_usize(), Some(40));
+        assert_eq!(u.get("bytes").unwrap().as_usize(), Some(1280));
+        assert!(v.get("runner_key").unwrap().as_str().unwrap().contains("upload=auto"));
     }
 
     #[test]
@@ -613,5 +710,27 @@ mod tests {
         let d = last_run_cache_delta(json).expect("delta parses");
         assert_eq!(d, CacheMeter { hits: 4, misses: 2, compile_ns: 77, evictions: 1 });
         assert_eq!(last_run_cache_delta("{\"cache\": null}"), None);
+    }
+
+    #[test]
+    fn meters_round_trip_through_run_json() {
+        // same contract as the cache delta: /stats aggregation reads the
+        // per-job meters back out of the rendered run_json
+        let json = "{\"stalls\": {\"takes\": 8, \"hits\": 6, \"misses\": 2, \
+                     \"stall_ns\": 1500, \"hit_rate\": 0.75}, \
+                     \"overlap\": {\"fans\": 4, \"staged\": 3, \"overlap_ns\": 900, \
+                     \"serial_ns\": 300, \"overlap_frac\": 0.75}, \
+                     \"uploads\": {\"uploads\": 10, \"staged\": 7, \"overlap_ns\": 1200, \
+                     \"wait_ns\": 400, \"bytes\": 2560}, \"curve\": []}";
+        let (s, o, u) = last_run_meters(json);
+        assert_eq!(s, Some(StallMeter { takes: 8, hits: 6, misses: 2, stall_ns: 1500 }));
+        assert_eq!(o, Some(OverlapMeter { fans: 4, staged: 3, overlap_ns: 900, serial_ns: 300 }));
+        let want =
+            UploadMeter { uploads: 10, staged: 7, overlap_ns: 1200, wait_ns: 400, bytes: 2560 };
+        assert_eq!(u, Some(want));
+        // null sections (host/chained planes) contribute nothing
+        let none = "{\"stalls\": null, \"overlap\": null, \"uploads\": null}";
+        let (s, o, u) = last_run_meters(none);
+        assert_eq!((s, o, u), (None, None, None));
     }
 }

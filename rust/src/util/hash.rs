@@ -57,10 +57,22 @@ mod tests {
 
     #[test]
     fn known_vectors() {
-        // published FNV-1a 64 test vectors
+        // published FNV-1a 64 test vectors (Noll's reference suite) — the
+        // empty string pins the offset basis, the single bytes pin the
+        // xor-then-multiply order (FNV-1a, not FNV-1), and the "fo"…
+        // "foobar" ladder pins the per-byte chaining
         assert_eq!(fnv1a_64(b""), 0xcbf29ce484222325);
         assert_eq!(fnv1a_64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_64(b"b"), 0xaf63df4c8601f1a5);
+        assert_eq!(fnv1a_64(b"c"), 0xaf63de4c8601eff2);
+        assert_eq!(fnv1a_64(b"\x00"), 0xaf63bd4c8601b7df);
+        assert_eq!(fnv1a_64(b"fo"), 0x08985907b541d342);
+        assert_eq!(fnv1a_64(b"foo"), 0xdcb27518fed9d577);
+        assert_eq!(fnv1a_64(b"foob"), 0xdd120e790c2512af);
+        assert_eq!(fnv1a_64(b"fooba"), 0xcac165afa2fef40a);
         assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+        assert_eq!(fnv1a_64(b"chongo was here!\n"), 0x46810940eff5f915);
+        assert_eq!(fnv1a_64(b"64 bit FNV-1a"), 0xac0e8a6f5833bb23);
     }
 
     #[test]

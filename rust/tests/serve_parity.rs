@@ -43,6 +43,8 @@ fn cold_runner() -> Runner {
         .expect("env prefetch")
         .with_env_pipeline()
         .expect("env pipeline")
+        .with_env_upload()
+        .expect("env upload")
 }
 
 /// Bind on port 0 and serve from a companion thread (that thread is the
@@ -122,9 +124,15 @@ fn assert_same_run_json(a: &Json, b: &Json, label: &str) {
     ] {
         assert_eq!(a.get(key), b.get(key), "{label}: run_json field {key:?}");
     }
-    // dispatch counts are seed-determined even though stall/overlap
-    // nanoseconds are not
-    for (section, count) in [("stalls", "takes"), ("overlap", "fans")] {
+    // dispatch and transfer counts are seed-determined even though
+    // stall/overlap/upload nanoseconds are not (upload counts AND bytes
+    // are parity surface — see rust/tests/upload_parity.rs)
+    for (section, count) in [
+        ("stalls", "takes"),
+        ("overlap", "fans"),
+        ("uploads", "uploads"),
+        ("uploads", "bytes"),
+    ] {
         let (sa, sb) = (a.get(section), b.get(section));
         match (sa, sb) {
             (Some(Json::Null), Some(Json::Null)) | (None, None) => {}
@@ -186,6 +194,18 @@ fn warm_cache_run_is_bit_identical_to_cold_process_run() {
     let ec = v.get("exec_cache").expect("exec_cache section");
     assert_eq!(field(ec, "misses"), field(c1, "misses"), "{stats}");
     assert_eq!(field(ec, "hits"), field(c2, "hits"), "{stats}");
+
+    // ...and the per-job lane meters: the upload meter rides run_json on
+    // every plane, so /stats' cross-job totals are exactly the per-job
+    // sums (transfer counts and bytes are deterministic; only the
+    // nanosecond fields are wall-clock)
+    let up = v.get("uploads").expect("uploads section");
+    let u1 = run1.get("uploads").expect("job 1 run_json uploads");
+    let u2 = run2.get("uploads").expect("job 2 run_json uploads");
+    let total = field(u1, "uploads") + field(u2, "uploads");
+    assert_eq!(field(up, "uploads"), total, "{stats}");
+    let total_b = field(u1, "bytes") + field(u2, "bytes");
+    assert_eq!(field(up, "bytes"), total_b, "{stats}");
 
     let (status, _) = http_post(addr, "/shutdown", "").expect("POST /shutdown");
     assert_eq!(status, 200);

@@ -1,0 +1,256 @@
+//! Upload-lane parity: `upload=on` (staging rings) vs `upload=off`
+//! (single-slot session pool) is a pure staging-structure change inside
+//! each engine. The ring path decides whether to transfer by comparing a
+//! pooled operand against the payload LAST DISPATCHED — never against
+//! the back half's stale bytes — so it performs the exact transfer
+//! sequence the slot path would: same uploads, same bytes, same cache
+//! hits, and a steady-state constant operand still costs zero traffic.
+//! Iterates, objective curves, sample/memory meters, simulated time, AND
+//! the transfer counts/bytes of the upload meter are therefore
+//! bit-identical across {upload on/off} × {host, chained, sharded}
+//! planes × shard counts; only the wall-clock magnitudes
+//! (`overlap_ns`/`wait_ns`) and the staging split (`staged`) may differ
+//! (see the `runtime` module doc, "The upload lane").
+//!
+//! Requires `make artifacts`.
+
+use mbprox::accounting::{ClusterMeter, UploadMeter};
+use mbprox::algos::RunResult;
+use mbprox::comm::{netmodel::NetModel, Network};
+use mbprox::config::ExperimentConfig;
+use mbprox::coordinator::Runner;
+use mbprox::data::synth::{SynthSpec, SynthStream};
+use mbprox::data::Loss;
+use mbprox::objective::{distributed_mean_grad, MachineBatch};
+use mbprox::runtime::{Engine, PlanePolicy, ShardPool, UploadPolicy};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Run `cfg` on a fresh runner under an explicit upload policy on one of
+/// the three planes (`shards: None` = no pool attached — the host and
+/// chained planes).
+fn run_with(
+    upload: UploadPolicy,
+    plane: PlanePolicy,
+    shards: Option<usize>,
+    cfg: &ExperimentConfig,
+) -> RunResult {
+    let dir = artifacts_dir();
+    let mut r = Runner::new(Engine::new(&dir).expect("run `make artifacts` before cargo test"))
+        .with_plane(plane)
+        .with_upload(upload);
+    if let Some(n) = shards {
+        r = r.with_shards(ShardPool::new(n, &dir).expect("shard pool construction"));
+    }
+    r.run(cfg).unwrap_or_else(|e| {
+        panic!(
+            "{} (upload={}, plane={}, shards={shards:?}): {e:?}",
+            cfg.method,
+            upload.as_str(),
+            plane.as_str()
+        )
+    })
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full bitwise identity on everything except the wall-clock meters.
+fn assert_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(bits32(&a.w), bits32(&b.w), "{label}: final iterate bits");
+    assert_eq!(a.report, b.report, "{label}: ClusterMeter report");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{label}: simulated time");
+    assert_eq!(a.curve.len(), b.curve.len(), "{label}: curve length");
+    for (p, q) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(p.samples_total, q.samples_total, "{label}: curve samples");
+        assert_eq!(p.comm_rounds, q.comm_rounds, "{label}: curve rounds");
+        assert_eq!(p.vec_ops, q.vec_ops, "{label}: curve vec ops");
+        match (p.objective, q.objective) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: objective bits")
+            }
+            (None, None) => {}
+            other => panic!("{label}: objective presence mismatch {other:?}"),
+        }
+    }
+}
+
+/// The upload meter is present on every plane — the coordinator engine
+/// meters even without a pool.
+fn meter<'r>(run: &'r RunResult, label: &str) -> &'r UploadMeter {
+    run.uploads.as_ref().unwrap_or_else(|| panic!("{label}: upload meter missing"))
+}
+
+/// The meter half of the parity surface: transfer counts and bytes are
+/// bit-identical with the lane on or off, the lane-off run never stages
+/// (and so banks no overlappable time), and with the lane on every
+/// metered transfer runs through the rings.
+fn assert_meter_parity(off: &RunResult, on: &RunResult, label: &str) {
+    let (u_off, u_on) = (meter(off, label), meter(on, label));
+    assert_eq!(u_on.uploads, u_off.uploads, "{label}: upload counts are parity surface");
+    assert_eq!(u_on.bytes, u_off.bytes, "{label}: upload bytes are parity surface");
+    assert_eq!(u_off.staged, 0, "{label}: upload=off must never stage: {u_off:?}");
+    assert_eq!(u_off.overlap_ns, 0, "{label}: upload=off banks no overlap: {u_off:?}");
+    assert_eq!(u_on.staged, u_on.uploads, "{label}: lane-on transfers all stage: {u_on:?}");
+}
+
+/// Every plane × shard-count leg: `upload=on` must match `upload=off`
+/// bit for bit on the paper-units surface, and the meters must agree on
+/// transfer counts and bytes.
+fn upload_parity(cfg: &ExperimentConfig) {
+    let legs: [(PlanePolicy, Option<usize>); 5] = [
+        (PlanePolicy::Host, None),
+        (PlanePolicy::Chained, None),
+        (PlanePolicy::Sharded, Some(1)),
+        (PlanePolicy::Sharded, Some(2)),
+        (PlanePolicy::Sharded, Some(4)),
+    ];
+    for (plane, shards) in legs {
+        let off = run_with(UploadPolicy::Off, plane, shards, cfg);
+        let on = run_with(UploadPolicy::On, plane, shards, cfg);
+        let label = format!("{} plane={} shards={shards:?}", cfg.method, plane.as_str());
+        assert_identical(&off, &on, &label);
+        assert_meter_parity(&off, &on, &label);
+        if plane == PlanePolicy::Sharded {
+            // non-vacuous: the shard fans pool the iterate every round
+            let u = meter(&on, &label);
+            assert!(u.uploads > 0, "{label}: sharded run metered no uploads: {u:?}");
+        }
+    }
+}
+
+#[test]
+fn streaming_drift_upload_parity() {
+    // b = 300 -> one full block + a 44-row ragged tail per machine draw;
+    // with m=4 over <= 4 shards every worker owns >= 1 machine
+    let cfg = ExperimentConfig {
+        method: "mp-dsvrg".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 300,
+        n_budget: 2400, // T = 2
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    };
+    upload_parity(&cfg);
+}
+
+#[test]
+fn erm_fixed_cfg_key_beats_process_policy() {
+    // 2051 fixed samples shard 513/513/513/512 across epoch-bounded
+    // streams — the ragged boundary draws must stage identically
+    let cfg = ExperimentConfig {
+        method: "dsvrg-erm".into(),
+        scenario: Some("erm-fixed".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 256,
+        n_budget: 2051,
+        dim: 64,
+        seed: 20170707,
+        eval_samples: 1024,
+        eval_every: 1,
+        // the config-key path (rather than Runner::with_upload): the
+        // per-run key must beat the runner's process-level policy
+        upload: UploadPolicy::On,
+        ..ExperimentConfig::default()
+    };
+    let via_cfg = {
+        let dir = artifacts_dir();
+        let mut r = Runner::new(Engine::new(&dir).expect("engine"))
+            .with_plane(PlanePolicy::Sharded)
+            .with_shards(ShardPool::new(2, &dir).expect("pool"))
+            .with_upload(UploadPolicy::Off); // cfg key must win
+        r.run(&cfg).expect("erm-fixed with upload=on from the config")
+    };
+    // the cfg-key run really rode the rings: its meter staged transfers
+    let u = meter(&via_cfg, "erm-fixed cfg-key");
+    assert!(u.staged > 0, "cfg-key upload=on run never staged a transfer: {u:?}");
+    // ...and stayed on the parity surface vs a plain lane-off run
+    let cfg_default = ExperimentConfig { upload: UploadPolicy::Auto, ..cfg.clone() };
+    let off = run_with(UploadPolicy::Off, PlanePolicy::Sharded, Some(2), &cfg_default);
+    assert_identical(&off, &via_cfg, "erm-fixed cfg-key upload=on");
+    assert_meter_parity(&off, &via_cfg, "erm-fixed cfg-key upload=on");
+    upload_parity(&cfg_default);
+}
+
+/// The upload meter itself: surfaced on every plane, honest about the
+/// policy that ran, and never part of the paper-units cost model.
+#[test]
+fn upload_meter_reports_the_policy_that_ran() {
+    let cfg = ExperimentConfig {
+        method: "minibatch-sgd".into(),
+        scenario: Some("drift".into()),
+        loss: Loss::Squared,
+        m: 4,
+        b_local: 256,
+        n_budget: 4096, // 4 outer steps of drawing
+        dim: 64,
+        seed: 11,
+        eval_samples: 64,
+        eval_every: 0,
+        ..ExperimentConfig::default()
+    };
+    let off = run_with(UploadPolicy::Off, PlanePolicy::Sharded, Some(2), &cfg);
+    let u_off = meter(&off, "sharded upload=off");
+    assert!(u_off.uploads > 0, "pooled iterates must upload regardless of policy: {u_off:?}");
+    assert_eq!(u_off.staged, 0, "upload=off never stages");
+    assert_eq!(u_off.overlap_ns, 0, "upload=off banks no overlappable time");
+    assert_eq!(u_off.wait_ns, 0, "upload=off never waits on a stage");
+
+    let on = run_with(UploadPolicy::On, PlanePolicy::Sharded, Some(2), &cfg);
+    let u_on = meter(&on, "sharded upload=on");
+    assert_eq!(u_on.uploads, u_off.uploads, "transfer counts must not depend on the lane");
+    assert_eq!(u_on.bytes, u_off.bytes, "transfer bytes must not depend on the lane");
+    assert!(u_on.staged > 0, "upload=on staged no transfers: {u_on:?}");
+    // sync CPU PJRT: every stage runs inline and is wall-clock timed
+    assert!(u_on.overlap_ns > 0, "staged transfers bank overlappable time: {u_on:?}");
+
+    // presence on the poolless planes (auto resolves to the lane being on)
+    for plane in [PlanePolicy::Host, PlanePolicy::Chained] {
+        let run = run_with(UploadPolicy::Auto, plane, None, &cfg);
+        let u = meter(&run, plane.as_str());
+        assert_eq!(u.staged, u.uploads, "{}: lane-on transfers all stage", plane.as_str());
+    }
+}
+
+/// The steady-state contract with the lane ON: a pooled operand that did
+/// not change between rounds costs zero transfers — the ring's active
+/// half already holds the dispatched payload, so the compare hits
+/// exactly like the single-slot pool's (the bench pins this same
+/// invariant as `round.same_w.uploads == 0`).
+#[test]
+fn steady_state_same_w_uploads_nothing_with_lane_on() {
+    let dir = artifacts_dir();
+    let mut engine = Engine::new(&dir).expect("run `make artifacts` before cargo test");
+    engine.set_upload_lane(true);
+    let root = SynthStream::new(SynthSpec::least_squares(64), 7);
+    let machines: Vec<MachineBatch> = (0..2)
+        .map(|i| {
+            let mut s = root.fork_stream(i as u64);
+            MachineBatch::pack(&mut engine, 64, &s.draw_many(512)).unwrap()
+        })
+        .collect();
+    let mut net = Network::new(2, NetModel::default());
+    let mut meter = ClusterMeter::new(2);
+    let w = vec![0.02f32; 64];
+    distributed_mean_grad(&mut engine, None, Loss::Squared, &machines, &w, &mut net, &mut meter)
+        .unwrap();
+    let (dev_uploads, lane) = (engine.stats.uploads, engine.upload_meter().clone());
+    assert!(lane.uploads > 0, "fresh w: the pooled iterate must upload: {lane:?}");
+    assert_eq!(lane.staged, lane.uploads, "lane on: every transfer stages: {lane:?}");
+    distributed_mean_grad(&mut engine, None, Loss::Squared, &machines, &w, &mut net, &mut meter)
+        .unwrap();
+    assert_eq!(engine.stats.uploads, dev_uploads, "same w: a steady-state round uploads nothing");
+    let after = engine.upload_meter();
+    assert_eq!(after.uploads, lane.uploads, "same w: the lane meter agrees: {after:?}");
+    assert_eq!(after.bytes, lane.bytes, "same w: no bytes moved either: {after:?}");
+}
